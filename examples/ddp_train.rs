@@ -1,0 +1,172 @@
+//! End-to-end validation: data-parallel training of a ~440k-parameter
+//! byte-level transformer, with gradients synchronized by the paper's
+//! generalized Allreduce over the simulated cluster.
+//!
+//! All three layers compose here:
+//! * L1 — the Pallas combine kernel (inside the allreduce when `--pjrt`),
+//! * L2 — the JAX transformer train step, AOT-compiled to HLO and executed
+//!   per worker through PJRT from rust,
+//! * L3 — the rust coordinator: per-worker batches, the generalized
+//!   Allreduce schedule on the thread cluster, SGD application.
+//!
+//! The corpus is a synthetic "structured bytes" language (nested markov
+//! patterns) so the loss visibly falls from ~log(256) ≈ 5.55.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example ddp_train -- --steps 300 --p 4
+//! ```
+//!
+//! The resulting loss curve is recorded in EXPERIMENTS.md §End-to-end.
+
+use permallreduce::algo::AlgorithmKind;
+use permallreduce::cli::Args;
+use permallreduce::cluster::ReduceOp;
+use permallreduce::coordinator::Communicator;
+use permallreduce::runtime::TrainStepEngine;
+use permallreduce::util::Rng;
+
+/// Synthetic corpus: a two-level markov chain over bytes with strong local
+/// structure (learnable by a small LM within a few hundred steps).
+struct Corpus {
+    rng: Rng,
+    state: u8,
+}
+
+impl Corpus {
+    fn new(seed: u64) -> Corpus {
+        Corpus {
+            rng: Rng::new(seed),
+            state: 0,
+        }
+    }
+
+    fn next_token(&mut self) -> u8 {
+        // Each state prefers a small successor set; 10% noise.
+        let s = self.state as usize;
+        let succ = [
+            (s * 7 + 31) % 97,
+            (s * 13 + 5) % 97,
+            (s + 1) % 97,
+        ];
+        let t = if self.rng.chance(0.9) {
+            succ[self.rng.below(3)] as u8
+        } else {
+            self.rng.below(97) as u8
+        };
+        self.state = t;
+        t
+    }
+
+    /// A `[batch, seq+1]` i32 token block.
+    fn batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
+        (0..batch * (seq + 1))
+            .map(|_| self.next_token() as i32)
+            .collect()
+    }
+}
+
+fn main() -> Result<(), String> {
+    let args = Args::from_env()?;
+    let steps = args.get_usize("steps", 300)?;
+    let p = args.get_usize("p", 4)?;
+    let lr = args.get_f64("lr", 0.25)? as f32;
+    let log_every = args.get_usize("log-every", 10)?;
+    let use_pjrt_reducer = args.has("pjrt");
+
+    println!("== DDP training: {p} workers, {steps} steps ==");
+
+    // One train-step engine per worker (separate PJRT executables — the
+    // stand-in for the per-node model replicas).
+    let engines: Vec<TrainStepEngine> = (0..p)
+        .map(|_| TrainStepEngine::from_artifacts().map_err(|e| format!("{e:#}")))
+        .collect::<Result<_, _>>()?;
+    let spec = engines[0].spec.clone();
+    println!(
+        "model: {} params, batch {}/worker, seq {} (global batch {})",
+        spec.n_params,
+        spec.batch,
+        spec.seq,
+        spec.batch * p
+    );
+
+    let mut params = engines[0].initial_params().map_err(|e| format!("{e:#}"))?;
+    let comm = Communicator::builder(p).build()?;
+    let svc = if use_pjrt_reducer {
+        Some(permallreduce::runtime::PjrtReduceService::start().map_err(|e| format!("{e:#}"))?)
+    } else {
+        None
+    };
+
+    let mut corpora: Vec<Corpus> = (0..p).map(|w| Corpus::new(1000 + w as u64)).collect();
+    let mut curve: Vec<(usize, f32)> = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut allreduce_metrics = None;
+
+    for step in 0..steps {
+        // Each worker computes (loss, grads) on its own batch.
+        let mut losses = Vec::with_capacity(p);
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(p);
+        for (w, engine) in engines.iter().enumerate() {
+            let tokens = corpora[w].batch(spec.batch, spec.seq);
+            let (loss, g) = engine.step(&params, &tokens).map_err(|e| format!("{e:#}"))?;
+            losses.push(loss);
+            grads.push(g);
+        }
+
+        // Gradient sync: the paper's generalized Allreduce (auto-r).
+        let out = match &svc {
+            Some(svc) => {
+                let reducer = svc.reducer();
+                comm.allreduce_with_reducer(
+                    &grads,
+                    ReduceOp::Sum,
+                    AlgorithmKind::GeneralizedAuto,
+                    &reducer,
+                )?
+            }
+            None => comm.allreduce(&grads, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)?,
+        };
+        allreduce_metrics = Some(out.metrics.clone());
+
+        // SGD with the averaged gradient (all ranks hold the same sum).
+        let scale = lr / p as f32;
+        for (pv, g) in params.iter_mut().zip(&out.ranks[0]) {
+            *pv -= scale * g;
+        }
+
+        let mean_loss: f32 = losses.iter().sum::<f32>() / p as f32;
+        if step % log_every == 0 || step + 1 == steps {
+            println!("step {step:>4}: loss {mean_loss:.4}");
+            curve.push((step, mean_loss));
+        }
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    let first = curve.first().map(|&(_, l)| l).unwrap_or(f32::NAN);
+    let last = curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
+    println!("\nwall time: {wall:.1}s ({:.2}s/step)", wall / steps as f64);
+    if let Some(m) = allreduce_metrics {
+        println!(
+            "allreduce: {} — {} steps, {} B critical traffic per call",
+            m.algorithm, m.steps, m.critical_bytes_sent
+        );
+    }
+    println!("loss: {first:.4} → {last:.4}");
+
+    // Write the curve for EXPERIMENTS.md.
+    let mut csv = String::from("step,loss\n");
+    for (s, l) in &curve {
+        csv.push_str(&format!("{s},{l}\n"));
+    }
+    std::fs::create_dir_all("figures_out").ok();
+    std::fs::write("figures_out/ddp_loss_curve.csv", csv).map_err(|e| e.to_string())?;
+    println!("wrote figures_out/ddp_loss_curve.csv");
+
+    // Learning criterion: ≥ 0.4 nats off the initial loss (the curve keeps
+    // falling well past this; 20 smoke steps already clear it).
+    if !(last < first - 0.4) {
+        return Err(format!("training did not learn: {first} → {last}"));
+    }
+    println!("loss fell by {:.2} nats — end-to-end OK", first - last);
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Parameter sweep: how the optimal step count r* (eq. 37) moves with
+//! message size, process count, and network parameters — the ablation
+//! behind the paper's "dynamically changing amount of communication steps".
+//!
+//! ```sh
+//! cargo run --release --example param_sweep
+//! ```
+
+use permallreduce::cost::{optimal_r, optimal_r_continuous, CostModel, NetParams};
+use permallreduce::util::ceil_log2;
+
+fn main() {
+    let table2 = NetParams::table2();
+
+    println!("== r* vs message size (P = 127, Table 2 network) ==");
+    println!("{:>10} {:>8} {:>10} {:>12} {:>12}", "m (B)", "r* int", "eq.37", "τ(r*)", "τ best SOTA");
+    for m in [16usize, 64, 256, 425, 1024, 4096, 9216, 65536, 1 << 20, 16 << 20] {
+        let cm = CostModel::new(127, table2);
+        let r = optimal_r(127, m, &table2);
+        let cont = optimal_r_continuous(127, m, &table2);
+        println!(
+            "{:>10} {:>8} {:>10.2} {:>11.3e}s {:>11.3e}s",
+            m,
+            r,
+            cont,
+            cm.proposed(m as f64, r),
+            cm.best_sota(m as f64)
+        );
+    }
+
+    println!("\n== r* vs process count (m = 425 B) ==");
+    println!("{:>6} {:>8} {:>8}", "P", "⌈logP⌉", "r*");
+    for p in [3usize, 8, 16, 17, 33, 64, 100, 127, 128, 255, 1000] {
+        println!(
+            "{:>6} {:>8} {:>8}",
+            p,
+            ceil_log2(p),
+            optimal_r(p, 425, &table2)
+        );
+    }
+
+    println!("\n== r* vs network latency (P = 127, m = 4 KiB) ==");
+    println!("{:>12} {:>8}  {}", "α (s)", "r*", "regime");
+    for alpha_mult in [0.01, 0.1, 1.0, 10.0, 100.0] {
+        let params = NetParams {
+            alpha: table2.alpha * alpha_mult,
+            ..table2
+        };
+        let r = optimal_r(127, 4096, &params);
+        let l = ceil_log2(127);
+        let regime = if r == 0 {
+            "bandwidth-optimal"
+        } else if r == l {
+            "latency-optimal"
+        } else {
+            "intermediate"
+        };
+        println!("{:>12.1e} {r:>8}  {regime}", params.alpha);
+    }
+}

@@ -1,0 +1,133 @@
+"""AOT pipeline: lower the L1/L2 graphs to HLO **text** + manifest.
+
+Run once at build time (`make artifacts`); rust loads the text through
+`HloModuleProto::from_text_file`. Text — not `.serialize()` — is the
+interchange format because jax ≥ 0.5 emits protos with 64-bit instruction
+ids that xla_extension 0.5.1 rejects; the HLO text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifacts:
+  reduce_<op>_f32_<n>.hlo.txt   Pallas combine kernel, ops × size classes
+  train_step.hlo.txt            transformer fwd/bwd (L2), flat params
+  init_params.bin               initial flat f32 parameters (little-endian)
+  manifest.json                 shapes + file index (parsed by rust)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_mod
+from compile.kernels import reduce as reduce_mod
+
+# Size classes for the fixed-shape reduce executables. Must be multiples of
+# 128 (VPU lanes). Rust pads/slices chunks onto these.
+REDUCE_SIZES = (256, 4096, 65536)
+
+# k-way fold variants: one kernel launch folds k chunks (amortizes launch
+# overhead when a step reduces many chunks — the §Perf L1 ablation).
+KWAY_KS = (4, 8)
+KWAY_SIZES = (4096, 65536)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_reduce_kernels(out_dir: str) -> list:
+    entries = []
+    for op in reduce_mod.OPS:
+        for n in REDUCE_SIZES:
+            spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+            fn = lambda a, b: reduce_mod.reduce_pair(a, b, op=op)  # noqa: E731
+            lowered = jax.jit(fn).lower(spec, spec)
+            fname = f"reduce_{op}_f32_{n}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            entries.append({"op": op, "dtype": "f32", "size": n, "file": fname})
+            print(f"  wrote {fname}")
+    return entries
+
+
+def build_kway_kernels(out_dir: str) -> list:
+    entries = []
+    for op in reduce_mod.OPS:
+        for k in KWAY_KS:
+            for n in KWAY_SIZES:
+                spec = jax.ShapeDtypeStruct((k, n), jnp.float32)
+                fn = lambda s: reduce_mod.reduce_kway(s, op=op)  # noqa: E731
+                lowered = jax.jit(fn).lower(spec)
+                fname = f"reduce_kway_{op}_f32_k{k}_{n}.hlo.txt"
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(to_hlo_text(lowered))
+                entries.append(
+                    {"op": op, "dtype": "f32", "k": k, "size": n, "file": fname}
+                )
+                print(f"  wrote {fname}")
+    return entries
+
+
+def build_train_step(out_dir: str) -> dict:
+    cfg = model_mod.ModelConfig()
+    spec = model_mod.param_spec(cfg)
+    n_params = spec.total
+
+    params_spec = jax.ShapeDtypeStruct((n_params,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    fn = lambda p, t: model_mod.train_step(cfg, p, t)  # noqa: E731
+    lowered = jax.jit(fn).lower(params_spec, tokens_spec)
+    fname = "train_step.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"  wrote {fname} (n_params={n_params})")
+
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    init_file = "init_params.bin"
+    import numpy as np
+
+    np.asarray(params, dtype="<f4").tofile(os.path.join(out_dir, init_file))
+    print(f"  wrote {init_file} ({n_params * 4} bytes)")
+
+    return {
+        "file": fname,
+        "n_params": n_params,
+        "batch": cfg.batch,
+        "seq": cfg.seq,
+        "vocab": cfg.vocab,
+        "init_file": init_file,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--skip-train-step", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"AOT-lowering to {out_dir}/ (jax {jax.__version__})")
+
+    manifest = {
+        "reduce_kernels": build_reduce_kernels(out_dir),
+        "kway_kernels": build_kway_kernels(out_dir),
+    }
+    if not args.skip_train_step:
+        manifest["train_step"] = build_train_step(out_dir)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print("  wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Layer 1 — Pallas elementwise-combine kernels.
+
+The only compute in Allreduce is the combine ``dst ⊕= src`` (the paper's
+``γ`` term).  This module implements it as a tiled Pallas kernel so the
+whole three-layer contract is exercised: the kernel is called from the L2
+jax wrapper (``model.reduce_pair``), lowered once by ``aot.py`` into the
+same HLO module, and executed from rust through PJRT.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets a
+CPU cluster where the combine streams through the cache hierarchy.  On TPU
+the combine is a VPU-bound streaming kernel; we tile the flat vector into
+``(8, 128)``-aligned blocks sized so that the two input tiles plus the
+output tile fit comfortably in VMEM, with ``BlockSpec`` expressing the
+HBM↔VMEM pipeline.  ``interpret=True`` is mandatory here: the CPU PJRT
+plugin cannot execute Mosaic custom calls, so we validate numerics through
+the interpreter and reserve real-TPU lowering as a compile-only target.
+
+VMEM budgeting (for the §Perf structural notes): a block of
+``BLOCK_ROWS × 128`` f32 occupies ``BLOCK_ROWS · 512`` bytes; with
+BLOCK_ROWS = 256 that is 128 KiB per buffer, 384 KiB for the three live
+buffers — far below the ~16 MiB VMEM of a modern TPU core, leaving room
+for double buffering (the pipeline overlap Pallas inserts automatically).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width of the TPU VPU; the minor-most dimension must be 128.
+LANES = 128
+# Rows per block: 256 rows × 128 lanes × 4 B = 128 KiB per f32 buffer.
+BLOCK_ROWS = 256
+
+OPS = ("sum", "prod", "max", "min")
+
+
+def _combine(op: str, a, b):
+    if op == "sum":
+        return a + b
+    if op == "prod":
+        return a * b
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "min":
+        return jnp.minimum(a, b)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def _kernel(a_ref, b_ref, o_ref, *, op: str):
+    """One VMEM-resident tile: o = a ⊕ b."""
+    o_ref[...] = _combine(op, a_ref[...], b_ref[...])
+
+
+def _grid_shape(n: int):
+    """Reshape a flat length-n vector (n divisible by LANES) into
+    (rows, LANES) and choose the block rows / grid size."""
+    assert n % LANES == 0, f"kernel size {n} must be a multiple of {LANES}"
+    rows = n // LANES
+    block_rows = min(BLOCK_ROWS, rows)
+    assert rows % block_rows == 0, (
+        f"rows {rows} not divisible by block {block_rows}"
+    )
+    return rows, block_rows
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def reduce_pair(a: jax.Array, b: jax.Array, *, op: str = "sum") -> jax.Array:
+    """L2 wrapper: elementwise ``a ⊕ b`` for flat f32 vectors whose length
+    is a multiple of 128, dispatching into the Pallas tile kernel."""
+    (n,) = a.shape
+    rows, block_rows = _grid_shape(n)
+    a2 = a.reshape(rows, LANES)
+    b2 = b.reshape(rows, LANES)
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, op=op),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), a.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a2, b2)
+    return out.reshape(n)
+
+
+def _kway_kernel(stack_ref, o_ref, *, op: str, k: int):
+    """Fold k stacked chunks into one: o = x_0 ⊕ x_1 ⊕ … ⊕ x_{k-1}.
+
+    The fold is an unrolled loop over the leading axis — each operand tile
+    is VMEM-resident; the VPU does k−1 elementwise ops per output tile.
+    """
+    acc = stack_ref[0, ...]
+    for i in range(1, k):
+        acc = _combine(op, acc, stack_ref[i, ...])
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def reduce_kway(stack: jax.Array, *, op: str = "sum") -> jax.Array:
+    """Fold ``stack[k, n]`` along axis 0 with one kernel launch.
+
+    Used by the coordinator when several received chunks combine into the
+    same accumulator in one step (the latency-optimal schedule's many
+    simultaneous reductions).
+    """
+    k, n = stack.shape
+    rows, block_rows = _grid_shape(n)
+    s3 = stack.reshape(k, rows, LANES)
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_kway_kernel, op=op, k=k),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), stack.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, block_rows, LANES), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        interpret=True,
+    )(s3)
+    return out.reshape(n)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest asserts kernel == oracle across shapes/ops/dtypes)."""
+
+import jax.numpy as jnp
+
+
+def reduce_pair_ref(a, b, *, op: str = "sum"):
+    if op == "sum":
+        return a + b
+    if op == "prod":
+        return a * b
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "min":
+        return jnp.minimum(a, b)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def reduce_kway_ref(stack, *, op: str = "sum"):
+    if op == "sum":
+        return stack.sum(axis=0)
+    if op == "prod":
+        return stack.prod(axis=0)
+    if op == "max":
+        return stack.max(axis=0)
+    if op == "min":
+        return stack.min(axis=0)
+    raise ValueError(f"unknown op {op!r}")

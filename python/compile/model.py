@@ -1,0 +1,157 @@
+"""Layer 2 — the DDP workload: a small byte-level transformer LM.
+
+The paper's motivating application for Allreduce is distributed DNN
+training (§1: gradient synchronization after each SGD step).  This module
+defines the per-worker compute graph — forward, loss, backward — over a
+**flat f32 parameter vector**, which is exactly the data layout the
+Allreduce operates on.  ``aot.py`` lowers ``train_step`` once to HLO text;
+the rust coordinator executes it per worker, allreduces the flat gradient
+with the paper's algorithm over the simulated cluster, and applies SGD.
+
+The reduce kernels of ``kernels/reduce.py`` are the L1 layer of the same
+stack and are lowered into their own artifacts via the L2 wrappers
+(`kernels.reduce.reduce_pair` / `reduce_kway`).
+
+Architecture (defaults): byte vocab 256, d_model 128, 2 layers, 4 heads,
+seq 64 → ≈ 440k parameters. Pure jnp; parameters are sliced out of the
+flat vector so the HLO signature stays `(f32[N], i32[B,T+1]) → (f32[],
+f32[N])`.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", False)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq: int = 64
+    batch: int = 8
+    d_ff_mult: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_model * self.d_ff_mult
+
+
+@dataclass
+class ParamSpec:
+    """Name → (offset, shape) layout of the flat parameter vector."""
+
+    entries: list = field(default_factory=list)  # (name, offset, shape)
+    total: int = 0
+
+    def add(self, name: str, shape):
+        size = 1
+        for s in shape:
+            size *= s
+        self.entries.append((name, self.total, tuple(shape)))
+        self.total += size
+
+    def slice(self, flat, name: str):
+        for n, off, shape in self.entries:
+            if n == name:
+                size = 1
+                for s in shape:
+                    size *= s
+                return flat[off : off + size].reshape(shape)
+        raise KeyError(name)
+
+
+def param_spec(cfg: ModelConfig) -> ParamSpec:
+    spec = ParamSpec()
+    d, v, t = cfg.d_model, cfg.vocab, cfg.seq
+    spec.add("embed", (v, d))
+    spec.add("pos", (t, d))
+    for i in range(cfg.n_layers):
+        spec.add(f"l{i}.ln1.g", (d,))
+        spec.add(f"l{i}.ln1.b", (d,))
+        spec.add(f"l{i}.attn.qkv", (d, 3 * d))
+        spec.add(f"l{i}.attn.out", (d, d))
+        spec.add(f"l{i}.ln2.g", (d,))
+        spec.add(f"l{i}.ln2.b", (d,))
+        spec.add(f"l{i}.mlp.up", (d, cfg.d_ff))
+        spec.add(f"l{i}.mlp.down", (cfg.d_ff, d))
+    spec.add("lnf.g", (d,))
+    spec.add("lnf.b", (d,))
+    return spec
+
+
+def init_params(cfg: ModelConfig, key) -> jnp.ndarray:
+    """Initial flat parameter vector (scaled-normal weights, LN at 1/0)."""
+    spec = param_spec(cfg)
+    chunks = []
+    for name, _off, shape in spec.entries:
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        elif name.endswith(".b"):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 0.02 if name in ("embed", "pos") else 1.0 / jnp.sqrt(fan_in)
+            chunks.append((jax.random.normal(sub, shape, jnp.float32) * scale).ravel())
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, x, qkv_w, out_w):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    qkv = x @ qkv_w  # [b, t, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    scores = jnp.where(mask, scores, jnp.float32(-1e9))
+    att = jax.nn.softmax(scores, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return y @ out_w
+
+
+def forward(cfg: ModelConfig, flat_params, tokens):
+    """Logits for input tokens `[B, T]` (returns `[B, T, vocab]`)."""
+    spec = param_spec(cfg)
+    p = lambda name: spec.slice(flat_params, name)  # noqa: E731
+    x = p("embed")[tokens] + p("pos")[None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        ln1 = _layer_norm(x, p(f"l{i}.ln1.g"), p(f"l{i}.ln1.b"))
+        x = x + _attention(cfg, ln1, p(f"l{i}.attn.qkv"), p(f"l{i}.attn.out"))
+        ln2 = _layer_norm(x, p(f"l{i}.ln2.g"), p(f"l{i}.ln2.b"))
+        x = x + jax.nn.gelu(ln2 @ p(f"l{i}.mlp.up")) @ p(f"l{i}.mlp.down")
+    x = _layer_norm(x, p("lnf.g"), p("lnf.b"))
+    return x @ p("embed").T  # tied unembedding
+
+
+def loss_fn(cfg: ModelConfig, flat_params, tokens):
+    """Mean next-token cross-entropy. `tokens` is `[B, T+1]`."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat_params, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def train_step(cfg: ModelConfig, flat_params, tokens):
+    """`(loss, grads)` — the graph AOT-exported for the rust DDP driver."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(flat_params)
+    return loss, grads

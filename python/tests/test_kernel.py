@@ -1,0 +1,118 @@
+"""L1 correctness: the Pallas kernels against the pure-jnp oracle.
+
+Hypothesis sweeps shapes/ops/values; fixed cases pin the exact size
+classes the AOT pipeline exports.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import reduce as reduce_mod
+from compile.kernels.ref import reduce_kway_ref, reduce_pair_ref
+
+OPS = list(reduce_mod.OPS)
+
+
+def rand(shape, seed, lo=-4.0, hi=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("n", [256, 4096, 65536])
+def test_reduce_pair_exported_size_classes(op, n):
+    """Exactly the sizes aot.py exports."""
+    a, b = rand((n,), 1), rand((n,), 2)
+    got = reduce_mod.reduce_pair(a, b, op=op)
+    want = reduce_pair_ref(a, b, op=op)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_reduce_pair_special_values(op):
+    """Identity-padding values (0, 1, ±inf) must flow through unharmed."""
+    a = jnp.asarray([0.0, 1.0, -1.0, np.inf, -np.inf, 3.5] + [0.25] * 122,
+                    dtype=jnp.float32)
+    b = jnp.asarray([1.0, 0.0, -2.0, 1.0, 1.0, -3.5] + [4.0] * 122,
+                    dtype=jnp.float32)
+    got = reduce_mod.reduce_pair(a, b, op=op)
+    want = reduce_pair_ref(a, b, op=op)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(
+    rows=st.integers(min_value=1, max_value=64),
+    op=st.sampled_from(OPS),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_reduce_pair_hypothesis_shapes(rows, op, seed):
+    n = rows * reduce_mod.LANES
+    a, b = rand((n,), seed), rand((n,), seed + 1)
+    got = reduce_mod.reduce_pair(a, b, op=op)
+    want = reduce_pair_ref(a, b, op=op)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    k=st.integers(min_value=2, max_value=9),
+    rows=st.integers(min_value=1, max_value=16),
+    op=st.sampled_from(OPS),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_reduce_kway_hypothesis(k, rows, op, seed):
+    n = rows * reduce_mod.LANES
+    stack = rand((k, n), seed, lo=0.1, hi=2.0)  # positive for stable prod
+    got = reduce_mod.reduce_kway(stack, op=op)
+    want = reduce_kway_ref(stack, op=op)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    dtype=st.sampled_from(["float32", "float64", "int32"]),
+    op=st.sampled_from(OPS),
+    rows=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_reduce_pair_dtypes(dtype, op, rows, seed):
+    """The kernel is dtype-generic (the AOT pipeline exports f32, but the
+    Pallas tile works for any VPU-supported element type)."""
+    n = rows * reduce_mod.LANES
+    rng = np.random.default_rng(seed)
+    if dtype == "int32":
+        a = jnp.asarray(rng.integers(-100, 100, n), dtype=jnp.int32)
+        b = jnp.asarray(rng.integers(-100, 100, n), dtype=jnp.int32)
+    else:
+        a = jnp.asarray(rng.uniform(-4, 4, n).astype(dtype))
+        b = jnp.asarray(rng.uniform(-4, 4, n).astype(dtype))
+    got = reduce_mod.reduce_pair(a, b, op=op)
+    want = reduce_pair_ref(a, b, op=op)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_reduce_pair_rejects_unaligned():
+    a = rand((100,), 3)
+    with pytest.raises(AssertionError):
+        reduce_mod.reduce_pair(a, a, op="sum")
+
+
+def test_kernel_is_associative_enough_for_allreduce():
+    """The schedule reorders combination order (paper §3: commutative ops);
+    check sum association error stays tiny at fp32."""
+    parts = [rand((512,), s) for s in range(7)]
+    left = parts[0]
+    for x in parts[1:]:
+        left = reduce_mod.reduce_pair(left, x, op="sum")
+    right = parts[-1]
+    for x in reversed(parts[:-1]):
+        right = reduce_mod.reduce_pair(right, x, op="sum")
+    # Different association orders differ by fp32 rounding only; summands
+    # are O(4) so the absolute error budget is a few ULP of the partials.
+    np.testing.assert_allclose(left, right, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,102 @@
+"""L2 correctness: the transformer train step (shapes, gradients, learning)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile.model import ModelConfig
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # Small config for fast tests; same code path as the exported one.
+    return ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, seq=16, batch=4)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return model_mod.init_params(cfg, jax.random.PRNGKey(1))
+
+
+def tokens_for(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq + 1)), dtype=jnp.int32
+    )
+
+
+def test_param_spec_covers_flat_vector(cfg, params):
+    spec = model_mod.param_spec(cfg)
+    assert params.shape == (spec.total,)
+    # Offsets are contiguous and non-overlapping.
+    cursor = 0
+    for _name, off, shape in spec.entries:
+        assert off == cursor
+        size = int(np.prod(shape))
+        cursor += size
+    assert cursor == spec.total
+
+
+def test_forward_shapes_and_finite(cfg, params):
+    toks = tokens_for(cfg)
+    logits = model_mod.forward(cfg, params, toks[:, :-1])
+    assert logits.shape == (cfg.batch, cfg.seq, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_initial_loss_near_uniform(cfg, params):
+    toks = tokens_for(cfg)
+    loss = model_mod.loss_fn(cfg, params, toks)
+    # Near-uniform prediction at init: loss ≈ log(vocab).
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+
+def test_grads_match_finite_differences(cfg, params):
+    toks = tokens_for(cfg, seed=3)
+    loss, grads = model_mod.train_step(cfg, params, toks)
+    assert grads.shape == params.shape
+    assert bool(jnp.isfinite(grads).all())
+    rng = np.random.default_rng(7)
+    idxs = rng.choice(params.shape[0], size=5, replace=False)
+    eps = 1e-3
+    for i in idxs:
+        e = jnp.zeros_like(params).at[i].set(eps)
+        lp = model_mod.loss_fn(cfg, params + e, toks)
+        lm = model_mod.loss_fn(cfg, params - e, toks)
+        fd = (lp - lm) / (2 * eps)
+        assert abs(float(fd) - float(grads[i])) < 5e-2 * (1 + abs(float(fd))), (
+            f"param {i}: fd={float(fd)} ad={float(grads[i])}"
+        )
+
+
+def test_causality(cfg, params):
+    """Changing a future token must not affect earlier logits."""
+    toks = tokens_for(cfg, seed=5)[:, :-1]
+    logits1 = model_mod.forward(cfg, params, toks)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % cfg.vocab)
+    logits2 = model_mod.forward(cfg, params, toks2)
+    np.testing.assert_allclose(
+        logits1[:, :-1], logits2[:, :-1], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_sgd_reduces_loss(cfg, params):
+    """A few SGD steps on a fixed batch must reduce the loss."""
+    toks = tokens_for(cfg, seed=11)
+    p = params
+    first, _ = model_mod.train_step(cfg, p, toks)
+    step = jax.jit(lambda p: model_mod.train_step(cfg, p, toks))
+    loss = first
+    for _ in range(20):
+        loss, g = step(p)
+        p = p - 0.5 * g
+    assert float(loss) < float(first) * 0.7, f"{float(first)} -> {float(loss)}"
+
+
+def test_exported_config_param_count_reasonable():
+    cfg = ModelConfig()
+    spec = model_mod.param_spec(cfg)
+    # ~0.4M params at the default config (documented in DESIGN.md).
+    assert 300_000 < spec.total < 700_000

@@ -1,0 +1,99 @@
+//! End-to-end executor benches: wall-clock Allreduce on the thread cluster.
+//!
+//! This is the L3 throughput path a user actually feels: schedule already
+//! cached, real f32 payloads, all workers live. Compares the paper's
+//! algorithm family against the baselines at several message sizes, plus
+//! the coordinator overhead per step (the §Perf "coordinator ≪ α" target).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use harness::{bench, black_box};
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use permallreduce::cluster::{ClusterExecutor, ReduceOp};
+use permallreduce::util::Rng;
+
+fn inputs(p: usize, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(7);
+    (0..p)
+        .map(|_| (0..n).map(|_| rng.f32()).collect())
+        .collect()
+}
+
+fn main() {
+    let ctx = BuildCtx::default();
+    let exec = ClusterExecutor::new();
+    let budget = Duration::from_secs(3);
+
+    for p in [4usize, 8] {
+        for n in [1usize << 10, 1 << 16, 1 << 20] {
+            let xs = inputs(p, n);
+            for kind in [
+                AlgorithmKind::BwOptimal,
+                AlgorithmKind::LatOptimal,
+                AlgorithmKind::Ring,
+                AlgorithmKind::RecursiveDoubling,
+                AlgorithmKind::RecursiveHalving,
+            ] {
+                let s = Algorithm::new(kind, p).build(&ctx).unwrap();
+                bench(
+                    &format!("allreduce/{}/p{p}/{}KiB", kind.label(), n * 4 / 1024),
+                    budget,
+                    || {
+                        black_box(exec.execute(&s, &xs, ReduceOp::Sum).unwrap());
+                    },
+                );
+            }
+            println!();
+        }
+    }
+
+    // Coordinator overhead: empty-ish payload isolates step machinery.
+    let p = 8;
+    let xs = inputs(p, p); // one element per chunk
+    let s = Algorithm::new(AlgorithmKind::BwOptimal, p).build(&ctx).unwrap();
+    bench("overhead/step-machinery/p8/minimal", budget, || {
+        black_box(exec.execute(&s, &xs, ReduceOp::Sum).unwrap());
+    });
+
+    // §11 future-work ablation: segmented schedules (more steps, smaller
+    // pieces) vs plain bw-optimal on a big real payload — probing the
+    // cache effect the paper credits for Ring's large-m win.
+    println!("\n== segmented (§11) vs plain at 4 MiB/rank ==");
+    {
+        let p = 8;
+        let n = 1 << 20;
+        let xs = inputs(p, n);
+        for slabs in [1u32, 4, 16] {
+            let s = Algorithm::new(AlgorithmKind::Segmented { r: 0, slabs }, p)
+                .build(&ctx)
+                .unwrap();
+            bench(&format!("allreduce/segmented-s{slabs}/p8/4096KiB"), budget, || {
+                black_box(exec.execute(&s, &xs, ReduceOp::Sum).unwrap());
+            });
+        }
+    }
+
+    // §Perf ablation: scoped (spawn per call) vs persistent worker pool.
+    println!("\n== scoped vs persistent executor (per-call overhead) ==");
+    use permallreduce::cluster::PersistentCluster;
+    use std::sync::Arc;
+    let pool = PersistentCluster::new(p);
+    let sa = Arc::new(s.clone());
+    bench("overhead/persistent-pool/p8/minimal", budget, || {
+        black_box(pool.execute(&sa, &xs, ReduceOp::Sum).unwrap());
+    });
+    for n in [1usize << 10, 1 << 16, 1 << 20] {
+        let xs = inputs(p, n);
+        let s = Arc::new(Algorithm::new(AlgorithmKind::BwOptimal, p).build(&ctx).unwrap());
+        bench(
+            &format!("allreduce-persistent/proposed-bw/p8/{}KiB", n * 4 / 1024),
+            budget,
+            || {
+                black_box(pool.execute(&s, &xs, ReduceOp::Sum).unwrap());
+            },
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! One bench per paper table/figure: regenerates each figure's data series
+//! (the DES/model sweeps behind Figs 1, 7–12) and reports both the
+//! headline rows and the time to produce them.
+//!
+//! The actual series land in `figures_out/` via the `figures` binary; this
+//! bench pins the regeneration cost and prints the paper-shape summary
+//! (who wins, where the crossovers are) so `cargo bench` output alone is
+//! enough to eyeball the reproduction.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use harness::{bench, black_box};
+use permallreduce::cost::NetParams;
+use permallreduce::figures;
+
+fn headline(fig: &figures::Figure) {
+    // First, mid, last rows as a quick shape check.
+    for idx in [0, fig.rows.len() / 2, fig.rows.len() - 1] {
+        let row = &fig.rows[idx];
+        let cells: Vec<String> = fig
+            .columns
+            .iter()
+            .zip(row)
+            .map(|(c, v)| format!("{c}={v:.3e}"))
+            .collect();
+        println!("    {}", cells.join("  "));
+    }
+}
+
+fn main() {
+    let params = NetParams::table2();
+    let budget = Duration::from_secs(3);
+
+    for id in figures::all_ids() {
+        let fig = figures::generate(id, &params).unwrap();
+        println!("\n== {} — {} ==", fig.id, fig.title);
+        headline(&fig);
+        match *id {
+            // The full 2..=256 P-sweeps take ~90 s each; time a sampled
+            // sweep here (the figures binary still writes the full CSV).
+            "fig11" | "fig12" => {
+                let m = if *id == "fig11" { 425 } else { 9 * 1024 };
+                let ps: Vec<usize> = vec![16, 31, 64, 65, 100, 127, 128, 200, 256];
+                bench(&format!("regenerate/{id}(sampled-P)"), budget, || {
+                    black_box(figures::p_sweep(id, "sampled", m, &ps, &params));
+                });
+            }
+            _ => bench(&format!("regenerate/{id}"), budget, || {
+                black_box(figures::generate(id, &params).unwrap());
+            }),
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Minimal bench harness (criterion is unavailable in this offline image).
+//!
+//! Provides warmup + timed iterations with mean / min / p50 reporting in a
+//! criterion-like format, so `cargo bench` output stays familiar.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` repeatedly for ~`budget` after warmup and report statistics.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) {
+    // Warmup: at least 3 iterations or 100 ms.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u32;
+    while warm_iters < 3 || warm_start.elapsed() < Duration::from_millis(100) {
+        f();
+        warm_iters += 1;
+        if warm_start.elapsed() > budget {
+            break;
+        }
+    }
+
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean: f64 = samples.iter().sum::<f64>() / n as f64;
+    let min = samples[0];
+    let p50 = samples[n / 2];
+    println!(
+        "{name:<52} time: [{} {} {}] ({n} samples)",
+        fmt_t(min),
+        fmt_t(p50),
+        fmt_t(mean),
+    );
+}
+
+/// Format seconds in criterion style.
+pub fn fmt_t(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.2} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,99 @@
+//! Reducer benches: the combine `⊕` itself (the paper's γ term).
+//!
+//! Measures the native rust loops against the PJRT-executed Pallas kernel
+//! across chunk sizes, and derives an effective γ (s/B) to compare with
+//! the paper's Table 2 value (2·10⁻¹⁰ s/B on their cluster).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::{Duration, Instant};
+
+use harness::{bench, black_box, fmt_t};
+use permallreduce::cluster::{NativeReducer, ReduceOp, Reducer};
+use permallreduce::runtime::ReduceEngine;
+use permallreduce::util::Rng;
+
+fn measured_gamma(mut f: impl FnMut(&mut [f32], &[f32]), n: usize) -> f64 {
+    let mut rng = Rng::new(3);
+    let mut dst: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let src: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let iters = (50_000_000 / n).max(3);
+    let t = Instant::now();
+    for _ in 0..iters {
+        f(&mut dst, &src);
+    }
+    t.elapsed().as_secs_f64() / iters as f64 / (n * 4) as f64
+}
+
+fn main() {
+    let budget = Duration::from_secs(2);
+    let native = NativeReducer;
+    let mut rng = Rng::new(11);
+
+    println!("== native reducer ==");
+    for n in [256usize, 4096, 65536, 1 << 20] {
+        let mut dst: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let src: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        bench(&format!("native/sum/{n}"), budget, || {
+            native.combine(ReduceOp::Sum, &mut dst, &src).unwrap();
+            black_box(&dst);
+        });
+    }
+    let g_native = measured_gamma(
+        |d, s| NativeReducer.combine(ReduceOp::Sum, d, s).unwrap(),
+        65536,
+    );
+    println!("effective γ (native, 64k chunks): {g_native:.2e} s/B (paper Table 2: 2.0e-10)");
+
+    println!("\n== PJRT/Pallas reducer ==");
+    match ReduceEngine::from_artifacts() {
+        Ok(mut eng) => {
+            for n in [256usize, 4096, 65536] {
+                let mut dst: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                let src: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                bench(&format!("pjrt/sum/{n}"), budget, || {
+                    eng.combine(ReduceOp::Sum, &mut dst, &src).unwrap();
+                    black_box(&dst);
+                });
+            }
+            // One-shot γ estimate at the largest exported class.
+            let n = 65536;
+            let mut dst: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let src: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let t = Instant::now();
+            let iters = 50;
+            for _ in 0..iters {
+                eng.combine(ReduceOp::Sum, &mut dst, &src).unwrap();
+            }
+            let per = t.elapsed().as_secs_f64() / iters as f64;
+            println!(
+                "pjrt 64k combine: {} / call → effective γ {:.2e} s/B \
+                 (includes literal marshalling — see EXPERIMENTS.md §Perf)",
+                fmt_t(per),
+                per / (n * 4) as f64
+            );
+
+            // k-way ablation: folding 8 chunks with one kernel launch vs
+            // 7 pairwise launches (launch-overhead amortization).
+            println!("\n== k-way fold ablation (8 chunks of 4096) ==");
+            let k = 8usize;
+            let n = 4096usize;
+            let chunks: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| rng.f32()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = chunks.iter().map(|c| c.as_slice()).collect();
+            bench("pjrt/kway8/4096", budget, || {
+                black_box(eng.combine_kway(ReduceOp::Sum, &refs).unwrap());
+            });
+            bench("pjrt/pairwise-x7/4096", budget, || {
+                let mut acc = chunks[0].clone();
+                for c in &chunks[1..] {
+                    eng.combine(ReduceOp::Sum, &mut acc, c).unwrap();
+                }
+                black_box(acc);
+            });
+        }
+        Err(e) => println!("skipped (artifacts missing?): {e:#}"),
+    }
+}

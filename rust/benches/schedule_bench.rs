@@ -1,0 +1,68 @@
+//! L3 hot-path benches: schedule construction, verification, and DES
+//! simulation latency across algorithms and process counts.
+//!
+//! Schedule construction is the coordinator's per-communicator setup cost
+//! (amortized by the cache but relevant for elastic jobs); the §Perf target
+//! in DESIGN.md is < 10 ms for P = 1000 bandwidth-optimal.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use harness::{bench, black_box};
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use permallreduce::cost::NetParams;
+use permallreduce::des::simulate;
+use permallreduce::sched::verify::verify;
+
+fn main() {
+    let ctx = BuildCtx::default();
+    let budget = Duration::from_secs(2);
+
+    println!("== schedule construction ==");
+    for p in [8usize, 64, 127, 256] {
+        for kind in [
+            AlgorithmKind::BwOptimal,
+            AlgorithmKind::Generalized { r: 3 },
+            AlgorithmKind::LatOptimal,
+            AlgorithmKind::Ring,
+            AlgorithmKind::RecursiveHalving,
+        ] {
+            let algo = Algorithm::new(kind, p);
+            bench(&format!("build/{}/p{p}", kind.label()), budget, || {
+                black_box(algo.build(&ctx).unwrap());
+            });
+        }
+    }
+    // The DESIGN.md §Perf target case.
+    let algo = Algorithm::new(AlgorithmKind::BwOptimal, 1000);
+    bench("build/proposed-bw/p1000", budget, || {
+        black_box(algo.build(&ctx).unwrap());
+    });
+
+    println!("\n== verification ==");
+    for p in [64usize, 127] {
+        for kind in [AlgorithmKind::BwOptimal, AlgorithmKind::LatOptimal] {
+            let s = Algorithm::new(kind, p).build(&ctx).unwrap();
+            bench(&format!("verify/{}/p{p}", kind.label()), budget, || {
+                black_box(verify(&s).unwrap());
+            });
+        }
+    }
+
+    println!("\n== DES simulation ==");
+    let params = NetParams::table2();
+    for p in [127usize] {
+        for kind in [
+            AlgorithmKind::BwOptimal,
+            AlgorithmKind::LatOptimal,
+            AlgorithmKind::Ring,
+        ] {
+            let s = Algorithm::new(kind, p).build(&ctx).unwrap();
+            bench(&format!("des/{}/p{p}", kind.label()), budget, || {
+                black_box(simulate(&s, p * 1024, &params));
+            });
+        }
+    }
+}

@@ -1,0 +1,583 @@
+//! The paper's generalized Allreduce algorithm (§7–§9).
+//!
+//! One builder covers the whole family through the parameter `r` — the
+//! number of steps removed from the distribution phase:
+//!
+//! * `r = 0` — **bandwidth-optimal** (§7): `2⌈log P⌉` steps,
+//!   `2(P−1)` chunk-sends per process;
+//! * `0 < r < ⌈log P⌉` — **intermediate** (§8): `2⌈log P⌉ − r` steps,
+//!   `2(P−1) + (D−1)(⌈log P⌉−1)` chunk-sends where `D = N_{L−r}` is the
+//!   number of result replicas produced by the reduction phase (`= 2^r`
+//!   for power-of-two `P`, the paper's eq. 36 worst case);
+//! * `r = ⌈log P⌉` — **latency-optimal** (§9): `⌈log P⌉` steps, no
+//!   distribution phase at all.
+//!
+//! ## Construction
+//!
+//! The builder tracks the *replica-0 trajectory*: a list of entries
+//! `(index j, content C_j)` whose placements stay `t_j` throughout (kept
+//! entries never move — paper eq. 17/21). One step with `N` live entries
+//! transmits entries `j ∈ [⌈N/2⌉, N)` under the single group operator `s`
+//! with `s·t_j = t_{j−⌊N/2⌋}` (eq. 19), reduces them pairwise into the kept
+//! entries (eqs. 22–23), and leaves entry 0 untouched when `N` is odd (the
+//! `q*` of eq. 17).
+//!
+//! Replica `d` (for the §8/§9 shifted copies) is *derived* from the
+//! trajectory by the group action: its entry `j` sits at place `t_d·t_j`
+//! with content `{t_d·t_k : k ∈ C_j}` — the paper's observation that the
+//! schedule for `t^1 q_Σ` is the schedule for `t^0 q_Σ` with every vector
+//! shifted but the communication operators kept (§8). Physical records are
+//! **deduplicated by (placement, content)**: where replicas share an
+//! intermediate sum `q'_k` the chunk is transmitted and reduced exactly
+//! once, which is what makes the extra cost exactly one chunk per replica
+//! per step (eq. 32).
+//!
+//! The result is emitted as a [`ProcSchedule`] whose per-step pattern is a
+//! single cyclic transfer — every process sends one message to `s(p)` and
+//! receives one from `s⁻¹(p)` — satisfying the §2 network model by
+//! construction (and re-checked by the verifier).
+
+use std::collections::HashMap;
+
+use crate::perm::{Group, Permutation};
+use crate::sched::{BufId, Op, ProcSchedule, ScheduleBuilder, Segment};
+use crate::util::{ceil_log2, BitSet};
+
+/// Physical identity of a live distributed record: placement index and the
+/// set of source vectors folded into it (paper §5.4).
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct Key {
+    place: usize,
+    content: BitSet,
+}
+
+/// Shift a replica-0 content set by `t_d` (indices compose through the group).
+fn shift_content(g: &Group, c: &BitSet, d: usize) -> BitSet {
+    if d == 0 {
+        return c.clone();
+    }
+    c.map(|k| g.compose(d, k))
+}
+
+/// The `N_i` halving chain: `N_0 = P`, `N_{i+1} = ⌈N_i/2⌉` (paper eq. 18).
+pub fn halving_chain(p: usize) -> Vec<usize> {
+    let mut chain = vec![p];
+    let mut n = p;
+    while n > 1 {
+        n = n.div_ceil(2);
+        chain.push(n);
+    }
+    chain
+}
+
+/// Number of result replicas the reduction phase must produce for a given
+/// `r` (equals `2^r` for power-of-two `P`; `N_{L−r}` in general).
+pub fn replica_count(p: usize, r: u32) -> usize {
+    let chain = halving_chain(p);
+    let l = chain.len() - 1; // = ⌈log P⌉
+    chain[l - (r as usize).min(l)]
+}
+
+/// Build the generalized algorithm's schedule.
+///
+/// * `group` — the abelian transitive group `T_P` (any `P`: cyclic; pow2:
+///   also the XOR group, yielding Recursive Halving/Doubling patterns).
+/// * `h` — initial placement permutation (paper Fig 3); identity is typical.
+/// * `r` — distribution steps removed, `0 ≤ r ≤ ⌈log P⌉`.
+///
+/// Returns an error if `r` is out of range or the group cannot realize the
+/// halving schedule (eq. 19's single-operator fold — e.g. `Z_3 × Z_3`).
+pub fn build(group: &Group, h: &Permutation, r: u32) -> Result<ProcSchedule, String> {
+    let p = group.order();
+    assert_eq!(h.len(), p, "h must act on {p} points");
+    let l = ceil_log2(p);
+    if r > l {
+        return Err(format!("r={r} out of range [0, {l}] for P={p}"));
+    }
+    let d_replicas = replica_count(p, r);
+
+    let h_inv = h.inverse();
+    let mut b = ScheduleBuilder::new(p, p as u32, format!("generalized(P={p},r={r})"));
+
+    // Initial records: Q_k at place t_k, content {k}; process `proc` holds
+    // element i = h⁻¹(t_k⁻¹(proc)) of it (its own column — eq. 5 with the
+    // upper index equal to the position).
+    let mut live: HashMap<Key, BufId> = HashMap::new();
+    for k in 0..p {
+        let segs: Vec<Segment> = (0..p)
+            .map(|proc| {
+                let i = h_inv.apply(group.apply(group.inverse(k), proc));
+                Segment::new(i as u32, 1)
+            })
+            .collect();
+        let id = b.init_buf_per_proc(&segs);
+        live.insert(
+            Key {
+                place: k,
+                content: BitSet::singleton(p, k),
+            },
+            id,
+        );
+    }
+
+    // Replica-0 trajectory: contents C_j, places implicitly t_j.
+    let mut contents: Vec<BitSet> = (0..p).map(|k| BitSet::singleton(p, k)).collect();
+    // Per reduction step: (N, half, s) for the distribution phase reversal.
+    let mut step_info: Vec<(usize, usize, usize)> = Vec::new();
+
+    // ---------------- Reduction phase: ⌈log P⌉ steps ----------------
+    while contents.len() > 1 {
+        let n = contents.len();
+        let half = n / 2;
+        let n_next = n - half; // ⌈N/2⌉
+        let start = n % 2; // 1 ⇒ entry 0 is the untouched q* (eq. 23)
+
+        // The single step operator (eq. 19): s·t_j = t_{j−⌊N/2⌋} for all
+        // transmitted j. Derive from the first TX entry, then check the rest.
+        let s = group.compose(start, group.inverse(n_next));
+        for j in n_next..n {
+            if group.compose(s, j) != j - half {
+                return Err(format!(
+                    "group {} cannot realize the halving schedule: operator \
+                     t_{s} sends place {j} to {} ≠ {} (eq. 19 fold breaks)",
+                    group.name(),
+                    group.compose(s, j),
+                    j - half
+                ));
+            }
+        }
+
+        // Unique transmitted records across replicas, in deterministic order.
+        let mut tx_keys: Vec<Key> = Vec::new();
+        let mut tx_index: HashMap<Key, usize> = HashMap::new();
+        for j in n_next..n {
+            for d in 0..d_replicas {
+                let key = Key {
+                    place: group.compose(d, j),
+                    content: shift_content(group, &contents[j], d),
+                };
+                if !tx_index.contains_key(&key) {
+                    tx_index.insert(key.clone(), tx_keys.len());
+                    tx_keys.push(key);
+                }
+            }
+        }
+        let tx_old: Vec<BufId> = tx_keys
+            .iter()
+            .map(|k| {
+                *live
+                    .get(k)
+                    .unwrap_or_else(|| panic!("TX record (place {}, {:?}) not live", k.place, k.content))
+            })
+            .collect();
+        let tx_new: Vec<BufId> = tx_keys.iter().map(|_| b.fresh()).collect();
+
+        // Next trajectory contents.
+        let mut next_contents: Vec<BitSet> = Vec::with_capacity(n_next);
+        for j in 0..n_next {
+            if j < start {
+                next_contents.push(contents[j].clone());
+            } else {
+                next_contents.push(contents[j].union(&contents[j + half]));
+            }
+        }
+
+        // Resolve next live records: pass-throughs reuse existing buffers,
+        // merged records reduce the freshly received chunk into place.
+        enum Srcs {
+            Existing(BufId),
+            Combine { dst: BufId, src: BufId },
+        }
+        let mut next_live: Vec<(Key, Srcs)> = Vec::new();
+        let mut next_seen: HashMap<Key, ()> = HashMap::new();
+        for j in 0..n_next {
+            for d in 0..d_replicas {
+                let key = Key {
+                    place: group.compose(d, j),
+                    content: shift_content(group, &next_contents[j], d),
+                };
+                if next_seen.contains_key(&key) {
+                    continue;
+                }
+                next_seen.insert(key.clone(), ());
+                if let Some(&buf) = live.get(&key) {
+                    next_live.push((key, Srcs::Existing(buf)));
+                } else {
+                    let kept = Key {
+                        place: group.compose(d, j),
+                        content: shift_content(group, &contents[j], d),
+                    };
+                    let moved = Key {
+                        place: group.compose(d, j + half),
+                        content: shift_content(group, &contents[j + half], d),
+                    };
+                    let dst = tx_new[tx_index[&moved]];
+                    let src = live[&kept];
+                    next_live.push((key, Srcs::Combine { dst, src }));
+                }
+            }
+        }
+
+        // Emit the step: identical pattern on every process.
+        //
+        // A received chunk may feed several combines (replicas share the
+        // transmitted q'_k but fold it into different accumulators —
+        // paper eq. 33's two extra reductions). The first combine reduces
+        // into the received buffer itself; subsequent ones duplicate it
+        // first so no result is clobbered.
+        let to_of: Vec<usize> = (0..p).map(|proc| group.apply(s, proc)).collect();
+        let from_of: Vec<usize> = (0..p).map(|proc| group.apply(group.inverse(s), proc)).collect();
+        let mut consumed: Vec<bool> = vec![false; tx_new.len()];
+        let mut copies: Vec<(BufId, BufId)> = Vec::new(); // (fresh dst, recv src)
+        let mut reduces: Vec<(BufId, BufId)> = Vec::new();
+        for (_, srcs) in next_live.iter_mut() {
+            if let Srcs::Combine { dst, src } = srcs {
+                let ti = tx_new.iter().position(|x| x == dst).unwrap();
+                if consumed[ti] {
+                    let dup = b.fresh();
+                    copies.push((dup, *dst));
+                    reduces.push((dup, *src));
+                    *dst = dup;
+                } else {
+                    consumed[ti] = true;
+                    reduces.push((*dst, *src));
+                }
+            }
+        }
+        // Buffers to free: unconsumed fresh receives + all old records whose
+        // key does not survive into the next state.
+        let mut frees: Vec<BufId> = tx_new
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !consumed[*i])
+            .map(|(_, &buf)| buf)
+            .collect();
+        let surviving: HashMap<Key, ()> = next_live.iter().map(|(k, _)| (k.clone(), ())).collect();
+        for (key, &buf) in live.iter() {
+            if !surviving.contains_key(key) {
+                frees.push(buf);
+            }
+        }
+        frees.sort_unstable();
+
+        // Arc-share the identical per-process payloads: construction cost
+        // drops from O(P · chunks) to O(P + chunks) (§Perf).
+        let tx_old_arc = std::sync::Arc::new(tx_old.clone());
+        let tx_new_arc = std::sync::Arc::new(tx_new.clone());
+        let reduces_arc = std::sync::Arc::new(reduces);
+        let frees_arc = std::sync::Arc::new(frees);
+        b.begin_step();
+        for proc in 0..p {
+            b.op(
+                proc,
+                Op::Send {
+                    to: to_of[proc],
+                    bufs: tx_old_arc.clone(),
+                },
+            );
+            b.op(
+                proc,
+                Op::Recv {
+                    from: from_of[proc],
+                    bufs: tx_new_arc.clone(),
+                },
+            );
+            for &(dst, src) in &copies {
+                b.op(proc, Op::Copy { dst, src });
+            }
+            if !reduces_arc.is_empty() {
+                b.op(proc, Op::ReduceMany { pairs: reduces_arc.clone() });
+            }
+            if !frees_arc.is_empty() {
+                b.op(proc, Op::FreeMany { bufs: frees_arc.clone() });
+            }
+        }
+        b.end_step();
+
+        // Advance state.
+        live = next_live
+            .into_iter()
+            .map(|(k, srcs)| {
+                let buf = match srcs {
+                    Srcs::Existing(buf) => buf,
+                    Srcs::Combine { dst, .. } => dst,
+                };
+                (k, buf)
+            })
+            .collect();
+        step_info.push((n, half, s));
+        contents = next_contents;
+    }
+
+    // After the reduction the D replicas of q_Σ sit at places t_0..t_{D−1}.
+    let full = BitSet::full(p.max(1));
+    debug_assert_eq!(live.len(), d_replicas);
+    for d in 0..d_replicas {
+        debug_assert!(live.contains_key(&Key {
+            place: d,
+            content: full.clone()
+        }));
+    }
+
+    // ---------------- Distribution phase: ⌈log P⌉ − r steps ----------------
+    // Reverse the reduction steps, skipping the last `r` reversals (their
+    // effect was pre-paid by the replicas). Reversal of step (N, half, s):
+    // copy the record at place t_{j−half} to place t_j for j ∈ [⌈N/2⌉, N)
+    // under the operator s⁻¹.
+    let skip = r as usize;
+    for &(n, half, s) in step_info.iter().rev().skip(skip) {
+        let n_next = n - half;
+        let start = n % 2;
+        let s_inv = group.inverse(s);
+        let src_places: Vec<usize> = (start..n_next).collect();
+        let src_bufs: Vec<BufId> = src_places
+            .iter()
+            .map(|&k| {
+                *live
+                    .get(&Key {
+                        place: k,
+                        content: full.clone(),
+                    })
+                    .expect("distribution source must be live")
+            })
+            .collect();
+        let new_bufs: Vec<BufId> = src_places.iter().map(|_| b.fresh()).collect();
+
+        let src_arc = std::sync::Arc::new(src_bufs.clone());
+        let new_arc = std::sync::Arc::new(new_bufs.clone());
+        b.begin_step();
+        for proc in 0..p {
+            b.op(
+                proc,
+                Op::Send {
+                    to: group.apply(s_inv, proc),
+                    bufs: src_arc.clone(),
+                },
+            );
+            b.op(
+                proc,
+                Op::Recv {
+                    from: group.apply(s, proc),
+                    bufs: new_arc.clone(),
+                },
+            );
+        }
+        b.end_step();
+
+        for (&k, &buf) in src_places.iter().zip(&new_bufs) {
+            let place = group.compose(s_inv, k);
+            debug_assert_eq!(place, k + half);
+            live.insert(
+                Key {
+                    place,
+                    content: full.clone(),
+                },
+                buf,
+            );
+        }
+    }
+
+    // Result assembly: the record at place t_k supplies, on process `proc`,
+    // the element i = h⁻¹(t_k⁻¹(proc)) — jointly all P chunks (eq. 14).
+    let mut result: Vec<Vec<BufId>> = vec![vec![0; p]; p];
+    for k in 0..p {
+        let buf = *live
+            .get(&Key {
+                place: k,
+                content: full.clone(),
+            })
+            .unwrap_or_else(|| panic!("final record at place {k} missing"));
+        for (proc, res) in result.iter_mut().enumerate() {
+            let i = h_inv.apply(group.apply(group.inverse(k), proc));
+            res[i] = buf;
+        }
+    }
+    Ok(b.finish(result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::stats::stats;
+    use crate::sched::verify::verify;
+
+    #[test]
+    fn halving_chain_examples() {
+        assert_eq!(halving_chain(7), vec![7, 4, 2, 1]);
+        assert_eq!(halving_chain(8), vec![8, 4, 2, 1]);
+        assert_eq!(halving_chain(1), vec![1]);
+        assert_eq!(halving_chain(127), vec![127, 64, 32, 16, 8, 4, 2, 1]);
+    }
+
+    #[test]
+    fn replica_counts() {
+        // pow2: D = 2^r exactly.
+        for r in 0..=3 {
+            assert_eq!(replica_count(8, r), 1 << r);
+        }
+        // P=7: chain [7,4,2,1], L=3: D(0)=1, D(1)=2, D(2)=4, D(3)=7.
+        assert_eq!(replica_count(7, 0), 1);
+        assert_eq!(replica_count(7, 1), 2);
+        assert_eq!(replica_count(7, 2), 4);
+        assert_eq!(replica_count(7, 3), 7);
+    }
+
+    /// §7: the bandwidth-optimal version takes 2⌈log P⌉ steps and sends
+    /// exactly 2(P−1) chunks per process; the reduction phase computes
+    /// (P−1) chunk-reductions per process (eq. 25).
+    #[test]
+    fn bw_optimal_counts_match_eq25() {
+        for p in [2usize, 3, 5, 7, 8, 12, 16, 17, 31, 127] {
+            let g = Group::cyclic(p);
+            let h = Permutation::identity(p);
+            let s = build(&g, &h, 0).unwrap();
+            verify(&s).unwrap();
+            let st = stats(&s);
+            let l = ceil_log2(p) as usize;
+            assert_eq!(st.steps, 2 * l, "P={p}");
+            assert_eq!(st.critical_units_sent, 2 * (p as u64 - 1), "P={p}");
+            assert_eq!(st.critical_units_reduced, p as u64 - 1, "P={p}");
+        }
+    }
+
+    /// §8 cost accounting: steps = 2⌈log P⌉ − r; per-process traffic is
+    /// exactly `Σ_i min(⌊N_i/2⌋ + D − 1, P)` chunks for the reduction
+    /// phase (each replica adds one extra transmitted vector per step —
+    /// eq. 32 — but never more than the P distinct placements) plus
+    /// `P − D` for the distribution phase; and it never exceeds the
+    /// eq. 36 worst case `2(P−1) + (2^r−1)(⌈log P⌉−1)`.
+    #[test]
+    fn intermediate_counts_match_eq36() {
+        for p in [4usize, 5, 7, 8, 11, 16, 23, 127] {
+            let l = ceil_log2(p);
+            for r in 0..=l {
+                let g = Group::cyclic(p);
+                let h = Permutation::identity(p);
+                let s = build(&g, &h, r).unwrap();
+                verify(&s).unwrap_or_else(|e| panic!("P={p} r={r}: {e}"));
+                let st = stats(&s);
+                assert_eq!(st.steps, (2 * l - r) as usize, "P={p} r={r}");
+                let d = replica_count(p, r) as u64;
+                let chain = halving_chain(p);
+                let reduction: u64 = chain
+                    .iter()
+                    .take(l as usize)
+                    .map(|&n| ((n as u64) / 2 + d - 1).min(p as u64))
+                    .sum();
+                let expect = reduction + (p as u64 - d);
+                assert_eq!(
+                    st.critical_units_sent, expect,
+                    "P={p} r={r} D={d}: traffic mismatch"
+                );
+                // Paper's worst-case bound (eq. 36 bandwidth term; for
+                // r = L it is eq. 44's P·⌈log P⌉).
+                let bound = if r == l {
+                    p as u64 * l as u64
+                } else {
+                    2 * (p as u64 - 1) + ((1u64 << r) - 1) * (l as u64).saturating_sub(1)
+                };
+                assert!(
+                    st.critical_units_sent <= bound,
+                    "P={p} r={r}: {} > eq36/44 bound {bound}",
+                    st.critical_units_sent
+                );
+            }
+        }
+    }
+
+    /// §9: the latency-optimal version ends after ⌈log P⌉ steps with every
+    /// process holding the full result — no distribution phase.
+    #[test]
+    fn latency_optimal_step_count() {
+        for p in [2usize, 3, 7, 8, 15, 16, 127] {
+            let l = ceil_log2(p);
+            let g = Group::cyclic(p);
+            let h = Permutation::identity(p);
+            let s = build(&g, &h, l).unwrap();
+            verify(&s).unwrap();
+            assert_eq!(s.num_steps(), l as usize, "P={p}");
+        }
+    }
+
+    /// §7/§8 claim: with the XOR group and power-of-two P the generalized
+    /// algorithm's communication degenerates to hypercube exchanges — every
+    /// step's peer is p XOR 2^j, i.e. Recursive Halving (r=0) / Recursive
+    /// Doubling (r=L) patterns.
+    #[test]
+    fn xor_group_yields_hypercube_pattern() {
+        let p = 16;
+        let g = Group::xor(p);
+        let h = Permutation::identity(p);
+        for r in [0, ceil_log2(p)] {
+            let s = build(&g, &h, r).unwrap();
+            verify(&s).unwrap();
+            for step in &s.steps {
+                // Extract proc 0's peer; check all procs use p XOR that peer.
+                let to0 = step.ops[0]
+                    .iter()
+                    .find_map(|o| match o {
+                        Op::Send { to, .. } => Some(*to),
+                        _ => None,
+                    })
+                    .expect("every step sends");
+                assert!(to0.is_power_of_two(), "peer distance {to0} not a bit flip");
+                for (proc, ops) in step.ops.iter().enumerate() {
+                    let to = ops
+                        .iter()
+                        .find_map(|o| match o {
+                            Op::Send { to, .. } => Some(*to),
+                            _ => None,
+                        })
+                        .unwrap();
+                    assert_eq!(to, proc ^ to0, "not a hypercube exchange");
+                }
+            }
+        }
+    }
+
+    /// The engine rejects groups that cannot realize the halving fold
+    /// (eq. 19), e.g. Z_3 × Z_3.
+    #[test]
+    fn unsuitable_group_is_rejected() {
+        let g = Group::direct_product(&[3, 3]);
+        let h = Permutation::identity(9);
+        let err = build(&g, &h, 0).unwrap_err();
+        assert!(err.contains("cannot realize"), "{err}");
+    }
+
+    /// Arbitrary placement permutations h (paper Fig 3) work unchanged.
+    #[test]
+    fn nonidentity_h_verifies() {
+        let p = 7;
+        let g = Group::cyclic(p);
+        let h = Permutation::from_images(vec![4, 5, 2, 6, 1, 0, 3]).unwrap();
+        for r in 0..=3 {
+            let s = build(&g, &h, r).unwrap();
+            verify(&s).unwrap_or_else(|e| panic!("r={r}: {e}"));
+        }
+    }
+
+    /// P=1 degenerates to an empty schedule.
+    #[test]
+    fn single_process_trivial() {
+        let g = Group::cyclic(1);
+        let h = Permutation::identity(1);
+        let s = build(&g, &h, 0).unwrap();
+        assert_eq!(s.num_steps(), 0);
+        verify(&s).unwrap();
+    }
+
+    /// Cyclic groups with non-unit stride are equally valid T_P choices
+    /// (the paper's "vary utilized communication patterns", §11).
+    #[test]
+    fn stride_groups_verify() {
+        for (p, stride) in [(7usize, 3usize), (8, 3), (11, 5), (12, 7)] {
+            let g = Group::cyclic_with_stride(p, stride);
+            let h = Permutation::identity(p);
+            for r in [0, 1, ceil_log2(p)] {
+                let s = build(&g, &h, r).unwrap();
+                verify(&s).unwrap_or_else(|e| panic!("P={p} stride={stride} r={r}: {e}"));
+            }
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Hybrid Recursive-Halving / Recursive-Doubling baseline ([3, 5, 25, 28],
+//! discussed in §8): start the reduction with `x` vector-halving levels,
+//! switch to whole-segment Recursive Doubling for the remaining
+//! `log P − x` levels, finish with `x` allgather levels.
+//!
+//! `x = log P` is Recursive Halving, `x = 0` is Recursive Doubling; the
+//! intermediate values trade bandwidth for latency like the paper's `r`,
+//! **but only for power-of-two `P`** — which is precisely the limitation
+//! (§8: "the main problem of such hybrid approaches") the generalized
+//! algorithm removes. Included as the ablation baseline; for non-power-of-
+//! two `P` it falls back to the shrink wrapper like RD/RH.
+
+use crate::sched::{BufId, Op, ProcSchedule, ScheduleBuilder, Segment};
+use crate::util::ceil_log2;
+
+use super::recursive_doubling::pow2_floor;
+
+fn v2a(v: usize, rem: usize) -> usize {
+    if v < rem {
+        2 * v
+    } else {
+        v + rem
+    }
+}
+
+/// Build the hybrid schedule with `x` halving levels (`0 ≤ x ≤ log2 P'`).
+pub fn build(p: usize, x: u32) -> Result<ProcSchedule, String> {
+    let p2 = pow2_floor(p);
+    let rem = p - p2;
+    let levels = p2.trailing_zeros() as usize;
+    let x = x as usize;
+    if x > levels {
+        return Err(format!("x={x} exceeds log2(P')={levels}"));
+    }
+    // Unit = 1/2^x of the vector.
+    let n_units = 1usize << x;
+    let mut b = ScheduleBuilder::new(p, n_units as u32, format!("hybrid(P={p},x={x})"));
+
+    // Every process splits its vector into 2^x unit buffers.
+    let mut units: Vec<Vec<BufId>> = vec![Vec::with_capacity(n_units); p];
+    for u in 0..n_units {
+        let segs: Vec<Segment> = vec![Segment::new(u as u32, 1); p];
+        let id = b.init_buf_per_proc(&segs);
+        for per in units.iter_mut() {
+            per.push(id);
+        }
+    }
+    if p == 1 {
+        return Ok(b.finish(vec![units[0].clone()]));
+    }
+
+    // Preparation for non-pow2 (same as RD/RH).
+    if rem > 0 {
+        b.begin_step();
+        for i in 0..rem {
+            let (even, odd) = (2 * i, 2 * i + 1);
+            let fresh: Vec<BufId> = (0..n_units).map(|_| b.fresh()).collect();
+            b.op(odd, Op::send(even, units[odd].clone()));
+            for &buf in &units[odd] {
+                b.op(odd, Op::Free { buf });
+            }
+            b.op(even, Op::recv(odd, fresh.clone()));
+            for u in 0..n_units {
+                b.op(even, Op::Reduce { dst: fresh[u], src: units[even][u] });
+                b.op(even, Op::Free { buf: units[even][u] });
+            }
+            units[even] = fresh;
+        }
+        b.end_step();
+    }
+
+    // Phase 1: x reduce-scatter halving levels (top bits of v).
+    let mut lo: Vec<usize> = vec![0; p2];
+    let mut len: Vec<usize> = vec![n_units; p2];
+    for j in 0..x {
+        let bit = p2 >> (j + 1);
+        b.begin_step();
+        let mut fresh_of: Vec<Vec<BufId>> = vec![Vec::new(); p2];
+        for v in 0..p2 {
+            fresh_of[v] = (0..len[v] / 2).map(|_| b.fresh()).collect();
+        }
+        for v in 0..p2 {
+            let a = v2a(v, rem);
+            let pa = v2a(v ^ bit, rem);
+            let half = len[v] / 2;
+            let keep_upper = v & bit != 0;
+            let (keep_rng, send_rng) = if keep_upper {
+                (half..len[v], 0..half)
+            } else {
+                (0..half, half..len[v])
+            };
+            let send_bufs: Vec<BufId> = send_rng.clone().map(|k| units[a][k]).collect();
+            b.op(a, Op::send(pa, send_bufs.clone()));
+            b.op(a, Op::recv(pa, fresh_of[v].clone()));
+            for (idx, k) in keep_rng.clone().enumerate() {
+                b.op(a, Op::Reduce { dst: fresh_of[v][idx], src: units[a][k] });
+            }
+            for k in keep_rng.clone() {
+                b.op(a, Op::Free { buf: units[a][k] });
+            }
+            for &buf in &send_bufs {
+                b.op(a, Op::Free { buf });
+            }
+            units[a] = fresh_of[v].clone();
+            lo[v] += if keep_upper { half } else { 0 };
+            len[v] = half;
+        }
+        b.end_step();
+    }
+
+    // Phase 2: Recursive Doubling on the owned segment across the
+    // remaining low bits — each exchange moves the whole current segment.
+    for j in x..levels {
+        let bit = p2 >> (j + 1);
+        b.begin_step();
+        let mut fresh_of: Vec<Vec<BufId>> = vec![Vec::new(); p2];
+        for v in 0..p2 {
+            fresh_of[v] = (0..len[v]).map(|_| b.fresh()).collect();
+        }
+        for v in 0..p2 {
+            let a = v2a(v, rem);
+            let pa = v2a(v ^ bit, rem);
+            b.op(a, Op::send(pa, units[a].clone()));
+            b.op(a, Op::recv(pa, fresh_of[v].clone()));
+            for k in 0..len[v] {
+                b.op(a, Op::Reduce { dst: fresh_of[v][k], src: units[a][k] });
+            }
+            for &buf in &units[a].clone() {
+                b.op(a, Op::Free { buf });
+            }
+            units[a] = fresh_of[v].clone();
+        }
+        b.end_step();
+    }
+
+    // Phase 3: x allgather levels (reverse of phase 1).
+    for j in (0..x).rev() {
+        let bit = p2 >> (j + 1);
+        b.begin_step();
+        let mut fresh_of: Vec<Vec<BufId>> = vec![Vec::new(); p2];
+        for v in 0..p2 {
+            fresh_of[v] = (0..len[v]).map(|_| b.fresh()).collect();
+        }
+        let lo_before = lo.clone();
+        for v in 0..p2 {
+            let a = v2a(v, rem);
+            let pv = v ^ bit;
+            let pa = v2a(pv, rem);
+            b.op(a, Op::send(pa, units[a].clone()));
+            b.op(a, Op::recv(pa, fresh_of[v].clone()));
+            if lo_before[pv] < lo_before[v] {
+                let mut merged = fresh_of[v].clone();
+                merged.extend(units[a].iter().copied());
+                units[a] = merged;
+                lo[v] = lo_before[pv];
+            } else {
+                units[a].extend(fresh_of[v].iter().copied());
+            }
+            len[v] *= 2;
+        }
+        b.end_step();
+    }
+
+    // Finalization for non-pow2.
+    if rem > 0 {
+        b.begin_step();
+        for i in 0..rem {
+            let (even, odd) = (2 * i, 2 * i + 1);
+            let fresh: Vec<BufId> = (0..n_units).map(|_| b.fresh()).collect();
+            b.op(even, Op::send(odd, units[even].clone()));
+            b.op(odd, Op::recv(even, fresh.clone()));
+            units[odd] = fresh;
+        }
+        b.end_step();
+    }
+
+    Ok(b.finish(units))
+}
+
+/// Closed-form cost of the hybrid with `x` halving levels (pow2 `P`):
+/// `(log P + x)·α + (2(1−2⁻ˣ) + (log P − x)/2ˣ)·m·β + …·γ`.
+pub fn cost(p: usize, m: f64, x: u32, params: &crate::cost::NetParams) -> f64 {
+    let l = ceil_log2(p) as f64;
+    let x = x as f64;
+    let seg = 2f64.powf(-x);
+    let bw = 2.0 * (1.0 - seg) + (l - x) * seg;
+    let red = (1.0 - seg) + (l - x) * seg;
+    (l + x) * params.alpha + bw * m * params.beta + red * m * params.gamma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::NetParams;
+    use crate::des::simulate;
+    use crate::sched::stats::stats;
+    use crate::sched::verify::verify;
+
+    #[test]
+    fn hybrid_endpoints_match_rd_rh() {
+        for p in [4usize, 8, 16] {
+            let l = p.trailing_zeros();
+            // x = 0 ⇒ RD step/traffic profile.
+            let h0 = build(p, 0).unwrap();
+            verify(&h0).unwrap();
+            assert_eq!(h0.num_steps(), l as usize);
+            // x = log P ⇒ RH step/traffic profile.
+            let hl = build(p, l).unwrap();
+            verify(&hl).unwrap();
+            let st = stats(&hl);
+            assert_eq!(st.steps, 2 * l as usize);
+            assert_eq!(
+                st.critical_units_sent * (p as u64) / (p as u64), // units are 1/P'
+                2 * (p as u64 - 1)
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_all_x_verify_and_interpolate() {
+        let params = NetParams::table2();
+        for p in [8usize, 16, 32] {
+            let l = p.trailing_zeros();
+            let m = p * 1024;
+            let mut prev_steps = 0;
+            for x in 0..=l {
+                let s = build(p, x).unwrap();
+                verify(&s).unwrap_or_else(|e| panic!("P={p} x={x}: {e}"));
+                assert_eq!(s.num_steps(), (l + x) as usize);
+                assert!(s.num_steps() > prev_steps);
+                prev_steps = s.num_steps();
+                // DES matches the closed form exactly (pow2, P | m).
+                let des = simulate(&s, m, &params).makespan;
+                let cf = cost(p, m as f64, x, &params);
+                assert!(
+                    (des - cf).abs() / cf < 1e-9,
+                    "P={p} x={x}: des {des} vs closed form {cf}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_non_pow2_fallback_verifies() {
+        for p in [5usize, 7, 12] {
+            for x in 0..=pow2_floor(p).trailing_zeros() {
+                let s = build(p, x).unwrap();
+                verify(&s).unwrap_or_else(|e| panic!("P={p} x={x}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn numeric_correctness() {
+        use crate::cluster::{reference_allreduce, ClusterExecutor, ReduceOp};
+        use crate::util::Rng;
+        let exec = ClusterExecutor::new();
+        let mut rng = Rng::new(4);
+        for (p, x) in [(8usize, 1u32), (8, 2), (16, 3), (7, 1)] {
+            let s = build(p, x).unwrap();
+            let xs: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..50).map(|_| rng.f32()).collect())
+                .collect();
+            let want = reference_allreduce(&xs, ReduceOp::Sum);
+            let got = exec.execute(&s, &xs, ReduceOp::Sum).unwrap();
+            for out in &got {
+                for (g, w) in out.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4, "P={p} x={x}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Allreduce schedule builders.
+//!
+//! | builder | paper section | steps | works for |
+//! |---|---|---|---|
+//! | [`naive`] | §6 eq. 15 | `2(P−1)` | any `P`, any group |
+//! | [`ring`] | §6 eq. 16, Fig 4 | `2(P−1)` | any `P`, cyclic group |
+//! | [`generalized`] `r=0` | §7 (bandwidth-optimal), Fig 5 | `2⌈log P⌉` | any `P` |
+//! | [`generalized`] `0<r<⌈log P⌉` | §8 (intermediate), Fig 6 | `2⌈log P⌉−r` | any `P` |
+//! | [`generalized`] `r=⌈log P⌉` | §9 (latency-optimal) | `⌈log P⌉` | any `P` |
+//! | [`recursive_doubling`] | baseline [27] | `⌈log P⌉ (+2)` | any `P` (pre/post for non-pow2) |
+//! | [`recursive_halving`] | baseline [25] | `2 log P (+2)` | any `P` (pre/post for non-pow2) |
+//! | OpenMPI switch | §10 | — | meta: RD below 10 KB, Ring above |
+//!
+//! With the XOR group of Table 1.b and power-of-two `P`, `generalized(r=0)`
+//! reproduces Recursive Halving's communication pattern and
+//! `generalized(r=⌈log P⌉)` reproduces Recursive Doubling's — the paper's
+//! claim that both are special cases of the proposed approach (§7, §8).
+
+pub mod generalized;
+pub mod hybrid;
+pub mod segmented;
+pub mod naive;
+pub mod recursive_doubling;
+pub mod recursive_halving;
+pub mod ring;
+
+use crate::cost::NetParams;
+use crate::perm::{Group, Permutation};
+use crate::sched::ProcSchedule;
+use crate::util::ceil_log2;
+
+/// Which Allreduce algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgorithmKind {
+    /// One vector moved per step (§6): `2(P−1)` steps, pedagogical.
+    Naive,
+    /// Ring (§6 / Fig 4): `2(P−1)` steps, bandwidth-optimal, cache friendly.
+    Ring,
+    /// The paper's algorithm, bandwidth-optimal corner (`r = 0`, §7).
+    BwOptimal,
+    /// The paper's algorithm, latency-optimal corner (`r = ⌈log P⌉`, §9).
+    LatOptimal,
+    /// The paper's algorithm with an explicit number of removed
+    /// distribution steps `r ∈ [0, ⌈log P⌉]` (§8).
+    Generalized { r: u32 },
+    /// The paper's algorithm with `r` chosen by the cost model (eq. 37's
+    /// argmin over the valid integer range) from the message size and
+    /// network parameters.
+    GeneralizedAuto,
+    /// Recursive Doubling baseline (latency-optimal for power-of-two `P`).
+    RecursiveDoubling,
+    /// Recursive Halving baseline (bandwidth-optimal for power-of-two `P`).
+    RecursiveHalving,
+    /// Hybrid RD/RH baseline ([3, 5, 25, 28]): `x` vector-halving levels
+    /// before switching to whole-segment recursive doubling. The pow2-only
+    /// prior art the generalized algorithm subsumes.
+    Hybrid { x: u32 },
+    /// Segmented generalized algorithm (§11 future work): run the
+    /// generalized schedule over `slabs` sequential slabs — more, smaller
+    /// steps (toward Ring's cache-friendly profile).
+    Segmented { r: u32, slabs: u32 },
+    /// The OpenMPI selection the paper measured against (§10): Recursive
+    /// Doubling below 10 KB, Ring at and above.
+    OpenMpi,
+}
+
+impl AlgorithmKind {
+    /// All concrete kinds (for sweeps and property tests). `Generalized`
+    /// appears with r = 1 as a representative; sweeps enumerate r themselves.
+    pub fn all() -> Vec<AlgorithmKind> {
+        vec![
+            AlgorithmKind::Naive,
+            AlgorithmKind::Ring,
+            AlgorithmKind::BwOptimal,
+            AlgorithmKind::LatOptimal,
+            AlgorithmKind::Generalized { r: 1 },
+            AlgorithmKind::GeneralizedAuto,
+            AlgorithmKind::RecursiveDoubling,
+            AlgorithmKind::RecursiveHalving,
+            AlgorithmKind::Hybrid { x: 1 },
+            AlgorithmKind::Segmented { r: 0, slabs: 2 },
+            AlgorithmKind::OpenMpi,
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            AlgorithmKind::Naive => "naive".into(),
+            AlgorithmKind::Ring => "ring".into(),
+            AlgorithmKind::BwOptimal => "proposed-bw".into(),
+            AlgorithmKind::LatOptimal => "proposed-lat".into(),
+            AlgorithmKind::Generalized { r } => format!("proposed-r{r}"),
+            AlgorithmKind::GeneralizedAuto => "proposed-auto".into(),
+            AlgorithmKind::RecursiveDoubling => "recursive-doubling".into(),
+            AlgorithmKind::RecursiveHalving => "recursive-halving".into(),
+            AlgorithmKind::Hybrid { x } => format!("hybrid-x{x}"),
+            AlgorithmKind::Segmented { r, slabs } => format!("segmented-r{r}-s{slabs}"),
+            AlgorithmKind::OpenMpi => "openmpi".into(),
+        }
+    }
+}
+
+/// Context a builder may consult for data-size-dependent decisions
+/// (`GeneralizedAuto`, `OpenMpi`).
+#[derive(Clone, Debug)]
+pub struct BuildCtx {
+    /// Message size in bytes (the paper's `m`).
+    pub m_bytes: usize,
+    /// Network parameters for the cost model.
+    pub params: NetParams,
+    /// OpenMPI's RD→Ring switch threshold in bytes (§10: 10 KB).
+    pub openmpi_threshold: usize,
+}
+
+impl Default for BuildCtx {
+    fn default() -> Self {
+        BuildCtx {
+            m_bytes: 425, // the average Allreduce payload reported by [23]
+            params: NetParams::table2(),
+            openmpi_threshold: 10 * 1024,
+        }
+    }
+}
+
+/// A fully specified algorithm instance: kind + the group `T_P` and initial
+/// placement permutation `h` (paper Fig 3) for the group-based family.
+#[derive(Clone)]
+pub struct Algorithm {
+    pub kind: AlgorithmKind,
+    pub group: Group,
+    pub h: Permutation,
+}
+
+impl Algorithm {
+    /// Standard configuration: cyclic group, identity `h`.
+    pub fn new(kind: AlgorithmKind, p: usize) -> Algorithm {
+        Algorithm {
+            kind,
+            group: Group::cyclic(p),
+            h: Permutation::identity(p),
+        }
+    }
+
+    pub fn with_group(mut self, group: Group) -> Algorithm {
+        assert_eq!(group.order(), self.group.order());
+        self.group = group;
+        self
+    }
+
+    pub fn with_h(mut self, h: Permutation) -> Algorithm {
+        assert_eq!(h.len(), self.group.order());
+        self.h = h;
+        self
+    }
+
+    /// Build the schedule.
+    pub fn build(&self, ctx: &BuildCtx) -> Result<ProcSchedule, String> {
+        let p = self.group.order();
+        let l = ceil_log2(p);
+        match self.kind {
+            AlgorithmKind::Naive => naive::build(&self.group, &self.h),
+            AlgorithmKind::Ring => ring::build(&self.group, &self.h),
+            AlgorithmKind::BwOptimal => generalized::build(&self.group, &self.h, 0),
+            AlgorithmKind::LatOptimal => generalized::build(&self.group, &self.h, l),
+            AlgorithmKind::Generalized { r } => generalized::build(&self.group, &self.h, r),
+            AlgorithmKind::GeneralizedAuto => {
+                let r = crate::cost::optimal_r(p, ctx.m_bytes, &ctx.params);
+                generalized::build(&self.group, &self.h, r)
+            }
+            AlgorithmKind::RecursiveDoubling => recursive_doubling::build(p),
+            AlgorithmKind::RecursiveHalving => recursive_halving::build(p),
+            AlgorithmKind::Hybrid { x } => hybrid::build(p, x),
+            AlgorithmKind::Segmented { r, slabs } => {
+                segmented::build(&self.group, &self.h, r, slabs)
+            }
+            AlgorithmKind::OpenMpi => {
+                if ctx.m_bytes < ctx.openmpi_threshold {
+                    recursive_doubling::build(p)
+                } else {
+                    ring::build(&self.group, &self.h)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::verify::verify;
+
+    /// Every algorithm kind must produce a verifying schedule for a
+    /// representative mix of process counts (pow2, odd, prime, even).
+    #[test]
+    fn all_kinds_verify_for_representative_p() {
+        for p in [2usize, 3, 4, 5, 7, 8, 12, 16, 17] {
+            for kind in AlgorithmKind::all() {
+                let algo = Algorithm::new(kind, p);
+                let s = algo
+                    .build(&BuildCtx::default())
+                    .unwrap_or_else(|e| panic!("{kind:?} P={p}: build failed: {e}"));
+                verify(&s).unwrap_or_else(|e| panic!("{kind:?} P={p}: verify failed: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn openmpi_switches_on_threshold() {
+        let algo = Algorithm::new(AlgorithmKind::OpenMpi, 8);
+        let small = algo
+            .build(&BuildCtx {
+                m_bytes: 1024,
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(small.name.contains("recursive-doubling"), "{}", small.name);
+        let big = algo
+            .build(&BuildCtx {
+                m_bytes: 1 << 20,
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(big.name.contains("ring"), "{}", big.name);
+    }
+}

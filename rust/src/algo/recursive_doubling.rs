@@ -1,0 +1,141 @@
+//! Recursive Doubling baseline [27] (latency-optimal for power-of-two P).
+//!
+//! Every step exchanges the *entire* vector with partner `p ⊕ 2^j` —
+//! `⌈log P⌉` steps, but `⌈log P⌉·m` bytes per process. For a non-power-of-
+//! two `P` the standard workaround (§3, [3, 5]) shrinks the communicator to
+//! the largest `P' = 2^⌊log P⌋ < P`: the `P − P'` excess processes donate
+//! their vector to a partner in a preparation step and receive the finished
+//! result in a finalization step — the `+2m` overhead (and `+2` steps) the
+//! paper's algorithm avoids.
+
+use crate::sched::{BufId, Op, ProcSchedule, ScheduleBuilder, Segment};
+
+/// Largest power of two `≤ p`.
+pub fn pow2_floor(p: usize) -> usize {
+    assert!(p >= 1);
+    1usize << (usize::BITS - 1 - p.leading_zeros())
+}
+
+/// Map a virtual rank (inside the power-of-two core) to the actual rank.
+/// The first `rem` virtual ranks are the even halves of the merged pairs.
+fn v2a(v: usize, rem: usize) -> usize {
+    if v < rem {
+        2 * v
+    } else {
+        v + rem
+    }
+}
+
+/// Build the Recursive Doubling schedule for any `P`.
+pub fn build(p: usize) -> Result<ProcSchedule, String> {
+    let mut b = ScheduleBuilder::new(p, 1, format!("recursive-doubling(P={p})"));
+    let seg = Segment::new(0, 1);
+    let whole: Vec<Segment> = vec![seg; p];
+    let init = b.init_buf_per_proc(&whole);
+    if p == 1 {
+        return Ok(b.finish(vec![vec![init]]));
+    }
+
+    let p2 = pow2_floor(p);
+    let rem = p - p2;
+    // cur[proc]: the process's live whole-vector buffer (participants only
+    // after the preparation step).
+    let mut cur: Vec<BufId> = vec![init; p];
+
+    // Preparation: odd halves of the first `rem` pairs donate their vector.
+    if rem > 0 {
+        b.begin_step();
+        let fresh: Vec<BufId> = (0..rem).map(|_| b.fresh()).collect();
+        for i in 0..rem {
+            let (even, odd) = (2 * i, 2 * i + 1);
+            b.op(odd, Op::send(even, vec![cur[odd]]));
+            b.op(odd, Op::Free { buf: cur[odd] });
+            b.op(even, Op::recv(odd, vec![fresh[i]]));
+            b.op(even, Op::Reduce { dst: fresh[i], src: cur[even] });
+            b.op(even, Op::Free { buf: cur[even] });
+            cur[even] = fresh[i];
+        }
+        b.end_step();
+    }
+
+    // Core: log2(P') pairwise whole-vector exchanges.
+    let levels = p2.trailing_zeros();
+    for j in 0..levels {
+        b.begin_step();
+        let fresh: Vec<BufId> = (0..p2).map(|_| b.fresh()).collect();
+        for v in 0..p2 {
+            let a = v2a(v, rem);
+            let pa = v2a(v ^ (1usize << j), rem);
+            b.op(a, Op::send(pa, vec![cur[a]]));
+            b.op(a, Op::recv(pa, vec![fresh[v]]));
+            b.op(a, Op::Reduce { dst: fresh[v], src: cur[a] });
+            b.op(a, Op::Free { buf: cur[a] });
+            cur[a] = fresh[v];
+        }
+        b.end_step();
+    }
+
+    // Finalization: merged pairs' odd halves receive the finished result.
+    if rem > 0 {
+        b.begin_step();
+        let fresh: Vec<BufId> = (0..rem).map(|_| b.fresh()).collect();
+        for i in 0..rem {
+            let (even, odd) = (2 * i, 2 * i + 1);
+            b.op(even, Op::send(odd, vec![cur[even]]));
+            b.op(odd, Op::recv(even, vec![fresh[i]]));
+            cur[odd] = fresh[i];
+        }
+        b.end_step();
+    }
+
+    let result = cur.iter().map(|&buf| vec![buf]).collect();
+    Ok(b.finish(result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::stats::stats;
+    use crate::sched::verify::verify;
+    use crate::util::ceil_log2;
+
+    #[test]
+    fn pow2_floor_values() {
+        assert_eq!(pow2_floor(1), 1);
+        assert_eq!(pow2_floor(2), 2);
+        assert_eq!(pow2_floor(3), 2);
+        assert_eq!(pow2_floor(127), 64);
+        assert_eq!(pow2_floor(128), 128);
+    }
+
+    /// Power-of-two: exactly log P steps, each exchanging the whole vector.
+    #[test]
+    fn pow2_counts() {
+        for p in [2usize, 4, 8, 32] {
+            let s = build(p).unwrap();
+            verify(&s).unwrap_or_else(|e| panic!("P={p}: {e}"));
+            let st = stats(&s);
+            assert_eq!(st.steps, ceil_log2(p) as usize);
+            assert!(st.step_max_units_sent.iter().all(|&u| u == 1));
+        }
+    }
+
+    /// Non-power-of-two: +2 steps and the 2m overhead of §3's workaround.
+    #[test]
+    fn non_pow2_overhead() {
+        for p in [3usize, 5, 6, 7, 12, 127] {
+            let s = build(p).unwrap();
+            verify(&s).unwrap_or_else(|e| panic!("P={p}: {e}"));
+            let st = stats(&s);
+            let core = pow2_floor(p).trailing_zeros() as usize;
+            assert_eq!(st.steps, core + 2, "P={p}");
+        }
+    }
+
+    #[test]
+    fn p1_trivial() {
+        let s = build(1).unwrap();
+        assert_eq!(s.num_steps(), 0);
+        verify(&s).unwrap();
+    }
+}

@@ -1,0 +1,203 @@
+//! Recursive Halving baseline [25]: reduce-scatter by recursive vector
+//! halving + allgather by recursive doubling. Bandwidth-optimal
+//! (`2(P'−1)/P' · m` bytes) in `2·log P'` steps for power-of-two `P'`.
+//!
+//! Non-power-of-two `P` uses the same shrink-to-`P'` preparation /
+//! finalization as Recursive Doubling (§3) — the `2m` overhead the paper's
+//! generalized algorithm eliminates (its Fig 9 gap).
+
+use crate::sched::{BufId, Op, ProcSchedule, ScheduleBuilder, Segment};
+
+use super::recursive_doubling::pow2_floor;
+
+fn v2a(v: usize, rem: usize) -> usize {
+    if v < rem {
+        2 * v
+    } else {
+        v + rem
+    }
+}
+
+/// Build the Recursive Halving schedule for any `P`.
+pub fn build(p: usize) -> Result<ProcSchedule, String> {
+    let p2 = pow2_floor(p);
+    let rem = p - p2;
+    let levels = p2.trailing_zeros() as usize;
+    // Unit = 1/P' of the vector.
+    let mut b = ScheduleBuilder::new(p, p2 as u32, format!("recursive-halving(P={p})"));
+
+    // Every process splits its vector into P' unit buffers.
+    let mut units: Vec<Vec<BufId>> = vec![Vec::with_capacity(p2); p];
+    for u in 0..p2 {
+        let segs: Vec<Segment> = vec![Segment::new(u as u32, 1); p];
+        let id = b.init_buf_per_proc(&segs);
+        for per in units.iter_mut() {
+            per.push(id);
+        }
+    }
+    // NOTE: init_buf_per_proc gives the same id to all processes, which is
+    // fine — ids name *that process's* local unit.
+    if p == 1 {
+        return Ok(b.finish(vec![units[0].clone()]));
+    }
+
+    // Preparation: odd halves donate their whole vector (all P' units).
+    if rem > 0 {
+        b.begin_step();
+        for i in 0..rem {
+            let (even, odd) = (2 * i, 2 * i + 1);
+            let fresh: Vec<BufId> = (0..p2).map(|_| b.fresh()).collect();
+            b.op(odd, Op::send(even, units[odd].clone()));
+            for &buf in &units[odd] {
+                b.op(odd, Op::Free { buf });
+            }
+            b.op(even, Op::recv(odd, fresh.clone()));
+            for u in 0..p2 {
+                b.op(even, Op::Reduce { dst: fresh[u], src: units[even][u] });
+                b.op(even, Op::Free { buf: units[even][u] });
+            }
+            units[even] = fresh;
+        }
+        b.end_step();
+    }
+
+    // Reduce-scatter: each level halves the live range.
+    // Participant v owns range [lo, lo+len) of units; ends with unit v.
+    let mut lo: Vec<usize> = vec![0; p2];
+    let mut len: Vec<usize> = vec![p2; p2];
+    for j in 0..levels {
+        let bit = p2 >> (j + 1);
+        b.begin_step();
+        let mut fresh_of: Vec<Vec<BufId>> = vec![Vec::new(); p2];
+        for v in 0..p2 {
+            fresh_of[v] = (0..len[v] / 2).map(|_| b.fresh()).collect();
+        }
+        for v in 0..p2 {
+            let a = v2a(v, rem);
+            let pv = v ^ bit;
+            let pa = v2a(pv, rem);
+            let half = len[v] / 2;
+            // Keep the half matching our bit; send the other half.
+            let keep_upper = v & bit != 0;
+            let (keep_rng, send_rng) = if keep_upper {
+                (half..len[v], 0..half)
+            } else {
+                (0..half, half..len[v])
+            };
+            let send_bufs: Vec<BufId> = send_rng.clone().map(|k| units[a][k]).collect();
+            b.op(a, Op::send(pa, send_bufs.clone()));
+            b.op(a, Op::recv(pa, fresh_of[v].clone()));
+            // Partner sent the half WE keep; reduce positionally.
+            for (idx, k) in keep_rng.clone().enumerate() {
+                b.op(a, Op::Reduce { dst: fresh_of[v][idx], src: units[a][k] });
+            }
+            for k in keep_rng.clone() {
+                b.op(a, Op::Free { buf: units[a][k] });
+            }
+            for &buf in &send_bufs {
+                b.op(a, Op::Free { buf });
+            }
+            units[a] = fresh_of[v].clone();
+            lo[v] += if keep_upper { half } else { 0 };
+            len[v] = half;
+        }
+        b.end_step();
+    }
+    // Sanity: participant v now owns exactly unit v.
+    for v in 0..p2 {
+        debug_assert_eq!((lo[v], len[v]), (v, 1));
+    }
+
+    // Allgather: reverse levels, ranges double.
+    for j in (0..levels).rev() {
+        let bit = p2 >> (j + 1);
+        b.begin_step();
+        let mut fresh_of: Vec<Vec<BufId>> = vec![Vec::new(); p2];
+        for v in 0..p2 {
+            fresh_of[v] = (0..len[v]).map(|_| b.fresh()).collect();
+        }
+        // Snapshot range starts: partners read each other's pre-level state.
+        let lo_before = lo.clone();
+        for v in 0..p2 {
+            let a = v2a(v, rem);
+            let pv = v ^ bit;
+            let pa = v2a(pv, rem);
+            b.op(a, Op::send(pa, units[a].clone()));
+            b.op(a, Op::recv(pa, fresh_of[v].clone()));
+            // Partner's range is the adjacent block of equal length.
+            let partner_lo = lo_before[pv];
+            if partner_lo < lo_before[v] {
+                let mut merged = fresh_of[v].clone();
+                merged.extend(units[a].iter().copied());
+                units[a] = merged;
+                lo[v] = partner_lo;
+            } else {
+                units[a].extend(fresh_of[v].iter().copied());
+            }
+            len[v] *= 2;
+        }
+        b.end_step();
+    }
+
+    // Finalization: send the whole result to the merged odd halves.
+    if rem > 0 {
+        b.begin_step();
+        for i in 0..rem {
+            let (even, odd) = (2 * i, 2 * i + 1);
+            let fresh: Vec<BufId> = (0..p2).map(|_| b.fresh()).collect();
+            b.op(even, Op::send(odd, units[even].clone()));
+            b.op(odd, Op::recv(even, fresh.clone()));
+            units[odd] = fresh;
+        }
+        b.end_step();
+    }
+
+    Ok(b.finish(units))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::stats::stats;
+    use crate::sched::verify::verify;
+
+    /// Power-of-two counts: 2 log P steps; per-process traffic
+    /// Σ 2·P/2^{j+1} = 2(P−1) units; reductions (P−1) units (eq. 25's
+    /// optimum, which RH attains for pow2).
+    #[test]
+    fn pow2_counts() {
+        for p in [2usize, 4, 8, 16, 64] {
+            let s = build(p).unwrap();
+            verify(&s).unwrap_or_else(|e| panic!("P={p}: {e}"));
+            let st = stats(&s);
+            let l = p.trailing_zeros() as usize;
+            assert_eq!(st.steps, 2 * l, "P={p}");
+            assert_eq!(st.critical_units_sent, 2 * (p as u64 - 1), "P={p}");
+            assert_eq!(st.critical_units_reduced, p as u64 - 1, "P={p}");
+        }
+    }
+
+    /// Non-power-of-two: verifies and has the +2 steps / +2·P' units of the
+    /// shrink workaround.
+    #[test]
+    fn non_pow2_verifies_with_overhead() {
+        for p in [3usize, 5, 7, 12, 20, 127] {
+            let s = build(p).unwrap();
+            verify(&s).unwrap_or_else(|e| panic!("P={p}: {e}"));
+            let st = stats(&s);
+            let p2 = pow2_floor(p) as u64;
+            let l = p2.trailing_zeros() as usize;
+            assert_eq!(st.steps, 2 * l + 2, "P={p}");
+            // prep (P' units) + core 2(P'−1) + final (P' units).
+            assert_eq!(st.critical_units_sent, 2 * (p2 - 1) + 2 * p2, "P={p}");
+        }
+    }
+
+    #[test]
+    fn p1_and_p2() {
+        for p in [1usize, 2] {
+            let s = build(p).unwrap();
+            verify(&s).unwrap_or_else(|e| panic!("P={p}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Ring Allreduce (paper §6, eq. 16, Fig 4).
+//!
+//! The special case of the permutation framework where `T_P` is cyclic and
+//! the same communication operator `t` (the generator) is applied on every
+//! one of the `2(P−1)` steps: the accumulating vector travels around the
+//! virtual ring during the reduction phase and the finished result travels
+//! around it again during the distribution phase. Bandwidth-optimal
+//! (`2(P−1)` chunk-sends per process) but with a linear step count — the
+//! regime where it wins is very large `m` (§10 Fig 8).
+
+use crate::perm::{Group, Permutation};
+use crate::sched::{BufId, Op, ProcSchedule, ScheduleBuilder, Segment};
+
+/// Build the Ring schedule. The group must chain under its element 1:
+/// `t_1 · t_{k} = t_{k+1}` for all `k` — true for any cyclic group indexed
+/// by exponent (the paper's `t_k = c^k`), not for the XOR group.
+pub fn build(group: &Group, h: &Permutation) -> Result<ProcSchedule, String> {
+    let p = group.order();
+    for k in 0..p {
+        if group.compose(1 % p, k) != (k + 1) % p {
+            return Err(format!(
+                "group {} is not a ring under t_1 (t_1·t_{k} ≠ t_{})",
+                group.name(),
+                (k + 1) % p
+            ));
+        }
+    }
+    let h_inv = h.inverse();
+    let mut b = ScheduleBuilder::new(p, p as u32, format!("ring(P={p})"));
+
+    // Initial records Q_k (as in the generalized builder).
+    let mut record: Vec<BufId> = Vec::with_capacity(p);
+    for k in 0..p {
+        let segs: Vec<Segment> = (0..p)
+            .map(|proc| {
+                let i = h_inv.apply(group.apply(group.inverse(k), proc));
+                Segment::new(i as u32, 1)
+            })
+            .collect();
+        record.push(b.init_buf_per_proc(&segs));
+    }
+    if p == 1 {
+        return Ok(b.finish(vec![vec![record[0]]]));
+    }
+
+    let t = 1usize; // the generator
+    let t_inv = group.inverse(t);
+
+    // Reduction: the accumulator starts as Q_0 and visits every place.
+    let mut acc = record[0];
+    for k in 1..p {
+        b.begin_step();
+        let fresh = b.fresh();
+        for proc in 0..p {
+            b.op(proc, Op::send(group.apply(t, proc), vec![acc]));
+            b.op(proc, Op::recv(group.apply(t_inv, proc), vec![fresh]));
+            b.op(proc, Op::Reduce { dst: fresh, src: record[k] });
+            b.op(proc, Op::Free { buf: acc });
+            b.op(proc, Op::Free { buf: record[k] });
+        }
+        b.end_step();
+        acc = fresh;
+    }
+
+    // Distribution: the finished vector (at place P−1) circulates; every
+    // step produces a copy at the next place (eq. 14).
+    let mut at_place: Vec<BufId> = vec![0; p];
+    at_place[p - 1] = acc;
+    let mut cur = acc;
+    for k in 0..p - 1 {
+        b.begin_step();
+        let fresh = b.fresh();
+        for proc in 0..p {
+            b.op(proc, Op::send(group.apply(t, proc), vec![cur]));
+            b.op(proc, Op::recv(group.apply(t_inv, proc), vec![fresh]));
+        }
+        b.end_step();
+        at_place[k] = fresh; // place (P−1) + 1 + k ≡ k (mod P)
+        cur = fresh;
+    }
+
+    // Result: the record at place t_k holds element h⁻¹(t_k⁻¹(proc)).
+    let mut result: Vec<Vec<BufId>> = vec![vec![0; p]; p];
+    for k in 0..p {
+        for (proc, res) in result.iter_mut().enumerate() {
+            let i = h_inv.apply(group.apply(group.inverse(k), proc));
+            res[i] = at_place[k];
+        }
+    }
+    Ok(b.finish(result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perm::Group;
+    use crate::sched::stats::stats;
+    use crate::sched::verify::verify;
+
+    /// Eq. 15 counts: 2(P−1) steps, 2(P−1) chunk-sends and (P−1)
+    /// chunk-reductions per process.
+    #[test]
+    fn ring_counts_match_eq15() {
+        for p in [2usize, 3, 7, 8, 16, 31] {
+            let g = Group::cyclic(p);
+            let h = Permutation::identity(p);
+            let s = build(&g, &h).unwrap();
+            verify(&s).unwrap_or_else(|e| panic!("P={p}: {e}"));
+            let st = stats(&s);
+            assert_eq!(st.steps, 2 * (p - 1), "P={p}");
+            assert_eq!(st.critical_units_sent, 2 * (p as u64 - 1));
+            assert_eq!(st.critical_units_reduced, p as u64 - 1);
+            // Every step sends exactly one chunk (the cache-friendly
+            // property that wins for huge m).
+            assert!(st.step_max_units_sent.iter().all(|&u| u == 1));
+        }
+    }
+
+    /// Every step uses the same communication operator t (Fig 4): the peer
+    /// of process p is always p+1 mod P.
+    #[test]
+    fn same_operator_every_step() {
+        let p = 7;
+        let g = Group::cyclic(p);
+        let s = build(&g, &Permutation::identity(p)).unwrap();
+        for step in &s.steps {
+            for (proc, ops) in step.ops.iter().enumerate() {
+                let to = ops
+                    .iter()
+                    .find_map(|o| match o {
+                        Op::Send { to, .. } => Some(*to),
+                        _ => None,
+                    })
+                    .unwrap();
+                assert_eq!(to, (proc + 1) % p);
+            }
+        }
+    }
+
+    #[test]
+    fn xor_group_rejected() {
+        let g = Group::xor(8);
+        let err = build(&g, &Permutation::identity(8)).unwrap_err();
+        assert!(err.contains("not a ring"), "{err}");
+    }
+
+    #[test]
+    fn ring_p1_trivial() {
+        let g = Group::cyclic(1);
+        let s = build(&g, &Permutation::identity(1)).unwrap();
+        assert_eq!(s.num_steps(), 0);
+        verify(&s).unwrap();
+    }
+
+    #[test]
+    fn nonidentity_h_verifies() {
+        let h = Permutation::from_images(vec![4, 5, 2, 6, 1, 0, 3]).unwrap();
+        let g = Group::cyclic(7);
+        let s = build(&g, &h).unwrap();
+        verify(&s).unwrap();
+    }
+}

@@ -1,0 +1,212 @@
+//! Segmented generalized Allreduce — the paper's §11 future-work item:
+//!
+//! > "it is possible to implement a version of the algorithm which
+//! > operates with smaller pieces of data but with a bigger number of
+//! > steps between 2⌈log(P)⌉ and 2(P−1)."
+//!
+//! The vector is split into `slabs` equal slabs; the generalized schedule
+//! runs once per slab back-to-back. Steps grow to `slabs · (2⌈log P⌉ − r)`
+//! while each step moves `1/slabs` of the data — trading extra latency for
+//! a smaller working set per step (the cache-friendliness that §10/Fig 8
+//! credits for Ring's large-`m` win). `slabs = 1` is the plain generalized
+//! algorithm; `slabs → P/2^…` approaches Ring's step profile.
+//!
+//! Implemented as a pure schedule-level transformation: the base schedule
+//! is built once and replicated with remapped buffer ids and offset
+//! segments, so it inherits the base's verification properties per slab
+//! (and the composite is re-verified by the standard verifier in tests).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::perm::{Group, Permutation};
+use crate::sched::{BufId, Op, ProcSchedule, Segment, Step};
+
+use super::generalized;
+
+/// Build the segmented schedule: `slabs ≥ 1` sequential passes of
+/// `generalized(r)` over `1/slabs`-sized slabs.
+pub fn build(
+    group: &Group,
+    h: &Permutation,
+    r: u32,
+    slabs: u32,
+) -> Result<ProcSchedule, String> {
+    if slabs == 0 {
+        return Err("slabs must be ≥ 1".into());
+    }
+    let base = generalized::build(group, h, r)?;
+    if slabs == 1 {
+        return Ok(base);
+    }
+    let p = base.p;
+    let span = base.max_buf_id();
+    let units = base.n_units;
+
+    let mut init: Vec<Vec<(BufId, Segment)>> = vec![Vec::new(); p];
+    let mut steps: Vec<Step> = Vec::with_capacity(base.steps.len() * slabs as usize);
+    let mut result: Vec<Vec<BufId>> = vec![Vec::new(); p];
+
+    for k in 0..slabs {
+        let id_off = k * span;
+        let seg_off = k * units;
+        // Remap cache so Arc-shared payload lists stay shared per slab.
+        let mut arc_cache: HashMap<*const Vec<BufId>, Arc<Vec<BufId>>> = HashMap::new();
+        let mut pair_cache: HashMap<*const Vec<(BufId, BufId)>, Arc<Vec<(BufId, BufId)>>> =
+            HashMap::new();
+        let mut remap_list = |bufs: &Arc<Vec<BufId>>| -> Arc<Vec<BufId>> {
+            arc_cache
+                .entry(Arc::as_ptr(bufs))
+                .or_insert_with(|| Arc::new(bufs.iter().map(|&b| b + id_off).collect()))
+                .clone()
+        };
+
+        for (proc, per) in base.init.iter().enumerate() {
+            for &(id, seg) in per {
+                init[proc].push((id + id_off, Segment::new(seg.off + seg_off, seg.len)));
+            }
+        }
+        for st in &base.steps {
+            let mut ops = Vec::with_capacity(p);
+            for per in &st.ops {
+                let remapped: Vec<Op> = per
+                    .iter()
+                    .map(|op| match op {
+                        Op::Send { to, bufs } => Op::Send {
+                            to: *to,
+                            bufs: remap_list(bufs),
+                        },
+                        Op::Recv { from, bufs } => Op::Recv {
+                            from: *from,
+                            bufs: remap_list(bufs),
+                        },
+                        Op::Reduce { dst, src } => Op::Reduce {
+                            dst: dst + id_off,
+                            src: src + id_off,
+                        },
+                        Op::ReduceMany { pairs } => Op::ReduceMany {
+                            pairs: pair_cache
+                                .entry(Arc::as_ptr(pairs))
+                                .or_insert_with(|| {
+                                    Arc::new(
+                                        pairs
+                                            .iter()
+                                            .map(|&(d, s)| (d + id_off, s + id_off))
+                                            .collect(),
+                                    )
+                                })
+                                .clone(),
+                        },
+                        Op::Copy { dst, src } => Op::Copy {
+                            dst: dst + id_off,
+                            src: src + id_off,
+                        },
+                        Op::Free { buf } => Op::Free { buf: buf + id_off },
+                        Op::FreeMany { bufs } => Op::FreeMany {
+                            bufs: remap_list(bufs),
+                        },
+                    })
+                    .collect();
+                ops.push(remapped);
+            }
+            steps.push(Step { ops });
+        }
+        for (proc, res) in base.result.iter().enumerate() {
+            result[proc].extend(res.iter().map(|&b| b + id_off));
+        }
+    }
+
+    Ok(ProcSchedule {
+        p,
+        n_units: units * slabs,
+        init,
+        steps,
+        result,
+        name: format!("segmented(P={p},r={r},slabs={slabs})"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{reference_allreduce, ClusterExecutor, ReduceOp};
+    use crate::sched::stats::stats;
+    use crate::sched::verify::verify;
+    use crate::util::{ceil_log2, Rng};
+
+    #[test]
+    fn segmented_verifies_and_multiplies_steps() {
+        for p in [5usize, 7, 8] {
+            let g = Group::cyclic(p);
+            let h = Permutation::identity(p);
+            let l = ceil_log2(p) as usize;
+            for slabs in [1u32, 2, 3, 4] {
+                let s = build(&g, &h, 0, slabs).unwrap();
+                verify(&s).unwrap_or_else(|e| panic!("P={p} slabs={slabs}: {e}"));
+                assert_eq!(s.num_steps(), 2 * l * slabs as usize, "P={p} slabs={slabs}");
+                // Total traffic unchanged: slabs × (2(P−1) slab-units) where
+                // a slab-unit is 1/slabs of a chunk.
+                let st = stats(&s);
+                assert_eq!(
+                    st.critical_units_sent,
+                    2 * (p as u64 - 1) * slabs as u64,
+                    "units are 1/slabs-sized, so the byte total is invariant"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_computes_correctly() {
+        let exec = ClusterExecutor::new();
+        let mut rng = Rng::new(33);
+        for (p, r, slabs) in [(7usize, 0u32, 3u32), (8, 1, 2), (5, 2, 4)] {
+            let g = Group::cyclic(p);
+            let h = Permutation::identity(p);
+            let s = build(&g, &h, r, slabs).unwrap();
+            let n = 4 * p * slabs as usize + 3;
+            let xs: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..n).map(|_| rng.f32()).collect())
+                .collect();
+            let want = reference_allreduce(&xs, ReduceOp::Sum);
+            let got = exec.execute(&s, &xs, ReduceOp::Sum).unwrap();
+            for out in &got {
+                for (gv, w) in out.iter().zip(&want) {
+                    assert!((gv - w).abs() < 1e-4, "P={p} r={r} slabs={slabs}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slab1_is_plain_generalized() {
+        let g = Group::cyclic(7);
+        let h = Permutation::identity(7);
+        let a = build(&g, &h, 1, 1).unwrap();
+        let b = generalized::build(&g, &h, 1).unwrap();
+        assert_eq!(a.num_steps(), b.num_steps());
+        assert_eq!(a.n_units, b.n_units);
+    }
+
+    /// DES cost: β/γ totals invariant, latency grows by the slab factor —
+    /// the §11 trade-off stated analytically.
+    #[test]
+    fn des_latency_grows_bandwidth_constant() {
+        use crate::cost::NetParams;
+        use crate::des::simulate;
+        let g = Group::cyclic(8);
+        let h = Permutation::identity(8);
+        let m = 8 * 4096;
+        let params = NetParams::table2();
+        let base = simulate(&build(&g, &h, 0, 1).unwrap(), m, &params);
+        let seg4 = simulate(&build(&g, &h, 0, 4).unwrap(), m, &params);
+        assert!((base.total_bytes - seg4.total_bytes).abs() < 1e-9);
+        let extra_alpha = 3.0 * 6.0 * params.alpha; // (slabs−1)·steps·α
+        assert!(
+            (seg4.makespan - base.makespan - extra_alpha).abs() / base.makespan < 1e-6,
+            "base {} seg4 {} expected +{extra_alpha}",
+            base.makespan,
+            seg4.makespan
+        );
+    }
+}

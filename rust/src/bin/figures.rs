@@ -1,0 +1,33 @@
+//! `figures` — regenerate every evaluation figure of the paper as CSV +
+//! a markdown summary (the data behind EXPERIMENTS.md).
+//!
+//! Usage: `figures [--out figures_out] [--fig 7]`
+
+use permallreduce::cli::Args;
+use permallreduce::cost::NetParams;
+use permallreduce::figures;
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let out = args.get("out").unwrap_or("figures_out").to_string();
+    let params = NetParams::table2();
+    std::fs::create_dir_all(&out).expect("create output dir");
+
+    let ids: Vec<String> = match args.get("fig") {
+        Some(f) => vec![if f.starts_with("fig") { f.to_string() } else { format!("fig{f}") }],
+        None => figures::all_ids().iter().map(|s| s.to_string()).collect(),
+    };
+
+    let mut summary = String::from("# Regenerated paper figures\n\n");
+    for id in &ids {
+        let fig = figures::generate(id, &params).unwrap_or_else(|| panic!("unknown figure {id}"));
+        let path = format!("{out}/{id}.csv");
+        std::fs::write(&path, fig.to_csv()).expect("write csv");
+        println!("{path}: {} rows ({})", fig.rows.len(), fig.title);
+        summary.push_str(&fig.to_markdown());
+        summary.push('\n');
+    }
+    let md = format!("{out}/figures.md");
+    std::fs::write(&md, summary).expect("write markdown");
+    println!("{md}: summary");
+}

@@ -1,0 +1,121 @@
+//! Minimal command-line parsing (clap is unavailable offline).
+//!
+//! Grammar: `gar <subcommand> [--flag value]... [--switch]...`.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: a subcommand plus `--key value` / `--switch` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                }
+                _ => out.switches.push(name.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_size(v).ok_or_else(|| format!("--{name}: bad number {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Parse sizes with optional `k`/`m`/`g` suffix (powers of 1024).
+pub fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (num, mul) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1usize << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1usize << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1),
+    };
+    let base: f64 = num.parse().ok()?;
+    if base < 0.0 {
+        return None;
+    }
+    Some((base * mul as f64).round() as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["run", "--p", "8", "--m", "4k", "--pjrt"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("p"), Some("8"));
+        assert_eq!(a.get_usize("m", 0).unwrap(), 4096);
+        assert!(a.has("pjrt"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(parse_size("425"), Some(425));
+        assert_eq!(parse_size("9k"), Some(9216));
+        assert_eq!(parse_size("2M"), Some(2 << 20));
+        assert_eq!(parse_size("1.5k"), Some(1536));
+        assert_eq!(parse_size("x"), None);
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(["run".into(), "--p".into(), "8".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,564 @@
+//! The simulated cluster: a real message-passing executor.
+//!
+//! Runs a [`ProcSchedule`] on actual data with one OS thread per process
+//! and full-duplex channels — the in-process stand-in for the paper's MPI
+//! ranks (§10's 8-node cluster; see DESIGN.md's substitution table). The
+//! executor is what makes schedule verification *numeric*: the symbolic
+//! verifier proves the postcondition over source sets, this module proves
+//! it over floating-point payloads, and the two are cross-checked in tests.
+//!
+//! Reductions run through a pluggable [`Reducer`] so the hot combine can be
+//! served either by the in-crate native loops or by the AOT-compiled Pallas
+//! kernel via PJRT ([`crate::runtime`]).
+
+pub mod persistent;
+pub mod reducer;
+
+pub use persistent::PersistentCluster;
+pub use reducer::{NativeReducer, Reducer};
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::sched::{BufId, MicroOp, ProcSchedule};
+
+/// MPI-style combine operation. All ops are commutative and associative —
+/// the cyclic-pattern algorithms reorder operands (paper §3 notes cyclic
+/// algorithms require commutativity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceOp {
+    Sum,
+    Prod,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    pub fn all() -> [ReduceOp; 4] {
+        [ReduceOp::Sum, ReduceOp::Prod, ReduceOp::Max, ReduceOp::Min]
+    }
+}
+
+/// Element types the native executor supports.
+pub trait Element: Copy + Send + Sync + std::fmt::Debug + 'static {
+    fn combine(op: ReduceOp, dst: &mut [Self], src: &[Self]);
+}
+
+macro_rules! impl_element {
+    ($t:ty) => {
+        impl Element for $t {
+            fn combine(op: ReduceOp, dst: &mut [Self], src: &[Self]) {
+                debug_assert_eq!(dst.len(), src.len());
+                match op {
+                    ReduceOp::Sum => dst.iter_mut().zip(src).for_each(|(d, &s)| *d += s),
+                    ReduceOp::Prod => dst.iter_mut().zip(src).for_each(|(d, &s)| *d *= s),
+                    ReduceOp::Max => dst
+                        .iter_mut()
+                        .zip(src)
+                        .for_each(|(d, &s)| *d = if s > *d { s } else { *d }),
+                    ReduceOp::Min => dst
+                        .iter_mut()
+                        .zip(src)
+                        .for_each(|(d, &s)| *d = if s < *d { s } else { *d }),
+                }
+            }
+        }
+    };
+}
+impl_element!(f32);
+impl_element!(f64);
+impl_element!(i32);
+impl_element!(i64);
+
+/// Fault injection for resilience tests: the executor must *detect* (not
+/// silently survive) a lost or corrupted message.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Silently drop the message sent at `step` from `from` to `to`.
+    DropMessage { step: usize, from: usize, to: usize },
+    /// Deliver the message with a wrong step tag (protocol corruption).
+    MisTagMessage { step: usize, from: usize, to: usize },
+}
+
+/// Executor configuration.
+#[derive(Clone, Debug)]
+pub struct ExecOptions {
+    /// How long a worker waits on a receive before declaring the message
+    /// lost. Generous default: the cluster is in-process.
+    pub recv_timeout: Duration,
+    /// Optional injected fault.
+    pub fault: Option<Fault>,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            recv_timeout: Duration::from_secs(10),
+            fault: None,
+        }
+    }
+}
+
+/// Errors surfaced by the executor.
+#[derive(Debug)]
+pub enum ClusterError {
+    /// A worker timed out waiting for a message (lost message detected).
+    RecvTimeout { proc: usize, step: usize, from: usize },
+    /// A message arrived with an unexpected (step, from) tag.
+    Protocol { proc: usize, detail: String },
+    /// A worker thread panicked (e.g. a PJRT reduction failure).
+    WorkerPanic { proc: usize },
+    /// Input shape problems.
+    BadInput(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::RecvTimeout { proc, step, from } => write!(
+                f,
+                "process {proc} timed out at step {step} waiting for a message from {from} \
+                 (message lost)"
+            ),
+            ClusterError::Protocol { proc, detail } => {
+                write!(f, "protocol violation at process {proc}: {detail}")
+            }
+            ClusterError::WorkerPanic { proc } => write!(f, "worker thread {proc} panicked"),
+            ClusterError::BadInput(s) => write!(f, "bad input: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+struct Msg<T> {
+    step: usize,
+    from: usize,
+    payload: Vec<Vec<T>>,
+}
+
+/// The cluster executor.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterExecutor {
+    pub opts: ExecOptions,
+}
+
+impl ClusterExecutor {
+    pub fn new() -> ClusterExecutor {
+        ClusterExecutor {
+            opts: ExecOptions::default(),
+        }
+    }
+
+    pub fn with_options(opts: ExecOptions) -> ClusterExecutor {
+        ClusterExecutor { opts }
+    }
+
+    /// Run the schedule on `inputs` (one vector per rank, equal lengths)
+    /// with the native reducer. Returns the per-rank output vectors.
+    pub fn execute<T: Element>(
+        &self,
+        schedule: &ProcSchedule,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+    ) -> Result<Vec<Vec<T>>, ClusterError> {
+        let combine = move |dst: &mut [T], src: &[T]| T::combine(op, dst, src);
+        self.execute_with(schedule, inputs, &combine)
+    }
+
+    /// Run with a custom f32 reducer (e.g. the PJRT-backed Pallas kernel).
+    pub fn execute_f32_with_reducer(
+        &self,
+        schedule: &ProcSchedule,
+        inputs: &[Vec<f32>],
+        op: ReduceOp,
+        reducer: &(dyn Reducer + Sync),
+    ) -> Result<Vec<Vec<f32>>, ClusterError> {
+        let combine = move |dst: &mut [f32], src: &[f32]| {
+            reducer
+                .combine(op, dst, src)
+                .expect("reducer failed on the hot path")
+        };
+        self.execute_with(schedule, inputs, &combine)
+    }
+
+    fn execute_with<T: Element>(
+        &self,
+        schedule: &ProcSchedule,
+        inputs: &[Vec<T>],
+        combine: &(dyn Fn(&mut [T], &[T]) + Sync),
+    ) -> Result<Vec<Vec<T>>, ClusterError> {
+        let p = schedule.p;
+        if inputs.len() != p {
+            return Err(ClusterError::BadInput(format!(
+                "{} inputs for {p} processes",
+                inputs.len()
+            )));
+        }
+        let n = inputs[0].len();
+        if inputs.iter().any(|v| v.len() != n) {
+            return Err(ClusterError::BadInput("ragged input vectors".into()));
+        }
+        if n == 0 {
+            return Ok(vec![Vec::new(); p]);
+        }
+
+        // One inbox per process; senders cloned everywhere.
+        let mut txs = Vec::with_capacity(p);
+        let mut rxs = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = mpsc::channel::<Msg<T>>();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+
+        let opts = &self.opts;
+        let mut outputs: Vec<Result<Vec<T>, ClusterError>> = Vec::with_capacity(p);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(p);
+            for proc in 0..p {
+                let rx = rxs[proc].take().unwrap();
+                let txs = txs.clone();
+                let input = &inputs[proc];
+                handles.push(scope.spawn(move || {
+                    worker(schedule, proc, input, rx, &txs, combine, opts)
+                }));
+            }
+            drop(txs);
+            for (proc, h) in handles.into_iter().enumerate() {
+                outputs.push(match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(ClusterError::WorkerPanic { proc }),
+                });
+            }
+        });
+
+        outputs.into_iter().collect()
+    }
+}
+
+/// Per-process execution of the schedule.
+fn worker<T: Element>(
+    s: &ProcSchedule,
+    proc: usize,
+    input: &[T],
+    rx: mpsc::Receiver<Msg<T>>,
+    txs: &[mpsc::Sender<Msg<T>>],
+    combine: &(dyn Fn(&mut [T], &[T]) + Sync),
+    opts: &ExecOptions,
+) -> Result<Vec<T>, ClusterError> {
+    let n = input.len();
+    let nb = s.max_buf_id() as usize;
+    let mut bufs: Vec<Option<Vec<T>>> = vec![None; nb];
+
+    for &(id, seg) in &s.init[proc] {
+        let (lo, hi) = s.unit_to_elems(seg, n);
+        bufs[id as usize] = Some(input[lo..hi].to_vec());
+    }
+
+    // Out-of-order message stash.
+    let mut pending: HashMap<(usize, usize), Vec<Vec<T>>> = HashMap::new();
+
+    for (step, st) in s.steps.iter().enumerate() {
+        // Move-semantics sends: a buffer that is freed later in this step
+        // and not otherwise read can be *taken* into the message instead of
+        // cloned — this makes Ring's per-step data movement copy-free.
+        let ops = &st.ops[proc];
+        let mut takeable: Vec<BufId> = Vec::new();
+        for m in ops.iter().flat_map(|o| o.micro()) {
+            if let MicroOp::Free { buf } = m {
+                takeable.push(buf);
+            }
+        }
+        takeable.retain(|b| {
+            ops.iter().flat_map(|o| o.micro()).all(|m| match m {
+                MicroOp::Reduce { dst, src } => dst != *b && src != *b,
+                MicroOp::Copy { src, .. } => src != *b,
+                _ => true,
+            })
+        });
+
+        for m in ops.iter().flat_map(|o| o.micro()) {
+            match m {
+                MicroOp::Send { to, bufs: ids } => {
+                    let fault_hit = matches!(
+                        opts.fault,
+                        Some(Fault::DropMessage { step: fs, from, to: ft })
+                            if fs == step && from == proc && ft == to
+                    );
+                    if fault_hit {
+                        continue; // message lost in the "network"
+                    }
+                    let mistag = matches!(
+                        opts.fault,
+                        Some(Fault::MisTagMessage { step: fs, from, to: ft })
+                            if fs == step && from == proc && ft == to
+                    );
+                    let payload: Vec<Vec<T>> = ids
+                        .iter()
+                        .map(|&b| {
+                            if takeable.contains(&b) {
+                                bufs[b as usize].take().expect("send of dead buffer")
+                            } else {
+                                bufs[b as usize]
+                                    .as_ref()
+                                    .expect("send of dead buffer")
+                                    .clone()
+                            }
+                        })
+                        .collect();
+                    let msg = Msg {
+                        step: if mistag { step + 1_000_000 } else { step },
+                        from: proc,
+                        payload,
+                    };
+                    // A send can only fail if the receiver already exited —
+                    // surfaced on the receiver side as a timeout/panic.
+                    let _ = txs[to].send(msg);
+                }
+                MicroOp::Recv { from, bufs: ids } => {
+                    let payload = match pending.remove(&(step, from)) {
+                        Some(pl) => pl,
+                        None => loop {
+                            let msg = rx.recv_timeout(opts.recv_timeout).map_err(|_| {
+                                ClusterError::RecvTimeout {
+                                    proc,
+                                    step,
+                                    from,
+                                }
+                            })?;
+                            if msg.step == step && msg.from == from {
+                                break msg.payload;
+                            }
+                            if msg.step < step || msg.step > step + s.steps.len() {
+                                return Err(ClusterError::Protocol {
+                                    proc,
+                                    detail: format!(
+                                        "unexpected message tag (step {}, from {}) while \
+                                         waiting for (step {step}, from {from})",
+                                        msg.step, msg.from
+                                    ),
+                                });
+                            }
+                            pending.insert((msg.step, msg.from), msg.payload);
+                        },
+                    };
+                    if payload.len() != ids.len() {
+                        return Err(ClusterError::Protocol {
+                            proc,
+                            detail: format!(
+                                "step {step}: payload arity {} != expected {}",
+                                payload.len(),
+                                ids.len()
+                            ),
+                        });
+                    }
+                    for (&b, chunk) in ids.iter().zip(payload) {
+                        bufs[b as usize] = Some(chunk);
+                    }
+                }
+                MicroOp::Reduce { dst, src } => {
+                    let mut d = bufs[dst as usize].take().expect("reduce into dead buffer");
+                    let sv = bufs[src as usize].as_ref().expect("reduce from dead buffer");
+                    combine(&mut d, sv);
+                    bufs[dst as usize] = Some(d);
+                }
+                MicroOp::Copy { dst, src } => {
+                    let c = bufs[src as usize].as_ref().expect("copy of dead buffer").clone();
+                    bufs[dst as usize] = Some(c);
+                }
+                MicroOp::Free { buf } => {
+                    bufs[buf as usize] = None;
+                }
+            }
+        }
+    }
+
+    // Assemble the output in result order (verified to tile [0, n_units)).
+    let mut out = Vec::with_capacity(n);
+    for &b in &s.result[proc] {
+        out.extend_from_slice(bufs[b as usize].as_ref().expect("result buffer dead"));
+    }
+    debug_assert_eq!(out.len(), n);
+    Ok(out)
+}
+
+/// Reference Allreduce computed directly (for test oracles): element-wise
+/// fold of all inputs in rank order, in `f64` for `f32` inputs to bound
+/// association error.
+pub fn reference_allreduce(inputs: &[Vec<f32>], op: ReduceOp) -> Vec<f32> {
+    let n = inputs[0].len();
+    let mut acc: Vec<f64> = inputs[0].iter().map(|&x| x as f64).collect();
+    for v in &inputs[1..] {
+        for (a, &x) in acc.iter_mut().zip(v) {
+            let x = x as f64;
+            match op {
+                ReduceOp::Sum => *a += x,
+                ReduceOp::Prod => *a *= x,
+                ReduceOp::Max => *a = a.max(x),
+                ReduceOp::Min => *a = a.min(x),
+            }
+        }
+    }
+    debug_assert_eq!(acc.len(), n);
+    acc.into_iter().map(|x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
+    use crate::util::Rng;
+
+    fn inputs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, tag: &str) {
+        assert_eq!(got.len(), want.len(), "{tag}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * (1.0 + w.abs()),
+                "{tag}: elem {i}: got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_algorithms_compute_correct_sums() {
+        let exec = ClusterExecutor::new();
+        for p in [2usize, 3, 5, 7, 8, 13] {
+            let xs = inputs(p, 4 * p + 3, 42 + p as u64);
+            let want = reference_allreduce(&xs, ReduceOp::Sum);
+            for kind in AlgorithmKind::all() {
+                let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+                let got = exec.execute(&s, &xs, ReduceOp::Sum).unwrap();
+                for (rank, out) in got.iter().enumerate() {
+                    assert_close(out, &want, 1e-5, &format!("{kind:?} P={p} rank={rank}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_ops_work() {
+        let exec = ClusterExecutor::new();
+        let p = 7;
+        let xs = inputs(p, 29, 7);
+        for op in ReduceOp::all() {
+            let want = reference_allreduce(&xs, op);
+            let s = Algorithm::new(AlgorithmKind::BwOptimal, p)
+                .build(&BuildCtx::default())
+                .unwrap();
+            let got = exec.execute(&s, &xs, op).unwrap();
+            for out in &got {
+                assert_close(out, &want, 1e-5, &format!("{op:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn f64_and_integer_elements() {
+        let exec = ClusterExecutor::new();
+        let p = 5;
+        let s = Algorithm::new(AlgorithmKind::LatOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        // f64
+        let xs: Vec<Vec<f64>> = (0..p).map(|r| vec![r as f64 + 0.5; 11]).collect();
+        let got = exec.execute(&s, &xs, ReduceOp::Sum).unwrap();
+        let want: f64 = (0..p).map(|r| r as f64 + 0.5).sum();
+        assert!(got.iter().all(|v| v.iter().all(|&x| (x - want).abs() < 1e-12)));
+        // i64
+        let xs: Vec<Vec<i64>> = (0..p).map(|r| vec![(r as i64 + 1) * 3; 11]).collect();
+        let got = exec.execute(&s, &xs, ReduceOp::Max).unwrap();
+        assert!(got.iter().all(|v| v.iter().all(|&x| x == p as i64 * 3)));
+    }
+
+    #[test]
+    fn short_vectors_fewer_elements_than_chunks() {
+        // n < P: some chunks are empty — the proportional unit mapping must
+        // still produce the correct result.
+        let exec = ClusterExecutor::new();
+        let p = 8;
+        let xs = inputs(p, 3, 99);
+        let want = reference_allreduce(&xs, ReduceOp::Sum);
+        for kind in [AlgorithmKind::BwOptimal, AlgorithmKind::Ring, AlgorithmKind::LatOptimal] {
+            let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+            let got = exec.execute(&s, &xs, ReduceOp::Sum).unwrap();
+            for out in &got {
+                assert_close(out, &want, 1e-5, &format!("{kind:?} short"));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_vectors_trivial() {
+        let exec = ClusterExecutor::new();
+        let p = 4;
+        let s = Algorithm::new(AlgorithmKind::BwOptimal, p).build(&BuildCtx::default()).unwrap();
+        let xs: Vec<Vec<f32>> = vec![Vec::new(); p];
+        let got = exec.execute(&s, &xs, ReduceOp::Sum).unwrap();
+        assert!(got.iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn dropped_message_is_detected() {
+        let mut opts = ExecOptions::default();
+        opts.recv_timeout = Duration::from_millis(200);
+        // Ring sends p → p+1 on every step, so the 2→3 edge exists at step 1.
+        opts.fault = Some(Fault::DropMessage { step: 1, from: 2, to: 3 });
+        let exec = ClusterExecutor::with_options(opts);
+        let p = 7;
+        let s = Algorithm::new(AlgorithmKind::Ring, p).build(&BuildCtx::default()).unwrap();
+        let xs = inputs(p, 14, 5);
+        let err = exec.execute(&s, &xs, ReduceOp::Sum).unwrap_err();
+        assert!(
+            matches!(err, ClusterError::RecvTimeout { .. } | ClusterError::WorkerPanic { .. }),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn mistagged_message_is_detected() {
+        let mut opts = ExecOptions::default();
+        opts.recv_timeout = Duration::from_millis(200);
+        opts.fault = Some(Fault::MisTagMessage { step: 0, from: 1, to: 2 });
+        let exec = ClusterExecutor::with_options(opts);
+        let p = 7;
+        let s = Algorithm::new(AlgorithmKind::Ring, p).build(&BuildCtx::default()).unwrap();
+        let xs = inputs(p, 14, 6);
+        let err = exec.execute(&s, &xs, ReduceOp::Sum).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                ClusterError::Protocol { .. }
+                    | ClusterError::RecvTimeout { .. }
+                    | ClusterError::WorkerPanic { .. }
+            ),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn bad_input_shapes_rejected() {
+        let exec = ClusterExecutor::new();
+        let s = Algorithm::new(AlgorithmKind::Ring, 4).build(&BuildCtx::default()).unwrap();
+        let err = exec
+            .execute(&s, &[vec![1.0f32], vec![1.0]], ReduceOp::Sum)
+            .unwrap_err();
+        assert!(matches!(err, ClusterError::BadInput(_)));
+        let err = exec
+            .execute(
+                &s,
+                &[vec![1.0f32], vec![1.0], vec![1.0], vec![1.0, 2.0]],
+                ReduceOp::Sum,
+            )
+            .unwrap_err();
+        assert!(matches!(err, ClusterError::BadInput(_)));
+    }
+}

@@ -1,0 +1,71 @@
+//! Pluggable reduction backends for the f32 hot path.
+//!
+//! The combine `⊕` is the only compute in Allreduce (the paper's `γ` term).
+//! Two backends:
+//!
+//! * [`NativeReducer`] — in-crate vectorizable loops (the default and the
+//!   baseline of the §Perf ablation);
+//! * `runtime::PjrtReducer` — the AOT-compiled Pallas kernel executed
+//!   through the PJRT CPU client (the three-layer path).
+
+use crate::cluster::ReduceOp;
+
+/// A combine backend: `dst ⊕= src`.
+pub trait Reducer: Send + Sync {
+    fn combine(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> anyhow::Result<()>;
+
+    /// Human-readable backend name (for metrics / bench labels).
+    fn name(&self) -> &str;
+}
+
+/// Plain rust loops; LLVM auto-vectorizes these.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeReducer;
+
+impl Reducer for NativeReducer {
+    fn combine(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            dst.len() == src.len(),
+            "length mismatch: {} vs {}",
+            dst.len(),
+            src.len()
+        );
+        match op {
+            ReduceOp::Sum => dst.iter_mut().zip(src).for_each(|(d, &s)| *d += s),
+            ReduceOp::Prod => dst.iter_mut().zip(src).for_each(|(d, &s)| *d *= s),
+            ReduceOp::Max => dst.iter_mut().zip(src).for_each(|(d, &s)| *d = d.max(s)),
+            ReduceOp::Min => dst.iter_mut().zip(src).for_each(|(d, &s)| *d = d.min(s)),
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_ops() {
+        let r = NativeReducer;
+        let mut d = vec![1.0f32, -2.0, 3.0];
+        r.combine(ReduceOp::Sum, &mut d, &[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(d, vec![2.0, -1.0, 4.0]);
+        r.combine(ReduceOp::Prod, &mut d, &[2.0, 2.0, 0.5]).unwrap();
+        assert_eq!(d, vec![4.0, -2.0, 2.0]);
+        r.combine(ReduceOp::Max, &mut d, &[0.0, 5.0, 2.0]).unwrap();
+        assert_eq!(d, vec![4.0, 5.0, 2.0]);
+        r.combine(ReduceOp::Min, &mut d, &[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(d, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn native_rejects_mismatch() {
+        let r = NativeReducer;
+        let mut d = vec![1.0f32];
+        assert!(r.combine(ReduceOp::Sum, &mut d, &[1.0, 2.0]).is_err());
+    }
+}

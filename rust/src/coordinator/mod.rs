@@ -1,0 +1,369 @@
+//! The coordinator: the user-facing Allreduce API.
+//!
+//! [`Communicator`] plays the role of an MPI communicator over the
+//! simulated cluster: it owns the group `T_P`, the placement permutation
+//! `h`, the network-parameter estimates (paper Table 2), a schedule cache,
+//! and the execution backend. `allreduce()` selects/builds/verifies a
+//! schedule, runs it on real data, and returns per-rank results plus
+//! [`Metrics`].
+//!
+//! Algorithm selection mirrors the paper's §10 methodology: the estimated
+//! α/β/γ feed eq. 36/37 to pick the optimal step count `r`
+//! ([`AlgorithmKind::GeneralizedAuto`]), or [`Communicator::auto_select`]
+//! picks the globally cheapest algorithm for a given message size.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use crate::cluster::{ClusterExecutor, Element, ReduceOp, Reducer};
+use crate::cost::{optimal_r, CostModel, NetParams};
+use crate::perm::{Group, Permutation};
+use crate::sched::{stats::stats, verify::verify, ProcSchedule};
+
+/// Per-call metrics.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    /// Resolved algorithm label (e.g. `"proposed-r3"`).
+    pub algorithm: String,
+    /// Communication steps in the schedule.
+    pub steps: usize,
+    /// Chunk-units sent on the critical path (per-process).
+    pub critical_units_sent: u64,
+    /// Bytes the busiest process put on the wire.
+    pub critical_bytes_sent: u64,
+    /// Closed-form model estimate for this call, seconds.
+    pub predicted_seconds: f64,
+    /// Schedule build time (cache miss) or zero (hit), seconds.
+    pub build_seconds: f64,
+    /// Wall-clock execution time on the simulated cluster, seconds.
+    pub exec_seconds: f64,
+}
+
+/// Result of one Allreduce.
+#[derive(Clone, Debug)]
+pub struct AllreduceOutput<T = f32> {
+    /// Per-rank output vectors (identical contents — that's the contract).
+    pub ranks: Vec<Vec<T>>,
+    pub metrics: Metrics,
+}
+
+/// Builder for [`Communicator`].
+pub struct CommunicatorBuilder {
+    p: usize,
+    group: Option<Group>,
+    h: Option<Permutation>,
+    params: NetParams,
+    openmpi_threshold: usize,
+}
+
+impl CommunicatorBuilder {
+    pub fn group(mut self, g: Group) -> Self {
+        self.group = Some(g);
+        self
+    }
+    pub fn placement(mut self, h: Permutation) -> Self {
+        self.h = Some(h);
+        self
+    }
+    pub fn net_params(mut self, p: NetParams) -> Self {
+        self.params = p;
+        self
+    }
+    pub fn openmpi_threshold(mut self, t: usize) -> Self {
+        self.openmpi_threshold = t;
+        self
+    }
+
+    pub fn build(self) -> Result<Communicator, String> {
+        let group = self.group.unwrap_or_else(|| Group::cyclic(self.p));
+        if group.order() != self.p {
+            return Err(format!(
+                "group order {} != communicator size {}",
+                group.order(),
+                self.p
+            ));
+        }
+        let h = self.h.unwrap_or_else(|| Permutation::identity(self.p));
+        if h.len() != self.p {
+            return Err(format!("h degree {} != size {}", h.len(), self.p));
+        }
+        Ok(Communicator {
+            p: self.p,
+            group,
+            h,
+            params: self.params,
+            openmpi_threshold: self.openmpi_threshold,
+            exec: ClusterExecutor::new(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+}
+
+/// An MPI-style communicator over the in-process cluster.
+pub struct Communicator {
+    p: usize,
+    group: Group,
+    h: Permutation,
+    params: NetParams,
+    openmpi_threshold: usize,
+    exec: ClusterExecutor,
+    /// Schedule cache keyed by resolved algorithm label.
+    cache: Mutex<HashMap<String, std::sync::Arc<ProcSchedule>>>,
+}
+
+impl Communicator {
+    pub fn builder(p: usize) -> CommunicatorBuilder {
+        CommunicatorBuilder {
+            p,
+            group: None,
+            h: None,
+            params: NetParams::table2(),
+            openmpi_threshold: 10 * 1024,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.p
+    }
+
+    pub fn net_params(&self) -> NetParams {
+        self.params
+    }
+
+    /// Resolve a kind that depends on the message size to a concrete one.
+    pub fn resolve(&self, kind: AlgorithmKind, m_bytes: usize) -> AlgorithmKind {
+        match kind {
+            AlgorithmKind::GeneralizedAuto => AlgorithmKind::Generalized {
+                r: optimal_r(self.p, m_bytes, &self.params),
+            },
+            AlgorithmKind::OpenMpi => {
+                if m_bytes < self.openmpi_threshold {
+                    AlgorithmKind::RecursiveDoubling
+                } else {
+                    AlgorithmKind::Ring
+                }
+            }
+            k => k,
+        }
+    }
+
+    /// Pick the globally cheapest algorithm for `m_bytes` under the cost
+    /// model (proposed family vs Ring vs RD vs RH).
+    pub fn auto_select(&self, m_bytes: usize) -> AlgorithmKind {
+        let cm = CostModel::new(self.p, self.params);
+        let m = m_bytes as f64;
+        let (prop, r) = cm.proposed_best(m);
+        let mut best = (prop, AlgorithmKind::Generalized { r });
+        for (t, k) in [
+            (cm.ring(m), AlgorithmKind::Ring),
+            (cm.recursive_doubling(m), AlgorithmKind::RecursiveDoubling),
+            (cm.recursive_halving(m), AlgorithmKind::RecursiveHalving),
+        ] {
+            if t < best.0 {
+                best = (t, k);
+            }
+        }
+        best.1
+    }
+
+    /// Model estimate for a kind at a message size.
+    pub fn predict(&self, kind: AlgorithmKind, m_bytes: usize) -> f64 {
+        let cm = CostModel::new(self.p, self.params);
+        let m = m_bytes as f64;
+        match self.resolve(kind, m_bytes) {
+            AlgorithmKind::Naive | AlgorithmKind::Ring => cm.ring(m),
+            AlgorithmKind::BwOptimal => cm.bw_optimal(m),
+            AlgorithmKind::LatOptimal => cm.lat_optimal(m),
+            AlgorithmKind::Generalized { r } => cm.proposed(m, r),
+            AlgorithmKind::RecursiveDoubling => cm.recursive_doubling(m),
+            AlgorithmKind::RecursiveHalving => cm.recursive_halving(m),
+            AlgorithmKind::Hybrid { x } => crate::algo::hybrid::cost(self.p, m, x, &self.params),
+            AlgorithmKind::Segmented { r, slabs } => {
+                // β/γ invariant; latency multiplied by the slab count.
+                let base = cm.proposed(m, r);
+                let l = crate::util::ceil_log2(self.p) as f64;
+                let steps = 2.0 * l - r as f64;
+                base + (slabs as f64 - 1.0) * steps * self.params.alpha
+            }
+            AlgorithmKind::GeneralizedAuto | AlgorithmKind::OpenMpi => unreachable!("resolved"),
+        }
+    }
+
+    /// Build (or fetch from cache) the verified schedule for a kind.
+    pub fn schedule(
+        &self,
+        kind: AlgorithmKind,
+        m_bytes: usize,
+    ) -> Result<(std::sync::Arc<ProcSchedule>, f64), String> {
+        let resolved = self.resolve(kind, m_bytes);
+        let label = format!("{}-p{}", resolved.label(), self.p);
+        if let Some(s) = self.cache.lock().unwrap().get(&label) {
+            return Ok((s.clone(), 0.0));
+        }
+        let t0 = Instant::now();
+        let ctx = BuildCtx {
+            m_bytes,
+            params: self.params,
+            openmpi_threshold: self.openmpi_threshold,
+        };
+        let algo = Algorithm {
+            kind: resolved,
+            group: self.group.clone(),
+            h: self.h.clone(),
+        };
+        let s = algo.build(&ctx)?;
+        verify(&s).map_err(|e| format!("schedule failed verification: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let arc = std::sync::Arc::new(s);
+        self.cache.lock().unwrap().insert(label, arc.clone());
+        Ok((arc, dt))
+    }
+
+    /// Allreduce over the simulated cluster with the native reducer.
+    pub fn allreduce<T: Element>(
+        &self,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<AllreduceOutput<T>, String> {
+        let m_bytes = inputs.first().map(|v| v.len()).unwrap_or(0) * std::mem::size_of::<T>();
+        let (schedule, build_seconds) = self.schedule(kind, m_bytes)?;
+        let t0 = Instant::now();
+        let ranks = self
+            .exec
+            .execute(&schedule, inputs, op)
+            .map_err(|e| e.to_string())?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+        Ok(AllreduceOutput {
+            ranks,
+            metrics: self.metrics(&schedule, m_bytes, kind, build_seconds, exec_seconds),
+        })
+    }
+
+    /// Allreduce routing all combines through a custom reducer (e.g. the
+    /// PJRT Pallas kernel).
+    pub fn allreduce_with_reducer(
+        &self,
+        inputs: &[Vec<f32>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        reducer: &(dyn Reducer + Sync),
+    ) -> Result<AllreduceOutput<f32>, String> {
+        let m_bytes = inputs.first().map(|v| v.len()).unwrap_or(0) * 4;
+        let (schedule, build_seconds) = self.schedule(kind, m_bytes)?;
+        let t0 = Instant::now();
+        let ranks = self
+            .exec
+            .execute_f32_with_reducer(&schedule, inputs, op, reducer)
+            .map_err(|e| e.to_string())?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+        Ok(AllreduceOutput {
+            ranks,
+            metrics: self.metrics(&schedule, m_bytes, kind, build_seconds, exec_seconds),
+        })
+    }
+
+    fn metrics(
+        &self,
+        schedule: &ProcSchedule,
+        m_bytes: usize,
+        kind: AlgorithmKind,
+        build_seconds: f64,
+        exec_seconds: f64,
+    ) -> Metrics {
+        let st = stats(schedule);
+        let unit_bytes = (m_bytes as f64 / schedule.n_units as f64).ceil() as u64;
+        Metrics {
+            algorithm: schedule.name.clone(),
+            steps: st.steps,
+            critical_units_sent: st.critical_units_sent,
+            critical_bytes_sent: st.critical_units_sent * unit_bytes,
+            predicted_seconds: self.predict(kind, m_bytes),
+            build_seconds,
+            exec_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_allreduce_with_metrics() {
+        let p = 7;
+        let comm = Communicator::builder(p).build().unwrap();
+        let inputs: Vec<Vec<f32>> = (0..p).map(|r| vec![r as f32; 21]).collect();
+        let out = comm
+            .allreduce(&inputs, ReduceOp::Sum, AlgorithmKind::BwOptimal)
+            .unwrap();
+        let want: f32 = (0..p).map(|r| r as f32).sum();
+        for rank in 0..p {
+            assert!(out.ranks[rank].iter().all(|&x| (x - want).abs() < 1e-5));
+        }
+        assert_eq!(out.metrics.steps, 6); // 2⌈log 7⌉
+        assert_eq!(out.metrics.critical_units_sent, 12); // 2(P−1)
+        assert!(out.metrics.predicted_seconds > 0.0);
+    }
+
+    #[test]
+    fn schedule_cache_hits() {
+        let comm = Communicator::builder(8).build().unwrap();
+        let (_, t1) = comm.schedule(AlgorithmKind::Ring, 1024).unwrap();
+        assert!(t1 > 0.0);
+        let (_, t2) = comm.schedule(AlgorithmKind::Ring, 2048).unwrap();
+        assert_eq!(t2, 0.0, "second build must hit the cache");
+    }
+
+    #[test]
+    fn auto_select_regimes() {
+        let comm = Communicator::builder(127).build().unwrap();
+        // Tiny messages: a latency-lean choice (high r).
+        match comm.auto_select(64) {
+            AlgorithmKind::Generalized { r } => assert!(r >= 5, "tiny m wants large r, got {r}"),
+            k => panic!("expected proposed family, got {k:?}"),
+        }
+        // Huge messages: Ring or bandwidth-optimal (r = 0).
+        match comm.auto_select(64 << 20) {
+            AlgorithmKind::Ring | AlgorithmKind::Generalized { r: 0 } => {}
+            k => panic!("expected ring/bw-optimal for huge m, got {k:?}"),
+        }
+    }
+
+    #[test]
+    fn resolve_openmpi_threshold() {
+        let comm = Communicator::builder(16).build().unwrap();
+        assert_eq!(
+            comm.resolve(AlgorithmKind::OpenMpi, 1024),
+            AlgorithmKind::RecursiveDoubling
+        );
+        assert_eq!(
+            comm.resolve(AlgorithmKind::OpenMpi, 64 << 10),
+            AlgorithmKind::Ring
+        );
+    }
+
+    #[test]
+    fn rejects_mismatched_group() {
+        let err = match Communicator::builder(8).group(Group::cyclic(7)).build() {
+            Ok(_) => panic!("mismatched group must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.contains("order"));
+    }
+
+    #[test]
+    fn generalized_auto_adapts_r_to_message_size() {
+        let comm = Communicator::builder(127).build().unwrap();
+        let small = comm.resolve(AlgorithmKind::GeneralizedAuto, 64);
+        let big = comm.resolve(AlgorithmKind::GeneralizedAuto, 8 << 20);
+        let (AlgorithmKind::Generalized { r: rs }, AlgorithmKind::Generalized { r: rb }) =
+            (small, big)
+        else {
+            panic!("resolve must yield Generalized");
+        };
+        assert!(rs > rb, "small m should remove more steps ({rs} vs {rb})");
+    }
+}

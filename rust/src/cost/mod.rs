@@ -1,0 +1,328 @@
+//! The α–β–γ cost model (paper §2) and the closed-form complexities of
+//! every algorithm (eqs. 15, 25, 36, 44 + baselines), including the
+//! optimal-step-count selection of eq. 37.
+//!
+//! `τ_p2p = α + β·m + γ·m` — `α` latency (s), `β` inverse bandwidth (s/B),
+//! `γ` reduction speed (s/B). Table 2 gives the constants measured on the
+//! paper's 10 GE cluster, which all our figures reuse.
+
+use crate::util::ceil_log2;
+
+/// Point-to-point network parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetParams {
+    /// Latency per message, seconds.
+    pub alpha: f64,
+    /// Transfer time per byte, seconds (inverse bandwidth).
+    pub beta: f64,
+    /// Reduction time per byte, seconds.
+    pub gamma: f64,
+}
+
+impl NetParams {
+    /// Paper Table 2: the 10 GE cluster used in §10.
+    pub fn table2() -> NetParams {
+        NetParams {
+            alpha: 3e-5,
+            beta: 1e-8,
+            gamma: 2e-10,
+        }
+    }
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        Self::table2()
+    }
+}
+
+/// Closed-form cost estimates for `P` processes and `m`-byte vectors.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub p: usize,
+    pub params: NetParams,
+}
+
+impl CostModel {
+    pub fn new(p: usize, params: NetParams) -> CostModel {
+        assert!(p >= 1);
+        CostModel { p, params }
+    }
+
+    fn u(&self, m: f64) -> f64 {
+        m / self.p as f64
+    }
+
+    fn l(&self) -> f64 {
+        ceil_log2(self.p) as f64
+    }
+
+    /// Eq. 15 — the naive / Ring cost: `2(P−1)` steps, `2(P−1)u` bytes,
+    /// `(P−1)u` reduced.
+    pub fn ring(&self, m: f64) -> f64 {
+        let (p, u) = (self.p as f64, self.u(m));
+        let np = &self.params;
+        2.0 * (p - 1.0) * np.alpha
+            + 2.0 * (p - 1.0) * u * np.beta
+            + (p - 1.0) * u * np.gamma
+    }
+
+    /// Eq. 25 — the proposed bandwidth-optimal version (`r = 0`).
+    pub fn bw_optimal(&self, m: f64) -> f64 {
+        let (p, u, l) = (self.p as f64, self.u(m), self.l());
+        let np = &self.params;
+        2.0 * l * np.alpha + 2.0 * (p - 1.0) * u * np.beta + (p - 1.0) * u * np.gamma
+    }
+
+    /// Eq. 36 — the proposed algorithm with `r` distribution steps removed,
+    /// `0 ≤ r < ⌈log P⌉` (worst-case accounting with `2^r` replicas).
+    pub fn generalized(&self, m: f64, r: u32) -> f64 {
+        let l = self.l();
+        assert!((r as f64) < l || (l == 0.0 && r == 0), "use lat_optimal for r = ⌈log P⌉");
+        let (p, u) = (self.p as f64, self.u(m));
+        let np = &self.params;
+        let extra = (2f64.powi(r as i32) - 1.0).max(0.0);
+        (2.0 * l - r as f64) * np.alpha
+            + (2.0 * (p - 1.0) + extra * (l - 1.0)) * u * np.beta
+            + ((p - 1.0) + extra * (2.0 * l - 2.0)) * u * np.gamma
+    }
+
+    /// Eq. 44 — the latency-optimal corner (`r = ⌈log P⌉`), worst case.
+    pub fn lat_optimal(&self, m: f64) -> f64 {
+        let (p, u, l) = (self.p as f64, self.u(m), self.l());
+        let np = &self.params;
+        l * np.alpha + p * l * u * np.beta + p * (2.0 * l - 2.0).max(0.0) * u * np.gamma
+    }
+
+    /// Cost of the proposed algorithm for any valid `r` (dispatches between
+    /// eq. 36 and eq. 44).
+    pub fn proposed(&self, m: f64, r: u32) -> f64 {
+        if (r as f64) >= self.l() && self.p > 1 {
+            self.lat_optimal(m)
+        } else {
+            self.generalized(m, r)
+        }
+    }
+
+    /// Best cost over the integer range `r ∈ [0, ⌈log P⌉]` and the chosen r.
+    pub fn proposed_best(&self, m: f64) -> (f64, u32) {
+        let l = ceil_log2(self.p);
+        let mut best = (self.proposed(m, 0), 0);
+        for r in 1..=l {
+            let t = self.proposed(m, r);
+            if t < best.0 {
+                best = (t, r);
+            }
+        }
+        best
+    }
+
+    /// Recursive Doubling baseline: `⌈log P'⌉` whole-vector exchanges plus
+    /// the §3 non-power-of-two preparation/finalization overhead (`+2` steps,
+    /// `+2m` bytes, `+m` reduced).
+    pub fn recursive_doubling(&self, m: f64) -> f64 {
+        let np = &self.params;
+        let p2 = crate::algo::recursive_doubling::pow2_floor(self.p);
+        let l2 = p2.trailing_zeros() as f64;
+        let core = l2 * (np.alpha + m * np.beta + m * np.gamma);
+        if p2 == self.p {
+            core
+        } else {
+            core + 2.0 * np.alpha + 2.0 * m * np.beta + m * np.gamma
+        }
+    }
+
+    /// Recursive Halving baseline (reduce-scatter + allgather on the
+    /// power-of-two core, plus shrink overhead for non-power-of-two `P`).
+    pub fn recursive_halving(&self, m: f64) -> f64 {
+        let np = &self.params;
+        let p2 = crate::algo::recursive_doubling::pow2_floor(self.p) as f64;
+        let l2 = p2.log2();
+        let core = 2.0 * l2 * np.alpha
+            + 2.0 * (p2 - 1.0) / p2 * m * np.beta
+            + (p2 - 1.0) / p2 * m * np.gamma;
+        if p2 as usize == self.p {
+            core
+        } else {
+            core + 2.0 * np.alpha + 2.0 * m * np.beta + m * np.gamma
+        }
+    }
+
+    /// The Bruck-based Allreduce of [5]: same step/byte complexity as the
+    /// proposed bandwidth-optimal version but with the pre/post local data
+    /// shifts the paper notes it needs (§7), modeled as two `m`-byte local
+    /// copies at the reduction speed `γ`.
+    pub fn bruck(&self, m: f64) -> f64 {
+        self.bw_optimal(m) + 2.0 * m * self.params.gamma
+    }
+
+    /// OpenMPI's selection as measured in §10: Recursive Doubling below
+    /// `threshold` bytes, Ring at and above.
+    pub fn openmpi(&self, m: f64, threshold: f64) -> f64 {
+        if m < threshold {
+            self.recursive_doubling(m)
+        } else {
+            self.ring(m)
+        }
+    }
+
+    /// The best state-of-the-art estimate the paper compares against in
+    /// Fig 1: `min(τ_RD, τ_RH, τ_Ring)`.
+    pub fn best_sota(&self, m: f64) -> f64 {
+        self.recursive_doubling(m)
+            .min(self.recursive_halving(m))
+            .min(self.ring(m))
+    }
+}
+
+/// Eq. 37 — the analytically optimal (continuous) number of removed steps:
+///
+/// `r* = log(α / (m(β + 2γ))) + log(P / ((log P − 1) ln 2))`
+///
+/// clamped to the valid integer range `[0, ⌈log P⌉]`.
+pub fn optimal_r_continuous(p: usize, m_bytes: usize, params: &NetParams) -> f64 {
+    let l = ceil_log2(p) as f64;
+    if l < 1.0 {
+        return 0.0;
+    }
+    let m = (m_bytes as f64).max(1.0);
+    let a = (params.alpha / (m * (params.beta + 2.0 * params.gamma))).log2();
+    let denom = (l - 1.0).max(f64::MIN_POSITIVE) * std::f64::consts::LN_2;
+    let b = (p as f64 / denom).log2();
+    (a + b).clamp(0.0, l)
+}
+
+/// The integer `r` the runtime actually uses: the argmin of the closed-form
+/// cost over `[0, ⌈log P⌉]` (eq. 37 rounds to this in practice; the argmin
+/// is exact and equally cheap at our scales).
+pub fn optimal_r(p: usize, m_bytes: usize, params: &NetParams) -> u32 {
+    CostModel::new(p, *params).proposed_best(m_bytes as f64).1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm(p: usize) -> CostModel {
+        CostModel::new(p, NetParams::table2())
+    }
+
+    #[test]
+    fn table2_constants() {
+        let t = NetParams::table2();
+        assert_eq!(t.alpha, 3e-5);
+        assert_eq!(t.beta, 1e-8);
+        assert_eq!(t.gamma, 2e-10);
+    }
+
+    /// r=0 in eq. 36 must reduce to eq. 25.
+    #[test]
+    fn eq36_at_r0_is_eq25() {
+        for p in [5usize, 8, 127] {
+            for m in [64.0, 4096.0, 1e6] {
+                let c = cm(p);
+                assert!((c.generalized(m, 0) - c.bw_optimal(m)).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// Latency-optimal beats bandwidth-optimal for tiny messages and loses
+    /// for huge ones (the Fig 10 crossover).
+    #[test]
+    fn lat_vs_bw_crossover() {
+        let c = cm(127);
+        assert!(c.lat_optimal(64.0) < c.bw_optimal(64.0));
+        assert!(c.lat_optimal(16e6) > c.bw_optimal(16e6));
+        // And a crossover exists in between.
+        let mut crossed = false;
+        let mut prev = c.lat_optimal(64.0) < c.bw_optimal(64.0);
+        let mut m = 64.0;
+        while m < 16e6 {
+            let now = c.lat_optimal(m) < c.bw_optimal(m);
+            if now != prev {
+                crossed = true;
+            }
+            prev = now;
+            m *= 2.0;
+        }
+        assert!(crossed);
+    }
+
+    /// For P=127, the proposed best is never worse than both corners and
+    /// beats the SOTA minimum over a broad middle range (Fig 1's claim).
+    #[test]
+    fn proposed_best_dominates_corners_and_beats_sota_midrange() {
+        let c = cm(127);
+        let mut beat_somewhere = false;
+        let mut m = 16.0;
+        while m < 64e6 {
+            let (best, _) = c.proposed_best(m);
+            assert!(best <= c.bw_optimal(m) + 1e-15);
+            assert!(best <= c.lat_optimal(m) + 1e-15);
+            if best < c.best_sota(m) * 0.95 {
+                beat_somewhere = true;
+            }
+            m *= 2.0;
+        }
+        assert!(beat_somewhere, "proposed must beat SOTA somewhere (Fig 1)");
+    }
+
+    /// Optimal r decreases with message size: latency-optimal for tiny
+    /// messages, bandwidth-optimal for huge ones.
+    #[test]
+    fn optimal_r_monotone_in_m() {
+        let params = NetParams::table2();
+        let p = 127;
+        let l = ceil_log2(p);
+        assert_eq!(optimal_r(p, 4, &params), l);
+        assert_eq!(optimal_r(p, 64 << 20, &params), 0);
+        let mut prev = u32::MAX;
+        for m in [4usize, 64, 1024, 16 << 10, 256 << 10, 4 << 20, 64 << 20] {
+            let r = optimal_r(p, m, &params);
+            assert!(r <= prev, "r must not increase with m ({prev} -> {r} at m={m})");
+            prev = r;
+        }
+    }
+
+    /// The continuous formula (eq. 37) lands within ~1.5 of the integer
+    /// argmin across the operating range.
+    #[test]
+    fn eq37_close_to_argmin() {
+        let params = NetParams::table2();
+        for p in [17usize, 64, 127, 200] {
+            for m in [128usize, 1024, 8192, 65536, 1 << 20] {
+                let cont = optimal_r_continuous(p, m, &params);
+                let arg = optimal_r(p, m, &params) as f64;
+                assert!(
+                    (cont - arg).abs() <= 1.6,
+                    "P={p} m={m}: eq37={cont:.2} argmin={arg}"
+                );
+            }
+        }
+    }
+
+    /// RD for power-of-two has no overhead; non-pow2 pays ≥ 2 extra latency
+    /// units plus 2m bandwidth.
+    #[test]
+    fn rd_non_pow2_overhead() {
+        let m = 10_000.0;
+        let c64 = cm(64).recursive_doubling(m);
+        let c65 = cm(65).recursive_doubling(m);
+        let np = NetParams::table2();
+        assert!((c65 - c64 - (2.0 * np.alpha + 2.0 * m * np.beta + m * np.gamma)).abs() < 1e-12);
+    }
+
+    /// Fig 11 regime: at m = 425 B the latency-optimal proposed version
+    /// beats RD beyond the power-of-two (e.g. P=65..127 worse for RD).
+    #[test]
+    fn small_m_proposed_beats_rd_just_past_pow2() {
+        let m = 425.0;
+        for p in [65usize, 100, 127] {
+            let c = cm(p);
+            assert!(
+                c.proposed_best(m).0 < c.recursive_doubling(m),
+                "P={p}: proposed must beat RD at m=425B"
+            );
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! # permallreduce
+//!
+//! A production-quality reproduction of **"A Generalization of the Allreduce
+//! Operation"** (Dmitry Kolmakov, Xuecang Zhang — Huawei CRI, 2020).
+//!
+//! The paper describes MPI-style Allreduce communication schedules as
+//! compositions of elements of an abelian, transitive permutation group
+//! `T_P` acting on the process set `{0..P-1}`, and derives from that a
+//! single algorithm family which:
+//!
+//! * is **bandwidth-optimal** in `2⌈log P⌉` steps for *any* `P` (§7),
+//! * is **latency-optimal** in `⌈log P⌉` steps for *any* `P` (§9),
+//! * smoothly **trades bandwidth for latency** through a replica count
+//!   parameter `r ∈ [0, ⌈log P⌉]` (§8, eq. 36), with a closed-form optimum
+//!   (eq. 37),
+//! * contains Ring, Recursive Halving and Recursive Doubling as special
+//!   cases.
+//!
+//! ## Crate layout
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`perm`] | permutations, cycle notation, abelian transitive groups (cyclic, hypercube/XOR, direct products) |
+//! | [`sched`] | the process-level schedule IR, legality checks, symbolic verifier, traffic statistics |
+//! | [`algo`] | schedule builders: naive, ring, the generalized algorithm (bw-opt / intermediate-r / latency-opt), recursive doubling/halving, hybrid, Bruck, OpenMPI-switch |
+//! | [`cost`] | α–β–γ cost model (paper Table 2), closed-form step/byte/time formulas (eqs. 15, 25, 36, 44), optimal-r selection (eq. 37) |
+//! | [`des`] | discrete-event network simulator executing a schedule under the cost model with per-process clocks |
+//! | [`cluster`] | a real multi-threaded message-passing cluster executing schedules on actual data |
+//! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step) and executes them from rust |
+//! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
+//! | [`figures`] | regenerates every figure of the paper's evaluation section |
+//! | [`util`] | in-tree PRNG / JSON / bitset / property-testing (offline image: no external deps beyond `xla` + `anyhow`) |
+//!
+//! ## Quick start
+//!
+//! ```
+//! use permallreduce::prelude::*;
+//!
+//! // 7 processes, each contributing a vector of 21 f32 elements.
+//! let p = 7;
+//! let inputs: Vec<Vec<f32>> = (0..p).map(|r| vec![r as f32; 21]).collect();
+//!
+//! let comm = Communicator::builder(p).build().unwrap();
+//! let out = comm.allreduce(&inputs, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto).unwrap();
+//! let expect: f32 = (0..p).map(|r| r as f32).sum();
+//! for rank in 0..p {
+//!     assert!(out.ranks[rank].iter().all(|&x| (x - expect).abs() < 1e-5));
+//! }
+//! ```
+
+pub mod util;
+pub mod perm;
+pub mod sched;
+pub mod algo;
+pub mod cost;
+pub mod des;
+pub mod cluster;
+pub mod runtime;
+pub mod coordinator;
+pub mod figures;
+pub mod cli;
+
+/// Convenient re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::algo::{Algorithm, AlgorithmKind};
+    pub use crate::cluster::{ClusterExecutor, ReduceOp};
+    pub use crate::coordinator::{Communicator, Metrics};
+    pub use crate::cost::{CostModel, NetParams};
+    pub use crate::des::simulate;
+    pub use crate::perm::{Group, Permutation};
+    pub use crate::sched::{ProcSchedule, ScheduleStats};
+}

@@ -1,0 +1,289 @@
+//! `gar` — the permallreduce launcher.
+//!
+//! ```text
+//! gar run     --p 8 --m 4k --algo auto --op sum [--pjrt] [--seed 42]
+//! gar verify  --p-max 40            verify every algorithm × P symbolically + numerically
+//! gar sweep   --p 127 --m 425      cost-model table across algorithms / r
+//! gar figures [--fig 7] [--out d]  regenerate the paper's figures (see also `figures` bin)
+//! gar explain --p 7 --algo bw      print a schedule step by step
+//! ```
+
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use permallreduce::cli::Args;
+use permallreduce::cluster::{reference_allreduce, ReduceOp};
+use permallreduce::coordinator::Communicator;
+use permallreduce::cost::{optimal_r, optimal_r_continuous, CostModel, NetParams};
+use permallreduce::des::simulate;
+use permallreduce::sched::{stats::stats, verify::verify};
+use permallreduce::util::{ceil_log2, Rng};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("explain") => cmd_explain(&args),
+        _ => {
+            print!("{}", HELP);
+            if args.subcommand.is_none() && !args.has("help") {
+                2
+            } else {
+                0
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = r#"gar — generalized Allreduce (Kolmakov & Zhang 2020 reproduction)
+
+USAGE:
+  gar run     --p <N> --m <bytes> [--algo auto|bw|lat|ring|rd|rh|openmpi|naive|r<K>]
+              [--op sum|prod|max|min] [--pjrt] [--seed S]
+  gar verify  [--p-max N]
+  gar sweep   [--p N] [--m bytes]
+  gar figures [--fig 1|7|8|9|10|11|12] [--out DIR]
+  gar explain [--p N] [--algo ...]
+
+Sizes accept k/m/g suffixes (e.g. --m 9k).
+"#;
+
+fn parse_algo(s: &str, p: usize) -> Result<AlgorithmKind, String> {
+    Ok(match s {
+        "auto" => AlgorithmKind::GeneralizedAuto,
+        "bw" => AlgorithmKind::BwOptimal,
+        "lat" => AlgorithmKind::LatOptimal,
+        "ring" => AlgorithmKind::Ring,
+        "naive" => AlgorithmKind::Naive,
+        "rd" => AlgorithmKind::RecursiveDoubling,
+        "rh" => AlgorithmKind::RecursiveHalving,
+        "openmpi" => AlgorithmKind::OpenMpi,
+        other => {
+            if let Some(r) = other.strip_prefix('r').and_then(|x| x.parse::<u32>().ok()) {
+                if r > ceil_log2(p) {
+                    return Err(format!("r={r} exceeds ⌈log P⌉={}", ceil_log2(p)));
+                }
+                AlgorithmKind::Generalized { r }
+            } else {
+                return Err(format!("unknown algorithm {other:?}"));
+            }
+        }
+    })
+}
+
+fn parse_op(s: &str) -> Result<ReduceOp, String> {
+    Ok(match s {
+        "sum" => ReduceOp::Sum,
+        "prod" => ReduceOp::Prod,
+        "max" => ReduceOp::Max,
+        "min" => ReduceOp::Min,
+        other => return Err(format!("unknown op {other:?}")),
+    })
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let p = args.get_usize("p", 8)?;
+        let m = args.get_usize("m", 4096)?;
+        let n = m / 4;
+        let kind = parse_algo(args.get("algo").unwrap_or("auto"), p)?;
+        let op = parse_op(args.get("op").unwrap_or("sum"))?;
+        let seed = args.get_usize("seed", 42)? as u64;
+
+        let mut rng = Rng::new(seed);
+        let inputs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect();
+        let comm = Communicator::builder(p).build()?;
+
+        let out = if args.has("pjrt") {
+            let svc = permallreduce::runtime::PjrtReduceService::start()
+                .map_err(|e| format!("{e:#}"))?;
+            let reducer = svc.reducer();
+            comm.allreduce_with_reducer(&inputs, op, kind, &reducer)?
+        } else {
+            comm.allreduce(&inputs, op, kind)?
+        };
+
+        // Validate against the straight reference.
+        let want = reference_allreduce(&inputs, op);
+        let mut max_err = 0.0f32;
+        for ranks in &out.ranks {
+            for (g, w) in ranks.iter().zip(&want) {
+                max_err = max_err.max((g - w).abs() / (1.0 + w.abs()));
+            }
+        }
+        let mtr = &out.metrics;
+        println!("algorithm        : {}", mtr.algorithm);
+        println!("processes        : {p}");
+        println!("message size     : {m} B ({n} f32)");
+        println!("steps            : {}", mtr.steps);
+        println!("critical traffic : {} units ({} B)", mtr.critical_units_sent, mtr.critical_bytes_sent);
+        println!("model estimate   : {:.3e} s", mtr.predicted_seconds);
+        println!("build time       : {:.3e} s", mtr.build_seconds);
+        println!("exec time (wall) : {:.3e} s", mtr.exec_seconds);
+        println!("reducer          : {}", if args.has("pjrt") { "pjrt-pallas" } else { "native" });
+        println!("max rel error    : {max_err:.2e}");
+        if max_err > 1e-4 {
+            return Err(format!("result mismatch: max rel error {max_err}"));
+        }
+        println!("OK");
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_verify(args: &Args) -> i32 {
+    let p_max = args.get_usize("p-max", 33).unwrap_or(33);
+    let mut checked = 0usize;
+    for p in 2..=p_max {
+        for kind in AlgorithmKind::all() {
+            let algo = Algorithm::new(kind, p);
+            match algo.build(&BuildCtx::default()) {
+                Ok(s) => {
+                    if let Err(e) = verify(&s) {
+                        eprintln!("FAIL {kind:?} P={p}: {e}");
+                        return 1;
+                    }
+                    checked += 1;
+                }
+                Err(e) => {
+                    eprintln!("FAIL {kind:?} P={p}: build: {e}");
+                    return 1;
+                }
+            }
+        }
+        if p % 8 == 0 {
+            println!("  verified through P={p}");
+        }
+    }
+    println!("verified {checked} schedules (P=2..{p_max}, all algorithms): all OK");
+    0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let p = args.get_usize("p", 127).unwrap_or(127);
+    let m = args.get_usize("m", 425).unwrap_or(425);
+    let params = NetParams::table2();
+    let cm = CostModel::new(p, params);
+    let l = ceil_log2(p);
+    println!("P={p}, m={m} B, Table-2 network parameters");
+    println!("eq.37 continuous r* = {:.2}", optimal_r_continuous(p, m, &params));
+    println!("argmin integer  r* = {}", optimal_r(p, m, &params));
+    println!();
+    println!("{:<22} {:>12} {:>8}", "algorithm", "model est.", "steps");
+    for r in 0..=l {
+        let t = cm.proposed(m as f64, r);
+        let steps = 2 * l - r.min(l);
+        let mark = if r == optimal_r(p, m, &params) { " <- r*" } else { "" };
+        println!("{:<22} {:>12.3e} {:>8}{mark}", format!("proposed r={r}"), t, steps);
+    }
+    for (name, t, steps) in [
+        ("ring", cm.ring(m as f64), 2 * (p - 1) as u32),
+        ("recursive-doubling", cm.recursive_doubling(m as f64), 0),
+        ("recursive-halving", cm.recursive_halving(m as f64), 0),
+        ("bruck [5] (model)", cm.bruck(m as f64), 2 * l),
+        ("openmpi switch", cm.openmpi(m as f64, 10240.0), 0),
+    ] {
+        if steps > 0 {
+            println!("{name:<22} {t:>12.3e} {steps:>8}");
+        } else {
+            println!("{name:<22} {t:>12.3e}        -");
+        }
+    }
+    0
+}
+
+fn cmd_figures(args: &Args) -> i32 {
+    let params = NetParams::table2();
+    let ids: Vec<String> = match args.get("fig") {
+        Some(f) => vec![if f.starts_with("fig") { f.to_string() } else { format!("fig{f}") }],
+        None => permallreduce::figures::all_ids().iter().map(|s| s.to_string()).collect(),
+    };
+    let out_dir = args.get("out").map(|s| s.to_string());
+    for id in &ids {
+        let Some(fig) = permallreduce::figures::generate(id, &params) else {
+            eprintln!("unknown figure {id}");
+            return 1;
+        };
+        match &out_dir {
+            Some(d) => {
+                std::fs::create_dir_all(d).ok();
+                let path = format!("{d}/{id}.csv");
+                if let Err(e) = std::fs::write(&path, fig.to_csv()) {
+                    eprintln!("writing {path}: {e}");
+                    return 1;
+                }
+                println!("wrote {path} ({} rows)", fig.rows.len());
+            }
+            None => println!("{}", fig.to_markdown()),
+        }
+    }
+    0
+}
+
+fn cmd_explain(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let p = args.get_usize("p", 7)?;
+        let kind = parse_algo(args.get("algo").unwrap_or("bw"), p)?;
+        let s = Algorithm::new(kind, p).build(&BuildCtx::default())?;
+        verify(&s)?;
+        let st = stats(&s);
+        println!("schedule {} — {} steps", s.name, s.num_steps());
+        println!(
+            "critical traffic {} units, critical compute {} units\n",
+            st.critical_units_sent, st.critical_units_reduced
+        );
+        for (i, step) in s.steps.iter().enumerate() {
+            // Summarize step i by proc 0's ops + the uniform pattern.
+            let ops0 = &step.ops[0];
+            let sends: Vec<String> = (0..p)
+                .map(|proc| {
+                    step.ops[proc]
+                        .iter()
+                        .find_map(|o| match o {
+                            permallreduce::sched::Op::Send { to, bufs } => {
+                                Some(format!("{proc}→{to}({})", bufs.len()))
+                            }
+                            _ => None,
+                        })
+                        .unwrap_or_else(|| format!("{proc}·idle"))
+                })
+                .collect();
+            let reduces = ops0
+                .iter()
+                .filter(|o| matches!(o, permallreduce::sched::Op::Reduce { .. }))
+                .count();
+            println!(
+                "step {i:>2}: sends [{}]  reduces/proc={}  max units sent={}",
+                sends.join(" "),
+                reduces,
+                st.step_max_units_sent[i]
+            );
+        }
+        let des = simulate(&s, p * 1024, &NetParams::table2());
+        println!("\nDES makespan at m={}B: {:.3e} s", p * 1024, des.makespan);
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! The [`Permutation`] type: a bijection on `{0..n-1}`.
+//!
+//! Composition follows the paper's convention (§5): `a · b` means *apply `b`
+//! first, then `a`* — i.e. ordinary function composition `(a·b)(x) = a(b(x))`
+//! — which reproduces the paper's example
+//! `(0 1) · (1 2) = (0 1 2)` and `(1 2) · (0 1) = (0 2 1)`.
+
+/// A permutation of `{0..n-1}` stored as its image vector: `map[i] = π(i)`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Permutation {
+    map: Vec<usize>,
+}
+
+impl Permutation {
+    /// Identity on `n` points.
+    pub fn identity(n: usize) -> Permutation {
+        Permutation {
+            map: (0..n).collect(),
+        }
+    }
+
+    /// Build from a function (must be a bijection on `0..n`).
+    pub fn from_fn(n: usize, f: impl Fn(usize) -> usize) -> Permutation {
+        let map: Vec<usize> = (0..n).map(f).collect();
+        Self::from_images(map).expect("from_fn: not a bijection")
+    }
+
+    /// Build from an image vector; checks bijectivity.
+    pub fn from_images(map: Vec<usize>) -> Result<Permutation, String> {
+        let n = map.len();
+        let mut seen = vec![false; n];
+        for &y in &map {
+            if y >= n {
+                return Err(format!("image {y} out of range 0..{n}"));
+            }
+            if seen[y] {
+                return Err(format!("image {y} repeated — not a bijection"));
+            }
+            seen[y] = true;
+        }
+        Ok(Permutation { map })
+    }
+
+    /// The transposition `(i j)` on `n` points (the paper's elementary
+    /// "networking cube" move: a bidirectional exchange between `i` and `j`).
+    pub fn transposition(n: usize, i: usize, j: usize) -> Permutation {
+        Permutation::from_fn(n, |x| {
+            if x == i {
+                j
+            } else if x == j {
+                i
+            } else {
+                x
+            }
+        })
+    }
+
+    /// Parse disjoint-cycle notation, e.g. `"(0 1)(2 3)"`. Points absent
+    /// from every cycle are fixed. `n` is the degree.
+    pub fn from_cycles(n: usize, text: &str) -> Result<Permutation, String> {
+        let mut map: Vec<usize> = (0..n).collect();
+        let mut chars = text.chars().peekable();
+        while let Some(c) = chars.next() {
+            match c {
+                '(' => {
+                    let mut cycle: Vec<usize> = Vec::new();
+                    let mut num = String::new();
+                    loop {
+                        match chars.next() {
+                            Some(')') => {
+                                if !num.is_empty() {
+                                    cycle.push(num.parse().map_err(|e| format!("{e}"))?);
+                                }
+                                break;
+                            }
+                            Some(d) if d.is_ascii_digit() => num.push(d),
+                            Some(' ') | Some(',') => {
+                                if !num.is_empty() {
+                                    cycle.push(num.parse().map_err(|e| format!("{e}"))?);
+                                    num.clear();
+                                }
+                            }
+                            other => return Err(format!("bad cycle char {other:?}")),
+                        }
+                    }
+                    for w in 0..cycle.len() {
+                        let from = cycle[w];
+                        let to = cycle[(w + 1) % cycle.len()];
+                        if from >= n || to >= n {
+                            return Err(format!("cycle point out of range 0..{n}"));
+                        }
+                        map[from] = to;
+                    }
+                }
+                ' ' => {}
+                other => return Err(format!("unexpected {other:?} outside cycle")),
+            }
+        }
+        Self::from_images(map)
+    }
+
+    /// Degree `n`.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// `π(x)`.
+    pub fn apply(&self, x: usize) -> usize {
+        self.map[x]
+    }
+
+    /// `self · other` — apply `other` first (paper convention).
+    pub fn compose(&self, other: &Permutation) -> Permutation {
+        assert_eq!(self.len(), other.len());
+        Permutation {
+            map: (0..self.len()).map(|x| self.map[other.map[x]]).collect(),
+        }
+    }
+
+    /// Inverse permutation.
+    pub fn inverse(&self) -> Permutation {
+        let mut inv = vec![0; self.len()];
+        for (i, &y) in self.map.iter().enumerate() {
+            inv[y] = i;
+        }
+        Permutation { map: inv }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.map.iter().enumerate().all(|(i, &y)| i == y)
+    }
+
+    /// Disjoint cycles (each rotated to start at its minimum, sorted by
+    /// first element; fixed points omitted).
+    pub fn cycles(&self) -> Vec<Vec<usize>> {
+        let n = self.len();
+        let mut seen = vec![false; n];
+        let mut out = Vec::new();
+        for start in 0..n {
+            if seen[start] || self.map[start] == start {
+                seen[start] = true;
+                continue;
+            }
+            let mut cyc = vec![start];
+            seen[start] = true;
+            let mut x = self.map[start];
+            while x != start {
+                seen[x] = true;
+                cyc.push(x);
+                x = self.map[x];
+            }
+            out.push(cyc);
+        }
+        out
+    }
+
+    /// Lengths of non-trivial cycles, ascending.
+    pub fn cycle_lengths(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.cycles().iter().map(|c| c.len()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Cycle-notation string, `"()"` for the identity.
+    pub fn to_cycle_string(&self) -> String {
+        let cycles = self.cycles();
+        if cycles.is_empty() {
+            return "()".to_string();
+        }
+        cycles
+            .iter()
+            .map(|c| {
+                let inner: Vec<String> = c.iter().map(|x| x.to_string()).collect();
+                format!("({})", inner.join(" "))
+            })
+            .collect()
+    }
+
+    /// Multiplicative order: smallest `k ≥ 1` with `π^k = e`.
+    pub fn order(&self) -> usize {
+        self.cycles()
+            .iter()
+            .map(|c| c.len())
+            .fold(1, |acc, l| acc * l / crate::util::gcd(acc, l))
+    }
+}
+
+impl std::fmt::Debug for Permutation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Perm{}", self.to_cycle_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, ensure};
+    use crate::util::Rng;
+
+    #[test]
+    fn paper_composition_example() {
+        // §5: a=(0 1), b=(1 2); a·b = (0 1 2), b·a = (0 2 1).
+        let a = Permutation::transposition(3, 0, 1);
+        let b = Permutation::transposition(3, 1, 2);
+        assert_eq!(a.compose(&b).to_cycle_string(), "(0 1 2)");
+        assert_eq!(b.compose(&a).to_cycle_string(), "(0 2 1)");
+    }
+
+    #[test]
+    fn cycle_parse_and_print_roundtrip() {
+        for (n, s) in [
+            (8, "(0 1)(2 3)(4 5)(6 7)"),
+            (8, "(0 3 6 1 4 7 2 5)"),
+            (7, "(0 1 2 3 4 5 6)"),
+            (5, "()"),
+        ] {
+            let p = Permutation::from_cycles(n, s).unwrap();
+            assert_eq!(p.to_cycle_string(), s, "roundtrip {s}");
+        }
+    }
+
+    #[test]
+    fn fig3_h_permutation() {
+        // Fig 3's h: 0→4, 1→5, 2→2, 3→6, 4→1, 5→0, 6→3.
+        let h = Permutation::from_images(vec![4, 5, 2, 6, 1, 0, 3]).unwrap();
+        assert_eq!(h.apply(0), 4);
+        assert_eq!(h.inverse().apply(4), 0);
+        assert!(h.compose(&h.inverse()).is_identity());
+    }
+
+    #[test]
+    fn from_images_rejects_non_bijection() {
+        assert!(Permutation::from_images(vec![0, 0, 1]).is_err());
+        assert!(Permutation::from_images(vec![0, 3]).is_err());
+    }
+
+    #[test]
+    fn order_of_cycles() {
+        let p = Permutation::from_cycles(8, "(0 1)(2 3 4)").unwrap();
+        assert_eq!(p.order(), 6);
+        assert_eq!(Permutation::identity(4).order(), 1);
+    }
+
+    #[test]
+    fn prop_compose_inverse_identity() {
+        check("perm-inverse", 0xFACE, 50, |rng: &mut Rng| {
+            let n = rng.range(1, 40);
+            let p = Permutation::from_images(rng.permutation(n)).unwrap();
+            ensure(p.compose(&p.inverse()).is_identity(), || "p·p⁻¹ ≠ e".into())?;
+            ensure(p.inverse().compose(&p).is_identity(), || "p⁻¹·p ≠ e".into())?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_compose_associative() {
+        check("perm-assoc", 0xBEEF, 30, |rng: &mut Rng| {
+            let n = rng.range(1, 25);
+            let a = Permutation::from_images(rng.permutation(n)).unwrap();
+            let b = Permutation::from_images(rng.permutation(n)).unwrap();
+            let c = Permutation::from_images(rng.permutation(n)).unwrap();
+            ensure(
+                a.compose(&b).compose(&c) == a.compose(&b.compose(&c)),
+                || "(a·b)·c ≠ a·(b·c)".into(),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_cycle_string_roundtrip() {
+        check("perm-cycles-roundtrip", 0xCAFE, 50, |rng: &mut Rng| {
+            let n = rng.range(1, 30);
+            let p = Permutation::from_images(rng.permutation(n)).unwrap();
+            let q = Permutation::from_cycles(n, &p.to_cycle_string()).unwrap();
+            ensure(p == q, || format!("roundtrip failed for {p:?}"))
+        });
+    }
+}

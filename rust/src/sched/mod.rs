@@ -1,0 +1,380 @@
+//! The process-level schedule IR.
+//!
+//! Every Allreduce algorithm in this crate — the paper's generalized
+//! algorithm and all baselines — compiles to a [`ProcSchedule`]: a sequence
+//! of [`Step`]s, each holding per-process operation lists over named
+//! buffers. The same IR is consumed by
+//!
+//! * the **symbolic verifier** ([`verify`]) which proves the Allreduce
+//!   postcondition and the network-legality invariants,
+//! * the **discrete-event simulator** ([`crate::des`]) which prices the
+//!   schedule under the α–β–γ model,
+//! * the **cluster executor** ([`crate::cluster`]) which runs it on real
+//!   data across threads,
+//! * the **statistics pass** ([`stats`]) which extracts the step/byte/
+//!   compute counts the paper's closed-form costs predict.
+//!
+//! ## Data model
+//!
+//! A schedule is built for an abstract vector of `n_units` equal units
+//! (the paper's `u = m/P` chunks; baselines may use a finer granularity).
+//! A buffer holds one contiguous [`Segment`] of units. At execution time
+//! units are mapped proportionally onto the concrete vector, so one
+//! schedule serves any message size.
+//!
+//! Buffers are **SSA-ish**: each `BufId` is created exactly once (at init,
+//! by `Recv`, or by `Copy`), may be reduced into while fresh, and is
+//! destroyed by `Free`. Within a step each process performs at most one
+//! `Send` (one message to one peer) and one `Recv` — the paper's §2 model
+//! of a full-duplex peer-to-peer network with conflict-free cyclic
+//! patterns.
+
+pub mod stats;
+pub mod verify;
+
+pub use stats::ScheduleStats;
+
+/// Identifier of a logical buffer. The same id names, on every process,
+/// that process's local piece of one distributed vector (paper eq. 3).
+pub type BufId = u32;
+
+/// A contiguous range of schedule units: `[off, off + len)`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Segment {
+    pub off: u32,
+    pub len: u32,
+}
+
+impl Segment {
+    pub fn new(off: u32, len: u32) -> Segment {
+        Segment { off, len }
+    }
+    pub fn end(&self) -> u32 {
+        self.off + self.len
+    }
+}
+
+/// One operation executed by one process within a step.
+///
+/// Op order inside a step follows list order; builders emit sends first so
+/// executors can post them before blocking on receives.
+///
+/// Buffer lists are `Arc`-shared: the group-based algorithms emit the same
+/// payload/reduce/free lists on every process (only the peer differs), so
+/// sharing turns an `O(P · chunks)` construction into `O(P + chunks)` —
+/// the single biggest §Perf win for schedule building (see EXPERIMENTS.md).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Post one message to `to` containing the listed buffers (in order).
+    Send { to: usize, bufs: std::sync::Arc<Vec<BufId>> },
+    /// Receive one message from `from`; its payload creates the listed
+    /// fresh buffers (positionally matching the sender's `Send.bufs`).
+    Recv { from: usize, bufs: std::sync::Arc<Vec<BufId>> },
+    /// `dst ⊕= src` elementwise (equal extents). `dst` must be fresh in
+    /// this step (received or copied) so older values are never clobbered.
+    Reduce { dst: BufId, src: BufId },
+    /// Batched reduces (same semantics as a run of `Reduce` ops).
+    ReduceMany { pairs: std::sync::Arc<Vec<(BufId, BufId)>> },
+    /// Duplicate `src` into fresh buffer `dst`.
+    Copy { dst: BufId, src: BufId },
+    /// Release a buffer.
+    Free { buf: BufId },
+    /// Batched frees.
+    FreeMany { bufs: std::sync::Arc<Vec<BufId>> },
+}
+
+impl Op {
+    /// Convenience constructor wrapping the payload in an `Arc`.
+    pub fn send(to: usize, bufs: Vec<BufId>) -> Op {
+        Op::Send {
+            to,
+            bufs: std::sync::Arc::new(bufs),
+        }
+    }
+    /// Convenience constructor wrapping the payload in an `Arc`.
+    pub fn recv(from: usize, bufs: Vec<BufId>) -> Op {
+        Op::Recv {
+            from,
+            bufs: std::sync::Arc::new(bufs),
+        }
+    }
+
+    /// Iterate the op as element-level micro-operations — lets every
+    /// consumer (verifier, DES, executors, stats) treat `ReduceMany` /
+    /// `FreeMany` exactly like runs of their scalar forms, without
+    /// allocating.
+    pub fn micro(&self) -> MicroIter<'_> {
+        MicroIter { op: self, idx: 0 }
+    }
+}
+
+/// Element-level view of an [`Op`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MicroOp<'a> {
+    Send { to: usize, bufs: &'a [BufId] },
+    Recv { from: usize, bufs: &'a [BufId] },
+    Reduce { dst: BufId, src: BufId },
+    Copy { dst: BufId, src: BufId },
+    Free { buf: BufId },
+}
+
+/// Iterator over an op's micro-operations (no allocation).
+pub struct MicroIter<'a> {
+    op: &'a Op,
+    idx: usize,
+}
+
+impl<'a> Iterator for MicroIter<'a> {
+    type Item = MicroOp<'a>;
+    fn next(&mut self) -> Option<MicroOp<'a>> {
+        let i = self.idx;
+        self.idx += 1;
+        match self.op {
+            Op::Send { to, bufs } => (i == 0).then(|| MicroOp::Send { to: *to, bufs }),
+            Op::Recv { from, bufs } => (i == 0).then(|| MicroOp::Recv { from: *from, bufs }),
+            Op::Reduce { dst, src } => (i == 0).then(|| MicroOp::Reduce { dst: *dst, src: *src }),
+            Op::Copy { dst, src } => (i == 0).then(|| MicroOp::Copy { dst: *dst, src: *src }),
+            Op::Free { buf } => (i == 0).then(|| MicroOp::Free { buf: *buf }),
+            Op::ReduceMany { pairs } => pairs
+                .get(i)
+                .map(|&(dst, src)| MicroOp::Reduce { dst, src }),
+            Op::FreeMany { bufs } => bufs.get(i).map(|&buf| MicroOp::Free { buf }),
+        }
+    }
+}
+
+/// One communication step: `ops[p]` is process `p`'s operation list.
+#[derive(Clone, Debug, Default)]
+pub struct Step {
+    pub ops: Vec<Vec<Op>>,
+}
+
+impl Step {
+    pub fn empty(p: usize) -> Step {
+        Step {
+            ops: vec![Vec::new(); p],
+        }
+    }
+}
+
+/// A complete schedule for `p` processes over `n_units` vector units.
+#[derive(Clone, Debug)]
+pub struct ProcSchedule {
+    /// Number of processes.
+    pub p: usize,
+    /// Granularity of the abstract vector (group algorithms use `P` units —
+    /// the paper's chunks `u`; whole-vector baselines use other values).
+    pub n_units: u32,
+    /// Initial buffers per process: `(id, segment)` — content is the
+    /// process's own input restricted to the segment.
+    pub init: Vec<Vec<(BufId, Segment)>>,
+    pub steps: Vec<Step>,
+    /// Result buffers per process, ordered by segment offset; after the
+    /// last step they must jointly cover `[0, n_units)` fully reduced.
+    pub result: Vec<Vec<BufId>>,
+    /// Human-readable algorithm tag, e.g. `"generalized(P=7,r=1)"`.
+    pub name: String,
+}
+
+impl ProcSchedule {
+    /// Number of communication steps.
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Map a unit range to a concrete element range for a vector of
+    /// `n_elems` elements: unit `i` covers
+    /// `[floor(i·n/U), floor((i+1)·n/U))`. Monotone, partition-preserving.
+    pub fn unit_to_elems(&self, seg: Segment, n_elems: usize) -> (usize, usize) {
+        let u = self.n_units as usize;
+        let lo = seg.off as usize * n_elems / u;
+        let hi = seg.end() as usize * n_elems / u;
+        (lo, hi)
+    }
+
+    /// Total number of distinct buffer ids referenced (used for arena sizing).
+    pub fn max_buf_id(&self) -> BufId {
+        let mut mx = 0;
+        let mut see = |b: BufId| {
+            if b + 1 > mx {
+                mx = b + 1;
+            }
+        };
+        for per in &self.init {
+            for &(b, _) in per {
+                see(b);
+            }
+        }
+        for st in &self.steps {
+            for ops in &st.ops {
+                for op in ops {
+                    for m in op.micro() {
+                        match m {
+                            MicroOp::Send { bufs, .. } | MicroOp::Recv { bufs, .. } => {
+                                for &b in bufs {
+                                    see(b)
+                                }
+                            }
+                            MicroOp::Reduce { dst, src } | MicroOp::Copy { dst, src } => {
+                                see(dst);
+                                see(src);
+                            }
+                            MicroOp::Free { buf } => see(buf),
+                        }
+                    }
+                }
+            }
+        }
+        mx
+    }
+}
+
+/// Incremental builder: collects ops per step with convenience methods.
+pub struct ScheduleBuilder {
+    p: usize,
+    n_units: u32,
+    init: Vec<Vec<(BufId, Segment)>>,
+    steps: Vec<Step>,
+    next_buf: BufId,
+    cur: Option<Step>,
+    name: String,
+}
+
+impl ScheduleBuilder {
+    pub fn new(p: usize, n_units: u32, name: impl Into<String>) -> ScheduleBuilder {
+        ScheduleBuilder {
+            p,
+            n_units,
+            init: vec![Vec::new(); p],
+            steps: Vec::new(),
+            next_buf: 0,
+            cur: None,
+            name: name.into(),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Allocate a fresh buffer id (not yet bound to any process).
+    pub fn fresh(&mut self) -> BufId {
+        let id = self.next_buf;
+        self.next_buf += 1;
+        id
+    }
+
+    /// Declare an initial buffer on `proc` covering `seg`.
+    pub fn init_buf(&mut self, proc: usize, seg: Segment) -> BufId {
+        let id = self.fresh();
+        self.init[proc].push((id, seg));
+        id
+    }
+
+    /// Declare the same initial buffer id on every process (each process's
+    /// own data), with per-process segments.
+    pub fn init_buf_per_proc(&mut self, segs: &[Segment]) -> BufId {
+        assert_eq!(segs.len(), self.p);
+        let id = self.fresh();
+        for (proc, &seg) in segs.iter().enumerate() {
+            self.init[proc].push((id, seg));
+        }
+        id
+    }
+
+    /// Begin a new step.
+    pub fn begin_step(&mut self) {
+        assert!(self.cur.is_none(), "previous step not ended");
+        self.cur = Some(Step::empty(self.p));
+    }
+
+    /// Finish the current step.
+    pub fn end_step(&mut self) {
+        let st = self.cur.take().expect("no open step");
+        self.steps.push(st);
+    }
+
+    /// Append an op to `proc` in the current step.
+    pub fn op(&mut self, proc: usize, op: Op) {
+        self.cur.as_mut().expect("no open step").ops[proc].push(op);
+    }
+
+    /// Finalize. `result[p]` lists each process's result buffers ordered by
+    /// segment offset.
+    pub fn finish(self, result: Vec<Vec<BufId>>) -> ProcSchedule {
+        assert!(self.cur.is_none(), "unfinished step");
+        assert_eq!(result.len(), self.p);
+        ProcSchedule {
+            p: self.p,
+            n_units: self.n_units,
+            init: self.init,
+            steps: self.steps,
+            result,
+            name: self.name,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build the trivial P=2 exchange schedule:
+    /// both processes send their whole vector, reduce, done.
+    pub(crate) fn p2_exchange() -> ProcSchedule {
+        let mut b = ScheduleBuilder::new(2, 1, "p2-exchange");
+        let seg = Segment::new(0, 1);
+        let mine = b.init_buf_per_proc(&[seg, seg]);
+        b.begin_step();
+        let got0 = b.fresh();
+        let got1 = b.fresh();
+        for p in 0..2 {
+            let got = if p == 0 { got0 } else { got1 };
+            b.op(p, Op::send(1 - p, vec![mine]));
+            b.op(p, Op::recv(1 - p, vec![got]));
+            b.op(p, Op::Reduce { dst: got, src: mine });
+            b.op(p, Op::Free { buf: mine });
+        }
+        b.end_step();
+        b.finish(vec![vec![got0], vec![got1]])
+    }
+
+    #[test]
+    fn builder_constructs_schedule() {
+        let s = p2_exchange();
+        assert_eq!(s.p, 2);
+        assert_eq!(s.num_steps(), 1);
+        assert_eq!(s.init[0].len(), 1);
+        assert_eq!(s.max_buf_id(), 3);
+    }
+
+    #[test]
+    fn unit_to_elems_partitions() {
+        let s = ProcSchedule {
+            p: 7,
+            n_units: 7,
+            init: vec![],
+            steps: vec![],
+            result: vec![],
+            name: "t".into(),
+        };
+        // 7 units over a 23-element vector must partition [0,23).
+        let mut covered = 0;
+        for i in 0..7u32 {
+            let (lo, hi) = s.unit_to_elems(Segment::new(i, 1), 23);
+            assert_eq!(lo, covered);
+            covered = hi;
+        }
+        assert_eq!(covered, 23);
+        // Whole range maps to whole range.
+        assert_eq!(s.unit_to_elems(Segment::new(0, 7), 23), (0, 23));
+    }
+
+    #[test]
+    #[should_panic(expected = "previous step not ended")]
+    fn builder_rejects_nested_steps() {
+        let mut b = ScheduleBuilder::new(2, 1, "bad");
+        b.begin_step();
+        b.begin_step();
+    }
+}

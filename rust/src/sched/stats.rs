@@ -1,0 +1,143 @@
+//! Traffic & compute statistics extracted from a schedule.
+//!
+//! The paper's complexity formulas (eqs. 15, 25, 36, 44) are stated as
+//! `steps · α + units_sent · u · β + units_reduced · u · γ` with the unit
+//! counts taken per-process along the critical path. This pass extracts the
+//! same quantities from a concrete [`ProcSchedule`], which lets the tests
+//! assert that the generated schedules achieve exactly the step/byte/flop
+//! counts the paper claims.
+
+use crate::sched::{MicroOp, ProcSchedule};
+
+/// Aggregate schedule statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleStats {
+    /// Number of communication steps (steps where at least one process
+    /// sends; barrier-only steps don't occur in practice).
+    pub steps: usize,
+    /// Per-step maximum over processes of units sent in one message —
+    /// the per-step bandwidth term of the synchronized cost model.
+    pub step_max_units_sent: Vec<u32>,
+    /// Per-step maximum over processes of units reduced.
+    pub step_max_units_reduced: Vec<u32>,
+    /// Σ of `step_max_units_sent` — the paper's per-process bandwidth count
+    /// (e.g. `2(P-1)` units for Ring / bandwidth-optimal, eq. 25).
+    pub critical_units_sent: u64,
+    /// Σ of `step_max_units_reduced` (e.g. `P-1` units, eq. 25).
+    pub critical_units_reduced: u64,
+    /// Total units sent across all processes (network load).
+    pub total_units_sent: u64,
+    /// Total units reduced across all processes.
+    pub total_units_reduced: u64,
+}
+
+/// Compute statistics in one pass.
+pub fn stats(s: &ProcSchedule) -> ScheduleStats {
+    let mut step_max_units_sent = Vec::with_capacity(s.steps.len());
+    let mut step_max_units_reduced = Vec::with_capacity(s.steps.len());
+    let mut total_sent = 0u64;
+    let mut total_red = 0u64;
+
+    // Track segment lengths of live buffers per process (id → len).
+    let mut len: Vec<std::collections::HashMap<u32, u32>> = vec![Default::default(); s.p];
+    for (proc, bufs) in s.init.iter().enumerate() {
+        for &(id, seg) in bufs {
+            len[proc].insert(id, seg.len);
+        }
+    }
+
+    for step in &s.steps {
+        let mut max_sent = 0u32;
+        let mut max_red = 0u32;
+        // Sends read pre-step lengths; stage recv'd lengths and merge after.
+        let mut staged: Vec<(usize, u32, u32)> = Vec::new(); // (proc, id, len)
+        for (proc, ops) in step.ops.iter().enumerate() {
+            let mut sent = 0u32;
+            for m in ops.iter().flat_map(|o| o.micro()) {
+                if let MicroOp::Send { to, bufs } = m {
+                    let mut payload_units = 0;
+                    for &b in bufs {
+                        payload_units += len[proc][&b];
+                    }
+                    sent += payload_units;
+                    // Positional match: find the receiver's Recv{from: proc}.
+                    let recv = step.ops[to].iter().flat_map(|o| o.micro()).find_map(|o| match o {
+                        MicroOp::Recv { from, bufs: rb } if from == proc => Some(rb),
+                        _ => None,
+                    });
+                    if let Some(rb) = recv {
+                        for (&rid, &sid) in rb.iter().zip(bufs) {
+                            staged.push((to, rid, len[proc][&sid]));
+                        }
+                    }
+                }
+            }
+            total_sent += sent as u64;
+            max_sent = max_sent.max(sent);
+        }
+        for (proc, id, l) in staged {
+            len[proc].insert(id, l);
+        }
+        for (proc, ops) in step.ops.iter().enumerate() {
+            let mut red = 0u32;
+            for m in ops.iter().flat_map(|o| o.micro()) {
+                match m {
+                    MicroOp::Reduce { src, .. } => red += len[proc][&src],
+                    MicroOp::Copy { dst, src } => {
+                        let l = len[proc][&src];
+                        len[proc].insert(dst, l);
+                    }
+                    MicroOp::Free { buf } => {
+                        len[proc].remove(&buf);
+                    }
+                    _ => {}
+                }
+            }
+            total_red += red as u64;
+            max_red = max_red.max(red);
+        }
+        step_max_units_sent.push(max_sent);
+        step_max_units_reduced.push(max_red);
+    }
+
+    ScheduleStats {
+        steps: s.steps.len(),
+        critical_units_sent: step_max_units_sent.iter().map(|&x| x as u64).sum(),
+        critical_units_reduced: step_max_units_reduced.iter().map(|&x| x as u64).sum(),
+        step_max_units_sent,
+        step_max_units_reduced,
+        total_units_sent: total_sent,
+        total_units_reduced: total_red,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Op, ScheduleBuilder, Segment};
+
+    #[test]
+    fn stats_of_p2_exchange() {
+        let mut b = ScheduleBuilder::new(2, 1, "p2");
+        let seg = Segment::new(0, 1);
+        let mine = b.init_buf_per_proc(&[seg, seg]);
+        b.begin_step();
+        let g0 = b.fresh();
+        let g1 = b.fresh();
+        for p in 0..2 {
+            let got = if p == 0 { g0 } else { g1 };
+            b.op(p, Op::send(1 - p, vec![mine]));
+            b.op(p, Op::recv(1 - p, vec![got]));
+            b.op(p, Op::Reduce { dst: got, src: mine });
+            b.op(p, Op::Free { buf: mine });
+        }
+        b.end_step();
+        let s = b.finish(vec![vec![g0], vec![g1]]);
+        let st = stats(&s);
+        assert_eq!(st.steps, 1);
+        assert_eq!(st.critical_units_sent, 1);
+        assert_eq!(st.critical_units_reduced, 1);
+        assert_eq!(st.total_units_sent, 2);
+        assert_eq!(st.total_units_reduced, 2);
+    }
+}

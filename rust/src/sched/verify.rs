@@ -1,0 +1,379 @@
+//! Symbolic schedule verifier.
+//!
+//! Executes a [`ProcSchedule`] over *symbolic* contents: each buffer is a
+//! `(Segment, BitSet-of-sources)` pair, where the bit set records which
+//! processes' inputs have been folded into the buffer (the paper's eq. 9:
+//! `q_{n+m} = q_n ⊕ q_m`). This proves, independently of any numeric data:
+//!
+//! 1. **Allreduce postcondition** — after the last step every process's
+//!    result buffers tile `[0, n_units)` and each carries the full source
+//!    set `{0..P-1}` (the paper's `Q_final`, eq. 14);
+//! 2. **no double counting** — a reduction never folds the same source in
+//!    twice (would silently corrupt a sum);
+//! 3. **network legality** — per step each process sends at most one
+//!    message to one peer and receives at most one message from one peer
+//!    (§2: conflict-free cyclic patterns on a full-duplex network), and
+//!    every message sent is received;
+//! 4. **memory hygiene** — buffers are created once, used while live, and
+//!    exactly the result buffers survive the final step.
+
+use std::collections::HashMap;
+
+use crate::sched::{MicroOp, ProcSchedule, Segment};
+use crate::util::BitSet;
+
+/// Symbolic content of one buffer on one process.
+#[derive(Clone, Debug)]
+struct SymBuf {
+    seg: Segment,
+    srcs: BitSet,
+}
+
+/// Outcome of verification: per-step traffic/compute tallies come for free
+/// from the symbolic execution and are returned for cross-checking against
+/// the cost model.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    /// For each step: the maximum units any process sent in its message.
+    pub max_units_sent_per_step: Vec<u32>,
+    /// For each step: the maximum units any process reduced.
+    pub max_units_reduced_per_step: Vec<u32>,
+    /// Total units transmitted by all processes over the whole schedule.
+    pub total_units_sent: u64,
+    /// Total units reduced by all processes.
+    pub total_units_reduced: u64,
+}
+
+/// Verify the schedule. Returns a traffic report on success, or a
+/// human-readable description of the first violation.
+pub fn verify(s: &ProcSchedule) -> Result<VerifyReport, String> {
+    let p = s.p;
+    // state[proc]: live buffers.
+    let mut state: Vec<HashMap<u32, SymBuf>> = vec![HashMap::new(); p];
+    let mut created: Vec<bool> = vec![false; s.max_buf_id() as usize + 1];
+
+    for (proc, bufs) in s.init.iter().enumerate() {
+        for &(id, seg) in bufs {
+            // The same id may be declared on several processes (a
+            // distributed vector) — that is one logical creation.
+            created[id as usize] = true;
+            let prev = state[proc].insert(
+                id,
+                SymBuf {
+                    seg,
+                    srcs: BitSet::singleton(p, proc),
+                },
+            );
+            if prev.is_some() {
+                return Err(format!("init: buffer {id} declared twice on proc {proc}"));
+            }
+        }
+    }
+
+    let mut report = VerifyReport {
+        max_units_sent_per_step: Vec::with_capacity(s.steps.len()),
+        max_units_reduced_per_step: Vec::with_capacity(s.steps.len()),
+        total_units_sent: 0,
+        total_units_reduced: 0,
+    };
+
+    for (si, step) in s.steps.iter().enumerate() {
+        if step.ops.len() != p {
+            return Err(format!("step {si}: ops list has {} entries, expected {p}", step.ops.len()));
+        }
+        // Pass 1: evaluate sends against pre-step state; collect messages.
+        // messages[(from, to)] = payload contents.
+        let mut messages: HashMap<(usize, usize), Vec<SymBuf>> = HashMap::new();
+        let mut sent_to: Vec<Option<usize>> = vec![None; p];
+        let mut max_sent = 0u32;
+        for (proc, ops) in step.ops.iter().enumerate() {
+            for m in ops.iter().flat_map(|o| o.micro()) {
+                if let MicroOp::Send { to, bufs } = m {
+                    if to == proc {
+                        return Err(format!("step {si}: proc {proc} sends to itself"));
+                    }
+                    if to >= p {
+                        return Err(format!("step {si}: proc {proc} sends to invalid {to}"));
+                    }
+                    if sent_to[proc].is_some() {
+                        return Err(format!(
+                            "step {si}: proc {proc} sends two messages (network legality)"
+                        ));
+                    }
+                    sent_to[proc] = Some(to);
+                    let mut payload = Vec::with_capacity(bufs.len());
+                    let mut units = 0u32;
+                    for &b in bufs {
+                        let sb = state[proc].get(&b).ok_or_else(|| {
+                            format!("step {si}: proc {proc} sends dead buffer {b}")
+                        })?;
+                        units += sb.seg.len;
+                        payload.push(sb.clone());
+                    }
+                    report.total_units_sent += units as u64;
+                    max_sent = max_sent.max(units);
+                    if messages.insert((proc, to), payload).is_some() {
+                        unreachable!("double send already rejected");
+                    }
+                }
+            }
+        }
+
+        // Pass 2: execute ops sequentially per process.
+        let mut recv_from: Vec<Option<usize>> = vec![None; p];
+        let mut fresh_this_step: Vec<Vec<u32>> = vec![Vec::new(); p];
+        let mut max_reduced = 0u32;
+        for (proc, ops) in step.ops.iter().enumerate() {
+            let mut reduced_units = 0u32;
+            for m in ops.iter().flat_map(|o| o.micro()) {
+                match m {
+                    MicroOp::Send { .. } => {} // handled in pass 1
+                    MicroOp::Recv { from, bufs } => {
+                        if recv_from[proc].is_some() {
+                            return Err(format!(
+                                "step {si}: proc {proc} receives two messages (network legality)"
+                            ));
+                        }
+                        recv_from[proc] = Some(from);
+                        let payload = messages.remove(&(from, proc)).ok_or_else(|| {
+                            format!(
+                                "step {si}: proc {proc} expects message from {from} but none was sent"
+                            )
+                        })?;
+                        if payload.len() != bufs.len() {
+                            return Err(format!(
+                                "step {si}: proc {proc} recv arity {} != sent {}",
+                                bufs.len(),
+                                payload.len()
+                            ));
+                        }
+                        for (&b, sb) in bufs.iter().zip(payload) {
+                            if created[b as usize] && state[proc].contains_key(&b) {
+                                return Err(format!(
+                                    "step {si}: proc {proc} recv into live buffer {b}"
+                                ));
+                            }
+                            created[b as usize] = true;
+                            fresh_this_step[proc].push(b);
+                            state[proc].insert(b, sb);
+                        }
+                    }
+                    MicroOp::Reduce { dst, src } => {
+                        let srcb = state[proc]
+                            .get(&src)
+                            .ok_or_else(|| format!("step {si}: proc {proc} reduce dead src {src}"))?
+                            .clone();
+                        if !fresh_this_step[proc].contains(&dst) {
+                            return Err(format!(
+                                "step {si}: proc {proc} reduce into non-fresh buffer {dst} \
+                                 (would clobber a value other replicas may still need)"
+                            ));
+                        }
+                        let dstb = state[proc]
+                            .get_mut(&dst)
+                            .ok_or_else(|| format!("step {si}: proc {proc} reduce dead dst {dst}"))?;
+                        if dstb.seg != srcb.seg {
+                            return Err(format!(
+                                "step {si}: proc {proc} reduce extent mismatch {:?} vs {:?}",
+                                dstb.seg, srcb.seg
+                            ));
+                        }
+                        if dstb.srcs.intersects(&srcb.srcs) {
+                            return Err(format!(
+                                "step {si}: proc {proc} double-counts sources {:?} ∩ {:?}",
+                                dstb.srcs, srcb.srcs
+                            ));
+                        }
+                        dstb.srcs.union_with(&srcb.srcs);
+                        reduced_units += srcb.seg.len;
+                    }
+                    MicroOp::Copy { dst, src } => {
+                        let sb = state[proc]
+                            .get(&src)
+                            .ok_or_else(|| format!("step {si}: proc {proc} copy dead src {src}"))?
+                            .clone();
+                        if state[proc].contains_key(&dst) {
+                            return Err(format!("step {si}: proc {proc} copy into live {dst}"));
+                        }
+                        created[dst as usize] = true;
+                        fresh_this_step[proc].push(dst);
+                        state[proc].insert(dst, sb);
+                    }
+                    MicroOp::Free { buf } => {
+                        if state[proc].remove(&buf).is_none() {
+                            return Err(format!("step {si}: proc {proc} frees dead buffer {buf}"));
+                        }
+                    }
+                }
+            }
+            report.total_units_reduced += reduced_units as u64;
+            max_reduced = max_reduced.max(reduced_units);
+        }
+
+        if !messages.is_empty() {
+            let ((f, t), _) = messages.iter().next().unwrap();
+            return Err(format!("step {si}: message {f}→{t} sent but never received"));
+        }
+        report.max_units_sent_per_step.push(max_sent);
+        report.max_units_reduced_per_step.push(max_reduced);
+    }
+
+    // Postcondition: exactly the result buffers are live; they tile
+    // [0, n_units) and are fully reduced.
+    for proc in 0..p {
+        let live = &state[proc];
+        let res = &s.result[proc];
+        if live.len() != res.len() {
+            let extra: Vec<u32> = live
+                .keys()
+                .filter(|k| !res.contains(k))
+                .copied()
+                .collect();
+            return Err(format!(
+                "proc {proc}: {} live buffers but {} results (leaked: {extra:?})",
+                live.len(),
+                res.len()
+            ));
+        }
+        let mut cursor = 0u32;
+        for &b in res {
+            let sb = live
+                .get(&b)
+                .ok_or_else(|| format!("proc {proc}: result buffer {b} not live"))?;
+            if sb.seg.off != cursor {
+                return Err(format!(
+                    "proc {proc}: result gap — expected offset {cursor}, buffer {b} at {}",
+                    sb.seg.off
+                ));
+            }
+            cursor = sb.seg.end();
+            if !sb.srcs.is_full() {
+                return Err(format!(
+                    "proc {proc}: result buffer {b} not fully reduced: {:?}",
+                    sb.srcs
+                ));
+            }
+        }
+        if cursor != s.n_units {
+            return Err(format!(
+                "proc {proc}: results cover only [0, {cursor}) of [0, {})",
+                s.n_units
+            ));
+        }
+    }
+
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Op, ScheduleBuilder, Segment};
+
+    fn p2_exchange() -> ProcSchedule {
+        let mut b = ScheduleBuilder::new(2, 1, "p2-exchange");
+        let seg = Segment::new(0, 1);
+        let mine = b.init_buf_per_proc(&[seg, seg]);
+        b.begin_step();
+        let got0 = b.fresh();
+        let got1 = b.fresh();
+        for p in 0..2 {
+            let got = if p == 0 { got0 } else { got1 };
+            b.op(p, Op::send(1 - p, vec![mine]));
+            b.op(p, Op::recv(1 - p, vec![got]));
+            b.op(p, Op::Reduce { dst: got, src: mine });
+            b.op(p, Op::Free { buf: mine });
+        }
+        b.end_step();
+        b.finish(vec![vec![got0], vec![got1]])
+    }
+
+    #[test]
+    fn p2_exchange_verifies() {
+        let s = p2_exchange();
+        let rep = verify(&s).expect("must verify");
+        assert_eq!(rep.max_units_sent_per_step, vec![1]);
+        assert_eq!(rep.max_units_reduced_per_step, vec![1]);
+        assert_eq!(rep.total_units_sent, 2);
+        assert_eq!(rep.total_units_reduced, 2);
+    }
+
+    #[test]
+    fn detects_missing_reduce() {
+        let mut s = p2_exchange();
+        // Drop proc 1's reduce: its result buffer stays partially reduced.
+        s.steps[0].ops[1].retain(|op| !matches!(op, Op::Reduce { .. }));
+        let err = verify(&s).unwrap_err();
+        assert!(err.contains("not fully reduced"), "{err}");
+    }
+
+    #[test]
+    fn detects_double_send() {
+        let mut s = p2_exchange();
+        s.steps[0].ops[0].insert(
+            1,
+            Op::send(1, vec![0]),
+        );
+        let err = verify(&s).unwrap_err();
+        assert!(err.contains("two messages"), "{err}");
+    }
+
+    #[test]
+    fn detects_unreceived_message() {
+        let mut s = p2_exchange();
+        s.steps[0].ops[1].retain(|op| !matches!(op, Op::Recv { .. } | Op::Reduce { .. }));
+        // Proc 1 now leaks `mine`... remove its Free too so the first error
+        // is the lost message.
+        let err = verify(&s).unwrap_err();
+        assert!(
+            err.contains("never received") || err.contains("frees dead") || err.contains("reduce"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn detects_double_count() {
+        // Reduce the same source twice: mine ⊕ mine.
+        let mut b = ScheduleBuilder::new(2, 1, "double-count");
+        let seg = Segment::new(0, 1);
+        let mine = b.init_buf_per_proc(&[seg, seg]);
+        b.begin_step();
+        for p in 0..2 {
+            let got = b.fresh();
+            b.op(p, Op::send(1 - p, vec![mine]));
+            b.op(p, Op::recv(1 - p, vec![got]));
+            b.op(p, Op::Copy { dst: got + 10, src: mine });
+            b.op(p, Op::Reduce { dst: got + 10, src: mine });
+            b.op(p, Op::Free { buf: mine });
+            b.op(p, Op::Free { buf: got });
+        }
+        b.end_step();
+        let s = b.finish(vec![vec![12], vec![11]]);
+        let err = verify(&s).unwrap_err();
+        assert!(err.contains("double-counts"), "{err}");
+    }
+
+    #[test]
+    fn detects_leaked_buffer() {
+        let mut s = p2_exchange();
+        s.steps[0].ops[0].retain(|op| !matches!(op, Op::Free { .. }));
+        let err = verify(&s).unwrap_err();
+        assert!(err.contains("leaked"), "{err}");
+    }
+
+    #[test]
+    fn detects_send_to_self() {
+        let mut s = p2_exchange();
+        s.steps[0].ops[0][0] = Op::send(0, vec![0]);
+        let err = verify(&s).unwrap_err();
+        assert!(err.contains("sends to itself"), "{err}");
+    }
+
+    #[test]
+    fn detects_result_gap() {
+        let mut s = p2_exchange();
+        s.n_units = 2; // results only cover unit 0
+        let err = verify(&s).unwrap_err();
+        assert!(err.contains("cover only"), "{err}");
+    }
+}

@@ -1,0 +1,198 @@
+//! A compact fixed-capacity bit set.
+//!
+//! Used by the schedule verifier to track which source vectors `q_k` have
+//! been folded into a chunk (the paper's eq. 9 combination), and by the
+//! symbolic executor to prove the Allreduce postcondition (every process
+//! ends with the complete source set for every element index).
+
+/// Fixed-capacity bit set over `u64` words.
+#[derive(Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BitSet {
+    n: usize,
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    /// Empty set with capacity for `n` elements `0..n`.
+    pub fn new(n: usize) -> Self {
+        BitSet {
+            n,
+            words: vec![0; n.div_ceil(64)],
+        }
+    }
+
+    /// The full set `{0, .., n-1}`.
+    pub fn full(n: usize) -> Self {
+        let mut s = Self::new(n);
+        for i in 0..n {
+            s.insert(i);
+        }
+        s
+    }
+
+    /// Singleton `{i}` with capacity `n`.
+    pub fn singleton(n: usize, i: usize) -> Self {
+        let mut s = Self::new(n);
+        s.insert(i);
+        s
+    }
+
+    /// Capacity (the universe size `n`).
+    pub fn capacity(&self) -> usize {
+        self.n
+    }
+
+    pub fn insert(&mut self, i: usize) {
+        assert!(i < self.n, "bit {} out of capacity {}", i, self.n);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    pub fn remove(&mut self, i: usize) {
+        assert!(i < self.n);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        i < self.n && self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Number of elements present.
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Is this the full universe?
+    pub fn is_full(&self) -> bool {
+        self.len() == self.n
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &BitSet) {
+        assert_eq!(self.n, other.n);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Do the two sets share any element?
+    pub fn intersects(&self, other: &BitSet) -> bool {
+        assert_eq!(self.n, other.n);
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    /// Returned set is `self ∪ other`.
+    pub fn union(&self, other: &BitSet) -> BitSet {
+        let mut s = self.clone();
+        s.union_with(other);
+        s
+    }
+
+    /// Shift every element by `+d (mod n)` — the orbit action used to derive
+    /// replica schedules from the replica-0 trajectory (paper §8): shifting a
+    /// content set `{k}` by `d` yields the content of vector `Q_{k+d}`.
+    pub fn shift_mod(&self, d: usize) -> BitSet {
+        let mut s = BitSet::new(self.n);
+        for i in self.iter() {
+            s.insert((i + d) % self.n);
+        }
+        s
+    }
+
+    /// Map every element through `f` (must be a bijection on `0..n` for the
+    /// result to have the same cardinality).
+    pub fn map<F: Fn(usize) -> usize>(&self, f: F) -> BitSet {
+        let mut s = BitSet::new(self.n);
+        for i in self.iter() {
+            s.insert(f(i));
+        }
+        s
+    }
+
+    /// Iterate over present elements in increasing order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.n).filter(move |&i| self.contains(i))
+    }
+}
+
+impl std::fmt::Debug for BitSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{{")?;
+        for (k, i) in self.iter().enumerate() {
+            if k > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{i}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut s = BitSet::new(130);
+        assert!(!s.contains(0));
+        s.insert(0);
+        s.insert(64);
+        s.insert(129);
+        assert!(s.contains(0) && s.contains(64) && s.contains(129));
+        assert_eq!(s.len(), 3);
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn full_and_singleton() {
+        let f = BitSet::full(67);
+        assert!(f.is_full());
+        assert_eq!(f.len(), 67);
+        let s = BitSet::singleton(67, 13);
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(13));
+    }
+
+    #[test]
+    fn union_and_intersects() {
+        let a = BitSet::singleton(10, 1);
+        let b = BitSet::singleton(10, 8);
+        let u = a.union(&b);
+        assert_eq!(u.len(), 2);
+        assert!(!a.intersects(&b));
+        assert!(u.intersects(&a) && u.intersects(&b));
+    }
+
+    #[test]
+    fn shift_mod_wraps() {
+        let s = BitSet::singleton(7, 5).union(&BitSet::singleton(7, 6));
+        let t = s.shift_mod(2);
+        assert!(t.contains(0) && t.contains(1));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn iter_in_order() {
+        let mut s = BitSet::new(100);
+        for i in [3usize, 99, 0, 64, 63] {
+            s.insert(i);
+        }
+        let v: Vec<usize> = s.iter().collect();
+        assert_eq!(v, vec![0, 3, 63, 64, 99]);
+    }
+
+    #[test]
+    fn eq_and_hash_by_content() {
+        use std::collections::HashSet;
+        let mut h = HashSet::new();
+        h.insert(BitSet::singleton(8, 2));
+        assert!(h.contains(&BitSet::singleton(8, 2)));
+        assert!(!h.contains(&BitSet::singleton(8, 3)));
+    }
+}

@@ -1,0 +1,72 @@
+//! A light property-based-testing runner.
+//!
+//! `proptest` is unavailable in this offline image, so this module provides
+//! the 10% of it we need: run a property over `n` randomly generated cases,
+//! report the failing seed + case number so the failure is reproducible by
+//! construction (all generators in [`crate::util::rng::Rng`] are
+//! deterministic in the seed).
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random cases derived from `seed`.
+///
+/// On failure (an `Err` return) panics with the case index and per-case seed
+/// so the exact case can be replayed with `replay_case`.
+pub fn check(name: &str, seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        let case_seed = seed ^ (0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1));
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (case_seed={case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported `case_seed`.
+pub fn replay_case(case_seed: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed case (seed={case_seed:#x}) still fails: {msg}");
+    }
+}
+
+/// Helper: turn a boolean + message into the property result type.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 1, 50, |_rng| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_name() {
+        check("fails", 1, 10, |rng| {
+            ensure(rng.below(10) < 100, || "impossible".into())?;
+            Err("boom".into())
+        });
+    }
+
+    #[test]
+    fn ensure_helper() {
+        assert!(ensure(true, || "x".into()).is_ok());
+        assert_eq!(ensure(false, || "x".into()), Err("x".to_string()));
+    }
+}

@@ -1,0 +1,69 @@
+//! Small in-tree utilities.
+//!
+//! The build image is fully offline and only ships the dependency closure of
+//! the `xla` crate, so the usual ecosystem crates (rand, serde, proptest,
+//! criterion, clap) are unavailable. This module provides the minimal,
+//! well-tested subset the rest of the crate needs:
+//!
+//! * [`rng`] — SplitMix64 + xoshiro256** pseudo-random generators,
+//! * [`bitset`] — a compact fixed-capacity bit set used for symbolic
+//!   source-set tracking in the schedule verifier,
+//! * [`json`] — a small JSON value type with parser and serializer (used for
+//!   the artifact manifest and figure data dumps),
+//! * [`check`] — a light property-based-testing runner (seed-reporting,
+//!   no shrinking).
+
+pub mod bitset;
+pub mod check;
+pub mod json;
+pub mod rng;
+
+pub use bitset::BitSet;
+pub use rng::Rng;
+
+/// Integer ceil(log2(x)) for x >= 1. `ceil_log2(1) == 0`.
+pub fn ceil_log2(x: usize) -> u32 {
+    assert!(x >= 1, "ceil_log2 of zero");
+    if x == 1 {
+        0
+    } else {
+        usize::BITS - (x - 1).leading_zeros()
+    }
+}
+
+/// Greatest common divisor.
+pub fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_basics() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(7), 3);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+        assert_eq!(ceil_log2(127), 7);
+        assert_eq!(ceil_log2(128), 7);
+        assert_eq!(ceil_log2(129), 8);
+    }
+
+    #[test]
+    fn gcd_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(gcd(5, 0), 5);
+        assert_eq!(gcd(0, 5), 5);
+    }
+}
