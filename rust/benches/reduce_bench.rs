@@ -1,8 +1,13 @@
-//! Reducer benches: the combine `⊕` itself (the paper's γ term).
+//! Reducer benches: the combine `⊕` itself (the paper's γ term), plus the
+//! multi-tensor bucketing ablation.
 //!
-//! Measures the native rust loops against the PJRT-executed Pallas kernel
-//! across chunk sizes, and derives an effective γ (s/B) to compare with
-//! the paper's Table 2 value (2·10⁻¹⁰ s/B on their cluster).
+//! Measures the native rust loops (and, with `--features pjrt`, the
+//! PJRT-executed Pallas kernel) across chunk sizes, derives an effective γ
+//! (s/B) to compare with the paper's Table 2 value (2·10⁻¹⁰ s/B), and
+//! times a DDP-shaped multi-tensor workload through the sequential
+//! per-tensor `allreduce()` loop vs the bucketed pipelined
+//! `allreduce_many()` path, emitting `BENCH_bucketing.json` so the perf
+//! trajectory of the bucketed path is tracked across PRs.
 
 #[path = "harness.rs"]
 mod harness;
@@ -10,8 +15,9 @@ mod harness;
 use std::time::{Duration, Instant};
 
 use harness::{bench, black_box, fmt_t};
+use permallreduce::algo::AlgorithmKind;
 use permallreduce::cluster::{NativeReducer, ReduceOp, Reducer};
-use permallreduce::runtime::ReduceEngine;
+use permallreduce::coordinator::Communicator;
 use permallreduce::util::Rng;
 
 fn measured_gamma(mut f: impl FnMut(&mut [f32], &[f32]), n: usize) -> f64 {
@@ -24,6 +30,91 @@ fn measured_gamma(mut f: impl FnMut(&mut [f32], &[f32]), n: usize) -> f64 {
         f(&mut dst, &src);
     }
     t.elapsed().as_secs_f64() / iters as f64 / (n * 4) as f64
+}
+
+/// Mean seconds per call of `f` over a fixed-iteration window (for the
+/// JSON dump; `bench` prints but does not return its samples).
+fn time_mean(iters: usize, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    f();
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_secs_f64() / iters as f64
+}
+
+/// DDP-shaped tensor list: a few big layers and a long tail of small ones.
+fn ddp_tensor_lens(rng: &mut Rng) -> Vec<usize> {
+    let mut lens = vec![65_536usize, 32_768, 16_384];
+    for _ in 0..48 {
+        lens.push(rng.range(64, 2048));
+    }
+    lens
+}
+
+fn bench_bucketing() {
+    let p = 8;
+    let mut rng = Rng::new(77);
+    let lens = ddp_tensor_lens(&mut rng);
+    let n_tensors = lens.len();
+    let total_bytes: usize = lens.iter().sum::<usize>() * 4;
+    let inputs: Vec<Vec<Vec<f32>>> = (0..p)
+        .map(|_| {
+            lens.iter()
+                .map(|&n| (0..n).map(|_| rng.f32()).collect())
+                .collect()
+        })
+        .collect();
+    let comm = Communicator::builder(p).build().unwrap();
+
+    println!("\n== bucketed vs sequential multi-tensor allreduce ==");
+    println!("P={p}, {n_tensors} tensors, {total_bytes} B/rank");
+    bench("multi/sequential-loop", Duration::from_secs(2), || {
+        for ti in 0..n_tensors {
+            let single: Vec<Vec<f32>> = (0..p).map(|r| inputs[r][ti].clone()).collect();
+            black_box(
+                comm.allreduce(&single, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+                    .unwrap(),
+            );
+        }
+    });
+    bench("multi/bucketed-pipelined", Duration::from_secs(2), || {
+        black_box(
+            comm.allreduce_many(&inputs, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+                .unwrap(),
+        );
+    });
+
+    // Fixed-iteration means for the tracked JSON artifact.
+    let seq_s = time_mean(3, || {
+        for ti in 0..n_tensors {
+            let single: Vec<Vec<f32>> = (0..p).map(|r| inputs[r][ti].clone()).collect();
+            black_box(
+                comm.allreduce(&single, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+                    .unwrap(),
+            );
+        }
+    });
+    let bucketed_s = time_mean(3, || {
+        black_box(
+            comm.allreduce_many(&inputs, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+                .unwrap(),
+        );
+    });
+    let json = format!(
+        "{{\n  \"bench\": \"bucketing\",\n  \"p\": {p},\n  \"tensors\": {n_tensors},\n  \
+         \"total_bytes_per_rank\": {total_bytes},\n  \"sequential_s\": {seq_s:.6e},\n  \
+         \"bucketed_s\": {bucketed_s:.6e},\n  \"speedup\": {:.3}\n}}\n",
+        seq_s / bucketed_s
+    );
+    std::fs::write("BENCH_bucketing.json", &json).expect("write BENCH_bucketing.json");
+    println!(
+        "bucketed {} vs sequential {} → speedup {:.2}× (BENCH_bucketing.json)",
+        fmt_t(bucketed_s),
+        fmt_t(seq_s),
+        seq_s / bucketed_s
+    );
 }
 
 fn main() {
@@ -45,6 +136,18 @@ fn main() {
         65536,
     );
     println!("effective γ (native, 64k chunks): {g_native:.2e} s/B (paper Table 2: 2.0e-10)");
+
+    bench_bucketing();
+
+    #[cfg(feature = "pjrt")]
+    bench_pjrt(&mut rng, budget);
+    #[cfg(not(feature = "pjrt"))]
+    println!("\n== PJRT/Pallas reducer == skipped (built without the `pjrt` feature)");
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt(rng: &mut Rng, budget: Duration) {
+    use permallreduce::runtime::ReduceEngine;
 
     println!("\n== PJRT/Pallas reducer ==");
     match ReduceEngine::from_artifacts() {
@@ -94,6 +197,6 @@ fn main() {
                 black_box(acc);
             });
         }
-        Err(e) => println!("skipped (artifacts missing?): {e:#}"),
+        Err(e) => println!("skipped (artifacts missing?): {e}"),
     }
 }

@@ -122,6 +122,7 @@ pub fn build(
         init,
         steps,
         result,
+        lanes: base.lanes,
         name: format!("segmented(P={p},r={r},slabs={slabs})"),
     })
 }

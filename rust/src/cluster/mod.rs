@@ -14,8 +14,8 @@
 pub mod persistent;
 pub mod reducer;
 
-pub use persistent::PersistentCluster;
-pub use reducer::{NativeReducer, Reducer};
+pub use persistent::{PersistentCluster, PoolJob};
+pub use reducer::{NativeReducer, ReduceError, Reducer};
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -138,6 +138,17 @@ struct Msg<T> {
     payload: Vec<Vec<T>>,
 }
 
+/// One bucket job for [`ClusterExecutor::execute_many`]: a schedule plus the
+/// per-rank input vectors it reduces. Jobs in one call may use different
+/// schedules (the coordinator resolves a schedule per bucket size) but must
+/// agree on the process count.
+pub struct Job<'a, T> {
+    pub schedule: &'a ProcSchedule,
+    /// `inputs[rank]` — equal lengths within the job; lengths may differ
+    /// across jobs.
+    pub inputs: &'a [Vec<T>],
+}
+
 /// The cluster executor.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterExecutor {
@@ -164,7 +175,8 @@ impl ClusterExecutor {
         op: ReduceOp,
     ) -> Result<Vec<Vec<T>>, ClusterError> {
         let combine = move |dst: &mut [T], src: &[T]| T::combine(op, dst, src);
-        self.execute_with(schedule, inputs, &combine)
+        let mut out = self.execute_many_with(&[Job { schedule, inputs }], &combine)?;
+        Ok(out.pop().expect("one job in, one result out"))
     }
 
     /// Run with a custom f32 reducer (e.g. the PJRT-backed Pallas kernel).
@@ -180,28 +192,63 @@ impl ClusterExecutor {
                 .combine(op, dst, src)
                 .expect("reducer failed on the hot path")
         };
-        self.execute_with(schedule, inputs, &combine)
+        let mut out = self.execute_many_with(&[Job { schedule, inputs }], &combine)?;
+        Ok(out.pop().expect("one job in, one result out"))
     }
 
-    fn execute_with<T: Element>(
+    /// Run a sequence of bucket jobs in **one** worker dispatch. Workers
+    /// stream from job to job without a global barrier, so a rank that
+    /// finishes bucket `b` starts bucket `b+1`'s sends while slower ranks
+    /// are still draining bucket `b` — the cross-bucket half of the
+    /// pipelined execution path (the within-bucket half is
+    /// [`crate::sched::pipeline`]). Message tags are offset by the preceding
+    /// jobs' step counts, so the protocol stays unambiguous.
+    ///
+    /// Returns `out[job][rank]`.
+    pub fn execute_many<T: Element>(
         &self,
-        schedule: &ProcSchedule,
-        inputs: &[Vec<T>],
+        jobs: &[Job<'_, T>],
+        op: ReduceOp,
+    ) -> Result<Vec<Vec<Vec<T>>>, ClusterError> {
+        let combine = move |dst: &mut [T], src: &[T]| T::combine(op, dst, src);
+        self.execute_many_with(jobs, &combine)
+    }
+
+    fn execute_many_with<T: Element>(
+        &self,
+        jobs: &[Job<'_, T>],
         combine: &(dyn Fn(&mut [T], &[T]) + Sync),
-    ) -> Result<Vec<Vec<T>>, ClusterError> {
-        let p = schedule.p;
-        if inputs.len() != p {
-            return Err(ClusterError::BadInput(format!(
-                "{} inputs for {p} processes",
-                inputs.len()
-            )));
+    ) -> Result<Vec<Vec<Vec<T>>>, ClusterError> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
         }
-        let n = inputs[0].len();
-        if inputs.iter().any(|v| v.len() != n) {
-            return Err(ClusterError::BadInput("ragged input vectors".into()));
+        let p = jobs[0].schedule.p;
+        for (ji, job) in jobs.iter().enumerate() {
+            if job.schedule.p != p {
+                return Err(ClusterError::BadInput(format!(
+                    "job {ji}: schedule P={} but job 0 has P={p}",
+                    job.schedule.p
+                )));
+            }
+            if job.inputs.len() != p {
+                return Err(ClusterError::BadInput(format!(
+                    "job {ji}: {} inputs for {p} processes",
+                    job.inputs.len()
+                )));
+            }
+            let n = job.inputs[0].len();
+            if job.inputs.iter().any(|v| v.len() != n) {
+                return Err(ClusterError::BadInput(format!(
+                    "job {ji}: ragged input vectors"
+                )));
+            }
         }
-        if n == 0 {
-            return Ok(vec![Vec::new(); p]);
+        // Global step-tag offsets per job.
+        let mut offs = Vec::with_capacity(jobs.len());
+        let mut total_steps = 0usize;
+        for job in jobs {
+            offs.push(total_steps);
+            total_steps += job.schedule.steps.len();
         }
 
         // One inbox per process; senders cloned everywhere.
@@ -214,15 +261,23 @@ impl ClusterExecutor {
         }
 
         let opts = &self.opts;
-        let mut outputs: Vec<Result<Vec<T>, ClusterError>> = Vec::with_capacity(p);
+        let mut outputs: Vec<Result<Vec<Vec<T>>, ClusterError>> = Vec::with_capacity(p);
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(p);
             for proc in 0..p {
                 let rx = rxs[proc].take().unwrap();
                 let txs = txs.clone();
-                let input = &inputs[proc];
+                let wjobs: Vec<WorkerJob<'_, T>> = jobs
+                    .iter()
+                    .zip(&offs)
+                    .map(|(job, &step_off)| WorkerJob {
+                        schedule: job.schedule,
+                        input: &job.inputs[proc],
+                        step_off,
+                    })
+                    .collect();
                 handles.push(scope.spawn(move || {
-                    worker(schedule, proc, input, rx, &txs, combine, opts)
+                    worker(&wjobs, total_steps, proc, rx, &txs, combine, opts)
                 }));
             }
             drop(txs);
@@ -234,21 +289,70 @@ impl ClusterExecutor {
             }
         });
 
-        outputs.into_iter().collect()
+        // Transpose [proc][job] → [job][rank].
+        let per_proc: Vec<Vec<Vec<T>>> = outputs.into_iter().collect::<Result<_, _>>()?;
+        let mut res: Vec<Vec<Vec<T>>> = (0..jobs.len()).map(|_| Vec::with_capacity(p)).collect();
+        for proc_out in per_proc {
+            for (ji, out) in proc_out.into_iter().enumerate() {
+                res[ji].push(out);
+            }
+        }
+        Ok(res)
     }
 }
 
-/// Per-process execution of the schedule.
+/// One job as seen by a single worker thread: the schedule, this rank's
+/// input, and the global step-tag offset of the job's first step.
+struct WorkerJob<'a, T> {
+    schedule: &'a ProcSchedule,
+    input: &'a [T],
+    step_off: usize,
+}
+
+/// Per-process execution of a sequence of jobs (no barrier between jobs).
 fn worker<T: Element>(
-    s: &ProcSchedule,
+    jobs: &[WorkerJob<'_, T>],
+    total_steps: usize,
     proc: usize,
-    input: &[T],
     rx: mpsc::Receiver<Msg<T>>,
     txs: &[mpsc::Sender<Msg<T>>],
     combine: &(dyn Fn(&mut [T], &[T]) + Sync),
     opts: &ExecOptions,
+) -> Result<Vec<Vec<T>>, ClusterError> {
+    // Out-of-order message stash, shared across jobs (a fast peer may
+    // already be sending the next bucket's traffic).
+    let mut pending: HashMap<(usize, usize), Vec<Vec<T>>> = HashMap::new();
+    let mut results = Vec::with_capacity(jobs.len());
+
+    for job in jobs {
+        match run_job(job, total_steps, proc, &rx, txs, combine, opts, &mut pending) {
+            Ok(out) => results.push(out),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(results)
+}
+
+/// Execute one job's schedule on this rank.
+#[allow(clippy::too_many_arguments)]
+fn run_job<T: Element>(
+    job: &WorkerJob<'_, T>,
+    total_steps: usize,
+    proc: usize,
+    rx: &mpsc::Receiver<Msg<T>>,
+    txs: &[mpsc::Sender<Msg<T>>],
+    combine: &(dyn Fn(&mut [T], &[T]) + Sync),
+    opts: &ExecOptions,
+    pending: &mut HashMap<(usize, usize), Vec<Vec<T>>>,
 ) -> Result<Vec<T>, ClusterError> {
+    let s = job.schedule;
+    let input = job.input;
     let n = input.len();
+    if n == 0 {
+        // Nothing to move for this job on any rank (lengths are validated
+        // equal across ranks), so every worker skips it symmetrically.
+        return Ok(Vec::new());
+    }
     let nb = s.max_buf_id() as usize;
     let mut bufs: Vec<Option<Vec<T>>> = vec![None; nb];
 
@@ -257,10 +361,8 @@ fn worker<T: Element>(
         bufs[id as usize] = Some(input[lo..hi].to_vec());
     }
 
-    // Out-of-order message stash.
-    let mut pending: HashMap<(usize, usize), Vec<Vec<T>>> = HashMap::new();
-
-    for (step, st) in s.steps.iter().enumerate() {
+    for (local_step, st) in s.steps.iter().enumerate() {
+        let step = job.step_off + local_step;
         // Move-semantics sends: a buffer that is freed later in this step
         // and not otherwise read can be *taken* into the message instead of
         // cloned — this makes Ring's per-step data movement copy-free.
@@ -331,7 +433,7 @@ fn worker<T: Element>(
                             if msg.step == step && msg.from == from {
                                 break msg.payload;
                             }
-                            if msg.step < step || msg.step > step + s.steps.len() {
+                            if msg.step < step || msg.step > total_steps {
                                 return Err(ClusterError::Protocol {
                                     proc,
                                     detail: format!(
@@ -560,5 +662,60 @@ mod tests {
             )
             .unwrap_err();
         assert!(matches!(err, ClusterError::BadInput(_)));
+    }
+
+    #[test]
+    fn execute_many_matches_per_job_execution() {
+        let exec = ClusterExecutor::new();
+        let p = 6;
+        let ring = Algorithm::new(AlgorithmKind::Ring, p).build(&BuildCtx::default()).unwrap();
+        let bw = Algorithm::new(AlgorithmKind::BwOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        // Mixed schedules and sizes, plus an empty job in the middle.
+        let job_inputs = [
+            inputs(p, 57, 1),
+            inputs(p, 0, 2),
+            inputs(p, 200, 3),
+            inputs(p, 13, 4),
+        ];
+        let scheds = [&ring, &bw, &bw, &ring];
+        let jobs: Vec<Job<'_, f32>> = scheds
+            .iter()
+            .zip(&job_inputs)
+            .map(|(s, ins)| Job {
+                schedule: *s,
+                inputs: ins,
+            })
+            .collect();
+        let got = exec.execute_many(&jobs, ReduceOp::Sum).unwrap();
+        assert_eq!(got.len(), jobs.len());
+        for (ji, ins) in job_inputs.iter().enumerate() {
+            let want = if ins[0].is_empty() {
+                Vec::new()
+            } else {
+                reference_allreduce(ins, ReduceOp::Sum)
+            };
+            for (rank, out) in got[ji].iter().enumerate() {
+                assert_close(out, &want, 1e-5, &format!("job {ji} rank {rank}"));
+            }
+        }
+    }
+
+    #[test]
+    fn execute_many_rejects_mismatched_p() {
+        let exec = ClusterExecutor::new();
+        let s4 = Algorithm::new(AlgorithmKind::Ring, 4).build(&BuildCtx::default()).unwrap();
+        let s3 = Algorithm::new(AlgorithmKind::Ring, 3).build(&BuildCtx::default()).unwrap();
+        let in4 = inputs(4, 8, 9);
+        let in3 = inputs(3, 8, 9);
+        let jobs = [
+            Job { schedule: &s4, inputs: &in4 },
+            Job { schedule: &s3, inputs: &in3 },
+        ];
+        assert!(matches!(
+            exec.execute_many(&jobs, ReduceOp::Sum),
+            Err(ClusterError::BadInput(_))
+        ));
     }
 }

@@ -7,6 +7,12 @@
 //! broadcasts the job (an `Arc` of the schedule + the rank's input) and
 //! collects replies, so steady-state overhead is one channel round-trip.
 //!
+//! [`PersistentCluster::execute_many`] dispatches a whole bucket list in a
+//! single round-trip: each worker runs bucket after bucket with no global
+//! barrier between them (messages are tagged with cumulative step offsets),
+//! which is the cross-bucket pipelining the bucketed
+//! [`crate::coordinator::Communicator::allreduce_many`] path relies on.
+//!
 //! Messages carry a generation tag so an aborted call (timeout) cannot
 //! leak stale traffic into the next one.
 //!
@@ -28,12 +34,19 @@ struct PMsg {
     payload: Vec<Vec<f32>>,
 }
 
+/// One bucket of a pooled multi-bucket call: a schedule plus per-rank
+/// inputs (`inputs[rank]`, equal lengths within the bucket).
+pub struct PoolJob {
+    pub schedule: Arc<ProcSchedule>,
+    pub inputs: Vec<Vec<f32>>,
+}
+
 struct Job {
     gen: u64,
-    schedule: Arc<ProcSchedule>,
-    input: Vec<f32>,
+    /// (schedule, this rank's input) per bucket.
+    buckets: Vec<(Arc<ProcSchedule>, Vec<f32>)>,
     op: ReduceOp,
-    reply: mpsc::Sender<(usize, Result<Vec<f32>, ClusterError>)>,
+    reply: mpsc::Sender<(usize, Result<Vec<Vec<f32>>, ClusterError>)>,
 }
 
 enum Cmd {
@@ -98,49 +111,91 @@ impl PersistentCluster {
         inputs: &[Vec<f32>],
         op: ReduceOp,
     ) -> Result<Vec<Vec<f32>>, ClusterError> {
-        if inputs.len() != self.p || schedule.p != self.p {
-            return Err(ClusterError::BadInput(format!(
-                "{} inputs / schedule P={} for pool of {}",
-                inputs.len(),
-                schedule.p,
-                self.p
-            )));
+        let mut out = self.dispatch(&[(schedule, inputs)], op)?;
+        Ok(out.pop().expect("one job in, one result out"))
+    }
+
+    /// Run a bucket list in one dispatch (see the module docs). Returns
+    /// `out[job][rank]`.
+    pub fn execute_many(
+        &self,
+        jobs: &[PoolJob],
+        op: ReduceOp,
+    ) -> Result<Vec<Vec<Vec<f32>>>, ClusterError> {
+        let refs: Vec<(&Arc<ProcSchedule>, &[Vec<f32>])> = jobs
+            .iter()
+            .map(|j| (&j.schedule, &j.inputs[..]))
+            .collect();
+        self.dispatch(&refs, op)
+    }
+
+    /// Shared dispatch over borrowed jobs: each rank's input is cloned
+    /// exactly once, into its worker's command.
+    fn dispatch(
+        &self,
+        jobs: &[(&Arc<ProcSchedule>, &[Vec<f32>])],
+        op: ReduceOp,
+    ) -> Result<Vec<Vec<Vec<f32>>>, ClusterError> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
         }
-        let n = inputs[0].len();
-        if inputs.iter().any(|v| v.len() != n) {
-            return Err(ClusterError::BadInput("ragged input vectors".into()));
-        }
-        if n == 0 {
-            return Ok(vec![Vec::new(); self.p]);
+        for (ji, (schedule, inputs)) in jobs.iter().enumerate() {
+            if inputs.len() != self.p || schedule.p != self.p {
+                return Err(ClusterError::BadInput(format!(
+                    "job {ji}: {} inputs / schedule P={} for pool of {}",
+                    inputs.len(),
+                    schedule.p,
+                    self.p
+                )));
+            }
+            let n = inputs[0].len();
+            if inputs.iter().any(|v| v.len() != n) {
+                return Err(ClusterError::BadInput(format!(
+                    "job {ji}: ragged input vectors"
+                )));
+            }
         }
         let gen = self
             .gen
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
-        for (proc, input) in inputs.iter().enumerate() {
+        for proc in 0..self.p {
+            let buckets: Vec<(Arc<ProcSchedule>, Vec<f32>)> = jobs
+                .iter()
+                .map(|(schedule, inputs)| ((*schedule).clone(), inputs[proc].clone()))
+                .collect();
             self.cmd_txs[proc]
                 .send(Cmd::Job(Box::new(Job {
                     gen,
-                    schedule: schedule.clone(),
-                    input: input.clone(),
+                    buckets,
                     op,
                     reply: reply_tx.clone(),
                 })))
                 .map_err(|_| ClusterError::WorkerPanic { proc })?;
         }
         drop(reply_tx);
-        let mut outs: Vec<Option<Vec<f32>>> = vec![None; self.p];
+        let mut per_proc: Vec<Option<Vec<Vec<f32>>>> = vec![None; self.p];
+        let deadline = self.recv_timeout * (jobs.len() as u32 + 1);
         for _ in 0..self.p {
             let (proc, res) = reply_rx
-                .recv_timeout(self.recv_timeout * 2)
+                .recv_timeout(deadline)
                 .map_err(|_| ClusterError::RecvTimeout {
                     proc: usize::MAX,
                     step: 0,
                     from: usize::MAX,
                 })?;
-            outs[proc] = Some(res?);
+            per_proc[proc] = Some(res?);
         }
-        Ok(outs.into_iter().map(|o| o.unwrap()).collect())
+        // Transpose [proc][job] → [job][rank].
+        let mut res: Vec<Vec<Vec<f32>>> = (0..jobs.len())
+            .map(|_| Vec::with_capacity(self.p))
+            .collect();
+        for outs in per_proc {
+            for (ji, out) in outs.expect("all replies collected").into_iter().enumerate() {
+                res[ji].push(out);
+            }
+        }
+        Ok(res)
     }
 }
 
@@ -170,7 +225,7 @@ fn worker_loop(
             Cmd::Job(j) => j,
             Cmd::Shutdown => break,
         };
-        let res = run_one(
+        let res = run_many(
             proc,
             &job,
             &msg_rx,
@@ -182,126 +237,140 @@ fn worker_loop(
     }
 }
 
-fn run_one(
+/// Run every bucket of `job` back to back; message step tags carry the
+/// cumulative offset of the preceding buckets so `(gen, step, from)` stays
+/// unique across the whole call.
+fn run_many(
     proc: usize,
     job: &Job,
     msg_rx: &mpsc::Receiver<PMsg>,
     peers: &[mpsc::Sender<PMsg>],
     recv_timeout: Duration,
     bufs: &mut Vec<Option<Vec<f32>>>,
-) -> Result<Vec<f32>, ClusterError> {
-    let s = &job.schedule;
-    let input = &job.input;
+) -> Result<Vec<Vec<f32>>, ClusterError> {
     let op = job.op;
     let gen = job.gen;
-    let n = input.len();
-    let nb = s.max_buf_id() as usize;
-    bufs.clear();
-    bufs.resize(nb, None);
-
-    for &(id, seg) in &s.init[proc] {
-        let (lo, hi) = s.unit_to_elems(seg, n);
-        bufs[id as usize] = Some(input[lo..hi].to_vec());
-    }
-
     let mut pending: HashMap<(usize, usize), Vec<Vec<f32>>> = HashMap::new();
+    let mut outs = Vec::with_capacity(job.buckets.len());
+    let mut step_off = 0usize;
 
-    for (step, st) in s.steps.iter().enumerate() {
-        let ops = &st.ops[proc];
-        // Same move-semantics send optimization as the scoped executor.
-        let mut takeable: Vec<BufId> = Vec::new();
-        for m in ops.iter().flat_map(|o| o.micro()) {
-            if let MicroOp::Free { buf } = m {
-                takeable.push(buf);
-            }
+    for (s, input) in &job.buckets {
+        let n = input.len();
+        if n == 0 {
+            // Symmetric skip on every rank (lengths validated equal).
+            outs.push(Vec::new());
+            step_off += s.steps.len();
+            continue;
         }
-        takeable.retain(|b| {
-            ops.iter().flat_map(|o| o.micro()).all(|m| match m {
-                MicroOp::Reduce { dst, src } => dst != *b && src != *b,
-                MicroOp::Copy { src, .. } => src != *b,
-                _ => true,
-            })
-        });
+        let nb = s.max_buf_id() as usize;
+        bufs.clear();
+        bufs.resize(nb, None);
 
-        for m in ops.iter().flat_map(|o| o.micro()) {
-            match m {
-                MicroOp::Send { to, bufs: ids } => {
-                    let payload: Vec<Vec<f32>> = ids
-                        .iter()
-                        .map(|&b| {
-                            if takeable.contains(&b) {
-                                bufs[b as usize].take().expect("send of dead buffer")
-                            } else {
-                                bufs[b as usize]
-                                    .as_ref()
-                                    .expect("send of dead buffer")
-                                    .clone()
-                            }
-                        })
-                        .collect();
-                    let _ = peers[to].send(PMsg {
-                        gen,
-                        step,
-                        from: proc,
-                        payload,
-                    });
+        for &(id, seg) in &s.init[proc] {
+            let (lo, hi) = s.unit_to_elems(seg, n);
+            bufs[id as usize] = Some(input[lo..hi].to_vec());
+        }
+
+        for (local_step, st) in s.steps.iter().enumerate() {
+            let step = step_off + local_step;
+            let ops = &st.ops[proc];
+            // Same move-semantics send optimization as the scoped executor.
+            let mut takeable: Vec<BufId> = Vec::new();
+            for m in ops.iter().flat_map(|o| o.micro()) {
+                if let MicroOp::Free { buf } = m {
+                    takeable.push(buf);
                 }
-                MicroOp::Recv { from, bufs: ids } => {
-                    let payload = match pending.remove(&(step, from)) {
-                        Some(pl) => pl,
-                        None => loop {
-                            let msg = msg_rx.recv_timeout(recv_timeout).map_err(|_| {
-                                ClusterError::RecvTimeout {
-                                    proc,
-                                    step,
-                                    from,
+            }
+            takeable.retain(|b| {
+                ops.iter().flat_map(|o| o.micro()).all(|m| match m {
+                    MicroOp::Reduce { dst, src } => dst != *b && src != *b,
+                    MicroOp::Copy { src, .. } => src != *b,
+                    _ => true,
+                })
+            });
+
+            for m in ops.iter().flat_map(|o| o.micro()) {
+                match m {
+                    MicroOp::Send { to, bufs: ids } => {
+                        let payload: Vec<Vec<f32>> = ids
+                            .iter()
+                            .map(|&b| {
+                                if takeable.contains(&b) {
+                                    bufs[b as usize].take().expect("send of dead buffer")
+                                } else {
+                                    bufs[b as usize]
+                                        .as_ref()
+                                        .expect("send of dead buffer")
+                                        .clone()
                                 }
-                            })?;
-                            if msg.gen != gen {
-                                // Stale traffic from an aborted call.
-                                continue;
-                            }
-                            if msg.step == step && msg.from == from {
-                                break msg.payload;
-                            }
-                            pending.insert((msg.step, msg.from), msg.payload);
-                        },
-                    };
-                    if payload.len() != ids.len() {
-                        return Err(ClusterError::Protocol {
-                            proc,
-                            detail: format!("step {step}: arity mismatch"),
+                            })
+                            .collect();
+                        let _ = peers[to].send(PMsg {
+                            gen,
+                            step,
+                            from: proc,
+                            payload,
                         });
                     }
-                    for (&b, chunk) in ids.iter().zip(payload) {
-                        bufs[b as usize] = Some(chunk);
+                    MicroOp::Recv { from, bufs: ids } => {
+                        let payload = match pending.remove(&(step, from)) {
+                            Some(pl) => pl,
+                            None => loop {
+                                let msg = msg_rx.recv_timeout(recv_timeout).map_err(|_| {
+                                    ClusterError::RecvTimeout {
+                                        proc,
+                                        step,
+                                        from,
+                                    }
+                                })?;
+                                if msg.gen != gen {
+                                    // Stale traffic from an aborted call.
+                                    continue;
+                                }
+                                if msg.step == step && msg.from == from {
+                                    break msg.payload;
+                                }
+                                pending.insert((msg.step, msg.from), msg.payload);
+                            },
+                        };
+                        if payload.len() != ids.len() {
+                            return Err(ClusterError::Protocol {
+                                proc,
+                                detail: format!("step {step}: arity mismatch"),
+                            });
+                        }
+                        for (&b, chunk) in ids.iter().zip(payload) {
+                            bufs[b as usize] = Some(chunk);
+                        }
                     }
-                }
-                MicroOp::Reduce { dst, src } => {
-                    let mut d = bufs[dst as usize].take().expect("reduce into dead buffer");
-                    let sv = bufs[src as usize].as_ref().expect("reduce from dead buffer");
-                    <f32 as Element>::combine(op, &mut d, sv);
-                    bufs[dst as usize] = Some(d);
-                }
-                MicroOp::Copy { dst, src } => {
-                    let c = bufs[src as usize]
-                        .as_ref()
-                        .expect("copy of dead buffer")
-                        .clone();
-                    bufs[dst as usize] = Some(c);
-                }
-                MicroOp::Free { buf } => {
-                    bufs[buf as usize] = None;
+                    MicroOp::Reduce { dst, src } => {
+                        let mut d = bufs[dst as usize].take().expect("reduce into dead buffer");
+                        let sv = bufs[src as usize].as_ref().expect("reduce from dead buffer");
+                        <f32 as Element>::combine(op, &mut d, sv);
+                        bufs[dst as usize] = Some(d);
+                    }
+                    MicroOp::Copy { dst, src } => {
+                        let c = bufs[src as usize]
+                            .as_ref()
+                            .expect("copy of dead buffer")
+                            .clone();
+                        bufs[dst as usize] = Some(c);
+                    }
+                    MicroOp::Free { buf } => {
+                        bufs[buf as usize] = None;
+                    }
                 }
             }
         }
-    }
 
-    let mut out = Vec::with_capacity(n);
-    for &b in &s.result[proc] {
-        out.extend_from_slice(bufs[b as usize].as_ref().expect("result buffer dead"));
+        let mut out = Vec::with_capacity(n);
+        for &b in &s.result[proc] {
+            out.extend_from_slice(bufs[b as usize].as_ref().expect("result buffer dead"));
+        }
+        outs.push(out);
+        step_off += s.steps.len();
     }
-    Ok(out)
+    Ok(outs)
 }
 
 #[cfg(test)]
@@ -368,5 +437,79 @@ mod tests {
             pool.execute(&s, &xs, ReduceOp::Sum),
             Err(ClusterError::BadInput(_))
         ));
+    }
+
+    #[test]
+    fn pool_bucket_list_matches_per_bucket_calls() {
+        let p = 5;
+        let pool = PersistentCluster::new(p);
+        let mut rng = Rng::new(0xB0C);
+        let s_bw = Arc::new(
+            Algorithm::new(AlgorithmKind::BwOptimal, p)
+                .build(&BuildCtx::default())
+                .unwrap(),
+        );
+        let s_ring = Arc::new(
+            Algorithm::new(AlgorithmKind::Ring, p)
+                .build(&BuildCtx::default())
+                .unwrap(),
+        );
+        // Mixed schedules, mixed sizes, one empty bucket in the middle.
+        let sizes = [64usize, 0, 333, 17];
+        let scheds = [&s_bw, &s_ring, &s_bw, &s_ring];
+        let jobs: Vec<PoolJob> = sizes
+            .iter()
+            .zip(scheds)
+            .map(|(&n, s)| PoolJob {
+                schedule: s.clone(),
+                inputs: (0..p)
+                    .map(|_| (0..n).map(|_| rng.f32()).collect())
+                    .collect(),
+            })
+            .collect();
+        let got = pool.execute_many(&jobs, ReduceOp::Sum).unwrap();
+        assert_eq!(got.len(), jobs.len());
+        for (ji, job) in jobs.iter().enumerate() {
+            let want = if job.inputs[0].is_empty() {
+                Vec::new()
+            } else {
+                reference_allreduce(&job.inputs, ReduceOp::Sum)
+            };
+            for rank in 0..p {
+                assert_eq!(got[ji][rank].len(), want.len(), "job {ji} rank {rank}");
+                for (g, w) in got[ji][rank].iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "job {ji} rank {rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_bucket_list_with_pipelined_schedules() {
+        use crate::sched::pipeline;
+        let p = 6;
+        let pool = PersistentCluster::new(p);
+        let base = Algorithm::new(AlgorithmKind::BwOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let pipelined = Arc::new(pipeline::expand(&base, 3).unwrap());
+        let mut rng = Rng::new(0xF1F);
+        let jobs: Vec<PoolJob> = (0..3)
+            .map(|_| PoolJob {
+                schedule: pipelined.clone(),
+                inputs: (0..p)
+                    .map(|_| (0..200).map(|_| rng.f32()).collect())
+                    .collect(),
+            })
+            .collect();
+        let got = pool.execute_many(&jobs, ReduceOp::Sum).unwrap();
+        for (ji, job) in jobs.iter().enumerate() {
+            let want = reference_allreduce(&job.inputs, ReduceOp::Sum);
+            for rank in 0..p {
+                for (g, w) in got[ji][rank].iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "job {ji} rank {rank}");
+                }
+            }
+        }
     }
 }

@@ -6,13 +6,17 @@
 //! * [`NativeReducer`] — in-crate vectorizable loops (the default and the
 //!   baseline of the §Perf ablation);
 //! * `runtime::PjrtReducer` — the AOT-compiled Pallas kernel executed
-//!   through the PJRT CPU client (the three-layer path).
+//!   through the PJRT CPU client (the three-layer path, `pjrt` feature).
 
 use crate::cluster::ReduceOp;
 
+/// Error produced by a reduction backend (human-readable; the offline image
+/// has no error-handling crates, so a plain string carries the detail).
+pub type ReduceError = String;
+
 /// A combine backend: `dst ⊕= src`.
 pub trait Reducer: Send + Sync {
-    fn combine(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> anyhow::Result<()>;
+    fn combine(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> Result<(), ReduceError>;
 
     /// Human-readable backend name (for metrics / bench labels).
     fn name(&self) -> &str;
@@ -23,13 +27,14 @@ pub trait Reducer: Send + Sync {
 pub struct NativeReducer;
 
 impl Reducer for NativeReducer {
-    fn combine(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            dst.len() == src.len(),
-            "length mismatch: {} vs {}",
-            dst.len(),
-            src.len()
-        );
+    fn combine(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> Result<(), ReduceError> {
+        if dst.len() != src.len() {
+            return Err(format!(
+                "length mismatch: {} vs {}",
+                dst.len(),
+                src.len()
+            ));
+        }
         match op {
             ReduceOp::Sum => dst.iter_mut().zip(src).for_each(|(d, &s)| *d += s),
             ReduceOp::Prod => dst.iter_mut().zip(src).for_each(|(d, &s)| *d *= s),

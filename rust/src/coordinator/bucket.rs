@@ -1,0 +1,190 @@
+//! Gradient bucketing: packing a list of tensors into fixed-byte buckets.
+//!
+//! Production DDP systems (PyTorch DDP, Horovod) fuse many small gradient
+//! tensors into buckets before collective communication, because a
+//! per-tensor Allreduce pays the full `steps·α` latency term of eq. 36 for
+//! every tensor. This module provides the planning and the exact
+//! pack/unpack round-trip the bucketed
+//! [`crate::coordinator::Communicator::allreduce_many`] path is built on:
+//!
+//! * [`plan`] greedily groups consecutive whole tensors into buckets of at
+//!   most `bucket_bytes` (a tensor larger than the cap gets a bucket of its
+//!   own — tensors are never split, which keeps unpacking trivially exact);
+//! * [`pack`] / [`unpack`] round-trip tensors through a bucket's flat
+//!   vector bit-exactly, including zero-length tensors;
+//! * [`optimal_bucket_bytes`] sizes buckets from the α/β trade-off of the
+//!   cost model (eq. 36): each extra bucket costs one more `2⌈log P⌉·α`
+//!   latency envelope, so buckets are sized to keep that envelope at a
+//!   small fraction of the bucket's `2m·β` wire time.
+
+use crate::cost::NetParams;
+use crate::util::ceil_log2;
+
+/// A contiguous run of tensors packed into one flat vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    /// Index range into the tensor list.
+    pub tensors: std::ops::Range<usize>,
+    /// Total elements across the bucket's tensors.
+    pub elems: usize,
+}
+
+/// The full bucketing of a tensor list.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    pub buckets: Vec<Bucket>,
+}
+
+impl BucketPlan {
+    /// Total elements across all buckets.
+    pub fn total_elems(&self) -> usize {
+        self.buckets.iter().map(|b| b.elems).sum()
+    }
+}
+
+/// Greedily pack tensors (in order) into buckets of at most `bucket_bytes`.
+///
+/// Invariants (checked by the property tests):
+/// * bucket ranges tile `0..lens.len()` contiguously, in order;
+/// * a bucket exceeds `bucket_bytes` only when it holds a single tensor
+///   that is itself larger than the cap;
+/// * an empty tensor list produces an empty plan.
+pub fn plan(lens: &[usize], elem_bytes: usize, bucket_bytes: usize) -> BucketPlan {
+    let cap_elems = (bucket_bytes / elem_bytes.max(1)).max(1);
+    let mut buckets = Vec::new();
+    let mut start = 0usize;
+    let mut elems = 0usize;
+    for (i, &l) in lens.iter().enumerate() {
+        if elems > 0 && elems + l > cap_elems {
+            buckets.push(Bucket {
+                tensors: start..i,
+                elems,
+            });
+            start = i;
+            elems = 0;
+        }
+        elems += l;
+    }
+    if start < lens.len() {
+        buckets.push(Bucket {
+            tensors: start..lens.len(),
+            elems,
+        });
+    }
+    BucketPlan { buckets }
+}
+
+/// Flatten one rank's tensors covered by `bucket` into a contiguous vector.
+pub fn pack<T: Copy>(tensors: &[Vec<T>], bucket: &Bucket) -> Vec<T> {
+    let mut flat = Vec::with_capacity(bucket.elems);
+    for t in &tensors[bucket.tensors.clone()] {
+        flat.extend_from_slice(t);
+    }
+    flat
+}
+
+/// Split a bucket's flat vector back into tensors of the given lengths
+/// (exact inverse of [`pack`] for the same bucket).
+pub fn unpack<T: Copy>(flat: &[T], lens: &[usize]) -> Result<Vec<Vec<T>>, String> {
+    let total: usize = lens.iter().sum();
+    if total != flat.len() {
+        return Err(format!(
+            "unpack: bucket has {} elements but tensor lengths sum to {total}",
+            flat.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(lens.len());
+    let mut off = 0usize;
+    for &l in lens {
+        out.push(flat[off..off + l].to_vec());
+        off += l;
+    }
+    Ok(out)
+}
+
+/// Cost-model-driven bucket size (eq. 36's α/β trade-off).
+///
+/// Splitting an `M`-byte gradient set into buckets of `m` bytes costs
+/// `(M/m)·2⌈log P⌉·α` extra latency while the `≈2M·β` wire time is
+/// invariant, so the latency overhead fraction is `2⌈log P⌉·α / (2m·β)`.
+/// We size buckets to cap that fraction at 10%, clamped to a practical
+/// `[64 KiB, 64 MiB]` range (the lower clamp keeps per-step chunks from
+/// degenerating, the upper keeps buckets overlappable).
+pub fn optimal_bucket_bytes(p: usize, params: &NetParams) -> usize {
+    const OVERHEAD_FRACTION: f64 = 0.1;
+    let steps = 2.0 * ceil_log2(p.max(2)) as f64;
+    let m = steps * params.alpha / (OVERHEAD_FRACTION * 2.0 * params.beta);
+    (m as usize).clamp(64 << 10, 64 << 20)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_tiles_and_respects_cap() {
+        let lens = [10usize, 20, 0, 5, 100, 1, 1, 1];
+        let p = plan(&lens, 4, 30 * 4);
+        // Contiguous tiling.
+        let mut cursor = 0;
+        for b in &p.buckets {
+            assert_eq!(b.tensors.start, cursor);
+            cursor = b.tensors.end;
+            assert_eq!(
+                b.elems,
+                lens[b.tensors.clone()].iter().sum::<usize>()
+            );
+            // Cap respected unless the bucket is a single oversized tensor.
+            assert!(b.elems <= 30 || b.tensors.len() == 1, "{b:?}");
+        }
+        assert_eq!(cursor, lens.len());
+        assert_eq!(p.total_elems(), lens.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn plan_of_empty_list_is_empty() {
+        assert!(plan(&[], 4, 1024).buckets.is_empty());
+    }
+
+    #[test]
+    fn plan_all_empty_tensors_single_bucket() {
+        let p = plan(&[0, 0, 0], 4, 1024);
+        assert_eq!(p.buckets.len(), 1);
+        assert_eq!(p.buckets[0].tensors, 0..3);
+        assert_eq!(p.buckets[0].elems, 0);
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        let tensors = vec![
+            vec![1.0f32, 2.0],
+            vec![],
+            vec![3.0, 4.0, 5.0],
+            vec![6.0],
+        ];
+        let lens: Vec<usize> = tensors.iter().map(|t| t.len()).collect();
+        let p = plan(&lens, 4, 3 * 4);
+        let mut rebuilt: Vec<Vec<f32>> = Vec::new();
+        for b in &p.buckets {
+            let flat = pack(&tensors, b);
+            assert_eq!(flat.len(), b.elems);
+            rebuilt.extend(unpack(&flat, &lens[b.tensors.clone()]).unwrap());
+        }
+        assert_eq!(rebuilt, tensors);
+    }
+
+    #[test]
+    fn unpack_rejects_wrong_total() {
+        assert!(unpack(&[1.0f32, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn optimal_bucket_bytes_in_clamp_range_and_grows_with_p() {
+        let params = NetParams::table2();
+        let small = optimal_bucket_bytes(4, &params);
+        let big = optimal_bucket_bytes(1024, &params);
+        assert!((64 << 10..=64 << 20).contains(&small));
+        assert!((64 << 10..=64 << 20).contains(&big));
+        assert!(big >= small, "more processes → more steps → bigger buckets");
+    }
+}

@@ -11,16 +11,25 @@
 //! α/β/γ feed eq. 36/37 to pick the optimal step count `r`
 //! ([`AlgorithmKind::GeneralizedAuto`]), or [`Communicator::auto_select`]
 //! picks the globally cheapest algorithm for a given message size.
+//!
+//! For multi-tensor workloads (DDP gradient lists),
+//! [`Communicator::allreduce_many`] packs the tensors into cost-model-sized
+//! buckets ([`bucket`]), expands each bucket's schedule into a
+//! segment-pipelined one ([`crate::sched::pipeline`]), and executes the
+//! whole bucket list in a single cluster dispatch with no barrier between
+//! buckets.
+
+pub mod bucket;
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
-use crate::cluster::{ClusterExecutor, Element, ReduceOp, Reducer};
+use crate::cluster::{self, ClusterExecutor, Element, ReduceOp, Reducer};
 use crate::cost::{optimal_r, CostModel, NetParams};
 use crate::perm::{Group, Permutation};
-use crate::sched::{stats::stats, verify::verify, ProcSchedule};
+use crate::sched::{pipeline, stats::stats, verify::verify, ProcSchedule};
 
 /// Per-call metrics.
 #[derive(Clone, Debug)]
@@ -49,6 +58,46 @@ pub struct AllreduceOutput<T = f32> {
     pub metrics: Metrics,
 }
 
+/// Aggregated metrics of one bucketed multi-tensor Allreduce.
+#[derive(Clone, Debug)]
+pub struct ManyMetrics {
+    /// Per-bucket metrics (bucket exec wall time is not measured
+    /// individually — buckets overlap — so each entry's `exec_seconds` is 0
+    /// and the call-level wall time lives in
+    /// [`ManyMetrics::exec_seconds`]).
+    pub buckets: Vec<Metrics>,
+    /// Number of input tensors.
+    pub n_tensors: usize,
+    /// Total payload bytes across all tensors (one rank).
+    pub total_bytes: usize,
+    /// The bucket byte cap used for planning.
+    pub bucket_bytes: usize,
+    /// The largest pipeline depth applied to any bucket.
+    pub segments: u32,
+    /// Wall-clock execution time of the whole bucket list, seconds.
+    pub exec_seconds: f64,
+}
+
+impl ManyMetrics {
+    /// Sum of the per-bucket closed-form estimates.
+    pub fn predicted_seconds(&self) -> f64 {
+        self.buckets.iter().map(|m| m.predicted_seconds).sum()
+    }
+
+    /// Sum of the per-bucket critical-path bytes.
+    pub fn critical_bytes_sent(&self) -> u64 {
+        self.buckets.iter().map(|m| m.critical_bytes_sent).sum()
+    }
+}
+
+/// Result of one bucketed multi-tensor Allreduce.
+#[derive(Clone, Debug)]
+pub struct AllreduceManyOutput<T = f32> {
+    /// `ranks[rank][tensor]` — every rank holds identical tensor contents.
+    pub ranks: Vec<Vec<Vec<T>>>,
+    pub metrics: ManyMetrics,
+}
+
 /// Builder for [`Communicator`].
 pub struct CommunicatorBuilder {
     p: usize,
@@ -56,6 +105,8 @@ pub struct CommunicatorBuilder {
     h: Option<Permutation>,
     params: NetParams,
     openmpi_threshold: usize,
+    bucket_bytes: Option<usize>,
+    segments: Option<u32>,
 }
 
 impl CommunicatorBuilder {
@@ -73,6 +124,18 @@ impl CommunicatorBuilder {
     }
     pub fn openmpi_threshold(mut self, t: usize) -> Self {
         self.openmpi_threshold = t;
+        self
+    }
+    /// Fixed bucket byte cap for [`Communicator::allreduce_many`]
+    /// (default: [`bucket::optimal_bucket_bytes`] from the cost model).
+    pub fn bucket_bytes(mut self, bytes: usize) -> Self {
+        self.bucket_bytes = Some(bytes.max(1));
+        self
+    }
+    /// Fixed pipeline depth for [`Communicator::allreduce_many`] (default:
+    /// auto from the bucket size; `1` disables segment pipelining).
+    pub fn pipeline_segments(mut self, s: u32) -> Self {
+        self.segments = Some(s.max(1));
         self
     }
 
@@ -95,6 +158,8 @@ impl CommunicatorBuilder {
             h,
             params: self.params,
             openmpi_threshold: self.openmpi_threshold,
+            bucket_bytes: self.bucket_bytes,
+            segments: self.segments,
             exec: ClusterExecutor::new(),
             cache: Mutex::new(HashMap::new()),
         })
@@ -108,8 +173,11 @@ pub struct Communicator {
     h: Permutation,
     params: NetParams,
     openmpi_threshold: usize,
+    bucket_bytes: Option<usize>,
+    segments: Option<u32>,
     exec: ClusterExecutor,
-    /// Schedule cache keyed by resolved algorithm label.
+    /// Schedule cache keyed by resolved algorithm label (base schedules)
+    /// or label + pipeline depth (pipelined expansions).
     cache: Mutex<HashMap<String, std::sync::Arc<ProcSchedule>>>,
 }
 
@@ -121,6 +189,8 @@ impl Communicator {
             h: None,
             params: NetParams::table2(),
             openmpi_threshold: 10 * 1024,
+            bucket_bytes: None,
+            segments: None,
         }
     }
 
@@ -221,6 +291,39 @@ impl Communicator {
         Ok((arc, dt))
     }
 
+    /// Build (or fetch from cache) the `segments`-deep pipelined expansion
+    /// of the schedule for `kind`; the expansion is re-verified so the
+    /// symbolic proof covers exactly what the cluster executes.
+    pub fn pipelined_schedule(
+        &self,
+        kind: AlgorithmKind,
+        m_bytes: usize,
+        segments: u32,
+    ) -> Result<(std::sync::Arc<ProcSchedule>, f64), String> {
+        let (base, mut build_seconds) = self.schedule(kind, m_bytes)?;
+        if segments <= 1 {
+            return Ok((base, build_seconds));
+        }
+        let label = format!("{}-pipeS{segments}", base.name);
+        if let Some(s) = self.cache.lock().unwrap().get(&label) {
+            return Ok((s.clone(), build_seconds));
+        }
+        let t0 = Instant::now();
+        let s = pipeline::expand(&base, segments)?;
+        verify(&s).map_err(|e| format!("pipelined schedule failed verification: {e}"))?;
+        build_seconds += t0.elapsed().as_secs_f64();
+        let arc = std::sync::Arc::new(s);
+        self.cache.lock().unwrap().insert(label, arc.clone());
+        Ok((arc, build_seconds))
+    }
+
+    /// Pipeline-depth heuristic: a segment only pays for its extra α
+    /// envelope (eq. 36's latency term) once it still carries enough bytes,
+    /// so keep segments ≥ 64 KiB and cap the depth at 4.
+    fn auto_segments(m_bytes: usize) -> u32 {
+        (m_bytes / (64 << 10)).clamp(1, 4) as u32
+    }
+
     /// Allreduce over the simulated cluster with the native reducer.
     pub fn allreduce<T: Element>(
         &self,
@@ -239,6 +342,109 @@ impl Communicator {
         Ok(AllreduceOutput {
             ranks,
             metrics: self.metrics(&schedule, m_bytes, kind, build_seconds, exec_seconds),
+        })
+    }
+
+    /// Bucketed, pipelined Allreduce over a **list of tensors** per rank —
+    /// the DDP gradient-sync workload shape.
+    ///
+    /// `inputs[rank][tensor]`: every rank contributes the same tensor count
+    /// with matching per-tensor lengths. The tensors are packed into
+    /// cost-model-sized buckets ([`bucket::plan`]); each bucket gets a
+    /// verified segment-pipelined schedule
+    /// ([`Communicator::pipelined_schedule`]) and the whole bucket list
+    /// runs in a single cluster dispatch with no inter-bucket barrier
+    /// ([`ClusterExecutor::execute_many`]). Results are unpacked back into
+    /// the original tensor shapes bit-exactly.
+    ///
+    /// The result equals a per-tensor [`Communicator::allreduce`] loop: to
+    /// rounding for `Sum`/`Prod` (the bucket/segment boundaries regroup
+    /// float additions), bitwise for the order-insensitive `Max`/`Min` —
+    /// with the usual IEEE caveat that a `Max`/`Min` tie between `+0.0`
+    /// and `-0.0` (or the presence of NaN) resolves by fold order, which
+    /// schedule shape may change.
+    pub fn allreduce_many<T: Element>(
+        &self,
+        inputs: &[Vec<Vec<T>>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<AllreduceManyOutput<T>, String> {
+        let p = self.p;
+        if inputs.len() != p {
+            return Err(format!(
+                "{} ranks of tensors for communicator of size {p}",
+                inputs.len()
+            ));
+        }
+        let n_tensors = inputs[0].len();
+        let lens: Vec<usize> = inputs[0].iter().map(|t| t.len()).collect();
+        for (rank, tensors) in inputs.iter().enumerate() {
+            if tensors.len() != n_tensors {
+                return Err(format!(
+                    "rank {rank} has {} tensors but rank 0 has {n_tensors}",
+                    tensors.len()
+                ));
+            }
+            for (ti, t) in tensors.iter().enumerate() {
+                if t.len() != lens[ti] {
+                    return Err(format!(
+                        "tensor {ti}: length {} on rank {rank} but {} on rank 0",
+                        t.len(),
+                        lens[ti]
+                    ));
+                }
+            }
+        }
+        let elem_bytes = std::mem::size_of::<T>();
+        let total_bytes = lens.iter().sum::<usize>() * elem_bytes;
+        let bucket_bytes = self
+            .bucket_bytes
+            .unwrap_or_else(|| bucket::optimal_bucket_bytes(p, &self.params));
+        let plan = bucket::plan(&lens, elem_bytes, bucket_bytes);
+
+        let mut scheds = Vec::with_capacity(plan.buckets.len());
+        let mut packed: Vec<Vec<Vec<T>>> = Vec::with_capacity(plan.buckets.len());
+        let mut per_bucket = Vec::with_capacity(plan.buckets.len());
+        let mut max_segments = 0u32;
+        for b in &plan.buckets {
+            let m_bytes = b.elems * elem_bytes;
+            let segments = self.segments.unwrap_or_else(|| Self::auto_segments(m_bytes));
+            max_segments = max_segments.max(segments);
+            let (s, build_seconds) = self.pipelined_schedule(kind, m_bytes.max(1), segments)?;
+            per_bucket.push(self.metrics(&s, m_bytes, kind, build_seconds, 0.0));
+            packed.push(inputs.iter().map(|tensors| bucket::pack(tensors, b)).collect());
+            scheds.push(s);
+        }
+
+        let jobs: Vec<cluster::Job<'_, T>> = scheds
+            .iter()
+            .zip(&packed)
+            .map(|(s, ins)| cluster::Job {
+                schedule: &**s,
+                inputs: &ins[..],
+            })
+            .collect();
+        let t0 = Instant::now();
+        let outs = self.exec.execute_many(&jobs, op).map_err(|e| e.to_string())?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+
+        let mut ranks: Vec<Vec<Vec<T>>> = (0..p).map(|_| Vec::with_capacity(n_tensors)).collect();
+        for (bi, b) in plan.buckets.iter().enumerate() {
+            let bucket_lens = &lens[b.tensors.clone()];
+            for (rank, per_rank) in ranks.iter_mut().enumerate() {
+                per_rank.extend(bucket::unpack(&outs[bi][rank], bucket_lens)?);
+            }
+        }
+        Ok(AllreduceManyOutput {
+            ranks,
+            metrics: ManyMetrics {
+                buckets: per_bucket,
+                n_tensors,
+                total_bytes,
+                bucket_bytes,
+                segments: max_segments,
+                exec_seconds,
+            },
         })
     }
 
@@ -352,6 +558,106 @@ mod tests {
             Err(e) => e,
         };
         assert!(err.contains("order"));
+    }
+
+    #[test]
+    fn allreduce_many_matches_looped_allreduce() {
+        use crate::util::Rng;
+        let p = 5;
+        let mut rng = Rng::new(0xACE);
+        // Tiny bucket cap + fixed pipeline depth exercise multi-bucket,
+        // multi-segment execution even at test sizes.
+        let comm = Communicator::builder(p)
+            .bucket_bytes(64 * 4)
+            .pipeline_segments(2)
+            .build()
+            .unwrap();
+        let lens = [3usize, 40, 0, 129, 7, 64];
+        let inputs: Vec<Vec<Vec<f32>>> = (0..p)
+            .map(|_| {
+                lens.iter()
+                    .map(|&n| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+                    .collect()
+            })
+            .collect();
+        for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+            let many = comm
+                .allreduce_many(&inputs, op, AlgorithmKind::GeneralizedAuto)
+                .unwrap();
+            assert_eq!(many.metrics.n_tensors, lens.len());
+            assert!(many.metrics.buckets.len() > 1, "cap must split into buckets");
+            for (ti, &n) in lens.iter().enumerate() {
+                if n == 0 {
+                    for rank in 0..p {
+                        assert!(many.ranks[rank][ti].is_empty());
+                    }
+                    continue;
+                }
+                let single: Vec<Vec<f32>> =
+                    (0..p).map(|r| inputs[r][ti].clone()).collect();
+                let want = comm
+                    .allreduce(&single, op, AlgorithmKind::GeneralizedAuto)
+                    .unwrap();
+                for rank in 0..p {
+                    let got = &many.ranks[rank][ti];
+                    assert_eq!(got.len(), n);
+                    for (i, (g, w)) in got.iter().zip(&want.ranks[rank]).enumerate() {
+                        match op {
+                            ReduceOp::Max | ReduceOp::Min => assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "{op:?} tensor {ti} rank {rank} elem {i}"
+                            ),
+                            _ => assert!(
+                                (g - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                                "{op:?} tensor {ti} rank {rank} elem {i}: {g} vs {w}"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_many_empty_tensor_list() {
+        let comm = Communicator::builder(3).build().unwrap();
+        let inputs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 3];
+        let out = comm
+            .allreduce_many(&inputs, ReduceOp::Sum, AlgorithmKind::Ring)
+            .unwrap();
+        assert!(out.ranks.iter().all(|r| r.is_empty()));
+        assert_eq!(out.metrics.n_tensors, 0);
+        assert!(out.metrics.buckets.is_empty());
+    }
+
+    #[test]
+    fn allreduce_many_rejects_mismatched_shapes() {
+        let comm = Communicator::builder(2).build().unwrap();
+        // Tensor count mismatch.
+        let bad = vec![vec![vec![1.0f32; 4]], Vec::new()];
+        assert!(comm
+            .allreduce_many(&bad, ReduceOp::Sum, AlgorithmKind::Ring)
+            .is_err());
+        // Length mismatch.
+        let bad = vec![vec![vec![1.0f32; 4]], vec![vec![1.0f32; 5]]];
+        assert!(comm
+            .allreduce_many(&bad, ReduceOp::Sum, AlgorithmKind::Ring)
+            .is_err());
+    }
+
+    #[test]
+    fn pipelined_schedule_cached_and_verified() {
+        let comm = Communicator::builder(6).build().unwrap();
+        let (s1, t1) = comm
+            .pipelined_schedule(AlgorithmKind::BwOptimal, 1 << 20, 3)
+            .unwrap();
+        assert!(s1.lanes > 1, "expansion must be multi-lane");
+        assert!(t1 > 0.0);
+        let (s2, _) = comm
+            .pipelined_schedule(AlgorithmKind::BwOptimal, 1 << 20, 3)
+            .unwrap();
+        assert!(std::sync::Arc::ptr_eq(&s1, &s2), "second build must hit the cache");
     }
 
     #[test]

@@ -52,19 +52,23 @@ pub fn simulate(s: &ProcSchedule, m_bytes: usize, params: &NetParams) -> DesRepo
     let mut total_reduced = 0.0;
 
     for step in &s.steps {
-        // Pass 1: every send is posted at the sender's current clock.
-        // arrival[(from → to)]: time + per-buffer sizes.
-        let mut arrivals: Vec<Option<(usize, f64, Vec<usize>)>> = vec![None; p]; // indexed by receiver
+        // Pass 1: sends are posted at the sender's current clock. A process
+        // with several sends in one step (multi-lane pipelined schedules)
+        // streams them back to back through its single NIC, so message i
+        // starts after the first i−1 payloads have left the wire.
+        // arrivals[to]: list of (from, arrival time, per-buffer sizes).
+        let mut arrivals: Vec<Vec<(usize, f64, Vec<usize>)>> = vec![Vec::new(); p];
         for (proc, ops) in step.ops.iter().enumerate() {
+            let mut streamed = 0.0f64;
             for m in ops.iter().flat_map(|o| o.micro()) {
                 if let MicroOp::Send { to, bufs } = m {
                     let sizes: Vec<usize> =
                         bufs.iter().map(|&b| size[proc][b as usize]).collect();
                     let bytes: usize = sizes.iter().sum();
                     total_bytes += bytes as f64;
-                    let arrival = clock[proc] + params.alpha + params.beta * bytes as f64;
-                    debug_assert!(arrivals[to].is_none(), "receiver {to} gets two messages");
-                    arrivals[to] = Some((proc, arrival, sizes));
+                    streamed += params.beta * bytes as f64;
+                    let arrival = clock[proc] + params.alpha + streamed;
+                    arrivals[to].push((proc, arrival, sizes));
                 }
             }
         }
@@ -74,10 +78,11 @@ pub fn simulate(s: &ProcSchedule, m_bytes: usize, params: &NetParams) -> DesRepo
                 match m {
                     MicroOp::Send { .. } => {}
                     MicroOp::Recv { from, bufs } => {
-                        let (sender, arrival, sizes) = arrivals[proc]
-                            .take()
+                        let idx = arrivals[proc]
+                            .iter()
+                            .position(|&(sender, _, _)| sender == from)
                             .expect("verified schedules always pair send/recv");
-                        debug_assert_eq!(sender, from);
+                        let (_, arrival, sizes) = arrivals[proc].swap_remove(idx);
                         clock[proc] = clock[proc].max(arrival);
                         for (&b, &sz) in bufs.iter().zip(&sizes) {
                             size[proc][b as usize] = sz;

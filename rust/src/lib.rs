@@ -22,14 +22,16 @@
 //! |---|---|
 //! | [`perm`] | permutations, cycle notation, abelian transitive groups (cyclic, hypercube/XOR, direct products) |
 //! | [`sched`] | the process-level schedule IR, legality checks, symbolic verifier, traffic statistics |
+//! | [`sched::pipeline`] | segment-pipelined schedule expansion: `K`-step schedules over `S` slabs in `K + S − 1` multi-lane steps, re-proven by the verifier |
 //! | [`algo`] | schedule builders: naive, ring, the generalized algorithm (bw-opt / intermediate-r / latency-opt), recursive doubling/halving, hybrid, Bruck, OpenMPI-switch |
 //! | [`cost`] | α–β–γ cost model (paper Table 2), closed-form step/byte/time formulas (eqs. 15, 25, 36, 44), optimal-r selection (eq. 37) |
 //! | [`des`] | discrete-event network simulator executing a schedule under the cost model with per-process clocks |
-//! | [`cluster`] | a real multi-threaded message-passing cluster executing schedules on actual data |
-//! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step) and executes them from rust |
+//! | [`cluster`] | a real multi-threaded message-passing cluster executing schedules on actual data; barrier-free multi-bucket dispatch (`execute_many`) |
+//! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step); execution gated behind the `pjrt` feature |
 //! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
+//! | [`coordinator::bucket`] | DDP-style gradient bucketing: cost-model-sized packing with exact pack/unpack round-trips |
 //! | [`figures`] | regenerates every figure of the paper's evaluation section |
-//! | [`util`] | in-tree PRNG / JSON / bitset / property-testing (offline image: no external deps beyond `xla` + `anyhow`) |
+//! | [`util`] | in-tree PRNG / JSON / bitset / property-testing (the offline image has **no** external deps; the optional `pjrt` feature patches in `xla`) |
 //!
 //! ## Quick start
 //!
@@ -45,6 +47,35 @@
 //! let expect: f32 = (0..p).map(|r| r as f32).sum();
 //! for rank in 0..p {
 //!     assert!(out.ranks[rank].iter().all(|&x| (x - expect).abs() < 1e-5));
+//! }
+//! ```
+//!
+//! ## Multi-tensor Allreduce (DDP gradient sync)
+//!
+//! A training step produces many gradient tensors of different sizes; a
+//! per-tensor Allreduce loop pays the full latency envelope for each one.
+//! [`coordinator::Communicator::allreduce_many`] packs the list into
+//! cost-model-sized buckets, pipelines each bucket's schedule over
+//! segments, and runs all buckets in one barrier-free dispatch:
+//!
+//! ```
+//! use permallreduce::prelude::*;
+//!
+//! let p = 4;
+//! // Three tensors of different lengths per rank (e.g. layer gradients).
+//! let inputs: Vec<Vec<Vec<f32>>> = (0..p)
+//!     .map(|r| vec![vec![r as f32; 5], vec![1.0; 33], vec![r as f32; 7]])
+//!     .collect();
+//!
+//! let comm = Communicator::builder(p).build().unwrap();
+//! let out = comm
+//!     .allreduce_many(&inputs, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+//!     .unwrap();
+//! let expect: f32 = (0..p).map(|r| r as f32).sum();
+//! for rank in 0..p {
+//!     assert_eq!(out.ranks[rank].len(), 3); // original shapes restored
+//!     assert!(out.ranks[rank][0].iter().all(|&x| (x - expect).abs() < 1e-5));
+//!     assert!(out.ranks[rank][1].iter().all(|&x| (x - p as f32).abs() < 1e-5));
 //! }
 //! ```
 
@@ -63,8 +94,10 @@ pub mod cli;
 /// Convenient re-exports of the most commonly used types.
 pub mod prelude {
     pub use crate::algo::{Algorithm, AlgorithmKind};
-    pub use crate::cluster::{ClusterExecutor, ReduceOp};
-    pub use crate::coordinator::{Communicator, Metrics};
+    pub use crate::cluster::{ClusterExecutor, PersistentCluster, ReduceOp};
+    pub use crate::coordinator::{
+        AllreduceManyOutput, AllreduceOutput, Communicator, ManyMetrics, Metrics,
+    };
     pub use crate::cost::{CostModel, NetParams};
     pub use crate::des::simulate;
     pub use crate::perm::{Group, Permutation};

@@ -7,25 +7,32 @@
 //! * the DDP transformer train step (L2, `model.py`)
 //!
 //! to **HLO text** under `artifacts/`, with `manifest.json` describing
-//! shapes. This module loads those files through the `xla` crate
-//! (`HloModuleProto::from_text_file` → `XlaComputation` → PJRT compile →
-//! execute) so the request path is pure rust — Python is never invoked at
-//! run time.
+//! shapes. The execution half of this module (PJRT client, compilation,
+//! kernel launches) needs the `xla` crate, which the offline build image
+//! does not ship; it is therefore gated behind the **`pjrt` cargo feature**
+//! (see `Cargo.toml` for how to patch the dependency in). Without the
+//! feature, [`PjrtReduceService`] / [`TrainStepEngine`] are stubs whose
+//! constructors return a descriptive error, so every caller (`gar run
+//! --pjrt`, the quickstart example) degrades gracefully at run time while
+//! the default build stays dependency-free.
 //!
-//! PJRT handles are raw pointers (`!Send`/`!Sync`), so the cluster's worker
-//! threads cannot call an executable directly. [`PjrtReduceService`] owns
-//! the client on a dedicated service thread; [`PjrtReducer`] is a cheap
-//! `Send + Sync` handle implementing [`crate::cluster::Reducer`].
+//! The artifact-manifest layer below is always available: it only needs the
+//! in-tree JSON parser and is what the AOT pipeline tests build against.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
-use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::cluster::{ReduceOp, Reducer};
 use crate::util::json;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtReduceService, PjrtReducer, ReduceEngine, TrainStepEngine};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtReduceService, PjrtReducer, TrainStepEngine};
 
 /// Locate the artifacts directory: `$GAR_ARTIFACTS` if set, else
 /// `artifacts/` relative to the current directory or its ancestors.
@@ -74,19 +81,35 @@ pub struct TrainStepSpec {
 }
 
 impl Manifest {
-    pub fn load(dir: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
-        let v = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (split from [`Manifest::load`] so tests can
+    /// run without an artifacts directory on disk).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let v = json::parse(text).map_err(|e| format!("manifest parse: {e}"))?;
         let mut reduce: HashMap<String, Vec<(usize, String)>> = HashMap::new();
         for k in v
             .get("reduce_kernels")
             .and_then(|x| x.as_arr())
             .unwrap_or(&[])
         {
-            let op = k.get("op").and_then(|x| x.as_str()).context("kernel op")?;
-            let size = k.get("size").and_then(|x| x.as_usize()).context("kernel size")?;
-            let file = k.get("file").and_then(|x| x.as_str()).context("kernel file")?;
+            let op = k
+                .get("op")
+                .and_then(|x| x.as_str())
+                .ok_or("kernel entry missing op")?;
+            let size = k
+                .get("size")
+                .and_then(|x| x.as_usize())
+                .ok_or("kernel entry missing size")?;
+            let file = k
+                .get("file")
+                .and_then(|x| x.as_str())
+                .ok_or("kernel entry missing file")?;
             reduce
                 .entry(op.to_string())
                 .or_default()
@@ -101,10 +124,22 @@ impl Manifest {
             .and_then(|x| x.as_arr())
             .unwrap_or(&[])
         {
-            let op = k.get("op").and_then(|x| x.as_str()).context("kway op")?;
-            let kk = k.get("k").and_then(|x| x.as_usize()).context("kway k")?;
-            let size = k.get("size").and_then(|x| x.as_usize()).context("kway size")?;
-            let file = k.get("file").and_then(|x| x.as_str()).context("kway file")?;
+            let op = k
+                .get("op")
+                .and_then(|x| x.as_str())
+                .ok_or("kway entry missing op")?;
+            let kk = k
+                .get("k")
+                .and_then(|x| x.as_usize())
+                .ok_or("kway entry missing k")?;
+            let size = k
+                .get("size")
+                .and_then(|x| x.as_usize())
+                .ok_or("kway entry missing size")?;
+            let file = k
+                .get("file")
+                .and_then(|x| x.as_str())
+                .ok_or("kway entry missing file")?;
             kway.entry(op.to_string())
                 .or_default()
                 .push((kk, size, file.to_string()));
@@ -131,500 +166,57 @@ impl Manifest {
     }
 }
 
-fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .map_err(|e| anyhow!("loading HLO text {}: {e:?}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
-}
-
-/// Identity element used to pad a chunk up to the kernel's fixed size.
-fn pad_value(op: ReduceOp) -> f32 {
-    match op {
-        ReduceOp::Sum => 0.0,
-        ReduceOp::Prod => 1.0,
-        ReduceOp::Max => f32::NEG_INFINITY,
-        ReduceOp::Min => f32::INFINITY,
-    }
-}
-
-fn op_key(op: ReduceOp) -> &'static str {
-    match op {
-        ReduceOp::Sum => "sum",
-        ReduceOp::Prod => "prod",
-        ReduceOp::Max => "max",
-        ReduceOp::Min => "min",
-    }
-}
-
-/// Owns the PJRT client and the compiled reduce executables.
-/// Not `Send` — use from one thread or behind [`PjrtReduceService`].
-pub struct ReduceEngine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    /// (op, size) → compiled executable, lazily compiled.
-    compiled: HashMap<(ReduceOp, usize), xla::PjRtLoadedExecutable>,
-    /// Number of kernel invocations (metrics).
-    pub invocations: u64,
-}
-
-impl ReduceEngine {
-    pub fn new(manifest: Manifest) -> Result<ReduceEngine> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(ReduceEngine {
-            client,
-            manifest,
-            compiled: HashMap::new(),
-            invocations: 0,
-        })
-    }
-
-    /// Load the default artifacts.
-    pub fn from_artifacts() -> Result<ReduceEngine> {
-        let dir = artifacts_dir()
-            .context("artifacts/ not found — run `make artifacts` (python AOT) first")?;
-        Self::new(Manifest::load(&dir)?)
-    }
-
-    /// Smallest kernel size class ≥ `len` for `op` (falls back to the
-    /// largest class; longer inputs are processed in slices).
-    fn size_class(&self, op: ReduceOp, len: usize) -> Result<usize> {
-        let sizes = self
-            .manifest
-            .reduce
-            .get(op_key(op))
-            .with_context(|| format!("no reduce kernels for op {op:?} in manifest"))?;
-        Ok(sizes
-            .iter()
-            .map(|&(s, _)| s)
-            .find(|&s| s >= len)
-            .unwrap_or_else(|| sizes.last().map(|&(s, _)| s).unwrap()))
-    }
-
-    fn executable(&mut self, op: ReduceOp, size: usize) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.compiled.contains_key(&(op, size)) {
-            let sizes = self
-                .manifest
-                .reduce
-                .get(op_key(op))
-                .with_context(|| format!("no kernels for {op:?}"))?;
-            let file = sizes
-                .iter()
-                .find(|&&(s, _)| s == size)
-                .map(|(_, f)| f.clone())
-                .with_context(|| format!("no {op:?} kernel of size {size}"))?;
-            let exe = compile(&self.client, &self.manifest.dir.join(file))?;
-            self.compiled.insert((op, size), exe);
-        }
-        Ok(&self.compiled[&(op, size)])
-    }
-
-    /// `dst ⊕= src` through the Pallas kernel, slicing/padding to the fixed
-    /// kernel shapes.
-    pub fn combine(&mut self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> Result<()> {
-        anyhow::ensure!(dst.len() == src.len(), "length mismatch");
-        if dst.is_empty() {
-            return Ok(());
-        }
-        let class = self.size_class(op, dst.len())?;
-        let pad = pad_value(op);
-        let mut off = 0;
-        while off < dst.len() {
-            let take = class.min(dst.len() - off);
-            let mut a = vec![pad; class];
-            let mut bv = vec![pad; class];
-            a[..take].copy_from_slice(&dst[off..off + take]);
-            bv[..take].copy_from_slice(&src[off..off + take]);
-            let la = xla::Literal::vec1(&a);
-            let lb = xla::Literal::vec1(&bv);
-            let exe = self.executable(op, class)?;
-            let out = exe
-                .execute::<xla::Literal>(&[la, lb])
-                .map_err(|e| anyhow!("kernel execute: {e:?}"))?;
-            let lit = out[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-            let lit = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-            dst[off..off + take].copy_from_slice(&v[..take]);
-            self.invocations += 1;
-            off += take;
-        }
-        Ok(())
-    }
-}
-
-impl ReduceEngine {
-    /// Fold `chunks` (equal lengths) into one vector with k-way kernel
-    /// launches where possible — the launch-overhead-amortizing variant
-    /// (pads the stack with the op identity up to the artifact's k).
-    pub fn combine_kway(&mut self, op: ReduceOp, chunks: &[&[f32]]) -> Result<Vec<f32>> {
-        anyhow::ensure!(!chunks.is_empty(), "empty stack");
-        let n = chunks[0].len();
-        anyhow::ensure!(chunks.iter().all(|c| c.len() == n), "ragged stack");
-        let mut acc: Vec<f32> = chunks[0].to_vec();
-        if chunks.len() == 1 {
-            return Ok(acc);
-        }
-        let variants = self.manifest.kway.get(op_key(op)).cloned().unwrap_or_default();
-        let mut rest = &chunks[1..];
-        while !rest.is_empty() {
-            // Pick the largest artifact k with k − 1 ≤ remaining + 1 slot
-            // for the accumulator; fall back to pairwise.
-            let pick = variants
-                .iter()
-                .filter(|&&(k, size, _)| k >= 2 && k - 1 <= rest.len() && size >= n)
-                .max_by_key(|&&(k, _, _)| k)
-                .cloned();
-            match pick {
-                Some((k, size, file)) => {
-                    let take = k - 1;
-                    let pad = pad_value(op);
-                    let mut stack = vec![pad; k * size];
-                    stack[..n].copy_from_slice(&acc);
-                    for (i, c) in rest[..take].iter().enumerate() {
-                        stack[(i + 1) * size..(i + 1) * size + n].copy_from_slice(c);
-                    }
-                    let lit = xla::Literal::vec1(&stack)
-                        .reshape(&[k as i64, size as i64])
-                        .map_err(|e| anyhow!("reshape stack: {e:?}"))?;
-                    let exe = self.kway_executable(op, k, size, &file)?;
-                    let out = exe
-                        .execute::<xla::Literal>(&[lit])
-                        .map_err(|e| anyhow!("kway execute: {e:?}"))?;
-                    let res = out[0][0]
-                        .to_literal_sync()
-                        .map_err(|e| anyhow!("fetch: {e:?}"))?
-                        .to_tuple1()
-                        .map_err(|e| anyhow!("untuple: {e:?}"))?
-                        .to_vec::<f32>()
-                        .map_err(|e| anyhow!("to_vec: {e:?}"))?;
-                    acc.copy_from_slice(&res[..n]);
-                    self.invocations += 1;
-                    rest = &rest[take..];
-                }
-                None => {
-                    let src = rest[0].to_vec();
-                    self.combine(op, &mut acc, &src)?;
-                    rest = &rest[1..];
-                }
-            }
-        }
-        Ok(acc)
-    }
-
-    fn kway_executable(
-        &mut self,
-        op: ReduceOp,
-        k: usize,
-        size: usize,
-        file: &str,
-    ) -> Result<&xla::PjRtLoadedExecutable> {
-        // Reuse the (op, size) cache with a k-tagged pseudo-size key.
-        let key = (op, k * 1_000_000_000 + size);
-        if !self.compiled.contains_key(&key) {
-            let exe = compile(&self.client, &self.manifest.dir.join(file))?;
-            self.compiled.insert(key, exe);
-        }
-        Ok(&self.compiled[&key])
-    }
-}
-
-enum Request {
-    Combine {
-        op: ReduceOp,
-        dst: Vec<f32>,
-        src: Vec<f32>,
-        reply: mpsc::Sender<Result<Vec<f32>>>,
-    },
-    Shutdown,
-}
-
-/// Dedicated thread owning a [`ReduceEngine`]; hands out `Send + Sync`
-/// [`PjrtReducer`] handles for the cluster's worker threads.
-pub struct PjrtReduceService {
-    tx: Mutex<mpsc::Sender<Request>>,
-    join: Option<std::thread::JoinHandle<()>>,
-}
-
-impl PjrtReduceService {
-    pub fn start() -> Result<PjrtReduceService> {
-        let dir = artifacts_dir()
-            .context("artifacts/ not found — run `make artifacts` (python AOT) first")?;
-        let manifest = Manifest::load(&dir)?;
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("pjrt-reduce".into())
-            .spawn(move || {
-                let mut engine = match ReduceEngine::new(manifest) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        Request::Combine { op, mut dst, src, reply } => {
-                            let r = engine.combine(op, &mut dst, &src).map(|_| dst);
-                            let _ = reply.send(r);
-                        }
-                        Request::Shutdown => break,
-                    }
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("PJRT service thread died during startup"))??;
-        Ok(PjrtReduceService {
-            tx: Mutex::new(tx),
-            join: Some(join),
-        })
-    }
-
-    /// A `Send + Sync` handle implementing [`Reducer`].
-    pub fn reducer(&self) -> PjrtReducer<'_> {
-        PjrtReducer { svc: self }
-    }
-}
-
-impl Drop for PjrtReduceService {
-    fn drop(&mut self) {
-        if let Ok(tx) = self.tx.lock() {
-            let _ = tx.send(Request::Shutdown);
-        }
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-/// Handle to the reduce service; implements the cluster's [`Reducer`].
-pub struct PjrtReducer<'a> {
-    svc: &'a PjrtReduceService,
-}
-
-impl Reducer for PjrtReducer<'_> {
-    fn combine(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> Result<()> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        {
-            let tx = self.svc.tx.lock().expect("service sender poisoned");
-            tx.send(Request::Combine {
-                op,
-                dst: dst.to_vec(),
-                src: src.to_vec(),
-                reply: reply_tx,
-            })
-            .map_err(|_| anyhow!("PJRT reduce service is gone"))?;
-        }
-        let out = reply_rx
-            .recv()
-            .map_err(|_| anyhow!("PJRT reduce service dropped the reply"))??;
-        dst.copy_from_slice(&out);
-        Ok(())
-    }
-
-    fn name(&self) -> &str {
-        "pjrt-pallas"
-    }
-}
-
-/// The DDP train-step executable (L2 transformer fwd/bwd + loss).
-///
-/// Signature (see `python/compile/model.py`):
-/// `(params: f32[n_params], tokens: i32[batch, seq+1]) → (loss: f32[],
-/// grads: f32[n_params])`.
-pub struct TrainStepEngine {
-    exe: xla::PjRtLoadedExecutable,
-    pub spec: TrainStepSpec,
-}
-
-impl TrainStepEngine {
-    pub fn from_artifacts() -> Result<TrainStepEngine> {
-        let dir = artifacts_dir().context("artifacts/ not found — run `make artifacts`")?;
-        let manifest = Manifest::load(&dir)?;
-        let spec = manifest
-            .train_step
-            .context("manifest has no train_step entry")?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let exe = compile(&client, &manifest.dir.join(&spec.file))?;
-        Ok(TrainStepEngine { exe, spec })
-    }
-
-    /// Load the initial flat parameter vector written by `aot.py`.
-    pub fn initial_params(&self) -> Result<Vec<f32>> {
-        let dir = artifacts_dir().context("artifacts dir vanished")?;
-        let bytes = std::fs::read(dir.join(&self.spec.init_file))?;
-        anyhow::ensure!(
-            bytes.len() == self.spec.n_params * 4,
-            "init params blob has {} bytes, expected {}",
-            bytes.len(),
-            self.spec.n_params * 4
-        );
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
-
-    /// One forward/backward pass: returns `(loss, grads)`.
-    pub fn step(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
-        let spec = &self.spec;
-        anyhow::ensure!(params.len() == spec.n_params, "bad params length");
-        anyhow::ensure!(
-            tokens.len() == spec.batch * (spec.seq + 1),
-            "bad tokens length {} (want {}x{})",
-            tokens.len(),
-            spec.batch,
-            spec.seq + 1
-        );
-        let lp = xla::Literal::vec1(params);
-        let lt = xla::Literal::vec1(tokens)
-            .reshape(&[spec.batch as i64, (spec.seq + 1) as i64])
-            .map_err(|e| anyhow!("reshape tokens: {e:?}"))?;
-        let out = self
-            .exe
-            .execute::<xla::Literal>(&[lp, lt])
-            .map_err(|e| anyhow!("train step execute: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e:?}"))?;
-        let (loss_l, grads_l) = lit.to_tuple2().map_err(|e| anyhow!("untuple2: {e:?}"))?;
-        let loss = loss_l.to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
-        let grads = grads_l.to_vec::<f32>().map_err(|e| anyhow!("grads: {e:?}"))?;
-        anyhow::ensure!(grads.len() == spec.n_params, "bad grads length");
-        Ok((loss, grads))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn have_artifacts() -> bool {
-        artifacts_dir().is_some()
-    }
-
-    /// Canary: the full test suite (via `make test`) must run with
-    /// artifacts present; if they were missing every other runtime test
-    /// would silently skip, so this one fails loudly.
-    #[test]
-    fn artifacts_present_canary() {
-        if std::env::var("GAR_ALLOW_MISSING_ARTIFACTS").is_ok() {
-            eprintln!("skipping canary (GAR_ALLOW_MISSING_ARTIFACTS set)");
-            return;
+    // The original suite asserted `artifacts/manifest.json` exists on disk
+    // (a canary for the `make artifacts` pipeline). That assertion is only
+    // right when the PJRT runtime is compiled in — the default offline
+    // build has nothing to execute the artifacts with — so the canary now
+    // lives in `runtime::pjrt` behind the `pjrt` feature, and the manifest
+    // layer is tested hermetically from a string here.
+    const SAMPLE: &str = r#"{
+        "reduce_kernels": [
+            {"op": "sum", "size": 4096, "file": "sum_4096.hlo"},
+            {"op": "sum", "size": 256, "file": "sum_256.hlo"},
+            {"op": "max", "size": 256, "file": "max_256.hlo"}
+        ],
+        "kway_kernels": [
+            {"op": "sum", "k": 8, "size": 4096, "file": "sum_k8_4096.hlo"}
+        ],
+        "train_step": {
+            "file": "train_step.hlo", "n_params": 440321, "batch": 8,
+            "seq": 64, "vocab": 97, "init_file": "init_params.bin"
         }
-        assert!(
-            have_artifacts(),
-            "artifacts/manifest.json missing — run `make artifacts`"
+    }"#;
+
+    #[test]
+    fn manifest_parses_and_sorts_sizes() {
+        let m = Manifest::parse(SAMPLE, Path::new("artifacts")).unwrap();
+        assert_eq!(
+            m.reduce["sum"],
+            vec![(256, "sum_256.hlo".to_string()), (4096, "sum_4096.hlo".to_string())]
         );
+        assert_eq!(m.reduce["max"].len(), 1);
+        assert_eq!(m.kway["sum"], vec![(8, 4096, "sum_k8_4096.hlo".to_string())]);
+        let ts = m.train_step.expect("train step parsed");
+        assert_eq!(ts.n_params, 440321);
+        assert_eq!(ts.vocab, 97);
     }
 
     #[test]
-    fn manifest_parses() {
-        if !have_artifacts() {
-            eprintln!("skipped: no artifacts");
-            return;
-        }
-        let m = Manifest::load(&artifacts_dir().unwrap()).unwrap();
-        assert!(m.reduce.contains_key("sum"), "sum kernels required");
-        for sizes in m.reduce.values() {
-            assert!(!sizes.is_empty());
-            assert!(sizes.windows(2).all(|w| w[0].0 < w[1].0), "sizes sorted");
-        }
+    fn manifest_tolerates_missing_sections() {
+        let m = Manifest::parse("{}", Path::new("x")).unwrap();
+        assert!(m.reduce.is_empty());
+        assert!(m.kway.is_empty());
+        assert!(m.train_step.is_none());
     }
 
     #[test]
-    fn pjrt_combine_matches_native() {
-        if !have_artifacts() {
-            eprintln!("skipped: no artifacts");
-            return;
-        }
-        let mut eng = ReduceEngine::from_artifacts().unwrap();
-        let mut rng = crate::util::Rng::new(42);
-        for op in ReduceOp::all() {
-            for n in [1usize, 7, 255, 256, 1000, 5000] {
-                let mut dst: Vec<f32> = (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect();
-                let src: Vec<f32> = (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect();
-                let mut expect = dst.clone();
-                crate::cluster::Element::combine(op, &mut expect[..], &src[..]);
-                eng.combine(op, &mut dst, &src).unwrap();
-                for (i, (g, w)) in dst.iter().zip(&expect).enumerate() {
-                    assert!(
-                        (g - w).abs() <= 1e-6 * (1.0 + w.abs()),
-                        "{op:?} n={n} elem {i}: {g} vs {w}"
-                    );
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn kway_matches_sequential_pairs() {
-        if !have_artifacts() {
-            eprintln!("skipped: no artifacts");
-            return;
-        }
-        let mut eng = ReduceEngine::from_artifacts().unwrap();
-        if eng.manifest.kway.is_empty() {
-            eprintln!("skipped: no kway kernels in manifest (rebuild artifacts)");
-            return;
-        }
-        let mut rng = crate::util::Rng::new(8);
-        for op in ReduceOp::all() {
-            for k in [2usize, 3, 5, 9] {
-                let n = 1000;
-                let chunks: Vec<Vec<f32>> = (0..k)
-                    .map(|_| (0..n).map(|_| rng.f32() + 0.5).collect())
-                    .collect();
-                let refs: Vec<&[f32]> = chunks.iter().map(|c| c.as_slice()).collect();
-                let got = eng.combine_kway(op, &refs).unwrap();
-                let mut want = chunks[0].clone();
-                for c in &chunks[1..] {
-                    crate::cluster::Element::combine(op, &mut want[..], &c[..]);
-                }
-                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
-                    assert!(
-                        (g - w).abs() <= 1e-5 * (1.0 + w.abs()),
-                        "{op:?} k={k} elem {i}: {g} vs {w}"
-                    );
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn pjrt_service_through_cluster() {
-        if !have_artifacts() {
-            eprintln!("skipped: no artifacts");
-            return;
-        }
-        use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
-        use crate::cluster::{reference_allreduce, ClusterExecutor};
-        let svc = PjrtReduceService::start().unwrap();
-        let reducer = svc.reducer();
-        let p = 7;
-        let mut rng = crate::util::Rng::new(9);
-        let xs: Vec<Vec<f32>> = (0..p)
-            .map(|_| (0..33).map(|_| rng.f32()).collect())
-            .collect();
-        let want = reference_allreduce(&xs, ReduceOp::Sum);
-        let s = Algorithm::new(AlgorithmKind::BwOptimal, p)
-            .build(&BuildCtx::default())
-            .unwrap();
-        let got = ClusterExecutor::new()
-            .execute_f32_with_reducer(&s, &xs, ReduceOp::Sum, &reducer)
-            .unwrap();
-        for out in &got {
-            for (g, w) in out.iter().zip(&want) {
-                assert!((g - w).abs() < 1e-5, "{g} vs {w}");
-            }
-        }
+    fn manifest_rejects_malformed_entries() {
+        let bad = r#"{"reduce_kernels": [{"op": "sum"}]}"#;
+        let err = Manifest::parse(bad, Path::new("x")).unwrap_err();
+        assert!(err.contains("size"), "{err}");
     }
 }

@@ -1,0 +1,535 @@
+//! PJRT execution layer (the `pjrt` cargo feature).
+//!
+//! Loads the AOT-compiled HLO artifacts through the `xla` crate
+//! (`HloModuleProto::from_text_file` → `XlaComputation` → PJRT compile →
+//! execute) so the request path is pure rust — Python is never invoked at
+//! run time.
+//!
+//! PJRT handles are raw pointers (`!Send`/`!Sync`), so the cluster's worker
+//! threads cannot call an executable directly. [`PjrtReduceService`] owns
+//! the client on a dedicated service thread; [`PjrtReducer`] is a cheap
+//! `Send + Sync` handle implementing [`crate::cluster::Reducer`].
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::cluster::{ReduceError, ReduceOp, Reducer};
+use crate::runtime::{artifacts_dir, Manifest, TrainStepSpec};
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable, String> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| format!("loading HLO text {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| format!("compiling {}: {e:?}", path.display()))
+}
+
+/// Identity element used to pad a chunk up to the kernel's fixed size.
+fn pad_value(op: ReduceOp) -> f32 {
+    match op {
+        ReduceOp::Sum => 0.0,
+        ReduceOp::Prod => 1.0,
+        ReduceOp::Max => f32::NEG_INFINITY,
+        ReduceOp::Min => f32::INFINITY,
+    }
+}
+
+fn op_key(op: ReduceOp) -> &'static str {
+    match op {
+        ReduceOp::Sum => "sum",
+        ReduceOp::Prod => "prod",
+        ReduceOp::Max => "max",
+        ReduceOp::Min => "min",
+    }
+}
+
+/// Owns the PJRT client and the compiled reduce executables.
+/// Not `Send` — use from one thread or behind [`PjrtReduceService`].
+pub struct ReduceEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// (op, size) → compiled executable, lazily compiled.
+    compiled: HashMap<(ReduceOp, usize), xla::PjRtLoadedExecutable>,
+    /// Number of kernel invocations (metrics).
+    pub invocations: u64,
+}
+
+impl ReduceEngine {
+    pub fn new(manifest: Manifest) -> Result<ReduceEngine, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e:?}"))?;
+        Ok(ReduceEngine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+            invocations: 0,
+        })
+    }
+
+    /// Load the default artifacts.
+    pub fn from_artifacts() -> Result<ReduceEngine, String> {
+        let dir = artifacts_dir()
+            .ok_or("artifacts/ not found — run `make artifacts` (python AOT) first")?;
+        Self::new(Manifest::load(&dir)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Smallest kernel size class ≥ `len` for `op` (falls back to the
+    /// largest class; longer inputs are processed in slices).
+    fn size_class(&self, op: ReduceOp, len: usize) -> Result<usize, String> {
+        let sizes = self
+            .manifest
+            .reduce
+            .get(op_key(op))
+            .ok_or_else(|| format!("no reduce kernels for op {op:?} in manifest"))?;
+        Ok(sizes
+            .iter()
+            .map(|&(s, _)| s)
+            .find(|&s| s >= len)
+            .unwrap_or_else(|| sizes.last().map(|&(s, _)| s).unwrap()))
+    }
+
+    fn executable(
+        &mut self,
+        op: ReduceOp,
+        size: usize,
+    ) -> Result<&xla::PjRtLoadedExecutable, String> {
+        if !self.compiled.contains_key(&(op, size)) {
+            let sizes = self
+                .manifest
+                .reduce
+                .get(op_key(op))
+                .ok_or_else(|| format!("no kernels for {op:?}"))?;
+            let file = sizes
+                .iter()
+                .find(|&&(s, _)| s == size)
+                .map(|(_, f)| f.clone())
+                .ok_or_else(|| format!("no {op:?} kernel of size {size}"))?;
+            let exe = compile(&self.client, &self.manifest.dir.join(file))?;
+            self.compiled.insert((op, size), exe);
+        }
+        Ok(&self.compiled[&(op, size)])
+    }
+
+    /// `dst ⊕= src` through the Pallas kernel, slicing/padding to the fixed
+    /// kernel shapes.
+    pub fn combine(&mut self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> Result<(), String> {
+        if dst.len() != src.len() {
+            return Err("length mismatch".to_string());
+        }
+        if dst.is_empty() {
+            return Ok(());
+        }
+        let class = self.size_class(op, dst.len())?;
+        let pad = pad_value(op);
+        let mut off = 0;
+        while off < dst.len() {
+            let take = class.min(dst.len() - off);
+            let mut a = vec![pad; class];
+            let mut bv = vec![pad; class];
+            a[..take].copy_from_slice(&dst[off..off + take]);
+            bv[..take].copy_from_slice(&src[off..off + take]);
+            let la = xla::Literal::vec1(&a);
+            let lb = xla::Literal::vec1(&bv);
+            let exe = self.executable(op, class)?;
+            let out = exe
+                .execute::<xla::Literal>(&[la, lb])
+                .map_err(|e| format!("kernel execute: {e:?}"))?;
+            let lit = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("fetch result: {e:?}"))?;
+            let lit = lit.to_tuple1().map_err(|e| format!("untuple: {e:?}"))?;
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| format!("to_vec: {e:?}"))?;
+            dst[off..off + take].copy_from_slice(&v[..take]);
+            self.invocations += 1;
+            off += take;
+        }
+        Ok(())
+    }
+
+    /// Fold `chunks` (equal lengths) into one vector with k-way kernel
+    /// launches where possible — the launch-overhead-amortizing variant
+    /// (pads the stack with the op identity up to the artifact's k).
+    pub fn combine_kway(&mut self, op: ReduceOp, chunks: &[&[f32]]) -> Result<Vec<f32>, String> {
+        if chunks.is_empty() {
+            return Err("empty stack".to_string());
+        }
+        let n = chunks[0].len();
+        if chunks.iter().any(|c| c.len() != n) {
+            return Err("ragged stack".to_string());
+        }
+        let mut acc: Vec<f32> = chunks[0].to_vec();
+        if chunks.len() == 1 {
+            return Ok(acc);
+        }
+        let variants = self
+            .manifest
+            .kway
+            .get(op_key(op))
+            .cloned()
+            .unwrap_or_default();
+        let mut rest = &chunks[1..];
+        while !rest.is_empty() {
+            // Pick the largest artifact k with k − 1 ≤ remaining + 1 slot
+            // for the accumulator; fall back to pairwise.
+            let pick = variants
+                .iter()
+                .filter(|&&(k, size, _)| k >= 2 && k - 1 <= rest.len() && size >= n)
+                .max_by_key(|&&(k, _, _)| k)
+                .cloned();
+            match pick {
+                Some((k, size, file)) => {
+                    let take = k - 1;
+                    let pad = pad_value(op);
+                    let mut stack = vec![pad; k * size];
+                    stack[..n].copy_from_slice(&acc);
+                    for (i, c) in rest[..take].iter().enumerate() {
+                        stack[(i + 1) * size..(i + 1) * size + n].copy_from_slice(c);
+                    }
+                    let lit = xla::Literal::vec1(&stack)
+                        .reshape(&[k as i64, size as i64])
+                        .map_err(|e| format!("reshape stack: {e:?}"))?;
+                    let exe = self.kway_executable(op, k, size, &file)?;
+                    let out = exe
+                        .execute::<xla::Literal>(&[lit])
+                        .map_err(|e| format!("kway execute: {e:?}"))?;
+                    let res = out[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| format!("fetch: {e:?}"))?
+                        .to_tuple1()
+                        .map_err(|e| format!("untuple: {e:?}"))?
+                        .to_vec::<f32>()
+                        .map_err(|e| format!("to_vec: {e:?}"))?;
+                    acc.copy_from_slice(&res[..n]);
+                    self.invocations += 1;
+                    rest = &rest[take..];
+                }
+                None => {
+                    let src = rest[0].to_vec();
+                    self.combine(op, &mut acc, &src)?;
+                    rest = &rest[1..];
+                }
+            }
+        }
+        Ok(acc)
+    }
+
+    fn kway_executable(
+        &mut self,
+        op: ReduceOp,
+        k: usize,
+        size: usize,
+        file: &str,
+    ) -> Result<&xla::PjRtLoadedExecutable, String> {
+        // Reuse the (op, size) cache with a k-tagged pseudo-size key.
+        let key = (op, k * 1_000_000_000 + size);
+        if !self.compiled.contains_key(&key) {
+            let exe = compile(&self.client, &self.manifest.dir.join(file))?;
+            self.compiled.insert(key, exe);
+        }
+        Ok(&self.compiled[&key])
+    }
+}
+
+enum Request {
+    Combine {
+        op: ReduceOp,
+        dst: Vec<f32>,
+        src: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>, String>>,
+    },
+    Shutdown,
+}
+
+/// Dedicated thread owning a [`ReduceEngine`]; hands out `Send + Sync`
+/// [`PjrtReducer`] handles for the cluster's worker threads.
+pub struct PjrtReduceService {
+    tx: Mutex<mpsc::Sender<Request>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtReduceService {
+    pub fn start() -> Result<PjrtReduceService, String> {
+        let dir = artifacts_dir()
+            .ok_or("artifacts/ not found — run `make artifacts` (python AOT) first")?;
+        let manifest = Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-reduce".into())
+            .spawn(move || {
+                let mut engine = match ReduceEngine::new(manifest) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Combine { op, mut dst, src, reply } => {
+                            let r = engine.combine(op, &mut dst, &src).map(|_| dst);
+                            let _ = reply.send(r);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn pjrt service: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| "PJRT service thread died during startup".to_string())??;
+        Ok(PjrtReduceService {
+            tx: Mutex::new(tx),
+            join: Some(join),
+        })
+    }
+
+    /// A `Send + Sync` handle implementing [`Reducer`].
+    pub fn reducer(&self) -> PjrtReducer<'_> {
+        PjrtReducer { svc: self }
+    }
+}
+
+impl Drop for PjrtReduceService {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Handle to the reduce service; implements the cluster's [`Reducer`].
+pub struct PjrtReducer<'a> {
+    svc: &'a PjrtReduceService,
+}
+
+impl Reducer for PjrtReducer<'_> {
+    fn combine(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> Result<(), ReduceError> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.svc.tx.lock().expect("service sender poisoned");
+            tx.send(Request::Combine {
+                op,
+                dst: dst.to_vec(),
+                src: src.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| "PJRT reduce service is gone".to_string())?;
+        }
+        let out = reply_rx
+            .recv()
+            .map_err(|_| "PJRT reduce service dropped the reply".to_string())??;
+        dst.copy_from_slice(&out);
+        Ok(())
+    }
+
+    fn name(&self) -> &str {
+        "pjrt-pallas"
+    }
+}
+
+/// The DDP train-step executable (L2 transformer fwd/bwd + loss).
+///
+/// Signature (see `python/compile/model.py`):
+/// `(params: f32[n_params], tokens: i32[batch, seq+1]) → (loss: f32[],
+/// grads: f32[n_params])`.
+pub struct TrainStepEngine {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: TrainStepSpec,
+}
+
+impl TrainStepEngine {
+    pub fn from_artifacts() -> Result<TrainStepEngine, String> {
+        let dir = artifacts_dir().ok_or("artifacts/ not found — run `make artifacts`")?;
+        let manifest = Manifest::load(&dir)?;
+        let spec = manifest
+            .train_step
+            .ok_or("manifest has no train_step entry")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e:?}"))?;
+        let exe = compile(&client, &manifest.dir.join(&spec.file))?;
+        Ok(TrainStepEngine { exe, spec })
+    }
+
+    /// Load the initial flat parameter vector written by `aot.py`.
+    pub fn initial_params(&self) -> Result<Vec<f32>, String> {
+        let dir = artifacts_dir().ok_or("artifacts dir vanished")?;
+        let bytes = std::fs::read(dir.join(&self.spec.init_file)).map_err(|e| e.to_string())?;
+        if bytes.len() != self.spec.n_params * 4 {
+            return Err(format!(
+                "init params blob has {} bytes, expected {}",
+                bytes.len(),
+                self.spec.n_params * 4
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// One forward/backward pass: returns `(loss, grads)`.
+    pub fn step(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>), String> {
+        let spec = &self.spec;
+        if params.len() != spec.n_params {
+            return Err("bad params length".to_string());
+        }
+        if tokens.len() != spec.batch * (spec.seq + 1) {
+            return Err(format!(
+                "bad tokens length {} (want {}x{})",
+                tokens.len(),
+                spec.batch,
+                spec.seq + 1
+            ));
+        }
+        let lp = xla::Literal::vec1(params);
+        let lt = xla::Literal::vec1(tokens)
+            .reshape(&[spec.batch as i64, (spec.seq + 1) as i64])
+            .map_err(|e| format!("reshape tokens: {e:?}"))?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&[lp, lt])
+            .map_err(|e| format!("train step execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch: {e:?}"))?;
+        let (loss_l, grads_l) = lit.to_tuple2().map_err(|e| format!("untuple2: {e:?}"))?;
+        let loss = loss_l
+            .to_vec::<f32>()
+            .map_err(|e| format!("loss: {e:?}"))?[0];
+        let grads = grads_l
+            .to_vec::<f32>()
+            .map_err(|e| format!("grads: {e:?}"))?;
+        if grads.len() != spec.n_params {
+            return Err("bad grads length".to_string());
+        }
+        Ok((loss, grads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().is_some()
+    }
+
+    /// Canary: with the PJRT runtime compiled in, the full test suite (via
+    /// `make test`) must run with artifacts present; if they were missing
+    /// every other runtime test would silently skip, so this one fails
+    /// loudly. (Only meaningful under `--features pjrt` — the default
+    /// offline build has nothing that could consume the artifacts.)
+    #[test]
+    fn artifacts_present_canary() {
+        if std::env::var("GAR_ALLOW_MISSING_ARTIFACTS").is_ok() {
+            eprintln!("skipping canary (GAR_ALLOW_MISSING_ARTIFACTS set)");
+            return;
+        }
+        assert!(
+            have_artifacts(),
+            "artifacts/manifest.json missing — run `make artifacts`"
+        );
+    }
+
+    #[test]
+    fn pjrt_combine_matches_native() {
+        if !have_artifacts() {
+            eprintln!("skipped: no artifacts");
+            return;
+        }
+        let mut eng = ReduceEngine::from_artifacts().unwrap();
+        let mut rng = crate::util::Rng::new(42);
+        for op in ReduceOp::all() {
+            for n in [1usize, 7, 255, 256, 1000, 5000] {
+                let mut dst: Vec<f32> = (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                let src: Vec<f32> = (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                let mut expect = dst.clone();
+                crate::cluster::Element::combine(op, &mut expect[..], &src[..]);
+                eng.combine(op, &mut dst, &src).unwrap();
+                for (i, (g, w)) in dst.iter().zip(&expect).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-6 * (1.0 + w.abs()),
+                        "{op:?} n={n} elem {i}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kway_matches_sequential_pairs() {
+        if !have_artifacts() {
+            eprintln!("skipped: no artifacts");
+            return;
+        }
+        let mut eng = ReduceEngine::from_artifacts().unwrap();
+        if eng.manifest.kway.is_empty() {
+            eprintln!("skipped: no kway kernels in manifest (rebuild artifacts)");
+            return;
+        }
+        let mut rng = crate::util::Rng::new(8);
+        for op in ReduceOp::all() {
+            for k in [2usize, 3, 5, 9] {
+                let n = 1000;
+                let chunks: Vec<Vec<f32>> = (0..k)
+                    .map(|_| (0..n).map(|_| rng.f32() + 0.5).collect())
+                    .collect();
+                let refs: Vec<&[f32]> = chunks.iter().map(|c| c.as_slice()).collect();
+                let got = eng.combine_kway(op, &refs).unwrap();
+                let mut want = chunks[0].clone();
+                for c in &chunks[1..] {
+                    crate::cluster::Element::combine(op, &mut want[..], &c[..]);
+                }
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                        "{op:?} k={k} elem {i}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_service_through_cluster() {
+        if !have_artifacts() {
+            eprintln!("skipped: no artifacts");
+            return;
+        }
+        use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
+        use crate::cluster::{reference_allreduce, ClusterExecutor};
+        let svc = PjrtReduceService::start().unwrap();
+        let reducer = svc.reducer();
+        let p = 7;
+        let mut rng = crate::util::Rng::new(9);
+        let xs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..33).map(|_| rng.f32()).collect())
+            .collect();
+        let want = reference_allreduce(&xs, ReduceOp::Sum);
+        let s = Algorithm::new(AlgorithmKind::BwOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let got = ClusterExecutor::new()
+            .execute_f32_with_reducer(&s, &xs, ReduceOp::Sum, &reducer)
+            .unwrap();
+        for out in &got {
+            for (g, w) in out.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+            }
+        }
+    }
+}

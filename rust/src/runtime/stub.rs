@@ -1,0 +1,78 @@
+//! Stub runtime used when the `pjrt` cargo feature is disabled.
+//!
+//! Keeps the public surface of [`super::pjrt`] available so callers (the
+//! `gar` CLI, the quickstart example) compile unchanged and degrade
+//! gracefully: every constructor returns an error naming the missing
+//! feature instead of panicking or poisoning the build with an unresolvable
+//! `xla` dependency.
+
+use crate::cluster::{ReduceError, ReduceOp, Reducer};
+
+const DISABLED: &str = "PJRT runtime unavailable: this binary was built without the `pjrt` \
+     cargo feature (the offline image ships no `xla` crate); patch the `xla` dependency into \
+     rust/Cargo.toml and rebuild with `--features pjrt`";
+
+/// Stub for the PJRT reduce service; [`PjrtReduceService::start`] always
+/// fails with a descriptive error.
+pub struct PjrtReduceService {
+    _priv: (),
+}
+
+impl PjrtReduceService {
+    pub fn start() -> Result<PjrtReduceService, String> {
+        Err(DISABLED.to_string())
+    }
+
+    /// A handle implementing [`Reducer`] (never reachable in practice since
+    /// [`PjrtReduceService::start`] cannot succeed in this build).
+    pub fn reducer(&self) -> PjrtReducer<'_> {
+        PjrtReducer { _svc: self }
+    }
+}
+
+/// Stub reducer handle; its combine always errors.
+pub struct PjrtReducer<'a> {
+    _svc: &'a PjrtReduceService,
+}
+
+impl Reducer for PjrtReducer<'_> {
+    fn combine(&self, _op: ReduceOp, _dst: &mut [f32], _src: &[f32]) -> Result<(), ReduceError> {
+        Err(DISABLED.to_string())
+    }
+
+    fn name(&self) -> &str {
+        "pjrt-disabled"
+    }
+}
+
+/// Stub for the DDP train-step engine; construction always fails.
+pub struct TrainStepEngine {
+    _priv: (),
+}
+
+impl TrainStepEngine {
+    pub fn from_artifacts() -> Result<TrainStepEngine, String> {
+        Err(DISABLED.to_string())
+    }
+
+    pub fn initial_params(&self) -> Result<Vec<f32>, String> {
+        Err(DISABLED.to_string())
+    }
+
+    pub fn step(&self, _params: &[f32], _tokens: &[i32]) -> Result<(f32, Vec<f32>), String> {
+        Err(DISABLED.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stubs_error_descriptively() {
+        let err = PjrtReduceService::start().unwrap_err();
+        assert!(err.contains("pjrt"), "{err}");
+        let err = TrainStepEngine::from_artifacts().unwrap_err();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

@@ -24,11 +24,14 @@
 //!
 //! Buffers are **SSA-ish**: each `BufId` is created exactly once (at init,
 //! by `Recv`, or by `Copy`), may be reduced into while fresh, and is
-//! destroyed by `Free`. Within a step each process performs at most one
-//! `Send` (one message to one peer) and one `Recv` — the paper's §2 model
-//! of a full-duplex peer-to-peer network with conflict-free cyclic
-//! patterns.
+//! destroyed by `Free`. Within a step each process performs at most
+//! [`ProcSchedule::lanes`] `Send`s (each to a distinct peer) and as many
+//! `Recv`s (each from a distinct peer). Base algorithms use one lane — the
+//! paper's §2 model of a full-duplex peer-to-peer network with
+//! conflict-free cyclic patterns; the [`pipeline`] expansion runs several
+//! segments' steps concurrently and raises the lane count accordingly.
 
+pub mod pipeline;
 pub mod stats;
 pub mod verify;
 
@@ -172,6 +175,12 @@ pub struct ProcSchedule {
     /// Result buffers per process, ordered by segment offset; after the
     /// last step they must jointly cover `[0, n_units)` fully reduced.
     pub result: Vec<Vec<BufId>>,
+    /// Maximum concurrent messages a process may send (and receive) within
+    /// one step, each to/from a *distinct* peer. Base algorithms use `1`
+    /// (§2's one-port full-duplex model); the segment-pipelined expansion
+    /// ([`pipeline`]) raises it to the number of in-flight segments, and the
+    /// verifier enforces the corresponding relaxed legality rule.
+    pub lanes: u32,
     /// Human-readable algorithm tag, e.g. `"generalized(P=7,r=1)"`.
     pub name: String,
 }
@@ -310,6 +319,7 @@ impl ScheduleBuilder {
             init: self.init,
             steps: self.steps,
             result,
+            lanes: 1,
             name: self.name,
         }
     }
@@ -356,6 +366,7 @@ mod tests {
             init: vec![],
             steps: vec![],
             result: vec![],
+            lanes: 1,
             name: "t".into(),
         };
         // 7 units over a 23-element vector must partition [0,23).

@@ -1,0 +1,265 @@
+//! Segment-pipelined schedule expansion.
+//!
+//! [`expand`] turns any verified base schedule with `K` steps into a
+//! pipelined schedule over `S` segments: the vector is split into `S`
+//! equal slabs and slab `i` starts one step after slab `i−1`, so step `k`
+//! of segment `i` overlaps step `k+1` of segment `i−1` — Träff's
+//! doubly-pipelined reduction idea (arXiv:2109.12626) applied at the
+//! schedule-IR level. The result runs in `K + S − 1` global steps instead
+//! of the `S·K` steps of the sequential [`crate::algo::segmented`]
+//! transformation, while each step moves `1/S` of the data, shrinking the
+//! per-step working set toward Ring's cache-friendly profile (§10/Fig 8).
+//!
+//! ## Legality
+//!
+//! Within a global step up to `min(S, K)` segments are in flight, so a
+//! process may need several concurrent messages. Two cases:
+//!
+//! * different in-flight segments address the **same peer** → their
+//!   payload lists are **merged into one message** (buf lists concatenate
+//!   in segment order on both sides, so positional payload matching is
+//!   preserved);
+//! * different peers → the expansion emits several `Send`s/`Recv`s in the
+//!   one step and declares [`crate::sched::ProcSchedule::lanes`]` =
+//!   min(S, K)`, the relaxed multi-lane rule the verifier enforces (at
+//!   most `lanes` messages per process per step, each to/from a distinct
+//!   peer, so `(step, from)` stays a unique message tag).
+//!
+//! Segments use disjoint buffer-id ranges and disjoint unit ranges, so all
+//! non-network invariants (single creation, no double counting, postcondition)
+//! carry over from the base schedule and are re-proven by the standard
+//! verifier over the composite — no pipelining-specific trust is required.
+
+use std::sync::Arc;
+
+use crate::sched::{BufId, Op, ProcSchedule, Segment, Step};
+
+/// Expand `base` into an `S`-segment pipelined schedule.
+///
+/// `S = 1` (or a base schedule with no steps) returns a plain clone.
+pub fn expand(base: &ProcSchedule, segments: u32) -> Result<ProcSchedule, String> {
+    if segments == 0 {
+        return Err("segments must be ≥ 1".into());
+    }
+    if base.lanes != 1 {
+        return Err(format!(
+            "cannot pipeline an already multi-lane schedule ({})",
+            base.name
+        ));
+    }
+    if segments == 1 || base.steps.is_empty() {
+        return Ok(base.clone());
+    }
+    let s_count = segments as usize;
+    let p = base.p;
+    let span = base.max_buf_id();
+    let units = base.n_units;
+    let k_steps = base.steps.len();
+
+    // Per-segment views of the base schedule's per-(step, proc) op lists,
+    // pre-split into sends / recvs / local ops with ids remapped.
+    let id_off = |seg: usize| seg as BufId * span;
+
+    let mut init: Vec<Vec<(BufId, Segment)>> = vec![Vec::new(); p];
+    for seg in 0..s_count {
+        for (proc, per) in base.init.iter().enumerate() {
+            for &(id, sg) in per {
+                init[proc].push((
+                    id + id_off(seg),
+                    Segment::new(sg.off + seg as u32 * units, sg.len),
+                ));
+            }
+        }
+    }
+
+    let total_steps = k_steps + s_count - 1;
+    let mut steps: Vec<Step> = Vec::with_capacity(total_steps);
+    for g in 0..total_steps {
+        let mut step = Step::empty(p);
+        // Active segments in ascending order; segment s executes base step
+        // g − s when that lands in [0, K).
+        let active: Vec<usize> = (0..s_count)
+            .filter(|&s| g >= s && g - s < k_steps)
+            .collect();
+        for proc in 0..p {
+            // Merged sends/recvs: (peer, concatenated bufs) in order of
+            // first appearance, which is segment order.
+            let mut sends: Vec<(usize, Vec<BufId>)> = Vec::new();
+            let mut recvs: Vec<(usize, Vec<BufId>)> = Vec::new();
+            let mut local: Vec<Op> = Vec::new();
+            for &seg in &active {
+                let off = id_off(seg);
+                for op in &base.steps[g - seg].ops[proc] {
+                    match op {
+                        Op::Send { to, bufs } => {
+                            let remapped = bufs.iter().map(|&b| b + off);
+                            match sends.iter().position(|&(peer, _)| peer == *to) {
+                                Some(i) => sends[i].1.extend(remapped),
+                                None => sends.push((*to, remapped.collect())),
+                            }
+                        }
+                        Op::Recv { from, bufs } => {
+                            let remapped = bufs.iter().map(|&b| b + off);
+                            match recvs.iter().position(|&(peer, _)| peer == *from) {
+                                Some(i) => recvs[i].1.extend(remapped),
+                                None => recvs.push((*from, remapped.collect())),
+                            }
+                        }
+                        Op::Reduce { dst, src } => local.push(Op::Reduce {
+                            dst: dst + off,
+                            src: src + off,
+                        }),
+                        Op::ReduceMany { pairs } => local.push(Op::ReduceMany {
+                            pairs: Arc::new(
+                                pairs.iter().map(|&(d, s)| (d + off, s + off)).collect(),
+                            ),
+                        }),
+                        Op::Copy { dst, src } => local.push(Op::Copy {
+                            dst: dst + off,
+                            src: src + off,
+                        }),
+                        Op::Free { buf } => local.push(Op::Free { buf: buf + off }),
+                        Op::FreeMany { bufs } => local.push(Op::FreeMany {
+                            bufs: Arc::new(bufs.iter().map(|&b| b + off).collect()),
+                        }),
+                    }
+                }
+            }
+            let ops = &mut step.ops[proc];
+            for (to, bufs) in sends {
+                ops.push(Op::send(to, bufs));
+            }
+            for (from, bufs) in recvs {
+                ops.push(Op::recv(from, bufs));
+            }
+            ops.extend(local);
+        }
+        steps.push(step);
+    }
+
+    let mut result: Vec<Vec<BufId>> = vec![Vec::new(); p];
+    for seg in 0..s_count {
+        for (proc, res) in base.result.iter().enumerate() {
+            result[proc].extend(res.iter().map(|&b| b + id_off(seg)));
+        }
+    }
+
+    Ok(ProcSchedule {
+        p,
+        n_units: units * segments,
+        init,
+        steps,
+        result,
+        lanes: s_count.min(k_steps) as u32,
+        name: format!("pipelined(S={segments},{})", base.name),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
+    use crate::cluster::{reference_allreduce, ClusterExecutor, ReduceOp};
+    use crate::sched::verify::verify;
+    use crate::util::Rng;
+
+    fn base(kind: AlgorithmKind, p: usize) -> ProcSchedule {
+        Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap()
+    }
+
+    #[test]
+    fn pipelined_verifies_with_fewer_steps_than_sequential() {
+        for p in [3usize, 5, 7, 8, 12] {
+            for kind in [
+                AlgorithmKind::BwOptimal,
+                AlgorithmKind::Ring,
+                AlgorithmKind::Generalized { r: 1 },
+            ] {
+                let b = base(kind, p);
+                let k = b.num_steps();
+                for s in [1u32, 2, 3, 5] {
+                    let pl = expand(&b, s).unwrap();
+                    verify(&pl).unwrap_or_else(|e| panic!("{kind:?} P={p} S={s}: {e}"));
+                    assert_eq!(pl.num_steps(), k + s as usize - 1, "{kind:?} P={p} S={s}");
+                    assert_eq!(pl.lanes, (s as usize).min(k) as u32);
+                    assert_eq!(pl.n_units, b.n_units * s);
+                    // Sequential segmentation would pay S·K steps.
+                    if s > 1 {
+                        assert!(pl.num_steps() < s as usize * k);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn s1_is_identity() {
+        let b = base(AlgorithmKind::BwOptimal, 7);
+        let pl = expand(&b, 1).unwrap();
+        assert_eq!(pl.num_steps(), b.num_steps());
+        assert_eq!(pl.lanes, 1);
+        assert_eq!(pl.n_units, b.n_units);
+    }
+
+    #[test]
+    fn rejects_zero_segments_and_repipelining() {
+        let b = base(AlgorithmKind::Ring, 5);
+        assert!(expand(&b, 0).is_err());
+        let pl = expand(&b, 2).unwrap();
+        assert!(expand(&pl, 2).is_err(), "re-pipelining must be rejected");
+    }
+
+    #[test]
+    fn pipelined_computes_correctly() {
+        let exec = ClusterExecutor::new();
+        let mut rng = Rng::new(0xB00);
+        for (p, kind, s) in [
+            (5usize, AlgorithmKind::BwOptimal, 3u32),
+            (7, AlgorithmKind::LatOptimal, 2),
+            (8, AlgorithmKind::Ring, 4),
+            (9, AlgorithmKind::Generalized { r: 2 }, 3),
+        ] {
+            let pl = expand(&base(kind, p), s).unwrap();
+            let n = 2 * pl.n_units as usize + 5; // not divisible by the units
+            for op in ReduceOp::all() {
+                let xs: Vec<Vec<f32>> = (0..p)
+                    .map(|_| (0..n).map(|_| rng.f32() + 0.5).collect())
+                    .collect();
+                let want = reference_allreduce(&xs, op);
+                let got = exec.execute(&pl, &xs, op).unwrap();
+                for (rank, out) in got.iter().enumerate() {
+                    for (i, (g, w)) in out.iter().zip(&want).enumerate() {
+                        assert!(
+                            (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                            "{kind:?} P={p} S={s} {op:?} rank {rank} elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Max/Min are order-insensitive, so the pipelined result must be
+    /// bitwise identical to the base schedule's result.
+    #[test]
+    fn pipelined_bitwise_matches_base_for_order_insensitive_ops() {
+        let exec = ClusterExecutor::new();
+        let mut rng = Rng::new(0xB17);
+        let p = 7;
+        let b = base(AlgorithmKind::BwOptimal, p);
+        let pl = expand(&b, 3).unwrap();
+        let n = 200;
+        let xs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect();
+        for op in [ReduceOp::Max, ReduceOp::Min] {
+            let a = exec.execute(&b, &xs, op).unwrap();
+            let c = exec.execute(&pl, &xs, op).unwrap();
+            for rank in 0..p {
+                for (x, y) in a[rank].iter().zip(&c[rank]) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{op:?} rank {rank}");
+                }
+            }
+        }
+    }
+}

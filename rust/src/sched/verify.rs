@@ -10,10 +10,13 @@
 //!    set `{0..P-1}` (the paper's `Q_final`, eq. 14);
 //! 2. **no double counting** — a reduction never folds the same source in
 //!    twice (would silently corrupt a sum);
-//! 3. **network legality** — per step each process sends at most one
-//!    message to one peer and receives at most one message from one peer
-//!    (§2: conflict-free cyclic patterns on a full-duplex network), and
-//!    every message sent is received;
+//! 3. **network legality** — per step each process sends at most
+//!    [`ProcSchedule::lanes`] messages (each to a distinct peer) and
+//!    receives at most as many (each from a distinct peer), and every
+//!    message sent is received. Base algorithms declare one lane (§2:
+//!    conflict-free cyclic patterns on a full-duplex network); the
+//!    segment-pipelined expansion ([`crate::sched::pipeline`]) declares one
+//!    lane per in-flight segment;
 //! 4. **memory hygiene** — buffers are created once, used while live, and
 //!    exactly the result buffers survive the final step.
 
@@ -83,10 +86,12 @@ pub fn verify(s: &ProcSchedule) -> Result<VerifyReport, String> {
         }
         // Pass 1: evaluate sends against pre-step state; collect messages.
         // messages[(from, to)] = payload contents.
+        let lanes = s.lanes.max(1) as usize;
         let mut messages: HashMap<(usize, usize), Vec<SymBuf>> = HashMap::new();
-        let mut sent_to: Vec<Option<usize>> = vec![None; p];
+        let mut sent_to: Vec<Vec<usize>> = vec![Vec::new(); p];
         let mut max_sent = 0u32;
         for (proc, ops) in step.ops.iter().enumerate() {
+            let mut units_this_proc = 0u32;
             for m in ops.iter().flat_map(|o| o.micro()) {
                 if let MicroOp::Send { to, bufs } = m {
                     if to == proc {
@@ -95,12 +100,26 @@ pub fn verify(s: &ProcSchedule) -> Result<VerifyReport, String> {
                     if to >= p {
                         return Err(format!("step {si}: proc {proc} sends to invalid {to}"));
                     }
-                    if sent_to[proc].is_some() {
+                    if sent_to[proc].contains(&to) {
                         return Err(format!(
-                            "step {si}: proc {proc} sends two messages (network legality)"
+                            "step {si}: proc {proc} sends two messages to peer {to} \
+                             (untaggable within a step)"
                         ));
                     }
-                    sent_to[proc] = Some(to);
+                    if sent_to[proc].len() + 1 > lanes {
+                        return Err(if lanes == 1 {
+                            format!(
+                                "step {si}: proc {proc} sends two messages (network legality)"
+                            )
+                        } else {
+                            format!(
+                                "step {si}: proc {proc} sends {} messages, exceeding {lanes} \
+                                 lanes",
+                                sent_to[proc].len() + 1
+                            )
+                        });
+                    }
+                    sent_to[proc].push(to);
                     let mut payload = Vec::with_capacity(bufs.len());
                     let mut units = 0u32;
                     for &b in bufs {
@@ -111,16 +130,15 @@ pub fn verify(s: &ProcSchedule) -> Result<VerifyReport, String> {
                         payload.push(sb.clone());
                     }
                     report.total_units_sent += units as u64;
-                    max_sent = max_sent.max(units);
-                    if messages.insert((proc, to), payload).is_some() {
-                        unreachable!("double send already rejected");
-                    }
+                    units_this_proc += units;
+                    messages.insert((proc, to), payload);
                 }
             }
+            max_sent = max_sent.max(units_this_proc);
         }
 
         // Pass 2: execute ops sequentially per process.
-        let mut recv_from: Vec<Option<usize>> = vec![None; p];
+        let mut recv_from: Vec<Vec<usize>> = vec![Vec::new(); p];
         let mut fresh_this_step: Vec<Vec<u32>> = vec![Vec::new(); p];
         let mut max_reduced = 0u32;
         for (proc, ops) in step.ops.iter().enumerate() {
@@ -129,12 +147,27 @@ pub fn verify(s: &ProcSchedule) -> Result<VerifyReport, String> {
                 match m {
                     MicroOp::Send { .. } => {} // handled in pass 1
                     MicroOp::Recv { from, bufs } => {
-                        if recv_from[proc].is_some() {
+                        if recv_from[proc].contains(&from) {
                             return Err(format!(
-                                "step {si}: proc {proc} receives two messages (network legality)"
+                                "step {si}: proc {proc} receives two messages from peer {from} \
+                                 (untaggable within a step)"
                             ));
                         }
-                        recv_from[proc] = Some(from);
+                        if recv_from[proc].len() + 1 > lanes {
+                            return Err(if lanes == 1 {
+                                format!(
+                                    "step {si}: proc {proc} receives two messages \
+                                     (network legality)"
+                                )
+                            } else {
+                                format!(
+                                    "step {si}: proc {proc} receives {} messages, exceeding \
+                                     {lanes} lanes",
+                                    recv_from[proc].len() + 1
+                                )
+                            });
+                        }
+                        recv_from[proc].push(from);
                         let payload = messages.remove(&(from, proc)).ok_or_else(|| {
                             format!(
                                 "step {si}: proc {proc} expects message from {from} but none was sent"
@@ -375,5 +408,53 @@ mod tests {
         s.n_units = 2; // results only cover unit 0
         let err = verify(&s).unwrap_err();
         assert!(err.contains("cover only"), "{err}");
+    }
+
+    /// P=3 all-to-all exchange in one step: two sends + two recvs per
+    /// process, legal with two lanes, illegal with one.
+    fn p3_two_lane() -> ProcSchedule {
+        let mut b = ScheduleBuilder::new(3, 1, "p3-two-lane");
+        let seg = Segment::new(0, 1);
+        let mine = b.init_buf_per_proc(&[seg, seg, seg]);
+        b.begin_step();
+        let fresh: Vec<(u32, u32)> = (0..3).map(|_| (b.fresh(), b.fresh())).collect();
+        for p in 0..3usize {
+            let (a, c) = fresh[p];
+            b.op(p, Op::send((p + 1) % 3, vec![mine]));
+            b.op(p, Op::send((p + 2) % 3, vec![mine]));
+            b.op(p, Op::recv((p + 2) % 3, vec![a]));
+            b.op(p, Op::recv((p + 1) % 3, vec![c]));
+            b.op(p, Op::Reduce { dst: a, src: mine });
+            b.op(p, Op::Reduce { dst: a, src: c });
+            b.op(p, Op::Free { buf: mine });
+            b.op(p, Op::Free { buf: c });
+        }
+        b.end_step();
+        let result = fresh.iter().map(|&(a, _)| vec![a]).collect();
+        b.finish(result)
+    }
+
+    #[test]
+    fn two_lane_schedule_verifies_with_lanes_2() {
+        let mut s = p3_two_lane();
+        s.lanes = 2;
+        let rep = verify(&s).expect("two-lane schedule must verify");
+        assert_eq!(rep.max_units_sent_per_step, vec![2]);
+    }
+
+    #[test]
+    fn two_lane_schedule_rejected_with_lanes_1() {
+        let s = p3_two_lane(); // builder defaults to lanes = 1
+        let err = verify(&s).unwrap_err();
+        assert!(err.contains("two messages"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_peer_rejected_even_with_lanes() {
+        let mut s = p2_exchange();
+        s.lanes = 4;
+        s.steps[0].ops[0].insert(1, Op::send(1, vec![0]));
+        let err = verify(&s).unwrap_err();
+        assert!(err.contains("two messages to peer"), "{err}");
     }
 }

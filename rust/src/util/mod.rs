@@ -1,9 +1,10 @@
 //! Small in-tree utilities.
 //!
-//! The build image is fully offline and only ships the dependency closure of
-//! the `xla` crate, so the usual ecosystem crates (rand, serde, proptest,
-//! criterion, clap) are unavailable. This module provides the minimal,
-//! well-tested subset the rest of the crate needs:
+//! The build image is fully offline with no registry access, so the usual
+//! ecosystem crates (rand, serde, proptest, criterion, clap) are
+//! unavailable — the default build has **zero** external dependencies (the
+//! optional `pjrt` feature patches in `xla`). This module provides the
+//! minimal, well-tested subset the rest of the crate needs:
 //!
 //! * [`rng`] — SplitMix64 + xoshiro256** pseudo-random generators,
 //! * [`bitset`] — a compact fixed-capacity bit set used for symbolic

@@ -1,0 +1,167 @@
+//! Property tests for the bucketizer (`coordinator::bucket`) and the
+//! pipelined execution path.
+//!
+//! * pack → unpack round-trips **exactly** for arbitrary tensor-size
+//!   lists: empty tensors, one giant tensor, thousands of tiny tensors;
+//! * the bucket plan tiles the tensor list contiguously and respects the
+//!   byte cap except for single oversized tensors;
+//! * pipelined execution is **bitwise identical** to the unpipelined path
+//!   for the order-insensitive ops (`Max`/`Min`; inputs here avoid the
+//!   IEEE `±0.0`/NaN tie cases, where the result is fold-order-dependent).
+//!
+//! (proptest is unavailable offline; `util::check` is the seeded runner —
+//! failures print a replayable case seed.)
+
+use permallreduce::algo::AlgorithmKind;
+use permallreduce::cluster::ReduceOp;
+use permallreduce::coordinator::bucket;
+use permallreduce::coordinator::Communicator;
+use permallreduce::util::check::{check, ensure};
+use permallreduce::util::Rng;
+
+/// Random tensor-length list exercising the shapes the docs promise:
+/// empties, giants, and long runs of tiny tensors.
+fn random_lens(rng: &mut Rng) -> Vec<usize> {
+    match rng.below(4) {
+        // Mixed sizes with occasional empties.
+        0 => (0..rng.range(1, 40))
+            .map(|_| if rng.chance(0.2) { 0 } else { rng.range(1, 500) })
+            .collect(),
+        // One giant tensor (far beyond any bucket cap used below).
+        1 => vec![rng.range(10_000, 60_000)],
+        // Thousands of tiny tensors.
+        2 => (0..rng.range(1_000, 3_000)).map(|_| rng.below(4)).collect(),
+        // Degenerate: all empty.
+        _ => vec![0; rng.range(1, 20)],
+    }
+}
+
+#[test]
+fn prop_pack_unpack_round_trips_exactly() {
+    check("bucket-round-trip", 0xB0C4E7, 40, |rng| {
+        let lens = random_lens(rng);
+        let bucket_bytes = *rng.pick(&[64usize, 1024, 16 << 10, 1 << 20]);
+        let tensors: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|&n| (0..n).map(|_| f32::from_bits(rng.next_u64() as u32 & 0x7F7F_FFFF)).collect())
+            .collect();
+        let plan = bucket::plan(&lens, 4, bucket_bytes);
+
+        // Plan invariants: contiguous tiling, cap respected.
+        let cap_elems = (bucket_bytes / 4).max(1);
+        let mut cursor = 0usize;
+        for b in &plan.buckets {
+            ensure(b.tensors.start == cursor, || {
+                format!("gap before bucket {b:?} (cursor {cursor})")
+            })?;
+            cursor = b.tensors.end;
+            let sum: usize = lens[b.tensors.clone()].iter().sum();
+            ensure(sum == b.elems, || format!("elems mismatch in {b:?}"))?;
+            ensure(b.elems <= cap_elems || b.tensors.len() == 1, || {
+                format!("bucket over cap without being a lone giant: {b:?}")
+            })?;
+        }
+        ensure(cursor == lens.len(), || {
+            format!("plan covers {cursor}/{} tensors", lens.len())
+        })?;
+
+        // Exact round-trip, bit for bit.
+        let mut rebuilt: Vec<Vec<f32>> = Vec::with_capacity(lens.len());
+        for b in &plan.buckets {
+            let flat = bucket::pack(&tensors, b);
+            ensure(flat.len() == b.elems, || "pack length".to_string())?;
+            rebuilt.extend(bucket::unpack(&flat, &lens[b.tensors.clone()])?);
+        }
+        ensure(rebuilt.len() == tensors.len(), || "tensor count".to_string())?;
+        for (ti, (a, b)) in tensors.iter().zip(&rebuilt).enumerate() {
+            ensure(a.len() == b.len(), || format!("tensor {ti} length"))?;
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                ensure(x.to_bits() == y.to_bits(), || {
+                    format!("tensor {ti} elem {i}: {x} != {y}")
+                })?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipelined_bitwise_matches_unpipelined_for_max_min() {
+    check("pipelined-bitwise-max-min", 0xB17535, 12, |rng| {
+        let p = rng.range(2, 9);
+        let lens: Vec<usize> = (0..rng.range(1, 8)).map(|_| rng.below(300)).collect();
+        let inputs: Vec<Vec<Vec<f32>>> = (0..p)
+            .map(|_| {
+                lens.iter()
+                    .map(|&n| (0..n).map(|_| rng.f32() * 8.0 - 4.0).collect())
+                    .collect()
+            })
+            .collect();
+        let bucket_bytes = *rng.pick(&[128usize, 512, 4096]);
+        let pipelined = Communicator::builder(p)
+            .bucket_bytes(bucket_bytes)
+            .pipeline_segments(rng.range(2, 5) as u32)
+            .build()?;
+        let plain = Communicator::builder(p)
+            .bucket_bytes(bucket_bytes)
+            .pipeline_segments(1)
+            .build()?;
+        for op in [ReduceOp::Max, ReduceOp::Min] {
+            let a = pipelined
+                .allreduce_many(&inputs, op, AlgorithmKind::BwOptimal)
+                .map_err(|e| format!("pipelined: {e}"))?;
+            let b = plain
+                .allreduce_many(&inputs, op, AlgorithmKind::BwOptimal)
+                .map_err(|e| format!("plain: {e}"))?;
+            for rank in 0..p {
+                for (ti, (x, y)) in a.ranks[rank].iter().zip(&b.ranks[rank]).enumerate() {
+                    ensure(x.len() == y.len(), || format!("tensor {ti} length"))?;
+                    for (i, (g, w)) in x.iter().zip(y).enumerate() {
+                        ensure(g.to_bits() == w.to_bits(), || {
+                            format!(
+                                "P={p} {op:?} rank {rank} tensor {ti} elem {i}: {g} vs {w}"
+                            )
+                        })?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Bucketed integer sums are exact end to end (pack → pipelined schedules →
+/// unpack), independent of bucket/segment boundaries.
+#[test]
+fn prop_bucketed_integer_sums_exact() {
+    check("bucketed-integer-exact", 0x5E6, 12, |rng| {
+        let p = rng.range(2, 10);
+        let lens: Vec<usize> = (0..rng.range(1, 12)).map(|_| rng.below(200)).collect();
+        let inputs: Vec<Vec<Vec<i64>>> = (0..p)
+            .map(|_| {
+                lens.iter()
+                    .map(|&n| (0..n).map(|_| rng.below(1000) as i64 - 500).collect())
+                    .collect()
+            })
+            .collect();
+        let comm = Communicator::builder(p)
+            .bucket_bytes(*rng.pick(&[256usize, 2048]))
+            .build()?;
+        let out = comm
+            .allreduce_many(&inputs, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)?;
+        for (ti, &n) in lens.iter().enumerate() {
+            let mut want = vec![0i64; n];
+            for rank in 0..p {
+                for (w, x) in want.iter_mut().zip(&inputs[rank][ti]) {
+                    *w += x;
+                }
+            }
+            for rank in 0..p {
+                ensure(out.ranks[rank][ti] == want, || {
+                    format!("P={p} tensor {ti} rank {rank} integer mismatch")
+                })?;
+            }
+        }
+        Ok(())
+    });
+}

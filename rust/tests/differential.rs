@@ -1,0 +1,165 @@
+//! Differential test harness: the symbolic verifier vs the numeric cluster
+//! executor.
+//!
+//! For every `P ∈ 2..=17` × every [`AlgorithmKind`] × every [`ReduceOp`],
+//! the schedule must (a) pass the symbolic verifier (postcondition +
+//! network legality over source sets, paper eq. 9/14) and (b) produce the
+//! reference result on the thread cluster for randomized payloads — on
+//! vector lengths that are *not* divisible by the chunk count, including
+//! non-power-of-two `P`. A disagreement between (a) and (b) means either
+//! the verifier's invariants are too weak or the executor's protocol is
+//! wrong, which is exactly the class of bug neither catches alone.
+//!
+//! The same sweep cross-checks the bucketed `allreduce_many` path against
+//! a looped single-tensor `allreduce` (the acceptance contract: ≤ 1e-5
+//! relative for f32 `Sum`, bitwise for `Max`/`Min`).
+
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use permallreduce::cluster::{reference_allreduce, ClusterExecutor, ReduceOp};
+use permallreduce::coordinator::Communicator;
+use permallreduce::sched::verify::verify;
+use permallreduce::util::Rng;
+
+/// Payloads near 1.0 keep `Prod` well-conditioned across 17 factors.
+fn payloads(rng: &mut Rng, p: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..p)
+        .map(|_| (0..n).map(|_| 0.5 + rng.f32()).collect())
+        .collect()
+}
+
+#[test]
+fn symbolic_and_numeric_agree_for_every_p_kind_op() {
+    let exec = ClusterExecutor::new();
+    let mut rng = Rng::new(0xD1FF);
+    for p in 2..=17usize {
+        // Not divisible by P (or by P·slabs for the segmented kind) and
+        // shorter than some chunk counts — the proportional unit mapping
+        // must absorb both.
+        let n = 2 * p + 3;
+        for kind in AlgorithmKind::all() {
+            let s = Algorithm::new(kind, p)
+                .build(&BuildCtx::default())
+                .unwrap_or_else(|e| panic!("P={p} {kind:?}: build failed: {e}"));
+
+            // (a) symbolic proof of the Allreduce postcondition.
+            let report = verify(&s)
+                .unwrap_or_else(|e| panic!("P={p} {kind:?}: symbolic verify failed: {e}"));
+            assert!(report.total_units_sent > 0, "P={p} {kind:?}: no traffic?");
+
+            // (b) numeric agreement with the reference fold, every op.
+            for op in ReduceOp::all() {
+                let xs = payloads(&mut rng, p, n);
+                let want = reference_allreduce(&xs, op);
+                let got = exec
+                    .execute(&s, &xs, op)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: exec failed: {e}"));
+                for (rank, out) in got.iter().enumerate() {
+                    assert_eq!(out.len(), n, "P={p} {kind:?} {op:?} rank {rank}");
+                    for (i, (g, w)) in out.iter().zip(&want).enumerate() {
+                        assert!(
+                            (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                            "P={p} {kind:?} {op:?} rank {rank} elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Integer sums are exact, so any mismatch is a schedule/protocol bug
+/// rather than float noise — the sharpest form of the differential check.
+#[test]
+fn integer_exactness_for_every_p_and_kind() {
+    let exec = ClusterExecutor::new();
+    let mut rng = Rng::new(0x1E1);
+    for p in 2..=17usize {
+        let n = 3 * p + 1;
+        for kind in AlgorithmKind::all() {
+            let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+            let xs: Vec<Vec<i64>> = (0..p)
+                .map(|_| (0..n).map(|_| rng.below(2001) as i64 - 1000).collect())
+                .collect();
+            let mut want = vec![0i64; n];
+            for v in &xs {
+                for (w, x) in want.iter_mut().zip(v) {
+                    *w += x;
+                }
+            }
+            let got = exec.execute(&s, &xs, ReduceOp::Sum).unwrap();
+            for (rank, out) in got.iter().enumerate() {
+                assert_eq!(out, &want, "P={p} {kind:?} rank {rank}");
+            }
+        }
+    }
+}
+
+#[test]
+fn allreduce_many_matches_looped_allreduce_for_every_p() {
+    let mut rng = Rng::new(0xBACD);
+    for p in 2..=17usize {
+        // Small bucket cap so even these test tensors split into several
+        // buckets; auto pipeline depth.
+        let comm = Communicator::builder(p)
+            .bucket_bytes(96 * 4)
+            .build()
+            .unwrap();
+        let lens = [17usize, 1, 0, 64, 33, 5, 128];
+        let inputs: Vec<Vec<Vec<f32>>> = (0..p)
+            .map(|_| {
+                lens.iter()
+                    .map(|&n| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+                    .collect()
+            })
+            .collect();
+        for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+            let many = comm
+                .allreduce_many(&inputs, op, AlgorithmKind::GeneralizedAuto)
+                .unwrap_or_else(|e| panic!("P={p} {op:?}: {e}"));
+            for (ti, &n) in lens.iter().enumerate() {
+                let single: Vec<Vec<f32>> = (0..p).map(|r| inputs[r][ti].clone()).collect();
+                let want = if n == 0 {
+                    Vec::new()
+                } else {
+                    comm.allreduce(&single, op, AlgorithmKind::GeneralizedAuto)
+                        .unwrap()
+                        .ranks[0]
+                        .clone()
+                };
+                for rank in 0..p {
+                    let got = &many.ranks[rank][ti];
+                    assert_eq!(got.len(), n, "P={p} {op:?} tensor {ti} rank {rank}");
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        match op {
+                            ReduceOp::Max | ReduceOp::Min => assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "P={p} {op:?} tensor {ti} rank {rank} elem {i}"
+                            ),
+                            _ => assert!(
+                                (g - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                                "P={p} {op:?} tensor {ti} rank {rank} elem {i}: {g} vs {w}"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The verifier must also accept every pipelined expansion the coordinator
+/// can produce in the sweep range — the proof travels with the execution.
+#[test]
+fn pipelined_expansions_verify_across_sweep() {
+    use permallreduce::sched::pipeline;
+    for p in 2..=17usize {
+        for kind in [AlgorithmKind::BwOptimal, AlgorithmKind::Ring, AlgorithmKind::LatOptimal] {
+            let base = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+            for s in 2..=4u32 {
+                let pl = pipeline::expand(&base, s).unwrap();
+                verify(&pl).unwrap_or_else(|e| panic!("P={p} {kind:?} S={s}: {e}"));
+            }
+        }
+    }
+}
