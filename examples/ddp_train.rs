@@ -1,6 +1,9 @@
 //! End-to-end validation: data-parallel training with gradients
-//! synchronized by the **bucketed, pipelined multi-tensor Allreduce**
-//! (`Communicator::allreduce_many`) over the simulated cluster.
+//! synchronized by the **in-place bucketed, pipelined multi-tensor
+//! Allreduce** (`Communicator::allreduce_many_inplace`) over the
+//! persistent worker pool — the warm zero-allocation data-plane path, so
+//! steady-state steps move gradients without touching the global
+//! allocator.
 //!
 //! The model is a byte-level bigram language model over a 97-symbol
 //! alphabet: 97 logit rows of 97 floats — i.e. 97 gradient *tensors* per
@@ -13,8 +16,10 @@
 //! ln(97) ≈ 4.57 toward the corpus's bigram entropy (≈ 1.8).
 //!
 //! (The original three-layer variant — JAX transformer train step +
-//! Pallas combine kernels through PJRT — needs the `pjrt` cargo feature
-//! and the AOT artifacts; see `runtime`.)
+//! Pallas combine kernels through PJRT — is not wired into this example;
+//! it is driven directly through `runtime::TrainStepEngine`, which needs
+//! the `pjrt` cargo feature and the AOT artifacts. Passing `--pjrt` here
+//! reports that explicitly instead of silently running the native path.)
 //!
 //! ```sh
 //! cargo run --release --example ddp_train -- --steps 120 --p 4
@@ -101,6 +106,22 @@ fn main() -> Result<(), String> {
     let bucket_kb = args.get_usize("bucket-kb", 8)?;
     let segments = args.get_usize("segments", 0)?; // 0 = auto
     let seed = args.get_usize("seed", 1000)? as u64;
+    #[cfg(not(feature = "pjrt"))]
+    if args.has("pjrt") {
+        return Err(
+            "this binary was built without the `pjrt` cargo feature; rebuild with \
+             `--features pjrt` (needs the `xla` crate patched in — see the runtime docs)"
+                .into(),
+        );
+    }
+    #[cfg(feature = "pjrt")]
+    if args.has("pjrt") {
+        return Err(
+            "the PJRT train-step variant is not wired into this example; drive \
+             `runtime::TrainStepEngine` directly (see the runtime module docs)"
+                .into(),
+        );
+    }
 
     println!("== DDP training: {p} workers, {steps} steps, {pairs} pairs/worker ==");
     println!(
@@ -131,17 +152,19 @@ fn main() -> Result<(), String> {
             grads.push(g);
         }
 
-        // Gradient sync: bucketed multi-tensor Allreduce (auto-r schedule).
-        let out = comm.allreduce_many(&grads, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)?;
+        // Gradient sync: in-place bucketed multi-tensor Allreduce (auto-r
+        // schedule, persistent pool — zero data-plane allocation once warm).
+        let m =
+            comm.allreduce_many_inplace(&mut grads, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)?;
 
         // SGD with the averaged gradient (all ranks hold the same sum).
         let scale = lr / p as f32;
-        for (row, grow) in w.iter_mut().zip(&out.ranks[0]) {
+        for (row, grow) in w.iter_mut().zip(&grads[0]) {
             for (x, g) in row.iter_mut().zip(grow) {
                 *x -= scale * g;
             }
         }
-        sync_metrics = Some(out.metrics);
+        sync_metrics = Some(m);
 
         let mean_loss: f32 = losses.iter().sum::<f32>() / p as f32;
         if step % log_every == 0 || step + 1 == steps {
@@ -156,7 +179,7 @@ fn main() -> Result<(), String> {
     println!("\nwall time: {wall:.1}s ({:.3}s/step)", wall / steps as f64);
     if let Some(m) = sync_metrics {
         println!(
-            "allreduce_many: {} tensors → {} buckets (cap {} B, ≤{} segments), \
+            "allreduce_many_inplace: {} tensors → {} buckets (cap {} B, ≤{} segments), \
              {} B critical traffic, {:.2e}s model estimate, last exec {:.2e}s",
             m.n_tensors,
             m.buckets.len(),

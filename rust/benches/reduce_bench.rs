@@ -1,24 +1,36 @@
-//! Reducer benches: the combine `⊕` itself (the paper's γ term), plus the
-//! multi-tensor bucketing ablation.
+//! Reducer benches: the combine `⊕` itself (the paper's γ term), the
+//! multi-tensor bucketing ablation, and the **data-plane ablation**
+//! (clone-per-message oracle vs the arena/persistent-pool plane).
 //!
 //! Measures the native rust loops (and, with `--features pjrt`, the
 //! PJRT-executed Pallas kernel) across chunk sizes, derives an effective γ
-//! (s/B) to compare with the paper's Table 2 value (2·10⁻¹⁰ s/B), and
-//! times a DDP-shaped multi-tensor workload through the sequential
-//! per-tensor `allreduce()` loop vs the bucketed pipelined
-//! `allreduce_many()` path, emitting `BENCH_bucketing.json` so the perf
-//! trajectory of the bucketed path is tracked across PRs.
+//! (s/B) to compare with the paper's Table 2 value (2·10⁻¹⁰ s/B), times a
+//! DDP-shaped multi-tensor workload through the sequential per-tensor
+//! `allreduce()` loop vs the bucketed pipelined `allreduce_many()` path
+//! (`BENCH_bucketing.json`), and times single-schedule Allreduces through
+//! the clone-based reference executor vs the warm persistent pool across
+//! message sizes × process counts (`BENCH_dataplane.json`) so the perf
+//! trajectory of both paths accumulates across PRs.
+//!
+//! Set `GAR_BENCH_FAST=1` (CI smoke) to shrink budgets and sizes.
 
 #[path = "harness.rs"]
 mod harness;
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use harness::{bench, black_box, fmt_t};
-use permallreduce::algo::AlgorithmKind;
-use permallreduce::cluster::{NativeReducer, ReduceOp, Reducer};
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use permallreduce::cluster::{
+    oracle, ClusterExecutor, JobIo, NativeReducer, PersistentCluster, ReduceOp, Reducer,
+};
 use permallreduce::coordinator::Communicator;
 use permallreduce::util::Rng;
+
+fn fast_mode() -> bool {
+    std::env::var("GAR_BENCH_FAST").is_ok_and(|v| !v.is_empty() && v != "0")
+}
 
 fn measured_gamma(mut f: impl FnMut(&mut [f32], &[f32]), n: usize) -> f64 {
     let mut rng = Rng::new(3);
@@ -53,6 +65,111 @@ fn ddp_tensor_lens(rng: &mut Rng) -> Vec<usize> {
     lens
 }
 
+/// Reusable-buffer [`JobIo`] for the pool measurement: drives the actual
+/// zero-copy `execute_many_io` path (the one `allreduce_many_inplace`
+/// ships) instead of the Vec-returning compatibility wrapper.
+struct BenchIo<'a> {
+    xs: &'a [Vec<f32>],
+    outs: &'a mut [Vec<f32>],
+}
+
+impl JobIo for BenchIo<'_> {
+    fn fill(&mut self, _job: usize, rank: usize, dst: &mut [f32]) {
+        dst.copy_from_slice(&self.xs[rank]);
+    }
+
+    fn collect(&mut self, _job: usize, rank: usize, src: &[f32]) {
+        self.outs[rank].copy_from_slice(src);
+    }
+}
+
+/// Clone-based data plane (scoped reference executor, a fresh `Vec` per
+/// message hop) vs the arena data plane, per message size × process count.
+/// Three columns per config so the two effects are separable: `clone_s`
+/// (clone plane, scoped threads), `arena_scoped_s` (arena plane, same
+/// scoped-thread spawn/join overhead — isolates the data-plane win), and
+/// `arena_pool_s` (arena plane on warm persistent workers through the
+/// zero-copy `execute_many_io` dispatch — adds the spawn-elimination +
+/// warm-slab win; `speedup` = clone/pool is the headline the ISSUE gates
+/// on). Emits `BENCH_dataplane.json`.
+fn bench_dataplane() {
+    let fast = fast_mode();
+    let sizes: &[usize] = if fast {
+        &[4_096, 65_536, 262_144]
+    } else {
+        &[16_384, 262_144, 2_097_152]
+    };
+    let ps: &[usize] = &[4, 8];
+    let mut rng = Rng::new(0xDA7A);
+
+    println!("\n== data plane: clone-per-message vs arena/persistent-pool ==");
+    let mut rows = String::new();
+    let mut speedups: Vec<f64> = Vec::new();
+    for &p in ps {
+        let pool = PersistentCluster::new(p);
+        let scoped = ClusterExecutor::new();
+        let sched = Arc::new(
+            Algorithm::new(AlgorithmKind::BwOptimal, p)
+                .build(&BuildCtx::default())
+                .unwrap(),
+        );
+        for &n in sizes {
+            let xs: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..n).map(|_| rng.f32()).collect())
+                .collect();
+            let budget_elems: usize = if fast { 4_000_000 } else { 48_000_000 };
+            let iters = (budget_elems / (n * p)).clamp(2, 40);
+            let clone_s = time_mean(iters, || {
+                black_box(oracle::execute_reference(&sched, &xs, ReduceOp::Sum).unwrap());
+            });
+            let arena_scoped_s = time_mean(iters, || {
+                black_box(scoped.execute(&sched, &xs, ReduceOp::Sum).unwrap());
+            });
+            let mut outs: Vec<Vec<f32>> = (0..p).map(|_| vec![0.0f32; n]).collect();
+            let scheds_one = [sched.clone()];
+            let ns_one = [n];
+            let arena_pool_s = time_mean(iters, || {
+                let mut io = BenchIo {
+                    xs: &xs,
+                    outs: &mut outs,
+                };
+                pool.execute_many_io(&scheds_one, &ns_one, ReduceOp::Sum, &mut io)
+                    .unwrap();
+                black_box(&mut outs);
+            });
+            let speedup = clone_s / arena_pool_s;
+            speedups.push(speedup);
+            let bytes = n * 4;
+            println!(
+                "p{p} {:>9} B/rank: clone {} | arena-scoped {} | arena-pool {} → {speedup:.2}×",
+                bytes,
+                fmt_t(clone_s),
+                fmt_t(arena_scoped_s),
+                fmt_t(arena_pool_s),
+            );
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"p\": {p}, \"elems\": {n}, \"bytes_per_rank\": {bytes}, \
+                 \"clone_s\": {clone_s:.6e}, \"arena_scoped_s\": {arena_scoped_s:.6e}, \
+                 \"arena_pool_s\": {arena_pool_s:.6e}, \"speedup\": {speedup:.3}}}"
+            ));
+        }
+    }
+    let min = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+    // The large-message entry per P is the pool's headline (allocator
+    // traffic scales with message size while control overhead does not).
+    let json = format!(
+        "{{\n  \"bench\": \"dataplane\",\n  \"op\": \"sum\",\n  \"algo\": \"bw-optimal\",\n  \
+         \"entries\": [\n{rows}\n  ],\n  \"min_speedup\": {min:.3},\n  \
+         \"max_speedup\": {max:.3}\n}}\n"
+    );
+    std::fs::write("BENCH_dataplane.json", &json).expect("write BENCH_dataplane.json");
+    println!("wrote BENCH_dataplane.json (speedup {min:.2}×–{max:.2}×)");
+}
+
 fn bench_bucketing() {
     let p = 8;
     let mut rng = Rng::new(77);
@@ -67,19 +184,29 @@ fn bench_bucketing() {
         })
         .collect();
     let comm = Communicator::builder(p).build().unwrap();
+    // Hoist the per-tensor rank lists out of the timed region: the
+    // sequential baseline should time the allreduces, not loop-invariant
+    // clones of the inputs.
+    let singles: Vec<Vec<Vec<f32>>> = (0..n_tensors)
+        .map(|ti| (0..p).map(|r| inputs[r][ti].clone()).collect())
+        .collect();
 
+    let budget = if fast_mode() {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
     println!("\n== bucketed vs sequential multi-tensor allreduce ==");
     println!("P={p}, {n_tensors} tensors, {total_bytes} B/rank");
-    bench("multi/sequential-loop", Duration::from_secs(2), || {
-        for ti in 0..n_tensors {
-            let single: Vec<Vec<f32>> = (0..p).map(|r| inputs[r][ti].clone()).collect();
+    bench("multi/sequential-loop", budget, || {
+        for single in &singles {
             black_box(
-                comm.allreduce(&single, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+                comm.allreduce(single, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
                     .unwrap(),
             );
         }
     });
-    bench("multi/bucketed-pipelined", Duration::from_secs(2), || {
+    bench("multi/bucketed-pipelined", budget, || {
         black_box(
             comm.allreduce_many(&inputs, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
                 .unwrap(),
@@ -88,10 +215,9 @@ fn bench_bucketing() {
 
     // Fixed-iteration means for the tracked JSON artifact.
     let seq_s = time_mean(3, || {
-        for ti in 0..n_tensors {
-            let single: Vec<Vec<f32>> = (0..p).map(|r| inputs[r][ti].clone()).collect();
+        for single in &singles {
             black_box(
-                comm.allreduce(&single, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+                comm.allreduce(single, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
                     .unwrap(),
             );
         }
@@ -118,7 +244,11 @@ fn bench_bucketing() {
 }
 
 fn main() {
-    let budget = Duration::from_secs(2);
+    let budget = if fast_mode() {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
     let native = NativeReducer;
     let mut rng = Rng::new(11);
 
@@ -138,6 +268,7 @@ fn main() {
     println!("effective γ (native, 64k chunks): {g_native:.2e} s/B (paper Table 2: 2.0e-10)");
 
     bench_bucketing();
+    bench_dataplane();
 
     #[cfg(feature = "pjrt")]
     bench_pjrt(&mut rng, budget);

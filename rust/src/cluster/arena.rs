@@ -1,0 +1,662 @@
+//! The zero-copy, arena-backed data plane shared by both executors.
+//!
+//! The original executors treated buffers as owned `Vec<T>`s: every `Send`
+//! deep-cloned its payload, every `Recv` adopted (or re-allocated) a fresh
+//! vector, and the per-worker buffer table was rebuilt per call. The
+//! allocator traffic that implies is a hidden fourth term next to the
+//! paper's `α + β·m + γ·m` cost model (§2, eq. 1) — and, as the pipelined
+//! reduction literature (arXiv:2109.12626, arXiv:2006.13112) shows, memory
+//! movement is exactly what dominates large-message Allreduce.
+//!
+//! This module replaces that with three cooperating pieces:
+//!
+//! * [`Arena`] — a per-worker **slab**: one flat `Vec<T>` plus a bump
+//!   allocator. Each live `BufId` maps to a [`SlabSlot`] `(offset, len)`
+//!   instead of an owned vector. `reset()` rewinds the bump cursor without
+//!   releasing the backing storage, so repeated schedules reuse the same
+//!   memory; capacity can be pre-sized from
+//!   [`crate::sched::ScheduleStats::total_alloc_units`].
+//! * [`BlockPool`] / [`Block`] — recycling wire blocks. A sender copies
+//!   slab-resident payloads into one pooled block per message, freezes it
+//!   into an `Arc`, and every further use (multi-destination sends,
+//!   forwarding a received chunk) is a **refcount bump**. When the last
+//!   [`Chunk`] drops, the block's storage returns to the pool — in steady
+//!   state no data-plane memory is ever handed back to the global
+//!   allocator.
+//! * [`DataPlane`] — the schedule interpreter over those two, generic over
+//!   a [`Transport`] (scoped channels, persistent-pool channels) and a
+//!   [`CombineKernel`]. Receivers keep the shared chunk as the buffer's
+//!   backing (zero-copy receive); a `Reduce` into a shared buffer
+//!   materializes it into the slab **fused** with the combine
+//!   (`out[i] = a[i] ⊕ b[i]`), so no intermediate copy is ever made and
+//!   the arithmetic order is bit-identical to the clone-based oracle
+//!   ([`crate::cluster::oracle`]).
+
+use std::sync::{Arc, Mutex};
+
+use crate::sched::{BufId, MicroOp, ProcSchedule};
+
+use super::{ClusterError, Element, ReduceOp};
+
+/// Upper bound on blocks parked in a [`BlockPool`], so a pathological burst
+/// cannot pin memory forever.
+const MAX_PARKED: usize = 256;
+
+/// A recycling pool of wire blocks shared by every worker of one cluster.
+pub struct BlockPool<T: Element> {
+    free: Mutex<Vec<Vec<T>>>,
+}
+
+impl<T: Element> BlockPool<T> {
+    pub fn new() -> BlockPool<T> {
+        BlockPool {
+            free: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Number of blocks currently parked (diagnostics / tests).
+    pub fn parked(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Take a block of exactly `len` elements. Reuses the smallest parked
+    /// vector whose capacity suffices; falls back to growing the largest
+    /// parked one (so capacities converge to the workload's sizes), and
+    /// only allocates fresh storage when the pool is empty.
+    ///
+    /// The contents are **unspecified** (recycled blocks keep their old
+    /// data rather than paying a zeroing pass) — every caller fully
+    /// overwrites the block before sharing it.
+    pub fn take(pool: &Arc<BlockPool<T>>, len: usize) -> Block<T> {
+        let mut data = {
+            let mut free = pool.free.lock().unwrap();
+            // One pass under the lock: best fit (smallest sufficient
+            // capacity), falling back to the largest parked vector so one
+            // block converges to the big size class instead of all of them.
+            let mut best: Option<(usize, usize)> = None; // (idx, capacity)
+            let mut largest: Option<(usize, usize)> = None;
+            for (i, v) in free.iter().enumerate() {
+                let cap = v.capacity();
+                match largest {
+                    Some((_, c)) if c >= cap => {}
+                    _ => largest = Some((i, cap)),
+                }
+                if cap >= len {
+                    match best {
+                        Some((_, c)) if c <= cap => {}
+                        _ => best = Some((i, cap)),
+                    }
+                }
+            }
+            match best.or(largest) {
+                Some((i, _)) => free.swap_remove(i),
+                None => Vec::new(),
+            }
+        };
+        // Truncate (free) rather than clear+resize (memset): only growth
+        // beyond the old length writes memory.
+        if data.len() < len {
+            data.resize(len, T::default());
+        } else {
+            data.truncate(len);
+        }
+        Block {
+            data,
+            pool: pool.clone(),
+        }
+    }
+}
+
+impl<T: Element> Default for BlockPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A uniquely-owned wire block checked out of a [`BlockPool`]. Dropping it
+/// (directly, or as the last `Arc` after [`Block::freeze`]) parks its
+/// storage back in the pool.
+pub struct Block<T: Element> {
+    data: Vec<T>,
+    pool: Arc<BlockPool<T>>,
+}
+
+impl<T: Element> Block<T> {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Freeze into an immutable, shareable block. After this point the
+    /// contents are never mutated again — receivers may safely read through
+    /// their [`Chunk`]s while the sender proceeds.
+    pub fn freeze(self) -> Arc<Block<T>> {
+        Arc::new(self)
+    }
+}
+
+impl<T: Element> Drop for Block<T> {
+    fn drop(&mut self) {
+        let data = std::mem::take(&mut self.data);
+        if data.capacity() > 0 {
+            let mut free = self.pool.free.lock().unwrap();
+            if free.len() < MAX_PARKED {
+                free.push(data);
+            }
+        }
+    }
+}
+
+/// An immutable view of a range of a frozen [`Block`] — the unit of payload
+/// ownership. Cloning bumps the block's refcount; no data moves.
+#[derive(Clone)]
+pub struct Chunk<T: Element> {
+    block: Arc<Block<T>>,
+    off: usize,
+    len: usize,
+}
+
+impl<T: Element> Chunk<T> {
+    pub fn new(block: Arc<Block<T>>, off: usize, len: usize) -> Chunk<T> {
+        debug_assert!(off + len <= block.len());
+        Chunk { block, off, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.block.data[self.off..self.off + self.len]
+    }
+}
+
+/// One message's payload: per-buffer chunks, positionally matching the
+/// sender's buffer list (and thus the receiver's).
+pub type Payload<T> = Vec<Chunk<T>>;
+
+/// A slab slot: `BufId → (offset, len)` into an [`Arena`].
+#[derive(Clone, Copy, Debug)]
+pub struct SlabSlot {
+    pub off: usize,
+    pub len: usize,
+}
+
+/// Per-worker bump-allocated slab.
+pub struct Arena<T: Element> {
+    data: Vec<T>,
+    used: usize,
+    high_water: usize,
+}
+
+impl<T: Element> Arena<T> {
+    pub fn new() -> Arena<T> {
+        Arena {
+            data: Vec::new(),
+            used: 0,
+            high_water: 0,
+        }
+    }
+
+    /// Rewind the bump cursor; capacity is retained.
+    pub fn reset(&mut self) {
+        self.used = 0;
+    }
+
+    /// Current backing capacity in elements.
+    pub fn capacity(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Largest bump watermark ever reached (diagnostics / tests).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Grow the backing storage to at least `total` elements up front
+    /// (e.g. from [`crate::sched::ScheduleStats::total_alloc_units`]).
+    pub fn reserve_elems(&mut self, total: usize) {
+        if self.data.len() < total {
+            self.data.resize(total, T::default());
+        }
+    }
+
+    /// Bump-allocate a slot of `len` elements (contents unspecified).
+    pub fn alloc(&mut self, len: usize) -> SlabSlot {
+        let off = self.used;
+        self.used += len;
+        if self.used > self.data.len() {
+            self.data.resize(self.used, T::default());
+        }
+        if self.used > self.high_water {
+            self.high_water = self.used;
+        }
+        SlabSlot { off, len }
+    }
+
+    pub fn slice(&self, s: SlabSlot) -> &[T] {
+        &self.data[s.off..s.off + s.len]
+    }
+
+    pub fn slice_mut(&mut self, s: SlabSlot) -> &mut [T] {
+        &mut self.data[s.off..s.off + s.len]
+    }
+
+    /// Borrow two **disjoint** slots, the first mutably. Slots from one
+    /// bump pass never overlap, which is what makes this total.
+    pub fn disjoint_mut(&mut self, dst: SlabSlot, src: SlabSlot) -> (&mut [T], &[T]) {
+        debug_assert!(
+            dst.off + dst.len <= src.off || src.off + src.len <= dst.off,
+            "overlapping slab slots {dst:?} / {src:?}"
+        );
+        if dst.off < src.off {
+            let (a, b) = self.data.split_at_mut(src.off);
+            (&mut a[dst.off..dst.off + dst.len], &b[..src.len])
+        } else {
+            let (a, b) = self.data.split_at_mut(dst.off);
+            (&mut b[..dst.len], &a[src.off..src.off + src.len])
+        }
+    }
+}
+
+impl<T: Element> Default for Arena<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Where a live buffer's bytes currently are.
+#[derive(Clone)]
+pub enum BufSlot<T: Element> {
+    /// Owned by this worker, in its slab (writable).
+    Slab(SlabSlot),
+    /// A received payload view, shared with the sender's block (read-only;
+    /// forwarding it is a refcount bump, reducing into it materializes a
+    /// slab slot via the fused combine).
+    Shared(Chunk<T>),
+}
+
+/// The combine `⊕` as the engine needs it: an in-place fold plus a fused
+/// "materialize while combining" form.
+pub trait CombineKernel<T: Element>: Sync {
+    /// `dst[i] ⊕= src[i]`.
+    fn fold(&self, dst: &mut [T], src: &[T]);
+
+    /// `out[i] = a[i] ⊕ b[i]` with `out` uninitialized on entry. The
+    /// default copies `a` then folds `b`, which keeps arbitrary backends
+    /// (e.g. a PJRT reducer) bit-identical to the two-step form.
+    fn fuse(&self, out: &mut [T], a: &[T], b: &[T]) {
+        out.copy_from_slice(a);
+        self.fold(out, b);
+    }
+}
+
+/// The native element-wise kernel for a [`ReduceOp`].
+pub struct NativeKernel(pub ReduceOp);
+
+impl<T: Element> CombineKernel<T> for NativeKernel {
+    fn fold(&self, dst: &mut [T], src: &[T]) {
+        T::combine(self.0, dst, src);
+    }
+
+    fn fuse(&self, out: &mut [T], a: &[T], b: &[T]) {
+        T::combine_from(self.0, out, a, b);
+    }
+}
+
+/// Adapter for closure-shaped combines (the custom-[`crate::cluster::Reducer`]
+/// path); uses the default copy-then-fold fuse.
+pub struct FoldKernel<'a, T: Element>(pub &'a (dyn Fn(&mut [T], &[T]) + Sync));
+
+impl<T: Element> CombineKernel<T> for FoldKernel<'_, T> {
+    fn fold(&self, dst: &mut [T], src: &[T]) {
+        (self.0)(dst, src);
+    }
+}
+
+/// The message layer a [`DataPlane`] runs over. Implementations own the
+/// channels, tagging, fault injection, and out-of-order stashing.
+pub trait Transport<T: Element> {
+    /// Post one message tagged with the global `step` to `to`.
+    fn send(&mut self, to: usize, step: usize, payload: Payload<T>);
+
+    /// Blocking receive of the message tagged `(step, from)`.
+    fn recv(&mut self, step: usize, from: usize) -> Result<Payload<T>, ClusterError>;
+}
+
+/// Payload part under construction (private to [`DataPlane::build_payload`]).
+enum Part<T: Element> {
+    /// Forward an already-shared chunk (refcount bump).
+    Fwd(Chunk<T>),
+    /// Range `(off, len)` of the freshly filled wire block.
+    Fresh(usize, usize),
+}
+
+/// A worker's half of the data plane: slab arena + slot table + wire-block
+/// pool. Lives as long as the worker, so steady-state reuse is free.
+pub struct DataPlane<T: Element> {
+    arena: Arena<T>,
+    slots: Vec<Option<BufSlot<T>>>,
+    pool: Arc<BlockPool<T>>,
+}
+
+impl<T: Element> DataPlane<T> {
+    pub fn new(pool: Arc<BlockPool<T>>) -> DataPlane<T> {
+        DataPlane {
+            arena: Arena::new(),
+            slots: Vec::new(),
+            pool,
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<BlockPool<T>> {
+        &self.pool
+    }
+
+    pub fn arena(&self) -> &Arena<T> {
+        &self.arena
+    }
+
+    /// Pre-size the slab (see [`Arena::reserve_elems`]).
+    pub fn reserve_elems(&mut self, total: usize) {
+        self.arena.reserve_elems(total);
+    }
+
+    /// Execute one schedule for rank `proc`: read `input`, run every step
+    /// with message tags offset by `step_off`, and write the fully reduced
+    /// result into `out` (`out.len() == input.len()`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_schedule(
+        &mut self,
+        s: &ProcSchedule,
+        proc: usize,
+        input: &[T],
+        step_off: usize,
+        transport: &mut dyn Transport<T>,
+        kernel: &dyn CombineKernel<T>,
+        out: &mut [T],
+    ) -> Result<(), ClusterError> {
+        let n = input.len();
+        debug_assert_eq!(out.len(), n);
+        if n == 0 {
+            // Nothing moves for this schedule on any rank (lengths are
+            // validated equal), so every worker skips it symmetrically.
+            return Ok(());
+        }
+        self.arena.reset();
+        let nb = s.max_buf_id() as usize;
+        self.slots.clear();
+        self.slots.resize_with(nb, || None);
+
+        for &(id, seg) in &s.init[proc] {
+            let (lo, hi) = s.unit_to_elems(seg, n);
+            let slot = self.arena.alloc(hi - lo);
+            self.arena.slice_mut(slot).copy_from_slice(&input[lo..hi]);
+            self.slots[id as usize] = Some(BufSlot::Slab(slot));
+        }
+
+        if let Err(e) = self.run_steps(s, proc, step_off, transport, kernel) {
+            // Drop any shared chunks before surfacing the error, so their
+            // wire blocks return to the pool even on a failed call (the
+            // plane may live on inside a persistent worker).
+            self.slots.clear();
+            return Err(e);
+        }
+
+        let mut cursor = 0usize;
+        for &b in &s.result[proc] {
+            let src: &[T] = match self.slots[b as usize].as_ref().expect("result buffer dead") {
+                BufSlot::Slab(sl) => self.arena.slice(*sl),
+                BufSlot::Shared(c) => c.as_slice(),
+            };
+            out[cursor..cursor + src.len()].copy_from_slice(src);
+            cursor += src.len();
+        }
+        debug_assert_eq!(cursor, n);
+        // Drop shared chunks promptly so their blocks return to the pool.
+        self.slots.clear();
+        Ok(())
+    }
+
+    /// The step loop of [`DataPlane::run_schedule`], factored out so the
+    /// caller can clean the slot table on the error path.
+    fn run_steps(
+        &mut self,
+        s: &ProcSchedule,
+        proc: usize,
+        step_off: usize,
+        transport: &mut dyn Transport<T>,
+        kernel: &dyn CombineKernel<T>,
+    ) -> Result<(), ClusterError> {
+        for (local_step, st) in s.steps.iter().enumerate() {
+            let step = step_off + local_step;
+            for m in st.ops[proc].iter().flat_map(|o| o.micro()) {
+                match m {
+                    MicroOp::Send { to, bufs: ids } => {
+                        let payload = self.build_payload(ids);
+                        transport.send(to, step, payload);
+                    }
+                    MicroOp::Recv { from, bufs: ids } => {
+                        let payload = transport.recv(step, from)?;
+                        if payload.len() != ids.len() {
+                            return Err(ClusterError::Protocol {
+                                proc,
+                                detail: format!(
+                                    "step {step}: payload arity {} != expected {}",
+                                    payload.len(),
+                                    ids.len()
+                                ),
+                            });
+                        }
+                        for (&b, chunk) in ids.iter().zip(payload) {
+                            self.slots[b as usize] = Some(BufSlot::Shared(chunk));
+                        }
+                    }
+                    MicroOp::Reduce { dst, src } => self.reduce(dst, src, kernel),
+                    MicroOp::Copy { dst, src } => self.copy(dst, src),
+                    MicroOp::Free { buf } => {
+                        self.slots[buf as usize] = None;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Assemble one message: shared chunks are forwarded by refcount bump;
+    /// slab-resident buffers are copied once into a pooled wire block that
+    /// is then frozen and shared with the receiver.
+    fn build_payload(&mut self, ids: &[BufId]) -> Payload<T> {
+        let mut slab_total = 0usize;
+        let mut any_slab = false;
+        for &b in ids {
+            if let BufSlot::Slab(sl) = self.slots[b as usize]
+                .as_ref()
+                .expect("send of dead buffer")
+            {
+                slab_total += sl.len;
+                any_slab = true;
+            }
+        }
+        let mut wire = if any_slab {
+            Some(BlockPool::take(&self.pool, slab_total))
+        } else {
+            None
+        };
+        let mut parts: Vec<Part<T>> = Vec::with_capacity(ids.len());
+        let mut cursor = 0usize;
+        for &b in ids {
+            match self.slots[b as usize].as_ref().expect("send of dead buffer") {
+                BufSlot::Shared(c) => parts.push(Part::Fwd(c.clone())),
+                BufSlot::Slab(sl) => {
+                    let w = wire.as_mut().expect("wire block exists for slab parts");
+                    w.data_mut()[cursor..cursor + sl.len].copy_from_slice(self.arena.slice(*sl));
+                    parts.push(Part::Fresh(cursor, sl.len));
+                    cursor += sl.len;
+                }
+            }
+        }
+        let frozen = wire.map(Block::freeze);
+        parts
+            .into_iter()
+            .map(|p| match p {
+                Part::Fwd(c) => c,
+                Part::Fresh(off, len) => {
+                    Chunk::new(frozen.clone().expect("frozen wire block"), off, len)
+                }
+            })
+            .collect()
+    }
+
+    fn reduce(&mut self, dst: BufId, src: BufId, kernel: &dyn CombineKernel<T>) {
+        let s_slot = self.slots[src as usize]
+            .clone()
+            .expect("reduce from dead buffer");
+        let d_slot = self.slots[dst as usize]
+            .clone()
+            .expect("reduce into dead buffer");
+        match d_slot {
+            BufSlot::Slab(d) => match s_slot {
+                BufSlot::Slab(s) => {
+                    let (dv, sv) = self.arena.disjoint_mut(d, s);
+                    kernel.fold(dv, sv);
+                }
+                BufSlot::Shared(c) => kernel.fold(self.arena.slice_mut(d), c.as_slice()),
+            },
+            BufSlot::Shared(c_dst) => {
+                // Materialize the shared payload into the slab, fusing the
+                // combine into the materializing write (no staging copy).
+                let d = self.arena.alloc(c_dst.len());
+                match s_slot {
+                    BufSlot::Shared(c_src) => {
+                        kernel.fuse(self.arena.slice_mut(d), c_dst.as_slice(), c_src.as_slice());
+                    }
+                    BufSlot::Slab(s) => {
+                        let (dv, sv) = self.arena.disjoint_mut(d, s);
+                        kernel.fuse(dv, c_dst.as_slice(), sv);
+                    }
+                }
+                self.slots[dst as usize] = Some(BufSlot::Slab(d));
+            }
+        }
+    }
+
+    fn copy(&mut self, dst: BufId, src: BufId) {
+        let s_slot = self.slots[src as usize]
+            .clone()
+            .expect("copy of dead buffer");
+        let new_slot = match s_slot {
+            // Shared source: the copy is purely logical (refcount bump).
+            BufSlot::Shared(c) => BufSlot::Shared(c),
+            BufSlot::Slab(s) => {
+                let d = self.arena.alloc(s.len);
+                let (dv, sv) = self.arena.disjoint_mut(d, s);
+                dv.copy_from_slice(sv);
+                BufSlot::Slab(d)
+            }
+        };
+        self.slots[dst as usize] = Some(new_slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_bump_reset_and_disjoint_views() {
+        let mut a: Arena<f32> = Arena::new();
+        let s1 = a.alloc(4);
+        let s2 = a.alloc(3);
+        a.slice_mut(s1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        a.slice_mut(s2).copy_from_slice(&[10.0, 20.0, 30.0]);
+        assert_eq!(a.slice(s1), &[1.0, 2.0, 3.0, 4.0]);
+        let (d, s) = a.disjoint_mut(s2, s1);
+        d[0] += s[0];
+        assert_eq!(a.slice(s2), &[11.0, 20.0, 30.0]);
+        assert_eq!(a.high_water(), 7);
+        let cap = a.capacity();
+        a.reset();
+        let s3 = a.alloc(5);
+        assert_eq!(s3.off, 0, "reset rewinds the bump cursor");
+        assert_eq!(a.capacity(), cap, "reset retains capacity");
+    }
+
+    #[test]
+    fn block_pool_recycles_storage() {
+        let pool = Arc::new(BlockPool::<f32>::new());
+        let mut b = BlockPool::take(&pool, 100);
+        b.data_mut()[0] = 7.0;
+        assert_eq!(pool.parked(), 0);
+        drop(b);
+        assert_eq!(pool.parked(), 1, "dropped block parks its storage");
+        let b2 = BlockPool::take(&pool, 50);
+        assert_eq!(pool.parked(), 0, "take reuses the parked block");
+        // Contents are unspecified on reuse (no zeroing pass) — only the
+        // length contract holds.
+        assert_eq!(b2.len(), 50);
+    }
+
+    #[test]
+    fn frozen_block_returns_to_pool_after_last_chunk_drops() {
+        let pool = Arc::new(BlockPool::<f32>::new());
+        let mut b = BlockPool::take(&pool, 8);
+        b.data_mut().copy_from_slice(&[1.0; 8]);
+        let frozen = b.freeze();
+        let c1 = Chunk::new(frozen.clone(), 0, 4);
+        let c2 = Chunk::new(frozen.clone(), 4, 4);
+        drop(frozen);
+        assert_eq!(c1.as_slice(), &[1.0; 4]);
+        assert_eq!(c2.as_slice(), &[1.0; 4]);
+        drop(c1);
+        assert_eq!(pool.parked(), 0, "block still alive through c2");
+        drop(c2);
+        assert_eq!(pool.parked(), 1, "last chunk drop parks the block");
+    }
+
+    #[test]
+    fn fused_combine_is_bit_identical_to_copy_then_fold() {
+        let ops = ReduceOp::all();
+        let a: Vec<f32> = (0..64).map(|i| (i as f32).sin() * 3.0).collect();
+        let b: Vec<f32> = (0..64).map(|i| (i as f32).cos() * 2.0).collect();
+        for op in ops {
+            let kernel = NativeKernel(op);
+            let mut fused = vec![0.0f32; 64];
+            <NativeKernel as CombineKernel<f32>>::fuse(&kernel, &mut fused, &a, &b);
+            let mut two_step = a.clone();
+            <NativeKernel as CombineKernel<f32>>::fold(&kernel, &mut two_step, &b);
+            for (x, y) in fused.iter().zip(&two_step) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_lengths_are_fine() {
+        let pool = Arc::new(BlockPool::<f32>::new());
+        let b = BlockPool::take(&pool, 0);
+        assert!(b.is_empty());
+        let frozen = b.freeze();
+        let c = Chunk::new(frozen, 0, 0);
+        assert!(c.is_empty());
+        assert!(c.as_slice().is_empty());
+        let mut a: Arena<f32> = Arena::new();
+        let s = a.alloc(0);
+        assert!(a.slice(s).is_empty());
+    }
+}

@@ -10,18 +10,26 @@
 //! Reductions run through a pluggable [`Reducer`] so the hot combine can be
 //! served either by the in-crate native loops or by the AOT-compiled Pallas
 //! kernel via PJRT ([`crate::runtime`]).
+//!
+//! Both executors run on the zero-copy **arena data plane** ([`arena`]):
+//! per-worker slab buffers, `Arc`-shared wire blocks, and fused
+//! receive-reduce. The original clone-per-message semantics survive in
+//! [`oracle`] as the differential-test baseline.
 
+pub mod arena;
+pub mod oracle;
 pub mod persistent;
 pub mod reducer;
 
-pub use persistent::{PersistentCluster, PoolJob};
+pub use persistent::{JobIo, PersistentCluster, PoolJob};
 pub use reducer::{NativeReducer, ReduceError, Reducer};
 
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Duration;
 
-use crate::sched::{BufId, MicroOp, ProcSchedule};
+use crate::sched::ProcSchedule;
 
 /// MPI-style combine operation. All ops are commutative and associative —
 /// the cyclic-pattern algorithms reorder operands (paper §3 notes cyclic
@@ -41,8 +49,16 @@ impl ReduceOp {
 }
 
 /// Element types the native executor supports.
-pub trait Element: Copy + Send + Sync + std::fmt::Debug + 'static {
+pub trait Element: Copy + Default + Send + Sync + std::fmt::Debug + 'static {
+    /// `dst[i] ⊕= src[i]`.
     fn combine(op: ReduceOp, dst: &mut [Self], src: &[Self]);
+
+    /// `out[i] = a[i] ⊕ b[i]` — the fused materialize-and-combine the arena
+    /// data plane uses when a received (shared, read-only) payload is
+    /// reduced into a slab slot. Must apply operands in exactly
+    /// [`Element::combine`]'s order (`a` where `combine` has `dst`) so the
+    /// arena and clone data planes stay bit-identical.
+    fn combine_from(op: ReduceOp, out: &mut [Self], a: &[Self], b: &[Self]);
 }
 
 macro_rules! impl_element {
@@ -61,6 +77,24 @@ macro_rules! impl_element {
                         .iter_mut()
                         .zip(src)
                         .for_each(|(d, &s)| *d = if s < *d { s } else { *d }),
+                }
+            }
+
+            fn combine_from(op: ReduceOp, out: &mut [Self], a: &[Self], b: &[Self]) {
+                debug_assert_eq!(out.len(), a.len());
+                debug_assert_eq!(out.len(), b.len());
+                let ab = a.iter().zip(b);
+                match op {
+                    ReduceOp::Sum => out.iter_mut().zip(ab).for_each(|(o, (&x, &y))| *o = x + y),
+                    ReduceOp::Prod => out.iter_mut().zip(ab).for_each(|(o, (&x, &y))| *o = x * y),
+                    ReduceOp::Max => out
+                        .iter_mut()
+                        .zip(ab)
+                        .for_each(|(o, (&x, &y))| *o = if y > x { y } else { x }),
+                    ReduceOp::Min => out
+                        .iter_mut()
+                        .zip(ab)
+                        .for_each(|(o, (&x, &y))| *o = if y < x { y } else { x }),
                 }
             }
         }
@@ -132,10 +166,37 @@ impl std::fmt::Display for ClusterError {
 
 impl std::error::Error for ClusterError {}
 
-struct Msg<T> {
+/// Step-tag offset applied by [`Fault::MisTagMessage`] — far beyond any
+/// legitimate global step tag, so receivers flag it as protocol corruption.
+pub(crate) const MISTAG_OFFSET: usize = 1_000_000;
+
+/// Resolve a potential injected fault for a message about to be posted:
+/// `None` = the "network" drops it, `Some(tag)` = deliver with this tag.
+pub(crate) fn fault_tag(
+    fault: &Option<Fault>,
     step: usize,
     from: usize,
-    payload: Vec<Vec<T>>,
+    to: usize,
+) -> Option<usize> {
+    match *fault {
+        Some(Fault::DropMessage { step: fs, from: ff, to: ft })
+            if fs == step && ff == from && ft == to =>
+        {
+            None
+        }
+        Some(Fault::MisTagMessage { step: fs, from: ff, to: ft })
+            if fs == step && ff == from && ft == to =>
+        {
+            Some(step + MISTAG_OFFSET)
+        }
+        _ => Some(step),
+    }
+}
+
+struct Msg<T: Element> {
+    step: usize,
+    from: usize,
+    payload: arena::Payload<T>,
 }
 
 /// One bucket job for [`ClusterExecutor::execute_many`]: a schedule plus the
@@ -174,8 +235,8 @@ impl ClusterExecutor {
         inputs: &[Vec<T>],
         op: ReduceOp,
     ) -> Result<Vec<Vec<T>>, ClusterError> {
-        let combine = move |dst: &mut [T], src: &[T]| T::combine(op, dst, src);
-        let mut out = self.execute_many_with(&[Job { schedule, inputs }], &combine)?;
+        let kernel = arena::NativeKernel(op);
+        let mut out = self.execute_many_with(&[Job { schedule, inputs }], &kernel)?;
         Ok(out.pop().expect("one job in, one result out"))
     }
 
@@ -192,7 +253,8 @@ impl ClusterExecutor {
                 .combine(op, dst, src)
                 .expect("reducer failed on the hot path")
         };
-        let mut out = self.execute_many_with(&[Job { schedule, inputs }], &combine)?;
+        let kernel = arena::FoldKernel(&combine);
+        let mut out = self.execute_many_with(&[Job { schedule, inputs }], &kernel)?;
         Ok(out.pop().expect("one job in, one result out"))
     }
 
@@ -210,14 +272,14 @@ impl ClusterExecutor {
         jobs: &[Job<'_, T>],
         op: ReduceOp,
     ) -> Result<Vec<Vec<Vec<T>>>, ClusterError> {
-        let combine = move |dst: &mut [T], src: &[T]| T::combine(op, dst, src);
-        self.execute_many_with(jobs, &combine)
+        let kernel = arena::NativeKernel(op);
+        self.execute_many_with(jobs, &kernel)
     }
 
     fn execute_many_with<T: Element>(
         &self,
         jobs: &[Job<'_, T>],
-        combine: &(dyn Fn(&mut [T], &[T]) + Sync),
+        kernel: &dyn arena::CombineKernel<T>,
     ) -> Result<Vec<Vec<Vec<T>>>, ClusterError> {
         if jobs.is_empty() {
             return Ok(Vec::new());
@@ -243,6 +305,11 @@ impl ClusterExecutor {
                 )));
             }
         }
+        // Fast path: nothing to move on any rank for any job — skip the
+        // whole thread dispatch.
+        if jobs.iter().all(|job| job.inputs[0].is_empty()) {
+            return Ok(jobs.iter().map(|_| vec![Vec::new(); p]).collect());
+        }
         // Global step-tag offsets per job.
         let mut offs = Vec::with_capacity(jobs.len());
         let mut total_steps = 0usize;
@@ -251,7 +318,9 @@ impl ClusterExecutor {
             total_steps += job.schedule.steps.len();
         }
 
-        // One inbox per process; senders cloned everywhere.
+        // One inbox per process; senders cloned everywhere. The wire-block
+        // pool is shared by all workers of this call, so blocks recycle
+        // across steps and buckets within the dispatch.
         let mut txs = Vec::with_capacity(p);
         let mut rxs = Vec::with_capacity(p);
         for _ in 0..p {
@@ -259,6 +328,7 @@ impl ClusterExecutor {
             txs.push(tx);
             rxs.push(Some(rx));
         }
+        let pool = Arc::new(arena::BlockPool::<T>::new());
 
         let opts = &self.opts;
         let mut outputs: Vec<Result<Vec<Vec<T>>, ClusterError>> = Vec::with_capacity(p);
@@ -267,6 +337,7 @@ impl ClusterExecutor {
             for proc in 0..p {
                 let rx = rxs[proc].take().unwrap();
                 let txs = txs.clone();
+                let pool = pool.clone();
                 let wjobs: Vec<WorkerJob<'_, T>> = jobs
                     .iter()
                     .zip(&offs)
@@ -277,7 +348,7 @@ impl ClusterExecutor {
                     })
                     .collect();
                 handles.push(scope.spawn(move || {
-                    worker(&wjobs, total_steps, proc, rx, &txs, combine, opts)
+                    worker(&wjobs, total_steps, proc, rx, &txs, kernel, opts, pool)
                 }));
             }
             drop(txs);
@@ -309,181 +380,100 @@ struct WorkerJob<'a, T> {
     step_off: usize,
 }
 
-/// Per-process execution of a sequence of jobs (no barrier between jobs).
+/// The scoped executor's [`arena::Transport`]: fault injection on the send
+/// side, timeout + protocol-window checks and an out-of-order stash on the
+/// receive side. The stash is shared across jobs (a fast peer may already
+/// be sending the next bucket's traffic).
+struct ScopedTransport<'a, T: Element> {
+    proc: usize,
+    total_steps: usize,
+    rx: mpsc::Receiver<Msg<T>>,
+    txs: &'a [mpsc::Sender<Msg<T>>],
+    pending: HashMap<(usize, usize), arena::Payload<T>>,
+    opts: &'a ExecOptions,
+}
+
+impl<T: Element> arena::Transport<T> for ScopedTransport<'_, T> {
+    fn send(&mut self, to: usize, step: usize, payload: arena::Payload<T>) {
+        if let Some(tag) = fault_tag(&self.opts.fault, step, self.proc, to) {
+            // A send can only fail if the receiver already exited —
+            // surfaced on the receiver side as a timeout/panic.
+            let _ = self.txs[to].send(Msg {
+                step: tag,
+                from: self.proc,
+                payload,
+            });
+        }
+    }
+
+    fn recv(&mut self, step: usize, from: usize) -> Result<arena::Payload<T>, ClusterError> {
+        if let Some(pl) = self.pending.remove(&(step, from)) {
+            return Ok(pl);
+        }
+        loop {
+            let msg = self.rx.recv_timeout(self.opts.recv_timeout).map_err(|_| {
+                ClusterError::RecvTimeout {
+                    proc: self.proc,
+                    step,
+                    from,
+                }
+            })?;
+            if msg.step == step && msg.from == from {
+                return Ok(msg.payload);
+            }
+            // Valid global tags span 0..total_steps.
+            if msg.step < step || msg.step >= self.total_steps {
+                return Err(ClusterError::Protocol {
+                    proc: self.proc,
+                    detail: format!(
+                        "unexpected message tag (step {}, from {}) while waiting for \
+                         (step {step}, from {from})",
+                        msg.step, msg.from
+                    ),
+                });
+            }
+            self.pending.insert((msg.step, msg.from), msg.payload);
+        }
+    }
+}
+
+/// Per-process execution of a sequence of jobs (no barrier between jobs) on
+/// the arena data plane.
+#[allow(clippy::too_many_arguments)]
 fn worker<T: Element>(
     jobs: &[WorkerJob<'_, T>],
     total_steps: usize,
     proc: usize,
     rx: mpsc::Receiver<Msg<T>>,
     txs: &[mpsc::Sender<Msg<T>>],
-    combine: &(dyn Fn(&mut [T], &[T]) + Sync),
+    kernel: &dyn arena::CombineKernel<T>,
     opts: &ExecOptions,
+    pool: Arc<arena::BlockPool<T>>,
 ) -> Result<Vec<Vec<T>>, ClusterError> {
-    // Out-of-order message stash, shared across jobs (a fast peer may
-    // already be sending the next bucket's traffic).
-    let mut pending: HashMap<(usize, usize), Vec<Vec<T>>> = HashMap::new();
+    let mut plane = arena::DataPlane::new(pool);
+    let mut transport = ScopedTransport {
+        proc,
+        total_steps,
+        rx,
+        txs,
+        pending: HashMap::new(),
+        opts,
+    };
     let mut results = Vec::with_capacity(jobs.len());
-
     for job in jobs {
-        match run_job(job, total_steps, proc, &rx, txs, combine, opts, &mut pending) {
-            Ok(out) => results.push(out),
-            Err(e) => return Err(e),
-        }
+        let mut out = vec![T::default(); job.input.len()];
+        plane.run_schedule(
+            job.schedule,
+            proc,
+            job.input,
+            job.step_off,
+            &mut transport,
+            kernel,
+            &mut out,
+        )?;
+        results.push(out);
     }
     Ok(results)
-}
-
-/// Execute one job's schedule on this rank.
-#[allow(clippy::too_many_arguments)]
-fn run_job<T: Element>(
-    job: &WorkerJob<'_, T>,
-    total_steps: usize,
-    proc: usize,
-    rx: &mpsc::Receiver<Msg<T>>,
-    txs: &[mpsc::Sender<Msg<T>>],
-    combine: &(dyn Fn(&mut [T], &[T]) + Sync),
-    opts: &ExecOptions,
-    pending: &mut HashMap<(usize, usize), Vec<Vec<T>>>,
-) -> Result<Vec<T>, ClusterError> {
-    let s = job.schedule;
-    let input = job.input;
-    let n = input.len();
-    if n == 0 {
-        // Nothing to move for this job on any rank (lengths are validated
-        // equal across ranks), so every worker skips it symmetrically.
-        return Ok(Vec::new());
-    }
-    let nb = s.max_buf_id() as usize;
-    let mut bufs: Vec<Option<Vec<T>>> = vec![None; nb];
-
-    for &(id, seg) in &s.init[proc] {
-        let (lo, hi) = s.unit_to_elems(seg, n);
-        bufs[id as usize] = Some(input[lo..hi].to_vec());
-    }
-
-    for (local_step, st) in s.steps.iter().enumerate() {
-        let step = job.step_off + local_step;
-        // Move-semantics sends: a buffer that is freed later in this step
-        // and not otherwise read can be *taken* into the message instead of
-        // cloned — this makes Ring's per-step data movement copy-free.
-        let ops = &st.ops[proc];
-        let mut takeable: Vec<BufId> = Vec::new();
-        for m in ops.iter().flat_map(|o| o.micro()) {
-            if let MicroOp::Free { buf } = m {
-                takeable.push(buf);
-            }
-        }
-        takeable.retain(|b| {
-            ops.iter().flat_map(|o| o.micro()).all(|m| match m {
-                MicroOp::Reduce { dst, src } => dst != *b && src != *b,
-                MicroOp::Copy { src, .. } => src != *b,
-                _ => true,
-            })
-        });
-
-        for m in ops.iter().flat_map(|o| o.micro()) {
-            match m {
-                MicroOp::Send { to, bufs: ids } => {
-                    let fault_hit = matches!(
-                        opts.fault,
-                        Some(Fault::DropMessage { step: fs, from, to: ft })
-                            if fs == step && from == proc && ft == to
-                    );
-                    if fault_hit {
-                        continue; // message lost in the "network"
-                    }
-                    let mistag = matches!(
-                        opts.fault,
-                        Some(Fault::MisTagMessage { step: fs, from, to: ft })
-                            if fs == step && from == proc && ft == to
-                    );
-                    let payload: Vec<Vec<T>> = ids
-                        .iter()
-                        .map(|&b| {
-                            if takeable.contains(&b) {
-                                bufs[b as usize].take().expect("send of dead buffer")
-                            } else {
-                                bufs[b as usize]
-                                    .as_ref()
-                                    .expect("send of dead buffer")
-                                    .clone()
-                            }
-                        })
-                        .collect();
-                    let msg = Msg {
-                        step: if mistag { step + 1_000_000 } else { step },
-                        from: proc,
-                        payload,
-                    };
-                    // A send can only fail if the receiver already exited —
-                    // surfaced on the receiver side as a timeout/panic.
-                    let _ = txs[to].send(msg);
-                }
-                MicroOp::Recv { from, bufs: ids } => {
-                    let payload = match pending.remove(&(step, from)) {
-                        Some(pl) => pl,
-                        None => loop {
-                            let msg = rx.recv_timeout(opts.recv_timeout).map_err(|_| {
-                                ClusterError::RecvTimeout {
-                                    proc,
-                                    step,
-                                    from,
-                                }
-                            })?;
-                            if msg.step == step && msg.from == from {
-                                break msg.payload;
-                            }
-                            if msg.step < step || msg.step > total_steps {
-                                return Err(ClusterError::Protocol {
-                                    proc,
-                                    detail: format!(
-                                        "unexpected message tag (step {}, from {}) while \
-                                         waiting for (step {step}, from {from})",
-                                        msg.step, msg.from
-                                    ),
-                                });
-                            }
-                            pending.insert((msg.step, msg.from), msg.payload);
-                        },
-                    };
-                    if payload.len() != ids.len() {
-                        return Err(ClusterError::Protocol {
-                            proc,
-                            detail: format!(
-                                "step {step}: payload arity {} != expected {}",
-                                payload.len(),
-                                ids.len()
-                            ),
-                        });
-                    }
-                    for (&b, chunk) in ids.iter().zip(payload) {
-                        bufs[b as usize] = Some(chunk);
-                    }
-                }
-                MicroOp::Reduce { dst, src } => {
-                    let mut d = bufs[dst as usize].take().expect("reduce into dead buffer");
-                    let sv = bufs[src as usize].as_ref().expect("reduce from dead buffer");
-                    combine(&mut d, sv);
-                    bufs[dst as usize] = Some(d);
-                }
-                MicroOp::Copy { dst, src } => {
-                    let c = bufs[src as usize].as_ref().expect("copy of dead buffer").clone();
-                    bufs[dst as usize] = Some(c);
-                }
-                MicroOp::Free { buf } => {
-                    bufs[buf as usize] = None;
-                }
-            }
-        }
-    }
-
-    // Assemble the output in result order (verified to tile [0, n_units)).
-    let mut out = Vec::with_capacity(n);
-    for &b in &s.result[proc] {
-        out.extend_from_slice(bufs[b as usize].as_ref().expect("result buffer dead"));
-    }
-    debug_assert_eq!(out.len(), n);
-    Ok(out)
 }
 
 /// Reference Allreduce computed directly (for test oracles): element-wise
@@ -700,6 +690,53 @@ mod tests {
                 assert_close(out, &want, 1e-5, &format!("job {ji} rank {rank}"));
             }
         }
+    }
+
+    /// Faults injected *inside the second bucket's step range* must be
+    /// detected: the global step-tag offsets (bucket 1 starts at tag K)
+    /// are what makes the multi-bucket protocol unambiguous.
+    #[test]
+    fn execute_many_detects_faults_across_bucket_boundaries() {
+        let p = 5;
+        let ring = Algorithm::new(AlgorithmKind::Ring, p).build(&BuildCtx::default()).unwrap();
+        let k = ring.num_steps();
+        // Ring sends r → r+1 on every step, so the 2→3 edge exists at the
+        // second bucket's local step 1 (global tag k + 1).
+        for fault in [
+            Fault::DropMessage { step: k + 1, from: 2, to: 3 },
+            Fault::MisTagMessage { step: k + 1, from: 2, to: 3 },
+        ] {
+            let mut opts = ExecOptions::default();
+            opts.recv_timeout = Duration::from_millis(200);
+            opts.fault = Some(fault);
+            let exec = ClusterExecutor::with_options(opts);
+            let ins0 = inputs(p, 40, 0xF0);
+            let ins1 = inputs(p, 23, 0xF1);
+            let jobs = [
+                Job { schedule: &ring, inputs: &ins0 },
+                Job { schedule: &ring, inputs: &ins1 },
+            ];
+            let err = exec.execute_many(&jobs, ReduceOp::Sum).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    ClusterError::RecvTimeout { .. }
+                        | ClusterError::Protocol { .. }
+                        | ClusterError::WorkerPanic { .. }
+                ),
+                "{fault:?}: {err:?}"
+            );
+        }
+        // The same workload with no fault completes (the tags themselves
+        // are sound).
+        let exec = ClusterExecutor::new();
+        let ins0 = inputs(p, 40, 0xF0);
+        let ins1 = inputs(p, 23, 0xF1);
+        let jobs = [
+            Job { schedule: &ring, inputs: &ins0 },
+            Job { schedule: &ring, inputs: &ins1 },
+        ];
+        exec.execute_many(&jobs, ReduceOp::Sum).unwrap();
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! The clone-per-message reference data plane.
+//!
+//! This is the original executor semantics — every buffer an owned
+//! `Vec<T>`, every send a deep clone (modulo the move-on-last-use
+//! optimization), every receive an adopted vector — preserved verbatim as
+//! the **differential-test oracle** for the arena data plane
+//! ([`crate::cluster::arena`]) and as the clone-based baseline of the
+//! `reduce_bench` data-plane ablation. It is deliberately simple: no fault
+//! injection, no custom reducers, one schedule per call.
+//!
+//! The arena path must match this oracle **bit-exactly** for every
+//! `ReduceOp` (see `tests/differential.rs`): both planes apply combines in
+//! the same operand order, so even non-associative float rounding agrees.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::sched::{BufId, MicroOp, ProcSchedule};
+
+use super::{ClusterError, Element, ReduceOp};
+
+struct Msg<T> {
+    step: usize,
+    from: usize,
+    payload: Vec<Vec<T>>,
+}
+
+/// Execute `schedule` on `inputs` (one vector per rank, equal lengths) with
+/// the clone-based data plane. Returns the per-rank output vectors.
+pub fn execute_reference<T: Element>(
+    schedule: &ProcSchedule,
+    inputs: &[Vec<T>],
+    op: ReduceOp,
+) -> Result<Vec<Vec<T>>, ClusterError> {
+    let p = schedule.p;
+    if inputs.len() != p {
+        return Err(ClusterError::BadInput(format!(
+            "{} inputs for {p} processes",
+            inputs.len()
+        )));
+    }
+    let n = inputs[0].len();
+    if inputs.iter().any(|v| v.len() != n) {
+        return Err(ClusterError::BadInput("ragged input vectors".into()));
+    }
+
+    let mut txs = Vec::with_capacity(p);
+    let mut rxs = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = mpsc::channel::<Msg<T>>();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+
+    let mut outputs: Vec<Result<Vec<T>, ClusterError>> = Vec::with_capacity(p);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(p);
+        for proc in 0..p {
+            let rx = rxs[proc].take().unwrap();
+            let txs = txs.clone();
+            let input = &inputs[proc];
+            handles.push(scope.spawn(move || run_rank(schedule, proc, input, rx, &txs, op)));
+        }
+        drop(txs);
+        for (proc, h) in handles.into_iter().enumerate() {
+            outputs.push(match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(ClusterError::WorkerPanic { proc }),
+            });
+        }
+    });
+    outputs.into_iter().collect()
+}
+
+fn run_rank<T: Element>(
+    s: &ProcSchedule,
+    proc: usize,
+    input: &[T],
+    rx: mpsc::Receiver<Msg<T>>,
+    txs: &[mpsc::Sender<Msg<T>>],
+    op: ReduceOp,
+) -> Result<Vec<T>, ClusterError> {
+    let n = input.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let timeout = Duration::from_secs(10);
+    let total_steps = s.steps.len();
+    let mut pending: HashMap<(usize, usize), Vec<Vec<T>>> = HashMap::new();
+    let nb = s.max_buf_id() as usize;
+    let mut bufs: Vec<Option<Vec<T>>> = vec![None; nb];
+
+    for &(id, seg) in &s.init[proc] {
+        let (lo, hi) = s.unit_to_elems(seg, n);
+        bufs[id as usize] = Some(input[lo..hi].to_vec());
+    }
+
+    for (step, st) in s.steps.iter().enumerate() {
+        let ops = &st.ops[proc];
+        // Move-semantics sends: a buffer freed later in this step and not
+        // otherwise read can be taken into the message instead of cloned.
+        let mut takeable: Vec<BufId> = Vec::new();
+        for m in ops.iter().flat_map(|o| o.micro()) {
+            if let MicroOp::Free { buf } = m {
+                takeable.push(buf);
+            }
+        }
+        takeable.retain(|b| {
+            ops.iter().flat_map(|o| o.micro()).all(|m| match m {
+                MicroOp::Reduce { dst, src } => dst != *b && src != *b,
+                MicroOp::Copy { src, .. } => src != *b,
+                _ => true,
+            })
+        });
+
+        for m in ops.iter().flat_map(|o| o.micro()) {
+            match m {
+                MicroOp::Send { to, bufs: ids } => {
+                    let payload: Vec<Vec<T>> = ids
+                        .iter()
+                        .map(|&b| {
+                            if takeable.contains(&b) {
+                                bufs[b as usize].take().expect("send of dead buffer")
+                            } else {
+                                bufs[b as usize]
+                                    .as_ref()
+                                    .expect("send of dead buffer")
+                                    .clone()
+                            }
+                        })
+                        .collect();
+                    let _ = txs[to].send(Msg {
+                        step,
+                        from: proc,
+                        payload,
+                    });
+                }
+                MicroOp::Recv { from, bufs: ids } => {
+                    let payload = match pending.remove(&(step, from)) {
+                        Some(pl) => pl,
+                        None => loop {
+                            let msg = rx.recv_timeout(timeout).map_err(|_| {
+                                ClusterError::RecvTimeout { proc, step, from }
+                            })?;
+                            if msg.step == step && msg.from == from {
+                                break msg.payload;
+                            }
+                            if msg.step < step || msg.step > total_steps {
+                                return Err(ClusterError::Protocol {
+                                    proc,
+                                    detail: format!(
+                                        "unexpected message tag (step {}, from {})",
+                                        msg.step, msg.from
+                                    ),
+                                });
+                            }
+                            pending.insert((msg.step, msg.from), msg.payload);
+                        },
+                    };
+                    if payload.len() != ids.len() {
+                        return Err(ClusterError::Protocol {
+                            proc,
+                            detail: format!("step {step}: arity mismatch"),
+                        });
+                    }
+                    for (&b, chunk) in ids.iter().zip(payload) {
+                        bufs[b as usize] = Some(chunk);
+                    }
+                }
+                MicroOp::Reduce { dst, src } => {
+                    let mut d = bufs[dst as usize].take().expect("reduce into dead buffer");
+                    let sv = bufs[src as usize].as_ref().expect("reduce from dead buffer");
+                    T::combine(op, &mut d, sv);
+                    bufs[dst as usize] = Some(d);
+                }
+                MicroOp::Copy { dst, src } => {
+                    let c = bufs[src as usize]
+                        .as_ref()
+                        .expect("copy of dead buffer")
+                        .clone();
+                    bufs[dst as usize] = Some(c);
+                }
+                MicroOp::Free { buf } => {
+                    bufs[buf as usize] = None;
+                }
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(n);
+    for &b in &s.result[proc] {
+        out.extend_from_slice(bufs[b as usize].as_ref().expect("result buffer dead"));
+    }
+    debug_assert_eq!(out.len(), n);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
+    use crate::cluster::reference_allreduce;
+    use crate::util::Rng;
+
+    #[test]
+    fn oracle_matches_reference_fold() {
+        let mut rng = Rng::new(0x0AC1E);
+        for p in [2usize, 5, 8] {
+            let s = Algorithm::new(AlgorithmKind::BwOptimal, p)
+                .build(&BuildCtx::default())
+                .unwrap();
+            let xs: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..3 * p + 1).map(|_| rng.f32()).collect())
+                .collect();
+            let want = reference_allreduce(&xs, ReduceOp::Sum);
+            let got = execute_reference(&s, &xs, ReduceOp::Sum).unwrap();
+            for out in &got {
+                for (g, w) in out.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-5 * (1.0 + w.abs()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_rejects_bad_shapes() {
+        let s = Algorithm::new(AlgorithmKind::Ring, 4)
+            .build(&BuildCtx::default())
+            .unwrap();
+        assert!(matches!(
+            execute_reference(&s, &[vec![1.0f32], vec![1.0]], ReduceOp::Sum),
+            Err(ClusterError::BadInput(_))
+        ));
+    }
+}

@@ -1,37 +1,47 @@
-//! Persistent cluster: long-lived workers for repeated Allreduce calls.
+//! Persistent cluster: long-lived workers with warm data-plane state.
 //!
 //! [`super::ClusterExecutor`] spawns `P` scoped threads per call — fine for
 //! one-shot runs, but the spawn/join cost (~150–200 µs for P=8) dominates
 //! small-message calls and repeated calls like DDP training's per-step
-//! gradient sync. [`PersistentCluster`] keeps the workers alive: each call
-//! broadcasts the job (an `Arc` of the schedule + the rank's input) and
-//! collects replies, so steady-state overhead is one channel round-trip.
+//! gradient sync. [`PersistentCluster`] keeps the workers alive **and keeps
+//! their data plane warm**: each worker owns an [`arena::DataPlane`] (slab
+//! arena + slot table) that survives between jobs, and all workers share
+//! one [`arena::BlockPool`] through which every input, wire, and result
+//! block circulates. After the first call on a given workload shape the
+//! slabs have reached their high-water marks and the pool holds every block
+//! size class in use, so steady-state calls perform **zero data-plane
+//! allocation** — the property `tests/alloc_regression.rs` pins down.
 //!
 //! [`PersistentCluster::execute_many`] dispatches a whole bucket list in a
 //! single round-trip: each worker runs bucket after bucket with no global
-//! barrier between them (messages are tagged with cumulative step offsets),
-//! which is the cross-bucket pipelining the bucketed
-//! [`crate::coordinator::Communicator::allreduce_many`] path relies on.
+//! barrier between them (messages are tagged with cumulative step offsets).
+//! The zero-copy route in and out is [`PersistentCluster::execute_many_io`]:
+//! the caller's [`JobIo`] fills pooled input blocks directly from its
+//! tensors and consumes results straight out of pooled reply blocks — the
+//! path behind `Communicator::allreduce_many_inplace`.
 //!
 //! Messages carry a generation tag so an aborted call (timeout) cannot
-//! leak stale traffic into the next one.
+//! leak stale traffic into the next one. Faults can be injected with
+//! [`PersistentCluster::inject_fault`] (mirroring
+//! [`super::ExecOptions::fault`] on the scoped executor).
 //!
 //! The pool is `f32`-only (the gradient-sync hot path); use the scoped
 //! executor for other element types or custom reducers.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::cluster::{ClusterError, Element, ReduceOp};
-use crate::sched::{BufId, MicroOp, ProcSchedule};
+use crate::cluster::arena::{self, Block, BlockPool, DataPlane, NativeKernel, Payload};
+use crate::cluster::{fault_tag, ClusterError, Fault, ReduceOp};
+use crate::sched::{stats::stats, ProcSchedule};
 
 struct PMsg {
     gen: u64,
     step: usize,
     from: usize,
-    payload: Vec<Vec<f32>>,
+    payload: Payload<f32>,
 }
 
 /// One bucket of a pooled multi-bucket call: a schedule plus per-rank
@@ -41,12 +51,35 @@ pub struct PoolJob {
     pub inputs: Vec<Vec<f32>>,
 }
 
+/// Input source / output sink for one pooled dispatch
+/// ([`PersistentCluster::execute_many_io`]). Lets the coordinator stream
+/// tensors directly into pooled input blocks and back out of pooled result
+/// blocks, with no intermediate per-rank vectors.
+pub trait JobIo {
+    /// Write rank `rank`'s input for job `job` into `dst` (`dst.len()` is
+    /// the job's element count on every rank).
+    fn fill(&mut self, job: usize, rank: usize, dst: &mut [f32]);
+
+    /// Consume rank `rank`'s fully reduced output for job `job`.
+    fn collect(&mut self, job: usize, rank: usize, src: &[f32]);
+}
+
+/// Per-bucket arena pre-size hints (`total_alloc_units` per proc), computed
+/// once per schedule on the coordinator side and shared with every worker.
+type AllocHints = Arc<Vec<Arc<Vec<u64>>>>;
+
 struct Job {
     gen: u64,
-    /// (schedule, this rank's input) per bucket.
-    buckets: Vec<(Arc<ProcSchedule>, Vec<f32>)>,
     op: ReduceOp,
-    reply: mpsc::Sender<(usize, Result<Vec<Vec<f32>>, ClusterError>)>,
+    fault: Option<Fault>,
+    /// Total steps across all buckets (protocol tag window).
+    total_steps: usize,
+    /// (schedule, this rank's input) per bucket; inputs live in pooled
+    /// blocks and return to the pool when the worker drops them.
+    buckets: Vec<(Arc<ProcSchedule>, Block<f32>)>,
+    /// `hints[bucket][proc]` — see [`AllocHints`].
+    hints: AllocHints,
+    reply: mpsc::Sender<(usize, Result<Block<f32>, ClusterError>)>,
 }
 
 enum Cmd {
@@ -61,6 +94,28 @@ pub struct PersistentCluster {
     handles: Vec<std::thread::JoinHandle<()>>,
     gen: std::sync::atomic::AtomicU64,
     recv_timeout: Duration,
+    blocks: Arc<BlockPool<f32>>,
+    fault: Mutex<Option<Fault>>,
+    /// Serializes whole dispatches: workers drop traffic from *older*
+    /// generations, so two interleaved calls would starve each other into
+    /// timeouts. Held across [`PersistentCluster::execute_many_io`] so
+    /// concurrent callers queue instead.
+    dispatch: Mutex<()>,
+    /// Cached [`AllocHints`] entries keyed by schedule name, each guarded
+    /// by a cheap structural fingerprint (step count, unit count) checked
+    /// on hit. In-crate schedule names encode the algorithm and all shape
+    /// parameters; the fingerprint guards against caller-built schedules
+    /// reusing a name — and since hints only pre-size arenas (which grow
+    /// on demand), a residual collision can mis-size a reserve but never
+    /// corrupt results. Name-keying keeps warm-path lookups allocation-free.
+    alloc_hints: Mutex<HashMap<String, HintEntry>>,
+}
+
+/// One [`PersistentCluster::alloc_hints`] cache entry.
+struct HintEntry {
+    steps: usize,
+    n_units: u32,
+    hints: Arc<Vec<u64>>,
 }
 
 impl PersistentCluster {
@@ -70,6 +125,7 @@ impl PersistentCluster {
     }
 
     pub fn with_timeout(p: usize, recv_timeout: Duration) -> PersistentCluster {
+        let blocks = Arc::new(BlockPool::new());
         let mut msg_txs = Vec::with_capacity(p);
         let mut msg_rxs = Vec::with_capacity(p);
         for _ in 0..p {
@@ -84,10 +140,11 @@ impl PersistentCluster {
             cmd_txs.push(ctx);
             let msg_rx = msg_rxs[proc].take().unwrap();
             let peers = msg_txs.clone();
+            let pool = blocks.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("gar-worker-{proc}"))
-                    .spawn(move || worker_loop(proc, crx, msg_rx, peers, recv_timeout))
+                    .spawn(move || worker_loop(proc, crx, msg_rx, peers, recv_timeout, pool))
                     .expect("spawn worker"),
             );
         }
@@ -97,11 +154,21 @@ impl PersistentCluster {
             handles,
             gen: std::sync::atomic::AtomicU64::new(1),
             recv_timeout,
+            blocks,
+            fault: Mutex::new(None),
+            dispatch: Mutex::new(()),
+            alloc_hints: Mutex::new(HashMap::new()),
         }
     }
 
     pub fn size(&self) -> usize {
         self.p
+    }
+
+    /// Inject (or clear) a message fault applied to subsequent calls —
+    /// test-only instrumentation mirroring [`super::ExecOptions::fault`].
+    pub fn inject_fault(&self, fault: Option<Fault>) {
+        *self.fault.lock().unwrap() = fault;
     }
 
     /// Run one Allreduce: `inputs[rank]` per worker, returns per-rank outputs.
@@ -111,7 +178,8 @@ impl PersistentCluster {
         inputs: &[Vec<f32>],
         op: ReduceOp,
     ) -> Result<Vec<Vec<f32>>, ClusterError> {
-        let mut out = self.dispatch(&[(schedule, inputs)], op)?;
+        let job = [PoolJobRef { schedule, inputs }];
+        let mut out = self.dispatch_slices(&job, op)?;
         Ok(out.pop().expect("one job in, one result out"))
     }
 
@@ -122,60 +190,126 @@ impl PersistentCluster {
         jobs: &[PoolJob],
         op: ReduceOp,
     ) -> Result<Vec<Vec<Vec<f32>>>, ClusterError> {
-        let refs: Vec<(&Arc<ProcSchedule>, &[Vec<f32>])> = jobs
+        let refs: Vec<PoolJobRef<'_>> = jobs
             .iter()
-            .map(|j| (&j.schedule, &j.inputs[..]))
+            .map(|j| PoolJobRef {
+                schedule: &j.schedule,
+                inputs: &j.inputs[..],
+            })
             .collect();
-        self.dispatch(&refs, op)
+        self.dispatch_slices(&refs, op)
     }
 
-    /// Shared dispatch over borrowed jobs: each rank's input is cloned
-    /// exactly once, into its worker's command.
-    fn dispatch(
+    /// The zero-copy dispatch: `scheds[j]` / `ns[j]` describe each bucket
+    /// (`ns[j]` = elements per rank), and `io` streams inputs in and
+    /// results out through pooled blocks. All buckets run in one worker
+    /// round-trip with no inter-bucket barrier; `io.fill` is called for
+    /// every (job, rank) before dispatch, `io.collect` for every
+    /// (job, rank) after all workers reply. When every job is empty the
+    /// dispatch is skipped and only `io.collect` runs (with empty slices).
+    pub fn execute_many_io(
         &self,
-        jobs: &[(&Arc<ProcSchedule>, &[Vec<f32>])],
+        scheds: &[Arc<ProcSchedule>],
+        ns: &[usize],
         op: ReduceOp,
-    ) -> Result<Vec<Vec<Vec<f32>>>, ClusterError> {
-        if jobs.is_empty() {
-            return Ok(Vec::new());
+        io: &mut dyn JobIo,
+    ) -> Result<(), ClusterError> {
+        if scheds.len() != ns.len() {
+            return Err(ClusterError::BadInput(format!(
+                "{} schedules but {} job lengths",
+                scheds.len(),
+                ns.len()
+            )));
         }
-        for (ji, (schedule, inputs)) in jobs.iter().enumerate() {
-            if inputs.len() != self.p || schedule.p != self.p {
+        if scheds.is_empty() {
+            return Ok(());
+        }
+        for (ji, s) in scheds.iter().enumerate() {
+            if s.p != self.p {
                 return Err(ClusterError::BadInput(format!(
-                    "job {ji}: {} inputs / schedule P={} for pool of {}",
-                    inputs.len(),
-                    schedule.p,
-                    self.p
+                    "job {ji}: schedule P={} for pool of {}",
+                    s.p, self.p
                 )));
             }
-            let n = inputs[0].len();
-            if inputs.iter().any(|v| v.len() != n) {
-                return Err(ClusterError::BadInput(format!(
-                    "job {ji}: ragged input vectors"
-                )));
-            }
         }
+        // Fast path: nothing to move for any bucket on any rank — skip the
+        // dispatch entirely (collect still runs so shapes stay intact).
+        if ns.iter().all(|&n| n == 0) {
+            for rank in 0..self.p {
+                for ji in 0..ns.len() {
+                    io.collect(ji, rank, &[]);
+                }
+            }
+            return Ok(());
+        }
+        let total_steps: usize = scheds.iter().map(|s| s.steps.len()).sum();
+        // One dispatch at a time: see the `dispatch` field docs.
+        let _serial = self.dispatch.lock().unwrap();
+        // Arena pre-size hints, computed once per schedule across all
+        // workers and calls (workers only index their own proc's entry).
+        let hints: AllocHints = {
+            let mut cache = self.alloc_hints.lock().unwrap();
+            Arc::new(
+                scheds
+                    .iter()
+                    .map(|s| {
+                        if let Some(e) = cache.get(&s.name) {
+                            if e.steps == s.steps.len() && e.n_units == s.n_units {
+                                return e.hints.clone();
+                            }
+                        }
+                        let h = Arc::new(stats(s).total_alloc_units);
+                        cache.insert(
+                            s.name.clone(),
+                            HintEntry {
+                                steps: s.steps.len(),
+                                n_units: s.n_units,
+                                hints: h.clone(),
+                            },
+                        );
+                        h
+                    })
+                    .collect(),
+            )
+        };
         let gen = self
             .gen
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let fault = *self.fault.lock().unwrap();
+        // All fills complete before the first worker is dispatched (the
+        // documented contract) — otherwise early workers would burn their
+        // recv timeouts while a slow fill prepares a later rank's input.
+        let mut all_buckets: Vec<Vec<(Arc<ProcSchedule>, Block<f32>)>> = (0..self.p)
+            .map(|proc| {
+                scheds
+                    .iter()
+                    .zip(ns)
+                    .enumerate()
+                    .map(|(ji, (s, &n))| {
+                        let mut input = BlockPool::take(&self.blocks, n);
+                        io.fill(ji, proc, input.data_mut());
+                        (s.clone(), input)
+                    })
+                    .collect()
+            })
+            .collect();
         let (reply_tx, reply_rx) = mpsc::channel();
-        for proc in 0..self.p {
-            let buckets: Vec<(Arc<ProcSchedule>, Vec<f32>)> = jobs
-                .iter()
-                .map(|(schedule, inputs)| ((*schedule).clone(), inputs[proc].clone()))
-                .collect();
+        for (proc, buckets) in all_buckets.drain(..).enumerate() {
             self.cmd_txs[proc]
                 .send(Cmd::Job(Box::new(Job {
                     gen,
-                    buckets,
                     op,
+                    fault,
+                    total_steps,
+                    buckets,
+                    hints: hints.clone(),
                     reply: reply_tx.clone(),
                 })))
                 .map_err(|_| ClusterError::WorkerPanic { proc })?;
         }
         drop(reply_tx);
-        let mut per_proc: Vec<Option<Vec<Vec<f32>>>> = vec![None; self.p];
-        let deadline = self.recv_timeout * (jobs.len() as u32 + 1);
+        let deadline = self.recv_timeout * (scheds.len() as u32 + 1);
+        let mut per_proc: Vec<Option<Block<f32>>> = (0..self.p).map(|_| None).collect();
         for _ in 0..self.p {
             let (proc, res) = reply_rx
                 .recv_timeout(deadline)
@@ -186,16 +320,77 @@ impl PersistentCluster {
                 })?;
             per_proc[proc] = Some(res?);
         }
-        // Transpose [proc][job] → [job][rank].
-        let mut res: Vec<Vec<Vec<f32>>> = (0..jobs.len())
-            .map(|_| Vec::with_capacity(self.p))
-            .collect();
-        for outs in per_proc {
-            for (ji, out) in outs.expect("all replies collected").into_iter().enumerate() {
-                res[ji].push(out);
+        for (rank, blk) in per_proc.into_iter().enumerate() {
+            let blk = blk.expect("all replies collected");
+            let mut off = 0usize;
+            for (ji, &n) in ns.iter().enumerate() {
+                io.collect(ji, rank, &blk.data()[off..off + n]);
+                off += n;
+            }
+            // `blk` drops here and its storage parks back in the pool.
+        }
+        Ok(())
+    }
+}
+
+/// Borrowed form of [`PoolJob`] used by the compatibility wrappers.
+struct PoolJobRef<'a> {
+    schedule: &'a Arc<ProcSchedule>,
+    inputs: &'a [Vec<f32>],
+}
+
+/// Compatibility [`JobIo`]: copy from borrowed per-rank vectors, collect
+/// into freshly allocated per-rank vectors.
+struct SliceIo<'a> {
+    jobs: &'a [PoolJobRef<'a>],
+    outs: Vec<Vec<Vec<f32>>>,
+}
+
+impl JobIo for SliceIo<'_> {
+    fn fill(&mut self, job: usize, rank: usize, dst: &mut [f32]) {
+        dst.copy_from_slice(&self.jobs[job].inputs[rank]);
+    }
+
+    fn collect(&mut self, job: usize, rank: usize, src: &[f32]) {
+        debug_assert_eq!(self.outs[job].len(), rank, "ranks collected in order");
+        self.outs[job].push(src.to_vec());
+    }
+}
+
+impl PersistentCluster {
+    /// Shared validation + dispatch for the Vec-returning wrappers.
+    fn dispatch_slices(
+        &self,
+        jobs: &[PoolJobRef<'_>],
+        op: ReduceOp,
+    ) -> Result<Vec<Vec<Vec<f32>>>, ClusterError> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for (ji, job) in jobs.iter().enumerate() {
+            if job.inputs.len() != self.p || job.schedule.p != self.p {
+                return Err(ClusterError::BadInput(format!(
+                    "job {ji}: {} inputs / schedule P={} for pool of {}",
+                    job.inputs.len(),
+                    job.schedule.p,
+                    self.p
+                )));
+            }
+            let n = job.inputs[0].len();
+            if job.inputs.iter().any(|v| v.len() != n) {
+                return Err(ClusterError::BadInput(format!(
+                    "job {ji}: ragged input vectors"
+                )));
             }
         }
-        Ok(res)
+        let scheds: Vec<Arc<ProcSchedule>> = jobs.iter().map(|j| j.schedule.clone()).collect();
+        let ns: Vec<usize> = jobs.iter().map(|j| j.inputs[0].len()).collect();
+        let mut io = SliceIo {
+            jobs,
+            outs: (0..jobs.len()).map(|_| Vec::with_capacity(self.p)).collect(),
+        };
+        self.execute_many_io(&scheds, &ns, op, &mut io)?;
+        Ok(io.outs)
     }
 }
 
@@ -210,28 +405,108 @@ impl Drop for PersistentCluster {
     }
 }
 
+/// The pool's [`arena::Transport`]: generation filtering, fault injection,
+/// timeout detection, and protocol-window checking over the shared inboxes.
+/// The stash is keyed by `(gen, step, from)`: traffic from *older*
+/// generations (an aborted call) is discarded, but traffic from *newer*
+/// generations is kept — a worker still draining a failed call must not eat
+/// the next call's messages, or the first clean call after a fault would
+/// itself time out.
+struct PoolTransport<'a> {
+    proc: usize,
+    gen: u64,
+    total_steps: usize,
+    fault: Option<Fault>,
+    rx: &'a mpsc::Receiver<PMsg>,
+    peers: &'a [mpsc::Sender<PMsg>],
+    pending: &'a mut HashMap<(u64, usize, usize), Payload<f32>>,
+    timeout: Duration,
+}
+
+impl arena::Transport<f32> for PoolTransport<'_> {
+    fn send(&mut self, to: usize, step: usize, payload: Payload<f32>) {
+        if let Some(tag) = fault_tag(&self.fault, step, self.proc, to) {
+            let _ = self.peers[to].send(PMsg {
+                gen: self.gen,
+                step: tag,
+                from: self.proc,
+                payload,
+            });
+        }
+    }
+
+    fn recv(&mut self, step: usize, from: usize) -> Result<Payload<f32>, ClusterError> {
+        if let Some(pl) = self.pending.remove(&(self.gen, step, from)) {
+            return Ok(pl);
+        }
+        loop {
+            let msg = self.rx.recv_timeout(self.timeout).map_err(|_| {
+                ClusterError::RecvTimeout {
+                    proc: self.proc,
+                    step,
+                    from,
+                }
+            })?;
+            if msg.gen < self.gen {
+                // Stale traffic from an aborted call.
+                continue;
+            }
+            if msg.gen > self.gen {
+                // The coordinator already moved on to a newer call while we
+                // drain this one; stash for the job we'll pick up next.
+                self.pending.insert((msg.gen, msg.step, msg.from), msg.payload);
+                continue;
+            }
+            if msg.step == step && msg.from == from {
+                return Ok(msg.payload);
+            }
+            // Valid same-generation tags span 0..total_steps, and a tag
+            // below the current step is a duplicate (this rank already
+            // consumed every earlier recv) — both are protocol corruption,
+            // mirroring the scoped executor's window check.
+            if msg.step < step || msg.step >= self.total_steps {
+                return Err(ClusterError::Protocol {
+                    proc: self.proc,
+                    detail: format!(
+                        "corrupt message tag {} from {} while waiting for \
+                         (step {step}, from {from}; call spans {} steps)",
+                        msg.step, msg.from, self.total_steps
+                    ),
+                });
+            }
+            self.pending
+                .insert((self.gen, msg.step, msg.from), msg.payload);
+        }
+    }
+}
+
 fn worker_loop(
     proc: usize,
     cmd_rx: mpsc::Receiver<Cmd>,
     msg_rx: mpsc::Receiver<PMsg>,
     peers: Vec<mpsc::Sender<PMsg>>,
     recv_timeout: Duration,
+    pool: Arc<BlockPool<f32>>,
 ) {
-    // Reusable buffer arena across calls (avoids re-allocating the
-    // Vec<Option<Vec<f32>>> table per call).
-    let mut bufs: Vec<Option<Vec<f32>>> = Vec::new();
+    // Warm state surviving across calls: the slab arena + slot table and
+    // the out-of-order stash (older-generation entries pruned per call,
+    // capacity retained).
+    let mut plane = DataPlane::new(pool.clone());
+    let mut pending: HashMap<(u64, usize, usize), Payload<f32>> = HashMap::new();
     while let Ok(cmd) = cmd_rx.recv() {
         let job = match cmd {
             Cmd::Job(j) => j,
             Cmd::Shutdown => break,
         };
-        let res = run_many(
+        let res = run_job(
             proc,
             &job,
             &msg_rx,
             &peers,
             recv_timeout,
-            &mut bufs,
+            &mut plane,
+            &mut pending,
+            &pool,
         );
         let _ = job.reply.send((proc, res));
     }
@@ -239,138 +514,65 @@ fn worker_loop(
 
 /// Run every bucket of `job` back to back; message step tags carry the
 /// cumulative offset of the preceding buckets so `(gen, step, from)` stays
-/// unique across the whole call.
-fn run_many(
+/// unique across the whole call. Results for all buckets are packed into
+/// one pooled reply block.
+#[allow(clippy::too_many_arguments)]
+fn run_job(
     proc: usize,
     job: &Job,
     msg_rx: &mpsc::Receiver<PMsg>,
     peers: &[mpsc::Sender<PMsg>],
     recv_timeout: Duration,
-    bufs: &mut Vec<Option<Vec<f32>>>,
-) -> Result<Vec<Vec<f32>>, ClusterError> {
-    let op = job.op;
-    let gen = job.gen;
-    let mut pending: HashMap<(usize, usize), Vec<Vec<f32>>> = HashMap::new();
-    let mut outs = Vec::with_capacity(job.buckets.len());
-    let mut step_off = 0usize;
-
-    for (s, input) in &job.buckets {
+    plane: &mut DataPlane<f32>,
+    pending: &mut HashMap<(u64, usize, usize), Payload<f32>>,
+    pool: &Arc<BlockPool<f32>>,
+) -> Result<Block<f32>, ClusterError> {
+    // Drop stale stashed traffic; keep anything from this or newer calls.
+    pending.retain(|&(g, _, _), _| g >= job.gen);
+    // Pre-size the slab up front from the coordinator-provided hints: the
+    // bump bound is total_alloc_units scaled from units to elements.
+    for ((s, input), hint) in job.buckets.iter().zip(job.hints.iter()) {
         let n = input.len();
         if n == 0 {
-            // Symmetric skip on every rank (lengths validated equal).
-            outs.push(Vec::new());
-            step_off += s.steps.len();
             continue;
         }
-        let nb = s.max_buf_id() as usize;
-        bufs.clear();
-        bufs.resize(nb, None);
+        let units = hint[proc] as usize;
+        let u = (s.n_units as usize).max(1);
+        plane.reserve_elems(units * n.div_ceil(u));
+    }
 
-        for &(id, seg) in &s.init[proc] {
-            let (lo, hi) = s.unit_to_elems(seg, n);
-            bufs[id as usize] = Some(input[lo..hi].to_vec());
+    let total_n: usize = job.buckets.iter().map(|(_, b)| b.len()).sum();
+    let mut out = BlockPool::take(pool, total_n);
+    let kernel = NativeKernel(job.op);
+    let mut transport = PoolTransport {
+        proc,
+        gen: job.gen,
+        total_steps: job.total_steps,
+        fault: job.fault,
+        rx: msg_rx,
+        peers,
+        pending,
+        timeout: recv_timeout,
+    };
+    let mut step_off = 0usize;
+    let mut cursor = 0usize;
+    for (s, input) in &job.buckets {
+        let n = input.len();
+        if n > 0 {
+            plane.run_schedule(
+                s,
+                proc,
+                input.data(),
+                step_off,
+                &mut transport,
+                &kernel,
+                &mut out.data_mut()[cursor..cursor + n],
+            )?;
         }
-
-        for (local_step, st) in s.steps.iter().enumerate() {
-            let step = step_off + local_step;
-            let ops = &st.ops[proc];
-            // Same move-semantics send optimization as the scoped executor.
-            let mut takeable: Vec<BufId> = Vec::new();
-            for m in ops.iter().flat_map(|o| o.micro()) {
-                if let MicroOp::Free { buf } = m {
-                    takeable.push(buf);
-                }
-            }
-            takeable.retain(|b| {
-                ops.iter().flat_map(|o| o.micro()).all(|m| match m {
-                    MicroOp::Reduce { dst, src } => dst != *b && src != *b,
-                    MicroOp::Copy { src, .. } => src != *b,
-                    _ => true,
-                })
-            });
-
-            for m in ops.iter().flat_map(|o| o.micro()) {
-                match m {
-                    MicroOp::Send { to, bufs: ids } => {
-                        let payload: Vec<Vec<f32>> = ids
-                            .iter()
-                            .map(|&b| {
-                                if takeable.contains(&b) {
-                                    bufs[b as usize].take().expect("send of dead buffer")
-                                } else {
-                                    bufs[b as usize]
-                                        .as_ref()
-                                        .expect("send of dead buffer")
-                                        .clone()
-                                }
-                            })
-                            .collect();
-                        let _ = peers[to].send(PMsg {
-                            gen,
-                            step,
-                            from: proc,
-                            payload,
-                        });
-                    }
-                    MicroOp::Recv { from, bufs: ids } => {
-                        let payload = match pending.remove(&(step, from)) {
-                            Some(pl) => pl,
-                            None => loop {
-                                let msg = msg_rx.recv_timeout(recv_timeout).map_err(|_| {
-                                    ClusterError::RecvTimeout {
-                                        proc,
-                                        step,
-                                        from,
-                                    }
-                                })?;
-                                if msg.gen != gen {
-                                    // Stale traffic from an aborted call.
-                                    continue;
-                                }
-                                if msg.step == step && msg.from == from {
-                                    break msg.payload;
-                                }
-                                pending.insert((msg.step, msg.from), msg.payload);
-                            },
-                        };
-                        if payload.len() != ids.len() {
-                            return Err(ClusterError::Protocol {
-                                proc,
-                                detail: format!("step {step}: arity mismatch"),
-                            });
-                        }
-                        for (&b, chunk) in ids.iter().zip(payload) {
-                            bufs[b as usize] = Some(chunk);
-                        }
-                    }
-                    MicroOp::Reduce { dst, src } => {
-                        let mut d = bufs[dst as usize].take().expect("reduce into dead buffer");
-                        let sv = bufs[src as usize].as_ref().expect("reduce from dead buffer");
-                        <f32 as Element>::combine(op, &mut d, sv);
-                        bufs[dst as usize] = Some(d);
-                    }
-                    MicroOp::Copy { dst, src } => {
-                        let c = bufs[src as usize]
-                            .as_ref()
-                            .expect("copy of dead buffer")
-                            .clone();
-                        bufs[dst as usize] = Some(c);
-                    }
-                    MicroOp::Free { buf } => {
-                        bufs[buf as usize] = None;
-                    }
-                }
-            }
-        }
-
-        let mut out = Vec::with_capacity(n);
-        for &b in &s.result[proc] {
-            out.extend_from_slice(bufs[b as usize].as_ref().expect("result buffer dead"));
-        }
-        outs.push(out);
+        cursor += n;
         step_off += s.steps.len();
     }
-    Ok(outs)
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -508,6 +710,62 @@ mod tests {
             for rank in 0..p {
                 for (g, w) in got[ji][rank].iter().zip(&want) {
                     assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "job {ji} rank {rank}");
+                }
+            }
+        }
+    }
+
+    /// Faults landing inside the *second* bucket's global step range must
+    /// be detected, and the pool must recover for subsequent clean calls
+    /// (generation filtering drains the aborted call's traffic).
+    #[test]
+    fn pool_detects_faults_across_bucket_boundaries_and_recovers() {
+        let p = 5;
+        let pool = PersistentCluster::with_timeout(p, Duration::from_millis(200));
+        let ring = Arc::new(
+            Algorithm::new(AlgorithmKind::Ring, p)
+                .build(&BuildCtx::default())
+                .unwrap(),
+        );
+        let k = ring.num_steps();
+        let mut rng = Rng::new(0xFA17);
+        let mut make_jobs = || -> Vec<PoolJob> {
+            (0..2)
+                .map(|_| PoolJob {
+                    schedule: ring.clone(),
+                    inputs: (0..p)
+                        .map(|_| (0..37).map(|_| rng.f32()).collect())
+                        .collect(),
+                })
+                .collect()
+        };
+        for fault in [
+            Fault::DropMessage { step: k + 1, from: 2, to: 3 },
+            Fault::MisTagMessage { step: k + 1, from: 2, to: 3 },
+        ] {
+            pool.inject_fault(Some(fault));
+            let err = pool.execute_many(&make_jobs(), ReduceOp::Sum).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    ClusterError::RecvTimeout { .. }
+                        | ClusterError::Protocol { .. }
+                        | ClusterError::WorkerPanic { .. }
+                ),
+                "{fault:?}: {err:?}"
+            );
+        }
+        pool.inject_fault(None);
+        let jobs = make_jobs();
+        let got = pool.execute_many(&jobs, ReduceOp::Sum).unwrap();
+        for (ji, job) in jobs.iter().enumerate() {
+            let want = reference_allreduce(&job.inputs, ReduceOp::Sum);
+            for rank in 0..p {
+                for (g, w) in got[ji][rank].iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() < 1e-4 * (1.0 + w.abs()),
+                        "post-fault job {ji} rank {rank}"
+                    );
                 }
             }
         }

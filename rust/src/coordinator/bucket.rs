@@ -83,6 +83,33 @@ pub fn pack<T: Copy>(tensors: &[Vec<T>], bucket: &Bucket) -> Vec<T> {
     flat
 }
 
+/// Allocation-free [`pack`]: flatten the bucket's tensors into `dst`
+/// (`dst.len() == bucket.elems`). Used by the in-place Allreduce path to
+/// fill pooled input blocks directly from the caller's tensors.
+pub fn pack_into<T: Copy>(tensors: &[Vec<T>], bucket: &Bucket, dst: &mut [T]) {
+    debug_assert_eq!(dst.len(), bucket.elems);
+    let mut off = 0usize;
+    for t in &tensors[bucket.tensors.clone()] {
+        dst[off..off + t.len()].copy_from_slice(t);
+        off += t.len();
+    }
+    debug_assert_eq!(off, bucket.elems);
+}
+
+/// Allocation-free inverse of [`pack_into`]: scatter the bucket's flat
+/// reduced values back into the caller's tensors (exact lengths preserved).
+pub fn unpack_into<T: Copy>(flat: &[T], bucket: &Bucket, tensors: &mut [Vec<T>]) {
+    debug_assert_eq!(
+        flat.len(),
+        tensors[bucket.tensors.clone()].iter().map(|t| t.len()).sum::<usize>()
+    );
+    let mut off = 0usize;
+    for t in &mut tensors[bucket.tensors.clone()] {
+        t.copy_from_slice(&flat[off..off + t.len()]);
+        off += t.len();
+    }
+}
+
 /// Split a bucket's flat vector back into tensors of the given lengths
 /// (exact inverse of [`pack`] for the same bucket).
 pub fn unpack<T: Copy>(flat: &[T], lens: &[usize]) -> Result<Vec<Vec<T>>, String> {
@@ -176,6 +203,26 @@ mod tests {
     #[test]
     fn unpack_rejects_wrong_total() {
         assert!(unpack(&[1.0f32, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn pack_into_unpack_into_round_trip() {
+        let tensors = vec![
+            vec![1.0f32, 2.0],
+            vec![],
+            vec![3.0, 4.0, 5.0],
+            vec![6.0],
+        ];
+        let lens: Vec<usize> = tensors.iter().map(|t| t.len()).collect();
+        let p = plan(&lens, 4, 3 * 4);
+        let mut rebuilt: Vec<Vec<f32>> = tensors.iter().map(|t| vec![0.0; t.len()]).collect();
+        for b in &p.buckets {
+            let mut flat = vec![0.0f32; b.elems];
+            pack_into(&tensors, b, &mut flat);
+            assert_eq!(flat, pack(&tensors, b), "pack_into matches pack");
+            unpack_into(&flat, b, &mut rebuilt);
+        }
+        assert_eq!(rebuilt, tensors);
     }
 
     #[test]

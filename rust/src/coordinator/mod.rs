@@ -22,11 +22,11 @@
 pub mod bucket;
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
-use crate::cluster::{self, ClusterExecutor, Element, ReduceOp, Reducer};
+use crate::cluster::{self, ClusterExecutor, Element, JobIo, PersistentCluster, ReduceOp, Reducer};
 use crate::cost::{optimal_r, CostModel, NetParams};
 use crate::perm::{Group, Permutation};
 use crate::sched::{pipeline, stats::stats, verify::verify, ProcSchedule};
@@ -162,6 +162,8 @@ impl CommunicatorBuilder {
             segments: self.segments,
             exec: ClusterExecutor::new(),
             cache: Mutex::new(HashMap::new()),
+            pool: Mutex::new(None),
+            stat_cache: Mutex::new(HashMap::new()),
         })
     }
 }
@@ -179,6 +181,15 @@ pub struct Communicator {
     /// Schedule cache keyed by resolved algorithm label (base schedules)
     /// or label + pipeline depth (pipelined expansions).
     cache: Mutex<HashMap<String, std::sync::Arc<ProcSchedule>>>,
+    /// Lazily spawned persistent worker pool backing the warm
+    /// [`Communicator::allreduce_many_inplace`] path: workers keep their
+    /// slab arenas and wire-block pool alive between calls, so steady-state
+    /// DDP steps do zero data-plane allocation.
+    pool: Mutex<Option<Arc<PersistentCluster>>>,
+    /// Cached `(steps, critical_units_sent)` per schedule name, so the
+    /// per-call [`Metrics`] assembly on the DDP hot path doesn't re-walk
+    /// the whole schedule (`stats()` is O(P·steps·ops)) every step.
+    stat_cache: Mutex<HashMap<String, (usize, u64)>>,
 }
 
 impl Communicator {
@@ -370,10 +381,59 @@ impl Communicator {
         kind: AlgorithmKind,
     ) -> Result<AllreduceManyOutput<T>, String> {
         let p = self.p;
-        if inputs.len() != p {
+        let lens = self.validate_tensor_list(inputs)?;
+        let n_tensors = lens.len();
+        let elem_bytes = std::mem::size_of::<T>();
+        let total_bytes = lens.iter().sum::<usize>() * elem_bytes;
+        let bp = self.plan_bucket_schedules(&lens, elem_bytes, kind)?;
+
+        let packed: Vec<Vec<Vec<T>>> = bp
+            .plan
+            .buckets
+            .iter()
+            .map(|b| inputs.iter().map(|tensors| bucket::pack(tensors, b)).collect())
+            .collect();
+        let jobs: Vec<cluster::Job<'_, T>> = bp
+            .scheds
+            .iter()
+            .zip(&packed)
+            .map(|(s, ins)| cluster::Job {
+                schedule: &**s,
+                inputs: &ins[..],
+            })
+            .collect();
+        let t0 = Instant::now();
+        let outs = self.exec.execute_many(&jobs, op).map_err(|e| e.to_string())?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+
+        let mut ranks: Vec<Vec<Vec<T>>> = (0..p).map(|_| Vec::with_capacity(n_tensors)).collect();
+        for (bi, b) in bp.plan.buckets.iter().enumerate() {
+            let bucket_lens = &lens[b.tensors.clone()];
+            for (rank, per_rank) in ranks.iter_mut().enumerate() {
+                per_rank.extend(bucket::unpack(&outs[bi][rank], bucket_lens)?);
+            }
+        }
+        Ok(AllreduceManyOutput {
+            ranks,
+            metrics: ManyMetrics {
+                buckets: bp.per_bucket,
+                n_tensors,
+                total_bytes,
+                bucket_bytes: bp.bucket_bytes,
+                segments: bp.max_segments,
+                exec_seconds,
+            },
+        })
+    }
+
+    /// Validate the `inputs[rank][tensor]` shape contract and return the
+    /// per-tensor lengths.
+    fn validate_tensor_list<T>(&self, inputs: &[Vec<Vec<T>>]) -> Result<Vec<usize>, String> {
+        if inputs.len() != self.p {
             return Err(format!(
-                "{} ranks of tensors for communicator of size {p}",
-                inputs.len()
+                "{} ranks of tensors for communicator of size {}",
+                inputs.len(),
+                self.p
             ));
         }
         let n_tensors = inputs[0].len();
@@ -395,15 +455,26 @@ impl Communicator {
                 }
             }
         }
-        let elem_bytes = std::mem::size_of::<T>();
-        let total_bytes = lens.iter().sum::<usize>() * elem_bytes;
+        Ok(lens)
+    }
+
+    /// Shared bucket planning for `allreduce_many` / `allreduce_many_inplace`:
+    /// resolve the byte cap, plan the buckets, and build each bucket's
+    /// verified pipelined schedule + metrics. Both paths MUST go through
+    /// this so their bucket plans and schedules — and therefore their
+    /// combine orders — stay identical (the documented bit-exactness
+    /// contract between the two APIs).
+    fn plan_bucket_schedules(
+        &self,
+        lens: &[usize],
+        elem_bytes: usize,
+        kind: AlgorithmKind,
+    ) -> Result<BucketSchedules, String> {
         let bucket_bytes = self
             .bucket_bytes
-            .unwrap_or_else(|| bucket::optimal_bucket_bytes(p, &self.params));
-        let plan = bucket::plan(&lens, elem_bytes, bucket_bytes);
-
+            .unwrap_or_else(|| bucket::optimal_bucket_bytes(self.p, &self.params));
+        let plan = bucket::plan(lens, elem_bytes, bucket_bytes);
         let mut scheds = Vec::with_capacity(plan.buckets.len());
-        let mut packed: Vec<Vec<Vec<T>>> = Vec::with_capacity(plan.buckets.len());
         let mut per_bucket = Vec::with_capacity(plan.buckets.len());
         let mut max_segments = 0u32;
         for b in &plan.buckets {
@@ -411,40 +482,78 @@ impl Communicator {
             let segments = self.segments.unwrap_or_else(|| Self::auto_segments(m_bytes));
             max_segments = max_segments.max(segments);
             let (s, build_seconds) = self.pipelined_schedule(kind, m_bytes.max(1), segments)?;
-            per_bucket.push(self.metrics(&s, m_bytes, kind, build_seconds, 0.0));
-            packed.push(inputs.iter().map(|tensors| bucket::pack(tensors, b)).collect());
+            let mut m = self.metrics(&s, m_bytes, kind, build_seconds, 0.0);
+            // The pipelined expansion runs K + S − 1 steps: S − 1 extra α
+            // envelopes on top of the base algorithm's closed-form estimate
+            // (β/γ are invariant — each step moves 1/S of the data).
+            m.predicted_seconds += (segments as f64 - 1.0) * self.params.alpha;
+            per_bucket.push(m);
             scheds.push(s);
         }
+        Ok(BucketSchedules {
+            plan,
+            scheds,
+            per_bucket,
+            max_segments,
+            bucket_bytes,
+        })
+    }
 
-        let jobs: Vec<cluster::Job<'_, T>> = scheds
-            .iter()
-            .zip(&packed)
-            .map(|(s, ins)| cluster::Job {
-                schedule: &**s,
-                inputs: &ins[..],
-            })
-            .collect();
+    /// The lazily spawned persistent worker pool (see
+    /// [`Communicator::allreduce_many_inplace`]).
+    fn persistent_pool(&self) -> Arc<PersistentCluster> {
+        let mut guard = self.pool.lock().unwrap();
+        guard
+            .get_or_insert_with(|| Arc::new(PersistentCluster::new(self.p)))
+            .clone()
+    }
+
+    /// **In-place** bucketed, pipelined multi-tensor Allreduce — the warm
+    /// path for steady-state DDP training.
+    ///
+    /// Semantics match [`Communicator::allreduce_many`] (identical bucket
+    /// plan, schedules, and combine order — results are bit-identical), but
+    /// the reduced values are written **back into the caller's tensors**:
+    /// after the call every rank's `inputs[rank][t]` holds the reduced
+    /// tensor `t`. Execution runs on a lazily spawned
+    /// [`PersistentCluster`] whose workers keep their slab arenas and
+    /// wire-block pool alive between calls, and the tensors are packed
+    /// straight into (and unpacked straight out of) pooled blocks — so
+    /// from the second call on, a repeated workload shape performs **zero
+    /// data-plane allocation** (pinned by `tests/alloc_regression.rs`).
+    ///
+    /// Prefer this over `allreduce_many` whenever the caller owns the
+    /// tensors and wants the reduced values in place (gradient sync);
+    /// `allreduce_many` remains for callers that need the inputs preserved,
+    /// non-`f32` element types, or custom reducers.
+    pub fn allreduce_many_inplace(
+        &self,
+        inputs: &mut [Vec<Vec<f32>>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<ManyMetrics, String> {
+        let lens = self.validate_tensor_list(inputs)?;
+        let n_tensors = lens.len();
+        let total_bytes = lens.iter().sum::<usize>() * 4;
+        let bp = self.plan_bucket_schedules(&lens, 4, kind)?;
+        let ns: Vec<usize> = bp.plan.buckets.iter().map(|b| b.elems).collect();
+
+        let pool = self.persistent_pool();
+        let mut io = TensorBucketIo {
+            tensors: inputs,
+            plan: &bp.plan,
+        };
         let t0 = Instant::now();
-        let outs = self.exec.execute_many(&jobs, op).map_err(|e| e.to_string())?;
+        pool.execute_many_io(&bp.scheds, &ns, op, &mut io)
+            .map_err(|e| e.to_string())?;
         let exec_seconds = t0.elapsed().as_secs_f64();
-
-        let mut ranks: Vec<Vec<Vec<T>>> = (0..p).map(|_| Vec::with_capacity(n_tensors)).collect();
-        for (bi, b) in plan.buckets.iter().enumerate() {
-            let bucket_lens = &lens[b.tensors.clone()];
-            for (rank, per_rank) in ranks.iter_mut().enumerate() {
-                per_rank.extend(bucket::unpack(&outs[bi][rank], bucket_lens)?);
-            }
-        }
-        Ok(AllreduceManyOutput {
-            ranks,
-            metrics: ManyMetrics {
-                buckets: per_bucket,
-                n_tensors,
-                total_bytes,
-                bucket_bytes,
-                segments: max_segments,
-                exec_seconds,
-            },
+        Ok(ManyMetrics {
+            buckets: bp.per_bucket,
+            n_tensors,
+            total_bytes,
+            bucket_bytes: bp.bucket_bytes,
+            segments: bp.max_segments,
+            exec_seconds,
         })
     }
 
@@ -479,17 +588,58 @@ impl Communicator {
         build_seconds: f64,
         exec_seconds: f64,
     ) -> Metrics {
-        let st = stats(schedule);
+        let (steps, critical_units_sent) = {
+            let mut cache = self.stat_cache.lock().unwrap();
+            let cached = cache.get(&schedule.name).copied();
+            match cached {
+                Some(v) => v,
+                None => {
+                    let st = stats(schedule);
+                    let v = (st.steps, st.critical_units_sent);
+                    cache.insert(schedule.name.clone(), v);
+                    v
+                }
+            }
+        };
         let unit_bytes = (m_bytes as f64 / schedule.n_units as f64).ceil() as u64;
         Metrics {
             algorithm: schedule.name.clone(),
-            steps: st.steps,
-            critical_units_sent: st.critical_units_sent,
-            critical_bytes_sent: st.critical_units_sent * unit_bytes,
+            steps,
+            critical_units_sent,
+            critical_bytes_sent: critical_units_sent * unit_bytes,
             predicted_seconds: self.predict(kind, m_bytes),
             build_seconds,
             exec_seconds,
         }
+    }
+}
+
+/// Output of [`Communicator::plan_bucket_schedules`]: the bucket plan plus
+/// each bucket's verified pipelined schedule and planning-time metrics.
+struct BucketSchedules {
+    plan: bucket::BucketPlan,
+    scheds: Vec<Arc<ProcSchedule>>,
+    per_bucket: Vec<Metrics>,
+    max_segments: u32,
+    bucket_bytes: usize,
+}
+
+/// [`JobIo`] over the caller's `[rank][tensor]` lists: packs each bucket's
+/// tensors straight into pooled input blocks and scatters reduced results
+/// straight back — no intermediate per-bucket vectors
+/// ([`bucket::pack_into`] / [`bucket::unpack_into`]).
+struct TensorBucketIo<'a> {
+    tensors: &'a mut [Vec<Vec<f32>>],
+    plan: &'a bucket::BucketPlan,
+}
+
+impl JobIo for TensorBucketIo<'_> {
+    fn fill(&mut self, job: usize, rank: usize, dst: &mut [f32]) {
+        bucket::pack_into(&self.tensors[rank], &self.plan.buckets[job], dst);
+    }
+
+    fn collect(&mut self, job: usize, rank: usize, src: &[f32]) {
+        bucket::unpack_into(src, &self.plan.buckets[job], &mut self.tensors[rank]);
     }
 }
 
@@ -617,6 +767,71 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The in-place pool path and the scoped out-of-place path share the
+    /// bucket plan, schedules, and combine order, so their results must be
+    /// bit-identical — and the second in-place call (warm pool) must too.
+    #[test]
+    fn allreduce_many_inplace_bit_matches_out_of_place() {
+        use crate::util::Rng;
+        let p = 5;
+        let mut rng = Rng::new(0x1A7);
+        let comm = Communicator::builder(p)
+            .bucket_bytes(64 * 4)
+            .pipeline_segments(2)
+            .build()
+            .unwrap();
+        let lens = [3usize, 40, 0, 129, 7, 64];
+        let inputs: Vec<Vec<Vec<f32>>> = (0..p)
+            .map(|_| {
+                lens.iter()
+                    .map(|&n| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+                    .collect()
+            })
+            .collect();
+        for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+            let want = comm
+                .allreduce_many(&inputs, op, AlgorithmKind::GeneralizedAuto)
+                .unwrap();
+            for round in 0..2 {
+                let mut inplace = inputs.clone();
+                let metrics = comm
+                    .allreduce_many_inplace(&mut inplace, op, AlgorithmKind::GeneralizedAuto)
+                    .unwrap();
+                assert_eq!(metrics.n_tensors, lens.len());
+                assert!(metrics.buckets.len() > 1, "cap must split into buckets");
+                for rank in 0..p {
+                    for (ti, &n) in lens.iter().enumerate() {
+                        assert_eq!(inplace[rank][ti].len(), n);
+                        for (i, (g, w)) in inplace[rank][ti]
+                            .iter()
+                            .zip(&want.ranks[rank][ti])
+                            .enumerate()
+                        {
+                            assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "{op:?} round {round} tensor {ti} rank {rank} elem {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_many_inplace_rejects_mismatched_shapes() {
+        let comm = Communicator::builder(2).build().unwrap();
+        let mut bad = vec![vec![vec![1.0f32; 4]], Vec::new()];
+        assert!(comm
+            .allreduce_many_inplace(&mut bad, ReduceOp::Sum, AlgorithmKind::Ring)
+            .is_err());
+        let mut bad = vec![vec![vec![1.0f32; 4]], vec![vec![1.0f32; 5]]];
+        assert!(comm
+            .allreduce_many_inplace(&mut bad, ReduceOp::Sum, AlgorithmKind::Ring)
+            .is_err());
     }
 
     #[test]

@@ -27,6 +27,8 @@
 //! | [`cost`] | α–β–γ cost model (paper Table 2), closed-form step/byte/time formulas (eqs. 15, 25, 36, 44), optimal-r selection (eq. 37) |
 //! | [`des`] | discrete-event network simulator executing a schedule under the cost model with per-process clocks |
 //! | [`cluster`] | a real multi-threaded message-passing cluster executing schedules on actual data; barrier-free multi-bucket dispatch (`execute_many`) |
+//! | [`cluster::arena`] | the zero-copy data plane: per-worker slab arenas, `Arc`-shared wire blocks, fused receive-reduce (shared by both executors) |
+//! | [`cluster::oracle`] | the clone-per-message reference data plane, kept as the differential-test oracle and bench baseline |
 //! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step); execution gated behind the `pjrt` feature |
 //! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
 //! | [`coordinator::bucket`] | DDP-style gradient bucketing: cost-model-sized packing with exact pack/unpack round-trips |
@@ -78,6 +80,47 @@
 //!     assert!(out.ranks[rank][1].iter().all(|&x| (x - p as f32).abs() < 1e-5));
 //! }
 //! ```
+//!
+//! ## The data plane (slabs, `Arc` sends, warm pools)
+//!
+//! Both executors run schedules on the **arena data plane**
+//! ([`cluster::arena`]). Per worker, every live `BufId` is a slot in one
+//! flat slab instead of an owned `Vec`:
+//!
+//! ```text
+//!            one worker's slab (bump-allocated, reset per job)
+//!   ┌─────────────┬──────────┬─────────────────┬───────────┬─ ─ ─ ─
+//!   │ buf 0 (init)│ buf 3    │ buf 7 (reduce   │ buf 9     │ unused
+//!   │ off=0 len=L₀│ off=L₀…  │  materialized)  │           │ capacity
+//!   └─────────────┴──────────┴─────────────────┴───────────┴─ ─ ─ ─
+//!         ▲ BufId → (offset, len) slot table; Free = slot cleared
+//!
+//!   wire blocks (pooled, recycled):
+//!   sender slab ──copy once──► [ Block ]──freeze──► Arc<Block>
+//!                                   ▲ Chunk(off,len)   │ refcount bump
+//!                 receiver reads ───┘                  ▼ per extra use
+//!                 (fused reduce straight into its slab; forwarding a
+//!                  received chunk re-sends the same Arc — zero copy)
+//! ```
+//!
+//! **Ownership rules for `Arc`-shared sends:** a wire block is written only
+//! by its sender, *before* freezing; after `freeze()` it is immutable
+//! forever. Receivers keep the chunk as the buffer's backing (zero-copy
+//! receive), may forward it (refcount bump), and must materialize into
+//! their own slab the moment they need to write — which the engine fuses
+//! with the combine itself (`out[i] = a[i] ⊕ b[i]`), so the arena plane is
+//! bit-identical to the clone-based oracle ([`cluster::oracle`]). When the
+//! last chunk drops, the block's storage parks in the
+//! [`cluster::arena::BlockPool`] for reuse — never back to the allocator.
+//!
+//! **When to prefer [`coordinator::Communicator::allreduce_many_inplace`]:**
+//! whenever you own the tensors and want the reduced values back in them —
+//! the DDP gradient-sync shape. It runs on a persistent worker pool whose
+//! arenas and block pool stay warm between calls, packs your tensors
+//! straight into pooled blocks, and from the second step on performs zero
+//! data-plane allocation (pinned by `tests/alloc_regression.rs`). Use
+//! `allreduce_many` instead when you need the inputs preserved, a
+//! non-`f32` element type, or a custom reducer.
 
 pub mod util;
 pub mod perm;

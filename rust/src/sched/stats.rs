@@ -29,6 +29,13 @@ pub struct ScheduleStats {
     pub total_units_sent: u64,
     /// Total units reduced across all processes.
     pub total_units_reduced: u64,
+    /// Per-process peak of concurrently *live* buffer units — the minimum
+    /// slab capacity (in units) a space-reclaiming executor needs.
+    pub peak_live_units: Vec<u64>,
+    /// Per-process total units ever materialized (init + recv + copy
+    /// destinations) — the bump-allocation bound the arena data plane
+    /// ([`crate::cluster::arena`]) pre-sizes its slabs with.
+    pub total_alloc_units: Vec<u64>,
 }
 
 /// Compute statistics in one pass.
@@ -38,12 +45,19 @@ pub fn stats(s: &ProcSchedule) -> ScheduleStats {
     let mut total_sent = 0u64;
     let mut total_red = 0u64;
 
-    // Track segment lengths of live buffers per process (id → len).
+    // Track segment lengths of live buffers per process (id → len), plus
+    // the live/peak/total-materialized unit tallies the arena sizing needs.
     let mut len: Vec<std::collections::HashMap<u32, u32>> = vec![Default::default(); s.p];
+    let mut live = vec![0u64; s.p];
+    let mut peak = vec![0u64; s.p];
+    let mut alloc = vec![0u64; s.p];
     for (proc, bufs) in s.init.iter().enumerate() {
         for &(id, seg) in bufs {
             len[proc].insert(id, seg.len);
+            live[proc] += seg.len as u64;
+            alloc[proc] += seg.len as u64;
         }
+        peak[proc] = live[proc];
     }
 
     for step in &s.steps {
@@ -77,6 +91,11 @@ pub fn stats(s: &ProcSchedule) -> ScheduleStats {
         }
         for (proc, id, l) in staged {
             len[proc].insert(id, l);
+            live[proc] += l as u64;
+            alloc[proc] += l as u64;
+            if live[proc] > peak[proc] {
+                peak[proc] = live[proc];
+            }
         }
         for (proc, ops) in step.ops.iter().enumerate() {
             let mut red = 0u32;
@@ -86,9 +105,16 @@ pub fn stats(s: &ProcSchedule) -> ScheduleStats {
                     MicroOp::Copy { dst, src } => {
                         let l = len[proc][&src];
                         len[proc].insert(dst, l);
+                        live[proc] += l as u64;
+                        alloc[proc] += l as u64;
+                        if live[proc] > peak[proc] {
+                            peak[proc] = live[proc];
+                        }
                     }
                     MicroOp::Free { buf } => {
-                        len[proc].remove(&buf);
+                        if let Some(l) = len[proc].remove(&buf) {
+                            live[proc] -= l as u64;
+                        }
                     }
                     _ => {}
                 }
@@ -108,6 +134,8 @@ pub fn stats(s: &ProcSchedule) -> ScheduleStats {
         step_max_units_reduced,
         total_units_sent: total_sent,
         total_units_reduced: total_red,
+        peak_live_units: peak,
+        total_alloc_units: alloc,
     }
 }
 
@@ -139,5 +167,9 @@ mod tests {
         assert_eq!(st.critical_units_reduced, 1);
         assert_eq!(st.total_units_sent, 2);
         assert_eq!(st.total_units_reduced, 2);
+        // Each rank holds `mine` (1 unit) + the received unit concurrently,
+        // then frees `mine`: peak 2 live, 2 ever materialized.
+        assert_eq!(st.peak_live_units, vec![2, 2]);
+        assert_eq!(st.total_alloc_units, vec![2, 2]);
     }
 }

@@ -15,7 +15,7 @@
 //! relative for f32 `Sum`, bitwise for `Max`/`Min`).
 
 use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
-use permallreduce::cluster::{reference_allreduce, ClusterExecutor, ReduceOp};
+use permallreduce::cluster::{oracle, reference_allreduce, ClusterExecutor, ReduceOp};
 use permallreduce::coordinator::Communicator;
 use permallreduce::sched::verify::verify;
 use permallreduce::util::Rng;
@@ -141,6 +141,87 @@ fn allreduce_many_matches_looped_allreduce_for_every_p() {
                                 "P={p} {op:?} tensor {ti} rank {rank} elem {i}: {g} vs {w}"
                             ),
                         }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The arena data plane (slab buffers, Arc-shared sends, fused
+/// receive-reduce) must be **bit-identical** to the clone-per-message
+/// oracle for every P × algorithm × op: both planes apply combines in the
+/// same operand order, so even non-associative float rounding agrees. Any
+/// bit difference means the arena path reordered or staged an operand.
+#[test]
+fn arena_data_plane_bit_matches_clone_oracle_for_every_p_kind_op() {
+    let exec = ClusterExecutor::new();
+    let mut rng = Rng::new(0xA3E4A);
+    for p in 2..=17usize {
+        let n = 2 * p + 3;
+        for kind in AlgorithmKind::all() {
+            let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+            for op in ReduceOp::all() {
+                let xs = payloads(&mut rng, p, n);
+                let want = oracle::execute_reference(&s, &xs, op)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: oracle failed: {e}"));
+                let got = exec
+                    .execute(&s, &xs, op)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: arena failed: {e}"));
+                for rank in 0..p {
+                    assert_eq!(got[rank].len(), want[rank].len());
+                    for (i, (g, w)) in got[rank].iter().zip(&want[rank]).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "P={p} {kind:?} {op:?} rank {rank} elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The persistent pool runs the same arena engine through a different
+/// transport; its results (including pipelined multi-lane schedules) must
+/// also be bit-identical to the clone oracle.
+#[test]
+fn persistent_pool_bit_matches_clone_oracle() {
+    use permallreduce::cluster::{PersistentCluster, PoolJob};
+    use permallreduce::sched::pipeline;
+    use std::sync::Arc;
+    let mut rng = Rng::new(0xB17B17);
+    for p in [2usize, 3, 5, 8, 13, 17] {
+        let pool = PersistentCluster::new(p);
+        let base = Algorithm::new(AlgorithmKind::BwOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let ring = Algorithm::new(AlgorithmKind::Ring, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let pipelined = pipeline::expand(&base, 3).unwrap();
+        let scheds = [Arc::new(base), Arc::new(ring), Arc::new(pipelined)];
+        for op in ReduceOp::all() {
+            // Multi-bucket dispatch mixing all three schedules.
+            let jobs: Vec<PoolJob> = scheds
+                .iter()
+                .enumerate()
+                .map(|(ji, s)| PoolJob {
+                    schedule: s.clone(),
+                    inputs: payloads(&mut rng, p, 7 * p + 2 + ji),
+                })
+                .collect();
+            let got = pool.execute_many(&jobs, op).unwrap();
+            for (ji, job) in jobs.iter().enumerate() {
+                let want = oracle::execute_reference(&job.schedule, &job.inputs, op).unwrap();
+                for rank in 0..p {
+                    for (i, (g, w)) in got[ji][rank].iter().zip(&want[rank]).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "P={p} job {ji} {op:?} rank {rank} elem {i}"
+                        );
                     }
                 }
             }
