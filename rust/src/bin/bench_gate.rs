@@ -1,0 +1,257 @@
+//! CI perf-regression gate for the data-plane bench artifact.
+//!
+//! Compares `BENCH_dataplane.json` (written by `cargo bench --bench
+//! reduce_bench`) against the committed `BENCH_baseline.json` and exits
+//! non-zero when any series regresses. Because absolute seconds vary wildly
+//! across CI runners, the gated quantity is the **dimensionless speedup**
+//! of the arena/persistent-pool plane over the clone-per-message oracle
+//! (`clone_s / arena_pool_s`, measured in the same process on the same
+//! machine): a drop of more than `max_regress_pct` below the baseline's
+//! floor for the same `(p, elems)` series fails the build.
+//!
+//! ```text
+//! bench_gate <BENCH_baseline.json> <BENCH_dataplane.json>
+//! bench_gate --self-test <BENCH_baseline.json>   # prove the gate can fail
+//! ```
+//!
+//! The baseline is a conservative floor, meant to be ratcheted upward as
+//! the data plane improves; every baseline series must be present in the
+//! current artifact (a missing series is a coverage regression and fails).
+
+use std::process::ExitCode;
+
+use permallreduce::util::json::{self, Value};
+
+/// One gated series: the (p, elems) key and its speedup floor.
+#[derive(Clone, Debug, PartialEq)]
+struct Series {
+    p: u64,
+    elems: u64,
+    speedup: f64,
+}
+
+fn parse_baseline(text: &str) -> Result<(f64, Vec<Series>), String> {
+    let v = json::parse(text).map_err(|e| format!("baseline parse: {e}"))?;
+    let pct = v
+        .get("max_regress_pct")
+        .and_then(Value::as_f64)
+        .ok_or("baseline missing max_regress_pct")?;
+    // Strictly positive: 0 would fail any epsilon of run-to-run jitter.
+    if !(pct > 0.0 && pct < 100.0) {
+        return Err(format!("max_regress_pct {pct} out of (0, 100)"));
+    }
+    let series = parse_series(&v, "series", "min_speedup")?;
+    if series.is_empty() {
+        return Err("baseline has no series".to_string());
+    }
+    Ok((pct, series))
+}
+
+fn parse_current(text: &str) -> Result<Vec<Series>, String> {
+    let v = json::parse(text).map_err(|e| format!("current parse: {e}"))?;
+    parse_series(&v, "entries", "speedup")
+}
+
+fn parse_series(v: &Value, arr_key: &str, speedup_key: &str) -> Result<Vec<Series>, String> {
+    v.get(arr_key)
+        .and_then(Value::as_arr)
+        .ok_or_else(|| format!("missing `{arr_key}` array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let field = |k: &str| {
+                e.get(k)
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| format!("{arr_key}[{i}] missing `{k}`"))
+            };
+            Ok(Series {
+                p: field("p")? as u64,
+                elems: field("elems")? as u64,
+                speedup: field(speedup_key)?,
+            })
+        })
+        .collect()
+}
+
+/// Compare `current` against `baseline`; returns the list of failures
+/// (empty = gate passes).
+fn gate(baseline: &[Series], current: &[Series], max_regress_pct: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    let floor_factor = 1.0 - max_regress_pct / 100.0;
+    for b in baseline {
+        match current.iter().find(|c| c.p == b.p && c.elems == b.elems) {
+            None => failures.push(format!(
+                "series (p={}, elems={}) present in baseline but missing from the current \
+                 artifact (coverage regression)",
+                b.p, b.elems
+            )),
+            Some(c) => {
+                let floor = b.speedup * floor_factor;
+                if c.speedup < floor {
+                    failures.push(format!(
+                        "series (p={}, elems={}): speedup {:.3}× regressed more than \
+                         {max_regress_pct}% below the baseline floor {:.3}× (limit {floor:.3}×)",
+                        b.p, b.elems, c.speedup, b.speedup
+                    ));
+                }
+            }
+        }
+    }
+    failures
+}
+
+/// `--self-test`: fabricate a run where every series sits far below the
+/// floor and verify the gate rejects it — the CI step that proves the
+/// comparator can actually fail.
+fn self_test(baseline: &[Series], max_regress_pct: f64) -> Result<(), String> {
+    let regressed: Vec<Series> = baseline
+        .iter()
+        .map(|s| Series {
+            speedup: s.speedup * (1.0 - max_regress_pct / 100.0) * 0.5,
+            ..s.clone()
+        })
+        .collect();
+    let failures = gate(baseline, &regressed, max_regress_pct);
+    if failures.len() != baseline.len() {
+        return Err(format!(
+            "injected regression tripped {}/{} series — the gate is broken",
+            failures.len(),
+            baseline.len()
+        ));
+    }
+    let clean = gate(baseline, baseline, max_regress_pct);
+    if !clean.is_empty() {
+        return Err(format!(
+            "baseline does not pass against itself: {}",
+            clean.join("; ")
+        ));
+    }
+    Ok(())
+}
+
+fn run() -> Result<(), String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (selftest, files): (bool, Vec<&String>) = match args.first().map(String::as_str) {
+        Some("--self-test") => (true, args.iter().skip(1).collect()),
+        _ => (false, args.iter().collect()),
+    };
+    let baseline_path = files
+        .first()
+        .ok_or("usage: bench_gate [--self-test] <baseline.json> [<current.json>]")?;
+    let baseline_text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| format!("reading {baseline_path}: {e}"))?;
+    let (pct, baseline) = parse_baseline(&baseline_text)?;
+
+    if selftest {
+        self_test(&baseline, pct)?;
+        println!(
+            "bench_gate self-test OK: an injected {pct}%+ regression fails all \
+             {} series and the baseline passes against itself",
+            baseline.len()
+        );
+        return Ok(());
+    }
+
+    let current_path = files
+        .get(1)
+        .ok_or("usage: bench_gate <baseline.json> <current.json>")?;
+    let current_text = std::fs::read_to_string(current_path)
+        .map_err(|e| format!("reading {current_path}: {e}"))?;
+    let current = parse_current(&current_text)?;
+    let failures = gate(&baseline, &current, pct);
+    if failures.is_empty() {
+        println!(
+            "bench_gate OK: {} series within {pct}% of their baseline floors",
+            baseline.len()
+        );
+        Ok(())
+    } else {
+        Err(format!(
+            "perf regression gate failed:\n  {}",
+            failures.join("\n  ")
+        ))
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(p: u64, elems: u64, speedup: f64) -> Series {
+        Series { p, elems, speedup }
+    }
+
+    #[test]
+    fn gate_passes_at_and_above_the_floor() {
+        let base = [series(4, 4096, 2.0)];
+        assert!(gate(&base, &[series(4, 4096, 2.0)], 20.0).is_empty());
+        assert!(gate(&base, &[series(4, 4096, 1.61)], 20.0).is_empty());
+        assert!(gate(&base, &[series(4, 4096, 9.0)], 20.0).is_empty());
+    }
+
+    #[test]
+    fn gate_fails_below_the_floor_and_on_missing_series() {
+        let base = [series(4, 4096, 2.0), series(8, 65536, 1.5)];
+        let cur = [series(4, 4096, 1.59), series(8, 65536, 1.5)];
+        let fails = gate(&base, &cur, 20.0);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("p=4"));
+        let fails = gate(&base, &[series(4, 4096, 2.0)], 20.0);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("missing"));
+    }
+
+    #[test]
+    fn extra_current_series_are_ignored() {
+        let base = [series(4, 4096, 1.0)];
+        let cur = [series(4, 4096, 1.0), series(16, 1 << 20, 0.1)];
+        assert!(gate(&base, &cur, 20.0).is_empty());
+    }
+
+    #[test]
+    fn parses_the_committed_baseline_schema() {
+        let text = r#"{
+            "bench": "dataplane-baseline",
+            "max_regress_pct": 20,
+            "series": [
+                {"p": 4, "elems": 4096, "min_speedup": 1.0},
+                {"p": 8, "elems": 262144, "min_speedup": 1.0}
+            ]
+        }"#;
+        let (pct, base) = parse_baseline(text).unwrap();
+        assert_eq!(pct, 20.0);
+        assert_eq!(base.len(), 2);
+        assert_eq!(base[0], series(4, 4096, 1.0));
+    }
+
+    #[test]
+    fn parses_the_bench_artifact_schema() {
+        let text = r#"{
+            "bench": "dataplane",
+            "entries": [
+                {"p": 4, "elems": 4096, "bytes_per_rank": 16384,
+                 "clone_s": 1.0e-3, "arena_scoped_s": 8.0e-4,
+                 "arena_pool_s": 4.0e-4, "speedup": 2.5}
+            ],
+            "min_speedup": 2.5, "max_speedup": 2.5
+        }"#;
+        let cur = parse_current(text).unwrap();
+        assert_eq!(cur, vec![series(4, 4096, 2.5)]);
+    }
+
+    #[test]
+    fn self_test_catches_injected_regressions() {
+        let base = [series(4, 4096, 1.0), series(8, 65536, 1.0)];
+        self_test(&base, 20.0).unwrap();
+    }
+}

@@ -16,82 +16,182 @@
 //!   releasing the backing storage, so repeated schedules reuse the same
 //!   memory; capacity can be pre-sized from
 //!   [`crate::sched::ScheduleStats::total_alloc_units`].
-//! * [`BlockPool`] / [`Block`] — recycling wire blocks. A sender copies
-//!   slab-resident payloads into one pooled block per message, freezes it
-//!   into an `Arc`, and every further use (multi-destination sends,
-//!   forwarding a received chunk) is a **refcount bump**. When the last
-//!   [`Chunk`] drops, the block's storage returns to the pool — in steady
-//!   state no data-plane memory is ever handed back to the global
-//!   allocator.
+//! * [`BlockPool`] / [`Block`] — recycling wire blocks, organized as
+//!   **sharded, size-classed free lists**: each thread parks into and takes
+//!   from its own shard's power-of-two size class, falling back to larger
+//!   classes and then to other shards, so workers stop contending on a
+//!   single mutex on every send. A sender fills one pooled block per
+//!   message, freezes it into an `Arc`, and every further use
+//!   (multi-destination sends, forwarding a received chunk) is a
+//!   **refcount bump**. When the last [`Chunk`] drops, the block's storage
+//!   returns to the pool — in steady state no data-plane memory is ever
+//!   handed back to the global allocator.
 //! * [`DataPlane`] — the schedule interpreter over those two, generic over
 //!   a [`Transport`] (scoped channels, persistent-pool channels) and a
 //!   [`CombineKernel`]. Receivers keep the shared chunk as the buffer's
 //!   backing (zero-copy receive); a `Reduce` into a shared buffer
-//!   materializes it into the slab **fused** with the combine
-//!   (`out[i] = a[i] ⊕ b[i]`), so no intermediate copy is ever made and
-//!   the arithmetic order is bit-identical to the clone-based oracle
-//!   ([`crate::cluster::oracle`]).
+//!   materializes it **fused** with the combine (`out[i] = a[i] ⊕ b[i]`),
+//!   so no intermediate copy is ever made and the arithmetic order is
+//!   bit-identical to the clone-based oracle ([`crate::cluster::oracle`]).
+//!
+//! ## Send-aware reduce placement
+//!
+//! Where the fused result lands is chosen by **liveness**
+//! ([`crate::sched::stats::wire_reduce_placement`]): when a buffer's
+//! remaining schedule is "reduce into me, then send me (and free me)" —
+//! every hop of a Ring/segmented reduce-scatter — the fused receive-reduce
+//! writes **directly into a pooled wire block** ([`BufSlot::Owned`]). The
+//! later `Send` then freezes that block in place instead of paying a
+//! slab→block copy, restoring the old clone plane's move-on-last-use
+//! zero-copy. Buffers whose value stays local materialize into the slab as
+//! before. [`DataPlaneCounters`] (on the shared pool) count both outcomes,
+//! which is what `tests/placement.rs` pins down.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::sched::{BufId, MicroOp, ProcSchedule};
 
 use super::{ClusterError, Element, ReduceOp};
 
-/// Upper bound on blocks parked in a [`BlockPool`], so a pathological burst
-/// cannot pin memory forever.
-const MAX_PARKED: usize = 256;
+/// Free-list shards — each thread parks into / takes from its own shard
+/// first, so concurrent workers rarely touch the same mutex.
+const POOL_SHARDS: usize = 8;
 
-/// A recycling pool of wire blocks shared by every worker of one cluster.
+/// Power-of-two size classes: class `k` parks vectors whose capacity lies
+/// in `[2^k, 2^(k+1))`. One class per bit of `usize`, so no clamping is
+/// ever needed.
+const POOL_CLASSES: usize = usize::BITS as usize;
+
+/// Upper bound on blocks parked per shard, so a pathological burst cannot
+/// pin memory forever (pool-wide bound: `POOL_SHARDS × PER_SHARD_PARKED`).
+const PER_SHARD_PARKED: usize = 64;
+
+/// The shard this thread parks into / takes from first (round-robin
+/// assignment at first use, stable for the thread's lifetime).
+fn my_shard() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    SHARD.with(|s| *s % POOL_SHARDS)
+}
+
+/// Size class that a vector of capacity `cap > 0` parks into
+/// (`floor(log2 cap)`).
+fn class_of_cap(cap: usize) -> usize {
+    usize::BITS as usize - 1 - cap.leading_zeros() as usize
+}
+
+/// Smallest class whose every member can hold `len > 0` elements
+/// (`ceil(log2 len)`); fresh blocks allocate capacity `2^class` so reuse
+/// always hits this class.
+fn class_for_len(len: usize) -> usize {
+    usize::BITS as usize - (len - 1).leading_zeros() as usize
+}
+
+/// Cumulative data-plane event counters, shared through the [`BlockPool`]
+/// by every worker of one cluster. All counters are monotone; tests and
+/// diagnostics read consistent-enough snapshots with [`Self::snapshot`].
+#[derive(Debug, Default)]
+pub struct DataPlaneCounters {
+    /// Send-payload parts copied slab→wire — exactly the copies send-aware
+    /// reduce placement exists to remove.
+    pub slab_to_wire_copies: AtomicU64,
+    /// Elements moved by those slab→wire copies.
+    pub slab_to_wire_elems: AtomicU64,
+    /// Fused receive-reduces materialized directly into a pooled wire
+    /// block (the send that follows is then a zero-copy freeze).
+    pub wire_placed_reduces: AtomicU64,
+}
+
+impl DataPlaneCounters {
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            slab_to_wire_copies: self.slab_to_wire_copies.load(Ordering::Relaxed),
+            slab_to_wire_elems: self.slab_to_wire_elems.load(Ordering::Relaxed),
+            wire_placed_reduces: self.wire_placed_reduces.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Add another counter set into this one (used by the scoped executor
+    /// to surface its per-call pool's counts through
+    /// [`super::ExecOptions::counters`]).
+    pub fn absorb(&self, s: CounterSnapshot) {
+        self.slab_to_wire_copies
+            .fetch_add(s.slab_to_wire_copies, Ordering::Relaxed);
+        self.slab_to_wire_elems
+            .fetch_add(s.slab_to_wire_elems, Ordering::Relaxed);
+        self.wire_placed_reduces
+            .fetch_add(s.wire_placed_reduces, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time copy of [`DataPlaneCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub slab_to_wire_copies: u64,
+    pub slab_to_wire_elems: u64,
+    pub wire_placed_reduces: u64,
+}
+
+/// One shard of the pool: `classes[k]` holds parked vectors of capacity
+/// `[2^k, 2^(k+1))`; `parked` is the shard's total (bounded).
+struct Shard<T> {
+    classes: Vec<Vec<Vec<T>>>,
+    parked: usize,
+}
+
+impl<T> Shard<T> {
+    fn new() -> Shard<T> {
+        Shard {
+            classes: (0..POOL_CLASSES).map(|_| Vec::new()).collect(),
+            parked: 0,
+        }
+    }
+}
+
+/// A recycling pool of wire blocks shared by every worker of one cluster:
+/// sharded, size-classed free lists plus the cluster's
+/// [`DataPlaneCounters`].
 pub struct BlockPool<T: Element> {
-    free: Mutex<Vec<Vec<T>>>,
+    shards: Vec<Mutex<Shard<T>>>,
+    counters: DataPlaneCounters,
 }
 
 impl<T: Element> BlockPool<T> {
     pub fn new() -> BlockPool<T> {
         BlockPool {
-            free: Mutex::new(Vec::new()),
+            shards: (0..POOL_SHARDS).map(|_| Mutex::new(Shard::new())).collect(),
+            counters: DataPlaneCounters::default(),
         }
     }
 
-    /// Number of blocks currently parked (diagnostics / tests).
-    pub fn parked(&self) -> usize {
-        self.free.lock().unwrap().len()
+    /// The cluster-wide data-plane event counters.
+    pub fn counters(&self) -> &DataPlaneCounters {
+        &self.counters
     }
 
-    /// Take a block of exactly `len` elements. Reuses the smallest parked
-    /// vector whose capacity suffices; falls back to growing the largest
-    /// parked one (so capacities converge to the workload's sizes), and
-    /// only allocates fresh storage when the pool is empty.
+    /// Number of blocks currently parked across all shards (diagnostics /
+    /// tests).
+    pub fn parked(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().parked).sum()
+    }
+
+    /// Take a block of exactly `len` elements. Reuses a parked vector from
+    /// the caller's shard (size class `ceil(log2 len)` or larger), then
+    /// steals from other shards, and only allocates fresh storage — with
+    /// capacity rounded up to the class boundary, so the *next* take of
+    /// this size is guaranteed to hit the class — when the pool is empty.
     ///
     /// The contents are **unspecified** (recycled blocks keep their old
     /// data rather than paying a zeroing pass) — every caller fully
     /// overwrites the block before sharing it.
     pub fn take(pool: &Arc<BlockPool<T>>, len: usize) -> Block<T> {
-        let mut data = {
-            let mut free = pool.free.lock().unwrap();
-            // One pass under the lock: best fit (smallest sufficient
-            // capacity), falling back to the largest parked vector so one
-            // block converges to the big size class instead of all of them.
-            let mut best: Option<(usize, usize)> = None; // (idx, capacity)
-            let mut largest: Option<(usize, usize)> = None;
-            for (i, v) in free.iter().enumerate() {
-                let cap = v.capacity();
-                match largest {
-                    Some((_, c)) if c >= cap => {}
-                    _ => largest = Some((i, cap)),
-                }
-                if cap >= len {
-                    match best {
-                        Some((_, c)) if c <= cap => {}
-                        _ => best = Some((i, cap)),
-                    }
-                }
-            }
-            match best.or(largest) {
-                Some((i, _)) => free.swap_remove(i),
-                None => Vec::new(),
-            }
+        let mut data = if len == 0 {
+            Vec::new()
+        } else {
+            pool.take_storage(len)
         };
         // Truncate (free) rather than clear+resize (memset): only growth
         // beyond the old length writes memory.
@@ -102,8 +202,57 @@ impl<T: Element> BlockPool<T> {
         }
         Block {
             data,
+            // Park back into the *taker's* shard regardless of which
+            // thread drops the last reference: the taker is the thread
+            // that re-takes this size class in steady state (e.g. the
+            // Ring sender whose frozen block is dropped by the receiver),
+            // so affinity keeps home-shard hits instead of migrating
+            // storage to the consumer side.
+            home: my_shard(),
             pool: pool.clone(),
         }
+    }
+
+    fn take_storage(&self, len: usize) -> Vec<T> {
+        let k0 = class_for_len(len);
+        let home = my_shard();
+        for i in 0..POOL_SHARDS {
+            let mut shard = self.shards[(home + i) % POOL_SHARDS].lock().unwrap();
+            for k in k0..POOL_CLASSES {
+                if let Some(v) = shard.classes[k].pop() {
+                    shard.parked -= 1;
+                    debug_assert!(v.capacity() >= len);
+                    return v;
+                }
+            }
+        }
+        Vec::with_capacity(len.next_power_of_two())
+    }
+
+    /// Park storage back into the block's home shard (the taker's — see
+    /// [`BlockPool::take`]). The shard is bounded; a full shard evicts its
+    /// smallest parked block from a *lower* class to make room, so a
+    /// workload-shape change toward bigger blocks converges to reuse
+    /// instead of thrashing the global allocator (larger-or-equal parked
+    /// blocks already serve this size, so if none is smaller the incoming
+    /// block is simply released).
+    fn park(&self, data: Vec<T>, home: usize) {
+        if data.capacity() == 0 {
+            return;
+        }
+        let k = class_of_cap(data.capacity());
+        let mut shard = self.shards[home % POOL_SHARDS].lock().unwrap();
+        if shard.parked >= PER_SHARD_PARKED {
+            match (0..k).find(|&c| !shard.classes[c].is_empty()) {
+                Some(victim) => {
+                    shard.classes[victim].pop();
+                    shard.parked -= 1;
+                }
+                None => return,
+            }
+        }
+        shard.classes[k].push(data);
+        shard.parked += 1;
     }
 }
 
@@ -118,6 +267,8 @@ impl<T: Element> Default for BlockPool<T> {
 /// storage back in the pool.
 pub struct Block<T: Element> {
     data: Vec<T>,
+    /// Shard this block parks back into (the taker's home shard).
+    home: usize,
     pool: Arc<BlockPool<T>>,
 }
 
@@ -149,12 +300,7 @@ impl<T: Element> Block<T> {
 impl<T: Element> Drop for Block<T> {
     fn drop(&mut self) {
         let data = std::mem::take(&mut self.data);
-        if data.capacity() > 0 {
-            let mut free = self.pool.free.lock().unwrap();
-            if free.len() < MAX_PARKED {
-                free.push(data);
-            }
-        }
+        self.pool.park(data, self.home);
     }
 }
 
@@ -281,13 +427,17 @@ impl<T: Element> Default for Arena<T> {
 }
 
 /// Where a live buffer's bytes currently are.
-#[derive(Clone)]
 pub enum BufSlot<T: Element> {
     /// Owned by this worker, in its slab (writable).
     Slab(SlabSlot),
-    /// A received payload view, shared with the sender's block (read-only;
-    /// forwarding it is a refcount bump, reducing into it materializes a
-    /// slab slot via the fused combine).
+    /// A still-writable pooled wire block this worker owns exclusively —
+    /// the send-aware placement state: a fused receive-reduce landed here
+    /// because liveness says the value's next use is a send. The send
+    /// freezes it in place (no copy) and the slot becomes [`BufSlot::Shared`].
+    Owned(Block<T>),
+    /// A received (or frozen) payload view, shared with the block's other
+    /// holders (read-only; forwarding it is a refcount bump, reducing into
+    /// it materializes a writable slot via the fused combine).
     Shared(Chunk<T>),
 }
 
@@ -347,12 +497,23 @@ enum Part<T: Element> {
     Fresh(usize, usize),
 }
 
+/// Per-worker counter accumulator: plain integers on the worker's own
+/// cache line, flushed into the shared [`DataPlaneCounters`] once per
+/// schedule run — so the per-send hot path never touches a shared atomic.
+#[derive(Default)]
+struct LocalCounters {
+    copies: u64,
+    elems: u64,
+    placed: u64,
+}
+
 /// A worker's half of the data plane: slab arena + slot table + wire-block
 /// pool. Lives as long as the worker, so steady-state reuse is free.
 pub struct DataPlane<T: Element> {
     arena: Arena<T>,
     slots: Vec<Option<BufSlot<T>>>,
     pool: Arc<BlockPool<T>>,
+    local: LocalCounters,
 }
 
 impl<T: Element> DataPlane<T> {
@@ -361,7 +522,21 @@ impl<T: Element> DataPlane<T> {
             arena: Arena::new(),
             slots: Vec::new(),
             pool,
+            local: LocalCounters::default(),
         }
+    }
+
+    /// Publish the locally accumulated counts into the pool's shared
+    /// [`DataPlaneCounters`].
+    fn flush_counters(&mut self) {
+        let l = std::mem::take(&mut self.local);
+        if l.copies == 0 && l.elems == 0 && l.placed == 0 {
+            return;
+        }
+        let c = self.pool.counters();
+        c.slab_to_wire_copies.fetch_add(l.copies, Ordering::Relaxed);
+        c.slab_to_wire_elems.fetch_add(l.elems, Ordering::Relaxed);
+        c.wire_placed_reduces.fetch_add(l.placed, Ordering::Relaxed);
     }
 
     pub fn pool(&self) -> &Arc<BlockPool<T>> {
@@ -380,6 +555,11 @@ impl<T: Element> DataPlane<T> {
     /// Execute one schedule for rank `proc`: read `input`, run every step
     /// with message tags offset by `step_off`, and write the fully reduced
     /// result into `out` (`out.len() == input.len()`).
+    ///
+    /// `wire_dst` is this rank's send-aware placement row
+    /// ([`crate::sched::stats::wire_reduce_placement`]): `wire_dst[b]`
+    /// means "materialize buffer `b`'s fused receive-reduce directly into a
+    /// pooled wire block". Pass an empty slice to disable placement.
     #[allow(clippy::too_many_arguments)]
     pub fn run_schedule(
         &mut self,
@@ -387,6 +567,7 @@ impl<T: Element> DataPlane<T> {
         proc: usize,
         input: &[T],
         step_off: usize,
+        wire_dst: &[bool],
         transport: &mut dyn Transport<T>,
         kernel: &dyn CombineKernel<T>,
         out: &mut [T],
@@ -410,11 +591,12 @@ impl<T: Element> DataPlane<T> {
             self.slots[id as usize] = Some(BufSlot::Slab(slot));
         }
 
-        if let Err(e) = self.run_steps(s, proc, step_off, transport, kernel) {
-            // Drop any shared chunks before surfacing the error, so their
-            // wire blocks return to the pool even on a failed call (the
-            // plane may live on inside a persistent worker).
+        if let Err(e) = self.run_steps(s, proc, step_off, wire_dst, transport, kernel) {
+            // Drop any shared chunks / owned blocks before surfacing the
+            // error, so their storage returns to the pool even on a failed
+            // call (the plane may live on inside a persistent worker).
             self.slots.clear();
+            self.flush_counters();
             return Err(e);
         }
 
@@ -422,6 +604,7 @@ impl<T: Element> DataPlane<T> {
         for &b in &s.result[proc] {
             let src: &[T] = match self.slots[b as usize].as_ref().expect("result buffer dead") {
                 BufSlot::Slab(sl) => self.arena.slice(*sl),
+                BufSlot::Owned(blk) => blk.data(),
                 BufSlot::Shared(c) => c.as_slice(),
             };
             out[cursor..cursor + src.len()].copy_from_slice(src);
@@ -430,6 +613,7 @@ impl<T: Element> DataPlane<T> {
         debug_assert_eq!(cursor, n);
         // Drop shared chunks promptly so their blocks return to the pool.
         self.slots.clear();
+        self.flush_counters();
         Ok(())
     }
 
@@ -440,6 +624,7 @@ impl<T: Element> DataPlane<T> {
         s: &ProcSchedule,
         proc: usize,
         step_off: usize,
+        wire_dst: &[bool],
         transport: &mut dyn Transport<T>,
         kernel: &dyn CombineKernel<T>,
     ) -> Result<(), ClusterError> {
@@ -467,7 +652,10 @@ impl<T: Element> DataPlane<T> {
                             self.slots[b as usize] = Some(BufSlot::Shared(chunk));
                         }
                     }
-                    MicroOp::Reduce { dst, src } => self.reduce(dst, src, kernel),
+                    MicroOp::Reduce { dst, src } => {
+                        let place = wire_dst.get(dst as usize).copied().unwrap_or(false);
+                        self.reduce(dst, src, kernel, place);
+                    }
                     MicroOp::Copy { dst, src } => self.copy(dst, src),
                     MicroOp::Free { buf } => {
                         self.slots[buf as usize] = None;
@@ -479,8 +667,10 @@ impl<T: Element> DataPlane<T> {
     }
 
     /// Assemble one message: shared chunks are forwarded by refcount bump;
-    /// slab-resident buffers are copied once into a pooled wire block that
-    /// is then frozen and shared with the receiver.
+    /// owned (placement-materialized) blocks are frozen **in place** — the
+    /// zero-copy send the placement pass set up; slab-resident buffers are
+    /// copied once into a pooled wire block that is then frozen and shared
+    /// with the receiver.
     fn build_payload(&mut self, ids: &[BufId]) -> Payload<T> {
         let mut slab_total = 0usize;
         let mut any_slab = false;
@@ -501,15 +691,31 @@ impl<T: Element> DataPlane<T> {
         let mut parts: Vec<Part<T>> = Vec::with_capacity(ids.len());
         let mut cursor = 0usize;
         for &b in ids {
-            match self.slots[b as usize].as_ref().expect("send of dead buffer") {
-                BufSlot::Shared(c) => parts.push(Part::Fwd(c.clone())),
+            let slot = self.slots[b as usize].take().expect("send of dead buffer");
+            let back = match slot {
+                BufSlot::Shared(c) => {
+                    parts.push(Part::Fwd(c.clone()));
+                    BufSlot::Shared(c)
+                }
+                BufSlot::Owned(blk) => {
+                    // Move-on-send: the placed block becomes the payload;
+                    // the buffer keeps a read-only view of it.
+                    let len = blk.len();
+                    let c = Chunk::new(blk.freeze(), 0, len);
+                    parts.push(Part::Fwd(c.clone()));
+                    BufSlot::Shared(c)
+                }
                 BufSlot::Slab(sl) => {
                     let w = wire.as_mut().expect("wire block exists for slab parts");
-                    w.data_mut()[cursor..cursor + sl.len].copy_from_slice(self.arena.slice(*sl));
+                    w.data_mut()[cursor..cursor + sl.len].copy_from_slice(self.arena.slice(sl));
+                    self.local.copies += 1;
+                    self.local.elems += sl.len as u64;
                     parts.push(Part::Fresh(cursor, sl.len));
                     cursor += sl.len;
+                    BufSlot::Slab(sl)
                 }
-            }
+            };
+            self.slots[b as usize] = Some(back);
         }
         let frozen = wire.map(Block::freeze);
         parts
@@ -523,54 +729,108 @@ impl<T: Element> DataPlane<T> {
             .collect()
     }
 
-    fn reduce(&mut self, dst: BufId, src: BufId, kernel: &dyn CombineKernel<T>) {
-        let s_slot = self.slots[src as usize]
-            .clone()
-            .expect("reduce from dead buffer");
+    /// `dst ⊕= src`. A `Shared` (received) destination is materialized into
+    /// a writable slot fused with the combine; `place_wire` (the liveness
+    /// hint) decides whether that slot is a pooled wire block — the value's
+    /// next use is a send — or a slab slot.
+    fn reduce(&mut self, dst: BufId, src: BufId, kernel: &dyn CombineKernel<T>, place_wire: bool) {
+        debug_assert_ne!(dst, src, "reduce into itself");
         let d_slot = self.slots[dst as usize]
-            .clone()
+            .take()
             .expect("reduce into dead buffer");
-        match d_slot {
-            BufSlot::Slab(d) => match s_slot {
-                BufSlot::Slab(s) => {
-                    let (dv, sv) = self.arena.disjoint_mut(d, s);
-                    kernel.fold(dv, sv);
-                }
-                BufSlot::Shared(c) => kernel.fold(self.arena.slice_mut(d), c.as_slice()),
-            },
-            BufSlot::Shared(c_dst) => {
-                // Materialize the shared payload into the slab, fusing the
-                // combine into the materializing write (no staging copy).
-                let d = self.arena.alloc(c_dst.len());
-                match s_slot {
-                    BufSlot::Shared(c_src) => {
-                        kernel.fuse(self.arena.slice_mut(d), c_dst.as_slice(), c_src.as_slice());
-                    }
+        let new_d = match d_slot {
+            BufSlot::Slab(d) => {
+                match self.slots[src as usize]
+                    .as_ref()
+                    .expect("reduce from dead buffer")
+                {
                     BufSlot::Slab(s) => {
+                        let s = *s;
                         let (dv, sv) = self.arena.disjoint_mut(d, s);
-                        kernel.fuse(dv, c_dst.as_slice(), sv);
+                        kernel.fold(dv, sv);
                     }
+                    BufSlot::Shared(c) => kernel.fold(self.arena.slice_mut(d), c.as_slice()),
+                    BufSlot::Owned(b) => kernel.fold(self.arena.slice_mut(d), b.data()),
                 }
-                self.slots[dst as usize] = Some(BufSlot::Slab(d));
+                BufSlot::Slab(d)
             }
-        }
+            BufSlot::Owned(mut blk) => {
+                // An earlier reduce already placed this buffer in a wire
+                // block; keep folding in place.
+                match self.slots[src as usize]
+                    .as_ref()
+                    .expect("reduce from dead buffer")
+                {
+                    BufSlot::Slab(s) => kernel.fold(blk.data_mut(), self.arena.slice(*s)),
+                    BufSlot::Shared(c) => kernel.fold(blk.data_mut(), c.as_slice()),
+                    BufSlot::Owned(b) => kernel.fold(blk.data_mut(), b.data()),
+                }
+                BufSlot::Owned(blk)
+            }
+            BufSlot::Shared(c_dst) => {
+                if place_wire {
+                    let mut blk = BlockPool::take(&self.pool, c_dst.len());
+                    match self.slots[src as usize]
+                        .as_ref()
+                        .expect("reduce from dead buffer")
+                    {
+                        BufSlot::Slab(s) => {
+                            kernel.fuse(blk.data_mut(), c_dst.as_slice(), self.arena.slice(*s))
+                        }
+                        BufSlot::Shared(c) => {
+                            kernel.fuse(blk.data_mut(), c_dst.as_slice(), c.as_slice())
+                        }
+                        BufSlot::Owned(b) => kernel.fuse(blk.data_mut(), c_dst.as_slice(), b.data()),
+                    }
+                    self.local.placed += 1;
+                    BufSlot::Owned(blk)
+                } else {
+                    let d = self.arena.alloc(c_dst.len());
+                    match self.slots[src as usize]
+                        .as_ref()
+                        .expect("reduce from dead buffer")
+                    {
+                        BufSlot::Slab(s) => {
+                            let s = *s;
+                            let (dv, sv) = self.arena.disjoint_mut(d, s);
+                            kernel.fuse(dv, c_dst.as_slice(), sv);
+                        }
+                        BufSlot::Shared(c) => {
+                            kernel.fuse(self.arena.slice_mut(d), c_dst.as_slice(), c.as_slice())
+                        }
+                        BufSlot::Owned(b) => {
+                            kernel.fuse(self.arena.slice_mut(d), c_dst.as_slice(), b.data())
+                        }
+                    }
+                    BufSlot::Slab(d)
+                }
+            }
+        };
+        self.slots[dst as usize] = Some(new_d);
     }
 
     fn copy(&mut self, dst: BufId, src: BufId) {
-        let s_slot = self.slots[src as usize]
-            .clone()
-            .expect("copy of dead buffer");
-        let new_slot = match s_slot {
+        let s_slot = self.slots[src as usize].take().expect("copy of dead buffer");
+        let (src_back, dst_slot) = match s_slot {
             // Shared source: the copy is purely logical (refcount bump).
-            BufSlot::Shared(c) => BufSlot::Shared(c),
+            BufSlot::Shared(c) => (BufSlot::Shared(c.clone()), BufSlot::Shared(c)),
+            // Owned source: freeze it — both buffers then share the block
+            // read-only, still zero-copy (a later reduce into either
+            // materializes a fresh writable slot).
+            BufSlot::Owned(blk) => {
+                let len = blk.len();
+                let c = Chunk::new(blk.freeze(), 0, len);
+                (BufSlot::Shared(c.clone()), BufSlot::Shared(c))
+            }
             BufSlot::Slab(s) => {
                 let d = self.arena.alloc(s.len);
                 let (dv, sv) = self.arena.disjoint_mut(d, s);
                 dv.copy_from_slice(sv);
-                BufSlot::Slab(d)
+                (BufSlot::Slab(s), BufSlot::Slab(d))
             }
         };
-        self.slots[dst as usize] = Some(new_slot);
+        self.slots[src as usize] = Some(src_back);
+        self.slots[dst as usize] = Some(dst_slot);
     }
 }
 
@@ -610,6 +870,69 @@ mod tests {
         // Contents are unspecified on reuse (no zeroing pass) — only the
         // length contract holds.
         assert_eq!(b2.len(), 50);
+    }
+
+    #[test]
+    fn block_pool_size_classes_round_trip() {
+        let pool = Arc::new(BlockPool::<f32>::new());
+        // A fresh take rounds capacity up to the class boundary, so the
+        // same (non-power-of-two) size re-takes from the pool forever.
+        let b = BlockPool::take(&pool, 100);
+        assert!(b.data.capacity() >= 128);
+        drop(b);
+        for _ in 0..10 {
+            let b = BlockPool::take(&pool, 100);
+            assert_eq!(pool.parked(), 0, "repeat takes must hit the class");
+            drop(b);
+            assert_eq!(pool.parked(), 1);
+        }
+        // A bigger request must not reuse a too-small parked block.
+        let big = BlockPool::take(&pool, 1000);
+        assert_eq!(big.len(), 1000);
+        assert_eq!(pool.parked(), 1, "the 128-cap block stays parked");
+    }
+
+    #[test]
+    fn class_math() {
+        assert_eq!(class_of_cap(1), 0);
+        assert_eq!(class_of_cap(2), 1);
+        assert_eq!(class_of_cap(3), 1);
+        assert_eq!(class_of_cap(128), 7);
+        assert_eq!(class_for_len(1), 0);
+        assert_eq!(class_for_len(2), 1);
+        assert_eq!(class_for_len(3), 2);
+        assert_eq!(class_for_len(128), 7);
+        assert_eq!(class_for_len(129), 8);
+        // park(class_of_cap(next_pow2(len))) is always visible to
+        // take(class_for_len(len)).
+        for len in [1usize, 2, 3, 7, 100, 129, 4096, 5000] {
+            assert_eq!(class_of_cap(len.next_power_of_two()), class_for_len(len));
+        }
+    }
+
+    #[test]
+    fn full_shard_evicts_smaller_classes_for_bigger_blocks() {
+        let pool = Arc::new(BlockPool::<f32>::new());
+        // Fill this thread's shard to its cap with small blocks.
+        let small: Vec<Block<f32>> = (0..PER_SHARD_PARKED)
+            .map(|_| BlockPool::take(&pool, 16))
+            .collect();
+        drop(small);
+        assert_eq!(pool.parked(), PER_SHARD_PARKED);
+        // A big block must still round-trip through the full shard: its
+        // park evicts a small victim instead of releasing the big storage.
+        let big = BlockPool::take(&pool, 1 << 16);
+        assert_eq!(pool.parked(), PER_SHARD_PARKED, "big take missed (fresh alloc)");
+        drop(big);
+        assert_eq!(pool.parked(), PER_SHARD_PARKED, "park evicted a victim, kept big");
+        let before = pool.parked();
+        let big2 = BlockPool::take(&pool, 1 << 16);
+        assert_eq!(
+            pool.parked(),
+            before - 1,
+            "the workload-shape change converged: big blocks now reuse"
+        );
+        drop(big2);
     }
 
     #[test]
@@ -658,5 +981,81 @@ mod tests {
         let mut a: Arena<f32> = Arena::new();
         let s = a.alloc(0);
         assert!(a.slice(s).is_empty());
+    }
+
+    #[test]
+    fn counters_track_copies_and_placements() {
+        let pool = Arc::new(BlockPool::<f64>::new());
+        let mut plane = DataPlane::new(pool.clone());
+        // Hand-drive the slot table: one slab buffer sent (copy), one
+        // shared buffer reduced with placement (wire-placed) then sent
+        // (freeze in place, no copy).
+        plane.slots.resize_with(3, || None);
+        let sl = plane.arena.alloc(4);
+        plane.arena.slice_mut(sl).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        plane.slots[0] = Some(BufSlot::Slab(sl));
+        let pl = plane.build_payload(&[0]);
+        assert_eq!(pl[0].as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        plane.flush_counters();
+        let c = pool.counters().snapshot();
+        assert_eq!(c.slab_to_wire_copies, 1);
+        assert_eq!(c.slab_to_wire_elems, 4);
+
+        // Shared dst (as if received), slab src, placement on.
+        let mut b = BlockPool::take(&pool, 4);
+        b.data_mut().copy_from_slice(&[10.0, 20.0, 30.0, 40.0]);
+        let frozen = b.freeze();
+        plane.slots[1] = Some(BufSlot::Shared(Chunk::new(frozen, 0, 4)));
+        let kernel = NativeKernel(ReduceOp::Sum);
+        plane.reduce(1, 0, &kernel, true);
+        match plane.slots[1].as_ref().unwrap() {
+            BufSlot::Owned(blk) => assert_eq!(blk.data(), &[11.0, 22.0, 33.0, 44.0]),
+            _ => panic!("placed reduce must yield an Owned block"),
+        }
+        plane.flush_counters();
+        let before = pool.counters().snapshot();
+        assert_eq!(before.wire_placed_reduces, 1);
+        let pl = plane.build_payload(&[1]);
+        assert_eq!(pl[0].as_slice(), &[11.0, 22.0, 33.0, 44.0]);
+        plane.flush_counters();
+        let after = pool.counters().snapshot();
+        assert_eq!(
+            after.slab_to_wire_copies, before.slab_to_wire_copies,
+            "sending an Owned block is a freeze, not a copy"
+        );
+        // The slot is now Shared — a second send forwards.
+        assert!(matches!(plane.slots[1].as_ref().unwrap(), BufSlot::Shared(_)));
+    }
+
+    #[test]
+    fn placed_and_slab_reduce_are_bit_identical() {
+        let pool = Arc::new(BlockPool::<f32>::new());
+        let dst_data: Vec<f32> = (0..33).map(|i| (i as f32).sin() * 3.0).collect();
+        let src_data: Vec<f32> = (0..33).map(|i| (i as f32).cos() * 2.0).collect();
+        for op in ReduceOp::all() {
+            let kernel = NativeKernel(op);
+            let mut outs: Vec<Vec<f32>> = Vec::new();
+            for place in [false, true] {
+                let mut plane = DataPlane::new(pool.clone());
+                plane.slots.resize_with(2, || None);
+                let mut b = BlockPool::take(&pool, 33);
+                b.data_mut().copy_from_slice(&dst_data);
+                let frozen = b.freeze();
+                plane.slots[0] = Some(BufSlot::Shared(Chunk::new(frozen, 0, 33)));
+                let sl = plane.arena.alloc(33);
+                plane.arena.slice_mut(sl).copy_from_slice(&src_data);
+                plane.slots[1] = Some(BufSlot::Slab(sl));
+                plane.reduce(0, 1, &kernel, place);
+                let got: Vec<f32> = match plane.slots[0].as_ref().unwrap() {
+                    BufSlot::Owned(blk) => blk.data().to_vec(),
+                    BufSlot::Slab(s) => plane.arena.slice(*s).to_vec(),
+                    BufSlot::Shared(_) => panic!("reduce must materialize"),
+                };
+                outs.push(got);
+            }
+            for (x, y) in outs[0].iter().zip(&outs[1]) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{op:?}");
+            }
+        }
     }
 }

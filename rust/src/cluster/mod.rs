@@ -21,15 +21,84 @@ pub mod oracle;
 pub mod persistent;
 pub mod reducer;
 
+pub use arena::{CounterSnapshot, DataPlaneCounters};
 pub use persistent::{JobIo, PersistentCluster, PoolJob};
 pub use reducer::{NativeReducer, ReduceError, Reducer};
 
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::sched::ProcSchedule;
+
+/// Name-keyed, fingerprint-guarded cache of per-schedule derived data
+/// (send-aware placement rows, arena pre-size hints), shared by both
+/// executors. In-crate schedule names encode the algorithm and all shape
+/// parameters; the (steps, n_units, P) fingerprint guards caller-built
+/// schedules reusing a name. Cached values only steer reduce placement or
+/// arena pre-sizing — either choice is correct — so a residual collision
+/// can cost performance but never corrupt results, which is what lets
+/// warm-path lookups stay allocation-free (no structural hashing of the
+/// schedule itself).
+pub(crate) struct SchedCache<V> {
+    map: Mutex<HashMap<String, CacheEntry<V>>>,
+}
+
+struct CacheEntry<V> {
+    steps: usize,
+    n_units: u32,
+    p: usize,
+    value: Arc<V>,
+}
+
+impl<V> SchedCache<V> {
+    pub(crate) fn new() -> SchedCache<V> {
+        SchedCache {
+            map: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Fetch the cached value for `s`, computing it with `f` on miss or
+    /// fingerprint mismatch. The compute runs **outside** the lock so a
+    /// slow first-time schedule walk never blocks other threads' hits;
+    /// concurrent misses may compute twice and last-insert wins (the
+    /// values are pure functions of the schedule, so both are identical).
+    pub(crate) fn get_or_compute(&self, s: &ProcSchedule, f: impl FnOnce() -> V) -> Arc<V> {
+        {
+            let map = self.map.lock().unwrap();
+            if let Some(e) = map.get(&s.name) {
+                if e.steps == s.steps.len() && e.n_units == s.n_units && e.p == s.p {
+                    return e.value.clone();
+                }
+            }
+        }
+        let value = Arc::new(f());
+        self.map.lock().unwrap().insert(
+            s.name.clone(),
+            CacheEntry {
+                steps: s.steps.len(),
+                n_units: s.n_units,
+                p: s.p,
+                value: value.clone(),
+            },
+        );
+        value
+    }
+}
+
+impl<V> Default for SchedCache<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> std::fmt::Debug for SchedCache<V> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.map.lock().map(|m| m.len()).unwrap_or(0);
+        write!(f, "SchedCache({n} entries)")
+    }
+}
 
 /// MPI-style combine operation. All ops are commutative and associative —
 /// the cyclic-pattern algorithms reorder operands (paper §3 notes cyclic
@@ -123,6 +192,15 @@ pub struct ExecOptions {
     pub recv_timeout: Duration,
     /// Optional injected fault.
     pub fault: Option<Fault>,
+    /// Send-aware reduce placement (on by default): materialize a fused
+    /// receive-reduce directly into a pooled wire block when liveness
+    /// ([`crate::sched::stats::wire_reduce_placement`]) shows the buffer's
+    /// next use is a send, making that send a zero-copy freeze. Off is
+    /// only useful for A/B tests against the slab-materialize path.
+    pub send_aware_placement: bool,
+    /// Optional sink for the call's [`DataPlaneCounters`]: after each
+    /// `execute*` call the per-call pool's counts are added here.
+    pub counters: Option<Arc<DataPlaneCounters>>,
 }
 
 impl Default for ExecOptions {
@@ -130,6 +208,8 @@ impl Default for ExecOptions {
         ExecOptions {
             recv_timeout: Duration::from_secs(10),
             fault: None,
+            send_aware_placement: true,
+            counters: None,
         }
     }
 }
@@ -214,17 +294,28 @@ pub struct Job<'a, T> {
 #[derive(Clone, Debug, Default)]
 pub struct ClusterExecutor {
     pub opts: ExecOptions,
+    /// Cached send-aware placement rows per schedule ([`SchedCache`]),
+    /// shared across clones so the repeated-call path walks each schedule
+    /// once.
+    place_cache: Arc<SchedCache<Vec<Vec<bool>>>>,
 }
 
 impl ClusterExecutor {
     pub fn new() -> ClusterExecutor {
-        ClusterExecutor {
-            opts: ExecOptions::default(),
-        }
+        Self::with_options(ExecOptions::default())
     }
 
     pub fn with_options(opts: ExecOptions) -> ClusterExecutor {
-        ClusterExecutor { opts }
+        ClusterExecutor {
+            opts,
+            place_cache: Arc::new(SchedCache::new()),
+        }
+    }
+
+    /// Fetch (or compute and cache) a schedule's send-aware placement rows.
+    fn placement_rows(&self, s: &ProcSchedule) -> Arc<Vec<Vec<bool>>> {
+        self.place_cache
+            .get_or_compute(s, || crate::sched::stats::wire_reduce_placement(s))
     }
 
     /// Run the schedule on `inputs` (one vector per rank, equal lengths)
@@ -317,6 +408,16 @@ impl ClusterExecutor {
             offs.push(total_steps);
             total_steps += job.schedule.steps.len();
         }
+        // Send-aware reduce placement rows per job, cached per schedule
+        // (shared by all of that job's workers).
+        let placements: Vec<Option<Arc<Vec<Vec<bool>>>>> = jobs
+            .iter()
+            .map(|job| {
+                self.opts
+                    .send_aware_placement
+                    .then(|| self.placement_rows(job.schedule))
+            })
+            .collect();
 
         // One inbox per process; senders cloned everywhere. The wire-block
         // pool is shared by all workers of this call, so blocks recycle
@@ -341,10 +442,12 @@ impl ClusterExecutor {
                 let wjobs: Vec<WorkerJob<'_, T>> = jobs
                     .iter()
                     .zip(&offs)
-                    .map(|(job, &step_off)| WorkerJob {
+                    .zip(&placements)
+                    .map(|((job, &step_off), place)| WorkerJob {
                         schedule: job.schedule,
                         input: &job.inputs[proc],
                         step_off,
+                        place: place.clone(),
                     })
                     .collect();
                 handles.push(scope.spawn(move || {
@@ -360,6 +463,10 @@ impl ClusterExecutor {
             }
         });
 
+        if let Some(sink) = &self.opts.counters {
+            sink.absorb(pool.counters().snapshot());
+        }
+
         // Transpose [proc][job] → [job][rank].
         let per_proc: Vec<Vec<Vec<T>>> = outputs.into_iter().collect::<Result<_, _>>()?;
         let mut res: Vec<Vec<Vec<T>>> = (0..jobs.len()).map(|_| Vec::with_capacity(p)).collect();
@@ -373,11 +480,13 @@ impl ClusterExecutor {
 }
 
 /// One job as seen by a single worker thread: the schedule, this rank's
-/// input, and the global step-tag offset of the job's first step.
+/// input, the global step-tag offset of the job's first step, and the
+/// job's send-aware placement rows (`None` = placement disabled).
 struct WorkerJob<'a, T> {
     schedule: &'a ProcSchedule,
     input: &'a [T],
     step_off: usize,
+    place: Option<Arc<Vec<Vec<bool>>>>,
 }
 
 /// The scoped executor's [`arena::Transport`]: fault injection on the send
@@ -462,11 +571,17 @@ fn worker<T: Element>(
     let mut results = Vec::with_capacity(jobs.len());
     for job in jobs {
         let mut out = vec![T::default(); job.input.len()];
+        let wire_dst: &[bool] = job
+            .place
+            .as_ref()
+            .map(|p| p[proc].as_slice())
+            .unwrap_or(&[]);
         plane.run_schedule(
             job.schedule,
             proc,
             job.input,
             job.step_off,
+            wire_dst,
             &mut transport,
             kernel,
             &mut out,
@@ -600,10 +715,13 @@ mod tests {
 
     #[test]
     fn dropped_message_is_detected() {
-        let mut opts = ExecOptions::default();
-        opts.recv_timeout = Duration::from_millis(200);
-        // Ring sends p → p+1 on every step, so the 2→3 edge exists at step 1.
-        opts.fault = Some(Fault::DropMessage { step: 1, from: 2, to: 3 });
+        let opts = ExecOptions {
+            recv_timeout: Duration::from_millis(200),
+            // Ring sends p → p+1 on every step, so the 2→3 edge exists at
+            // step 1.
+            fault: Some(Fault::DropMessage { step: 1, from: 2, to: 3 }),
+            ..ExecOptions::default()
+        };
         let exec = ClusterExecutor::with_options(opts);
         let p = 7;
         let s = Algorithm::new(AlgorithmKind::Ring, p).build(&BuildCtx::default()).unwrap();
@@ -617,9 +735,11 @@ mod tests {
 
     #[test]
     fn mistagged_message_is_detected() {
-        let mut opts = ExecOptions::default();
-        opts.recv_timeout = Duration::from_millis(200);
-        opts.fault = Some(Fault::MisTagMessage { step: 0, from: 1, to: 2 });
+        let opts = ExecOptions {
+            recv_timeout: Duration::from_millis(200),
+            fault: Some(Fault::MisTagMessage { step: 0, from: 1, to: 2 }),
+            ..ExecOptions::default()
+        };
         let exec = ClusterExecutor::with_options(opts);
         let p = 7;
         let s = Algorithm::new(AlgorithmKind::Ring, p).build(&BuildCtx::default()).unwrap();
@@ -706,9 +826,11 @@ mod tests {
             Fault::DropMessage { step: k + 1, from: 2, to: 3 },
             Fault::MisTagMessage { step: k + 1, from: 2, to: 3 },
         ] {
-            let mut opts = ExecOptions::default();
-            opts.recv_timeout = Duration::from_millis(200);
-            opts.fault = Some(fault);
+            let opts = ExecOptions {
+                recv_timeout: Duration::from_millis(200),
+                fault: Some(fault),
+                ..ExecOptions::default()
+            };
             let exec = ClusterExecutor::with_options(opts);
             let ins0 = inputs(p, 40, 0xF0);
             let ins1 = inputs(p, 23, 0xF1);

@@ -12,6 +12,13 @@
 //! size class in use, so steady-state calls perform **zero data-plane
 //! allocation** — the property `tests/alloc_regression.rs` pins down.
 //!
+//! The pool is **generic over the element type** (monomorphized per pool):
+//! `PersistentCluster<f32>` (the default), `PersistentCluster<f64>`,
+//! `PersistentCluster<i32>`, … each own their workers, slabs and block
+//! pool, so the steady-state zero-allocation property holds per dtype. The
+//! coordinator keeps one lazily spawned pool per dtype
+//! (`Communicator::allreduce_many_inplace<T>`).
+//!
 //! [`PersistentCluster::execute_many`] dispatches a whole bucket list in a
 //! single round-trip: each worker runs bucket after bucket with no global
 //! barrier between them (messages are tagged with cumulative step offsets).
@@ -20,55 +27,70 @@
 //! tensors and consumes results straight out of pooled reply blocks — the
 //! path behind `Communicator::allreduce_many_inplace`.
 //!
+//! Workers always run with **send-aware reduce placement** on: the
+//! coordinator caches each schedule's liveness rows
+//! ([`crate::sched::stats::wire_reduce_placement`]) next to its arena
+//! pre-size hints, so Ring-style hops freeze their fused receive-reduce
+//! results straight onto the wire ([`PersistentCluster::counters`] exposes
+//! the resulting copy/placement counts).
+//!
 //! Messages carry a generation tag so an aborted call (timeout) cannot
 //! leak stale traffic into the next one. Faults can be injected with
 //! [`PersistentCluster::inject_fault`] (mirroring
 //! [`super::ExecOptions::fault`] on the scoped executor).
-//!
-//! The pool is `f32`-only (the gradient-sync hot path); use the scoped
-//! executor for other element types or custom reducers.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::cluster::arena::{self, Block, BlockPool, DataPlane, NativeKernel, Payload};
-use crate::cluster::{fault_tag, ClusterError, Fault, ReduceOp};
-use crate::sched::{stats::stats, ProcSchedule};
+use crate::cluster::arena::{self, Block, BlockPool, CounterSnapshot, DataPlane, NativeKernel, Payload};
+use crate::cluster::{fault_tag, ClusterError, Element, Fault, ReduceOp, SchedCache};
+use crate::sched::{
+    stats::{stats, wire_reduce_placement},
+    ProcSchedule,
+};
 
-struct PMsg {
+struct PMsg<T: Element> {
     gen: u64,
     step: usize,
     from: usize,
-    payload: Payload<f32>,
+    payload: Payload<T>,
 }
 
 /// One bucket of a pooled multi-bucket call: a schedule plus per-rank
 /// inputs (`inputs[rank]`, equal lengths within the bucket).
-pub struct PoolJob {
+pub struct PoolJob<T: Element = f32> {
     pub schedule: Arc<ProcSchedule>,
-    pub inputs: Vec<Vec<f32>>,
+    pub inputs: Vec<Vec<T>>,
 }
 
 /// Input source / output sink for one pooled dispatch
 /// ([`PersistentCluster::execute_many_io`]). Lets the coordinator stream
 /// tensors directly into pooled input blocks and back out of pooled result
 /// blocks, with no intermediate per-rank vectors.
-pub trait JobIo {
+pub trait JobIo<T: Element = f32> {
     /// Write rank `rank`'s input for job `job` into `dst` (`dst.len()` is
     /// the job's element count on every rank).
-    fn fill(&mut self, job: usize, rank: usize, dst: &mut [f32]);
+    fn fill(&mut self, job: usize, rank: usize, dst: &mut [T]);
 
     /// Consume rank `rank`'s fully reduced output for job `job`.
-    fn collect(&mut self, job: usize, rank: usize, src: &[f32]);
+    fn collect(&mut self, job: usize, rank: usize, src: &[T]);
 }
 
-/// Per-bucket arena pre-size hints (`total_alloc_units` per proc), computed
-/// once per schedule on the coordinator side and shared with every worker.
-type AllocHints = Arc<Vec<Arc<Vec<u64>>>>;
+/// Per-schedule worker hints, computed once on the coordinator side and
+/// shared with every worker: the arena pre-size bound
+/// (`total_alloc_units` per proc) and the send-aware reduce placement
+/// rows (per proc, per buffer).
+struct SchedHints {
+    alloc_units: Vec<u64>,
+    wire_dst: Vec<Vec<bool>>,
+}
 
-struct Job {
+/// Per-bucket hints for one dispatch.
+type AllocHints = Arc<Vec<Arc<SchedHints>>>;
+
+struct Job<T: Element> {
     gen: u64,
     op: ReduceOp,
     fault: Option<Fault>,
@@ -76,67 +98,56 @@ struct Job {
     total_steps: usize,
     /// (schedule, this rank's input) per bucket; inputs live in pooled
     /// blocks and return to the pool when the worker drops them.
-    buckets: Vec<(Arc<ProcSchedule>, Block<f32>)>,
-    /// `hints[bucket][proc]` — see [`AllocHints`].
+    buckets: Vec<(Arc<ProcSchedule>, Block<T>)>,
+    /// `hints[bucket]` — see [`AllocHints`].
     hints: AllocHints,
-    reply: mpsc::Sender<(usize, Result<Block<f32>, ClusterError>)>,
+    reply: mpsc::Sender<(usize, Result<Block<T>, ClusterError>)>,
 }
 
-enum Cmd {
-    Job(Box<Job>),
+enum Cmd<T: Element> {
+    Job(Box<Job<T>>),
     Shutdown,
 }
 
 /// A pool of `P` long-lived workers executing schedules on demand.
-pub struct PersistentCluster {
+pub struct PersistentCluster<T: Element = f32> {
     p: usize,
-    cmd_txs: Vec<mpsc::Sender<Cmd>>,
+    cmd_txs: Vec<mpsc::Sender<Cmd<T>>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     gen: std::sync::atomic::AtomicU64,
     recv_timeout: Duration,
-    blocks: Arc<BlockPool<f32>>,
+    blocks: Arc<BlockPool<T>>,
     fault: Mutex<Option<Fault>>,
     /// Serializes whole dispatches: workers drop traffic from *older*
     /// generations, so two interleaved calls would starve each other into
     /// timeouts. Held across [`PersistentCluster::execute_many_io`] so
     /// concurrent callers queue instead.
     dispatch: Mutex<()>,
-    /// Cached [`AllocHints`] entries keyed by schedule name, each guarded
-    /// by a cheap structural fingerprint (step count, unit count) checked
-    /// on hit. In-crate schedule names encode the algorithm and all shape
-    /// parameters; the fingerprint guards against caller-built schedules
-    /// reusing a name — and since hints only pre-size arenas (which grow
-    /// on demand), a residual collision can mis-size a reserve but never
-    /// corrupt results. Name-keying keeps warm-path lookups allocation-free.
-    alloc_hints: Mutex<HashMap<String, HintEntry>>,
+    /// Cached [`SchedHints`] per schedule — the shared name-keyed,
+    /// fingerprint-guarded [`SchedCache`] (see its docs for the collision
+    /// argument). Keeps warm-path lookups allocation-free.
+    alloc_hints: SchedCache<SchedHints>,
 }
 
-/// One [`PersistentCluster::alloc_hints`] cache entry.
-struct HintEntry {
-    steps: usize,
-    n_units: u32,
-    hints: Arc<Vec<u64>>,
-}
-
-impl PersistentCluster {
+impl<T: Element> PersistentCluster<T> {
     /// Spawn `p` workers.
-    pub fn new(p: usize) -> PersistentCluster {
+    pub fn new(p: usize) -> PersistentCluster<T> {
         Self::with_timeout(p, Duration::from_secs(10))
     }
 
-    pub fn with_timeout(p: usize, recv_timeout: Duration) -> PersistentCluster {
+    pub fn with_timeout(p: usize, recv_timeout: Duration) -> PersistentCluster<T> {
         let blocks = Arc::new(BlockPool::new());
         let mut msg_txs = Vec::with_capacity(p);
         let mut msg_rxs = Vec::with_capacity(p);
         for _ in 0..p {
-            let (tx, rx) = mpsc::channel::<PMsg>();
+            let (tx, rx) = mpsc::channel::<PMsg<T>>();
             msg_txs.push(tx);
             msg_rxs.push(Some(rx));
         }
         let mut cmd_txs = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
         for proc in 0..p {
-            let (ctx, crx) = mpsc::channel::<Cmd>();
+            let (ctx, crx) = mpsc::channel::<Cmd<T>>();
             cmd_txs.push(ctx);
             let msg_rx = msg_rxs[proc].take().unwrap();
             let peers = msg_txs.clone();
@@ -157,12 +168,19 @@ impl PersistentCluster {
             blocks,
             fault: Mutex::new(None),
             dispatch: Mutex::new(()),
-            alloc_hints: Mutex::new(HashMap::new()),
+            alloc_hints: SchedCache::new(),
         }
     }
 
     pub fn size(&self) -> usize {
         self.p
+    }
+
+    /// Snapshot of the pool's shared [`arena::DataPlaneCounters`]
+    /// (slab→wire copies, wire-placed reduces) — the observable the
+    /// send-aware placement tests assert on.
+    pub fn counters(&self) -> CounterSnapshot {
+        self.blocks.counters().snapshot()
     }
 
     /// Inject (or clear) a message fault applied to subsequent calls —
@@ -175,9 +193,9 @@ impl PersistentCluster {
     pub fn execute(
         &self,
         schedule: &Arc<ProcSchedule>,
-        inputs: &[Vec<f32>],
+        inputs: &[Vec<T>],
         op: ReduceOp,
-    ) -> Result<Vec<Vec<f32>>, ClusterError> {
+    ) -> Result<Vec<Vec<T>>, ClusterError> {
         let job = [PoolJobRef { schedule, inputs }];
         let mut out = self.dispatch_slices(&job, op)?;
         Ok(out.pop().expect("one job in, one result out"))
@@ -187,10 +205,10 @@ impl PersistentCluster {
     /// `out[job][rank]`.
     pub fn execute_many(
         &self,
-        jobs: &[PoolJob],
+        jobs: &[PoolJob<T>],
         op: ReduceOp,
-    ) -> Result<Vec<Vec<Vec<f32>>>, ClusterError> {
-        let refs: Vec<PoolJobRef<'_>> = jobs
+    ) -> Result<Vec<Vec<Vec<T>>>, ClusterError> {
+        let refs: Vec<PoolJobRef<'_, T>> = jobs
             .iter()
             .map(|j| PoolJobRef {
                 schedule: &j.schedule,
@@ -212,7 +230,7 @@ impl PersistentCluster {
         scheds: &[Arc<ProcSchedule>],
         ns: &[usize],
         op: ReduceOp,
-        io: &mut dyn JobIo,
+        io: &mut dyn JobIo<T>,
     ) -> Result<(), ClusterError> {
         if scheds.len() != ns.len() {
             return Err(ClusterError::BadInput(format!(
@@ -245,33 +263,20 @@ impl PersistentCluster {
         let total_steps: usize = scheds.iter().map(|s| s.steps.len()).sum();
         // One dispatch at a time: see the `dispatch` field docs.
         let _serial = self.dispatch.lock().unwrap();
-        // Arena pre-size hints, computed once per schedule across all
-        // workers and calls (workers only index their own proc's entry).
-        let hints: AllocHints = {
-            let mut cache = self.alloc_hints.lock().unwrap();
-            Arc::new(
-                scheds
-                    .iter()
-                    .map(|s| {
-                        if let Some(e) = cache.get(&s.name) {
-                            if e.steps == s.steps.len() && e.n_units == s.n_units {
-                                return e.hints.clone();
-                            }
-                        }
-                        let h = Arc::new(stats(s).total_alloc_units);
-                        cache.insert(
-                            s.name.clone(),
-                            HintEntry {
-                                steps: s.steps.len(),
-                                n_units: s.n_units,
-                                hints: h.clone(),
-                            },
-                        );
-                        h
+        // Worker hints (arena pre-size + placement rows), computed once per
+        // schedule across all workers and calls (workers only index their
+        // own proc's entries).
+        let hints: AllocHints = Arc::new(
+            scheds
+                .iter()
+                .map(|s| {
+                    self.alloc_hints.get_or_compute(s, || SchedHints {
+                        alloc_units: stats(s).total_alloc_units,
+                        wire_dst: wire_reduce_placement(s),
                     })
-                    .collect(),
-            )
-        };
+                })
+                .collect(),
+        );
         let gen = self
             .gen
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -279,7 +284,7 @@ impl PersistentCluster {
         // All fills complete before the first worker is dispatched (the
         // documented contract) — otherwise early workers would burn their
         // recv timeouts while a slow fill prepares a later rank's input.
-        let mut all_buckets: Vec<Vec<(Arc<ProcSchedule>, Block<f32>)>> = (0..self.p)
+        let mut all_buckets: Vec<Vec<(Arc<ProcSchedule>, Block<T>)>> = (0..self.p)
             .map(|proc| {
                 scheds
                     .iter()
@@ -309,7 +314,7 @@ impl PersistentCluster {
         }
         drop(reply_tx);
         let deadline = self.recv_timeout * (scheds.len() as u32 + 1);
-        let mut per_proc: Vec<Option<Block<f32>>> = (0..self.p).map(|_| None).collect();
+        let mut per_proc: Vec<Option<Block<T>>> = (0..self.p).map(|_| None).collect();
         for _ in 0..self.p {
             let (proc, res) = reply_rx
                 .recv_timeout(deadline)
@@ -334,36 +339,36 @@ impl PersistentCluster {
 }
 
 /// Borrowed form of [`PoolJob`] used by the compatibility wrappers.
-struct PoolJobRef<'a> {
+struct PoolJobRef<'a, T: Element> {
     schedule: &'a Arc<ProcSchedule>,
-    inputs: &'a [Vec<f32>],
+    inputs: &'a [Vec<T>],
 }
 
 /// Compatibility [`JobIo`]: copy from borrowed per-rank vectors, collect
 /// into freshly allocated per-rank vectors.
-struct SliceIo<'a> {
-    jobs: &'a [PoolJobRef<'a>],
-    outs: Vec<Vec<Vec<f32>>>,
+struct SliceIo<'a, T: Element> {
+    jobs: &'a [PoolJobRef<'a, T>],
+    outs: Vec<Vec<Vec<T>>>,
 }
 
-impl JobIo for SliceIo<'_> {
-    fn fill(&mut self, job: usize, rank: usize, dst: &mut [f32]) {
+impl<T: Element> JobIo<T> for SliceIo<'_, T> {
+    fn fill(&mut self, job: usize, rank: usize, dst: &mut [T]) {
         dst.copy_from_slice(&self.jobs[job].inputs[rank]);
     }
 
-    fn collect(&mut self, job: usize, rank: usize, src: &[f32]) {
+    fn collect(&mut self, job: usize, rank: usize, src: &[T]) {
         debug_assert_eq!(self.outs[job].len(), rank, "ranks collected in order");
         self.outs[job].push(src.to_vec());
     }
 }
 
-impl PersistentCluster {
+impl<T: Element> PersistentCluster<T> {
     /// Shared validation + dispatch for the Vec-returning wrappers.
     fn dispatch_slices(
         &self,
-        jobs: &[PoolJobRef<'_>],
+        jobs: &[PoolJobRef<'_, T>],
         op: ReduceOp,
-    ) -> Result<Vec<Vec<Vec<f32>>>, ClusterError> {
+    ) -> Result<Vec<Vec<Vec<T>>>, ClusterError> {
         if jobs.is_empty() {
             return Ok(Vec::new());
         }
@@ -394,7 +399,7 @@ impl PersistentCluster {
     }
 }
 
-impl Drop for PersistentCluster {
+impl<T: Element> Drop for PersistentCluster<T> {
     fn drop(&mut self) {
         for tx in &self.cmd_txs {
             let _ = tx.send(Cmd::Shutdown);
@@ -412,19 +417,19 @@ impl Drop for PersistentCluster {
 /// generations is kept — a worker still draining a failed call must not eat
 /// the next call's messages, or the first clean call after a fault would
 /// itself time out.
-struct PoolTransport<'a> {
+struct PoolTransport<'a, T: Element> {
     proc: usize,
     gen: u64,
     total_steps: usize,
     fault: Option<Fault>,
-    rx: &'a mpsc::Receiver<PMsg>,
-    peers: &'a [mpsc::Sender<PMsg>],
-    pending: &'a mut HashMap<(u64, usize, usize), Payload<f32>>,
+    rx: &'a mpsc::Receiver<PMsg<T>>,
+    peers: &'a [mpsc::Sender<PMsg<T>>],
+    pending: &'a mut HashMap<(u64, usize, usize), Payload<T>>,
     timeout: Duration,
 }
 
-impl arena::Transport<f32> for PoolTransport<'_> {
-    fn send(&mut self, to: usize, step: usize, payload: Payload<f32>) {
+impl<T: Element> arena::Transport<T> for PoolTransport<'_, T> {
+    fn send(&mut self, to: usize, step: usize, payload: Payload<T>) {
         if let Some(tag) = fault_tag(&self.fault, step, self.proc, to) {
             let _ = self.peers[to].send(PMsg {
                 gen: self.gen,
@@ -435,7 +440,7 @@ impl arena::Transport<f32> for PoolTransport<'_> {
         }
     }
 
-    fn recv(&mut self, step: usize, from: usize) -> Result<Payload<f32>, ClusterError> {
+    fn recv(&mut self, step: usize, from: usize) -> Result<Payload<T>, ClusterError> {
         if let Some(pl) = self.pending.remove(&(self.gen, step, from)) {
             return Ok(pl);
         }
@@ -480,19 +485,19 @@ impl arena::Transport<f32> for PoolTransport<'_> {
     }
 }
 
-fn worker_loop(
+fn worker_loop<T: Element>(
     proc: usize,
-    cmd_rx: mpsc::Receiver<Cmd>,
-    msg_rx: mpsc::Receiver<PMsg>,
-    peers: Vec<mpsc::Sender<PMsg>>,
+    cmd_rx: mpsc::Receiver<Cmd<T>>,
+    msg_rx: mpsc::Receiver<PMsg<T>>,
+    peers: Vec<mpsc::Sender<PMsg<T>>>,
     recv_timeout: Duration,
-    pool: Arc<BlockPool<f32>>,
+    pool: Arc<BlockPool<T>>,
 ) {
     // Warm state surviving across calls: the slab arena + slot table and
     // the out-of-order stash (older-generation entries pruned per call,
     // capacity retained).
     let mut plane = DataPlane::new(pool.clone());
-    let mut pending: HashMap<(u64, usize, usize), Payload<f32>> = HashMap::new();
+    let mut pending: HashMap<(u64, usize, usize), Payload<T>> = HashMap::new();
     while let Ok(cmd) = cmd_rx.recv() {
         let job = match cmd {
             Cmd::Job(j) => j,
@@ -517,16 +522,16 @@ fn worker_loop(
 /// unique across the whole call. Results for all buckets are packed into
 /// one pooled reply block.
 #[allow(clippy::too_many_arguments)]
-fn run_job(
+fn run_job<T: Element>(
     proc: usize,
-    job: &Job,
-    msg_rx: &mpsc::Receiver<PMsg>,
-    peers: &[mpsc::Sender<PMsg>],
+    job: &Job<T>,
+    msg_rx: &mpsc::Receiver<PMsg<T>>,
+    peers: &[mpsc::Sender<PMsg<T>>],
     recv_timeout: Duration,
-    plane: &mut DataPlane<f32>,
-    pending: &mut HashMap<(u64, usize, usize), Payload<f32>>,
-    pool: &Arc<BlockPool<f32>>,
-) -> Result<Block<f32>, ClusterError> {
+    plane: &mut DataPlane<T>,
+    pending: &mut HashMap<(u64, usize, usize), Payload<T>>,
+    pool: &Arc<BlockPool<T>>,
+) -> Result<Block<T>, ClusterError> {
     // Drop stale stashed traffic; keep anything from this or newer calls.
     pending.retain(|&(g, _, _), _| g >= job.gen);
     // Pre-size the slab up front from the coordinator-provided hints: the
@@ -536,7 +541,7 @@ fn run_job(
         if n == 0 {
             continue;
         }
-        let units = hint[proc] as usize;
+        let units = hint.alloc_units[proc] as usize;
         let u = (s.n_units as usize).max(1);
         plane.reserve_elems(units * n.div_ceil(u));
     }
@@ -556,7 +561,7 @@ fn run_job(
     };
     let mut step_off = 0usize;
     let mut cursor = 0usize;
-    for (s, input) in &job.buckets {
+    for ((s, input), hint) in job.buckets.iter().zip(job.hints.iter()) {
         let n = input.len();
         if n > 0 {
             plane.run_schedule(
@@ -564,6 +569,7 @@ fn run_job(
                 proc,
                 input.data(),
                 step_off,
+                &hint.wire_dst[proc],
                 &mut transport,
                 &kernel,
                 &mut out.data_mut()[cursor..cursor + n],
@@ -623,6 +629,44 @@ mod tests {
             let want: f32 = (0..p).map(|r| (r + i) as f32).sum();
             let got = pool.execute(&s, &xs, ReduceOp::Sum).unwrap();
             assert!(got.iter().all(|v| v.iter().all(|&x| (x - want).abs() < 1e-4)));
+        }
+    }
+
+    /// The pool is monomorphized per element type: `f64`, `i32` and `i64`
+    /// pools must produce exact results (ints) / reference-close results
+    /// (f64) through exactly the same engine.
+    #[test]
+    fn persistent_pool_serves_f64_i32_and_i64() {
+        let p = 5;
+        let s = Arc::new(
+            Algorithm::new(AlgorithmKind::BwOptimal, p)
+                .build(&BuildCtx::default())
+                .unwrap(),
+        );
+        let pool64: PersistentCluster<f64> = PersistentCluster::new(p);
+        let xs: Vec<Vec<f64>> = (0..p).map(|r| vec![r as f64 + 0.25; 37]).collect();
+        let want: f64 = (0..p).map(|r| r as f64 + 0.25).sum();
+        for _ in 0..3 {
+            let got = pool64.execute(&s, &xs, ReduceOp::Sum).unwrap();
+            assert!(got
+                .iter()
+                .all(|v| v.iter().all(|&x| (x - want).abs() < 1e-9)));
+        }
+        let pool32: PersistentCluster<i32> = PersistentCluster::new(p);
+        let xs: Vec<Vec<i32>> = (0..p).map(|r| vec![(r as i32 + 1) * 3; 37]).collect();
+        for _ in 0..3 {
+            let got = pool32.execute(&s, &xs, ReduceOp::Max).unwrap();
+            assert!(got.iter().all(|v| v.iter().all(|&x| x == p as i32 * 3)));
+        }
+        // i64 (the fourth documented matrix row): exact sums.
+        let pool64i: PersistentCluster<i64> = PersistentCluster::new(p);
+        let xs: Vec<Vec<i64>> = (0..p)
+            .map(|r| vec![(r as i64 + 1) << 40; 37])
+            .collect();
+        let want: i64 = (1..=p as i64).map(|f| f << 40).sum();
+        for _ in 0..3 {
+            let got = pool64i.execute(&s, &xs, ReduceOp::Sum).unwrap();
+            assert!(got.iter().all(|v| v.iter().all(|&x| x == want)));
         }
     }
 

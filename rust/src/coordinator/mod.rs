@@ -21,6 +21,7 @@
 
 pub mod bucket;
 
+use std::any::{Any, TypeId};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -162,7 +163,7 @@ impl CommunicatorBuilder {
             segments: self.segments,
             exec: ClusterExecutor::new(),
             cache: Mutex::new(HashMap::new()),
-            pool: Mutex::new(None),
+            pools: Mutex::new(HashMap::new()),
             stat_cache: Mutex::new(HashMap::new()),
         })
     }
@@ -181,11 +182,13 @@ pub struct Communicator {
     /// Schedule cache keyed by resolved algorithm label (base schedules)
     /// or label + pipeline depth (pipelined expansions).
     cache: Mutex<HashMap<String, std::sync::Arc<ProcSchedule>>>,
-    /// Lazily spawned persistent worker pool backing the warm
-    /// [`Communicator::allreduce_many_inplace`] path: workers keep their
-    /// slab arenas and wire-block pool alive between calls, so steady-state
-    /// DDP steps do zero data-plane allocation.
-    pool: Mutex<Option<Arc<PersistentCluster>>>,
+    /// Lazily spawned persistent worker pools backing the warm
+    /// [`Communicator::allreduce_many_inplace`] path, **one monomorphized
+    /// pool per element type** (keyed by `TypeId`, created on first use):
+    /// each pool's workers keep their slab arenas and wire-block pool
+    /// alive between calls, so steady-state DDP steps do zero data-plane
+    /// allocation for every dtype served.
+    pools: Mutex<HashMap<TypeId, Arc<dyn Any + Send + Sync>>>,
     /// Cached `(steps, critical_units_sent)` per schedule name, so the
     /// per-call [`Metrics`] assembly on the DDP hot path doesn't re-walk
     /// the whole schedule (`stats()` is O(P·steps·ops)) every step.
@@ -499,46 +502,68 @@ impl Communicator {
         })
     }
 
-    /// The lazily spawned persistent worker pool (see
-    /// [`Communicator::allreduce_many_inplace`]).
-    fn persistent_pool(&self) -> Arc<PersistentCluster> {
-        let mut guard = self.pool.lock().unwrap();
-        guard
-            .get_or_insert_with(|| Arc::new(PersistentCluster::new(self.p)))
+    /// The lazily spawned persistent worker pool for element type `T` (see
+    /// [`Communicator::allreduce_many_inplace`]). One pool per dtype, each
+    /// monomorphized with its own warm workers; the map is keyed by
+    /// `TypeId` and type-erased through `Any`.
+    fn persistent_pool<T: Element>(&self) -> Arc<PersistentCluster<T>> {
+        let mut guard = self.pools.lock().unwrap();
+        let entry = guard.entry(TypeId::of::<T>()).or_insert_with(|| {
+            Arc::new(PersistentCluster::<T>::new(self.p)) as Arc<dyn Any + Send + Sync>
+        });
+        entry
             .clone()
+            .downcast::<PersistentCluster<T>>()
+            .expect("pool map entries are keyed by their element TypeId")
+    }
+
+    /// Data-plane counters of the persistent pool serving element type `T`
+    /// (zero snapshot if that pool has not been spawned yet) — slab→wire
+    /// copies and wire-placed reduces, see
+    /// [`crate::cluster::DataPlaneCounters`].
+    pub fn pool_counters<T: Element>(&self) -> cluster::CounterSnapshot {
+        let guard = self.pools.lock().unwrap();
+        guard
+            .get(&TypeId::of::<T>())
+            .and_then(|e| e.clone().downcast::<PersistentCluster<T>>().ok())
+            .map(|p| p.counters())
+            .unwrap_or_default()
     }
 
     /// **In-place** bucketed, pipelined multi-tensor Allreduce — the warm
-    /// path for steady-state DDP training.
+    /// path for steady-state DDP training. Generic over the element type
+    /// (`f32`, `f64`, `i32`, … — any [`Element`]).
     ///
     /// Semantics match [`Communicator::allreduce_many`] (identical bucket
     /// plan, schedules, and combine order — results are bit-identical), but
     /// the reduced values are written **back into the caller's tensors**:
     /// after the call every rank's `inputs[rank][t]` holds the reduced
     /// tensor `t`. Execution runs on a lazily spawned
-    /// [`PersistentCluster`] whose workers keep their slab arenas and
-    /// wire-block pool alive between calls, and the tensors are packed
-    /// straight into (and unpacked straight out of) pooled blocks — so
-    /// from the second call on, a repeated workload shape performs **zero
-    /// data-plane allocation** (pinned by `tests/alloc_regression.rs`).
+    /// [`PersistentCluster`] for `T` (one warm pool per dtype) whose
+    /// workers keep their slab arenas and wire-block pool alive between
+    /// calls, and the tensors are packed straight into (and unpacked
+    /// straight out of) pooled blocks — so from the second call on, a
+    /// repeated workload shape performs **zero data-plane allocation** per
+    /// dtype (pinned by `tests/alloc_regression.rs`).
     ///
     /// Prefer this over `allreduce_many` whenever the caller owns the
     /// tensors and wants the reduced values in place (gradient sync);
-    /// `allreduce_many` remains for callers that need the inputs preserved,
-    /// non-`f32` element types, or custom reducers.
-    pub fn allreduce_many_inplace(
+    /// `allreduce_many` remains for callers that need the inputs preserved
+    /// or custom reducers.
+    pub fn allreduce_many_inplace<T: Element>(
         &self,
-        inputs: &mut [Vec<Vec<f32>>],
+        inputs: &mut [Vec<Vec<T>>],
         op: ReduceOp,
         kind: AlgorithmKind,
     ) -> Result<ManyMetrics, String> {
         let lens = self.validate_tensor_list(inputs)?;
         let n_tensors = lens.len();
-        let total_bytes = lens.iter().sum::<usize>() * 4;
-        let bp = self.plan_bucket_schedules(&lens, 4, kind)?;
+        let elem_bytes = std::mem::size_of::<T>();
+        let total_bytes = lens.iter().sum::<usize>() * elem_bytes;
+        let bp = self.plan_bucket_schedules(&lens, elem_bytes, kind)?;
         let ns: Vec<usize> = bp.plan.buckets.iter().map(|b| b.elems).collect();
 
-        let pool = self.persistent_pool();
+        let pool = self.persistent_pool::<T>();
         let mut io = TensorBucketIo {
             tensors: inputs,
             plan: &bp.plan,
@@ -628,17 +653,17 @@ struct BucketSchedules {
 /// tensors straight into pooled input blocks and scatters reduced results
 /// straight back — no intermediate per-bucket vectors
 /// ([`bucket::pack_into`] / [`bucket::unpack_into`]).
-struct TensorBucketIo<'a> {
-    tensors: &'a mut [Vec<Vec<f32>>],
+struct TensorBucketIo<'a, T> {
+    tensors: &'a mut [Vec<Vec<T>>],
     plan: &'a bucket::BucketPlan,
 }
 
-impl JobIo for TensorBucketIo<'_> {
-    fn fill(&mut self, job: usize, rank: usize, dst: &mut [f32]) {
+impl<T: Element> JobIo<T> for TensorBucketIo<'_, T> {
+    fn fill(&mut self, job: usize, rank: usize, dst: &mut [T]) {
         bucket::pack_into(&self.tensors[rank], &self.plan.buckets[job], dst);
     }
 
-    fn collect(&mut self, job: usize, rank: usize, src: &[f32]) {
+    fn collect(&mut self, job: usize, rank: usize, src: &[T]) {
         bucket::unpack_into(src, &self.plan.buckets[job], &mut self.tensors[rank]);
     }
 }
@@ -819,6 +844,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The in-place path is generic over the element type: an `i32` run is
+    /// exact, an `f64` run bit-matches the out-of-place `allreduce_many`
+    /// (shared plan + schedules), and each dtype gets its own warm pool.
+    #[test]
+    fn allreduce_many_inplace_serves_f64_and_i32() {
+        let p = 4;
+        let comm = Communicator::builder(p)
+            .bucket_bytes(64 * 8)
+            .pipeline_segments(2)
+            .build()
+            .unwrap();
+        let lens = [9usize, 40, 0, 70];
+        // i32: exact sums.
+        let mut ints: Vec<Vec<Vec<i32>>> = (0..p)
+            .map(|r| {
+                lens.iter()
+                    .map(|&n| (0..n).map(|i| (r as i32 + 1) * (i as i32 % 13 - 6)).collect())
+                    .collect()
+            })
+            .collect();
+        let want_ints: Vec<Vec<i32>> = lens
+            .iter()
+            .map(|&n| {
+                (0..n)
+                    .map(|i| (1..=p as i32).map(|f| f * (i as i32 % 13 - 6)).sum())
+                    .collect()
+            })
+            .collect();
+        for _ in 0..2 {
+            let mut grads = ints.clone();
+            comm.allreduce_many_inplace(&mut grads, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+                .unwrap();
+            for rank in 0..p {
+                for (ti, want) in want_ints.iter().enumerate() {
+                    assert_eq!(&grads[rank][ti], want, "i32 rank {rank} tensor {ti}");
+                }
+            }
+        }
+        // f64: bit-match against the out-of-place generic path.
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xF64);
+        let inputs: Vec<Vec<Vec<f64>>> = (0..p)
+            .map(|_| {
+                lens.iter()
+                    .map(|&n| (0..n).map(|_| rng.f32() as f64 * 2.0 - 1.0).collect())
+                    .collect()
+            })
+            .collect();
+        let want = comm
+            .allreduce_many(&inputs, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+            .unwrap();
+        let mut inplace = inputs.clone();
+        comm.allreduce_many_inplace(&mut inplace, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+            .unwrap();
+        for rank in 0..p {
+            for ti in 0..lens.len() {
+                for (g, w) in inplace[rank][ti].iter().zip(&want.ranks[rank][ti]) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "f64 rank {rank} tensor {ti}");
+                }
+            }
+        }
+        // Both dtype pools are live and served traffic (step-0 sends of
+        // init slab data always pay a slab→wire copy).
+        assert!(comm.pool_counters::<i32>().slab_to_wire_copies > 0, "i32 pool ran");
+        assert!(comm.pool_counters::<f64>().slab_to_wire_copies > 0, "f64 pool ran");
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! | [`cost`] | α–β–γ cost model (paper Table 2), closed-form step/byte/time formulas (eqs. 15, 25, 36, 44), optimal-r selection (eq. 37) |
 //! | [`des`] | discrete-event network simulator executing a schedule under the cost model with per-process clocks |
 //! | [`cluster`] | a real multi-threaded message-passing cluster executing schedules on actual data; barrier-free multi-bucket dispatch (`execute_many`) |
-//! | [`cluster::arena`] | the zero-copy data plane: per-worker slab arenas, `Arc`-shared wire blocks, fused receive-reduce (shared by both executors) |
+//! | [`cluster::arena`] | the zero-copy data plane: per-worker slab arenas, sharded size-classed block pools, `Arc`-shared wire blocks, fused receive-reduce with send-aware placement (shared by both executors) |
 //! | [`cluster::oracle`] | the clone-per-message reference data plane, kept as the differential-test oracle and bench baseline |
 //! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step); execution gated behind the `pjrt` feature |
 //! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
@@ -81,6 +81,27 @@
 //! }
 //! ```
 //!
+//! The **in-place** variant writes the reduced values back into the
+//! caller's tensors through a warm persistent worker pool, and is generic
+//! over the element type — here exact `i32` sums:
+//!
+//! ```
+//! use permallreduce::prelude::*;
+//!
+//! let p = 4;
+//! let mut grads: Vec<Vec<Vec<i32>>> = (0..p)
+//!     .map(|r| vec![vec![r as i32 + 1; 8], vec![2 * r as i32; 5]])
+//!     .collect();
+//!
+//! let comm = Communicator::builder(p).build().unwrap();
+//! comm.allreduce_many_inplace(&mut grads, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto)
+//!     .unwrap();
+//! let want0: i32 = (1..=p as i32).sum();
+//! for rank in 0..p {
+//!     assert!(grads[rank][0].iter().all(|&x| x == want0));
+//! }
+//! ```
+//!
 //! ## The data plane (slabs, `Arc` sends, warm pools)
 //!
 //! Both executors run schedules on the **arena data plane**
@@ -106,21 +127,49 @@
 //! **Ownership rules for `Arc`-shared sends:** a wire block is written only
 //! by its sender, *before* freezing; after `freeze()` it is immutable
 //! forever. Receivers keep the chunk as the buffer's backing (zero-copy
-//! receive), may forward it (refcount bump), and must materialize into
-//! their own slab the moment they need to write — which the engine fuses
+//! receive), may forward it (refcount bump), and must materialize into a
+//! writable slot the moment they need to write — which the engine fuses
 //! with the combine itself (`out[i] = a[i] ⊕ b[i]`), so the arena plane is
 //! bit-identical to the clone-based oracle ([`cluster::oracle`]). When the
 //! last chunk drops, the block's storage parks in the
-//! [`cluster::arena::BlockPool`] for reuse — never back to the allocator.
+//! [`cluster::arena::BlockPool`] — sharded, power-of-two size-classed free
+//! lists, so concurrent workers park/take without contending on one lock —
+//! never back to the allocator.
+//!
+//! **Send-aware reduce placement (reduce-into-block):** *where* a fused
+//! receive-reduce materializes is chosen by liveness
+//! ([`sched::stats::wire_reduce_placement`]). If the buffer's remaining
+//! uses are "keep reducing into me, then send me (and free me)" — every
+//! hop of a Ring or segmented reduce-scatter — the fused result is written
+//! **directly into a pooled wire block**, and the later send freezes that
+//! block in place instead of copying slab→block: the clone plane's
+//! move-on-last-use zero-copy, recovered on the arena plane. Values that
+//! stay local land in the slab as before. Placement never changes operand
+//! order (bit-exactness is pinned by `tests/placement.rs` and the
+//! differential suite), and [`cluster::DataPlaneCounters`] — reachable via
+//! [`cluster::ExecOptions::counters`] or
+//! [`cluster::PersistentCluster::counters`] — count slab→block copies and
+//! wire-placed reduces.
+//!
+//! **Element-type support matrix** (`T: `[`cluster::Element`]):
+//!
+//! | path | `f32` | `f64` | `i32` | `i64` |
+//! |---|---|---|---|---|
+//! | scoped [`cluster::ClusterExecutor`] (`execute`/`execute_many`) | ✓ | ✓ | ✓ | ✓ |
+//! | warm [`cluster::PersistentCluster`]`<T>` (one monomorphized pool per dtype, zero steady-state allocation each) | ✓ | ✓ | ✓ | ✓ |
+//! | [`coordinator::Communicator::allreduce`] / `allreduce_many` | ✓ | ✓ | ✓ | ✓ |
+//! | [`coordinator::Communicator::allreduce_many_inplace`] (lazily spawns the per-dtype pool) | ✓ | ✓ | ✓ | ✓ |
+//! | custom [`cluster::Reducer`] (PJRT Pallas kernel) | ✓ | — | — | — |
 //!
 //! **When to prefer [`coordinator::Communicator::allreduce_many_inplace`]:**
 //! whenever you own the tensors and want the reduced values back in them —
-//! the DDP gradient-sync shape. It runs on a persistent worker pool whose
-//! arenas and block pool stay warm between calls, packs your tensors
-//! straight into pooled blocks, and from the second step on performs zero
-//! data-plane allocation (pinned by `tests/alloc_regression.rs`). Use
-//! `allreduce_many` instead when you need the inputs preserved, a
-//! non-`f32` element type, or a custom reducer.
+//! the DDP gradient-sync shape, in any supported dtype. It runs on a
+//! persistent worker pool (one per dtype) whose arenas and block pool stay
+//! warm between calls, packs your tensors straight into pooled blocks, and
+//! from the second step on performs zero data-plane allocation (pinned by
+//! `tests/alloc_regression.rs` for `f32`/`f64`/`i32`). Use
+//! `allreduce_many` instead when you need the inputs preserved or a custom
+//! reducer.
 
 pub mod util;
 pub mod perm;

@@ -27,6 +27,8 @@ use crate::util::json;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 #[cfg(feature = "pjrt")]
+pub(crate) mod xla_shim;
+#[cfg(feature = "pjrt")]
 pub use pjrt::{PjrtReduceService, PjrtReducer, ReduceEngine, TrainStepEngine};
 
 #[cfg(not(feature = "pjrt"))]

@@ -18,6 +18,13 @@ use std::sync::Mutex;
 use crate::cluster::{ReduceError, ReduceOp, Reducer};
 use crate::runtime::{artifacts_dir, Manifest, TrainStepSpec};
 
+// The `xla` API surface. Offline builds (and the CI `--features pjrt`
+// check lane) type-check against the in-tree shim, whose backend
+// constructors return descriptive errors at run time; to execute on a real
+// XLA/PJRT backend, patch the real `xla` crate into Cargo.toml and point
+// this alias at it (`use ::xla;`). See `runtime::xla_shim`.
+use crate::runtime::xla_shim as xla;
+
 fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable, String> {
     let proto = xla::HloModuleProto::from_text_file(path)
         .map_err(|e| format!("loading HLO text {}: {e:?}", path.display()))?;

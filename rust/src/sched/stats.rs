@@ -139,6 +139,47 @@ pub fn stats(s: &ProcSchedule) -> ScheduleStats {
     }
 }
 
+/// Send-aware reduce placement hints for the arena data plane
+/// ([`crate::cluster::arena`]).
+///
+/// `out[proc][buf]` is true when, on `proc`, buffer `buf` is reduced into
+/// and **later sent**: its fused receive-reduce result should materialize
+/// directly into a pooled wire block, so the send freezes it in place
+/// instead of paying a slab→block copy (the clone plane's move-on-last-use
+/// zero-copy, recovered for Ring/segmented schedules). The flag is a pure
+/// liveness fact — the executor only consults it when the reduce
+/// destination is a received (shared) payload, so a spurious flag on an
+/// init/copy buffer is harmless.
+///
+/// One pass per process over the micro-op stream: program order makes
+/// "first reduce into `b` precedes this send of `b`" a simple
+/// seen-before check.
+pub fn wire_reduce_placement(s: &ProcSchedule) -> Vec<Vec<bool>> {
+    let nb = s.max_buf_id() as usize;
+    (0..s.p)
+        .map(|proc| {
+            let mut reduced = vec![false; nb];
+            let mut flag = vec![false; nb];
+            for step in &s.steps {
+                for m in step.ops[proc].iter().flat_map(|o| o.micro()) {
+                    match m {
+                        MicroOp::Reduce { dst, .. } => reduced[dst as usize] = true,
+                        MicroOp::Send { bufs, .. } => {
+                            for &b in bufs {
+                                if reduced[b as usize] {
+                                    flag[b as usize] = true;
+                                }
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            flag
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +212,48 @@ mod tests {
         // then frees `mine`: peak 2 live, 2 ever materialized.
         assert_eq!(st.peak_live_units, vec![2, 2]);
         assert_eq!(st.total_alloc_units, vec![2, 2]);
+    }
+
+    #[test]
+    fn placement_flags_reduce_then_send_only() {
+        // Ring-shaped 2-step fragment on P=2:
+        //   step 0: send mine, recv got, reduce got ⊕= mine
+        //   step 1: send got (the reduced value travels on) — got is a
+        //           wire-placement candidate; mine (sent before any reduce
+        //           into it) is not.
+        let mut b = ScheduleBuilder::new(2, 1, "place");
+        let seg = Segment::new(0, 1);
+        let mine = b.init_buf_per_proc(&[seg, seg]);
+        b.begin_step();
+        let g0 = b.fresh();
+        let g1 = b.fresh();
+        for p in 0..2 {
+            let got = if p == 0 { g0 } else { g1 };
+            b.op(p, Op::send(1 - p, vec![mine]));
+            b.op(p, Op::recv(1 - p, vec![got]));
+            b.op(p, Op::Reduce { dst: got, src: mine });
+            b.op(p, Op::Free { buf: mine });
+        }
+        b.end_step();
+        b.begin_step();
+        let h0 = b.fresh();
+        let h1 = b.fresh();
+        for p in 0..2 {
+            let (got, fresh) = if p == 0 { (g0, h0) } else { (g1, h1) };
+            b.op(p, Op::send(1 - p, vec![got]));
+            b.op(p, Op::recv(1 - p, vec![fresh]));
+            b.op(p, Op::Free { buf: fresh });
+        }
+        b.end_step();
+        let s = b.finish(vec![vec![g0], vec![g1]]);
+        let w = wire_reduce_placement(&s);
+        assert_eq!(w.len(), 2);
+        for (p, flags) in w.iter().enumerate() {
+            assert!(!flags[mine as usize], "proc {p}: mine never reduced-into");
+            let got = if p == 0 { g0 } else { g1 };
+            let other = if p == 0 { g1 } else { g0 };
+            assert!(flags[got as usize], "proc {p}: got is reduced then sent");
+            assert!(!flags[other as usize], "proc {p}: other rank's buffer");
+        }
     }
 }

@@ -1,12 +1,14 @@
 //! Allocation-regression harness for the arena data plane.
 //!
 //! A counting `GlobalAlloc` wraps the system allocator; the test drives the
-//! persistent-pool `allreduce_many_inplace` path and asserts that from the
-//! second call on (warm slab arenas, populated block pool) the data plane
-//! performs essentially **zero allocation**: what remains is control-plane
-//! noise (channel nodes, `Arc` control blocks, per-call metrics), bounded
-//! to a tiny fraction of the first call and a small absolute cap —
-//! regardless of the multi-megabyte payload moved per call.
+//! persistent-pool `allreduce_many_inplace` path — for **every dtype the
+//! warm pool serves** (`f32`, `f64`, `i32`, each with its own monomorphized
+//! pool) — and asserts that from the second call on (warm slab arenas,
+//! populated block pool) the data plane performs essentially **zero
+//! allocation**: what remains is control-plane noise (channel nodes, `Arc`
+//! control blocks, per-call metrics), bounded to a tiny fraction of the
+//! first call and a small absolute cap — regardless of the multi-megabyte
+//! payload moved per call.
 //!
 //! This file holds exactly one `#[test]` so no concurrent test pollutes the
 //! global counters.
@@ -15,7 +17,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use permallreduce::algo::AlgorithmKind;
-use permallreduce::cluster::ReduceOp;
+use permallreduce::cluster::{Element, ReduceOp};
 use permallreduce::coordinator::Communicator;
 
 struct CountingAlloc;
@@ -59,29 +61,30 @@ fn allocated_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
     (BYTES.load(Ordering::Relaxed) - before, r)
 }
 
-#[test]
-fn persistent_pool_steady_state_allocates_nothing_on_the_data_plane() {
-    let p = 4;
-    // 8 tensors × 32768 f32 = 1 MiB per rank per step, split into 4 buckets
-    // of 256 KiB, each pipelined over 2 segments — a representative DDP
-    // gradient-sync shape.
-    let comm = Communicator::builder(p)
-        .bucket_bytes(256 * 1024)
-        .pipeline_segments(2)
-        .build()
-        .unwrap();
-    let lens = [32_768usize; 8];
-    let fill = |grads: &mut Vec<Vec<Vec<f32>>>, step: usize| {
+/// Drive one dtype's warm-pool path on `comm`: a cold call, a convergence
+/// window, then four measured steady-state calls. `make(rank, ti, i, step)`
+/// must yield small integral values so the Allreduce sum is exact in every
+/// dtype and grouping (the correctness check is exact equality).
+fn drive_dtype<T>(
+    comm: &Communicator,
+    p: usize,
+    lens: &[usize],
+    make: impl Fn(usize, usize, usize, usize) -> T,
+    label: &str,
+) where
+    T: Element + PartialEq,
+{
+    let fill = |grads: &mut Vec<Vec<Vec<T>>>, step: usize| {
         for (rank, tensors) in grads.iter_mut().enumerate() {
             for (ti, t) in tensors.iter_mut().enumerate() {
                 for (i, x) in t.iter_mut().enumerate() {
-                    *x = ((rank + 1) * (ti + 1)) as f32 + (i % 7) as f32 + step as f32;
+                    *x = make(rank, ti, i, step);
                 }
             }
         }
     };
-    let mut grads: Vec<Vec<Vec<f32>>> = (0..p)
-        .map(|_| lens.iter().map(|&n| vec![0.0f32; n]).collect())
+    let mut grads: Vec<Vec<Vec<T>>> = (0..p)
+        .map(|_| lens.iter().map(|&n| vec![T::default(); n]).collect())
         .collect();
 
     // Call 1: cold — pool spawn, schedule builds, arena growth, block-pool
@@ -114,38 +117,78 @@ fn persistent_pool_steady_state_allocates_nothing_on_the_data_plane() {
     }
     let worst = *steady.iter().max().unwrap();
 
-    // Correctness first: every rank holds the reduced sum of the last fill.
-    let expect = |ti: usize, i: usize, step: usize| -> f32 {
-        (1..=p)
-            .map(|rank| (rank * (ti + 1)) as f32 + (i % 7) as f32 + step as f32)
-            .sum()
-    };
+    // Correctness first: every rank holds the exact reduced sum of the
+    // last fill (values are small integers, so the sum is exact in every
+    // dtype regardless of bucket/segment regrouping).
     for rank in 0..p {
         for (ti, t) in grads[rank].iter().enumerate() {
-            for (i, &x) in t.iter().enumerate().step_by(4097) {
-                let want = expect(ti, i, 6);
+            for (i, x) in t.iter().enumerate().step_by(2049) {
+                let mut want = [make(0, ti, i, 6)];
+                for r in 1..p {
+                    T::combine(ReduceOp::Sum, &mut want, &[make(r, ti, i, 6)]);
+                }
                 assert!(
-                    (x - want).abs() < 1e-3 * (1.0 + want.abs()),
-                    "rank {rank} tensor {ti} elem {i}: {x} vs {want}"
+                    *x == want[0],
+                    "{label}: rank {rank} tensor {ti} elem {i}: {x:?} vs {:?}",
+                    want[0]
                 );
             }
         }
     }
 
-    // The regression assertions. The payload is ~1 MiB/rank/call; the cold
-    // call allocates arenas + blocks for all of it, so the warm calls must
-    // be a small fraction of that AND small in absolute terms.
+    // The regression assertions. The cold call builds the whole data plane
+    // (arenas + pooled blocks ≥ the per-rank payload), so warm calls must
+    // be a small fraction of it AND small in absolute terms.
+    let payload_bytes = lens.iter().sum::<usize>() as u64 * std::mem::size_of::<T>() as u64;
     assert!(
-        cold_bytes > 1 << 20,
-        "cold call should have built the data plane (saw {cold_bytes} B)"
+        cold_bytes > payload_bytes,
+        "{label}: cold call should have built the data plane \
+         (saw {cold_bytes} B for a {payload_bytes} B/rank payload)"
     );
     assert!(
         worst * 8 < cold_bytes,
-        "steady-state call allocates {worst} B, not < 1/8 of the cold call's {cold_bytes} B"
+        "{label}: steady-state call allocates {worst} B, not < 1/8 of the cold call's \
+         {cold_bytes} B"
     );
     assert!(
         worst < 1 << 20,
-        "steady-state call allocates {worst} B of control-plane noise (cap 1 MiB, \
-         vs ~4 MiB of payload moved per call)"
+        "{label}: steady-state call allocates {worst} B of control-plane noise (cap 1 MiB, \
+         vs {payload_bytes} B of payload moved per rank per call)"
+    );
+}
+
+#[test]
+fn persistent_pool_steady_state_allocates_nothing_on_the_data_plane() {
+    let p = 4;
+    // One Communicator, one lazily spawned warm pool **per dtype**: the
+    // f32 shape is the original 1 MiB/rank DDP gradient sync (8 × 32768 ×
+    // 4 B split into 256 KiB buckets, 2 pipeline segments); f64/i32 run a
+    // smaller but still multi-bucket shape through their own pools.
+    let comm = Communicator::builder(p)
+        .bucket_bytes(256 * 1024)
+        .pipeline_segments(2)
+        .build()
+        .unwrap();
+
+    drive_dtype::<f32>(
+        &comm,
+        p,
+        &[32_768; 8],
+        |rank, ti, i, step| (((rank + 1) * (ti + 1)) + (i % 7) + step) as f32,
+        "f32",
+    );
+    drive_dtype::<f64>(
+        &comm,
+        p,
+        &[16_384; 6],
+        |rank, ti, i, step| (((rank + 1) * (ti + 2)) + (i % 5) + step) as f64,
+        "f64",
+    );
+    drive_dtype::<i32>(
+        &comm,
+        p,
+        &[16_384; 6],
+        |rank, ti, i, step| (((rank + 1) * (ti + 1)) + (i % 11) + step) as i32 - 8,
+        "i32",
     );
 }

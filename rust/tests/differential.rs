@@ -183,6 +183,123 @@ fn arena_data_plane_bit_matches_clone_oracle_for_every_p_kind_op() {
     }
 }
 
+/// Payloads near 1.0 in `f64` (same conditioning argument as
+/// [`payloads`]).
+fn payloads_f64(rng: &mut Rng, p: usize, n: usize) -> Vec<Vec<f64>> {
+    (0..p)
+        .map(|_| (0..n).map(|_| 0.5 + rng.f32() as f64).collect())
+        .collect()
+}
+
+/// Small integers so a `Prod` across 17 ranks stays within `i32` range
+/// (|x| ≤ 2, so |prod| ≤ 2¹⁷).
+fn payloads_i32(rng: &mut Rng, p: usize, n: usize) -> Vec<Vec<i32>> {
+    (0..p)
+        .map(|_| (0..n).map(|_| rng.below(5) as i32 - 2).collect())
+        .collect()
+}
+
+/// The dtype-generic data plane: `f64` runs must be bit-identical to the
+/// clone oracle and `i32` runs exactly equal, for every P × algorithm × op
+/// — same sweep as the `f32` differential above, on the wide dtypes the
+/// warm pool now serves.
+#[test]
+fn arena_bit_matches_oracle_for_f64_and_i32_every_p_kind_op() {
+    let exec = ClusterExecutor::new();
+    let mut rng = Rng::new(0xD7E);
+    for p in 2..=17usize {
+        let n = 2 * p + 3;
+        for kind in AlgorithmKind::all() {
+            let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+            for op in ReduceOp::all() {
+                let xs = payloads_f64(&mut rng, p, n);
+                let want = oracle::execute_reference(&s, &xs, op)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: f64 oracle failed: {e}"));
+                let got = exec.execute(&s, &xs, op).unwrap();
+                for rank in 0..p {
+                    for (i, (g, w)) in got[rank].iter().zip(&want[rank]).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "f64 P={p} {kind:?} {op:?} rank {rank} elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+                let xs = payloads_i32(&mut rng, p, n);
+                let want = oracle::execute_reference(&s, &xs, op)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: i32 oracle failed: {e}"));
+                let got = exec.execute(&s, &xs, op).unwrap();
+                for rank in 0..p {
+                    assert_eq!(got[rank], want[rank], "i32 P={p} {kind:?} {op:?} rank {rank}");
+                }
+            }
+        }
+    }
+}
+
+/// The persistent pool's wide-dtype instantiations run the identical
+/// engine/transport; spot-check them (including a pipelined multi-lane
+/// schedule) against the clone oracle.
+#[test]
+fn persistent_pool_wide_dtypes_bit_match_oracle() {
+    use permallreduce::cluster::{PersistentCluster, PoolJob};
+    use permallreduce::sched::pipeline;
+    use std::sync::Arc;
+    let mut rng = Rng::new(0xD7F);
+    for p in [3usize, 8, 13] {
+        let base = Algorithm::new(AlgorithmKind::BwOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let pipelined = pipeline::expand(&base, 3).unwrap();
+        let scheds = [Arc::new(base), Arc::new(pipelined)];
+
+        let pool64: PersistentCluster<f64> = PersistentCluster::new(p);
+        for op in ReduceOp::all() {
+            let jobs: Vec<PoolJob<f64>> = scheds
+                .iter()
+                .map(|s| PoolJob {
+                    schedule: s.clone(),
+                    inputs: payloads_f64(&mut rng, p, 5 * p + 2),
+                })
+                .collect();
+            let got = pool64.execute_many(&jobs, op).unwrap();
+            for (ji, job) in jobs.iter().enumerate() {
+                let want = oracle::execute_reference(&job.schedule, &job.inputs, op).unwrap();
+                for rank in 0..p {
+                    for (i, (g, w)) in got[ji][rank].iter().zip(&want[rank]).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "f64 P={p} job {ji} {op:?} rank {rank} elem {i}"
+                        );
+                    }
+                }
+            }
+        }
+
+        let pool32: PersistentCluster<i32> = PersistentCluster::new(p);
+        for op in ReduceOp::all() {
+            let jobs: Vec<PoolJob<i32>> = scheds
+                .iter()
+                .map(|s| PoolJob {
+                    schedule: s.clone(),
+                    inputs: payloads_i32(&mut rng, p, 5 * p + 2),
+                })
+                .collect();
+            let got = pool32.execute_many(&jobs, op).unwrap();
+            for (ji, job) in jobs.iter().enumerate() {
+                let want = oracle::execute_reference(&job.schedule, &job.inputs, op).unwrap();
+                for rank in 0..p {
+                    assert_eq!(
+                        got[ji][rank], want[rank],
+                        "i32 P={p} job {ji} {op:?} rank {rank}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// The persistent pool runs the same arena engine through a different
 /// transport; its results (including pipelined multi-lane schedules) must
 /// also be bit-identical to the clone oracle.

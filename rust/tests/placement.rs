@@ -1,0 +1,169 @@
+//! Send-aware reduce placement: bit-exactness and the copy counter.
+//!
+//! The arena data plane may materialize a fused receive-reduce directly
+//! into a pooled wire block when liveness says the buffer's next use is a
+//! send (+ free). These tests pin the two halves of that contract:
+//!
+//! 1. **Bit-identical results** — placement only changes *where* the fused
+//!    result lands, never the operand order, so outputs with placement on
+//!    and off (and vs the clone oracle) match bit for bit.
+//! 2. **Strictly fewer slab→block copies** — on the Ring schedule every
+//!    hop whose payload was just reduced (a "send+free" hop) becomes a
+//!    zero-copy freeze: the only copies left are each rank's first
+//!    reduce-scatter send of its own (slab-resident) input chunk.
+
+use std::sync::Arc;
+
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use permallreduce::cluster::{
+    oracle, ClusterExecutor, CounterSnapshot, DataPlaneCounters, ExecOptions, PersistentCluster,
+    ReduceOp,
+};
+use permallreduce::sched::ProcSchedule;
+use permallreduce::util::Rng;
+
+fn ring(p: usize) -> ProcSchedule {
+    Algorithm::new(AlgorithmKind::Ring, p)
+        .build(&BuildCtx::default())
+        .unwrap()
+}
+
+fn run_counted(
+    s: &ProcSchedule,
+    xs: &[Vec<f32>],
+    op: ReduceOp,
+    placement: bool,
+) -> (CounterSnapshot, Vec<Vec<f32>>) {
+    let counters = Arc::new(DataPlaneCounters::default());
+    let opts = ExecOptions {
+        send_aware_placement: placement,
+        counters: Some(counters.clone()),
+        ..ExecOptions::default()
+    };
+    let exec = ClusterExecutor::with_options(opts);
+    let out = exec.execute(s, xs, op).unwrap();
+    (counters.snapshot(), out)
+}
+
+/// On Ring, every send+free hop (a buffer that was just reduced) must be a
+/// zero-copy freeze: per rank only the very first reduce-scatter send — of
+/// the rank's own init chunk, which genuinely lives in the slab — pays a
+/// slab→block copy. Without placement every one of the `p` sends per rank
+/// that carries a reduced value pays one.
+#[test]
+fn ring_send_free_hops_pay_zero_slab_to_block_copies() {
+    let p = 6;
+    let s = ring(p);
+    let mut rng = Rng::new(0x91A6);
+    let xs: Vec<Vec<f32>> = (0..p)
+        .map(|_| (0..4 * p + 1).map(|_| rng.f32() + 0.5).collect())
+        .collect();
+
+    let (with, out_with) = run_counted(&s, &xs, ReduceOp::Sum, true);
+    let (without, out_without) = run_counted(&s, &xs, ReduceOp::Sum, false);
+
+    // Identical bits either way.
+    for rank in 0..p {
+        for (g, w) in out_with[rank].iter().zip(&out_without[rank]) {
+            assert_eq!(g.to_bits(), w.to_bits(), "rank {rank}");
+        }
+    }
+    // And identical to the clone oracle.
+    let want = oracle::execute_reference(&s, &xs, ReduceOp::Sum).unwrap();
+    for rank in 0..p {
+        for (g, w) in out_with[rank].iter().zip(&want[rank]) {
+            assert_eq!(g.to_bits(), w.to_bits(), "oracle rank {rank}");
+        }
+    }
+
+    assert!(
+        with.slab_to_wire_copies < without.slab_to_wire_copies,
+        "placement must strictly reduce slab→block copies \
+         ({} vs {})",
+        with.slab_to_wire_copies,
+        without.slab_to_wire_copies
+    );
+    // Ring, per rank: P−1 reduce-scatter sends + 1 first distribution send
+    // carry data this rank produced; with placement only the init-chunk
+    // send (the first RS hop) is slab-resident — zero copies on send+free
+    // hops.
+    assert_eq!(
+        with.slab_to_wire_copies,
+        p as u64,
+        "only each rank's init-chunk send may copy"
+    );
+    assert_eq!(
+        without.slab_to_wire_copies,
+        (p * p) as u64,
+        "without placement every produced-value send copies"
+    );
+    // Every fused receive-reduce ((P−1) per rank) was wire-placed.
+    assert_eq!(with.wire_placed_reduces, (p * (p - 1)) as u64);
+    assert_eq!(without.wire_placed_reduces, 0);
+}
+
+/// Placement must be bit-transparent on every algorithm family and op, not
+/// just Ring (pipelined expansions are covered by the differential suite,
+/// which runs with placement on and compares against the clone oracle).
+#[test]
+fn placement_is_bit_transparent_across_kinds_and_ops() {
+    let mut rng = Rng::new(0x97AC);
+    for p in [5usize, 7, 12] {
+        let n = 2 * p + 3;
+        for kind in AlgorithmKind::all() {
+            let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+            for op in ReduceOp::all() {
+                let xs: Vec<Vec<f32>> = (0..p)
+                    .map(|_| (0..n).map(|_| rng.f32() + 0.5).collect())
+                    .collect();
+                let (with, out_with) = run_counted(&s, &xs, op, true);
+                let (_, out_without) = run_counted(&s, &xs, op, false);
+                for rank in 0..p {
+                    for (i, (g, w)) in out_with[rank].iter().zip(&out_without[rank]).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{kind:?} {op:?} P={p} rank {rank} elem {i}"
+                        );
+                    }
+                }
+                // Sanity: placement saw traffic (every schedule sends
+                // *something* slab-resident on its first step).
+                assert!(with.slab_to_wire_copies > 0, "{kind:?} P={p}");
+            }
+        }
+    }
+}
+
+/// The persistent pool always runs with placement on (hints cached next to
+/// the arena pre-size bounds); its counters show the same Ring shape.
+#[test]
+fn persistent_pool_ring_counters_show_placement() {
+    let p = 5;
+    let pool: PersistentCluster<f32> = PersistentCluster::new(p);
+    let s = Arc::new(ring(p));
+    let mut rng = Rng::new(0xB10C);
+    let xs: Vec<Vec<f32>> = (0..p)
+        .map(|_| (0..3 * p + 2).map(|_| rng.f32()).collect())
+        .collect();
+
+    let before = pool.counters();
+    let got = pool.execute(&s, &xs, ReduceOp::Sum).unwrap();
+    let after = pool.counters();
+
+    let want = oracle::execute_reference(&s, &xs, ReduceOp::Sum).unwrap();
+    for rank in 0..p {
+        for (g, w) in got[rank].iter().zip(&want[rank]) {
+            assert_eq!(g.to_bits(), w.to_bits(), "rank {rank}");
+        }
+    }
+    assert_eq!(
+        after.slab_to_wire_copies - before.slab_to_wire_copies,
+        p as u64,
+        "one init-chunk copy per rank, zero on send+free hops"
+    );
+    assert_eq!(
+        after.wire_placed_reduces - before.wire_placed_reduces,
+        (p * (p - 1)) as u64
+    );
+}
