@@ -7,10 +7,12 @@
 //! (s/B) to compare with the paper's Table 2 value (2·10⁻¹⁰ s/B), times a
 //! DDP-shaped multi-tensor workload through the sequential per-tensor
 //! `allreduce()` loop vs the bucketed pipelined `allreduce_many()` path
-//! (`BENCH_bucketing.json`), and times single-schedule Allreduces through
+//! (`BENCH_bucketing.json`), times single-schedule Allreduces through
 //! the clone-based reference executor vs the warm persistent pool across
 //! message sizes × process counts (`BENCH_dataplane.json`) so the perf
-//! trajectory of both paths accumulates across PRs.
+//! trajectory of both paths accumulates across PRs, and runs the
+//! **chunked-vs-monolithic** step-streaming ablation on the deterministic
+//! DES clock (`BENCH_chunking.json`).
 //!
 //! Set `GAR_BENCH_FAST=1` (CI smoke) to shrink budgets and sizes.
 
@@ -23,9 +25,13 @@ use std::time::{Duration, Instant};
 use harness::{bench, black_box, fmt_t};
 use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
 use permallreduce::cluster::{
-    oracle, ClusterExecutor, JobIo, NativeReducer, PersistentCluster, ReduceOp, Reducer,
+    oracle, ClusterExecutor, ExecOptions, JobIo, NativeReducer, PersistentCluster, ReduceOp,
+    Reducer,
 };
-use permallreduce::coordinator::Communicator;
+use permallreduce::coordinator::{bucket, Communicator};
+use permallreduce::cost::NetParams;
+use permallreduce::des::simulate_chunked;
+use permallreduce::sched::stats as sched_stats;
 use permallreduce::util::Rng;
 
 fn fast_mode() -> bool {
@@ -243,6 +249,127 @@ fn bench_bucketing() {
     );
 }
 
+/// Chunked-vs-monolithic ablation (`BENCH_chunking.json`).
+///
+/// The gated numbers are **DES-timed** (α–β–γ model with the chunk-stream
+/// extension, deterministic across machines): per bucket size, the
+/// makespan of the bw-optimal schedule monolithic vs chunked with the
+/// cost-model chunk (`bucket::optimal_chunk_bytes` of the per-step
+/// message). The chunk-fusion decisions in the model are the *same*
+/// `plan_chunk_fusion` pass the real executors run. A wall-clock smoke on
+/// the thread cluster additionally proves the chunked path executes and
+/// stays bit-identical (not part of the JSON, too noisy to gate).
+fn bench_chunking() {
+    let params = NetParams::table2();
+    let ps: &[usize] = &[8, 16];
+    // Per-rank bucket sizes; the largest is the acceptance target.
+    let sizes_bytes: &[usize] = &[256 << 10, 1 << 20, 4 << 20, 16 << 20];
+    println!("\n== chunked streaming vs monolithic steps (DES-timed) ==");
+    let mut rows = String::new();
+    let mut speedups: Vec<f64> = Vec::new();
+    let mut largest_speedup_at_p8 = 0.0f64;
+    for &p in ps {
+        let sched = Algorithm::new(AlgorithmKind::BwOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        for &m in sizes_bytes {
+            let chunk = bucket::optimal_chunk_bytes(m / p, &params);
+            let mono = simulate_chunked(&sched, m, &params, None).makespan;
+            let chunked = simulate_chunked(&sched, m, &params, Some(chunk)).makespan;
+            let speedup = mono / chunked;
+            speedups.push(speedup);
+            if p == 8 && m == *sizes_bytes.last().unwrap() {
+                largest_speedup_at_p8 = speedup;
+            }
+            // Static framing estimates for the artifact (elements = f32;
+            // chunk_plan sizes buffers with the ceil(n/U) per-unit upper
+            // bound, so frame counts are upper bounds at non-dividing
+            // sizes — the DES columns above use exact byte sizes).
+            let plan = sched_stats::chunk_plan(&sched, m / 4, chunk / 4);
+            println!(
+                "p{p} {m:>9} B bucket, {chunk:>7} B chunks ({} frames): mono {} | chunked {} \
+                 → {speedup:.3}×",
+                plan.total_frames,
+                fmt_t(mono),
+                fmt_t(chunked),
+            );
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"p\": {p}, \"bucket_bytes\": {m}, \"chunk_bytes\": {chunk}, \
+                 \"total_frames\": {}, \"chunked_messages\": {}, \
+                 \"monolithic_s\": {mono:.6e}, \"chunked_s\": {chunked:.6e}, \
+                 \"speedup\": {speedup:.4}}}",
+                plan.total_frames, plan.chunked_messages
+            ));
+        }
+    }
+    let min = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+    let json = format!(
+        "{{\n  \"bench\": \"chunking\",\n  \"timing\": \"des-alpha-beta-gamma\",\n  \
+         \"algo\": \"bw-optimal\",\n  \"entries\": [\n{rows}\n  ],\n  \
+         \"min_speedup\": {min:.4},\n  \"max_speedup\": {max:.4},\n  \
+         \"largest_bucket_p8_speedup\": {largest_speedup_at_p8:.4}\n}}\n"
+    );
+    std::fs::write("BENCH_chunking.json", &json).expect("write BENCH_chunking.json");
+    println!(
+        "wrote BENCH_chunking.json (speedup {min:.3}×–{max:.3}×; largest bucket at P=8: \
+         {largest_speedup_at_p8:.3}×)"
+    );
+    assert!(
+        largest_speedup_at_p8 >= 1.0,
+        "chunked must be ≥ monolithic on the largest bucket at P=8"
+    );
+
+    // Wall-clock smoke on the real executor: the chunked path runs and is
+    // bit-identical to the monolithic path on actual threads. The budget
+    // is pinned well below the per-step message (n·4/p bytes, ~n·2 at the
+    // largest hop) and the counters prove frames actually flowed — so this
+    // smoke can never silently degenerate to the monolithic path.
+    let p = 8;
+    let n = if fast_mode() { 65_536 } else { 262_144 };
+    let sched = Algorithm::new(AlgorithmKind::BwOptimal, p)
+        .build(&BuildCtx::default())
+        .unwrap();
+    let mut rng = Rng::new(0xC41);
+    let xs: Vec<Vec<f32>> = (0..p)
+        .map(|_| (0..n).map(|_| rng.f32()).collect())
+        .collect();
+    let mono_exec = ClusterExecutor::new();
+    let counters = Arc::new(permallreduce::cluster::DataPlaneCounters::default());
+    let chunk_exec = ClusterExecutor::with_options(ExecOptions {
+        chunk_bytes: Some((n * 4 / p / 4).max(4096)),
+        counters: Some(counters.clone()),
+        ..ExecOptions::default()
+    });
+    let want = mono_exec.execute(&sched, &xs, ReduceOp::Sum).unwrap();
+    let got = chunk_exec.execute(&sched, &xs, ReduceOp::Sum).unwrap();
+    for (w, g) in want.iter().zip(&got) {
+        assert!(
+            w.iter().zip(g).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "chunked execution must be bit-identical"
+        );
+    }
+    let snap = counters.snapshot();
+    assert!(
+        snap.chunked_msgs > 0 && snap.streamed_reduces > 0,
+        "smoke must exercise chunked frames and streamed reduces \
+         ({} msgs, {} streamed)",
+        snap.chunked_msgs,
+        snap.streamed_reduces
+    );
+    println!(
+        "chunked executor smoke: bit-identical at p{p}, {} B/rank \
+         ({} chunked msgs, {} frames, {} streamed reduces)",
+        n * 4,
+        snap.chunked_msgs,
+        snap.chunk_frames,
+        snap.streamed_reduces
+    );
+}
+
 fn main() {
     let budget = if fast_mode() {
         Duration::from_millis(300)
@@ -269,6 +396,7 @@ fn main() {
 
     bench_bucketing();
     bench_dataplane();
+    bench_chunking();
 
     #[cfg(feature = "pjrt")]
     bench_pjrt(&mut rng, budget);

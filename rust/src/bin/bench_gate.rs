@@ -7,10 +7,13 @@
 //! of the arena/persistent-pool plane over the clone-per-message oracle
 //! (`clone_s / arena_pool_s`, measured in the same process on the same
 //! machine): a drop of more than `max_regress_pct` below the baseline's
-//! floor for the same `(p, elems)` series fails the build.
+//! floor for the same `(p, elems)` series fails the build. When the
+//! baseline carries a `bucketing` floor, the bucketed-vs-sequential
+//! speedup of `BENCH_bucketing.json` is gated the same way (and the
+//! artifact becomes mandatory).
 //!
 //! ```text
-//! bench_gate <BENCH_baseline.json> <BENCH_dataplane.json>
+//! bench_gate <BENCH_baseline.json> <BENCH_dataplane.json> [<BENCH_bucketing.json>]
 //! bench_gate --self-test <BENCH_baseline.json>   # prove the gate can fail
 //! ```
 //!
@@ -30,7 +33,15 @@ struct Series {
     speedup: f64,
 }
 
-fn parse_baseline(text: &str) -> Result<(f64, Vec<Series>), String> {
+/// The parsed baseline: regression margin, dataplane series floors, and
+/// the optional bucketing speedup floor.
+struct Baseline {
+    pct: f64,
+    series: Vec<Series>,
+    bucketing_floor: Option<f64>,
+}
+
+fn parse_baseline(text: &str) -> Result<Baseline, String> {
     let v = json::parse(text).map_err(|e| format!("baseline parse: {e}"))?;
     let pct = v
         .get("max_regress_pct")
@@ -44,7 +55,40 @@ fn parse_baseline(text: &str) -> Result<(f64, Vec<Series>), String> {
     if series.is_empty() {
         return Err("baseline has no series".to_string());
     }
-    Ok((pct, series))
+    let bucketing_floor = match v.get("bucketing") {
+        None => None,
+        Some(b) => Some(
+            b.get("min_speedup")
+                .and_then(Value::as_f64)
+                .ok_or("baseline `bucketing` missing min_speedup")?,
+        ),
+    };
+    Ok(Baseline {
+        pct,
+        series,
+        bucketing_floor,
+    })
+}
+
+/// The single speedup of `BENCH_bucketing.json`.
+fn parse_bucketing(text: &str) -> Result<f64, String> {
+    let v = json::parse(text).map_err(|e| format!("bucketing parse: {e}"))?;
+    v.get("speedup")
+        .and_then(Value::as_f64)
+        .ok_or_else(|| "bucketing artifact missing `speedup`".to_string())
+}
+
+/// Gate the bucketing speedup against its floor (empty vec = pass).
+fn gate_bucketing(floor: f64, speedup: f64, max_regress_pct: f64) -> Vec<String> {
+    let limit = floor * (1.0 - max_regress_pct / 100.0);
+    if speedup < limit {
+        vec![format!(
+            "bucketing: speedup {speedup:.3}× regressed more than {max_regress_pct}% below \
+             the baseline floor {floor:.3}× (limit {limit:.3}×)"
+        )]
+    } else {
+        Vec::new()
+    }
 }
 
 fn parse_current(text: &str) -> Result<Vec<Series>, String> {
@@ -100,31 +144,41 @@ fn gate(baseline: &[Series], current: &[Series], max_regress_pct: f64) -> Vec<St
     failures
 }
 
-/// `--self-test`: fabricate a run where every series sits far below the
-/// floor and verify the gate rejects it — the CI step that proves the
-/// comparator can actually fail.
-fn self_test(baseline: &[Series], max_regress_pct: f64) -> Result<(), String> {
+/// `--self-test`: fabricate a run where every gated quantity sits far
+/// below its floor and verify the gate rejects it — the CI step that
+/// proves the comparator can actually fail.
+fn self_test(baseline: &Baseline, max_regress_pct: f64) -> Result<(), String> {
     let regressed: Vec<Series> = baseline
+        .series
         .iter()
         .map(|s| Series {
             speedup: s.speedup * (1.0 - max_regress_pct / 100.0) * 0.5,
             ..s.clone()
         })
         .collect();
-    let failures = gate(baseline, &regressed, max_regress_pct);
-    if failures.len() != baseline.len() {
+    let failures = gate(&baseline.series, &regressed, max_regress_pct);
+    if failures.len() != baseline.series.len() {
         return Err(format!(
             "injected regression tripped {}/{} series — the gate is broken",
             failures.len(),
-            baseline.len()
+            baseline.series.len()
         ));
     }
-    let clean = gate(baseline, baseline, max_regress_pct);
+    let clean = gate(&baseline.series, &baseline.series, max_regress_pct);
     if !clean.is_empty() {
         return Err(format!(
             "baseline does not pass against itself: {}",
             clean.join("; ")
         ));
+    }
+    if let Some(floor) = baseline.bucketing_floor {
+        let injected = floor * (1.0 - max_regress_pct / 100.0) * 0.5;
+        if gate_bucketing(floor, injected, max_regress_pct).is_empty() {
+            return Err("injected bucketing regression passed — the gate is broken".into());
+        }
+        if !gate_bucketing(floor, floor, max_regress_pct).is_empty() {
+            return Err("bucketing floor does not pass against itself".into());
+        }
     }
     Ok(())
 }
@@ -135,34 +189,53 @@ fn run() -> Result<(), String> {
         Some("--self-test") => (true, args.iter().skip(1).collect()),
         _ => (false, args.iter().collect()),
     };
-    let baseline_path = files
-        .first()
-        .ok_or("usage: bench_gate [--self-test] <baseline.json> [<current.json>]")?;
+    let usage =
+        "usage: bench_gate [--self-test] <baseline.json> [<dataplane.json> [<bucketing.json>]]";
+    let baseline_path = files.first().ok_or(usage)?;
     let baseline_text = std::fs::read_to_string(baseline_path)
         .map_err(|e| format!("reading {baseline_path}: {e}"))?;
-    let (pct, baseline) = parse_baseline(&baseline_text)?;
+    let baseline = parse_baseline(&baseline_text)?;
+    let pct = baseline.pct;
 
     if selftest {
         self_test(&baseline, pct)?;
         println!(
             "bench_gate self-test OK: an injected {pct}%+ regression fails all \
-             {} series and the baseline passes against itself",
-            baseline.len()
+             {} series{} and the baseline passes against itself",
+            baseline.series.len(),
+            if baseline.bucketing_floor.is_some() {
+                " plus the bucketing floor"
+            } else {
+                ""
+            }
         );
         return Ok(());
     }
 
-    let current_path = files
-        .get(1)
-        .ok_or("usage: bench_gate <baseline.json> <current.json>")?;
+    let current_path = files.get(1).ok_or(usage)?;
     let current_text = std::fs::read_to_string(current_path)
         .map_err(|e| format!("reading {current_path}: {e}"))?;
     let current = parse_current(&current_text)?;
-    let failures = gate(&baseline, &current, pct);
+    let mut failures = gate(&baseline.series, &current, pct);
+    if let Some(floor) = baseline.bucketing_floor {
+        let bucketing_path = files.get(2).ok_or(
+            "baseline has a `bucketing` floor but no bucketing artifact was passed \
+             (coverage regression)",
+        )?;
+        let bucketing_text = std::fs::read_to_string(bucketing_path)
+            .map_err(|e| format!("reading {bucketing_path}: {e}"))?;
+        let speedup = parse_bucketing(&bucketing_text)?;
+        failures.extend(gate_bucketing(floor, speedup, pct));
+    }
     if failures.is_empty() {
         println!(
-            "bench_gate OK: {} series within {pct}% of their baseline floors",
-            baseline.len()
+            "bench_gate OK: {} series{} within {pct}% of their baseline floors",
+            baseline.series.len(),
+            if baseline.bucketing_floor.is_some() {
+                " + bucketing"
+            } else {
+                ""
+            }
         );
         Ok(())
     } else {
@@ -226,12 +299,36 @@ mod tests {
             "series": [
                 {"p": 4, "elems": 4096, "min_speedup": 1.0},
                 {"p": 8, "elems": 262144, "min_speedup": 1.0}
-            ]
+            ],
+            "bucketing": {"min_speedup": 1.0}
         }"#;
-        let (pct, base) = parse_baseline(text).unwrap();
-        assert_eq!(pct, 20.0);
-        assert_eq!(base.len(), 2);
-        assert_eq!(base[0], series(4, 4096, 1.0));
+        let base = parse_baseline(text).unwrap();
+        assert_eq!(base.pct, 20.0);
+        assert_eq!(base.series.len(), 2);
+        assert_eq!(base.series[0], series(4, 4096, 1.0));
+        assert_eq!(base.bucketing_floor, Some(1.0));
+        // A baseline without the bucketing section stays valid (the
+        // bucketing gate is then skipped).
+        let text = r#"{
+            "max_regress_pct": 20,
+            "series": [{"p": 4, "elems": 4096, "min_speedup": 1.0}]
+        }"#;
+        assert_eq!(parse_baseline(text).unwrap().bucketing_floor, None);
+    }
+
+    #[test]
+    fn bucketing_gate_and_artifact_schema() {
+        let text = r#"{
+            "bench": "bucketing", "p": 8, "tensors": 51,
+            "total_bytes_per_rank": 640000,
+            "sequential_s": 2.0e-2, "bucketed_s": 1.0e-2, "speedup": 2.0
+        }"#;
+        assert_eq!(parse_bucketing(text).unwrap(), 2.0);
+        assert!(gate_bucketing(1.0, 2.0, 20.0).is_empty());
+        assert!(gate_bucketing(1.0, 0.81, 20.0).is_empty());
+        let fails = gate_bucketing(1.0, 0.79, 20.0);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("bucketing"));
     }
 
     #[test]
@@ -251,7 +348,11 @@ mod tests {
 
     #[test]
     fn self_test_catches_injected_regressions() {
-        let base = [series(4, 4096, 1.0), series(8, 65536, 1.0)];
+        let base = Baseline {
+            pct: 20.0,
+            series: vec![series(4, 4096, 1.0), series(8, 65536, 1.0)],
+            bucketing_floor: Some(1.0),
+        };
         self_test(&base, 20.0).unwrap();
     }
 }

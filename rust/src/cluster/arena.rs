@@ -43,14 +43,38 @@
 //! writes **directly into a pooled wire block** ([`BufSlot::Owned`]). The
 //! later `Send` then freezes that block in place instead of paying a
 //! slab→block copy, restoring the old clone plane's move-on-last-use
-//! zero-copy. Buffers whose value stays local materialize into the slab as
+//! zero-copy. The same hint covers `Copy`-created buffers whose next use
+//! is a send (copy-then-forward hops duplicate straight into a wire
+//! block). Buffers whose value stays local materialize into the slab as
 //! before. [`DataPlaneCounters`] (on the shared pool) count both outcomes,
 //! which is what `tests/placement.rs` pins down.
+//!
+//! ## Chunked streaming (wire/ALU overlap inside a step)
+//!
+//! With a `chunk_bytes` budget set ([`super::ExecOptions::chunk_bytes`]),
+//! a message whose largest buffer exceeds the budget travels as a stream
+//! of [`Frame`]-tagged sub-payloads instead of one monolithic payload.
+//! The sender emits frames in order (shared backings are sliced per frame
+//! — refcount bumps; slab parts copy into one pooled sub-block per
+//! frame), and the receiver folds eligible receive-reduces **per chunk as
+//! frames land** ([`crate::sched::stats::plan_chunk_fusion`]): the combine
+//! of frame `k` overlaps the wire time of frames `k+1..`, which is the
+//! doubly-pipelined reduction idea (arXiv:2109.12626) applied inside every
+//! schedule step. Messages the receiver cannot fuse at all (pure forwards
+//! — allgather hops) are sent monolithic
+//! ([`crate::sched::stats::chunk_pays`]); in a mixed payload, ineligible
+//! buffers gather their frames and reassemble — always correct, no
+//! overlap. Per-element operand order never changes, so chunked execution
+//! stays bit-identical to the monolithic path and to the clone oracle;
+//! `chunk_bytes = None` takes exactly the old single-frame code path.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::sched::{BufId, MicroOp, ProcSchedule};
+use crate::sched::{
+    stats::{chunk_pays, plan_chunk_fusion},
+    BufId, MicroOp, Op, ProcSchedule,
+};
 
 use super::{ClusterError, Element, ReduceOp};
 
@@ -103,6 +127,22 @@ pub struct DataPlaneCounters {
     /// Fused receive-reduces materialized directly into a pooled wire
     /// block (the send that follows is then a zero-copy freeze).
     pub wire_placed_reduces: AtomicU64,
+    /// `Copy` destinations materialized directly into a pooled wire block
+    /// (copy-then-forward hops: the send freezes in place, saving the
+    /// slab→slab copy *and* the later slab→wire copy).
+    pub wire_placed_copies: AtomicU64,
+    /// Messages split into ≥ 2 frames by `chunk_bytes`.
+    pub chunked_msgs: AtomicU64,
+    /// Total frames those chunked messages put on the wire.
+    pub chunk_frames: AtomicU64,
+    /// Receive-reduces streamed per chunk as frames landed — each one
+    /// overlapped its combine with the remaining wire time (the number the
+    /// chunked data plane exists to maximize).
+    pub streamed_reduces: AtomicU64,
+    /// Chunked receives that could not stream (raw value needed first) and
+    /// were reassembled — no overlap; a copy unless every frame was a
+    /// consecutive slice of one shared block (then re-adopted zero-copy).
+    pub gathered_recvs: AtomicU64,
 }
 
 impl DataPlaneCounters {
@@ -111,6 +151,11 @@ impl DataPlaneCounters {
             slab_to_wire_copies: self.slab_to_wire_copies.load(Ordering::Relaxed),
             slab_to_wire_elems: self.slab_to_wire_elems.load(Ordering::Relaxed),
             wire_placed_reduces: self.wire_placed_reduces.load(Ordering::Relaxed),
+            wire_placed_copies: self.wire_placed_copies.load(Ordering::Relaxed),
+            chunked_msgs: self.chunked_msgs.load(Ordering::Relaxed),
+            chunk_frames: self.chunk_frames.load(Ordering::Relaxed),
+            streamed_reduces: self.streamed_reduces.load(Ordering::Relaxed),
+            gathered_recvs: self.gathered_recvs.load(Ordering::Relaxed),
         }
     }
 
@@ -124,6 +169,14 @@ impl DataPlaneCounters {
             .fetch_add(s.slab_to_wire_elems, Ordering::Relaxed);
         self.wire_placed_reduces
             .fetch_add(s.wire_placed_reduces, Ordering::Relaxed);
+        self.wire_placed_copies
+            .fetch_add(s.wire_placed_copies, Ordering::Relaxed);
+        self.chunked_msgs.fetch_add(s.chunked_msgs, Ordering::Relaxed);
+        self.chunk_frames.fetch_add(s.chunk_frames, Ordering::Relaxed);
+        self.streamed_reduces
+            .fetch_add(s.streamed_reduces, Ordering::Relaxed);
+        self.gathered_recvs
+            .fetch_add(s.gathered_recvs, Ordering::Relaxed);
     }
 }
 
@@ -133,6 +186,11 @@ pub struct CounterSnapshot {
     pub slab_to_wire_copies: u64,
     pub slab_to_wire_elems: u64,
     pub wire_placed_reduces: u64,
+    pub wire_placed_copies: u64,
+    pub chunked_msgs: u64,
+    pub chunk_frames: u64,
+    pub streamed_reduces: u64,
+    pub gathered_recvs: u64,
 }
 
 /// One shard of the pool: `classes[k]` holds parked vectors of capacity
@@ -330,11 +388,27 @@ impl<T: Element> Chunk<T> {
     pub fn as_slice(&self) -> &[T] {
         &self.block.data[self.off..self.off + self.len]
     }
+
+    /// A sub-view `[rel_off, rel_off + len)` of this chunk (refcount bump,
+    /// no data moves) — how chunked sends slice an already-shared payload
+    /// into frames. `rel_off + len` must not exceed `self.len()`.
+    pub fn slice(&self, rel_off: usize, len: usize) -> Chunk<T> {
+        debug_assert!(rel_off + len <= self.len);
+        Chunk {
+            block: self.block.clone(),
+            off: self.off + rel_off,
+            len,
+        }
+    }
 }
 
 /// One message's payload: per-buffer chunks, positionally matching the
 /// sender's buffer list (and thus the receiver's).
 pub type Payload<T> = Vec<Chunk<T>>;
+
+/// Out-of-order stash entry for one `(step, from)` key: frames of a
+/// chunked message queue in arrival (= `idx`) order.
+pub type FrameQueue<T> = std::collections::VecDeque<(Frame, Payload<T>)>;
 
 /// A slab slot: `BufId → (offset, len)` into an [`Arena`].
 #[derive(Clone, Copy, Debug)]
@@ -343,11 +417,21 @@ pub struct SlabSlot {
     pub len: usize,
 }
 
-/// Per-worker bump-allocated slab.
+/// Per-worker slab: a bump allocator with **space reclamation**. Freed
+/// slots go to a small free list (coalescing with neighbours, rewinding
+/// the bump cursor when the freed run is the tail), and `alloc` serves
+/// best-fit from that list before bumping — so a schedule's slab footprint
+/// tracks [`crate::sched::ScheduleStats::peak_live_units`] (peak
+/// *concurrently live* data) instead of the total-ever-materialized bump
+/// bound, which is what long pipelined schedules need to keep warm-pool
+/// arenas small.
 pub struct Arena<T: Element> {
     data: Vec<T>,
     used: usize,
     high_water: usize,
+    /// Reclaimed slots, pairwise disjoint, none adjacent to another or to
+    /// the `used` tail (both get merged eagerly in [`Arena::free`]).
+    free: Vec<SlabSlot>,
 }
 
 impl<T: Element> Arena<T> {
@@ -356,12 +440,15 @@ impl<T: Element> Arena<T> {
             data: Vec::new(),
             used: 0,
             high_water: 0,
+            free: Vec::new(),
         }
     }
 
-    /// Rewind the bump cursor; capacity is retained.
+    /// Rewind the bump cursor and drop all reclaimed slots; capacity is
+    /// retained.
     pub fn reset(&mut self) {
         self.used = 0;
+        self.free.clear();
     }
 
     /// Current backing capacity in elements.
@@ -382,8 +469,34 @@ impl<T: Element> Arena<T> {
         }
     }
 
-    /// Bump-allocate a slot of `len` elements (contents unspecified).
+    /// Allocate a slot of `len` elements (contents unspecified): best-fit
+    /// from the reclaimed free list first, bump otherwise.
     pub fn alloc(&mut self, len: usize) -> SlabSlot {
+        if len > 0 {
+            let mut best: Option<usize> = None;
+            for (i, f) in self.free.iter().enumerate() {
+                let better = match best {
+                    None => true,
+                    Some(b) => f.len < self.free[b].len,
+                };
+                if f.len >= len && better {
+                    best = Some(i);
+                    if f.len == len {
+                        break;
+                    }
+                }
+            }
+            if let Some(i) = best {
+                let f = self.free.swap_remove(i);
+                if f.len > len {
+                    self.free.push(SlabSlot {
+                        off: f.off + len,
+                        len: f.len - len,
+                    });
+                }
+                return SlabSlot { off: f.off, len };
+            }
+        }
         let off = self.used;
         self.used += len;
         if self.used > self.data.len() {
@@ -393,6 +506,41 @@ impl<T: Element> Arena<T> {
             self.high_water = self.used;
         }
         SlabSlot { off, len }
+    }
+
+    /// Reclaim a slot (the `Free` micro-op): merge with any adjacent free
+    /// slots, then either rewind the bump cursor (freed run is the tail)
+    /// or park the run on the free list for [`Arena::alloc`] to reuse.
+    pub fn free(&mut self, mut s: SlabSlot) {
+        if s.len == 0 {
+            return;
+        }
+        loop {
+            let mut merged = false;
+            let mut i = 0;
+            while i < self.free.len() {
+                let f = self.free[i];
+                if f.off + f.len == s.off {
+                    s = SlabSlot { off: f.off, len: f.len + s.len };
+                    self.free.swap_remove(i);
+                    merged = true;
+                } else if s.off + s.len == f.off {
+                    s = SlabSlot { off: s.off, len: s.len + f.len };
+                    self.free.swap_remove(i);
+                    merged = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if !merged {
+                break;
+            }
+        }
+        if s.off + s.len == self.used {
+            self.used = s.off;
+        } else {
+            self.free.push(s);
+        }
     }
 
     pub fn slice(&self, s: SlabSlot) -> &[T] {
@@ -479,22 +627,60 @@ impl<T: Element> CombineKernel<T> for FoldKernel<'_, T> {
     }
 }
 
-/// The message layer a [`DataPlane`] runs over. Implementations own the
-/// channels, tagging, fault injection, and out-of-order stashing.
-pub trait Transport<T: Element> {
-    /// Post one message tagged with the global `step` to `to`.
-    fn send(&mut self, to: usize, step: usize, payload: Payload<T>);
-
-    /// Blocking receive of the message tagged `(step, from)`.
-    fn recv(&mut self, step: usize, from: usize) -> Result<Payload<T>, ClusterError>;
+/// Chunk framing of one wire message: frame `idx` of `of`. A monolithic
+/// message is the single frame `0 of 1` ([`Frame::WHOLE`]); a chunked send
+/// emits frames `0..of` in order, all tagged with the same `(step, from)`,
+/// so the receiver can fuse its reduce per frame while later frames are
+/// still on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub idx: u32,
+    pub of: u32,
 }
 
-/// Payload part under construction (private to [`DataPlane::build_payload`]).
+impl Frame {
+    /// The monolithic single-frame framing.
+    pub const WHOLE: Frame = Frame { idx: 0, of: 1 };
+}
+
+/// The message layer a [`DataPlane`] runs over. Implementations own the
+/// channels, tagging, fault injection, and out-of-order stashing (frames
+/// of one `(step, from)` message are delivered in `idx` order; frames of
+/// other in-flight messages queue per key).
+pub trait Transport<T: Element> {
+    /// Post one frame tagged with the global `step` to `to`.
+    fn send(&mut self, to: usize, step: usize, frame: Frame, payload: Payload<T>);
+
+    /// Blocking receive of the next frame tagged `(step, from)`.
+    fn recv(&mut self, step: usize, from: usize) -> Result<(Frame, Payload<T>), ClusterError>;
+}
+
+/// Payload part under construction (private to [`DataPlane::build_payload`]
+/// and the chunked sender).
 enum Part<T: Element> {
     /// Forward an already-shared chunk (refcount bump).
     Fwd(Chunk<T>),
     /// Range `(off, len)` of the freshly filled wire block.
     Fresh(usize, usize),
+}
+
+/// Where a streamed receive-reduce materializes (private to
+/// [`DataPlane::recv_stream`]).
+enum FuseDst<T: Element> {
+    /// A slab slot (the value stays local).
+    Slab(SlabSlot),
+    /// A pooled wire block (send-aware placement: the next use is a send).
+    Wire(Block<T>),
+}
+
+/// Per-buffer state of one streaming receive (private to
+/// [`DataPlane::recv_stream`]).
+enum RecvSlot<T: Element> {
+    /// Fold arriving chunks with local operand `src` into `dst`; `off` =
+    /// elements already folded.
+    Fuse { src: BufId, dst: FuseDst<T>, off: usize },
+    /// Keep the frames; reassembled into one shared block at the end.
+    Gather { parts: Vec<Chunk<T>> },
 }
 
 /// Per-worker counter accumulator: plain integers on the worker's own
@@ -505,6 +691,11 @@ struct LocalCounters {
     copies: u64,
     elems: u64,
     placed: u64,
+    placed_copies: u64,
+    chunked_msgs: u64,
+    chunk_frames: u64,
+    streamed: u64,
+    gathered: u64,
 }
 
 /// A worker's half of the data plane: slab arena + slot table + wire-block
@@ -514,15 +705,23 @@ pub struct DataPlane<T: Element> {
     slots: Vec<Option<BufSlot<T>>>,
     pool: Arc<BlockPool<T>>,
     local: LocalCounters,
+    /// Chunk budget (elements) of the current run; `None` = monolithic.
+    chunk_elems: Option<usize>,
+    /// Zero-length shared chunk, cloned wherever a frame needs an empty
+    /// placeholder for a buffer that finished in an earlier frame.
+    empty: Chunk<T>,
 }
 
 impl<T: Element> DataPlane<T> {
     pub fn new(pool: Arc<BlockPool<T>>) -> DataPlane<T> {
+        let empty = Chunk::new(BlockPool::take(&pool, 0).freeze(), 0, 0);
         DataPlane {
             arena: Arena::new(),
             slots: Vec::new(),
             pool,
             local: LocalCounters::default(),
+            chunk_elems: None,
+            empty,
         }
     }
 
@@ -530,13 +729,27 @@ impl<T: Element> DataPlane<T> {
     /// [`DataPlaneCounters`].
     fn flush_counters(&mut self) {
         let l = std::mem::take(&mut self.local);
-        if l.copies == 0 && l.elems == 0 && l.placed == 0 {
-            return;
-        }
         let c = self.pool.counters();
-        c.slab_to_wire_copies.fetch_add(l.copies, Ordering::Relaxed);
-        c.slab_to_wire_elems.fetch_add(l.elems, Ordering::Relaxed);
-        c.wire_placed_reduces.fetch_add(l.placed, Ordering::Relaxed);
+        if l.copies > 0 {
+            c.slab_to_wire_copies.fetch_add(l.copies, Ordering::Relaxed);
+            c.slab_to_wire_elems.fetch_add(l.elems, Ordering::Relaxed);
+        }
+        if l.placed > 0 {
+            c.wire_placed_reduces.fetch_add(l.placed, Ordering::Relaxed);
+        }
+        if l.placed_copies > 0 {
+            c.wire_placed_copies.fetch_add(l.placed_copies, Ordering::Relaxed);
+        }
+        if l.chunked_msgs > 0 {
+            c.chunked_msgs.fetch_add(l.chunked_msgs, Ordering::Relaxed);
+            c.chunk_frames.fetch_add(l.chunk_frames, Ordering::Relaxed);
+        }
+        if l.streamed > 0 {
+            c.streamed_reduces.fetch_add(l.streamed, Ordering::Relaxed);
+        }
+        if l.gathered > 0 {
+            c.gathered_recvs.fetch_add(l.gathered, Ordering::Relaxed);
+        }
     }
 
     pub fn pool(&self) -> &Arc<BlockPool<T>> {
@@ -558,8 +771,16 @@ impl<T: Element> DataPlane<T> {
     ///
     /// `wire_dst` is this rank's send-aware placement row
     /// ([`crate::sched::stats::wire_reduce_placement`]): `wire_dst[b]`
-    /// means "materialize buffer `b`'s fused receive-reduce directly into a
-    /// pooled wire block". Pass an empty slice to disable placement.
+    /// means "materialize buffer `b` (fused receive-reduce or slab copy)
+    /// directly into a pooled wire block". Pass an empty slice to disable
+    /// placement.
+    ///
+    /// `chunk_elems` is the chunk budget: `Some(c)` makes every message
+    /// whose largest buffer exceeds `c` elements travel as a stream of
+    /// `(chunk_idx, n_chunks)`-framed sub-blocks, with eligible
+    /// receive-reduces ([`plan_chunk_fusion`]) folded per chunk as frames
+    /// land. `None` (and any message ≤ `c`) is byte-for-byte today's
+    /// single-frame behavior.
     #[allow(clippy::too_many_arguments)]
     pub fn run_schedule(
         &mut self,
@@ -568,10 +789,12 @@ impl<T: Element> DataPlane<T> {
         input: &[T],
         step_off: usize,
         wire_dst: &[bool],
+        chunk_elems: Option<usize>,
         transport: &mut dyn Transport<T>,
         kernel: &dyn CombineKernel<T>,
         out: &mut [T],
     ) -> Result<(), ClusterError> {
+        self.chunk_elems = chunk_elems.map(|c| c.max(1));
         let n = input.len();
         debug_assert_eq!(out.len(), n);
         if n == 0 {
@@ -628,42 +851,404 @@ impl<T: Element> DataPlane<T> {
         transport: &mut dyn Transport<T>,
         kernel: &dyn CombineKernel<T>,
     ) -> Result<(), ClusterError> {
+        // Reduces already folded chunk-by-chunk inside a streaming receive
+        // this step; their op-list occurrence is skipped.
+        let mut fused: Vec<(BufId, BufId)> = Vec::new();
         for (local_step, st) in s.steps.iter().enumerate() {
             let step = step_off + local_step;
-            for m in st.ops[proc].iter().flat_map(|o| o.micro()) {
-                match m {
-                    MicroOp::Send { to, bufs: ids } => {
-                        let payload = self.build_payload(ids);
-                        transport.send(to, step, payload);
-                    }
-                    MicroOp::Recv { from, bufs: ids } => {
-                        let payload = transport.recv(step, from)?;
-                        if payload.len() != ids.len() {
-                            return Err(ClusterError::Protocol {
+            let ops: &[Op] = &st.ops[proc];
+            fused.clear();
+            for oi in 0..ops.len() {
+                for m in ops[oi].micro() {
+                    match m {
+                        MicroOp::Send { to, bufs: ids } => {
+                            self.send_message(ids, proc, to, step, &st.ops[to], transport);
+                        }
+                        MicroOp::Recv { from, bufs: ids } => {
+                            self.recv_stream(
+                                &ops[oi + 1..],
                                 proc,
-                                detail: format!(
-                                    "step {step}: payload arity {} != expected {}",
-                                    payload.len(),
-                                    ids.len()
-                                ),
-                            });
+                                step,
+                                from,
+                                ids,
+                                wire_dst,
+                                transport,
+                                kernel,
+                                &mut fused,
+                            )?;
                         }
-                        for (&b, chunk) in ids.iter().zip(payload) {
-                            self.slots[b as usize] = Some(BufSlot::Shared(chunk));
+                        MicroOp::Reduce { dst, src } => {
+                            if let Some(i) = fused.iter().position(|&f| f == (dst, src)) {
+                                fused.swap_remove(i);
+                            } else {
+                                let place = wire_dst.get(dst as usize).copied().unwrap_or(false);
+                                self.reduce(dst, src, kernel, place);
+                            }
                         }
-                    }
-                    MicroOp::Reduce { dst, src } => {
-                        let place = wire_dst.get(dst as usize).copied().unwrap_or(false);
-                        self.reduce(dst, src, kernel, place);
-                    }
-                    MicroOp::Copy { dst, src } => self.copy(dst, src),
-                    MicroOp::Free { buf } => {
-                        self.slots[buf as usize] = None;
+                        MicroOp::Copy { dst, src } => {
+                            let place = wire_dst.get(dst as usize).copied().unwrap_or(false);
+                            self.copy(dst, src, place);
+                        }
+                        MicroOp::Free { buf } => {
+                            if let Some(BufSlot::Slab(sl)) = self.slots[buf as usize].take() {
+                                self.arena.free(sl);
+                            }
+                        }
                     }
                 }
             }
         }
         Ok(())
+    }
+
+    /// Post one message: monolithic (today's [`DataPlane::build_payload`])
+    /// when chunking is off, the largest buffer fits one chunk, or the
+    /// receiver cannot fuse any of the payload ([`chunk_pays`] — chunking
+    /// a pure-forward message pays per-frame overhead for zero overlap);
+    /// else a stream of `(idx, of)`-framed sub-payloads — shared backings
+    /// are sliced per frame (refcount bumps) and slab parts are copied
+    /// into one pooled sub-block per frame, so the receiver can start
+    /// combining while later frames are still being produced.
+    fn send_message(
+        &mut self,
+        ids: &[BufId],
+        proc: usize,
+        to: usize,
+        step: usize,
+        recv_ops: &[Op],
+        transport: &mut dyn Transport<T>,
+    ) {
+        let max_len = ids
+            .iter()
+            .map(|&b| match self.slots[b as usize].as_ref().expect("send of dead buffer") {
+                BufSlot::Slab(sl) => sl.len,
+                BufSlot::Owned(blk) => blk.len(),
+                BufSlot::Shared(c) => c.len(),
+            })
+            .max()
+            .unwrap_or(0);
+        let n_frames = match self.chunk_elems {
+            Some(c) if max_len > c && chunk_pays(recv_ops, proc) => max_len.div_ceil(c),
+            _ => 1,
+        };
+        if n_frames <= 1 {
+            let payload = self.build_payload(ids);
+            transport.send(to, step, Frame::WHOLE, payload);
+            return;
+        }
+        let c = self.chunk_elems.expect("n_frames > 1 implies a chunk budget");
+        // Freeze placed (Owned) blocks up front: every frame of them is
+        // then a zero-copy sub-view, exactly like the monolithic freeze.
+        for &b in ids {
+            if matches!(self.slots[b as usize], Some(BufSlot::Owned(_))) {
+                let Some(BufSlot::Owned(blk)) = self.slots[b as usize].take() else {
+                    unreachable!("matched Owned above")
+                };
+                let len = blk.len();
+                self.slots[b as usize] = Some(BufSlot::Shared(Chunk::new(blk.freeze(), 0, len)));
+            }
+        }
+        self.local.chunked_msgs += 1;
+        self.local.chunk_frames += n_frames as u64;
+        for k in 0..n_frames {
+            let lo = k * c;
+            let mut slab_total = 0usize;
+            for &b in ids {
+                if let Some(BufSlot::Slab(sl)) = &self.slots[b as usize] {
+                    slab_total += sl.len.saturating_sub(lo).min(c);
+                }
+            }
+            let mut wire = (slab_total > 0).then(|| BlockPool::take(&self.pool, slab_total));
+            let mut parts: Vec<Part<T>> = Vec::with_capacity(ids.len());
+            let mut cursor = 0usize;
+            for &b in ids {
+                match self.slots[b as usize].as_ref().expect("send of dead buffer") {
+                    BufSlot::Shared(ch) => {
+                        let sub = ch.len().saturating_sub(lo).min(c);
+                        if sub == 0 {
+                            parts.push(Part::Fwd(self.empty.clone()));
+                        } else {
+                            parts.push(Part::Fwd(ch.slice(lo, sub)));
+                        }
+                    }
+                    BufSlot::Slab(sl) => {
+                        let sub = sl.len.saturating_sub(lo).min(c);
+                        if sub == 0 {
+                            parts.push(Part::Fwd(self.empty.clone()));
+                        } else {
+                            let sl = *sl;
+                            let w = wire.as_mut().expect("wire block exists for slab parts");
+                            w.data_mut()[cursor..cursor + sub]
+                                .copy_from_slice(&self.arena.slice(sl)[lo..lo + sub]);
+                            self.local.copies += 1;
+                            self.local.elems += sub as u64;
+                            parts.push(Part::Fresh(cursor, sub));
+                            cursor += sub;
+                        }
+                    }
+                    BufSlot::Owned(_) => unreachable!("Owned slots frozen above"),
+                }
+            }
+            let frozen = wire.map(Block::freeze);
+            let payload: Payload<T> = parts
+                .into_iter()
+                .map(|p| match p {
+                    Part::Fwd(ch) => ch,
+                    Part::Fresh(off, len) => {
+                        Chunk::new(frozen.clone().expect("frozen wire block"), off, len)
+                    }
+                })
+                .collect();
+            transport.send(
+                to,
+                step,
+                Frame {
+                    idx: k as u32,
+                    of: n_frames as u32,
+                },
+                payload,
+            );
+        }
+    }
+
+    /// Consume one incoming message, streaming it frame by frame.
+    ///
+    /// Monolithic messages (`of == 1` — chunking off, or the payload fit
+    /// one chunk) adopt the shared chunks exactly as before. Multi-frame
+    /// messages are where the step's wire/ALU overlap happens: buffers
+    /// whose first use is a safe `Reduce` ([`plan_chunk_fusion`]) are
+    /// folded **per chunk** into their destination (slab, or pooled wire
+    /// block under send-aware placement) as each frame lands — the fold of
+    /// frame `k` runs while frames `k+1..` are still in flight — and the
+    /// covered `Reduce` ops are recorded in `fused` for [`run_steps`] to
+    /// skip. All other buffers gather their frames and are reassembled
+    /// into one shared block (correct, no overlap). Operand order per
+    /// element is identical to the monolithic path, so results stay
+    /// bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn recv_stream(
+        &mut self,
+        rest: &[Op],
+        proc: usize,
+        step: usize,
+        from: usize,
+        ids: &[BufId],
+        wire_dst: &[bool],
+        transport: &mut dyn Transport<T>,
+        kernel: &dyn CombineKernel<T>,
+        fused: &mut Vec<(BufId, BufId)>,
+    ) -> Result<(), ClusterError> {
+        let (frame, first) = transport.recv(step, from)?;
+        if first.len() != ids.len() {
+            return Err(ClusterError::Protocol {
+                proc,
+                detail: format!(
+                    "step {step}: payload arity {} != expected {}",
+                    first.len(),
+                    ids.len()
+                ),
+            });
+        }
+        if frame.of <= 1 {
+            for (&b, chunk) in ids.iter().zip(first) {
+                self.slots[b as usize] = Some(BufSlot::Shared(chunk));
+            }
+            return Ok(());
+        }
+        let n_frames = frame.of;
+        if frame.idx != 0 {
+            return Err(ClusterError::Protocol {
+                proc,
+                detail: format!(
+                    "step {step}: first frame from {from} has idx {} (of {n_frames})",
+                    frame.idx
+                ),
+            });
+        }
+        let plan = {
+            let slots = &self.slots;
+            plan_chunk_fusion(rest, ids, &|b| {
+                slots.get(b as usize).is_some_and(|s| s.is_some())
+            })
+        };
+        let mut states: Vec<RecvSlot<T>> = Vec::with_capacity(ids.len());
+        for (i, &b) in ids.iter().enumerate() {
+            states.push(match plan[i] {
+                Some(src) => {
+                    let src_len = match self.slots[src as usize]
+                        .as_ref()
+                        .expect("fusion source live")
+                    {
+                        BufSlot::Slab(sl) => sl.len,
+                        BufSlot::Owned(blk) => blk.len(),
+                        BufSlot::Shared(c) => c.len(),
+                    };
+                    let dst = if wire_dst.get(b as usize).copied().unwrap_or(false) {
+                        self.local.placed += 1;
+                        FuseDst::Wire(BlockPool::take(&self.pool, src_len))
+                    } else {
+                        FuseDst::Slab(self.arena.alloc(src_len))
+                    };
+                    self.local.streamed += 1;
+                    RecvSlot::Fuse { src, dst, off: 0 }
+                }
+                None => {
+                    self.local.gathered += 1;
+                    RecvSlot::Gather {
+                        parts: Vec::with_capacity(n_frames as usize),
+                    }
+                }
+            });
+        }
+        let mut payload = first;
+        let mut k = 0u32;
+        loop {
+            for (i, chunk) in payload.into_iter().enumerate() {
+                if chunk.is_empty() {
+                    continue;
+                }
+                match &mut states[i] {
+                    RecvSlot::Fuse { src, dst, off } => {
+                        self.fuse_chunk(dst, *src, *off, &chunk, kernel);
+                        *off += chunk.len();
+                    }
+                    RecvSlot::Gather { parts } => parts.push(chunk),
+                }
+            }
+            k += 1;
+            if k == n_frames {
+                break;
+            }
+            let (f, p) = transport.recv(step, from)?;
+            if f.of != n_frames || f.idx != k {
+                return Err(ClusterError::Protocol {
+                    proc,
+                    detail: format!(
+                        "step {step}: frame ({} of {}) from {from} while expecting \
+                         ({k} of {n_frames})",
+                        f.idx, f.of
+                    ),
+                });
+            }
+            if p.len() != ids.len() {
+                return Err(ClusterError::Protocol {
+                    proc,
+                    detail: format!(
+                        "step {step}: payload arity {} != expected {} (frame {k})",
+                        p.len(),
+                        ids.len()
+                    ),
+                });
+            }
+            payload = p;
+        }
+        for (i, st) in states.into_iter().enumerate() {
+            let b = ids[i];
+            match st {
+                RecvSlot::Fuse { src, dst, off } => {
+                    let want = match &dst {
+                        FuseDst::Wire(blk) => blk.len(),
+                        FuseDst::Slab(d) => d.len,
+                    };
+                    if off != want {
+                        return Err(ClusterError::Protocol {
+                            proc,
+                            detail: format!(
+                                "step {step}: buffer {b} streamed {off} elements but its \
+                                 reduce operand holds {want}"
+                            ),
+                        });
+                    }
+                    self.slots[b as usize] = Some(match dst {
+                        FuseDst::Wire(blk) => BufSlot::Owned(blk),
+                        FuseDst::Slab(d) => BufSlot::Slab(d),
+                    });
+                    fused.push((b, src));
+                }
+                RecvSlot::Gather { mut parts } => {
+                    let slot = if parts.len() == 1 {
+                        BufSlot::Shared(parts.pop().expect("one part"))
+                    } else if parts.is_empty() {
+                        BufSlot::Shared(self.empty.clone())
+                    } else {
+                        let total: usize = parts.iter().map(Chunk::len).sum();
+                        // Frames sliced off one shared backing (the sender
+                        // forwarded an already-frozen block piecewise) are
+                        // consecutive views of the same Arc — re-adopt one
+                        // spanning view instead of copying, restoring the
+                        // monolithic plane's zero-copy forward.
+                        let contiguous = parts.windows(2).all(|w| {
+                            Arc::ptr_eq(&w[0].block, &w[1].block)
+                                && w[0].off + w[0].len == w[1].off
+                        });
+                        if contiguous {
+                            BufSlot::Shared(Chunk {
+                                block: parts[0].block.clone(),
+                                off: parts[0].off,
+                                len: total,
+                            })
+                        } else {
+                            let mut blk = BlockPool::take(&self.pool, total);
+                            let mut cur = 0usize;
+                            for p in &parts {
+                                blk.data_mut()[cur..cur + p.len()]
+                                    .copy_from_slice(p.as_slice());
+                                cur += p.len();
+                            }
+                            BufSlot::Shared(Chunk::new(blk.freeze(), 0, total))
+                        }
+                    };
+                    self.slots[b as usize] = Some(slot);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold one arriving chunk (`a`, covering elements `[off, off+a.len())`
+    /// of the incoming buffer) with the matching range of local operand
+    /// `src` into the matching range of `dst` — the chunk-granular form of
+    /// the fused receive-reduce, same operand order (`received ⊕ local`).
+    fn fuse_chunk(
+        &mut self,
+        dst: &mut FuseDst<T>,
+        src: BufId,
+        off: usize,
+        a: &Chunk<T>,
+        kernel: &dyn CombineKernel<T>,
+    ) {
+        let len = a.len();
+        let a = a.as_slice();
+        match dst {
+            FuseDst::Wire(blk) => {
+                let out = &mut blk.data_mut()[off..off + len];
+                match self.slots[src as usize].as_ref().expect("fusion source live") {
+                    BufSlot::Slab(s) => kernel.fuse(out, a, &self.arena.slice(*s)[off..off + len]),
+                    BufSlot::Shared(c) => kernel.fuse(out, a, &c.as_slice()[off..off + len]),
+                    BufSlot::Owned(b) => kernel.fuse(out, a, &b.data()[off..off + len]),
+                }
+            }
+            FuseDst::Slab(d) => {
+                let d = *d;
+                match self.slots[src as usize].as_ref().expect("fusion source live") {
+                    BufSlot::Slab(s) => {
+                        let s = *s;
+                        let (dv, sv) = self.arena.disjoint_mut(d, s);
+                        kernel.fuse(&mut dv[off..off + len], a, &sv[off..off + len]);
+                    }
+                    BufSlot::Shared(c) => kernel.fuse(
+                        &mut self.arena.slice_mut(d)[off..off + len],
+                        a,
+                        &c.as_slice()[off..off + len],
+                    ),
+                    BufSlot::Owned(b) => kernel.fuse(
+                        &mut self.arena.slice_mut(d)[off..off + len],
+                        a,
+                        &b.data()[off..off + len],
+                    ),
+                }
+            }
+        }
     }
 
     /// Assemble one message: shared chunks are forwarded by refcount bump;
@@ -809,7 +1394,12 @@ impl<T: Element> DataPlane<T> {
         self.slots[dst as usize] = Some(new_d);
     }
 
-    fn copy(&mut self, dst: BufId, src: BufId) {
+    /// Duplicate `src` into fresh buffer `dst`. `place_wire` (the liveness
+    /// hint) applies to **slab-resident** sources: when the copy's next use
+    /// is a send (+ free), the duplicate is written straight into a pooled
+    /// wire block, so the send freezes it in place — one copy instead of a
+    /// slab→slab copy plus a later slab→wire copy.
+    fn copy(&mut self, dst: BufId, src: BufId, place_wire: bool) {
         let s_slot = self.slots[src as usize].take().expect("copy of dead buffer");
         let (src_back, dst_slot) = match s_slot {
             // Shared source: the copy is purely logical (refcount bump).
@@ -821,6 +1411,12 @@ impl<T: Element> DataPlane<T> {
                 let len = blk.len();
                 let c = Chunk::new(blk.freeze(), 0, len);
                 (BufSlot::Shared(c.clone()), BufSlot::Shared(c))
+            }
+            BufSlot::Slab(s) if place_wire => {
+                let mut blk = BlockPool::take(&self.pool, s.len);
+                blk.data_mut().copy_from_slice(self.arena.slice(s));
+                self.local.placed_copies += 1;
+                (BufSlot::Slab(s), BufSlot::Owned(blk))
             }
             BufSlot::Slab(s) => {
                 let d = self.arena.alloc(s.len);
@@ -855,6 +1451,73 @@ mod tests {
         let s3 = a.alloc(5);
         assert_eq!(s3.off, 0, "reset rewinds the bump cursor");
         assert_eq!(a.capacity(), cap, "reset retains capacity");
+    }
+
+    #[test]
+    fn arena_reclaims_freed_space() {
+        let mut a: Arena<f32> = Arena::new();
+        let s1 = a.alloc(8);
+        let s2 = a.alloc(8);
+        let s3 = a.alloc(8);
+        assert_eq!(a.high_water(), 24);
+        // Freeing the tail rewinds the bump cursor entirely.
+        a.free(s3);
+        let s3b = a.alloc(8);
+        assert_eq!(s3b.off, 16, "tail free rewinds the cursor");
+        assert_eq!(a.high_water(), 24);
+        // Freeing a middle slot parks it; an equal-size alloc reuses it.
+        a.free(s2);
+        let s2b = a.alloc(8);
+        assert_eq!(s2b.off, 8, "freed middle slot is reused");
+        assert_eq!(a.high_water(), 24, "no growth past the peak");
+        // Best fit: a smaller request splits a bigger free run.
+        a.free(s1);
+        let small = a.alloc(3);
+        assert_eq!(small.off, 0);
+        let rest = a.alloc(5);
+        assert_eq!(rest.off, 3, "remainder of the split is reused");
+        assert_eq!(a.high_water(), 24);
+        // Adjacent frees coalesce so a bigger request fits again.
+        a.free(small);
+        a.free(rest);
+        let back = a.alloc(8);
+        assert_eq!(back.off, 0, "coalesced run serves the full size");
+        // A long alternating alloc/free pattern stays at the live peak
+        // instead of the bump bound (the space-reclaiming property).
+        let mut a: Arena<f32> = Arena::new();
+        let mut live = a.alloc(16);
+        for _ in 0..100 {
+            let next = a.alloc(16);
+            a.free(live);
+            live = next;
+        }
+        assert!(
+            a.high_water() <= 32,
+            "peak {} must track peak-live (32), not the bump bound (1616)",
+            a.high_water()
+        );
+    }
+
+    #[test]
+    fn chunk_slicing_is_zero_copy_views() {
+        let pool = Arc::new(BlockPool::<f32>::new());
+        let mut b = BlockPool::take(&pool, 10);
+        for (i, x) in b.data_mut().iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let whole = Chunk::new(b.freeze(), 0, 10);
+        let mid = whole.slice(3, 4);
+        assert_eq!(mid.as_slice(), &[3.0, 4.0, 5.0, 6.0]);
+        let sub = mid.slice(1, 2);
+        assert_eq!(sub.as_slice(), &[4.0, 5.0]);
+        let empty = whole.slice(10, 0);
+        assert!(empty.is_empty());
+        drop(whole);
+        drop(mid);
+        assert_eq!(pool.parked(), 0, "sub-view keeps the block alive");
+        drop(sub);
+        drop(empty);
+        assert_eq!(pool.parked(), 1);
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod oracle;
 pub mod persistent;
 pub mod reducer;
 
-pub use arena::{CounterSnapshot, DataPlaneCounters};
+pub use arena::{CounterSnapshot, DataPlaneCounters, Frame};
 pub use persistent::{JobIo, PersistentCluster, PoolJob};
 pub use reducer::{NativeReducer, ReduceError, Reducer};
 
@@ -198,6 +198,17 @@ pub struct ExecOptions {
     /// next use is a send, making that send a zero-copy freeze. Off is
     /// only useful for A/B tests against the slab-materialize path.
     pub send_aware_placement: bool,
+    /// Chunked streaming budget, bytes per chunk (`None` = monolithic
+    /// messages, exactly the pre-chunking behavior). When set, any message
+    /// whose largest buffer exceeds the budget travels as a stream of
+    /// framed sub-blocks and eligible receive-reduces fold per chunk as
+    /// frames land, overlapping each step's wire time with its combine
+    /// time (see [`arena`]'s chunked-streaming docs). Results are
+    /// bit-identical either way. Tune together with the bucket size: a
+    /// budget around `optimal_bucket_bytes / P` splits each step's message
+    /// into a handful of frames; below ~16 KiB the per-frame overhead
+    /// outweighs the overlap.
+    pub chunk_bytes: Option<usize>,
     /// Optional sink for the call's [`DataPlaneCounters`]: after each
     /// `execute*` call the per-call pool's counts are added here.
     pub counters: Option<Arc<DataPlaneCounters>>,
@@ -209,6 +220,7 @@ impl Default for ExecOptions {
             recv_timeout: Duration::from_secs(10),
             fault: None,
             send_aware_placement: true,
+            chunk_bytes: None,
             counters: None,
         }
     }
@@ -276,6 +288,7 @@ pub(crate) fn fault_tag(
 struct Msg<T: Element> {
     step: usize,
     from: usize,
+    frame: arena::Frame,
     payload: arena::Payload<T>,
 }
 
@@ -492,32 +505,45 @@ struct WorkerJob<'a, T> {
 /// The scoped executor's [`arena::Transport`]: fault injection on the send
 /// side, timeout + protocol-window checks and an out-of-order stash on the
 /// receive side. The stash is shared across jobs (a fast peer may already
-/// be sending the next bucket's traffic).
+/// be sending the next bucket's traffic) and holds a **frame queue** per
+/// `(step, from)` key: frames of one chunked message arrive in order
+/// (channels are FIFO per sender) but interleave arbitrarily with other
+/// peers' traffic.
 struct ScopedTransport<'a, T: Element> {
     proc: usize,
     total_steps: usize,
     rx: mpsc::Receiver<Msg<T>>,
     txs: &'a [mpsc::Sender<Msg<T>>],
-    pending: HashMap<(usize, usize), arena::Payload<T>>,
+    pending: HashMap<(usize, usize), arena::FrameQueue<T>>,
     opts: &'a ExecOptions,
 }
 
 impl<T: Element> arena::Transport<T> for ScopedTransport<'_, T> {
-    fn send(&mut self, to: usize, step: usize, payload: arena::Payload<T>) {
+    fn send(&mut self, to: usize, step: usize, frame: arena::Frame, payload: arena::Payload<T>) {
         if let Some(tag) = fault_tag(&self.opts.fault, step, self.proc, to) {
             // A send can only fail if the receiver already exited —
             // surfaced on the receiver side as a timeout/panic.
             let _ = self.txs[to].send(Msg {
                 step: tag,
                 from: self.proc,
+                frame,
                 payload,
             });
         }
     }
 
-    fn recv(&mut self, step: usize, from: usize) -> Result<arena::Payload<T>, ClusterError> {
-        if let Some(pl) = self.pending.remove(&(step, from)) {
-            return Ok(pl);
+    fn recv(
+        &mut self,
+        step: usize,
+        from: usize,
+    ) -> Result<(arena::Frame, arena::Payload<T>), ClusterError> {
+        if let Some(q) = self.pending.get_mut(&(step, from)) {
+            if let Some(x) = q.pop_front() {
+                if q.is_empty() {
+                    self.pending.remove(&(step, from));
+                }
+                return Ok(x);
+            }
         }
         loop {
             let msg = self.rx.recv_timeout(self.opts.recv_timeout).map_err(|_| {
@@ -528,7 +554,7 @@ impl<T: Element> arena::Transport<T> for ScopedTransport<'_, T> {
                 }
             })?;
             if msg.step == step && msg.from == from {
-                return Ok(msg.payload);
+                return Ok((msg.frame, msg.payload));
             }
             // Valid global tags span 0..total_steps.
             if msg.step < step || msg.step >= self.total_steps {
@@ -541,7 +567,10 @@ impl<T: Element> arena::Transport<T> for ScopedTransport<'_, T> {
                     ),
                 });
             }
-            self.pending.insert((msg.step, msg.from), msg.payload);
+            self.pending
+                .entry((msg.step, msg.from))
+                .or_default()
+                .push_back((msg.frame, msg.payload));
         }
     }
 }
@@ -568,6 +597,9 @@ fn worker<T: Element>(
         pending: HashMap::new(),
         opts,
     };
+    let chunk_elems = opts
+        .chunk_bytes
+        .map(|b| crate::sched::stats::chunk_elems_for(b, std::mem::size_of::<T>()));
     let mut results = Vec::with_capacity(jobs.len());
     for job in jobs {
         let mut out = vec![T::default(); job.input.len()];
@@ -582,6 +614,7 @@ fn worker<T: Element>(
             job.input,
             job.step_off,
             wire_dst,
+            chunk_elems,
             &mut transport,
             kernel,
             &mut out,

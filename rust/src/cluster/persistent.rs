@@ -44,10 +44,12 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::cluster::arena::{self, Block, BlockPool, CounterSnapshot, DataPlane, NativeKernel, Payload};
+use crate::cluster::arena::{
+    self, Block, BlockPool, CounterSnapshot, DataPlane, Frame, FrameQueue, NativeKernel, Payload,
+};
 use crate::cluster::{fault_tag, ClusterError, Element, Fault, ReduceOp, SchedCache};
 use crate::sched::{
-    stats::{stats, wire_reduce_placement},
+    stats::{chunk_elems_for, stats, wire_reduce_placement},
     ProcSchedule,
 };
 
@@ -55,6 +57,7 @@ struct PMsg<T: Element> {
     gen: u64,
     step: usize,
     from: usize,
+    frame: Frame,
     payload: Payload<T>,
 }
 
@@ -75,15 +78,25 @@ pub trait JobIo<T: Element = f32> {
     fn fill(&mut self, job: usize, rank: usize, dst: &mut [T]);
 
     /// Consume rank `rank`'s fully reduced output for job `job`.
+    ///
+    /// Calls **stream in completion order**: each worker reports every
+    /// bucket the moment it finishes it, so `(job, rank)` pairs arrive
+    /// interleaved and unordered — early buckets unpack while later
+    /// buckets are still on the wire. Implementations must not assume
+    /// rank- or job-ordered delivery. Consequently a dispatch that
+    /// **fails** may already have collected some `(job, rank)` results
+    /// before the error surfaces: on `Err`, treat every output driven by
+    /// this io as indeterminate (refill / recompute before reuse).
     fn collect(&mut self, job: usize, rank: usize, src: &[T]);
 }
 
 /// Per-schedule worker hints, computed once on the coordinator side and
-/// shared with every worker: the arena pre-size bound
-/// (`total_alloc_units` per proc) and the send-aware reduce placement
-/// rows (per proc, per buffer).
+/// shared with every worker: the slab pre-size bound (peak concurrently
+/// **live** units per proc — the space-reclaiming arena tracks live data,
+/// not the bump bound) and the send-aware placement rows (per proc, per
+/// buffer).
 struct SchedHints {
-    alloc_units: Vec<u64>,
+    peak_units: Vec<u64>,
     wire_dst: Vec<Vec<bool>>,
 }
 
@@ -94,6 +107,8 @@ struct Job<T: Element> {
     gen: u64,
     op: ReduceOp,
     fault: Option<Fault>,
+    /// Chunked-streaming budget in elements (`None` = monolithic).
+    chunk_elems: Option<usize>,
     /// Total steps across all buckets (protocol tag window).
     total_steps: usize,
     /// (schedule, this rank's input) per bucket; inputs live in pooled
@@ -101,7 +116,11 @@ struct Job<T: Element> {
     buckets: Vec<(Arc<ProcSchedule>, Block<T>)>,
     /// `hints[bucket]` — see [`AllocHints`].
     hints: AllocHints,
-    reply: mpsc::Sender<(usize, Result<Block<T>, ClusterError>)>,
+    /// Per-bucket streaming replies: `(proc, bucket, result)` is sent the
+    /// moment the worker finishes that bucket, so the coordinator's
+    /// [`JobIo::collect`] overlaps early buckets' unpack with the tail of
+    /// the wire.
+    reply: mpsc::Sender<(usize, usize, Result<Block<T>, ClusterError>)>,
 }
 
 enum Cmd<T: Element> {
@@ -118,6 +137,9 @@ pub struct PersistentCluster<T: Element = f32> {
     recv_timeout: Duration,
     blocks: Arc<BlockPool<T>>,
     fault: Mutex<Option<Fault>>,
+    /// Chunked-streaming budget applied to subsequent calls, bytes
+    /// (mirrors [`super::ExecOptions::chunk_bytes`]).
+    chunk_bytes: Mutex<Option<usize>>,
     /// Serializes whole dispatches: workers drop traffic from *older*
     /// generations, so two interleaved calls would starve each other into
     /// timeouts. Held across [`PersistentCluster::execute_many_io`] so
@@ -167,9 +189,18 @@ impl<T: Element> PersistentCluster<T> {
             recv_timeout,
             blocks,
             fault: Mutex::new(None),
+            chunk_bytes: Mutex::new(None),
             dispatch: Mutex::new(()),
             alloc_hints: SchedCache::new(),
         }
+    }
+
+    /// Set (or clear) the chunked-streaming budget for subsequent calls:
+    /// messages whose largest buffer exceeds `bytes` travel as framed
+    /// chunk streams with per-chunk fused reduces (bit-identical results;
+    /// see [`super::ExecOptions::chunk_bytes`] for tuning guidance).
+    pub fn set_chunk_bytes(&self, bytes: Option<usize>) {
+        *self.chunk_bytes.lock().unwrap() = bytes;
     }
 
     pub fn size(&self) -> usize {
@@ -222,9 +253,14 @@ impl<T: Element> PersistentCluster<T> {
     /// (`ns[j]` = elements per rank), and `io` streams inputs in and
     /// results out through pooled blocks. All buckets run in one worker
     /// round-trip with no inter-bucket barrier; `io.fill` is called for
-    /// every (job, rank) before dispatch, `io.collect` for every
-    /// (job, rank) after all workers reply. When every job is empty the
-    /// dispatch is skipped and only `io.collect` runs (with empty slices).
+    /// every (job, rank) before dispatch, and `io.collect` **streams**: a
+    /// worker replies each bucket the moment it finishes it, and the
+    /// matching collect runs immediately — in completion order, possibly
+    /// interleaved across ranks and jobs — so early buckets unpack while
+    /// later buckets are still executing. On `Err`, collects that already
+    /// ran are not rolled back (see [`JobIo::collect`]). When every job is
+    /// empty the dispatch is skipped and only `io.collect` runs (with
+    /// empty slices).
     pub fn execute_many_io(
         &self,
         scheds: &[Arc<ProcSchedule>],
@@ -271,7 +307,7 @@ impl<T: Element> PersistentCluster<T> {
                 .iter()
                 .map(|s| {
                     self.alloc_hints.get_or_compute(s, || SchedHints {
-                        alloc_units: stats(s).total_alloc_units,
+                        peak_units: stats(s).peak_live_units,
                         wire_dst: wire_reduce_placement(s),
                     })
                 })
@@ -281,6 +317,11 @@ impl<T: Element> PersistentCluster<T> {
             .gen
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let fault = *self.fault.lock().unwrap();
+        let chunk_elems = self
+            .chunk_bytes
+            .lock()
+            .unwrap()
+            .map(|b| chunk_elems_for(b, std::mem::size_of::<T>()));
         // All fills complete before the first worker is dispatched (the
         // documented contract) — otherwise early workers would burn their
         // recv timeouts while a slow fill prepares a later rank's input.
@@ -305,6 +346,7 @@ impl<T: Element> PersistentCluster<T> {
                     gen,
                     op,
                     fault,
+                    chunk_elems,
                     total_steps,
                     buckets,
                     hints: hints.clone(),
@@ -313,25 +355,21 @@ impl<T: Element> PersistentCluster<T> {
                 .map_err(|_| ClusterError::WorkerPanic { proc })?;
         }
         drop(reply_tx);
+        // Streaming collection: every (rank, bucket) reply is unpacked the
+        // moment it lands, in completion order — a finished early bucket's
+        // `io.collect` overlaps the still-running tail of the dispatch.
         let deadline = self.recv_timeout * (scheds.len() as u32 + 1);
-        let mut per_proc: Vec<Option<Block<T>>> = (0..self.p).map(|_| None).collect();
-        for _ in 0..self.p {
-            let (proc, res) = reply_rx
+        for _ in 0..self.p * scheds.len() {
+            let (rank, ji, res) = reply_rx
                 .recv_timeout(deadline)
                 .map_err(|_| ClusterError::RecvTimeout {
                     proc: usize::MAX,
                     step: 0,
                     from: usize::MAX,
                 })?;
-            per_proc[proc] = Some(res?);
-        }
-        for (rank, blk) in per_proc.into_iter().enumerate() {
-            let blk = blk.expect("all replies collected");
-            let mut off = 0usize;
-            for (ji, &n) in ns.iter().enumerate() {
-                io.collect(ji, rank, &blk.data()[off..off + n]);
-                off += n;
-            }
+            let blk = res?;
+            debug_assert_eq!(blk.len(), ns[ji]);
+            io.collect(ji, rank, blk.data());
             // `blk` drops here and its storage parks back in the pool.
         }
         Ok(())
@@ -345,7 +383,8 @@ struct PoolJobRef<'a, T: Element> {
 }
 
 /// Compatibility [`JobIo`]: copy from borrowed per-rank vectors, collect
-/// into freshly allocated per-rank vectors.
+/// into pre-shaped per-rank vectors (replies stream in completion order,
+/// so slots are assigned by index, not pushed).
 struct SliceIo<'a, T: Element> {
     jobs: &'a [PoolJobRef<'a, T>],
     outs: Vec<Vec<Vec<T>>>,
@@ -357,8 +396,7 @@ impl<T: Element> JobIo<T> for SliceIo<'_, T> {
     }
 
     fn collect(&mut self, job: usize, rank: usize, src: &[T]) {
-        debug_assert_eq!(self.outs[job].len(), rank, "ranks collected in order");
-        self.outs[job].push(src.to_vec());
+        self.outs[job][rank] = src.to_vec();
     }
 }
 
@@ -392,7 +430,7 @@ impl<T: Element> PersistentCluster<T> {
         let ns: Vec<usize> = jobs.iter().map(|j| j.inputs[0].len()).collect();
         let mut io = SliceIo {
             jobs,
-            outs: (0..jobs.len()).map(|_| Vec::with_capacity(self.p)).collect(),
+            outs: (0..jobs.len()).map(|_| vec![Vec::new(); self.p]).collect(),
         };
         self.execute_many_io(&scheds, &ns, op, &mut io)?;
         Ok(io.outs)
@@ -424,25 +462,31 @@ struct PoolTransport<'a, T: Element> {
     fault: Option<Fault>,
     rx: &'a mpsc::Receiver<PMsg<T>>,
     peers: &'a [mpsc::Sender<PMsg<T>>],
-    pending: &'a mut HashMap<(u64, usize, usize), Payload<T>>,
+    pending: &'a mut HashMap<(u64, usize, usize), FrameQueue<T>>,
     timeout: Duration,
 }
 
 impl<T: Element> arena::Transport<T> for PoolTransport<'_, T> {
-    fn send(&mut self, to: usize, step: usize, payload: Payload<T>) {
+    fn send(&mut self, to: usize, step: usize, frame: Frame, payload: Payload<T>) {
         if let Some(tag) = fault_tag(&self.fault, step, self.proc, to) {
             let _ = self.peers[to].send(PMsg {
                 gen: self.gen,
                 step: tag,
                 from: self.proc,
+                frame,
                 payload,
             });
         }
     }
 
-    fn recv(&mut self, step: usize, from: usize) -> Result<Payload<T>, ClusterError> {
-        if let Some(pl) = self.pending.remove(&(self.gen, step, from)) {
-            return Ok(pl);
+    fn recv(&mut self, step: usize, from: usize) -> Result<(Frame, Payload<T>), ClusterError> {
+        if let Some(q) = self.pending.get_mut(&(self.gen, step, from)) {
+            if let Some(x) = q.pop_front() {
+                if q.is_empty() {
+                    self.pending.remove(&(self.gen, step, from));
+                }
+                return Ok(x);
+            }
         }
         loop {
             let msg = self.rx.recv_timeout(self.timeout).map_err(|_| {
@@ -459,11 +503,14 @@ impl<T: Element> arena::Transport<T> for PoolTransport<'_, T> {
             if msg.gen > self.gen {
                 // The coordinator already moved on to a newer call while we
                 // drain this one; stash for the job we'll pick up next.
-                self.pending.insert((msg.gen, msg.step, msg.from), msg.payload);
+                self.pending
+                    .entry((msg.gen, msg.step, msg.from))
+                    .or_default()
+                    .push_back((msg.frame, msg.payload));
                 continue;
             }
             if msg.step == step && msg.from == from {
-                return Ok(msg.payload);
+                return Ok((msg.frame, msg.payload));
             }
             // Valid same-generation tags span 0..total_steps, and a tag
             // below the current step is a duplicate (this rank already
@@ -480,7 +527,9 @@ impl<T: Element> arena::Transport<T> for PoolTransport<'_, T> {
                 });
             }
             self.pending
-                .insert((self.gen, msg.step, msg.from), msg.payload);
+                .entry((self.gen, msg.step, msg.from))
+                .or_default()
+                .push_back((msg.frame, msg.payload));
         }
     }
 }
@@ -497,13 +546,13 @@ fn worker_loop<T: Element>(
     // the out-of-order stash (older-generation entries pruned per call,
     // capacity retained).
     let mut plane = DataPlane::new(pool.clone());
-    let mut pending: HashMap<(u64, usize, usize), Payload<T>> = HashMap::new();
+    let mut pending: HashMap<(u64, usize, usize), FrameQueue<T>> = HashMap::new();
     while let Ok(cmd) = cmd_rx.recv() {
         let job = match cmd {
             Cmd::Job(j) => j,
             Cmd::Shutdown => break,
         };
-        let res = run_job(
+        run_job(
             proc,
             &job,
             &msg_rx,
@@ -513,14 +562,16 @@ fn worker_loop<T: Element>(
             &mut pending,
             &pool,
         );
-        let _ = job.reply.send((proc, res));
     }
 }
 
 /// Run every bucket of `job` back to back; message step tags carry the
 /// cumulative offset of the preceding buckets so `(gen, step, from)` stays
-/// unique across the whole call. Results for all buckets are packed into
-/// one pooled reply block.
+/// unique across the whole call. Each bucket's pooled result block is
+/// **replied individually the moment the bucket finishes** — the streaming
+/// half of [`JobIo::collect`] — and an error reply aborts the remaining
+/// buckets (the coordinator bails on the first error; generation
+/// filtering cleans up the aborted call's traffic).
 #[allow(clippy::too_many_arguments)]
 fn run_job<T: Element>(
     proc: usize,
@@ -529,25 +580,24 @@ fn run_job<T: Element>(
     peers: &[mpsc::Sender<PMsg<T>>],
     recv_timeout: Duration,
     plane: &mut DataPlane<T>,
-    pending: &mut HashMap<(u64, usize, usize), Payload<T>>,
+    pending: &mut HashMap<(u64, usize, usize), FrameQueue<T>>,
     pool: &Arc<BlockPool<T>>,
-) -> Result<Block<T>, ClusterError> {
+) {
     // Drop stale stashed traffic; keep anything from this or newer calls.
     pending.retain(|&(g, _, _), _| g >= job.gen);
-    // Pre-size the slab up front from the coordinator-provided hints: the
-    // bump bound is total_alloc_units scaled from units to elements.
+    // Pre-size the slab up front from the coordinator-provided hints:
+    // peak concurrently-live units (the space-reclaiming arena's working
+    // set) scaled from units to elements.
     for ((s, input), hint) in job.buckets.iter().zip(job.hints.iter()) {
         let n = input.len();
         if n == 0 {
             continue;
         }
-        let units = hint.alloc_units[proc] as usize;
+        let units = hint.peak_units[proc] as usize;
         let u = (s.n_units as usize).max(1);
         plane.reserve_elems(units * n.div_ceil(u));
     }
 
-    let total_n: usize = job.buckets.iter().map(|(_, b)| b.len()).sum();
-    let mut out = BlockPool::take(pool, total_n);
     let kernel = NativeKernel(job.op);
     let mut transport = PoolTransport {
         proc,
@@ -560,25 +610,35 @@ fn run_job<T: Element>(
         timeout: recv_timeout,
     };
     let mut step_off = 0usize;
-    let mut cursor = 0usize;
-    for ((s, input), hint) in job.buckets.iter().zip(job.hints.iter()) {
+    for (ji, ((s, input), hint)) in job.buckets.iter().zip(job.hints.iter()).enumerate() {
         let n = input.len();
-        if n > 0 {
+        let mut out = BlockPool::take(pool, n);
+        let res = if n > 0 {
             plane.run_schedule(
                 s,
                 proc,
                 input.data(),
                 step_off,
                 &hint.wire_dst[proc],
+                job.chunk_elems,
                 &mut transport,
                 &kernel,
-                &mut out.data_mut()[cursor..cursor + n],
-            )?;
-        }
-        cursor += n;
+                out.data_mut(),
+            )
+        } else {
+            Ok(())
+        };
         step_off += s.steps.len();
+        match res {
+            Ok(()) => {
+                let _ = job.reply.send((proc, ji, Ok(out)));
+            }
+            Err(e) => {
+                let _ = job.reply.send((proc, ji, Err(e)));
+                return;
+            }
+        }
     }
-    Ok(out)
 }
 
 #[cfg(test)]

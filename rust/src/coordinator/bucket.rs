@@ -144,6 +144,35 @@ pub fn optimal_bucket_bytes(p: usize, params: &NetParams) -> usize {
     (m as usize).clamp(64 << 10, 64 << 20)
 }
 
+/// Cost-model-driven chunk size for the chunked streaming data plane
+/// (`ExecOptions::chunk_bytes`), given the per-step message size.
+///
+/// Splitting a step's `m`-byte message into `n` chunks lets the receiver
+/// overlap its combine with the wire: it saves up to `γ·m·(1 − 1/n)` of
+/// serial reduce time while paying one extra per-frame envelope `α` per
+/// added chunk. Minimizing `(n−1)·α − γ·m·(1 − 1/n)` gives
+/// `n* = √(γ·m/α)`; the returned chunk size is `m/n*`, clamped to a
+/// practical `[16 KiB, m]` range (below the lower clamp the per-frame
+/// overhead always dominates the overlap). When `n* ≤ 1` — small messages
+/// or `γ·m < α` — chunking cannot pay and the message size itself is
+/// returned (one frame).
+///
+/// For the bucketed multi-tensor path, the per-step message of a bucket of
+/// `B` bytes on `P` processes is about `B/P` (reduce-scatter chunks), so a
+/// good communicator-level setting is
+/// `optimal_chunk_bytes(optimal_bucket_bytes(p, params) / p, params)`.
+pub fn optimal_chunk_bytes(step_msg_bytes: usize, params: &NetParams) -> usize {
+    let m = step_msg_bytes.max(1);
+    let n_star = (params.gamma * m as f64 / params.alpha).sqrt();
+    if n_star <= 1.0 {
+        return m;
+    }
+    // Lower clamp capped at `m` itself: messages under 16 KiB never chunk
+    // regardless of the parameter regime (and `clamp` needs `min <= max`).
+    let lo = (16usize << 10).min(m);
+    ((m as f64 / n_star) as usize).clamp(lo, m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +252,31 @@ mod tests {
             unpack_into(&flat, b, &mut rebuilt);
         }
         assert_eq!(rebuilt, tensors);
+    }
+
+    #[test]
+    fn optimal_chunk_bytes_trades_overlap_against_frame_overhead() {
+        let params = NetParams::table2();
+        // Small step messages: γ·m < α — chunking cannot pay, one frame.
+        assert_eq!(optimal_chunk_bytes(64 << 10, &params), 64 << 10);
+        // Messages below the 16 KiB lower clamp never chunk, even under
+        // parameter regimes where n* > 1 (no clamp panic).
+        let fast_reduce = NetParams {
+            alpha: 1e-6,
+            beta: 1e-8,
+            gamma: 1e-9,
+        };
+        assert_eq!(optimal_chunk_bytes(8 << 10, &fast_reduce), 8 << 10);
+        // Large step messages: a handful of frames, each ≥ the lower clamp
+        // and smaller than the message.
+        let m = 4 << 20;
+        let c = optimal_chunk_bytes(m, &params);
+        assert!(c >= 16 << 10 && c < m, "chunk {c} for message {m}");
+        let n = m.div_ceil(c);
+        assert!((2..=64).contains(&n), "frame count {n}");
+        // Bigger messages chunk more finely in frame count.
+        let c2 = optimal_chunk_bytes(4 * m, &params);
+        assert!((4 * m).div_ceil(c2) > n);
     }
 
     #[test]

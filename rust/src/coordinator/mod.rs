@@ -108,6 +108,7 @@ pub struct CommunicatorBuilder {
     openmpi_threshold: usize,
     bucket_bytes: Option<usize>,
     segments: Option<u32>,
+    chunk_bytes: Option<usize>,
 }
 
 impl CommunicatorBuilder {
@@ -139,6 +140,18 @@ impl CommunicatorBuilder {
         self.segments = Some(s.max(1));
         self
     }
+    /// Chunked-streaming budget, bytes per chunk, applied to **both**
+    /// execution backends (the scoped executor and every per-dtype warm
+    /// pool): messages larger than the budget travel as framed chunk
+    /// streams whose receive-reduces fold per chunk as frames land —
+    /// overlapping wire and combine time inside every step, with
+    /// bit-identical results (default: off; see
+    /// [`crate::cluster::ExecOptions::chunk_bytes`] and
+    /// [`bucket::optimal_chunk_bytes`] for tuning).
+    pub fn chunk_bytes(mut self, bytes: usize) -> Self {
+        self.chunk_bytes = Some(bytes.max(1));
+        self
+    }
 
     pub fn build(self) -> Result<Communicator, String> {
         let group = self.group.unwrap_or_else(|| Group::cyclic(self.p));
@@ -161,7 +174,11 @@ impl CommunicatorBuilder {
             openmpi_threshold: self.openmpi_threshold,
             bucket_bytes: self.bucket_bytes,
             segments: self.segments,
-            exec: ClusterExecutor::new(),
+            chunk_bytes: self.chunk_bytes,
+            exec: ClusterExecutor::with_options(cluster::ExecOptions {
+                chunk_bytes: self.chunk_bytes,
+                ..cluster::ExecOptions::default()
+            }),
             cache: Mutex::new(HashMap::new()),
             pools: Mutex::new(HashMap::new()),
             stat_cache: Mutex::new(HashMap::new()),
@@ -178,6 +195,7 @@ pub struct Communicator {
     openmpi_threshold: usize,
     bucket_bytes: Option<usize>,
     segments: Option<u32>,
+    chunk_bytes: Option<usize>,
     exec: ClusterExecutor,
     /// Schedule cache keyed by resolved algorithm label (base schedules)
     /// or label + pipeline depth (pipelined expansions).
@@ -205,6 +223,7 @@ impl Communicator {
             openmpi_threshold: 10 * 1024,
             bucket_bytes: None,
             segments: None,
+            chunk_bytes: None,
         }
     }
 
@@ -509,7 +528,9 @@ impl Communicator {
     fn persistent_pool<T: Element>(&self) -> Arc<PersistentCluster<T>> {
         let mut guard = self.pools.lock().unwrap();
         let entry = guard.entry(TypeId::of::<T>()).or_insert_with(|| {
-            Arc::new(PersistentCluster::<T>::new(self.p)) as Arc<dyn Any + Send + Sync>
+            let pool = PersistentCluster::<T>::new(self.p);
+            pool.set_chunk_bytes(self.chunk_bytes);
+            Arc::new(pool) as Arc<dyn Any + Send + Sync>
         });
         entry
             .clone()
@@ -550,6 +571,12 @@ impl Communicator {
     /// tensors and wants the reduced values in place (gradient sync);
     /// `allreduce_many` remains for callers that need the inputs preserved
     /// or custom reducers.
+    ///
+    /// On `Err` the tensor list is **indeterminate**: results stream back
+    /// per bucket as workers finish, so buckets that completed before the
+    /// failure already hold reduced values while the rest keep their
+    /// inputs. Refill the tensors (e.g. rerun the backward pass) before
+    /// retrying — don't re-reduce the mixed state.
     pub fn allreduce_many_inplace<T: Element>(
         &self,
         inputs: &mut [Vec<Vec<T>>],

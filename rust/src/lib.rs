@@ -27,7 +27,7 @@
 //! | [`cost`] | α–β–γ cost model (paper Table 2), closed-form step/byte/time formulas (eqs. 15, 25, 36, 44), optimal-r selection (eq. 37) |
 //! | [`des`] | discrete-event network simulator executing a schedule under the cost model with per-process clocks |
 //! | [`cluster`] | a real multi-threaded message-passing cluster executing schedules on actual data; barrier-free multi-bucket dispatch (`execute_many`) |
-//! | [`cluster::arena`] | the zero-copy data plane: per-worker slab arenas, sharded size-classed block pools, `Arc`-shared wire blocks, fused receive-reduce with send-aware placement (shared by both executors) |
+//! | [`cluster::arena`] | the zero-copy data plane: space-reclaiming slab arenas, sharded size-classed block pools, `Arc`-shared wire blocks, fused receive-reduce with send-aware placement, chunked streaming with per-chunk fused combines (shared by both executors) |
 //! | [`cluster::oracle`] | the clone-per-message reference data plane, kept as the differential-test oracle and bench baseline |
 //! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step); execution gated behind the `pjrt` feature |
 //! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
@@ -143,13 +143,56 @@
 //! hop of a Ring or segmented reduce-scatter — the fused result is written
 //! **directly into a pooled wire block**, and the later send freezes that
 //! block in place instead of copying slab→block: the clone plane's
-//! move-on-last-use zero-copy, recovered on the arena plane. Values that
-//! stay local land in the slab as before. Placement never changes operand
-//! order (bit-exactness is pinned by `tests/placement.rs` and the
-//! differential suite), and [`cluster::DataPlaneCounters`] — reachable via
-//! [`cluster::ExecOptions::counters`] or
-//! [`cluster::PersistentCluster::counters`] — count slab→block copies and
-//! wire-placed reduces.
+//! move-on-last-use zero-copy, recovered on the arena plane. The same
+//! liveness hint covers `Copy`-created buffers whose next use is a send
+//! (copy-then-forward hops duplicate straight into a wire block). Values
+//! that stay local land in the slab as before. Placement never changes
+//! operand order (bit-exactness is pinned by `tests/placement.rs` and the
+//! differential suite).
+//!
+//! **Chunked streaming (`chunk_bytes`):** with a chunk budget set
+//! ([`cluster::ExecOptions::chunk_bytes`],
+//! [`cluster::PersistentCluster::set_chunk_bytes`], or
+//! `Communicator::builder(p).chunk_bytes(..)` for both backends at once),
+//! a message whose largest buffer exceeds the budget travels as a stream
+//! of framed sub-blocks, and the receiver folds eligible receive-reduces
+//! **per chunk as frames land** instead of waiting for the whole payload:
+//!
+//! ```text
+//!   monolithic step:   |--------- wire m ---------||---- reduce m ----|
+//!
+//!   chunked step:      |-- c0 --|-- c1 --|-- c2 --|-- c3 --|   (wire)
+//!   (frame (k, of 4))           |⊕ c0 ___|⊕ c1 ___|⊕ c2 ___|⊕ c3|
+//!                                 combine overlaps the remaining wire
+//! ```
+//!
+//! Each frame `(chunk_idx, n_chunks)` carries every buffer's k-th slice:
+//! shared backings are sliced per frame (refcount bumps), slab parts copy
+//! into one pooled sub-block per frame, and a streamed fused reduce lands
+//! in its placed wire block or slab slot exactly as the monolithic one
+//! would — per-element operand order is unchanged, so chunked execution is
+//! **bit-identical** (pinned by `tests/chunking.rs`). Messages the
+//! receiver cannot fuse at all (pure forwards, e.g. allgather hops) are
+//! sent monolithic — chunking them would pay per-frame overhead for zero
+//! overlap; in a mixed payload, non-fusible buffers are reassembled from
+//! their frames. [`sched::stats::plan_chunk_fusion`] makes both calls,
+//! and the DES models the same decisions ([`des::simulate_chunked`]).
+//!
+//! *Tuning:* chunking pays when a chunk's combine time is meaningful
+//! against the per-frame envelope — `coordinator::bucket::optimal_chunk_bytes`
+//! picks the model-optimal size `m/√(γ·m/α)` for a per-step message of `m`
+//! bytes. For the bucketed multi-tensor path the per-step message is about
+//! `optimal_bucket_bytes / P`, so pair the two; below ~16 KiB per chunk the
+//! envelopes always dominate. `chunk_bytes = None` (the default) is exactly
+//! the monolithic plane, and `tests/alloc_regression.rs` still pins zero
+//! steady-state allocation.
+//!
+//! **Counters:** [`cluster::DataPlaneCounters`] — reachable via
+//! [`cluster::ExecOptions::counters`],
+//! [`cluster::PersistentCluster::counters`], or
+//! [`coordinator::Communicator::pool_counters`] — count slab→block copies,
+//! wire-placed reduces **and copies**, chunked messages/frames, streamed
+//! (overlapped) reduces, and gathered (reassembled) receives.
 //!
 //! **Element-type support matrix** (`T: `[`cluster::Element`]):
 //!

@@ -35,7 +35,7 @@ pub mod pipeline;
 pub mod stats;
 pub mod verify;
 
-pub use stats::ScheduleStats;
+pub use stats::{ChunkPlan, ScheduleStats};
 
 /// Identifier of a logical buffer. The same id names, on every process,
 /// that process's local piece of one distributed vector (paper eq. 3).

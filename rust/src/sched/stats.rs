@@ -7,7 +7,7 @@
 //! assert that the generated schedules achieve exactly the step/byte/flop
 //! counts the paper claims.
 
-use crate::sched::{MicroOp, ProcSchedule};
+use crate::sched::{BufId, MicroOp, Op, ProcSchedule};
 
 /// Aggregate schedule statistics.
 #[derive(Clone, Debug, PartialEq)]
@@ -139,34 +139,37 @@ pub fn stats(s: &ProcSchedule) -> ScheduleStats {
     }
 }
 
-/// Send-aware reduce placement hints for the arena data plane
+/// Send-aware placement hints for the arena data plane
 /// ([`crate::cluster::arena`]).
 ///
-/// `out[proc][buf]` is true when, on `proc`, buffer `buf` is reduced into
-/// and **later sent**: its fused receive-reduce result should materialize
-/// directly into a pooled wire block, so the send freezes it in place
-/// instead of paying a slab→block copy (the clone plane's move-on-last-use
-/// zero-copy, recovered for Ring/segmented schedules). The flag is a pure
-/// liveness fact — the executor only consults it when the reduce
-/// destination is a received (shared) payload, so a spurious flag on an
-/// init/copy buffer is harmless.
+/// `out[proc][buf]` is true when, on `proc`, buffer `buf` is **produced
+/// locally** — reduced into, or created by a `Copy` — and **later sent**:
+/// its materialization should go directly into a pooled wire block, so the
+/// send freezes it in place instead of paying a slab→block copy (the clone
+/// plane's move-on-last-use zero-copy, recovered for Ring/segmented
+/// schedules and for copy-then-forward hops). The flag is a pure liveness
+/// fact — the executor only consults it when it is about to materialize a
+/// writable slot (a fused receive-reduce, or a `Copy` out of the slab), so
+/// a spurious flag on any other buffer is harmless.
 ///
 /// One pass per process over the micro-op stream: program order makes
-/// "first reduce into `b` precedes this send of `b`" a simple
+/// "first reduce into / copy into `b` precedes this send of `b`" a simple
 /// seen-before check.
 pub fn wire_reduce_placement(s: &ProcSchedule) -> Vec<Vec<bool>> {
     let nb = s.max_buf_id() as usize;
     (0..s.p)
         .map(|proc| {
-            let mut reduced = vec![false; nb];
+            let mut produced = vec![false; nb];
             let mut flag = vec![false; nb];
             for step in &s.steps {
                 for m in step.ops[proc].iter().flat_map(|o| o.micro()) {
                     match m {
-                        MicroOp::Reduce { dst, .. } => reduced[dst as usize] = true,
+                        MicroOp::Reduce { dst, .. } | MicroOp::Copy { dst, .. } => {
+                            produced[dst as usize] = true
+                        }
                         MicroOp::Send { bufs, .. } => {
                             for &b in bufs {
-                                if reduced[b as usize] {
+                                if produced[b as usize] {
                                     flag[b as usize] = true;
                                 }
                             }
@@ -178,6 +181,263 @@ pub fn wire_reduce_placement(s: &ProcSchedule) -> Vec<Vec<bool>> {
             flag
         })
         .collect()
+}
+
+/// Decide, for one `Recv`, which received buffers a **chunked** executor
+/// may reduce per-chunk as frames land (the wire/ALU overlap the chunked
+/// data plane exists for), and with which local source operand.
+///
+/// `rest` is the receiving process's remaining op list for the step (the
+/// ops *after* the `Recv`), `ids` the received buffer list, and `live(b)`
+/// whether buffer `b` is materialized on this process at recv time.
+/// Returns, positionally for each received buffer, `Some(src)` when its
+/// first use is `Reduce { dst: buf, src }` **and** streaming that reduce is
+/// provably equivalent to the monolithic order:
+///
+/// * `src` is live now, is not part of this same message, and is not
+///   written (reduced into, copied into, or received) between the `Recv`
+///   and the fusing `Reduce`;
+/// * the received buffer's raw value is not observed first — not sent,
+///   not copied from, not read as a reduce source, not freed — before that
+///   `Reduce`.
+///
+/// Anything else returns `None` for that buffer: the executor then
+/// reassembles the frames into one shared block (always correct, no
+/// overlap). Both the real executors and the DES chunk model call this, so
+/// simulated and executed overlap decisions never diverge.
+pub fn plan_chunk_fusion(
+    rest: &[Op],
+    ids: &[BufId],
+    live: &dyn Fn(BufId) -> bool,
+) -> Vec<Option<BufId>> {
+    let mut plan: Vec<Option<BufId>> = vec![None; ids.len()];
+    let mut decided = vec![false; ids.len()];
+    // Buffers written after the Recv (stale-operand guard for `src`).
+    let mut written: Vec<BufId> = Vec::new();
+    let undecided =
+        |b: BufId, decided: &[bool]| ids.iter().position(|&x| x == b).filter(|&i| !decided[i]);
+    for m in rest.iter().flat_map(|o| o.micro()) {
+        match m {
+            MicroOp::Send { bufs, .. } => {
+                for &b in bufs {
+                    if let Some(i) = undecided(b, &decided) {
+                        decided[i] = true; // raw value forwarded first
+                    }
+                }
+            }
+            MicroOp::Recv { bufs, .. } => written.extend_from_slice(bufs),
+            MicroOp::Reduce { dst, src } => {
+                if let Some(i) = undecided(dst, &decided) {
+                    decided[i] = true;
+                    if !ids.contains(&src) && !written.contains(&src) && live(src) {
+                        plan[i] = Some(src);
+                    }
+                }
+                if let Some(i) = undecided(src, &decided) {
+                    decided[i] = true; // raw value read as an operand first
+                }
+                written.push(dst);
+            }
+            MicroOp::Copy { dst, src } => {
+                if let Some(i) = undecided(src, &decided) {
+                    decided[i] = true; // raw value duplicated first
+                }
+                written.push(dst);
+            }
+            MicroOp::Free { buf } => {
+                if let Some(i) = undecided(buf, &decided) {
+                    decided[i] = true; // received then dropped unused
+                }
+            }
+        }
+        if decided.iter().all(|&d| d) {
+            break;
+        }
+    }
+    plan
+}
+
+/// Could chunking a message from `proc` do its receiver any good?
+///
+/// `recv_ops` is the receiver's full op list for the step. Finds the
+/// paired `Recv { from: proc }` and runs the **optimistic** fusion
+/// lookahead (every source assumed live): if not even one received buffer
+/// could fold per chunk, the message is pure forward/gather traffic and
+/// chunking it would pay per-frame overhead for zero overlap — the sender
+/// then stays monolithic. Deterministic over the schedule alone, so the
+/// sending executor, the DES chunk model, and [`chunk_plan`] all agree on
+/// which messages are framed.
+pub fn chunk_pays(recv_ops: &[Op], proc: usize) -> bool {
+    for (ri, op) in recv_ops.iter().enumerate() {
+        for m in op.micro() {
+            if let MicroOp::Recv { from, bufs } = m {
+                if from == proc {
+                    return plan_chunk_fusion(&recv_ops[ri + 1..], bufs, &|_| true)
+                        .iter()
+                        .any(Option::is_some);
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Elements per chunk for a byte budget and element width (≥ 1).
+pub fn chunk_elems_for(chunk_bytes: usize, elem_bytes: usize) -> usize {
+    (chunk_bytes / elem_bytes.max(1)).max(1)
+}
+
+/// Frames a message whose largest buffer holds `max_len` elements splits
+/// into under a `chunk_elems` budget (1 = monolithic; empty messages are
+/// a single frame).
+pub fn n_chunks(max_len: usize, chunk_elems: usize) -> usize {
+    max_len.div_ceil(chunk_elems.max(1)).max(1)
+}
+
+/// Static chunking analysis of one schedule at a concrete message size —
+/// the planning artifact behind `ExecOptions::chunk_bytes`: how many
+/// frames the chunked data plane will put on the wire, and how much pooled
+/// wire storage the frames of one step can pin per process. Consumed by
+/// the chunking bench artifact (`BENCH_chunking.json`) and diagnostics;
+/// all element counts are the same `ceil(n/U)`-per-unit upper bound the
+/// arena pre-sizer uses, so `peak_wire_elems` is also a usable warm-up
+/// bound for a future `BlockPool` prefill.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkPlan {
+    /// The chunk budget, elements.
+    pub chunk_elems: usize,
+    /// Messages that split into ≥ 2 frames (whole schedule, all procs).
+    pub chunked_messages: u64,
+    /// Total frames across all messages (monolithic message = 1 frame).
+    pub total_frames: u64,
+    /// Per-step maximum over processes of frames sent by one process.
+    pub step_max_frames: Vec<u32>,
+    /// Largest single frame payload, elements.
+    pub max_frame_elems: usize,
+    /// Per-process peak pooled wire elements one step's outgoing frames
+    /// can hold at once (every frame of a step may be in flight together).
+    pub peak_wire_elems: Vec<u64>,
+}
+
+/// Compute the [`ChunkPlan`] for `s` moving vectors of `n_elems` elements
+/// with a `chunk_elems` chunk budget.
+pub fn chunk_plan(s: &ProcSchedule, n_elems: usize, chunk_elems: usize) -> ChunkPlan {
+    let c = chunk_elems.max(1);
+    // Elements-per-unit upper bound (matches the arena pre-size scaling).
+    let epu = n_elems.div_ceil((s.n_units as usize).max(1));
+    // Live buffer lengths in units, per proc — same walk as `stats`.
+    let mut len: Vec<std::collections::HashMap<u32, u32>> = vec![Default::default(); s.p];
+    for (proc, bufs) in s.init.iter().enumerate() {
+        for &(id, seg) in bufs {
+            len[proc].insert(id, seg.len);
+        }
+    }
+    let mut chunked_messages = 0u64;
+    let mut total_frames = 0u64;
+    let mut step_max_frames = Vec::with_capacity(s.steps.len());
+    let mut max_frame_elems = 0usize;
+    let mut peak_wire = vec![0u64; s.p];
+    for step in &s.steps {
+        let mut max_frames = 0u32;
+        let mut staged: Vec<(usize, u32, u32)> = Vec::new();
+        for (proc, ops) in step.ops.iter().enumerate() {
+            let mut frames_this_proc = 0u32;
+            let mut wire_this_step = 0u64;
+            // Walk this proc's ops in program order so a buffer created by
+            // a same-step `Copy` is sized before a later `Send` of it (the
+            // copy-then-forward shape). A `Copy` whose source length is not
+            // known yet (received this step) is deferred to the post-merge
+            // pass below; a same-step received-then-sent buffer has no
+            // sender-known length and sizes as 0 rather than panicking
+            // (builders emit sends before recvs, so neither occurs for
+            // in-crate schedules).
+            for m in ops.iter().flat_map(|o| o.micro()) {
+                match m {
+                    MicroOp::Send { to, bufs } => {
+                        let lens: Vec<usize> = bufs
+                            .iter()
+                            .map(|&b| {
+                                len[proc].get(&b).map_or(0, |&u| u as usize * epu)
+                            })
+                            .collect();
+                        let max_len = lens.iter().copied().max().unwrap_or(0);
+                        let mut frames = n_chunks(max_len, c);
+                        // Pure-forward messages are sent monolithic by the
+                        // executor (`chunk_pays`); mirror that here.
+                        if frames > 1 && !chunk_pays(&step.ops[to], proc) {
+                            frames = 1;
+                        }
+                        if frames > 1 {
+                            chunked_messages += 1;
+                        }
+                        total_frames += frames as u64;
+                        frames_this_proc += frames as u32;
+                        for k in 0..frames {
+                            // A monolithic frame carries the whole payload
+                            // even when buffers exceed the chunk budget
+                            // (the pure-forward case `chunk_pays` demotes).
+                            let fe: usize = if frames == 1 {
+                                lens.iter().sum()
+                            } else {
+                                lens.iter()
+                                    .map(|&l| l.saturating_sub(k * c).min(c))
+                                    .sum()
+                            };
+                            max_frame_elems = max_frame_elems.max(fe);
+                            wire_this_step += fe as u64;
+                        }
+                        let recv =
+                            step.ops[to].iter().flat_map(|o| o.micro()).find_map(|o| match o {
+                                MicroOp::Recv { from, bufs: rb } if from == proc => Some(rb),
+                                _ => None,
+                            });
+                        if let Some(rb) = recv {
+                            for (&rid, &sid) in rb.iter().zip(bufs) {
+                                staged.push((to, rid, len[proc].get(&sid).copied().unwrap_or(0)));
+                            }
+                        }
+                    }
+                    MicroOp::Copy { dst, src } => {
+                        if let Some(&l) = len[proc].get(&src) {
+                            len[proc].insert(dst, l);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            max_frames = max_frames.max(frames_this_proc);
+            peak_wire[proc] = peak_wire[proc].max(wire_this_step);
+        }
+        for (proc, id, l) in staged {
+            len[proc].insert(id, l);
+        }
+        // Post-merge pass: deferred copies (source received this step) and
+        // the step's frees.
+        for (proc, ops) in step.ops.iter().enumerate() {
+            for m in ops.iter().flat_map(|o| o.micro()) {
+                match m {
+                    MicroOp::Copy { dst, src } => {
+                        if let Some(&l) = len[proc].get(&src) {
+                            len[proc].insert(dst, l);
+                        }
+                    }
+                    MicroOp::Free { buf } => {
+                        len[proc].remove(&buf);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        step_max_frames.push(max_frames);
+    }
+    ChunkPlan {
+        chunk_elems: c,
+        chunked_messages,
+        total_frames,
+        step_max_frames,
+        max_frame_elems,
+        peak_wire_elems: peak_wire,
+    }
 }
 
 #[cfg(test)]
@@ -212,6 +472,141 @@ mod tests {
         // then frees `mine`: peak 2 live, 2 ever materialized.
         assert_eq!(st.peak_live_units, vec![2, 2]);
         assert_eq!(st.total_alloc_units, vec![2, 2]);
+    }
+
+    #[test]
+    fn chunk_fusion_plan_fuses_only_safe_reduces() {
+        use std::sync::Arc;
+        // Received bufs 10 and 11; local live bufs 1, 2.
+        let live = |b: BufId| b == 1 || b == 2;
+        // 10 reduced with live src 1 → fusible. 11 sent raw first → not.
+        let rest = [
+            Op::send(3, vec![11]),
+            Op::Reduce { dst: 10, src: 1 },
+            Op::Reduce { dst: 11, src: 2 },
+        ];
+        assert_eq!(plan_chunk_fusion(&rest, &[10, 11], &live), vec![Some(1), None]);
+        // src written between recv and reduce → stale operand → not fusible.
+        let rest = [
+            Op::Reduce { dst: 1, src: 2 },
+            Op::Reduce { dst: 10, src: 1 },
+        ];
+        assert_eq!(plan_chunk_fusion(&rest, &[10], &live), vec![None]);
+        // src is part of the same message → not fusible (either side).
+        let rest = [Op::Reduce { dst: 10, src: 11 }];
+        assert_eq!(plan_chunk_fusion(&rest, &[10, 11], &live), vec![None, None]);
+        // src not live at recv time (received later this step) → not fusible.
+        let rest = [Op::Reduce { dst: 10, src: 7 }];
+        assert_eq!(plan_chunk_fusion(&rest, &[10], &live), vec![None]);
+        // Raw value read as a source / copied / freed first → not fusible.
+        let rest = [
+            Op::Reduce { dst: 1, src: 10 },
+            Op::Reduce { dst: 10, src: 2 },
+        ];
+        assert_eq!(plan_chunk_fusion(&rest, &[10], &live), vec![None]);
+        let rest = [
+            Op::Copy { dst: 5, src: 10 },
+            Op::Reduce { dst: 10, src: 1 },
+        ];
+        assert_eq!(plan_chunk_fusion(&rest, &[10], &live), vec![None]);
+        // ReduceMany behaves like its scalar run.
+        let rest = [Op::ReduceMany {
+            pairs: Arc::new(vec![(10, 1), (11, 2)]),
+        }];
+        assert_eq!(
+            plan_chunk_fusion(&rest, &[10, 11], &live),
+            vec![Some(1), Some(2)]
+        );
+    }
+
+    #[test]
+    fn chunk_plan_counts_frames_and_degenerates_to_one() {
+        let mut b = ScheduleBuilder::new(2, 1, "cp");
+        let seg = Segment::new(0, 1);
+        let mine = b.init_buf_per_proc(&[seg, seg]);
+        b.begin_step();
+        let g0 = b.fresh();
+        let g1 = b.fresh();
+        for p in 0..2 {
+            let got = if p == 0 { g0 } else { g1 };
+            b.op(p, Op::send(1 - p, vec![mine]));
+            b.op(p, Op::recv(1 - p, vec![got]));
+            b.op(p, Op::Reduce { dst: got, src: mine });
+            b.op(p, Op::Free { buf: mine });
+        }
+        b.end_step();
+        let s = b.finish(vec![vec![g0], vec![g1]]);
+        // 100-elem message, 32-elem chunks → 4 frames per message.
+        let cp = chunk_plan(&s, 100, 32);
+        assert_eq!(cp.chunked_messages, 2);
+        assert_eq!(cp.total_frames, 8);
+        assert_eq!(cp.step_max_frames, vec![4]);
+        assert_eq!(cp.max_frame_elems, 32);
+        assert_eq!(cp.peak_wire_elems, vec![100, 100]);
+        // A chunk budget ≥ the message degenerates to one frame.
+        let cp = chunk_plan(&s, 100, 1000);
+        assert_eq!(cp.chunked_messages, 0);
+        assert_eq!(cp.total_frames, 2);
+        assert_eq!(cp.max_frame_elems, 100);
+        // Helper math.
+        assert_eq!(chunk_elems_for(1024, 4), 256);
+        assert_eq!(chunk_elems_for(1, 8), 1);
+        assert_eq!(n_chunks(0, 16), 1);
+        assert_eq!(n_chunks(16, 16), 1);
+        assert_eq!(n_chunks(17, 16), 2);
+    }
+
+    #[test]
+    fn chunk_pays_only_when_receiver_can_fuse() {
+        // Receiver reduces the received buffer → chunking pays.
+        let ops = [
+            Op::send(1, vec![0]),
+            Op::recv(0, vec![5]),
+            Op::Reduce { dst: 5, src: 0 },
+        ];
+        assert!(chunk_pays(&ops, 0));
+        // Pure forward: received then dropped — nothing to fuse.
+        let ops = [Op::recv(0, vec![5]), Op::Free { buf: 5 }];
+        assert!(!chunk_pays(&ops, 0));
+        // Received and never used this step (forwarded next step) — no fuse.
+        let ops = [Op::recv(0, vec![5])];
+        assert!(!chunk_pays(&ops, 0));
+        // No paired recv from this sender at all.
+        let ops = [Op::send(1, vec![0])];
+        assert!(!chunk_pays(&ops, 0));
+        let ops = [Op::recv(2, vec![5]), Op::Reduce { dst: 5, src: 0 }];
+        assert!(!chunk_pays(&ops, 0));
+    }
+
+    /// A buffer `Copy`-created and sent within the same step (the
+    /// copy-then-forward shape `tests/placement.rs` executes) must be
+    /// sized in program order, not panic on a missing length.
+    #[test]
+    fn chunk_plan_handles_same_step_copy_then_send() {
+        let mut b = ScheduleBuilder::new(2, 1, "copy-fwd");
+        let seg = Segment::new(0, 1);
+        let mine = b.init_buf_per_proc(&[seg, seg]);
+        b.begin_step();
+        let d0 = b.fresh();
+        let d1 = b.fresh();
+        let g0 = b.fresh();
+        let g1 = b.fresh();
+        for p in 0..2usize {
+            let (dup, got) = if p == 0 { (d0, g0) } else { (d1, g1) };
+            b.op(p, Op::Copy { dst: dup, src: mine });
+            b.op(p, Op::send(1 - p, vec![dup]));
+            b.op(p, Op::recv(1 - p, vec![got]));
+            b.op(p, Op::Reduce { dst: got, src: mine });
+            b.op(p, Op::Free { buf: dup });
+            b.op(p, Op::Free { buf: mine });
+        }
+        b.end_step();
+        let s = b.finish(vec![vec![g0], vec![g1]]);
+        let cp = chunk_plan(&s, 40, 16);
+        // The copied 40-elem buffer travels as 3 frames per rank.
+        assert_eq!(cp.chunked_messages, 2);
+        assert_eq!(cp.total_frames, 6);
+        assert_eq!(cp.max_frame_elems, 16);
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! Chunked streaming data plane: bit-exactness, degeneration, and the
+//! overlap counters.
+//!
+//! The chunked path changes *when* bytes move and combines run — per
+//! `(chunk_idx, n_chunks)`-framed sub-block instead of per monolithic
+//! message — but never the per-element operand order. These tests pin
+//! that contract the same way the arena plane itself is pinned:
+//!
+//! 1. **Differential sweep** — P ∈ 2..=17 × every algorithm × every op,
+//!    with a chunk size that divides nothing evenly: chunked execution is
+//!    bit-identical to the unchunked arena path and to the clone oracle
+//!    (`cluster::oracle`), for f32 and (exactly) for i32.
+//! 2. **Degeneration** — `chunk_bytes` larger than every message, and
+//!    `chunk_bytes = None`, take the monolithic path exactly (no chunked
+//!    messages counted, bit-identical results).
+//! 3. **Counters** — chunked runs report chunked messages/frames and
+//!    streamed (overlapped) reduces; fault detection still works across
+//!    chunked frames; the persistent pool and the coordinator knob drive
+//!    the same engine.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use permallreduce::cluster::{
+    oracle, ClusterExecutor, DataPlaneCounters, ExecOptions, Fault, PersistentCluster, PoolJob,
+    ReduceOp,
+};
+use permallreduce::coordinator::Communicator;
+use permallreduce::util::Rng;
+
+/// Payloads near 1.0 keep `Prod` well-conditioned across 17 factors.
+fn payloads(rng: &mut Rng, p: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..p)
+        .map(|_| (0..n).map(|_| 0.5 + rng.f32()).collect())
+        .collect()
+}
+
+fn chunked_exec(chunk_bytes: Option<usize>) -> (ClusterExecutor, Arc<DataPlaneCounters>) {
+    let counters = Arc::new(DataPlaneCounters::default());
+    let exec = ClusterExecutor::with_options(ExecOptions {
+        chunk_bytes,
+        counters: Some(counters.clone()),
+        ..ExecOptions::default()
+    });
+    (exec, counters)
+}
+
+/// The heart of the acceptance criteria: chunk sizes that do not divide
+/// the bucket (7 f32 elements per chunk against `n = 2P + 3`) must be
+/// bit-identical to the unchunked arena path *and* the clone oracle for
+/// every P × kind × op.
+#[test]
+fn chunked_bit_matches_unchunked_and_oracle_for_every_p_kind_op() {
+    let (chunked, counters) = chunked_exec(Some(7 * 4));
+    let plain = ClusterExecutor::new();
+    let mut rng = Rng::new(0xC40C);
+    for p in 2..=17usize {
+        let n = 2 * p + 3;
+        for kind in AlgorithmKind::all() {
+            let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+            for op in ReduceOp::all() {
+                let xs = payloads(&mut rng, p, n);
+                let want = oracle::execute_reference(&s, &xs, op)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: oracle failed: {e}"));
+                let base = plain
+                    .execute(&s, &xs, op)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: unchunked failed: {e}"));
+                let got = chunked
+                    .execute(&s, &xs, op)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: chunked failed: {e}"));
+                for rank in 0..p {
+                    for (i, ((g, b), w)) in
+                        got[rank].iter().zip(&base[rank]).zip(&want[rank]).enumerate()
+                    {
+                        assert_eq!(
+                            g.to_bits(),
+                            b.to_bits(),
+                            "chunked vs unchunked: P={p} {kind:?} {op:?} rank {rank} elem {i}"
+                        );
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "chunked vs oracle: P={p} {kind:?} {op:?} rank {rank} elem {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    let snap = counters.snapshot();
+    assert!(snap.chunked_msgs > 0, "the sweep must exercise chunked sends");
+    assert!(
+        snap.chunk_frames >= 2 * snap.chunked_msgs,
+        "chunked messages carry ≥ 2 frames"
+    );
+    assert!(
+        snap.streamed_reduces > 0,
+        "the sweep must exercise per-chunk fused reduces"
+    );
+}
+
+/// Integer sums are exact, so any chunking mismatch is a protocol bug
+/// rather than float noise.
+#[test]
+fn chunked_integer_exactness_for_every_p_and_kind() {
+    let (chunked, _) = chunked_exec(Some(5 * 4));
+    let mut rng = Rng::new(0xC41E);
+    for p in 2..=17usize {
+        let n = 3 * p + 1;
+        for kind in AlgorithmKind::all() {
+            let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+            let xs: Vec<Vec<i32>> = (0..p)
+                .map(|_| (0..n).map(|_| rng.below(2001) as i32 - 1000).collect())
+                .collect();
+            let want = oracle::execute_reference(&s, &xs, ReduceOp::Sum).unwrap();
+            let got = chunked.execute(&s, &xs, ReduceOp::Sum).unwrap();
+            for rank in 0..p {
+                assert_eq!(got[rank], want[rank], "P={p} {kind:?} rank {rank}");
+            }
+        }
+    }
+}
+
+/// `chunk_bytes` larger than every message degenerates to exactly one
+/// frame — same results, and the chunk counters stay at zero, proving the
+/// monolithic code path was taken. `None` behaves identically.
+#[test]
+fn oversized_chunk_budget_degenerates_to_monolithic() {
+    let p = 7;
+    let n = 3 * p + 2;
+    let s = Algorithm::new(AlgorithmKind::BwOptimal, p)
+        .build(&BuildCtx::default())
+        .unwrap();
+    let mut rng = Rng::new(0xDE6E);
+    let xs = payloads(&mut rng, p, n);
+    let want = oracle::execute_reference(&s, &xs, ReduceOp::Sum).unwrap();
+    for chunk_bytes in [Some(1 << 20), None] {
+        let (exec, counters) = chunked_exec(chunk_bytes);
+        let got = exec.execute(&s, &xs, ReduceOp::Sum).unwrap();
+        for rank in 0..p {
+            for (g, w) in got[rank].iter().zip(&want[rank]) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{chunk_bytes:?} rank {rank}");
+            }
+        }
+        let snap = counters.snapshot();
+        assert_eq!(snap.chunked_msgs, 0, "{chunk_bytes:?}: no chunked messages");
+        assert_eq!(snap.chunk_frames, 0, "{chunk_bytes:?}");
+        assert_eq!(snap.streamed_reduces, 0, "{chunk_bytes:?}");
+        assert_eq!(snap.gathered_recvs, 0, "{chunk_bytes:?}");
+    }
+}
+
+/// Ring under chunking: every reduce-scatter hop streams its fused
+/// receive-reduce (Ring's reduce source is always a live local chunk),
+/// every allgather hop — pure forward traffic the receiver cannot fuse —
+/// is sent monolithic (`chunk_pays` skips it), and send-aware placement
+/// still lands the streamed results in wire blocks. The counters tell the
+/// overlap story end to end.
+#[test]
+fn ring_streams_every_fused_reduce() {
+    let p = 6;
+    let n = 8 * p; // big enough that every reduce-scatter hop chunks
+    let s = Algorithm::new(AlgorithmKind::Ring, p).build(&BuildCtx::default()).unwrap();
+    let (exec, counters) = chunked_exec(Some(3 * 4));
+    let mut rng = Rng::new(0x5167);
+    let xs = payloads(&mut rng, p, n);
+    let want = oracle::execute_reference(&s, &xs, ReduceOp::Sum).unwrap();
+    let got = exec.execute(&s, &xs, ReduceOp::Sum).unwrap();
+    for rank in 0..p {
+        for (g, w) in got[rank].iter().zip(&want[rank]) {
+            assert_eq!(g.to_bits(), w.to_bits(), "rank {rank}");
+        }
+    }
+    let snap = counters.snapshot();
+    // Per rank: exactly P−1 chunked reduce-scatter messages, every one of
+    // them streaming its fused reduce; the P−1 allgather forwards stay
+    // monolithic (zero-copy adopt, nothing gathered).
+    assert_eq!(snap.chunked_msgs, (p * (p - 1)) as u64);
+    assert_eq!(snap.streamed_reduces, (p * (p - 1)) as u64);
+    assert_eq!(snap.gathered_recvs, 0);
+    // Placement still applies to streamed reduces: with the default
+    // options every fused reduce is wire-placed.
+    assert_eq!(snap.wire_placed_reduces, (p * (p - 1)) as u64);
+}
+
+/// Faults injected into a chunked message (all frames dropped or all
+/// frames mistagged) must still be detected.
+#[test]
+fn chunked_faults_are_detected() {
+    let p = 5;
+    let s = Algorithm::new(AlgorithmKind::Ring, p).build(&BuildCtx::default()).unwrap();
+    let mut rng = Rng::new(0xFA57);
+    let xs = payloads(&mut rng, p, 40);
+    for fault in [
+        Fault::DropMessage { step: 1, from: 2, to: 3 },
+        Fault::MisTagMessage { step: 1, from: 2, to: 3 },
+    ] {
+        let exec = ClusterExecutor::with_options(ExecOptions {
+            chunk_bytes: Some(4 * 4),
+            recv_timeout: Duration::from_millis(200),
+            fault: Some(fault),
+            ..ExecOptions::default()
+        });
+        let err = exec.execute(&s, &xs, ReduceOp::Sum).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                permallreduce::cluster::ClusterError::RecvTimeout { .. }
+                    | permallreduce::cluster::ClusterError::Protocol { .. }
+                    | permallreduce::cluster::ClusterError::WorkerPanic { .. }
+            ),
+            "{fault:?}: {err:?}"
+        );
+    }
+}
+
+/// The persistent pool's chunked path: multi-bucket dispatches (including
+/// a pipelined multi-lane schedule) bit-match the clone oracle, warm calls
+/// included, and the pool's counters show chunk traffic.
+#[test]
+fn persistent_pool_chunked_bit_matches_oracle() {
+    use permallreduce::sched::pipeline;
+    let mut rng = Rng::new(0xB00C);
+    for p in [3usize, 8, 13] {
+        let pool: PersistentCluster<f32> = PersistentCluster::new(p);
+        pool.set_chunk_bytes(Some(6 * 4));
+        let base = Algorithm::new(AlgorithmKind::BwOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let ring = Algorithm::new(AlgorithmKind::Ring, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let pipelined = pipeline::expand(&base, 3).unwrap();
+        let scheds = [Arc::new(base), Arc::new(ring), Arc::new(pipelined)];
+        for round in 0..2 {
+            for op in ReduceOp::all() {
+                let jobs: Vec<PoolJob> = scheds
+                    .iter()
+                    .enumerate()
+                    .map(|(ji, s)| PoolJob {
+                        schedule: s.clone(),
+                        inputs: payloads(&mut rng, p, 6 * p + 1 + ji),
+                    })
+                    .collect();
+                let got = pool.execute_many(&jobs, op).unwrap();
+                for (ji, job) in jobs.iter().enumerate() {
+                    let want =
+                        oracle::execute_reference(&job.schedule, &job.inputs, op).unwrap();
+                    for rank in 0..p {
+                        for (i, (g, w)) in got[ji][rank].iter().zip(&want[rank]).enumerate() {
+                            assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "P={p} round {round} job {ji} {op:?} rank {rank} elem {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        let snap = pool.counters();
+        assert!(snap.chunked_msgs > 0, "P={p}: pool must have chunked");
+        assert!(snap.streamed_reduces > 0, "P={p}");
+    }
+}
+
+/// The coordinator-level knob: a chunked communicator's bucketed in-place
+/// result is bit-identical to an unchunked communicator's — across both
+/// backends and a warm second call — because chunking never reorders a
+/// combine.
+#[test]
+fn communicator_chunked_matches_unchunked_bit_for_bit() {
+    let p = 5;
+    let mut rng = Rng::new(0xC0DE);
+    let plain = Communicator::builder(p)
+        .bucket_bytes(64 * 4)
+        .pipeline_segments(2)
+        .build()
+        .unwrap();
+    let chunked = Communicator::builder(p)
+        .bucket_bytes(64 * 4)
+        .pipeline_segments(2)
+        .chunk_bytes(9 * 4)
+        .build()
+        .unwrap();
+    let lens = [3usize, 40, 0, 129, 7, 64];
+    let inputs: Vec<Vec<Vec<f32>>> = (0..p)
+        .map(|_| {
+            lens.iter()
+                .map(|&n| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+                .collect()
+        })
+        .collect();
+    for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+        let want = plain
+            .allreduce_many(&inputs, op, AlgorithmKind::GeneralizedAuto)
+            .unwrap();
+        // Out-of-place on the chunked scoped executor.
+        let got = chunked
+            .allreduce_many(&inputs, op, AlgorithmKind::GeneralizedAuto)
+            .unwrap();
+        // In-place on the chunked warm pool, twice (cold + warm).
+        for round in 0..2 {
+            let mut inplace = inputs.clone();
+            chunked
+                .allreduce_many_inplace(&mut inplace, op, AlgorithmKind::GeneralizedAuto)
+                .unwrap();
+            for rank in 0..p {
+                for (ti, &n) in lens.iter().enumerate() {
+                    assert_eq!(inplace[rank][ti].len(), n);
+                    for (i, ((g, o), w)) in inplace[rank][ti]
+                        .iter()
+                        .zip(&got.ranks[rank][ti])
+                        .zip(&want.ranks[rank][ti])
+                        .enumerate()
+                    {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{op:?} round {round} tensor {ti} rank {rank} elem {i} (inplace)"
+                        );
+                        assert_eq!(
+                            o.to_bits(),
+                            w.to_bits(),
+                            "{op:?} tensor {ti} rank {rank} elem {i} (out-of-place)"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -19,7 +19,7 @@ use permallreduce::cluster::{
     oracle, ClusterExecutor, CounterSnapshot, DataPlaneCounters, ExecOptions, PersistentCluster,
     ReduceOp,
 };
-use permallreduce::sched::ProcSchedule;
+use permallreduce::sched::{Op, ProcSchedule, ScheduleBuilder, Segment};
 use permallreduce::util::Rng;
 
 fn ring(p: usize) -> ProcSchedule {
@@ -133,6 +133,57 @@ fn placement_is_bit_transparent_across_kinds_and_ops() {
             }
         }
     }
+}
+
+/// The copy half of send-aware placement: a `Copy`-created buffer whose
+/// next use is a send (+ free) duplicates straight into a pooled wire
+/// block, so the send is a freeze — one copy total instead of a slab→slab
+/// copy plus a slab→wire copy at send time. Hand-built copy-then-forward
+/// schedule (no in-crate algorithm copies out of the slab, so the shape is
+/// pinned directly): each rank copies its input, sends the copy, and
+/// reduces the received copy with its input.
+#[test]
+fn copy_then_send_buffers_duplicate_straight_into_wire_blocks() {
+    let mut b = ScheduleBuilder::new(2, 1, "copy-forward");
+    let seg = Segment::new(0, 1);
+    let mine = b.init_buf_per_proc(&[seg, seg]);
+    b.begin_step();
+    let dup0 = b.fresh();
+    let dup1 = b.fresh();
+    let got0 = b.fresh();
+    let got1 = b.fresh();
+    for p in 0..2usize {
+        let (dup, got) = if p == 0 { (dup0, got0) } else { (dup1, got1) };
+        b.op(p, Op::Copy { dst: dup, src: mine });
+        b.op(p, Op::send(1 - p, vec![dup]));
+        b.op(p, Op::recv(1 - p, vec![got]));
+        b.op(p, Op::Reduce { dst: got, src: mine });
+        b.op(p, Op::Free { buf: dup });
+        b.op(p, Op::Free { buf: mine });
+    }
+    b.end_step();
+    let s = b.finish(vec![vec![got0], vec![got1]]);
+
+    let mut rng = Rng::new(0xC09F);
+    let xs: Vec<Vec<f32>> = (0..2)
+        .map(|_| (0..37).map(|_| rng.f32() + 0.5).collect())
+        .collect();
+    let (with, out_with) = run_counted(&s, &xs, ReduceOp::Sum, true);
+    let (without, out_without) = run_counted(&s, &xs, ReduceOp::Sum, false);
+    let want = oracle::execute_reference(&s, &xs, ReduceOp::Sum).unwrap();
+    for rank in 0..2 {
+        for ((g, u), w) in out_with[rank].iter().zip(&out_without[rank]).zip(&want[rank]) {
+            assert_eq!(g.to_bits(), u.to_bits(), "rank {rank}: placement changed bits");
+            assert_eq!(g.to_bits(), w.to_bits(), "rank {rank}: differs from oracle");
+        }
+    }
+    // With placement: each rank's copy goes straight into a wire block and
+    // the send freezes it — zero slab→wire copies at send time.
+    assert_eq!(with.wire_placed_copies, 2, "one placed copy per rank");
+    assert_eq!(with.slab_to_wire_copies, 0, "the send is a freeze");
+    // Without: the copy lands in the slab and the send pays the copy.
+    assert_eq!(without.wire_placed_copies, 0);
+    assert_eq!(without.slab_to_wire_copies, 2, "one send-time copy per rank");
 }
 
 /// The persistent pool always runs with placement on (hints cached next to
