@@ -10,9 +10,11 @@
 //! (`BENCH_bucketing.json`), times single-schedule Allreduces through
 //! the clone-based reference executor vs the warm persistent pool across
 //! message sizes × process counts (`BENCH_dataplane.json`) so the perf
-//! trajectory of both paths accumulates across PRs, and runs the
+//! trajectory of both paths accumulates across PRs, runs the
 //! **chunked-vs-monolithic** step-streaming ablation on the deterministic
-//! DES clock (`BENCH_chunking.json`).
+//! DES clock (`BENCH_chunking.json`), and measures the **sockets-vs-
+//! in-process** transport cost over a real loopback TCP mesh
+//! (`BENCH_net.json`).
 //!
 //! Set `GAR_BENCH_FAST=1` (CI smoke) to shrink budgets and sizes.
 
@@ -370,6 +372,132 @@ fn bench_chunking() {
     );
 }
 
+/// Sockets-vs-in-process ablation over loopback (`BENCH_net.json`).
+///
+/// Same schedule (bw-optimal), same warm data plane, same sizes × P — the
+/// only variable is the transport: the in-process persistent pool's `mpsc`
+/// channels vs a real `127.0.0.1` TCP mesh (`net::Endpoint`, full wire
+/// serialization + kernel socket round-trips). The emitted `overhead`
+/// column (`socket_s / inprocess_s`) is the measured price of crossing
+/// the OS process boundary, which is exactly what `net::probe`'s measured
+/// α/β fold back into the cost model. Wall-clock on a shared runner is
+/// too noisy to gate, so the artifact is uploaded but not gated.
+fn bench_net() {
+    use permallreduce::net::{Endpoint, NetOptions};
+    use std::net::TcpListener;
+    use std::sync::Mutex;
+
+    let fast = fast_mode();
+    let ps: &[usize] = &[2usize, 4];
+    let sizes: &[usize] = if fast {
+        &[4_096, 65_536]
+    } else {
+        &[16_384, 262_144, 1_048_576]
+    };
+    println!("\n== socket mesh vs in-process pool (loopback transport ablation) ==");
+    let mut rows = String::new();
+    for &p in ps {
+        // --- socket side: p endpoints over an ephemeral loopback mesh.
+        let socket_secs: Mutex<Vec<(usize, f64)>> = Mutex::new(Vec::new());
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind rendezvous");
+        let addr = listener.local_addr().expect("addr").to_string();
+        std::thread::scope(|scope| {
+            for rank in 0..p {
+                let addr = addr.clone();
+                let l0 = (rank == 0).then(|| listener.try_clone().expect("clone"));
+                let socket_secs = &socket_secs;
+                scope.spawn(move || {
+                    let opts = NetOptions {
+                        rendezvous: addr,
+                        recv_timeout: Duration::from_secs(60),
+                        ..NetOptions::default()
+                    };
+                    let mut ep: Endpoint<f32> = match l0 {
+                        Some(l) => Endpoint::host(l, p, opts).expect("host"),
+                        None => Endpoint::connect(rank, p, opts).expect("join"),
+                    };
+                    let mut rng = Rng::new(0x0E7 + rank as u64);
+                    for &n in sizes {
+                        let xs: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                        let iters = net_iters(fast, n, p);
+                        // One warmup call (all ranks), then the timed loop.
+                        ep.allreduce(&xs, ReduceOp::Sum, AlgorithmKind::BwOptimal)
+                            .expect("warmup");
+                        let t0 = Instant::now();
+                        for _ in 0..iters {
+                            black_box(
+                                ep.allreduce(&xs, ReduceOp::Sum, AlgorithmKind::BwOptimal)
+                                    .expect("allreduce"),
+                            );
+                        }
+                        if rank == 0 {
+                            socket_secs
+                                .lock()
+                                .unwrap()
+                                .push((n, t0.elapsed().as_secs_f64() / iters as f64));
+                        }
+                    }
+                });
+            }
+        });
+        // --- in-process side: the warm persistent pool, same schedule.
+        let pool = PersistentCluster::new(p);
+        let sched = Arc::new(
+            Algorithm::new(AlgorithmKind::BwOptimal, p)
+                .build(&BuildCtx::default())
+                .unwrap(),
+        );
+        let mut rng = Rng::new(0x0E7);
+        for &n in sizes {
+            let xs: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..n).map(|_| rng.f32()).collect())
+                .collect();
+            let iters = net_iters(fast, n, p);
+            let inprocess_s = time_mean(iters, || {
+                black_box(pool.execute(&sched, &xs, ReduceOp::Sum).unwrap());
+            });
+            let socket_s = socket_secs
+                .lock()
+                .unwrap()
+                .iter()
+                .find(|&&(sn, _)| sn == n)
+                .map(|&(_, s)| s)
+                .expect("socket timing recorded");
+            let overhead = socket_s / inprocess_s;
+            println!(
+                "p{p} {:>9} B/rank: in-process {} | sockets {} → {overhead:.2}× transport cost",
+                n * 4,
+                fmt_t(inprocess_s),
+                fmt_t(socket_s),
+            );
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"p\": {p}, \"elems\": {n}, \"bytes_per_rank\": {}, \
+                 \"inprocess_s\": {inprocess_s:.6e}, \"socket_s\": {socket_s:.6e}, \
+                 \"overhead\": {overhead:.3}}}",
+                n * 4
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"net\",\n  \"op\": \"sum\",\n  \"algo\": \"bw-optimal\",\n  \
+         \"note\": \"socket_s / inprocess_s = measured cost of real TCP loopback vs \
+         in-process channels, same schedules and data plane; uploaded, not gated\",\n  \
+         \"entries\": [\n{rows}\n  ]\n}}\n"
+    );
+    std::fs::write("BENCH_net.json", &json).expect("write BENCH_net.json");
+    println!("wrote BENCH_net.json");
+}
+
+/// Shared iteration count for both transports (determined by shape only,
+/// so every rank of the socket mesh agrees).
+fn net_iters(fast: bool, n: usize, p: usize) -> usize {
+    let budget_elems: usize = if fast { 1_500_000 } else { 16_000_000 };
+    (budget_elems / (n * p).max(1)).clamp(2, 40)
+}
+
 fn main() {
     let budget = if fast_mode() {
         Duration::from_millis(300)
@@ -397,6 +525,7 @@ fn main() {
     bench_bucketing();
     bench_dataplane();
     bench_chunking();
+    bench_net();
 
     #[cfg(feature = "pjrt")]
     bench_pjrt(&mut rng, budget);

@@ -12,8 +12,14 @@
 //! speedup of `BENCH_bucketing.json` is gated the same way (and the
 //! artifact becomes mandatory).
 //!
+//! When the baseline carries a `chunking` section, `BENCH_chunking.json`'s
+//! **DES-timed** chunked-vs-monolithic speedups are gated too — and since
+//! the discrete-event clock is deterministic (pure α–β–γ arithmetic,
+//! identical on every machine), that section's floors are **tight**: its
+//! own `max_regress_pct` (default 0.5%) overrides the global slack.
+//!
 //! ```text
-//! bench_gate <BENCH_baseline.json> <BENCH_dataplane.json> [<BENCH_bucketing.json>]
+//! bench_gate <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json>]]
 //! bench_gate --self-test <BENCH_baseline.json>   # prove the gate can fail
 //! ```
 //!
@@ -34,11 +40,26 @@ struct Series {
 }
 
 /// The parsed baseline: regression margin, dataplane series floors, and
-/// the optional bucketing speedup floor.
+/// the optional bucketing / chunking speedup floors.
 struct Baseline {
     pct: f64,
     series: Vec<Series>,
     bucketing_floor: Option<f64>,
+    chunking: Option<ChunkingFloors>,
+}
+
+/// Floors for the DES-timed chunking artifact. The DES clock is
+/// deterministic, so these floors run under their own (tight) regression
+/// margin instead of the global machine-noise slack.
+#[derive(Clone, Copy, Debug)]
+struct ChunkingFloors {
+    /// Floor on the artifact's `min_speedup` (worst entry of the sweep).
+    min_speedup: f64,
+    /// Floor on `largest_bucket_p8_speedup` (the headline config), when
+    /// the baseline pins it.
+    largest_bucket_p8: Option<f64>,
+    /// Per-section regression margin (percent).
+    pct: f64,
 }
 
 fn parse_baseline(text: &str) -> Result<Baseline, String> {
@@ -63,11 +84,81 @@ fn parse_baseline(text: &str) -> Result<Baseline, String> {
                 .ok_or("baseline `bucketing` missing min_speedup")?,
         ),
     };
+    let chunking = match v.get("chunking") {
+        None => None,
+        Some(c) => {
+            let cpct = c
+                .get("max_regress_pct")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.5);
+            if !(cpct > 0.0 && cpct < 100.0) {
+                return Err(format!("chunking max_regress_pct {cpct} out of (0, 100)"));
+            }
+            Some(ChunkingFloors {
+                min_speedup: c
+                    .get("min_speedup")
+                    .and_then(Value::as_f64)
+                    .ok_or("baseline `chunking` missing min_speedup")?,
+                largest_bucket_p8: c.get("largest_bucket_p8_min_speedup").and_then(Value::as_f64),
+                pct: cpct,
+            })
+        }
+    };
     Ok(Baseline {
         pct,
         series,
         bucketing_floor,
+        chunking,
     })
+}
+
+/// The gated quantities of `BENCH_chunking.json`:
+/// `(min_speedup, largest_bucket_p8_speedup)`.
+fn parse_chunking(text: &str) -> Result<(f64, Option<f64>), String> {
+    let v = json::parse(text).map_err(|e| format!("chunking parse: {e}"))?;
+    let min = v
+        .get("min_speedup")
+        .and_then(Value::as_f64)
+        .ok_or("chunking artifact missing `min_speedup`")?;
+    Ok((
+        min,
+        v.get("largest_bucket_p8_speedup").and_then(Value::as_f64),
+    ))
+}
+
+/// Gate the chunking artifact against its (tight, DES-deterministic)
+/// floors; empty vec = pass.
+fn gate_chunking(
+    floors: &ChunkingFloors,
+    min_speedup: f64,
+    largest_p8: Option<f64>,
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    let limit = floors.min_speedup * (1.0 - floors.pct / 100.0);
+    if min_speedup < limit {
+        failures.push(format!(
+            "chunking: min_speedup {min_speedup:.4}× fell more than {}% below the \
+             baseline floor {:.4}× (limit {limit:.4}×)",
+            floors.pct, floors.min_speedup
+        ));
+    }
+    if let Some(floor) = floors.largest_bucket_p8 {
+        let limit = floor * (1.0 - floors.pct / 100.0);
+        match largest_p8 {
+            None => failures.push(
+                "chunking: baseline pins largest_bucket_p8_min_speedup but the artifact \
+                 has no largest_bucket_p8_speedup (coverage regression)"
+                    .to_string(),
+            ),
+            Some(got) if got < limit => failures.push(format!(
+                "chunking: largest_bucket_p8_speedup {got:.4}× fell more than {}% below \
+                 the baseline floor {floor:.4}× (limit {limit:.4}×)",
+                floors.pct
+            )),
+            Some(_) => {}
+        }
+    }
+    failures
 }
 
 /// The single speedup of `BENCH_bucketing.json`.
@@ -180,6 +271,27 @@ fn self_test(baseline: &Baseline, max_regress_pct: f64) -> Result<(), String> {
             return Err("bucketing floor does not pass against itself".into());
         }
     }
+    if let Some(ch) = &baseline.chunking {
+        let injected = ch.min_speedup * (1.0 - ch.pct / 100.0) * 0.5;
+        if gate_chunking(ch, injected, ch.largest_bucket_p8).is_empty() {
+            return Err("injected chunking regression passed — the gate is broken".into());
+        }
+        if let Some(p8) = ch.largest_bucket_p8 {
+            let injected_p8 = p8 * (1.0 - ch.pct / 100.0) * 0.5;
+            if gate_chunking(ch, ch.min_speedup, Some(injected_p8)).is_empty() {
+                return Err(
+                    "injected largest-bucket chunking regression passed — the gate is broken"
+                        .into(),
+                );
+            }
+            if gate_chunking(ch, ch.min_speedup, None).is_empty() {
+                return Err("missing largest-bucket speedup passed — the gate is broken".into());
+            }
+        }
+        if !gate_chunking(ch, ch.min_speedup, ch.largest_bucket_p8).is_empty() {
+            return Err("chunking floors do not pass against themselves".into());
+        }
+    }
     Ok(())
 }
 
@@ -189,8 +301,8 @@ fn run() -> Result<(), String> {
         Some("--self-test") => (true, args.iter().skip(1).collect()),
         _ => (false, args.iter().collect()),
     };
-    let usage =
-        "usage: bench_gate [--self-test] <baseline.json> [<dataplane.json> [<bucketing.json>]]";
+    let usage = "usage: bench_gate [--self-test] <baseline.json> \
+                 [<dataplane.json> [<bucketing.json> [<chunking.json>]]]";
     let baseline_path = files.first().ok_or(usage)?;
     let baseline_text = std::fs::read_to_string(baseline_path)
         .map_err(|e| format!("reading {baseline_path}: {e}"))?;
@@ -201,10 +313,15 @@ fn run() -> Result<(), String> {
         self_test(&baseline, pct)?;
         println!(
             "bench_gate self-test OK: an injected {pct}%+ regression fails all \
-             {} series{} and the baseline passes against itself",
+             {} series{}{} and the baseline passes against itself",
             baseline.series.len(),
             if baseline.bucketing_floor.is_some() {
                 " plus the bucketing floor"
+            } else {
+                ""
+            },
+            if baseline.chunking.is_some() {
+                " plus the chunking floors"
             } else {
                 ""
             }
@@ -227,12 +344,27 @@ fn run() -> Result<(), String> {
         let speedup = parse_bucketing(&bucketing_text)?;
         failures.extend(gate_bucketing(floor, speedup, pct));
     }
+    if let Some(ch) = &baseline.chunking {
+        let chunking_path = files.get(3).ok_or(
+            "baseline has a `chunking` section but no chunking artifact was passed \
+             (coverage regression)",
+        )?;
+        let chunking_text = std::fs::read_to_string(chunking_path)
+            .map_err(|e| format!("reading {chunking_path}: {e}"))?;
+        let (min_speedup, largest_p8) = parse_chunking(&chunking_text)?;
+        failures.extend(gate_chunking(ch, min_speedup, largest_p8));
+    }
     if failures.is_empty() {
         println!(
-            "bench_gate OK: {} series{} within {pct}% of their baseline floors",
+            "bench_gate OK: {} series{}{} within their baseline floors",
             baseline.series.len(),
             if baseline.bucketing_floor.is_some() {
                 " + bucketing"
+            } else {
+                ""
+            },
+            if baseline.chunking.is_some() {
+                " + chunking (tight DES floors)"
             } else {
                 ""
             }
@@ -300,20 +432,68 @@ mod tests {
                 {"p": 4, "elems": 4096, "min_speedup": 1.0},
                 {"p": 8, "elems": 262144, "min_speedup": 1.0}
             ],
-            "bucketing": {"min_speedup": 1.0}
+            "bucketing": {"min_speedup": 1.0},
+            "chunking": {"min_speedup": 1.0, "largest_bucket_p8_min_speedup": 1.0,
+                         "max_regress_pct": 0.5}
         }"#;
         let base = parse_baseline(text).unwrap();
         assert_eq!(base.pct, 20.0);
         assert_eq!(base.series.len(), 2);
         assert_eq!(base.series[0], series(4, 4096, 1.0));
         assert_eq!(base.bucketing_floor, Some(1.0));
-        // A baseline without the bucketing section stays valid (the
-        // bucketing gate is then skipped).
+        let ch = base.chunking.unwrap();
+        assert_eq!(ch.min_speedup, 1.0);
+        assert_eq!(ch.largest_bucket_p8, Some(1.0));
+        assert_eq!(ch.pct, 0.5);
+        // A baseline without the optional sections stays valid (those
+        // gates are then skipped).
         let text = r#"{
             "max_regress_pct": 20,
             "series": [{"p": 4, "elems": 4096, "min_speedup": 1.0}]
         }"#;
-        assert_eq!(parse_baseline(text).unwrap().bucketing_floor, None);
+        let base = parse_baseline(text).unwrap();
+        assert_eq!(base.bucketing_floor, None);
+        assert!(base.chunking.is_none());
+    }
+
+    #[test]
+    fn chunking_gate_is_tight_and_covers_the_headline() {
+        let floors = ChunkingFloors {
+            min_speedup: 1.0,
+            largest_bucket_p8: Some(1.02),
+            pct: 0.5,
+        };
+        // At the floor and a hair above: pass.
+        assert!(gate_chunking(&floors, 1.0, Some(1.02)).is_empty());
+        assert!(gate_chunking(&floors, 1.2, Some(1.5)).is_empty());
+        // Within the 0.5% tolerance: pass.
+        assert!(gate_chunking(&floors, 0.996, Some(1.016)).is_empty());
+        // Just past the tolerance: fail (tight — a 1% DES drop trips it).
+        let fails = gate_chunking(&floors, 0.99, Some(1.02));
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("min_speedup"));
+        let fails = gate_chunking(&floors, 1.0, Some(1.0));
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("largest_bucket_p8"));
+        // Missing headline field when pinned: coverage regression.
+        let fails = gate_chunking(&floors, 1.0, None);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("coverage"));
+    }
+
+    #[test]
+    fn parses_the_chunking_artifact_schema() {
+        let text = r#"{
+            "bench": "chunking", "timing": "des-alpha-beta-gamma",
+            "entries": [{"p": 8, "bucket_bytes": 16777216, "chunk_bytes": 560000,
+                         "total_frames": 100, "chunked_messages": 20,
+                         "monolithic_s": 1.0e-1, "chunked_s": 9.0e-2, "speedup": 1.1111}],
+            "min_speedup": 1.0000, "max_speedup": 1.1111,
+            "largest_bucket_p8_speedup": 1.1111
+        }"#;
+        let (min, p8) = parse_chunking(text).unwrap();
+        assert_eq!(min, 1.0);
+        assert_eq!(p8, Some(1.1111));
     }
 
     #[test]
@@ -352,6 +532,11 @@ mod tests {
             pct: 20.0,
             series: vec![series(4, 4096, 1.0), series(8, 65536, 1.0)],
             bucketing_floor: Some(1.0),
+            chunking: Some(ChunkingFloors {
+                min_speedup: 1.0,
+                largest_bucket_p8: Some(1.0),
+                pct: 0.5,
+            }),
         };
         self_test(&base, 20.0).unwrap();
     }

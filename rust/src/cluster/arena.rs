@@ -641,6 +641,48 @@ pub struct Frame {
 impl Frame {
     /// The monolithic single-frame framing.
     pub const WHOLE: Frame = Frame { idx: 0, of: 1 };
+
+    /// Serialize for a cross-process wire (`crate::net`): `idx` then `of`,
+    /// little-endian.
+    pub fn encode(self) -> [u8; 8] {
+        let mut b = [0u8; 8];
+        b[..4].copy_from_slice(&self.idx.to_le_bytes());
+        b[4..].copy_from_slice(&self.of.to_le_bytes());
+        b
+    }
+
+    /// Inverse of [`Frame::encode`].
+    pub fn decode(b: [u8; 8]) -> Frame {
+        Frame {
+            idx: u32::from_le_bytes(b[..4].try_into().expect("4 bytes")),
+            of: u32::from_le_bytes(b[4..].try_into().expect("4 bytes")),
+        }
+    }
+}
+
+/// Deserialization hook for cross-process transports (`crate::net`): build
+/// a received message's payload by filling **one** pooled wire block with
+/// every buffer's elements (concatenated in payload order — `fill` must
+/// write all `lens.iter().sum()` elements) and slicing it per buffer. The
+/// block is frozen once and shared by all chunks, so the receive costs a
+/// single pool take + one decode pass, exactly like an in-process forward.
+pub fn payload_from_wire<T: Element>(
+    pool: &Arc<BlockPool<T>>,
+    lens: &[usize],
+    fill: impl FnOnce(&mut [T]),
+) -> Payload<T> {
+    let total: usize = lens.iter().sum();
+    let mut blk = BlockPool::take(pool, total);
+    fill(blk.data_mut());
+    let frozen = blk.freeze();
+    let mut off = 0usize;
+    lens.iter()
+        .map(|&l| {
+            let c = Chunk::new(frozen.clone(), off, l);
+            off += l;
+            c
+        })
+        .collect()
 }
 
 /// The message layer a [`DataPlane`] runs over. Implementations own the
@@ -775,6 +817,13 @@ impl<T: Element> DataPlane<T> {
     /// directly into a pooled wire block". Pass an empty slice to disable
     /// placement.
     ///
+    /// `fusion` is this rank's cached [`plan_chunk_fusion`] rows
+    /// ([`crate::sched::stats::chunk_fusion_rows`], indexed
+    /// `[local_step][recv_index][buf]`): when present, chunked receives use
+    /// the precomputed row instead of re-running the lookahead per message
+    /// (under `debug_assertions` the live lookahead is still run and must
+    /// match the cached row). `None` falls back to the per-message pass.
+    ///
     /// `chunk_elems` is the chunk budget: `Some(c)` makes every message
     /// whose largest buffer exceeds `c` elements travel as a stream of
     /// `(chunk_idx, n_chunks)`-framed sub-blocks, with eligible
@@ -789,6 +838,7 @@ impl<T: Element> DataPlane<T> {
         input: &[T],
         step_off: usize,
         wire_dst: &[bool],
+        fusion: Option<&crate::sched::stats::FusionRows>,
         chunk_elems: Option<usize>,
         transport: &mut dyn Transport<T>,
         kernel: &dyn CombineKernel<T>,
@@ -814,7 +864,7 @@ impl<T: Element> DataPlane<T> {
             self.slots[id as usize] = Some(BufSlot::Slab(slot));
         }
 
-        if let Err(e) = self.run_steps(s, proc, step_off, wire_dst, transport, kernel) {
+        if let Err(e) = self.run_steps(s, proc, step_off, wire_dst, fusion, transport, kernel) {
             // Drop any shared chunks / owned blocks before surfacing the
             // error, so their storage returns to the pool even on a failed
             // call (the plane may live on inside a persistent worker).
@@ -842,12 +892,14 @@ impl<T: Element> DataPlane<T> {
 
     /// The step loop of [`DataPlane::run_schedule`], factored out so the
     /// caller can clean the slot table on the error path.
+    #[allow(clippy::too_many_arguments)]
     fn run_steps(
         &mut self,
         s: &ProcSchedule,
         proc: usize,
         step_off: usize,
         wire_dst: &[bool],
+        fusion: Option<&crate::sched::stats::FusionRows>,
         transport: &mut dyn Transport<T>,
         kernel: &dyn CombineKernel<T>,
     ) -> Result<(), ClusterError> {
@@ -858,6 +910,8 @@ impl<T: Element> DataPlane<T> {
             let step = step_off + local_step;
             let ops: &[Op] = &st.ops[proc];
             fused.clear();
+            // Recv micro-ops seen this step, indexing the cached fusion rows.
+            let mut recv_idx = 0usize;
             for oi in 0..ops.len() {
                 for m in ops[oi].micro() {
                     match m {
@@ -865,6 +919,11 @@ impl<T: Element> DataPlane<T> {
                             self.send_message(ids, proc, to, step, &st.ops[to], transport);
                         }
                         MicroOp::Recv { from, bufs: ids } => {
+                            let cached = fusion
+                                .and_then(|f| f.get(local_step))
+                                .and_then(|rows| rows.get(recv_idx))
+                                .map(Vec::as_slice);
+                            recv_idx += 1;
                             self.recv_stream(
                                 &ops[oi + 1..],
                                 proc,
@@ -872,6 +931,7 @@ impl<T: Element> DataPlane<T> {
                                 from,
                                 ids,
                                 wire_dst,
+                                cached,
                                 transport,
                                 kernel,
                                 &mut fused,
@@ -1034,6 +1094,7 @@ impl<T: Element> DataPlane<T> {
         from: usize,
         ids: &[BufId],
         wire_dst: &[bool],
+        cached_plan: Option<&[Option<BufId>]>,
         transport: &mut dyn Transport<T>,
         kernel: &dyn CombineKernel<T>,
         fused: &mut Vec<(BufId, BufId)>,
@@ -1065,11 +1126,34 @@ impl<T: Element> DataPlane<T> {
                 ),
             });
         }
-        let plan = {
-            let slots = &self.slots;
-            plan_chunk_fusion(rest, ids, &|b| {
-                slots.get(b as usize).is_some_and(|s| s.is_some())
-            })
+        // The fusion plan: the cached per-(proc, step, recv) row when the
+        // caller precomputed it (the warm-pool path), the live lookahead
+        // otherwise. The static pass provably mirrors slot liveness, which
+        // the debug assertion re-checks against the actual slot table.
+        let plan_owned: Vec<Option<BufId>>;
+        let plan: &[Option<BufId>] = match cached_plan {
+            Some(row) => {
+                #[cfg(debug_assertions)]
+                {
+                    let slots = &self.slots;
+                    let live = plan_chunk_fusion(rest, ids, &|b| {
+                        slots.get(b as usize).is_some_and(|s| s.is_some())
+                    });
+                    debug_assert_eq!(
+                        row, &live[..],
+                        "proc {proc} step {step}: cached fusion row diverges from the \
+                         engine's live slot states"
+                    );
+                }
+                row
+            }
+            None => {
+                let slots = &self.slots;
+                plan_owned = plan_chunk_fusion(rest, ids, &|b| {
+                    slots.get(b as usize).is_some_and(|s| s.is_some())
+                });
+                &plan_owned
+            }
         };
         let mut states: Vec<RecvSlot<T>> = Vec::with_capacity(ids.len());
         for (i, &b) in ids.iter().enumerate() {

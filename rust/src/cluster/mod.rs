@@ -33,14 +33,20 @@ use std::time::Duration;
 use crate::sched::ProcSchedule;
 
 /// Name-keyed, fingerprint-guarded cache of per-schedule derived data
-/// (send-aware placement rows, arena pre-size hints), shared by both
-/// executors. In-crate schedule names encode the algorithm and all shape
-/// parameters; the (steps, n_units, P) fingerprint guards caller-built
-/// schedules reusing a name. Cached values only steer reduce placement or
-/// arena pre-sizing — either choice is correct — so a residual collision
-/// can cost performance but never corrupt results, which is what lets
-/// warm-path lookups stay allocation-free (no structural hashing of the
-/// schedule itself).
+/// (send-aware placement rows, chunk-fusion rows, arena pre-size hints),
+/// shared by both executors. In-crate schedule names encode the algorithm
+/// and all shape parameters; the (steps, n_units, P) fingerprint guards
+/// caller-built schedules reusing a name. Placement and pre-size values
+/// only steer where data lands — either choice is correct — but the
+/// cached **fusion rows** ([`crate::sched::stats::chunk_fusion_rows`])
+/// assume the schedule body matches: a caller who hand-builds two
+/// *different* schedules with the same name, step count, `n_units` and
+/// `P` and runs both chunked on one pool would fold reduces against the
+/// wrong plan. In-crate names are bijective with schedule bodies, the
+/// chunked engine re-derives the plan under `debug_assertions` and
+/// asserts it matches the cached row, and warm-path lookups staying
+/// allocation-free (no structural hashing per call) is the point of the
+/// cache — so the name contract is documented rather than hashed away.
 pub(crate) struct SchedCache<V> {
     map: Mutex<HashMap<String, CacheEntry<V>>>,
 }
@@ -614,6 +620,11 @@ fn worker<T: Element>(
             job.input,
             job.step_off,
             wire_dst,
+            // The scoped executor is the one-shot path: computing fusion
+            // rows up front would cost as much as the per-message lookahead
+            // it replaces, so only the warm pool (and `net::Endpoint`)
+            // cache them.
+            None,
             chunk_elems,
             &mut transport,
             kernel,

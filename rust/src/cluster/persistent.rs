@@ -49,7 +49,7 @@ use crate::cluster::arena::{
 };
 use crate::cluster::{fault_tag, ClusterError, Element, Fault, ReduceOp, SchedCache};
 use crate::sched::{
-    stats::{chunk_elems_for, stats, wire_reduce_placement},
+    stats::{chunk_elems_for, chunk_fusion_rows, stats, wire_reduce_placement},
     ProcSchedule,
 };
 
@@ -93,11 +93,15 @@ pub trait JobIo<T: Element = f32> {
 /// Per-schedule worker hints, computed once on the coordinator side and
 /// shared with every worker: the slab pre-size bound (peak concurrently
 /// **live** units per proc — the space-reclaiming arena tracks live data,
-/// not the bump bound) and the send-aware placement rows (per proc, per
-/// buffer).
+/// not the bump bound), the send-aware placement rows (per proc, per
+/// buffer), and the cached chunk-fusion rows (per proc, per step, per
+/// recv — [`crate::sched::stats::chunk_fusion_rows`]) so chunked warm-pool
+/// receives stop re-running the `plan_chunk_fusion` lookahead (and its
+/// small Vec allocations) per message.
 struct SchedHints {
     peak_units: Vec<u64>,
     wire_dst: Vec<Vec<bool>>,
+    fusion: Vec<crate::sched::stats::FusionRows>,
 }
 
 /// Per-bucket hints for one dispatch.
@@ -309,6 +313,7 @@ impl<T: Element> PersistentCluster<T> {
                     self.alloc_hints.get_or_compute(s, || SchedHints {
                         peak_units: stats(s).peak_live_units,
                         wire_dst: wire_reduce_placement(s),
+                        fusion: chunk_fusion_rows(s),
                     })
                 })
                 .collect(),
@@ -620,6 +625,7 @@ fn run_job<T: Element>(
                 input.data(),
                 step_off,
                 &hint.wire_dst[proc],
+                Some(&hint.fusion[proc]),
                 job.chunk_elems,
                 &mut transport,
                 &kernel,

@@ -350,13 +350,6 @@ impl Communicator {
         Ok((arc, build_seconds))
     }
 
-    /// Pipeline-depth heuristic: a segment only pays for its extra α
-    /// envelope (eq. 36's latency term) once it still carries enough bytes,
-    /// so keep segments ≥ 64 KiB and cap the depth at 4.
-    fn auto_segments(m_bytes: usize) -> u32 {
-        (m_bytes / (64 << 10)).clamp(1, 4) as u32
-    }
-
     /// Allreduce over the simulated cluster with the native reducer.
     pub fn allreduce<T: Element>(
         &self,
@@ -501,7 +494,7 @@ impl Communicator {
         let mut max_segments = 0u32;
         for b in &plan.buckets {
             let m_bytes = b.elems * elem_bytes;
-            let segments = self.segments.unwrap_or_else(|| Self::auto_segments(m_bytes));
+            let segments = self.segments.unwrap_or_else(|| auto_segments(m_bytes));
             max_segments = max_segments.max(segments);
             let (s, build_seconds) = self.pipelined_schedule(kind, m_bytes.max(1), segments)?;
             let mut m = self.metrics(&s, m_bytes, kind, build_seconds, 0.0);
@@ -664,6 +657,14 @@ impl Communicator {
             exec_seconds,
         }
     }
+}
+
+/// Pipeline-depth heuristic shared by the in-process coordinator and the
+/// multi-process [`crate::net::Endpoint`]: a segment only pays for its
+/// extra α envelope (eq. 36's latency term) once it still carries enough
+/// bytes, so keep segments ≥ 64 KiB and cap the depth at 4.
+pub(crate) fn auto_segments(m_bytes: usize) -> u32 {
+    (m_bytes / (64 << 10)).clamp(1, 4) as u32
 }
 
 /// Output of [`Communicator::plan_bucket_schedules`]: the bucket plan plus

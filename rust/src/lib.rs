@@ -30,6 +30,7 @@
 //! | [`cluster::arena`] | the zero-copy data plane: space-reclaiming slab arenas, sharded size-classed block pools, `Arc`-shared wire blocks, fused receive-reduce with send-aware placement, chunked streaming with per-chunk fused combines (shared by both executors) |
 //! | [`cluster::oracle`] | the clone-per-message reference data plane, kept as the differential-test oracle and bench baseline |
 //! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step); execution gated behind the `pjrt` feature |
+//! | [`net`] | multi-process execution over real TCP sockets: length-prefixed wire protocol, rank-0 rendezvous + full-mesh bootstrap, per-peer reader/writer threads behind a socket [`cluster::arena::Transport`], α/β/γ probe, and the per-rank [`net::Endpoint`] front end |
 //! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
 //! | [`coordinator::bucket`] | DDP-style gradient bucketing: cost-model-sized packing with exact pack/unpack round-trips |
 //! | [`figures`] | regenerates every figure of the paper's evaluation section |
@@ -101,6 +102,75 @@
 //!     assert!(grads[rank][0].iter().all(|&x| x == want0));
 //! }
 //! ```
+//!
+//! ## Running across processes (`net`)
+//!
+//! Every executor above lives in one OS process; [`net`] runs the same
+//! schedules — same data plane, placement, chunked streaming, bit-identical
+//! results — across **processes over real TCP sockets**. One rank of a
+//! multi-process job is a [`net::Endpoint`]:
+//!
+//! ```no_run
+//! use permallreduce::prelude::*;
+//! use permallreduce::net::{probe::ProbeConfig, Endpoint, NetOptions};
+//!
+//! // The same program runs on every rank (SPMD); rank/nprocs come from
+//! // the launcher (see examples/net_allreduce.rs for a full binary).
+//! let (rank, nprocs) = (0usize, 5usize);
+//! let opts = NetOptions {
+//!     rendezvous: "127.0.0.1:29517".into(), // rank 0 listens here
+//!     ..NetOptions::default()
+//! };
+//! // Blocks until the full mesh is up (rendezvous at rank 0, then every
+//! // pair connects exactly once) — nothing races step 0.
+//! let mut ep: Endpoint<f32> = Endpoint::connect(rank, nprocs, opts).unwrap();
+//!
+//! // Warmup probe: measure α (round-trip floor), β (bytes/s) and γ
+//! // (combine speed) over the live mesh. Rank 0 broadcasts the result so
+//! // every rank tunes from the SAME measured parameters — bucket sizes
+//! // (`optimal_bucket_bytes`), chunk sizes (`optimal_chunk_bytes`) and
+//! // the generalized algorithm's step count (`optimal_r`) now come from
+//! // reality instead of the paper's Table 2.
+//! let params = ep.probe(&ProbeConfig::default()).unwrap();
+//! let bucket = permallreduce::coordinator::bucket::optimal_bucket_bytes(nprocs, &params);
+//! let chunk = permallreduce::coordinator::bucket::optimal_chunk_bytes(bucket / nprocs, &params);
+//! ep.set_chunk_bytes((chunk < bucket).then_some(chunk));
+//!
+//! // Single-tensor and bucketed multi-tensor collectives, same API shape
+//! // as the in-process `Communicator`:
+//! let mine = vec![rank as f32; 1 << 16];
+//! let reduced = ep.allreduce(&mine, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto).unwrap();
+//! assert_eq!(reduced.len(), mine.len());
+//! let mut grads = vec![vec![1.0f32; 500]; 32];
+//! ep.allreduce_many(&mut grads, ReduceOp::Sum, AlgorithmKind::GeneralizedAuto).unwrap();
+//! ```
+//!
+//! On the wire, each message is the in-process transports' `(step, Frame,
+//! payload)` triple, length-prefixed and dtype-tagged (diagrammed next to
+//! the chunk framing it carries — each frame of a chunked step is one such
+//! message):
+//!
+//! ```text
+//!   ┌──────────────┬──────────────────────────────────────────────────────┐
+//!   │ u32 body_len │ body                                                 │
+//!   └──────────────┴──────────────────────────────────────────────────────┘
+//!   DATA body:
+//!   ┌────┬───────┬──────────┬──────────┬──────────┬─────────┬─────────┐
+//!   │kind│ dtype │ u16 bufs │ u32 from │ u64 step │ u32 idx │ u32 of  │
+//!   ├────┴───────┴──────────┴──────────┴──────────┴─────────┴─────────┤
+//!   │ u32 × bufs per-buffer element counts                            │
+//!   ├─────────────────────────────────────────────────────────────────┤
+//!   │ every buffer's elements, little-endian, concatenated            │
+//!   └─────────────────────────────────────────────────────────────────┘
+//!                  ▲ (idx, of) = the chunk framing: frame idx of a
+//!                    message split into `of` chunks (monolithic = 0 of 1)
+//! ```
+//!
+//! Torn frames (short reads), dtype mismatches and peer disconnects all
+//! surface as clean [`cluster::ClusterError`]s — never hangs — and the
+//! loopback differential suite (`tests/net_transport.rs`) pins socket
+//! execution bit-identical to [`cluster::oracle`] for every algorithm ×
+//! op × chunked/monolithic at P ∈ {2, 3, 4, 5, 7, 8}.
 //!
 //! ## The data plane (slabs, `Arc` sends, warm pools)
 //!
@@ -221,6 +291,7 @@ pub mod algo;
 pub mod cost;
 pub mod des;
 pub mod cluster;
+pub mod net;
 pub mod runtime;
 pub mod coordinator;
 pub mod figures;
@@ -235,6 +306,7 @@ pub mod prelude {
     };
     pub use crate::cost::{CostModel, NetParams};
     pub use crate::des::simulate;
+    pub use crate::net::{Endpoint, NetOptions};
     pub use crate::perm::{Group, Permutation};
     pub use crate::sched::{ProcSchedule, ScheduleStats};
 }

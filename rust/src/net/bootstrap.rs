@@ -1,0 +1,338 @@
+//! Rendezvous and full-mesh establishment.
+//!
+//! One rank (rank 0) plays **rendezvous host**: it listens on a well-known
+//! address, every other rank dials it and introduces itself with a `HELLO`
+//! carrying its own mesh-listener address, and once all `P − 1` peers have
+//! checked in the host answers each with the full rank ↔ address map
+//! (`ADDRMAP`). Those rendezvous connections are kept as the `0 ↔ i` mesh
+//! links. The remaining links follow one deterministic rule — **the higher
+//! rank dials the lower rank's listener** (announcing itself with `PEER`)
+//! — so every unordered pair gets exactly one connection and the whole
+//! mesh is up before step 0 of any schedule, mirroring the fixed process
+//! group MPI establishes before the first collective (paper §2's
+//! full-duplex peer-to-peer model).
+//!
+//! All sockets run with `TCP_NODELAY` (schedule steps are latency-bound)
+//! and bootstrap reads under a read timeout, so a dead peer surfaces as a
+//! clean [`ClusterError`] instead of a hang.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::cluster::ClusterError;
+
+use super::wire;
+
+/// The established full mesh for one rank: `streams[peer]` is the
+/// connection to `peer` (`None` at the rank's own index).
+pub struct Mesh {
+    pub rank: usize,
+    pub p: usize,
+    pub streams: Vec<Option<TcpStream>>,
+}
+
+fn proto_err(rank: usize, detail: impl Into<String>) -> ClusterError {
+    ClusterError::Protocol {
+        proc: rank,
+        detail: detail.into(),
+    }
+}
+
+/// Accept one connection with a deadline (the listener is temporarily
+/// switched to non-blocking and polled).
+fn accept_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+    rank: usize,
+) -> Result<TcpStream, ClusterError> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| proto_err(rank, format!("listener nonblocking: {e}")))?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| proto_err(rank, format!("stream blocking: {e}")))?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(proto_err(
+                        rank,
+                        "bootstrap timed out waiting for a peer connection",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(proto_err(rank, format!("accept failed: {e}"))),
+        }
+    }
+}
+
+/// Dial `addr`, retrying until `deadline` (the target may not have bound
+/// its listener yet).
+fn connect_deadline(addr: &str, deadline: Instant, rank: usize) -> Result<TcpStream, ClusterError> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(proto_err(
+                        rank,
+                        format!("bootstrap could not reach {addr}: {e}"),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn prepare(stream: &TcpStream, timeout: Duration, rank: usize) -> Result<(), ClusterError> {
+    stream
+        .set_nodelay(true)
+        .map_err(|e| proto_err(rank, format!("nodelay: {e}")))?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| proto_err(rank, format!("read timeout: {e}")))?;
+    Ok(())
+}
+
+/// Read one frame body during bootstrap, mapping both torn frames and
+/// clean EOFs (a peer dying mid-handshake) to protocol errors.
+fn read_body(stream: &mut TcpStream, rank: usize) -> Result<Vec<u8>, ClusterError> {
+    match wire::read_frame(stream, wire::MAX_BODY_BYTES) {
+        Ok(Some(body)) => Ok(body),
+        Ok(None) => Err(proto_err(rank, "peer closed during bootstrap")),
+        Err(e) => Err(proto_err(rank, format!("bootstrap read: {e}"))),
+    }
+}
+
+/// Rank 0's half of the rendezvous, given an already-bound listener (tests
+/// bind `127.0.0.1:0` and share the resolved port out of band).
+pub fn host(listener: TcpListener, p: usize, timeout: Duration) -> Result<Mesh, ClusterError> {
+    let rank = 0usize;
+    if p == 0 {
+        return Err(ClusterError::BadInput("mesh of zero processes".into()));
+    }
+    let mut streams: Vec<Option<TcpStream>> = (0..p).map(|_| None).collect();
+    if p == 1 {
+        return Ok(Mesh { rank, p, streams });
+    }
+    let deadline = Instant::now() + timeout;
+    let own_addr = listener
+        .local_addr()
+        .map_err(|e| proto_err(rank, format!("local addr: {e}")))?
+        .to_string();
+    let mut addrs: Vec<String> = vec![String::new(); p];
+    addrs[0] = own_addr;
+    for _ in 1..p {
+        let mut stream = accept_deadline(&listener, deadline, rank)?;
+        prepare(&stream, timeout, rank)?;
+        let body = read_body(&mut stream, rank)?;
+        if body[0] != wire::KIND_HELLO {
+            return Err(proto_err(
+                rank,
+                format!("expected HELLO, got kind {}", body[0]),
+            ));
+        }
+        let (peer, addr) =
+            wire::decode_hello(&body).map_err(|e| proto_err(rank, format!("bad HELLO: {e}")))?;
+        if peer == 0 || peer >= p {
+            return Err(proto_err(rank, format!("HELLO from invalid rank {peer}")));
+        }
+        if streams[peer].is_some() {
+            return Err(proto_err(rank, format!("duplicate HELLO from rank {peer}")));
+        }
+        addrs[peer] = addr;
+        streams[peer] = Some(stream);
+    }
+    let map = wire::encode_addr_map(&addrs);
+    for s in streams.iter_mut().flatten() {
+        wire::write_all(s, &map).map_err(|e| proto_err(rank, e))?;
+    }
+    Ok(Mesh { rank, p, streams })
+}
+
+/// A non-zero rank's bootstrap: dial the rendezvous, announce the own mesh
+/// listener, receive the address map, then complete the mesh (dial every
+/// lower non-zero rank, accept every higher rank).
+pub fn join(
+    rank: usize,
+    p: usize,
+    rendezvous: &str,
+    bind: Option<&str>,
+    timeout: Duration,
+) -> Result<Mesh, ClusterError> {
+    if rank == 0 || rank >= p {
+        return Err(ClusterError::BadInput(format!(
+            "join is for ranks 1..{p}, got {rank}"
+        )));
+    }
+    let deadline = Instant::now() + timeout;
+    let listener = TcpListener::bind(bind.unwrap_or("127.0.0.1:0"))
+        .map_err(|e| proto_err(rank, format!("binding mesh listener: {e}")))?;
+    let own_addr = listener
+        .local_addr()
+        .map_err(|e| proto_err(rank, format!("local addr: {e}")))?
+        .to_string();
+
+    let mut to_host = connect_deadline(rendezvous, deadline, rank)?;
+    prepare(&to_host, timeout, rank)?;
+    wire::write_all(&mut to_host, &wire::encode_hello(rank, &own_addr))
+        .map_err(|e| proto_err(rank, e))?;
+    let body = read_body(&mut to_host, rank)?;
+    if body[0] != wire::KIND_ADDRMAP {
+        return Err(proto_err(
+            rank,
+            format!("expected ADDRMAP, got kind {}", body[0]),
+        ));
+    }
+    let addrs =
+        wire::decode_addr_map(&body).map_err(|e| proto_err(rank, format!("bad ADDRMAP: {e}")))?;
+    if addrs.len() != p {
+        return Err(proto_err(
+            rank,
+            format!("ADDRMAP lists {} ranks, expected {p}", addrs.len()),
+        ));
+    }
+
+    let mut streams: Vec<Option<TcpStream>> = (0..p).map(|_| None).collect();
+    streams[0] = Some(to_host);
+    // Higher rank dials lower: we dial 1..rank, then accept rank+1..p.
+    for (peer, addr) in addrs.iter().enumerate().take(rank).skip(1) {
+        let mut s = connect_deadline(addr, deadline, rank)?;
+        prepare(&s, timeout, rank)?;
+        wire::write_all(&mut s, &wire::encode_peer(rank)).map_err(|e| proto_err(rank, e))?;
+        streams[peer] = Some(s);
+    }
+    for _ in rank + 1..p {
+        let mut s = accept_deadline(&listener, deadline, rank)?;
+        prepare(&s, timeout, rank)?;
+        let body = read_body(&mut s, rank)?;
+        if body[0] != wire::KIND_PEER {
+            return Err(proto_err(
+                rank,
+                format!("expected PEER, got kind {}", body[0]),
+            ));
+        }
+        let peer =
+            wire::decode_peer(&body).map_err(|e| proto_err(rank, format!("bad PEER: {e}")))?;
+        if peer <= rank || peer >= p {
+            return Err(proto_err(rank, format!("PEER from invalid rank {peer}")));
+        }
+        if streams[peer].is_some() {
+            return Err(proto_err(rank, format!("duplicate PEER from rank {peer}")));
+        }
+        streams[peer] = Some(s);
+    }
+    Ok(Mesh { rank, p, streams })
+}
+
+/// Establish the mesh for `rank` of `p`: rank 0 binds `rendezvous` and
+/// hosts, everyone else joins through it. `bind` optionally pins the mesh
+/// listener of a non-zero rank (default: an ephemeral loopback port).
+pub fn connect(
+    rank: usize,
+    p: usize,
+    rendezvous: &str,
+    bind: Option<&str>,
+    timeout: Duration,
+) -> Result<Mesh, ClusterError> {
+    if rank == 0 {
+        let listener = TcpListener::bind(rendezvous).map_err(|e| {
+            ClusterError::Protocol {
+                proc: 0,
+                detail: format!("binding rendezvous {rendezvous}: {e}"),
+            }
+        })?;
+        host(listener, p, timeout)
+    } else {
+        join(rank, p, rendezvous, bind, timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Full mesh over loopback: every pair connected exactly once, and a
+    /// round of point-to-point PEER messages flows over every link.
+    #[test]
+    fn mesh_establishes_for_non_power_of_two_p() {
+        let p = 5;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for rank in 0..p {
+                let addr = addr.clone();
+                let l0 = (rank == 0).then(|| listener.try_clone().unwrap());
+                handles.push(scope.spawn(move || {
+                    let mesh = match l0 {
+                        Some(l) => host(l, p, timeout).unwrap(),
+                        None => join(rank, p, &addr, None, timeout).unwrap(),
+                    };
+                    assert_eq!(mesh.rank, rank);
+                    assert!(mesh.streams[rank].is_none());
+                    assert_eq!(mesh.streams.iter().flatten().count(), p - 1);
+                    // Exercise every link: send PEER{rank} to each peer,
+                    // read one PEER from each.
+                    let mut got = vec![false; p];
+                    for peer in 0..p {
+                        if peer == rank {
+                            continue;
+                        }
+                        let mut s = mesh.streams[peer].as_ref().unwrap();
+                        wire::write_all(&mut s, &wire::encode_peer(rank)).unwrap();
+                    }
+                    for peer in 0..p {
+                        if peer == rank {
+                            continue;
+                        }
+                        let mut s = mesh.streams[peer].as_ref().unwrap();
+                        let body = wire::read_frame(&mut s, wire::MAX_BODY_BYTES)
+                            .unwrap()
+                            .unwrap();
+                        let who = wire::decode_peer(&body).unwrap();
+                        assert_eq!(who, peer, "link {rank}<->{peer} crossed");
+                        got[who] = true;
+                    }
+                    assert_eq!(got.iter().filter(|&&g| g).count(), p - 1);
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn host_rejects_garbage_hello() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(5);
+        std::thread::scope(|scope| {
+            let h = scope.spawn(move || host(listener, 2, timeout));
+            let mut s = connect_deadline(&addr, Instant::now() + timeout, 1).unwrap();
+            // A length prefix promising more bytes than are sent, then close:
+            // the host must fail cleanly, not hang.
+            use std::io::Write;
+            s.write_all(&100u32.to_le_bytes()).unwrap();
+            s.write_all(&[1, 2, 3]).unwrap();
+            drop(s);
+            let err = h.join().unwrap().unwrap_err();
+            assert!(matches!(err, ClusterError::Protocol { .. }), "{err:?}");
+        });
+    }
+
+    #[test]
+    fn single_rank_mesh_is_trivial() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mesh = host(listener, 1, Duration::from_secs(1)).unwrap();
+        assert_eq!(mesh.p, 1);
+        assert!(mesh.streams[0].is_none());
+    }
+}

@@ -1,0 +1,431 @@
+//! Multi-process execution over real TCP sockets.
+//!
+//! Everything below `net` runs the **same** schedules, data plane and
+//! chunked streaming as the in-process executors — the only substitution
+//! is the [`Transport`](crate::cluster::arena::Transport): instead of
+//! `mpsc` channels between threads, [`NetTransport`](transport) moves
+//! `(step, Frame, payload)` messages over a full mesh of loopback-or-LAN
+//! TCP connections ([`wire`]'s length-prefixed protocol, one writer and
+//! one reader thread per peer). Because `DataPlane::run_schedule` is
+//! generic over the transport, every algorithm, dtype, placement
+//! optimization and chunk-fusion decision works unchanged across OS
+//! processes — and stays **bit-identical** to the single-process oracle
+//! (pinned by `tests/net_transport.rs` and `examples/net_allreduce.rs`).
+//!
+//! The pieces:
+//!
+//! * [`wire`] — the length-prefixed message encoding (per-dtype element
+//!   serialization, bootstrap/probe/params frames);
+//! * [`bootstrap`] — rendezvous at rank 0, rank ↔ address map exchange,
+//!   deterministic full-mesh establishment before step 0;
+//! * [`Endpoint`] — this rank's front end, mirroring
+//!   [`Communicator::allreduce`](crate::coordinator::Communicator::allreduce) /
+//!   [`allreduce_many`](crate::coordinator::Communicator::allreduce_many)
+//!   (schedule resolution + verification + caching, bucket planning,
+//!   pipelined expansion, warm arena data plane, placement and fusion
+//!   hints) for one rank of a multi-process job;
+//! * [`probe`] — α/β/γ measured over the live mesh and broadcast by rank
+//!   0, so [`crate::cost`]-driven tuning (`optimal_r`,
+//!   `optimal_bucket_bytes`, `optimal_chunk_bytes`) runs on reality
+//!   instead of the paper's Table 2.
+//!
+//! See the crate-level "Running across processes" quickstart for the
+//! end-to-end flow, and `examples/net_allreduce.rs` for a runnable
+//! multi-process binary (including a `--self-spawn` harness).
+
+pub mod bootstrap;
+pub mod probe;
+pub mod transport;
+pub mod wire;
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use crate::cluster::arena::{BlockPool, DataPlane, NativeKernel};
+use crate::cluster::{ClusterError, ReduceOp};
+use crate::coordinator::bucket;
+use crate::cost::{optimal_r, NetParams};
+use crate::perm::{Group, Permutation};
+use crate::sched::{
+    pipeline,
+    stats::{chunk_elems_for, chunk_fusion_rows_for, wire_placement_row, FusionRows},
+    verify::verify,
+    ProcSchedule,
+};
+
+use transport::NetTransport;
+use wire::WireElement;
+
+/// Configuration of one rank's endpoint.
+#[derive(Clone, Debug)]
+pub struct NetOptions {
+    /// Rank 0's rendezvous address; every rank passes the same value.
+    pub rendezvous: String,
+    /// This rank's mesh-listener bind address (ranks > 0 only; `None` =
+    /// an ephemeral loopback port, announced through the rendezvous).
+    pub bind: Option<String>,
+    /// Bootstrap deadline (listener accepts, dials, address exchange).
+    pub connect_timeout: Duration,
+    /// Per-receive timeout of the running data plane — the hang-stopper
+    /// for lost messages and dead peers.
+    pub recv_timeout: Duration,
+    /// Chunked-streaming budget, mirroring
+    /// [`crate::cluster::ExecOptions::chunk_bytes`] (`None` = monolithic).
+    pub chunk_bytes: Option<usize>,
+    /// Cost-model parameters used for schedule resolution and bucket
+    /// sizing until (unless) [`Endpoint::probe`] replaces them with
+    /// measured values. Must be identical on every rank.
+    pub params: NetParams,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            rendezvous: "127.0.0.1:29517".to_string(),
+            bind: None,
+            connect_timeout: Duration::from_secs(30),
+            recv_timeout: Duration::from_secs(30),
+            chunk_bytes: None,
+            params: NetParams::table2(),
+        }
+    }
+}
+
+/// Metrics of one [`Endpoint::allreduce_many`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct NetManyMetrics {
+    pub n_tensors: usize,
+    /// Total payload bytes (this rank).
+    pub total_bytes: usize,
+    /// Bucket byte cap used for planning.
+    pub bucket_bytes: usize,
+    pub n_buckets: usize,
+    /// Largest pipeline depth applied to any bucket.
+    pub segments: u32,
+}
+
+/// Per-schedule derived rows this rank feeds the engine: send-aware
+/// placement and cached chunk-fusion plans (the same hints the persistent
+/// pool shares with its workers, restricted to this rank).
+struct RankHints {
+    wire_dst: Vec<bool>,
+    fusion: FusionRows,
+}
+
+/// One rank of a multi-process Allreduce job: an established TCP mesh, a
+/// warm arena data plane, and a `Communicator`-shaped API.
+///
+/// All ranks of a job run the **same program** (SPMD): every rank must
+/// issue the same sequence of collective calls with the same shapes,
+/// kinds, ops, and tuning knobs, or the mesh deadlocks — the same
+/// contract MPI imposes. Within that contract, results are bit-identical
+/// across ranks and to the in-process executors.
+pub struct Endpoint<T: WireElement = f32> {
+    rank: usize,
+    p: usize,
+    params: NetParams,
+    chunk_bytes: Option<usize>,
+    openmpi_threshold: usize,
+    pool: Arc<BlockPool<T>>,
+    plane: DataPlane<T>,
+    transport: NetTransport<T>,
+    /// Cumulative step-tag space across calls (tags never repeat, so a
+    /// fast peer's next-call traffic stashes instead of colliding).
+    step_base: usize,
+    cache: HashMap<String, Arc<ProcSchedule>>,
+    hints: HashMap<String, Arc<RankHints>>,
+}
+
+impl<T: WireElement> Endpoint<T> {
+    /// Establish the mesh and start the transport for `rank` of `p`.
+    /// Rank 0 binds `opts.rendezvous`; all ranks block until the full
+    /// mesh is up (every pair connected), so step 0 never races bootstrap.
+    pub fn connect(rank: usize, p: usize, opts: NetOptions) -> Result<Endpoint<T>, ClusterError> {
+        let mesh = bootstrap::connect(
+            rank,
+            p,
+            &opts.rendezvous,
+            opts.bind.as_deref(),
+            opts.connect_timeout,
+        )?;
+        Self::from_mesh(mesh, opts)
+    }
+
+    /// Rank 0 variant taking an already-bound rendezvous listener — how
+    /// tests get ephemeral (`127.0.0.1:0`) ports without races.
+    pub fn host(
+        listener: TcpListener,
+        p: usize,
+        opts: NetOptions,
+    ) -> Result<Endpoint<T>, ClusterError> {
+        let mesh = bootstrap::host(listener, p, opts.connect_timeout)?;
+        Self::from_mesh(mesh, opts)
+    }
+
+    fn from_mesh(mesh: bootstrap::Mesh, opts: NetOptions) -> Result<Endpoint<T>, ClusterError> {
+        let (rank, p) = (mesh.rank, mesh.p);
+        let pool = Arc::new(BlockPool::<T>::new());
+        let transport = NetTransport::start(mesh, pool.clone(), opts.recv_timeout)?;
+        Ok(Endpoint {
+            rank,
+            p,
+            params: opts.params,
+            chunk_bytes: opts.chunk_bytes,
+            openmpi_threshold: 10 * 1024,
+            plane: DataPlane::new(pool.clone()),
+            pool,
+            transport,
+            step_base: 0,
+            cache: HashMap::new(),
+            hints: HashMap::new(),
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.p
+    }
+
+    /// The cost-model parameters currently steering schedule resolution
+    /// and bucket sizing (Table 2 until [`Endpoint::probe`] runs).
+    pub fn params(&self) -> NetParams {
+        self.params
+    }
+
+    /// Set (or clear) the chunked-streaming budget, bytes — identical
+    /// semantics to [`crate::cluster::PersistentCluster::set_chunk_bytes`].
+    /// Must be set identically on every rank (SPMD contract): the budget
+    /// decides which messages are framed on **both** sides of each link.
+    pub fn set_chunk_bytes(&mut self, bytes: Option<usize>) {
+        self.chunk_bytes = bytes;
+    }
+
+    /// Data-plane counters of this rank (slab→wire copies, placed reduces,
+    /// chunked frames, …).
+    pub fn counters(&self) -> crate::cluster::CounterSnapshot {
+        self.pool.counters().snapshot()
+    }
+
+    /// Measure α/β/γ over the live mesh and adopt the result on **every**
+    /// rank (collective: all ranks must call it at the same program
+    /// point). Rank 0 runs the round-trip and combine timings (see
+    /// [`probe`]) and broadcasts one `PARAMS` message so all
+    /// ranks resolve identical schedules and bucket plans afterwards.
+    /// Returns the adopted parameters.
+    pub fn probe(&mut self, cfg: &probe::ProbeConfig) -> Result<NetParams, ClusterError> {
+        let params = if self.p == 1 {
+            NetParams {
+                alpha: 1e-9,
+                beta: 1e-12,
+                gamma: probe::measure_gamma::<T>(cfg.gamma_elems),
+            }
+        } else if self.rank == 0 {
+            let params = probe::measure(&mut self.transport, cfg)?;
+            let frame = wire::encode_params(&params);
+            for peer in 1..self.p {
+                self.transport.post(peer, frame.clone());
+            }
+            params
+        } else {
+            self.transport.wait_params()?
+        };
+        self.params = params;
+        Ok(params)
+    }
+
+    /// Resolve a size-dependent kind exactly like
+    /// [`crate::coordinator::Communicator::resolve`], against this
+    /// endpoint's (possibly measured) parameters.
+    pub fn resolve(&self, kind: AlgorithmKind, m_bytes: usize) -> AlgorithmKind {
+        match kind {
+            AlgorithmKind::GeneralizedAuto => AlgorithmKind::Generalized {
+                r: optimal_r(self.p, m_bytes, &self.params),
+            },
+            AlgorithmKind::OpenMpi => {
+                if m_bytes < self.openmpi_threshold {
+                    AlgorithmKind::RecursiveDoubling
+                } else {
+                    AlgorithmKind::Ring
+                }
+            }
+            k => k,
+        }
+    }
+
+    /// Build (or fetch from cache) the verified schedule for `kind` at
+    /// `m_bytes` — the exact schedule [`Endpoint::allreduce`] executes, so
+    /// callers can feed the same one to `cluster::oracle` for differential
+    /// checks.
+    pub fn schedule(
+        &mut self,
+        kind: AlgorithmKind,
+        m_bytes: usize,
+    ) -> Result<Arc<ProcSchedule>, String> {
+        let resolved = self.resolve(kind, m_bytes);
+        let label = format!("{}-p{}", resolved.label(), self.p);
+        if let Some(s) = self.cache.get(&label) {
+            return Ok(s.clone());
+        }
+        let ctx = BuildCtx {
+            m_bytes,
+            params: self.params,
+            openmpi_threshold: self.openmpi_threshold,
+        };
+        let algo = Algorithm {
+            kind: resolved,
+            group: Group::cyclic(self.p),
+            h: Permutation::identity(self.p),
+        };
+        let s = algo.build(&ctx)?;
+        verify(&s).map_err(|e| format!("schedule failed verification: {e}"))?;
+        let arc = Arc::new(s);
+        self.cache.insert(label, arc.clone());
+        Ok(arc)
+    }
+
+    /// The `segments`-deep pipelined expansion, cached and re-verified
+    /// (mirrors `Communicator::pipelined_schedule`).
+    fn pipelined_schedule(
+        &mut self,
+        kind: AlgorithmKind,
+        m_bytes: usize,
+        segments: u32,
+    ) -> Result<Arc<ProcSchedule>, String> {
+        let base = self.schedule(kind, m_bytes)?;
+        if segments <= 1 {
+            return Ok(base);
+        }
+        let label = format!("{}-pipeS{segments}", base.name);
+        if let Some(s) = self.cache.get(&label) {
+            return Ok(s.clone());
+        }
+        let s = pipeline::expand(&base, segments)?;
+        verify(&s).map_err(|e| format!("pipelined schedule failed verification: {e}"))?;
+        let arc = Arc::new(s);
+        self.cache.insert(label, arc.clone());
+        Ok(arc)
+    }
+
+    /// This rank's placement + fusion rows for `s`, cached by schedule
+    /// name (same keying as the executors' [`crate::cluster`] cache).
+    fn rank_hints(&mut self, s: &ProcSchedule) -> Arc<RankHints> {
+        if let Some(h) = self.hints.get(&s.name) {
+            return h.clone();
+        }
+        let h = Arc::new(RankHints {
+            wire_dst: wire_placement_row(s, self.rank),
+            fusion: chunk_fusion_rows_for(s, self.rank),
+        });
+        self.hints.insert(s.name.clone(), h.clone());
+        h
+    }
+
+    /// Run one schedule over the mesh: this rank's `input` in, the fully
+    /// reduced vector out. Step tags come from the endpoint's cumulative
+    /// tag space, so back-to-back calls never collide even when ranks
+    /// drift by a whole call.
+    fn run(
+        &mut self,
+        s: &ProcSchedule,
+        input: &[T],
+        op: ReduceOp,
+        out: &mut [T],
+    ) -> Result<(), ClusterError> {
+        let hints = self.rank_hints(s);
+        let base = self.step_base;
+        self.step_base += s.steps.len();
+        self.transport.begin_call(base);
+        let kernel = NativeKernel(op);
+        let chunk_elems = self
+            .chunk_bytes
+            .map(|b| chunk_elems_for(b, std::mem::size_of::<T>()));
+        self.plane.run_schedule(
+            s,
+            self.rank,
+            input,
+            base,
+            &hints.wire_dst,
+            Some(&hints.fusion),
+            chunk_elems,
+            &mut self.transport,
+            &kernel,
+            out,
+        )
+    }
+
+    /// Allreduce this rank's vector with every peer's: returns the reduced
+    /// vector (identical, bit-for-bit, on every rank). Mirrors
+    /// [`crate::coordinator::Communicator::allreduce`] for one rank of a
+    /// multi-process job.
+    pub fn allreduce(
+        &mut self,
+        data: &[T],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<Vec<T>, String> {
+        let mut out = vec![T::default(); data.len()];
+        if self.p == 1 {
+            out.copy_from_slice(data);
+            return Ok(out);
+        }
+        let m_bytes = data.len() * std::mem::size_of::<T>();
+        let s = self.schedule(kind, m_bytes)?;
+        self.run(&s, data, op, &mut out).map_err(|e| e.to_string())?;
+        Ok(out)
+    }
+
+    /// In-place bucketed multi-tensor Allreduce — the
+    /// [`crate::coordinator::Communicator::allreduce_many_inplace`] shape
+    /// for one rank: `tensors` is this rank's gradient list; after the
+    /// call each tensor holds the reduced values. Buckets are planned by
+    /// [`bucket::optimal_bucket_bytes`] under this endpoint's (measured,
+    /// after [`Endpoint::probe`]) parameters, each bucket's schedule is
+    /// pipelined and verified, and buckets run back to back with
+    /// cumulative step tags (a rank that finishes bucket `b` starts
+    /// `b + 1` immediately — no global barrier).
+    ///
+    /// On `Err` the tensor list is indeterminate (early buckets may
+    /// already hold reduced values) — refill before retrying.
+    pub fn allreduce_many(
+        &mut self,
+        tensors: &mut [Vec<T>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<NetManyMetrics, String> {
+        let lens: Vec<usize> = tensors.iter().map(Vec::len).collect();
+        let elem_bytes = std::mem::size_of::<T>();
+        let total_bytes = lens.iter().sum::<usize>() * elem_bytes;
+        let bucket_bytes = bucket::optimal_bucket_bytes(self.p, &self.params);
+        let plan = bucket::plan(&lens, elem_bytes, bucket_bytes);
+        let mut max_segments = 1u32;
+        if self.p > 1 {
+            for b in &plan.buckets {
+                let m_bytes = b.elems * elem_bytes;
+                let segments = crate::coordinator::auto_segments(m_bytes);
+                max_segments = max_segments.max(segments);
+                let s = self.pipelined_schedule(kind, m_bytes.max(1), segments)?;
+                if b.elems == 0 {
+                    continue;
+                }
+                let mut flat = vec![T::default(); b.elems];
+                bucket::pack_into(tensors, b, &mut flat);
+                let mut out = vec![T::default(); b.elems];
+                self.run(&s, &flat, op, &mut out).map_err(|e| e.to_string())?;
+                bucket::unpack_into(&out, b, tensors);
+            }
+        }
+        Ok(NetManyMetrics {
+            n_tensors: lens.len(),
+            total_bytes,
+            bucket_bytes,
+            n_buckets: plan.buckets.len(),
+            segments: max_segments,
+        })
+    }
+}

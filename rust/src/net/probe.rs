@@ -1,0 +1,154 @@
+//! Measuring the α–β–γ parameters over the live mesh.
+//!
+//! The cost model that sizes buckets ([`crate::coordinator::bucket::optimal_bucket_bytes`]),
+//! chunks ([`crate::coordinator::bucket::optimal_chunk_bytes`]) and the
+//! generalized algorithm's step count ([`crate::cost::optimal_r`]) ships
+//! with the paper's Table 2 constants — measured on *their* 10 GE cluster.
+//! Over a real mesh those numbers are wrong in both directions (loopback α
+//! is ~three orders of magnitude smaller), so the warmup probe measures
+//! them in place:
+//!
+//! * **α** — the minimum of many tiny `PROBE`/`ECHO` round-trips, halved.
+//!   The minimum (not the mean) filters scheduler noise; the echo is
+//!   answered inside the peer's reader thread, so the measurement sees the
+//!   wire and the protocol stack, not the peer's schedule loop.
+//! * **β** — a large-payload round-trip, halved, minus α, per byte.
+//! * **γ** — a local timed [`Element::combine`](crate::cluster::Element)
+//!   fold (the same loop the data plane runs), per byte.
+//!
+//! Every rank must end with **identical** parameters or the ranks would
+//! resolve different schedules and bucket plans and deadlock — so rank 0
+//! measures and broadcasts a single `PARAMS` message, and all other ranks
+//! adopt it ([`super::Endpoint::probe`] wires this up).
+
+use std::time::Instant;
+
+use crate::cluster::{ClusterError, ReduceOp};
+use crate::cost::NetParams;
+
+use super::transport::NetTransport;
+use super::wire::{self, WireElement};
+
+/// Probe workload knobs (defaults are a sub-second warmup).
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeConfig {
+    /// Discarded warmup round-trips per peer (connection + cache warming).
+    pub warmup: usize,
+    /// Timed small round-trips for α.
+    pub alpha_iters: usize,
+    /// Payload of the β round-trips, bytes.
+    pub beta_bytes: usize,
+    /// Timed large round-trips for β.
+    pub beta_iters: usize,
+    /// Elements folded per γ timing pass.
+    pub gamma_elems: usize,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        ProbeConfig {
+            warmup: 8,
+            alpha_iters: 64,
+            beta_bytes: 1 << 20,
+            beta_iters: 4,
+            gamma_elems: 1 << 16,
+        }
+    }
+}
+
+/// One timed round-trip of `payload_bytes` to `peer`; returns seconds.
+fn round_trip<T: WireElement>(
+    t: &mut NetTransport<T>,
+    peer: usize,
+    nonce: u64,
+    payload_bytes: usize,
+) -> Result<f64, ClusterError> {
+    let frame = wire::encode_probe(wire::KIND_PROBE, nonce, payload_bytes);
+    let t0 = Instant::now();
+    t.post(peer, frame);
+    t.wait_echo(peer, nonce)?;
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+/// Time the native combine loop to derive γ (seconds per byte) for `T`.
+pub fn measure_gamma<T: WireElement>(elems: usize) -> f64 {
+    let n = elems.max(1);
+    let mut dst = vec![T::default(); n];
+    let src = vec![T::default(); n];
+    // Enough iterations to rise above timer resolution, bounded for warmup.
+    let iters = ((32usize << 20) / n).clamp(4, 4096);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        // black_box: without it, release builds can see that `dst` is
+        // never read and delete the very loop being timed, collapsing the
+        // measured γ to the clamp floor — and that garbage would then be
+        // broadcast as the "measured" parameter.
+        T::combine(
+            ReduceOp::Sum,
+            std::hint::black_box(&mut dst),
+            std::hint::black_box(&src),
+        );
+    }
+    std::hint::black_box(&dst);
+    let per_call = t0.elapsed().as_secs_f64() / iters as f64;
+    let bytes = n * std::mem::size_of::<T>();
+    (per_call / bytes as f64).max(1e-13)
+}
+
+/// Rank 0's measurement pass: α and β against every peer (the slowest peer
+/// bounds the collective, so the **maximum** over peers is what the cost
+/// model should price), γ locally. Driven by [`super::Endpoint::probe`],
+/// which then broadcasts the result.
+pub(super) fn measure<T: WireElement>(
+    t: &mut NetTransport<T>,
+    cfg: &ProbeConfig,
+) -> Result<NetParams, ClusterError> {
+    let p = t.p();
+    let mut nonce = 0xA1B2_0000u64;
+    let mut alpha = 0.0f64;
+    let mut beta = 0.0f64;
+    for peer in 1..p {
+        for _ in 0..cfg.warmup {
+            nonce += 1;
+            round_trip(t, peer, nonce, 16)?;
+        }
+        let mut best_small = f64::INFINITY;
+        for _ in 0..cfg.alpha_iters.max(1) {
+            nonce += 1;
+            best_small = best_small.min(round_trip(t, peer, nonce, 16)?);
+        }
+        let peer_alpha = (best_small / 2.0).max(1e-9);
+        let mut best_large = f64::INFINITY;
+        for _ in 0..cfg.beta_iters.max(1) {
+            nonce += 1;
+            best_large = best_large.min(round_trip(t, peer, nonce, cfg.beta_bytes)?);
+        }
+        // One direction moves `beta_bytes`; the α envelope is already paid.
+        let peer_beta =
+            ((best_large / 2.0 - peer_alpha) / cfg.beta_bytes.max(1) as f64).max(1e-13);
+        alpha = alpha.max(peer_alpha);
+        beta = beta.max(peer_beta);
+    }
+    Ok(NetParams {
+        alpha,
+        beta,
+        gamma: measure_gamma::<T>(cfg.gamma_elems),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_is_positive_and_finite_for_every_dtype() {
+        for g in [
+            measure_gamma::<f32>(1 << 12),
+            measure_gamma::<f64>(1 << 12),
+            measure_gamma::<i32>(1 << 12),
+            measure_gamma::<i64>(1 << 12),
+        ] {
+            assert!(g.is_finite() && g > 0.0, "gamma {g}");
+        }
+    }
+}

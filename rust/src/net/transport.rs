@@ -1,0 +1,464 @@
+//! The socket-backed [`Transport`] the data plane runs over.
+//!
+//! Per peer, a [`NetTransport`] owns one **writer thread** (drains a FIFO
+//! of pre-encoded frames into the socket, so a slow peer's backpressure
+//! never blocks the schedule loop — the exact non-blocking-send semantics
+//! of the in-process channel transports) and one **reader thread** (decodes
+//! frames as they arrive and posts them to a shared inbox). The schedule
+//! thread's [`Transport::recv`] demultiplexes the inbox by `(step, from)`
+//! tag with the same out-of-order stash the in-process transports keep:
+//! frames of one message arrive in `idx` order (TCP per-connection FIFO ×
+//! one writer per peer), frames of other in-flight messages queue per key.
+//!
+//! Reader threads also answer `PROBE` frames inline (encoding the `ECHO`
+//! straight onto the peer's writer queue), which is what lets
+//! [`super::probe`] measure α/β round-trips without the schedule thread's
+//! involvement on the echoing side.
+//!
+//! Failure surfaces as data, never as a hang: a torn frame or decode error
+//! marks the peer **bad**, a clean EOF marks it **closed**, and the next
+//! `recv` that depends on that peer returns a [`ClusterError`] immediately
+//! (receives from healthy peers keep draining the stash). Everything else
+//! is bounded by the receive timeout.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cluster::arena::{BlockPool, Frame, FrameQueue, Payload, Transport};
+use crate::cluster::ClusterError;
+use crate::cost::NetParams;
+
+use super::bootstrap::Mesh;
+use super::wire::{self, WireElement};
+
+/// What a reader thread posts to the shared inbox.
+pub(super) enum Event<T: WireElement> {
+    Data {
+        from: usize,
+        step: u64,
+        frame: Frame,
+        payload: Payload<T>,
+    },
+    /// An `ECHO` answering one of **our** probes (peers' probes are echoed
+    /// inside the reader and never reach the inbox).
+    Echo { from: usize, nonce: u64 },
+    /// A `PARAMS` broadcast from rank 0.
+    Params(NetParams),
+    /// Clean EOF from `from`.
+    Closed { from: usize },
+    /// Torn frame / decode failure / I/O error on the link to `from`.
+    Bad { from: usize, detail: String },
+}
+
+/// Health of one peer link as seen by the schedule thread.
+enum Link {
+    Up,
+    Closed,
+    Bad(String),
+}
+
+pub(super) struct NetTransport<T: WireElement> {
+    rank: usize,
+    p: usize,
+    /// Writer queues, `None` at the own index (and after shutdown).
+    writers: Vec<Option<mpsc::Sender<Vec<u8>>>>,
+    inbox: mpsc::Receiver<Event<T>>,
+    /// Out-of-order stash keyed by `(step, from)`.
+    pending: HashMap<(usize, usize), FrameQueue<T>>,
+    /// A `PARAMS` broadcast that arrived while we were doing something
+    /// else; consumed by [`NetTransport::wait_params`].
+    stashed_params: Option<NetParams>,
+    link: Vec<Link>,
+    timeout: Duration,
+    /// First valid step tag of the current call (tags below it are
+    /// duplicates from a protocol violation).
+    call_base: usize,
+    /// Raw stream clones kept for shutdown (unblocks reader threads).
+    streams: Vec<Option<TcpStream>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    writers_joined: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<T: WireElement> NetTransport<T> {
+    /// Spawn the per-peer reader/writer threads over an established mesh.
+    pub(super) fn start(
+        mesh: Mesh,
+        pool: Arc<BlockPool<T>>,
+        timeout: Duration,
+    ) -> Result<NetTransport<T>, ClusterError> {
+        let (rank, p) = (mesh.rank, mesh.p);
+        let (ev_tx, ev_rx) = mpsc::channel::<Event<T>>();
+        let mut writers: Vec<Option<mpsc::Sender<Vec<u8>>>> = (0..p).map(|_| None).collect();
+        let mut streams: Vec<Option<TcpStream>> = (0..p).map(|_| None).collect();
+        let mut readers = Vec::with_capacity(p.saturating_sub(1));
+        let mut writers_joined = Vec::with_capacity(p.saturating_sub(1));
+        for (peer, slot) in mesh.streams.into_iter().enumerate() {
+            let Some(stream) = slot else { continue };
+            // Steady state blocks indefinitely on reads; hang detection is
+            // the schedule thread's recv timeout, and shutdown unblocks the
+            // reader via `TcpStream::shutdown`.
+            stream
+                .set_read_timeout(None)
+                .map_err(|e| ClusterError::Protocol {
+                    proc: rank,
+                    detail: format!("clearing read timeout: {e}"),
+                })?;
+            let rd = stream.try_clone().map_err(|e| ClusterError::Protocol {
+                proc: rank,
+                detail: format!("cloning stream for reader: {e}"),
+            })?;
+            let wr = stream.try_clone().map_err(|e| ClusterError::Protocol {
+                proc: rank,
+                detail: format!("cloning stream for writer: {e}"),
+            })?;
+            // A bounded write keeps shutdown from hanging on a peer that
+            // stopped reading: the blocked writer errors out, and the
+            // receiving side reports the missing message.
+            wr.set_write_timeout(Some(timeout.max(Duration::from_secs(1))))
+                .map_err(|e| ClusterError::Protocol {
+                    proc: rank,
+                    detail: format!("setting write timeout: {e}"),
+                })?;
+            let (w_tx, w_rx) = mpsc::channel::<Vec<u8>>();
+            let echo_tx = w_tx.clone();
+            writers[peer] = Some(w_tx);
+            streams[peer] = Some(stream);
+            let ev = ev_tx.clone();
+            let rpool = pool.clone();
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("net-r{rank}-from{peer}"))
+                    .spawn(move || reader_loop(peer, rd, rpool, ev, echo_tx))
+                    .expect("spawn net reader"),
+            );
+            writers_joined.push(
+                std::thread::Builder::new()
+                    .name(format!("net-w{rank}-to{peer}"))
+                    .spawn(move || writer_loop(wr, w_rx))
+                    .expect("spawn net writer"),
+            );
+        }
+        Ok(NetTransport {
+            rank,
+            p,
+            writers,
+            inbox: ev_rx,
+            pending: HashMap::new(),
+            stashed_params: None,
+            link: (0..p).map(|_| Link::Up).collect(),
+            timeout,
+            call_base: 0,
+            streams,
+            readers,
+            writers_joined,
+        })
+    }
+
+    pub(super) fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Start a new call whose step tags begin at `base`: stale stash
+    /// entries (duplicates that could only come from corruption) are
+    /// dropped.
+    pub(super) fn begin_call(&mut self, base: usize) {
+        self.call_base = base;
+        let floor = self.call_base;
+        self.pending.retain(|&(step, _), _| step >= floor);
+    }
+
+    /// Queue one pre-encoded frame to `to` (fire-and-forget, like the
+    /// in-process transports' sends — failures surface on the receive
+    /// side).
+    pub(super) fn post(&self, to: usize, bytes: Vec<u8>) {
+        if let Some(Some(tx)) = self.writers.get(to) {
+            let _ = tx.send(bytes);
+        }
+    }
+
+    fn link_error(&self, from: usize, step: usize) -> ClusterError {
+        match &self.link[from] {
+            Link::Closed => ClusterError::Protocol {
+                proc: self.rank,
+                detail: format!("peer {from} closed its connection before step {step} completed"),
+            },
+            Link::Bad(detail) => ClusterError::Protocol {
+                proc: self.rank,
+                detail: format!("link to peer {from} failed: {detail}"),
+            },
+            Link::Up => unreachable!("link_error on a healthy link"),
+        }
+    }
+
+    fn stash_data(&mut self, from: usize, step: usize, frame: Frame, payload: Payload<T>) {
+        self.pending
+            .entry((step, from))
+            .or_default()
+            .push_back((frame, payload));
+    }
+
+    /// Drain one inbox event into transport state. Returns the event kinds
+    /// the caller may be waiting on (`Data` already matched/stashed).
+    fn absorb(&mut self, ev: Event<T>) -> Option<(usize, u64)> {
+        match ev {
+            Event::Data {
+                from,
+                step,
+                frame,
+                payload,
+            } => {
+                self.stash_data(from, step as usize, frame, payload);
+                None
+            }
+            Event::Echo { from, nonce } => Some((from, nonce)),
+            Event::Params(p) => {
+                self.stashed_params = Some(p);
+                None
+            }
+            Event::Closed { from } => {
+                self.link[from] = Link::Closed;
+                None
+            }
+            Event::Bad { from, detail } => {
+                self.link[from] = Link::Bad(detail);
+                None
+            }
+        }
+    }
+
+    /// Wait (bounded) for the `ECHO` answering nonce `nonce` from `from`;
+    /// data frames arriving meanwhile are stashed for the next call.
+    pub(super) fn wait_echo(&mut self, from: usize, nonce: u64) -> Result<(), ClusterError> {
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            if matches!(self.link[from], Link::Closed | Link::Bad(_)) {
+                return Err(self.link_error(from, 0));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let ev = self.inbox.recv_timeout(remaining).map_err(|_| {
+                ClusterError::RecvTimeout {
+                    proc: self.rank,
+                    step: 0,
+                    from,
+                }
+            })?;
+            if let Some((f, n)) = self.absorb(ev) {
+                if f == from && n == nonce {
+                    return Ok(());
+                }
+                // A stale echo from an earlier (timed-out) probe: ignore.
+            }
+        }
+    }
+
+    /// Wait (bounded) for rank 0's `PARAMS` broadcast.
+    pub(super) fn wait_params(&mut self) -> Result<NetParams, ClusterError> {
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            if let Some(p) = self.stashed_params.take() {
+                return Ok(p);
+            }
+            if matches!(self.link[0], Link::Closed | Link::Bad(_)) {
+                return Err(self.link_error(0, 0));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let ev = self.inbox.recv_timeout(remaining).map_err(|_| {
+                ClusterError::RecvTimeout {
+                    proc: self.rank,
+                    step: 0,
+                    from: 0,
+                }
+            })?;
+            self.absorb(ev);
+        }
+    }
+
+    /// Shut the transport down: stop the readers, flush and close every
+    /// writer, join everything. Idempotent (runs on drop).
+    pub(super) fn shutdown(&mut self) {
+        // Close our receive side first: blocked readers wake with EOF and
+        // exit. This must precede the writer joins — each reader holds an
+        // `echo_tx` clone of its peer's writer queue, so a live reader
+        // keeps that queue connected and the writer (and our join on it)
+        // would block forever. `Shutdown::Read` is local-only: it does not
+        // touch the send direction, so everything queued below still
+        // reaches the peer before our FIN.
+        for s in self.streams.iter().flatten() {
+            let _ = s.shutdown(std::net::Shutdown::Read);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        // All senders (ours here, the readers' echo handles above) are now
+        // gone: each writer drains what's already posted — peers still
+        // mid-schedule receive everything queued before our FIN — and
+        // exits.
+        for w in &mut self.writers {
+            *w = None;
+        }
+        for h in self.writers_joined.drain(..) {
+            let _ = h.join();
+        }
+        for s in self.streams.iter().flatten() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        self.streams.iter_mut().for_each(|s| *s = None);
+    }
+}
+
+impl<T: WireElement> Drop for NetTransport<T> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl<T: WireElement> Transport<T> for NetTransport<T> {
+    fn send(&mut self, to: usize, step: usize, frame: Frame, payload: Payload<T>) {
+        debug_assert_ne!(to, self.rank, "schedule sends to self");
+        let bytes = wire::encode_data::<T>(self.rank, step as u64, frame, &payload);
+        self.post(to, bytes);
+    }
+
+    fn recv(&mut self, step: usize, from: usize) -> Result<(Frame, Payload<T>), ClusterError> {
+        if let Some(q) = self.pending.get_mut(&(step, from)) {
+            if let Some(x) = q.pop_front() {
+                if q.is_empty() {
+                    self.pending.remove(&(step, from));
+                }
+                return Ok(x);
+            }
+        }
+        if matches!(self.link[from], Link::Closed | Link::Bad(_)) {
+            return Err(self.link_error(from, step));
+        }
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let ev = self.inbox.recv_timeout(remaining).map_err(|_| {
+                ClusterError::RecvTimeout {
+                    proc: self.rank,
+                    step,
+                    from,
+                }
+            })?;
+            match ev {
+                Event::Data {
+                    from: f,
+                    step: s,
+                    frame,
+                    payload,
+                } => {
+                    let s = s as usize;
+                    if s == step && f == from {
+                        return Ok((frame, payload));
+                    }
+                    // Receives run in program order, so every tag below the
+                    // one currently awaited was already consumed — a second
+                    // delivery can only be corruption. Tags at or above it
+                    // (another peer's lane, a later step, a faster peer's
+                    // next call) stash.
+                    if s < step {
+                        return Err(ClusterError::Protocol {
+                            proc: self.rank,
+                            detail: format!(
+                                "duplicate or stale message tag (step {s}, from {f}) while \
+                                 waiting for (step {step}, from {from})"
+                            ),
+                        });
+                    }
+                    self.stash_data(f, s, frame, payload);
+                }
+                other => {
+                    self.absorb(other);
+                    if matches!(self.link[from], Link::Closed | Link::Bad(_)) {
+                        return Err(self.link_error(from, step));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drain pre-encoded frames into the socket until the queue closes (all
+/// senders dropped) or a write fails — the failure then surfaces at the
+/// receiving side as a missing message.
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
+    for bytes in rx {
+        if wire::write_all(&mut stream, &bytes).is_err() {
+            return;
+        }
+    }
+}
+
+/// Decode frames as they arrive; `DATA` posts to the inbox, `PROBE`
+/// echoes straight back through the peer's writer queue, everything else
+/// maps to its event. Exits on EOF/error after posting the terminal event.
+fn reader_loop<T: WireElement>(
+    peer: usize,
+    mut stream: TcpStream,
+    pool: Arc<BlockPool<T>>,
+    events: mpsc::Sender<Event<T>>,
+    echo: mpsc::Sender<Vec<u8>>,
+) {
+    loop {
+        let body = match wire::read_frame(&mut stream, wire::MAX_BODY_BYTES) {
+            Ok(Some(body)) => body,
+            Ok(None) => {
+                let _ = events.send(Event::Closed { from: peer });
+                return;
+            }
+            Err(detail) => {
+                let _ = events.send(Event::Bad { from: peer, detail });
+                return;
+            }
+        };
+        let ev = match body[0] {
+            wire::KIND_DATA => match wire::decode_data::<T>(&body, &pool) {
+                Ok(msg) => {
+                    if msg.from != peer {
+                        Event::Bad {
+                            from: peer,
+                            detail: format!(
+                                "message claims sender {} on the link to {peer}",
+                                msg.from
+                            ),
+                        }
+                    } else {
+                        Event::Data {
+                            from: msg.from,
+                            step: msg.step,
+                            frame: msg.frame,
+                            payload: msg.payload,
+                        }
+                    }
+                }
+                Err(detail) => Event::Bad { from: peer, detail },
+            },
+            wire::KIND_PROBE => {
+                // Answer in-thread: the echo path must not depend on the
+                // schedule thread being idle.
+                let _ = echo.send(wire::echo_of(&body));
+                continue;
+            }
+            wire::KIND_ECHO => match wire::decode_probe(&body) {
+                Ok((nonce, _)) => Event::Echo { from: peer, nonce },
+                Err(detail) => Event::Bad { from: peer, detail },
+            },
+            wire::KIND_PARAMS => match wire::decode_params(&body) {
+                Ok(p) => Event::Params(p),
+                Err(detail) => Event::Bad { from: peer, detail },
+            },
+            k => Event::Bad {
+                from: peer,
+                detail: format!("unexpected message kind {k} after bootstrap"),
+            },
+        };
+        let is_bad = matches!(ev, Event::Bad { .. });
+        if events.send(ev).is_err() || is_bad {
+            return;
+        }
+    }
+}

@@ -1,0 +1,537 @@
+//! The length-prefixed wire protocol of the TCP transport.
+//!
+//! Every message on a mesh connection is one **frame**:
+//!
+//! ```text
+//!   ┌──────────────┬────────────────────────────────────────────┐
+//!   │ u32 body_len │ body (body_len bytes)                      │
+//!   └──────────────┴────────────────────────────────────────────┘
+//!   body := u8 kind | kind-specific payload          (all little-endian)
+//!
+//!   DATA (kind 0) — one `(step, Frame, payload)` message of the data plane:
+//!   ┌────┬───────┬──────────┬──────────┬──────────┬───────────────┬──────────────┐
+//!   │kind│ dtype │ u16 bufs │ u32 from │ u64 step │ u32 idx│u32 of│ per-buf lens │
+//!   ├────┴───────┴──────────┴──────────┴──────────┴───────────────┴──────────────┤
+//!   │ elements of every buffer, concatenated in payload order (LE)              │
+//!   └───────────────────────────────────────────────────────────────────────────┘
+//!
+//!   HELLO   (1): u32 rank | u16 len | utf-8 mesh-listener address
+//!   ADDRMAP (2): u32 p | p × (u16 len | utf-8 address)
+//!   PEER    (3): u32 rank
+//!   PROBE   (4): u64 nonce | opaque payload (echoed verbatim)
+//!   ECHO    (5): u64 nonce | opaque payload
+//!   PARAMS  (6): f64 alpha | f64 beta | f64 gamma   (IEEE-754 bits, LE)
+//! ```
+//!
+//! `DATA` serializes exactly what the in-process transports pass by
+//! `Arc`: the `(step, from)` tag, the `(chunk_idx, n_chunks)` [`Frame`],
+//! and one [`Chunk`](crate::cluster::arena::Chunk) per buffer. The decoder
+//! rebuilds the payload through
+//! [`crate::cluster::arena::payload_from_wire`] — one pooled block, sliced
+//! per buffer — so a received message costs a single decode pass into
+//! recycled storage.
+//!
+//! Reads are **torn-frame safe**: a clean EOF *between* frames decodes as
+//! `Ok(None)` (orderly peer shutdown), while an EOF or I/O error *inside*
+//! a frame (partial length prefix, short body) is an `Err` the reader
+//! thread surfaces as a [`crate::cluster::ClusterError`] — never a hang.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use crate::cluster::arena::{payload_from_wire, BlockPool, Frame, Payload};
+use crate::cluster::Element;
+use crate::cost::NetParams;
+
+/// Message kinds (first body byte).
+pub const KIND_DATA: u8 = 0;
+pub const KIND_HELLO: u8 = 1;
+pub const KIND_ADDRMAP: u8 = 2;
+pub const KIND_PEER: u8 = 3;
+pub const KIND_PROBE: u8 = 4;
+pub const KIND_ECHO: u8 = 5;
+pub const KIND_PARAMS: u8 = 6;
+
+/// Sanity cap on one frame's body — a corrupt length prefix must not
+/// allocate unbounded memory on the receive side, and senders **assert**
+/// against it ([`finish_frame`]) so an oversized message fails loudly at
+/// its source instead of surfacing as a confusing remote decode error.
+/// A single frame this large means a ≥ 1 GiB monolithic step message —
+/// set a chunk budget (`chunk_bytes`) long before that.
+pub const MAX_BODY_BYTES: usize = 1 << 30;
+
+/// An element type the wire protocol can move across processes: every
+/// [`Element`] with a fixed little-endian encoding. The `DTYPE` tag
+/// travels in each `DATA` frame so a mesh accidentally mixing element
+/// types fails with a protocol error instead of reinterpreting bytes.
+pub trait WireElement: Element {
+    const DTYPE: u8;
+
+    /// Append `vals` to `out`, little-endian.
+    fn write_le(vals: &[Self], out: &mut Vec<u8>);
+
+    /// Decode `out.len()` elements from `bytes`
+    /// (`bytes.len() == out.len() * size_of::<Self>()`, caller-checked).
+    fn read_le(bytes: &[u8], out: &mut [Self]);
+}
+
+macro_rules! impl_wire_element {
+    ($t:ty, $tag:expr) => {
+        impl WireElement for $t {
+            const DTYPE: u8 = $tag;
+
+            fn write_le(vals: &[Self], out: &mut Vec<u8>) {
+                out.reserve(vals.len() * std::mem::size_of::<Self>());
+                for v in vals {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+
+            fn read_le(bytes: &[u8], out: &mut [Self]) {
+                debug_assert_eq!(bytes.len(), out.len() * std::mem::size_of::<Self>());
+                for (chunk, o) in bytes.chunks_exact(std::mem::size_of::<Self>()).zip(out) {
+                    *o = <$t>::from_le_bytes(chunk.try_into().expect("exact chunk"));
+                }
+            }
+        }
+    };
+}
+impl_wire_element!(f32, 1);
+impl_wire_element!(f64, 2);
+impl_wire_element!(i32, 3);
+impl_wire_element!(i64, 4);
+
+/// Start an outgoing frame: one allocation sized for the body, with four
+/// placeholder bytes where [`finish_frame`] patches the length prefix —
+/// no second copy of the payload on the send path.
+fn frame_buf(body_cap: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + body_cap);
+    out.extend_from_slice(&[0u8; 4]);
+    out
+}
+
+/// Patch the length prefix of a frame started by [`frame_buf`]. Asserts
+/// the body fits [`MAX_BODY_BYTES`] (see its docs — senders fail at the
+/// source, and the `u32` prefix can never silently truncate).
+fn finish_frame(mut buf: Vec<u8>) -> Vec<u8> {
+    let body_len = buf.len() - 4;
+    assert!(
+        body_len <= MAX_BODY_BYTES,
+        "frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES} wire cap — \
+         chunk the message (chunk_bytes) instead of sending it monolithic"
+    );
+    buf[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+    buf
+}
+
+/// Read one frame's body. `Ok(None)` = clean EOF at a frame boundary;
+/// `Err` = torn frame (short read inside the prefix or body), oversized
+/// body, or any I/O error.
+pub fn read_frame(stream: &mut impl Read, max_body: usize) -> Result<Option<Vec<u8>>, String> {
+    let mut len = [0u8; 4];
+    // First byte read distinguishes clean EOF from a torn prefix.
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut len[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(format!("torn frame: EOF after {got} of 4 length bytes"));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("reading length prefix: {e}")),
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > max_body {
+        return Err(format!("frame body of {n} bytes exceeds the {max_body} cap"));
+    }
+    let mut body = vec![0u8; n];
+    stream
+        .read_exact(&mut body)
+        .map_err(|e| format!("torn frame: short body read ({n} bytes expected): {e}"))?;
+    if body.is_empty() {
+        return Err("empty frame body (missing kind byte)".into());
+    }
+    Ok(Some(body))
+}
+
+/// Write one already-encoded frame (length prefix included).
+pub fn write_all(stream: &mut impl Write, frame_bytes: &[u8]) -> Result<(), String> {
+    stream
+        .write_all(frame_bytes)
+        .map_err(|e| format!("writing frame: {e}"))
+}
+
+// ---------------------------------------------------------------- DATA --
+
+/// Encode one data-plane message. The payload's chunks are serialized in
+/// order; per-buffer lengths travel in the header so the decoder can
+/// rebuild the exact arity (zero-length buffers included).
+pub fn encode_data<T: WireElement>(
+    from: usize,
+    step: u64,
+    frame: Frame,
+    payload: &Payload<T>,
+) -> Vec<u8> {
+    let elems: usize = payload.iter().map(|c| c.len()).sum();
+    let mut out = frame_buf(24 + 4 * payload.len() + elems * std::mem::size_of::<T>());
+    out.push(KIND_DATA);
+    out.push(T::DTYPE);
+    out.extend_from_slice(&(payload.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(from as u32).to_le_bytes());
+    out.extend_from_slice(&step.to_le_bytes());
+    out.extend_from_slice(&frame.encode());
+    for c in payload {
+        out.extend_from_slice(&(c.len() as u32).to_le_bytes());
+    }
+    for c in payload {
+        T::write_le(c.as_slice(), &mut out);
+    }
+    finish_frame(out)
+}
+
+/// A decoded `DATA` message.
+pub struct DataMsg<T: Element> {
+    pub from: usize,
+    pub step: u64,
+    pub frame: Frame,
+    pub payload: Payload<T>,
+}
+
+/// Decode a `DATA` body (`body[0] == KIND_DATA` already dispatched). The
+/// elements land in one pooled block shared by all of the payload's chunks.
+pub fn decode_data<T: WireElement>(
+    body: &[u8],
+    pool: &Arc<BlockPool<T>>,
+) -> Result<DataMsg<T>, String> {
+    let ew = std::mem::size_of::<T>();
+    if body.len() < 24 {
+        return Err(format!("DATA header truncated ({} bytes)", body.len()));
+    }
+    if body[1] != T::DTYPE {
+        return Err(format!(
+            "dtype mismatch: message carries tag {} but this endpoint moves tag {}",
+            body[1],
+            T::DTYPE
+        ));
+    }
+    let n_bufs = u16::from_le_bytes(body[2..4].try_into().expect("2 bytes")) as usize;
+    let from = u32::from_le_bytes(body[4..8].try_into().expect("4 bytes")) as usize;
+    let step = u64::from_le_bytes(body[8..16].try_into().expect("8 bytes"));
+    let frame = Frame::decode(body[16..24].try_into().expect("8 bytes"));
+    let lens_end = 24 + 4 * n_bufs;
+    if body.len() < lens_end {
+        return Err(format!(
+            "DATA length table truncated ({} bufs, {} bytes)",
+            n_bufs,
+            body.len()
+        ));
+    }
+    let lens: Vec<usize> = (0..n_bufs)
+        .map(|i| {
+            u32::from_le_bytes(
+                body[24 + 4 * i..28 + 4 * i].try_into().expect("4 bytes"),
+            ) as usize
+        })
+        .collect();
+    let total: usize = lens.iter().sum();
+    let elem_bytes = &body[lens_end..];
+    if elem_bytes.len() != total * ew {
+        return Err(format!(
+            "DATA element section holds {} bytes but the length table sums to {}",
+            elem_bytes.len(),
+            total * ew
+        ));
+    }
+    let payload = payload_from_wire(pool, &lens, |dst| T::read_le(elem_bytes, dst));
+    Ok(DataMsg {
+        from,
+        step,
+        frame,
+        payload,
+    })
+}
+
+// ----------------------------------------------------------- bootstrap --
+
+pub fn encode_hello(rank: usize, addr: &str) -> Vec<u8> {
+    let mut out = frame_buf(1 + 4 + 2 + addr.len());
+    out.push(KIND_HELLO);
+    out.extend_from_slice(&(rank as u32).to_le_bytes());
+    push_str(&mut out, addr);
+    finish_frame(out)
+}
+
+pub fn decode_hello(body: &[u8]) -> Result<(usize, String), String> {
+    if body.len() < 5 {
+        return Err("HELLO truncated".into());
+    }
+    let rank = u32::from_le_bytes(body[1..5].try_into().expect("4 bytes")) as usize;
+    let (addr, rest) = pull_str(&body[5..])?;
+    if !rest.is_empty() {
+        return Err("HELLO has trailing bytes".into());
+    }
+    Ok((rank, addr))
+}
+
+pub fn encode_addr_map(addrs: &[String]) -> Vec<u8> {
+    let mut out = frame_buf(5 + addrs.iter().map(|a| 2 + a.len()).sum::<usize>());
+    out.push(KIND_ADDRMAP);
+    out.extend_from_slice(&(addrs.len() as u32).to_le_bytes());
+    for a in addrs {
+        push_str(&mut out, a);
+    }
+    finish_frame(out)
+}
+
+pub fn decode_addr_map(body: &[u8]) -> Result<Vec<String>, String> {
+    if body.len() < 5 {
+        return Err("ADDRMAP truncated".into());
+    }
+    let p = u32::from_le_bytes(body[1..5].try_into().expect("4 bytes")) as usize;
+    let mut rest = &body[5..];
+    // Bound the count by the bytes actually present (≥ 2 per entry for its
+    // length prefix) before sizing any allocation by it — a corrupt count
+    // must yield a clean error, not a giant `with_capacity`.
+    if p > rest.len() / 2 {
+        return Err(format!(
+            "ADDRMAP claims {p} ranks but carries only {} bytes",
+            rest.len()
+        ));
+    }
+    let mut addrs = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (a, r) = pull_str(rest)?;
+        addrs.push(a);
+        rest = r;
+    }
+    if !rest.is_empty() {
+        return Err("ADDRMAP has trailing bytes".into());
+    }
+    Ok(addrs)
+}
+
+pub fn encode_peer(rank: usize) -> Vec<u8> {
+    let mut out = frame_buf(5);
+    out.push(KIND_PEER);
+    out.extend_from_slice(&(rank as u32).to_le_bytes());
+    finish_frame(out)
+}
+
+pub fn decode_peer(body: &[u8]) -> Result<usize, String> {
+    if body.len() != 5 {
+        return Err("PEER malformed".into());
+    }
+    Ok(u32::from_le_bytes(body[1..5].try_into().expect("4 bytes")) as usize)
+}
+
+// --------------------------------------------------------- probe/params --
+
+pub fn encode_probe(kind: u8, nonce: u64, payload_bytes: usize) -> Vec<u8> {
+    debug_assert!(kind == KIND_PROBE || kind == KIND_ECHO);
+    let mut out = frame_buf(1 + 8 + payload_bytes);
+    out.push(kind);
+    out.extend_from_slice(&nonce.to_le_bytes());
+    out.resize(4 + 1 + 8 + payload_bytes, 0xA5);
+    finish_frame(out)
+}
+
+/// Turn a received `PROBE` body into the `ECHO` frame to send back
+/// (nonce and opaque payload preserved verbatim).
+pub fn echo_of(probe_body: &[u8]) -> Vec<u8> {
+    let mut out = frame_buf(probe_body.len());
+    out.extend_from_slice(probe_body);
+    out[4] = KIND_ECHO;
+    finish_frame(out)
+}
+
+/// `(nonce, payload bytes)` of a `PROBE`/`ECHO` body.
+pub fn decode_probe(body: &[u8]) -> Result<(u64, usize), String> {
+    if body.len() < 9 {
+        return Err("PROBE/ECHO truncated".into());
+    }
+    let nonce = u64::from_le_bytes(body[1..9].try_into().expect("8 bytes"));
+    Ok((nonce, body.len() - 9))
+}
+
+pub fn encode_params(p: &NetParams) -> Vec<u8> {
+    let mut out = frame_buf(25);
+    out.push(KIND_PARAMS);
+    out.extend_from_slice(&p.alpha.to_le_bytes());
+    out.extend_from_slice(&p.beta.to_le_bytes());
+    out.extend_from_slice(&p.gamma.to_le_bytes());
+    finish_frame(out)
+}
+
+pub fn decode_params(body: &[u8]) -> Result<NetParams, String> {
+    if body.len() != 25 {
+        return Err("PARAMS malformed".into());
+    }
+    let f = |r: std::ops::Range<usize>| {
+        f64::from_le_bytes(body[r].try_into().expect("8 bytes"))
+    };
+    Ok(NetParams {
+        alpha: f(1..9),
+        beta: f(9..17),
+        gamma: f(17..25),
+    })
+}
+
+fn push_str(body: &mut Vec<u8>, s: &str) {
+    body.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    body.extend_from_slice(s.as_bytes());
+}
+
+fn pull_str(bytes: &[u8]) -> Result<(String, &[u8]), String> {
+    if bytes.len() < 2 {
+        return Err("string length truncated".into());
+    }
+    let n = u16::from_le_bytes(bytes[..2].try_into().expect("2 bytes")) as usize;
+    if bytes.len() < 2 + n {
+        return Err("string body truncated".into());
+    }
+    let s = std::str::from_utf8(&bytes[2..2 + n])
+        .map_err(|e| format!("invalid utf-8 string: {e}"))?
+        .to_string();
+    Ok((s, &bytes[2 + n..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload_of(pool: &Arc<BlockPool<f32>>, parts: &[&[f32]]) -> Payload<f32> {
+        payload_from_wire(pool, &parts.iter().map(|p| p.len()).collect::<Vec<_>>(), |dst| {
+            let mut off = 0;
+            for p in parts {
+                dst[off..off + p.len()].copy_from_slice(p);
+                off += p.len();
+            }
+        })
+    }
+
+    #[test]
+    fn data_round_trip_all_dtypes() {
+        let pool32 = Arc::new(BlockPool::<f32>::new());
+        let payload = payload_of(&pool32, &[&[1.5, -2.25, 3.0], &[], &[7.125]]);
+        let bytes = encode_data::<f32>(3, 41, Frame { idx: 2, of: 5 }, &payload);
+        // Strip the length prefix as read_frame would.
+        let body = &bytes[4..];
+        assert_eq!(body[0], KIND_DATA);
+        let msg = decode_data::<f32>(body, &pool32).unwrap();
+        assert_eq!(msg.from, 3);
+        assert_eq!(msg.step, 41);
+        assert_eq!(msg.frame, Frame { idx: 2, of: 5 });
+        assert_eq!(msg.payload.len(), 3);
+        assert_eq!(msg.payload[0].as_slice(), &[1.5, -2.25, 3.0]);
+        assert!(msg.payload[1].is_empty());
+        assert_eq!(msg.payload[2].as_slice(), &[7.125]);
+
+        // i64 exercises the widest element and a different dtype tag.
+        let pool64 = Arc::new(BlockPool::<i64>::new());
+        let vals: Vec<i64> = vec![i64::MIN, -1, 0, 1, i64::MAX];
+        let p64 = payload_from_wire(&pool64, &[5], |d| d.copy_from_slice(&vals));
+        let bytes = encode_data::<i64>(0, 7, Frame::WHOLE, &p64);
+        let msg = decode_data::<i64>(&bytes[4..], &pool64).unwrap();
+        assert_eq!(msg.payload[0].as_slice(), &vals[..]);
+    }
+
+    #[test]
+    fn data_rejects_dtype_mismatch_and_truncation() {
+        let pool32 = Arc::new(BlockPool::<f32>::new());
+        let payload = payload_of(&pool32, &[&[1.0, 2.0]]);
+        let bytes = encode_data::<f32>(0, 0, Frame::WHOLE, &payload);
+        let body = &bytes[4..];
+        // f32-tagged bytes into an f64 endpoint: clean error.
+        let pool64 = Arc::new(BlockPool::<f64>::new());
+        assert!(decode_data::<f64>(body, &pool64).unwrap_err().contains("dtype"));
+        // Truncated element section.
+        assert!(decode_data::<f32>(&body[..body.len() - 1], &pool32)
+            .unwrap_err()
+            .contains("element section"));
+        // Truncated header.
+        assert!(decode_data::<f32>(&body[..10], &pool32).is_err());
+    }
+
+    #[test]
+    fn read_frame_distinguishes_clean_eof_from_torn_frames() {
+        // Clean EOF at a boundary.
+        let empty: &[u8] = &[];
+        assert!(read_frame(&mut { empty }, MAX_BODY_BYTES).unwrap().is_none());
+        // Torn length prefix.
+        let torn: &[u8] = &[3, 0];
+        assert!(read_frame(&mut { torn }, MAX_BODY_BYTES)
+            .unwrap_err()
+            .contains("torn"));
+        // Short body: prefix claims 100 bytes, 3 delivered.
+        let mut short = 100u32.to_le_bytes().to_vec();
+        short.extend_from_slice(&[1, 2, 3]);
+        assert!(read_frame(&mut short.as_slice(), MAX_BODY_BYTES)
+            .unwrap_err()
+            .contains("torn"));
+        // Oversized body cap.
+        let big = u32::MAX.to_le_bytes();
+        assert!(read_frame(&mut big.as_slice(), MAX_BODY_BYTES)
+            .unwrap_err()
+            .contains("cap"));
+        // A well-formed frame round-trips.
+        let frame = encode_peer(4);
+        let body = read_frame(&mut frame.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(decode_peer(&body).unwrap(), 4);
+    }
+
+    #[test]
+    fn bootstrap_messages_round_trip() {
+        let hello = encode_hello(3, "127.0.0.1:4567");
+        let body = read_frame(&mut hello.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(body[0], KIND_HELLO);
+        assert_eq!(decode_hello(&body).unwrap(), (3, "127.0.0.1:4567".to_string()));
+
+        let addrs: Vec<String> = (0..5).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect();
+        let map = encode_addr_map(&addrs);
+        let body = read_frame(&mut map.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(decode_addr_map(&body).unwrap(), addrs);
+
+        // A corrupt rank count far beyond the body must be a clean error
+        // (no wire-controlled giant allocation).
+        let mut corrupt = vec![KIND_ADDRMAP];
+        corrupt.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_addr_map(&corrupt).unwrap_err().contains("claims"));
+    }
+
+    #[test]
+    fn probe_echo_and_params_round_trip() {
+        let probe = encode_probe(KIND_PROBE, 0xDEADBEEF, 64);
+        let body = read_frame(&mut probe.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(body[0], KIND_PROBE);
+        assert_eq!(decode_probe(&body).unwrap(), (0xDEADBEEF, 64));
+        let echo = echo_of(&body);
+        let ebody = read_frame(&mut echo.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(ebody[0], KIND_ECHO);
+        assert_eq!(decode_probe(&ebody).unwrap(), (0xDEADBEEF, 64));
+
+        let p = NetParams {
+            alpha: 1.25e-5,
+            beta: 3.5e-9,
+            gamma: 7.0e-11,
+        };
+        let enc = encode_params(&p);
+        let body = read_frame(&mut enc.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(decode_params(&body).unwrap(), p);
+    }
+}

@@ -156,31 +156,34 @@ pub fn stats(s: &ProcSchedule) -> ScheduleStats {
 /// "first reduce into / copy into `b` precedes this send of `b`" a simple
 /// seen-before check.
 pub fn wire_reduce_placement(s: &ProcSchedule) -> Vec<Vec<bool>> {
+    (0..s.p).map(|proc| wire_placement_row(s, proc)).collect()
+}
+
+/// One process's row of [`wire_reduce_placement`] — the per-rank entry
+/// point for single-rank executors (`crate::net::Endpoint`), which would
+/// otherwise pay the full P-proc walk to keep one row.
+pub fn wire_placement_row(s: &ProcSchedule, proc: usize) -> Vec<bool> {
     let nb = s.max_buf_id() as usize;
-    (0..s.p)
-        .map(|proc| {
-            let mut produced = vec![false; nb];
-            let mut flag = vec![false; nb];
-            for step in &s.steps {
-                for m in step.ops[proc].iter().flat_map(|o| o.micro()) {
-                    match m {
-                        MicroOp::Reduce { dst, .. } | MicroOp::Copy { dst, .. } => {
-                            produced[dst as usize] = true
+    let mut produced = vec![false; nb];
+    let mut flag = vec![false; nb];
+    for step in &s.steps {
+        for m in step.ops[proc].iter().flat_map(|o| o.micro()) {
+            match m {
+                MicroOp::Reduce { dst, .. } | MicroOp::Copy { dst, .. } => {
+                    produced[dst as usize] = true
+                }
+                MicroOp::Send { bufs, .. } => {
+                    for &b in bufs {
+                        if produced[b as usize] {
+                            flag[b as usize] = true;
                         }
-                        MicroOp::Send { bufs, .. } => {
-                            for &b in bufs {
-                                if produced[b as usize] {
-                                    flag[b as usize] = true;
-                                }
-                            }
-                        }
-                        _ => {}
                     }
                 }
+                _ => {}
             }
-            flag
-        })
-        .collect()
+        }
+    }
+    flag
 }
 
 /// Decide, for one `Recv`, which received buffers a **chunked** executor
@@ -255,6 +258,70 @@ pub fn plan_chunk_fusion(
         }
     }
     plan
+}
+
+/// Cached [`plan_chunk_fusion`] rows for one process: indexed
+/// `[local_step][recv_index_within_step][received_buffer_position]`, where
+/// `recv_index_within_step` counts `Recv` micro-ops of that process's op
+/// list in program order. Stored by the persistent pool next to its
+/// placement rows ([`wire_reduce_placement`]) so chunked warm-pool
+/// receives stop re-running the per-message lookahead.
+pub type FusionRows = Vec<Vec<Vec<Option<BufId>>>>;
+
+/// Precompute every [`plan_chunk_fusion`] decision of a schedule — the
+/// static counterpart of the executor's per-message lookahead, keyed
+/// `(proc, step, recv)` — by replaying each process's micro-op stream
+/// against a liveness set that provably matches the engine's slot table:
+///
+/// * a buffer is live from its creation (init, `Recv`, `Copy` dst) until
+///   its `Free` (the engine's `slots[b].take()` clears the slot on every
+///   `Free`, whatever the slot state);
+/// * a `Recv`'s plan is computed *before* its own buffers go live (the
+///   engine assigns the received slots only after planning);
+/// * `Reduce` leaves its destination live (the engine re-inserts the
+///   materialized slot).
+///
+/// The executor consumes these rows via the `fusion` argument of
+/// [`crate::cluster::arena::DataPlane::run_schedule`] and, under
+/// `debug_assertions`, re-runs the live lookahead per message to assert
+/// the cached row matches the actual slot states.
+pub fn chunk_fusion_rows(s: &ProcSchedule) -> Vec<FusionRows> {
+    (0..s.p).map(|proc| chunk_fusion_rows_for(s, proc)).collect()
+}
+
+/// One process's [`FusionRows`] — the per-rank entry point for single-rank
+/// executors (`crate::net::Endpoint`).
+pub fn chunk_fusion_rows_for(s: &ProcSchedule, proc: usize) -> FusionRows {
+    let nb = s.max_buf_id() as usize;
+    let mut live = vec![false; nb];
+    for &(id, _) in &s.init[proc] {
+        live[id as usize] = true;
+    }
+    s.steps
+        .iter()
+        .map(|step| {
+            let ops: &[Op] = &step.ops[proc];
+            let mut rows: Vec<Vec<Option<BufId>>> = Vec::new();
+            for oi in 0..ops.len() {
+                for m in ops[oi].micro() {
+                    match m {
+                        MicroOp::Recv { bufs, .. } => {
+                            rows.push(plan_chunk_fusion(&ops[oi + 1..], bufs, &|b| {
+                                live[b as usize]
+                            }));
+                            for &b in bufs {
+                                live[b as usize] = true;
+                            }
+                        }
+                        MicroOp::Copy { dst, .. } => live[dst as usize] = true,
+                        MicroOp::Free { buf } => live[buf as usize] = false,
+                        MicroOp::Send { .. } | MicroOp::Reduce { .. } => {}
+                    }
+                }
+            }
+            rows
+        })
+        .collect()
 }
 
 /// Could chunking a message from `proc` do its receiver any good?
@@ -607,6 +674,72 @@ mod tests {
         assert_eq!(cp.chunked_messages, 2);
         assert_eq!(cp.total_frames, 6);
         assert_eq!(cp.max_frame_elems, 16);
+    }
+
+    /// The static per-(proc, step, recv) rows must equal the per-message
+    /// lookahead run against the engine-accurate liveness at each Recv.
+    #[test]
+    fn chunk_fusion_rows_match_per_message_lookahead() {
+        use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
+        for p in [2usize, 5, 8] {
+            for kind in [
+                AlgorithmKind::Ring,
+                AlgorithmKind::BwOptimal,
+                AlgorithmKind::LatOptimal,
+                AlgorithmKind::RecursiveDoubling,
+            ] {
+                let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
+                let rows = chunk_fusion_rows(&s);
+                assert_eq!(rows.len(), p);
+                let nb = s.max_buf_id() as usize;
+                for proc in 0..p {
+                    assert_eq!(rows[proc].len(), s.steps.len(), "{kind:?} P={p}");
+                    // Replay liveness independently and cross-check each row.
+                    let mut live = vec![false; nb];
+                    for &(id, _) in &s.init[proc] {
+                        live[id as usize] = true;
+                    }
+                    for (si, step) in s.steps.iter().enumerate() {
+                        let ops = &step.ops[proc];
+                        let mut ri = 0usize;
+                        for oi in 0..ops.len() {
+                            for m in ops[oi].micro() {
+                                match m {
+                                    MicroOp::Recv { bufs, .. } => {
+                                        let want = plan_chunk_fusion(&ops[oi + 1..], bufs, &|b| {
+                                            live[b as usize]
+                                        });
+                                        assert_eq!(
+                                            rows[proc][si][ri], want,
+                                            "{kind:?} P={p} proc={proc} step={si} recv={ri}"
+                                        );
+                                        ri += 1;
+                                        for &b in bufs {
+                                            live[b as usize] = true;
+                                        }
+                                    }
+                                    MicroOp::Copy { dst, .. } => live[dst as usize] = true,
+                                    MicroOp::Free { buf } => live[buf as usize] = false,
+                                    _ => {}
+                                }
+                            }
+                        }
+                        assert_eq!(rows[proc][si].len(), ri, "{kind:?} row count");
+                    }
+                }
+                // At least one kind/proc has a fusible reduce somewhere
+                // (every reduce-scatter phase folds received chunks).
+                if matches!(kind, AlgorithmKind::Ring | AlgorithmKind::BwOptimal) {
+                    assert!(
+                        rows.iter()
+                            .flatten()
+                            .flatten()
+                            .any(|plan| plan.iter().any(Option::is_some)),
+                        "{kind:?} P={p}: no fusible reduce found"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
