@@ -12,9 +12,11 @@
 //! message sizes × process counts (`BENCH_dataplane.json`) so the perf
 //! trajectory of both paths accumulates across PRs, runs the
 //! **chunked-vs-monolithic** step-streaming ablation on the deterministic
-//! DES clock (`BENCH_chunking.json`), and measures the **sockets-vs-
+//! DES clock (`BENCH_chunking.json`), measures the **sockets-vs-
 //! in-process** transport cost over a real loopback TCP mesh
-//! (`BENCH_net.json`).
+//! (`BENCH_net.json`), and runs the deterministic **flat-vs-hierarchical**
+//! scheduling ablation under a split intra/inter parameter regime
+//! (`BENCH_hier.json`).
 //!
 //! Set `GAR_BENCH_FAST=1` (CI smoke) to shrink budgets and sizes.
 
@@ -491,6 +493,95 @@ fn bench_net() {
     println!("wrote BENCH_net.json");
 }
 
+/// Flat-vs-hierarchical ablation (`BENCH_hier.json`).
+///
+/// Fully deterministic (pure α–β–γ DES, no wall clock, so it **is**
+/// stable enough to track across CI runs): for cluster shapes × message
+/// sizes under a split parameter regime — fast in-node links, Table-2
+/// inter-node links — compare the best *flat* schedule (which cannot see
+/// the node boundary and pays inter-node α/β on most links) against the
+/// tuner-chosen two-level composition (`coordinator::choose_two_level`:
+/// reduce to each node leader, best inner schedule across leaders,
+/// broadcast down). `speedup` = flat/hier is the reason the `topo` layer
+/// exists; it grows with the α gap and the node count.
+fn bench_hier() {
+    use permallreduce::coordinator::{choose_two_level, HierParams};
+    use permallreduce::des::simulate_topo;
+    use permallreduce::topo::NodeMap;
+
+    // In-node: NVLink-class latency/bandwidth. Inter-node: Table 2.
+    let hp = HierParams {
+        intra: NetParams {
+            alpha: 3e-7,
+            beta: 1e-10,
+            ..NetParams::table2()
+        },
+        inter: NetParams::table2(),
+    };
+    let flat_kinds = [
+        AlgorithmKind::Ring,
+        AlgorithmKind::BwOptimal,
+        AlgorithmKind::LatOptimal,
+        AlgorithmKind::RecursiveDoubling,
+    ];
+    let maps: &[&str] = &["4+4", "4+4+4+4", "8+8+8+8", "6+6+5"];
+    let sizes_bytes: &[usize] = &[4 << 10, 256 << 10, 4 << 20];
+    println!("\n== flat vs hierarchical scheduling (DES-timed, split α/β regime) ==");
+    let mut rows = String::new();
+    let mut speedups: Vec<f64> = Vec::new();
+    for &spec in maps {
+        let map = NodeMap::parse(spec).unwrap();
+        let p = map.p();
+        for &m in sizes_bytes {
+            let ctx = BuildCtx {
+                m_bytes: m,
+                params: hp.inter,
+                ..BuildCtx::default()
+            };
+            // Best flat schedule under the same mixed regime (RD drops
+            // out at non-power-of-two P — build errors are skipped).
+            let (flat_kind, flat_s) = flat_kinds
+                .iter()
+                .filter_map(|&k| {
+                    let s = Algorithm::new(k, p).build(&ctx).ok()?;
+                    Some((k, simulate_topo(&s, m, &hp.intra, &hp.inter, &map).makespan))
+                })
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .expect("at least one flat schedule builds");
+            let (hier, hier_s) = choose_two_level(&map, m, &hp).expect("two-level tuner");
+            let speedup = flat_s / hier_s;
+            speedups.push(speedup);
+            println!(
+                "{spec:>9} {m:>9} B: flat {flat_kind:?} {} | {} {} → {speedup:.2}×",
+                fmt_t(flat_s),
+                hier.name,
+                fmt_t(hier_s),
+            );
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"nodes\": \"{spec}\", \"p\": {p}, \"m_bytes\": {m}, \
+                 \"flat_kind\": \"{flat_kind:?}\", \"flat_s\": {flat_s:.6e}, \
+                 \"hier_name\": \"{}\", \"hier_s\": {hier_s:.6e}, \
+                 \"speedup\": {speedup:.4}}}",
+                hier.name
+            ));
+        }
+    }
+    let min = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+    let json = format!(
+        "{{\n  \"bench\": \"hier\",\n  \"timing\": \"des-alpha-beta-gamma\",\n  \
+         \"note\": \"flat_s / hier_s = best single-level schedule vs the composed \
+         two-level schedule under fast-intra/slow-inter links; deterministic\",\n  \
+         \"entries\": [\n{rows}\n  ],\n  \"min_speedup\": {min:.4},\n  \
+         \"max_speedup\": {max:.4}\n}}\n"
+    );
+    std::fs::write("BENCH_hier.json", &json).expect("write BENCH_hier.json");
+    println!("wrote BENCH_hier.json (speedup {min:.2}×–{max:.2}×)");
+}
+
 /// Shared iteration count for both transports (determined by shape only,
 /// so every rank of the socket mesh agrees).
 fn net_iters(fast: bool, n: usize, p: usize) -> usize {
@@ -526,6 +617,7 @@ fn main() {
     bench_dataplane();
     bench_chunking();
     bench_net();
+    bench_hier();
 
     #[cfg(feature = "pjrt")]
     bench_pjrt(&mut rng, budget);

@@ -21,11 +21,19 @@
 //! ```text
 //! bench_gate <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json>]]
 //! bench_gate --self-test <BENCH_baseline.json>   # prove the gate can fail
+//! bench_gate --ratchet <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json>]]
 //! ```
 //!
 //! The baseline is a conservative floor, meant to be ratcheted upward as
 //! the data plane improves; every baseline series must be present in the
 //! current artifact (a missing series is a coverage regression and fails).
+//! `--ratchet` automates the upward half: it prints an updated baseline
+//! whose floors are raised toward the measured artifacts (wall-clock
+//! sections discounted by the regression margin so one lucky runner can't
+//! pin an unreachable floor; the deterministic DES chunking floors ratchet
+//! exactly) and **never lowered**. CI uploads the result as an artifact
+//! for a maintainer to review and commit — the gate itself keeps reading
+//! the committed file.
 
 use std::process::ExitCode;
 
@@ -295,13 +303,99 @@ fn self_test(baseline: &Baseline, max_regress_pct: f64) -> Result<(), String> {
     Ok(())
 }
 
+/// `--ratchet`: the updated-baseline JSON. Wall-clock floors (dataplane
+/// series, bucketing) move up to `observed × (1 − pct/100)` — the same
+/// slack the gate grants, so a baseline ratcheted from run A still passes
+/// run B on an equally healthy runner. The DES chunking floors are
+/// deterministic and ratchet to the observed value exactly. No floor ever
+/// moves down, and series the baseline does not cover yet are added.
+fn ratchet(
+    baseline: &Baseline,
+    current: &[Series],
+    bucketing: Option<f64>,
+    chunking: Option<(f64, Option<f64>)>,
+) -> String {
+    let discount = 1.0 - baseline.pct / 100.0;
+    let mut series: Vec<Series> = baseline
+        .series
+        .iter()
+        .map(|b| {
+            let observed = current
+                .iter()
+                .find(|c| c.p == b.p && c.elems == b.elems)
+                .map_or(0.0, |c| c.speedup * discount);
+            Series {
+                speedup: b.speedup.max(observed),
+                ..b.clone()
+            }
+        })
+        .collect();
+    for c in current {
+        if !series.iter().any(|s| s.p == c.p && s.elems == c.elems) {
+            series.push(Series {
+                speedup: c.speedup * discount,
+                ..c.clone()
+            });
+        }
+    }
+    let mut out = format!(
+        "{{\n  \"bench\": \"dataplane-baseline\",\n  \"max_regress_pct\": {},\n  \
+         \"series\": [\n",
+        baseline.pct
+    );
+    for (i, s) in series.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "    {{\"p\": {}, \"elems\": {}, \"min_speedup\": {:.4}}}",
+            s.p, s.elems, s.speedup
+        ));
+    }
+    out.push_str("\n  ]");
+    let bucketing_floor = match (baseline.bucketing_floor, bucketing) {
+        (Some(old), Some(got)) => Some(old.max(got * discount)),
+        (Some(old), None) => Some(old),
+        (None, Some(got)) => Some(got * discount),
+        (None, None) => None,
+    };
+    if let Some(floor) = bucketing_floor {
+        out.push_str(&format!(
+            ",\n  \"bucketing\": {{\"min_speedup\": {floor:.4}}}"
+        ));
+    }
+    let old_ch = baseline.chunking;
+    if old_ch.is_some() || chunking.is_some() {
+        let pct = old_ch.map_or(0.5, |c| c.pct);
+        let mut min = old_ch.map_or(0.0, |c| c.min_speedup);
+        let mut p8 = old_ch.and_then(|c| c.largest_bucket_p8);
+        if let Some((got_min, got_p8)) = chunking {
+            min = min.max(got_min);
+            p8 = match (p8, got_p8) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        out.push_str(&format!(
+            ",\n  \"chunking\": {{\"min_speedup\": {min:.4}"
+        ));
+        if let Some(p8) = p8 {
+            out.push_str(&format!(", \"largest_bucket_p8_min_speedup\": {p8:.4}"));
+        }
+        out.push_str(&format!(", \"max_regress_pct\": {pct}}}"));
+    }
+    out.push_str("\n}\n");
+    out
+}
+
 fn run() -> Result<(), String> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (selftest, files): (bool, Vec<&String>) = match args.first().map(String::as_str) {
-        Some("--self-test") => (true, args.iter().skip(1).collect()),
-        _ => (false, args.iter().collect()),
+    let (mode, files): (&str, Vec<&String>) = match args.first().map(String::as_str) {
+        Some(m @ ("--self-test" | "--ratchet")) => (m, args.iter().skip(1).collect()),
+        _ => ("", args.iter().collect()),
     };
-    let usage = "usage: bench_gate [--self-test] <baseline.json> \
+    let selftest = mode == "--self-test";
+    let usage = "usage: bench_gate [--self-test | --ratchet] <baseline.json> \
                  [<dataplane.json> [<bucketing.json> [<chunking.json>]]]";
     let baseline_path = files.first().ok_or(usage)?;
     let baseline_text = std::fs::read_to_string(baseline_path)
@@ -333,6 +427,25 @@ fn run() -> Result<(), String> {
     let current_text = std::fs::read_to_string(current_path)
         .map_err(|e| format!("reading {current_path}: {e}"))?;
     let current = parse_current(&current_text)?;
+
+    if mode == "--ratchet" {
+        // Optional artifacts: ratchet whatever was measured this run.
+        let bucketing = match files.get(2) {
+            Some(path) => Some(parse_bucketing(
+                &std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?,
+            )?),
+            None => None,
+        };
+        let chunking = match files.get(3) {
+            Some(path) => Some(parse_chunking(
+                &std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?,
+            )?),
+            None => None,
+        };
+        print!("{}", ratchet(&baseline, &current, bucketing, chunking));
+        return Ok(());
+    }
+
     let mut failures = gate(&baseline.series, &current, pct);
     if let Some(floor) = baseline.bucketing_floor {
         let bucketing_path = files.get(2).ok_or(
@@ -524,6 +637,65 @@ mod tests {
         }"#;
         let cur = parse_current(text).unwrap();
         assert_eq!(cur, vec![series(4, 4096, 2.5)]);
+    }
+
+    #[test]
+    fn ratchet_raises_floors_never_lowers_and_round_trips() {
+        let base = Baseline {
+            pct: 20.0,
+            series: vec![series(4, 4096, 1.0), series(8, 65536, 2.0)],
+            bucketing_floor: Some(1.0),
+            chunking: Some(ChunkingFloors {
+                min_speedup: 1.0,
+                largest_bucket_p8: Some(1.0),
+                pct: 0.5,
+            }),
+        };
+        // First series measured much faster (ratchets, discounted by the
+        // 20% margin), second measured slower (floor must not move), plus
+        // a series the baseline never covered (gets added).
+        let current = [
+            series(4, 4096, 2.0),
+            series(8, 65536, 1.5),
+            series(16, 1 << 20, 3.0),
+        ];
+        let text = ratchet(&base, &current, Some(2.5), Some((1.3, Some(1.4))));
+        let new = parse_baseline(&text).expect("ratchet output must be a valid baseline");
+        assert_eq!(new.pct, 20.0);
+        assert_eq!(new.series.len(), 3, "{text}");
+        let floor = |p, elems| {
+            new.series
+                .iter()
+                .find(|s| s.p == p && s.elems == elems)
+                .unwrap()
+                .speedup
+        };
+        assert!((floor(4, 4096) - 1.6).abs() < 1e-9, "discounted ratchet");
+        assert_eq!(floor(8, 65536), 2.0, "floors never move down");
+        assert!((floor(16, 1 << 20) - 2.4).abs() < 1e-9, "new coverage added");
+        assert!((new.bucketing_floor.unwrap() - 2.0).abs() < 1e-9);
+        let ch = new.chunking.unwrap();
+        // DES floors are deterministic: ratcheted exactly, no discount.
+        assert_eq!(ch.min_speedup, 1.3);
+        assert_eq!(ch.largest_bucket_p8, Some(1.4));
+        assert_eq!(ch.pct, 0.5);
+        // The ratcheted baseline accepts the run it was ratcheted from.
+        assert!(gate(&new.series, &current, new.pct).is_empty());
+    }
+
+    #[test]
+    fn ratchet_without_optional_artifacts_keeps_old_sections() {
+        let base = Baseline {
+            pct: 20.0,
+            series: vec![series(4, 4096, 1.5)],
+            bucketing_floor: Some(1.2),
+            chunking: None,
+        };
+        let text = ratchet(&base, &[series(4, 4096, 1.0)], None, None);
+        let new = parse_baseline(&text).unwrap();
+        assert_eq!(new.series[0].speedup, 1.5);
+        assert_eq!(new.bucketing_floor, Some(1.2));
+        assert!(new.chunking.is_none());
     }
 
     #[test]

@@ -965,9 +965,11 @@ impl<T: Element> DataPlane<T> {
     /// when chunking is off, the largest buffer fits one chunk, or the
     /// receiver cannot fuse any of the payload ([`chunk_pays`] — chunking
     /// a pure-forward message pays per-frame overhead for zero overlap);
-    /// else a stream of `(idx, of)`-framed sub-payloads — shared backings
-    /// are sliced per frame (refcount bumps) and slab parts are copied
-    /// into one pooled sub-block per frame, so the receiver can start
+    /// else a stream of `(idx, of)`-framed sub-payloads. Every frame is a
+    /// zero-copy slice: shared backings slice directly (refcount bumps),
+    /// and slab parts are snapshotted **once** into a single frozen pooled
+    /// block — the same one slab→wire copy per buffer the monolithic path
+    /// pays — that all frames then slice, so the receiver can start
     /// combining while later frames are still being produced.
     fn send_message(
         &mut self,
@@ -1008,54 +1010,60 @@ impl<T: Element> DataPlane<T> {
                 self.slots[b as usize] = Some(BufSlot::Shared(Chunk::new(blk.freeze(), 0, len)));
             }
         }
+        // Snapshot slab-resident parts once: one pooled whole-buffer copy
+        // per slab buffer (exactly the monolithic path's accounting —
+        // `slab_to_wire_copies` counts buffers, not frames), frozen so
+        // every frame below is a zero-copy slice of it. Slots stay `Slab`:
+        // liveness, later reads and `Free` are untouched.
+        let mut snap: Vec<Option<Chunk<T>>> = vec![None; ids.len()];
+        let slab_total: usize = ids
+            .iter()
+            .filter_map(|&b| match &self.slots[b as usize] {
+                Some(BufSlot::Slab(sl)) => Some(sl.len),
+                _ => None,
+            })
+            .sum();
+        if slab_total > 0 {
+            let mut wire = BlockPool::take(&self.pool, slab_total);
+            let mut spans: Vec<(usize, usize, usize)> = Vec::new();
+            let mut cursor = 0usize;
+            for (i, &b) in ids.iter().enumerate() {
+                if let Some(BufSlot::Slab(sl)) = &self.slots[b as usize] {
+                    let sl = *sl;
+                    wire.data_mut()[cursor..cursor + sl.len]
+                        .copy_from_slice(self.arena.slice(sl));
+                    self.local.copies += 1;
+                    self.local.elems += sl.len as u64;
+                    spans.push((i, cursor, sl.len));
+                    cursor += sl.len;
+                }
+            }
+            let frozen = wire.freeze();
+            for (i, off, len) in spans {
+                snap[i] = Some(Chunk::new(frozen.clone(), off, len));
+            }
+        }
         self.local.chunked_msgs += 1;
         self.local.chunk_frames += n_frames as u64;
         for k in 0..n_frames {
             let lo = k * c;
-            let mut slab_total = 0usize;
-            for &b in ids {
-                if let Some(BufSlot::Slab(sl)) = &self.slots[b as usize] {
-                    slab_total += sl.len.saturating_sub(lo).min(c);
-                }
-            }
-            let mut wire = (slab_total > 0).then(|| BlockPool::take(&self.pool, slab_total));
-            let mut parts: Vec<Part<T>> = Vec::with_capacity(ids.len());
-            let mut cursor = 0usize;
-            for &b in ids {
-                match self.slots[b as usize].as_ref().expect("send of dead buffer") {
-                    BufSlot::Shared(ch) => {
-                        let sub = ch.len().saturating_sub(lo).min(c);
-                        if sub == 0 {
-                            parts.push(Part::Fwd(self.empty.clone()));
-                        } else {
-                            parts.push(Part::Fwd(ch.slice(lo, sub)));
+            let payload: Payload<T> = ids
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| {
+                    let ch = match self.slots[b as usize].as_ref().expect("send of dead buffer")
+                    {
+                        BufSlot::Shared(ch) => ch,
+                        BufSlot::Slab(_) => {
+                            snap[i].as_ref().expect("slab parts snapshotted above")
                         }
-                    }
-                    BufSlot::Slab(sl) => {
-                        let sub = sl.len.saturating_sub(lo).min(c);
-                        if sub == 0 {
-                            parts.push(Part::Fwd(self.empty.clone()));
-                        } else {
-                            let sl = *sl;
-                            let w = wire.as_mut().expect("wire block exists for slab parts");
-                            w.data_mut()[cursor..cursor + sub]
-                                .copy_from_slice(&self.arena.slice(sl)[lo..lo + sub]);
-                            self.local.copies += 1;
-                            self.local.elems += sub as u64;
-                            parts.push(Part::Fresh(cursor, sub));
-                            cursor += sub;
-                        }
-                    }
-                    BufSlot::Owned(_) => unreachable!("Owned slots frozen above"),
-                }
-            }
-            let frozen = wire.map(Block::freeze);
-            let payload: Payload<T> = parts
-                .into_iter()
-                .map(|p| match p {
-                    Part::Fwd(ch) => ch,
-                    Part::Fresh(off, len) => {
-                        Chunk::new(frozen.clone().expect("frozen wire block"), off, len)
+                        BufSlot::Owned(_) => unreachable!("Owned slots frozen above"),
+                    };
+                    let sub = ch.len().saturating_sub(lo).min(c);
+                    if sub == 0 {
+                        self.empty.clone()
+                    } else {
+                        ch.slice(lo, sub)
                     }
                 })
                 .collect();
@@ -1772,6 +1780,70 @@ mod tests {
         );
         // The slot is now Shared — a second send forwards.
         assert!(matches!(plane.slots[1].as_ref().unwrap(), BufSlot::Shared(_)));
+    }
+
+    /// Pin of the chunked slab→wire accounting: a slab-resident payload
+    /// split into N frames is snapshotted into the pool **once** (copy
+    /// counter per buffer, not per frame), every frame is a slice of that
+    /// snapshot carrying the right elements, and the slot stays
+    /// slab-resident so liveness/`Free` are untouched.
+    #[test]
+    fn chunked_send_snapshots_slab_once() {
+        struct Capture {
+            sent: Vec<(usize, usize, Frame, Payload<f64>)>,
+        }
+        impl Transport<f64> for Capture {
+            fn send(&mut self, to: usize, step: usize, frame: Frame, payload: Payload<f64>) {
+                self.sent.push((to, step, frame, payload));
+            }
+            fn recv(
+                &mut self,
+                _step: usize,
+                _from: usize,
+            ) -> Result<(Frame, Payload<f64>), ClusterError> {
+                unreachable!("send-only test transport")
+            }
+        }
+
+        let pool = Arc::new(BlockPool::<f64>::new());
+        let mut plane = DataPlane::new(pool.clone());
+        plane.chunk_elems = Some(2);
+        plane.slots.resize_with(1, || None);
+        let sl = plane.arena.alloc(7);
+        plane
+            .arena
+            .slice_mut(sl)
+            .copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        plane.slots[0] = Some(BufSlot::Slab(sl));
+        // A receiver that fuses the received buffer → chunking pays.
+        let recv_ops = vec![
+            Op::recv(0, vec![3]),
+            Op::ReduceMany {
+                pairs: std::sync::Arc::new(vec![(3, 4)]),
+            },
+        ];
+        let mut cap = Capture { sent: Vec::new() };
+        plane.send_message(&[0], 0, 1, 0, &recv_ops, &mut cap);
+
+        assert_eq!(cap.sent.len(), 4, "7 elems at 2 per chunk is 4 frames");
+        let mut all = Vec::new();
+        for (i, (to, step, frame, payload)) in cap.sent.iter().enumerate() {
+            assert_eq!((*to, *step), (1, 0));
+            assert_eq!((frame.idx, frame.of), (i as u32, 4));
+            all.extend_from_slice(payload[0].as_slice());
+        }
+        assert_eq!(all, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+
+        plane.flush_counters();
+        let c = pool.counters().snapshot();
+        assert_eq!(c.slab_to_wire_copies, 1, "one snapshot, not one copy per frame");
+        assert_eq!(c.slab_to_wire_elems, 7);
+        assert_eq!(c.chunked_msgs, 1);
+        assert_eq!(c.chunk_frames, 4);
+        assert!(
+            matches!(plane.slots[0].as_ref().unwrap(), BufSlot::Slab(_)),
+            "the buffer stays slab-resident after a chunked send"
+        );
     }
 
     #[test]

@@ -1,0 +1,410 @@
+//! The mixed transport: one OS process per **node**, channels within it,
+//! sockets between leaders.
+//!
+//! A hierarchical schedule ([`crate::topo::compose_two_level`]) is one
+//! ordinary [`ProcSchedule`] over all `P` ranks, but its traffic has
+//! structure: every cross-node message runs leader ↔ leader, everything
+//! else stays inside a node. [`run_node`] exploits that to execute one
+//! node's worth of ranks in a single process — each local rank is a
+//! scoped thread on a shared arena pool, same-node messages travel over
+//! in-process channels (the [`ScopedTransport`](super) shape), and only
+//! the **leader thread** holds the inter-node transport (in production a
+//! lazily-dialed [`crate::net::transport::NetTransport`] whose mesh ranks
+//! are *node indices*). That is the deployment shape the paper's two-level
+//! machines want: `k − 1` threads never touch a socket, and the node's
+//! socket count is the leader's `O(log L)`.
+//!
+//! The router is [`MixedTransport`]: `send`/`recv` peer ranks are global;
+//! same-node peers resolve to channel indices, cross-node peers (leaders
+//! only, by construction of the composed schedule) map through
+//! [`NodeMap::node_of`] onto the inter-node transport's mesh.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::sched::stats::{chunk_elems_for, wire_placement_row};
+use crate::sched::ProcSchedule;
+use crate::topo::NodeMap;
+
+use super::arena::{BlockPool, DataPlane, Frame, FrameQueue, NativeKernel, Payload, Transport};
+use super::{ClusterError, Element, Msg, ReduceOp};
+
+/// Options for one node's hierarchical execution.
+#[derive(Clone, Debug)]
+pub struct NodeOptions {
+    /// Per-receive timeout for the intra-node channels (the inter-node
+    /// transport keeps its own).
+    pub recv_timeout: Duration,
+    /// Chunked-streaming budget, bytes — must be identical on every node
+    /// (both sides of each link must agree on framing).
+    pub chunk_bytes: Option<usize>,
+}
+
+impl Default for NodeOptions {
+    fn default() -> Self {
+        NodeOptions {
+            recv_timeout: Duration::from_secs(30),
+            chunk_bytes: None,
+        }
+    }
+}
+
+/// Routes a global-rank [`Transport`] over two fabrics: in-process
+/// channels to same-node ranks, the wrapped inter-node transport
+/// (addressed by node index) to everything else. Non-leader threads carry
+/// `inter: None`; a composed two-level schedule never makes them touch it.
+pub struct MixedTransport<'a, T: Element, N: Transport<T>> {
+    rank: usize,
+    node: usize,
+    map: &'a NodeMap,
+    /// Senders to each local rank of this node, indexed by local index.
+    txs: Vec<mpsc::Sender<Msg<T>>>,
+    rx: mpsc::Receiver<Msg<T>>,
+    /// Out-of-order stash for the local fabric, keyed by `(step, from)`.
+    pending: HashMap<(usize, usize), FrameQueue<T>>,
+    timeout: Duration,
+    total_steps: usize,
+    inter: Option<&'a mut N>,
+}
+
+impl<'a, T: Element, N: Transport<T>> MixedTransport<'a, T, N> {
+    pub fn new(
+        rank: usize,
+        map: &'a NodeMap,
+        txs: Vec<mpsc::Sender<Msg<T>>>,
+        rx: mpsc::Receiver<Msg<T>>,
+        timeout: Duration,
+        total_steps: usize,
+        inter: Option<&'a mut N>,
+    ) -> MixedTransport<'a, T, N> {
+        MixedTransport {
+            rank,
+            node: map.node_of(rank),
+            map,
+            txs,
+            rx,
+            pending: HashMap::new(),
+            timeout,
+            total_steps,
+            inter,
+        }
+    }
+}
+
+impl<T: Element, N: Transport<T>> Transport<T> for MixedTransport<'_, T, N> {
+    fn send(&mut self, to: usize, step: usize, frame: Frame, payload: Payload<T>) {
+        if self.map.node_of(to) == self.node {
+            // Fire-and-forget: a hung receiver surfaces on its recv side.
+            let _ = self.txs[self.map.local_index(to)].send(Msg {
+                step,
+                from: self.rank,
+                frame,
+                payload,
+            });
+        } else {
+            let inter = self
+                .inter
+                .as_mut()
+                .expect("cross-node send from a non-leader rank: schedule is not two-level");
+            inter.send(self.map.node_of(to), step, frame, payload);
+        }
+    }
+
+    fn recv(&mut self, step: usize, from: usize) -> Result<(Frame, Payload<T>), ClusterError> {
+        if self.map.node_of(from) != self.node {
+            let inter = self
+                .inter
+                .as_mut()
+                .expect("cross-node recv on a non-leader rank: schedule is not two-level");
+            return inter.recv(step, self.map.node_of(from));
+        }
+        if let Some(q) = self.pending.get_mut(&(step, from)) {
+            if let Some(x) = q.pop_front() {
+                if q.is_empty() {
+                    self.pending.remove(&(step, from));
+                }
+                return Ok(x);
+            }
+        }
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let msg = self.rx.recv_timeout(remaining).map_err(|_| {
+                ClusterError::RecvTimeout {
+                    proc: self.rank,
+                    step,
+                    from,
+                }
+            })?;
+            if msg.step == step && msg.from == from {
+                return Ok((msg.frame, msg.payload));
+            }
+            if msg.step >= self.total_steps {
+                return Err(ClusterError::Protocol {
+                    proc: self.rank,
+                    detail: format!(
+                        "message tagged step {} from {} outside the schedule's {} steps",
+                        msg.step, msg.from, self.total_steps
+                    ),
+                });
+            }
+            self.pending
+                .entry((msg.step, msg.from))
+                .or_default()
+                .push_back((msg.frame, msg.payload));
+        }
+    }
+}
+
+/// Execute one node's share of a (typically two-level) schedule: local
+/// ranks `map.members(node)` run as scoped threads over in-process
+/// channels and a shared arena pool, and the node's **leader** routes all
+/// cross-node traffic through `inter` — a transport over the `L` nodes
+/// (mesh rank = node index), usually a lazily-dialed
+/// [`NetTransport`](crate::net::transport::NetTransport).
+///
+/// `inputs[j]` is the input vector of local rank `j` (global rank
+/// `map.leader(node) + j`); the result vectors come back in the same
+/// order and are bit-identical across nodes and to
+/// [`oracle::execute_reference`](super::oracle::execute_reference) on the
+/// same schedule.
+pub fn run_node<T: Element, N: Transport<T> + Send>(
+    s: &ProcSchedule,
+    map: &NodeMap,
+    node: usize,
+    inputs: &[Vec<T>],
+    op: ReduceOp,
+    inter: &mut N,
+    opts: &NodeOptions,
+) -> Result<Vec<Vec<T>>, ClusterError> {
+    if s.p != map.p() {
+        return Err(ClusterError::BadInput(format!(
+            "schedule is over {} ranks, node map over {}",
+            s.p,
+            map.p()
+        )));
+    }
+    if node >= map.n_nodes() {
+        return Err(ClusterError::BadInput(format!(
+            "node {node} out of range 0..{}",
+            map.n_nodes()
+        )));
+    }
+    let k = map.size(node);
+    if inputs.len() != k {
+        return Err(ClusterError::BadInput(format!(
+            "node {node} has {k} ranks but {} input vectors",
+            inputs.len()
+        )));
+    }
+    let n = inputs[0].len();
+    if inputs.iter().any(|v| v.len() != n) {
+        return Err(ClusterError::BadInput(
+            "input vectors must have equal lengths".into(),
+        ));
+    }
+
+    let pool = Arc::new(BlockPool::<T>::new());
+    let chunk_elems = opts
+        .chunk_bytes
+        .map(|b| chunk_elems_for(b, std::mem::size_of::<T>()));
+    let total_steps = s.steps.len();
+    let leader = map.leader(node);
+
+    let mut txs = Vec::with_capacity(k);
+    let mut rxs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = mpsc::channel::<Msg<T>>();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+
+    let mut results: Vec<Option<Result<Vec<T>, ClusterError>>> = (0..k).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(k);
+        let mut inter_slot = Some(inter);
+        for (j, rx) in rxs.iter_mut().enumerate() {
+            let rank = leader + j;
+            let rx = rx.take().expect("each local rank owns its receiver");
+            let txs = txs.clone();
+            let input = &inputs[j];
+            let pool = pool.clone();
+            // Only the leader thread borrows the inter-node transport —
+            // the composition guarantees no other rank needs it.
+            let inter = if rank == leader { inter_slot.take() } else { None };
+            handles.push(scope.spawn(move || {
+                let mut t =
+                    MixedTransport::new(rank, map, txs, rx, opts.recv_timeout, total_steps, inter);
+                let wire_dst = wire_placement_row(s, rank);
+                let kernel = NativeKernel(op);
+                let mut out = vec![T::default(); n];
+                let mut plane = DataPlane::new(pool);
+                plane
+                    .run_schedule(
+                        s, rank, input, 0, &wire_dst, None, chunk_elems, &mut t, &kernel, &mut out,
+                    )
+                    .map(|()| out)
+            }));
+        }
+        for (j, h) in handles.into_iter().enumerate() {
+            results[j] = Some(h.join().unwrap_or(Err(ClusterError::WorkerPanic {
+                proc: leader + j,
+            })));
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("every local rank reports"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{AlgorithmKind, BuildCtx};
+    use crate::cluster::oracle;
+    use crate::topo::{two_level, NodeMap};
+    use crate::util::Rng;
+
+    /// An in-process stand-in for the inter-node socket mesh: every node
+    /// posts to per-node channels keyed by (step, from-node).
+    struct ChanInter<T: Element> {
+        node: usize,
+        txs: Vec<mpsc::Sender<Msg<T>>>,
+        rx: mpsc::Receiver<Msg<T>>,
+        pending: HashMap<(usize, usize), FrameQueue<T>>,
+    }
+
+    impl<T: Element> Transport<T> for ChanInter<T> {
+        fn send(&mut self, to: usize, step: usize, frame: Frame, payload: Payload<T>) {
+            let _ = self.txs[to].send(Msg {
+                step,
+                from: self.node,
+                frame,
+                payload,
+            });
+        }
+
+        fn recv(&mut self, step: usize, from: usize) -> Result<(Frame, Payload<T>), ClusterError> {
+            if let Some(q) = self.pending.get_mut(&(step, from)) {
+                if let Some(x) = q.pop_front() {
+                    return Ok(x);
+                }
+            }
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                let msg = self.rx.recv_timeout(remaining).map_err(|_| {
+                    ClusterError::RecvTimeout {
+                        proc: self.node,
+                        step,
+                        from,
+                    }
+                })?;
+                if msg.step == step && msg.from == from {
+                    return Ok((msg.frame, msg.payload));
+                }
+                self.pending
+                    .entry((msg.step, msg.from))
+                    .or_default()
+                    .push_back((msg.frame, msg.payload));
+            }
+        }
+    }
+
+    /// Run a composed schedule with one `run_node` per node (nodes as
+    /// threads, leaders linked by channels) and compare bit-for-bit with
+    /// the clone-semantics oracle on the same schedule.
+    fn run_mixed(spec: &str, chunk_bytes: Option<usize>) {
+        let map = NodeMap::parse(spec).unwrap();
+        let p = map.p();
+        let l = map.n_nodes();
+        // `two_level` returns the full composed schedule over all P ranks.
+        let s = two_level(AlgorithmKind::Ring, &map, &BuildCtx::default()).unwrap();
+
+        let n = 24usize;
+        let mut rng = Rng::new(0xA11CE);
+        let inputs: Vec<Vec<f32>> =
+            (0..p).map(|_| (0..n).map(|_| rng.f32()).collect()).collect();
+        let want = oracle::execute_reference(&s, &inputs, ReduceOp::Sum).unwrap();
+
+        let mut txs = Vec::with_capacity(l);
+        let mut rxs = Vec::with_capacity(l);
+        for _ in 0..l {
+            let (tx, rx) = mpsc::channel::<Msg<f32>>();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        let opts = NodeOptions {
+            chunk_bytes,
+            ..NodeOptions::default()
+        };
+        let mut got: Vec<Vec<Vec<f32>>> = (0..l).map(|_| Vec::new()).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (node, rx) in rxs.iter_mut().enumerate() {
+                let mut inter = ChanInter {
+                    node,
+                    txs: txs.clone(),
+                    rx: rx.take().unwrap(),
+                    pending: HashMap::new(),
+                };
+                let node_inputs: Vec<Vec<f32>> =
+                    map.members(node).map(|r| inputs[r].clone()).collect();
+                let (s, map, opts) = (&s, &map, &opts);
+                handles.push(scope.spawn(move || {
+                    run_node(s, map, node, &node_inputs, ReduceOp::Sum, &mut inter, opts)
+                }));
+            }
+            for (node, h) in handles.into_iter().enumerate() {
+                got[node] = h.join().unwrap().unwrap();
+            }
+        });
+        for node in 0..l {
+            for (j, out) in got[node].iter().enumerate() {
+                let rank = map.leader(node) + j;
+                assert_eq!(
+                    out.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    want[rank].iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    "rank {rank} of {spec} diverged from the oracle"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_matches_oracle_on_ragged_nodes() {
+        run_mixed("3+3+2", None);
+    }
+
+    #[test]
+    fn mixed_matches_oracle_chunked() {
+        run_mixed("2+2+2", Some(32));
+    }
+
+    #[test]
+    fn mixed_handles_singleton_nodes() {
+        run_mixed("1+3+1", None);
+    }
+
+    #[test]
+    fn run_node_validates_shapes() {
+        let map = NodeMap::parse("2+2").unwrap();
+        let s = two_level(AlgorithmKind::Ring, &map, &BuildCtx::default()).unwrap();
+        let (tx, rx) = mpsc::channel::<Msg<f32>>();
+        let mut inter = ChanInter {
+            node: 0,
+            txs: vec![tx],
+            rx,
+            pending: HashMap::new(),
+        };
+        let opts = NodeOptions::default();
+        let one = vec![vec![1.0f32; 4]];
+        let err = run_node(&s, &map, 0, &one, ReduceOp::Sum, &mut inter, &opts).unwrap_err();
+        assert!(matches!(err, ClusterError::BadInput(_)), "{err:?}");
+        let err = run_node(&s, &map, 5, &one, ReduceOp::Sum, &mut inter, &opts).unwrap_err();
+        assert!(matches!(err, ClusterError::BadInput(_)), "{err:?}");
+    }
+}

@@ -17,6 +17,7 @@
 //! [`oracle`] as the differential-test baseline.
 
 pub mod arena;
+pub mod mixed;
 pub mod oracle;
 pub mod persistent;
 pub mod reducer;

@@ -99,6 +99,61 @@ pub struct AllreduceManyOutput<T = f32> {
     pub metrics: ManyMetrics,
 }
 
+/// Separate α/β/γ for the two fabrics of a hierarchical machine: `intra`
+/// prices links between ranks that share a node (shared memory, NVLink),
+/// `inter` the links between node leaders (the real network). Combine
+/// cost (γ) always comes from `intra` — reduces run on-node.
+#[derive(Clone, Copy, Debug)]
+pub struct HierParams {
+    pub intra: NetParams,
+    pub inter: NetParams,
+}
+
+/// Node-aware algorithm selection: build the two-level composition
+/// ([`crate::topo::compose_two_level`]) for each candidate inter-node
+/// kind, price each under the two-level DES
+/// ([`crate::des::simulate_topo`]), and return the cheapest verified
+/// schedule with its predicted makespan in seconds. The candidate set
+/// covers the paper's span — Ring (bandwidth, eq. 15) through the
+/// latency-optimal corner (eq. 44) with the auto-tuned generalized
+/// algorithm between — so the pick tracks `m_bytes` and the inter-node
+/// α/β exactly like flat auto-selection does.
+pub fn choose_two_level(
+    map: &crate::topo::NodeMap,
+    m_bytes: usize,
+    hp: &HierParams,
+) -> Result<(ProcSchedule, f64), String> {
+    let ctx = BuildCtx {
+        m_bytes,
+        params: hp.inter,
+        openmpi_threshold: 10 * 1024,
+    };
+    let mut best: Option<(ProcSchedule, f64)> = None;
+    let mut errors = Vec::new();
+    for kind in [
+        AlgorithmKind::Ring,
+        AlgorithmKind::BwOptimal,
+        AlgorithmKind::LatOptimal,
+        AlgorithmKind::GeneralizedAuto,
+        AlgorithmKind::RecursiveDoubling,
+        AlgorithmKind::RecursiveHalving,
+    ] {
+        // `two_level` already returns the full composition over all P ranks.
+        let s = match crate::topo::two_level(kind, map, &ctx) {
+            Ok(s) => s,
+            Err(e) => {
+                errors.push(format!("{}: {e}", kind.label()));
+                continue;
+            }
+        };
+        let t = crate::des::simulate_topo(&s, m_bytes, &hp.intra, &hp.inter, map).makespan;
+        if best.as_ref().map_or(true, |(_, bt)| t < *bt) {
+            best = Some((s, t));
+        }
+    }
+    best.ok_or_else(|| format!("no two-level candidate built: {}", errors.join("; ")))
+}
+
 /// Builder for [`Communicator`].
 pub struct CommunicatorBuilder {
     p: usize,
@@ -1006,5 +1061,37 @@ mod tests {
             panic!("resolve must yield Generalized");
         };
         assert!(rs > rb, "small m should remove more steps ({rs} vs {rb})");
+    }
+
+    /// Node-aware tuning returns a verified composed schedule and adapts
+    /// the inter-node kind to the message size, exactly like flat
+    /// auto-selection: a latency-dominated regime (tiny m, huge inter-α)
+    /// must never pick a more expensive schedule than a bandwidth-
+    /// dominated one priced under its own regime.
+    #[test]
+    fn choose_two_level_tracks_the_inter_node_regime() {
+        let map = crate::topo::NodeMap::parse("4+4+4+4+4+4+4+4").unwrap();
+        let intra = NetParams {
+            alpha: 1e-7,
+            beta: 1e-11,
+            gamma: 2e-10,
+        };
+        let inter = NetParams::table2();
+        let hp = HierParams { intra, inter };
+        for m in [64usize, 1 << 22] {
+            let (s, t) = choose_two_level(&map, m, &hp).unwrap();
+            crate::sched::verify::verify(&s).unwrap();
+            assert!(s.name.starts_with("hier["), "{}", s.name);
+            assert!(t > 0.0);
+            // The pick must be at least as cheap as a fixed Ring inner.
+            let ctx = BuildCtx {
+                m_bytes: m,
+                params: inter,
+                ..Default::default()
+            };
+            let ring = crate::topo::two_level(AlgorithmKind::Ring, &map, &ctx).unwrap();
+            let ring_t = crate::des::simulate_topo(&ring, m, &intra, &inter, &map).makespan;
+            assert!(t <= ring_t * (1.0 + 1e-9), "picked {t} vs ring {ring_t}");
+        }
     }
 }

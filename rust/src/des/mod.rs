@@ -20,6 +20,7 @@ use crate::sched::{
     stats::{chunk_pays, plan_chunk_fusion},
     BufId, MicroOp, Op, ProcSchedule,
 };
+use crate::topo::NodeMap;
 
 /// Result of a simulation.
 #[derive(Clone, Debug)]
@@ -58,6 +59,59 @@ pub fn simulate_chunked(
     params: &NetParams,
     chunk_bytes: Option<usize>,
 ) -> DesReport {
+    simulate_impl(
+        s,
+        m_bytes,
+        |_, _| (params.alpha, params.beta),
+        params.gamma,
+        chunk_bytes,
+    )
+}
+
+/// Two-level (hierarchical) cost model: every message is charged the
+/// `intra` α/β when sender and receiver share a node of `map`, the
+/// `inter` α/β when they cross nodes. Reduces always run on-node CPU, so
+/// `γ` comes from `intra`. Works on *any* schedule — compare a flat
+/// schedule against [`crate::topo::compose_two_level`]'s on the same map
+/// to quantify what hierarchy buys (the `BENCH_hier.json` ablation).
+pub fn simulate_topo(
+    s: &ProcSchedule,
+    m_bytes: usize,
+    intra: &NetParams,
+    inter: &NetParams,
+    map: &NodeMap,
+) -> DesReport {
+    assert_eq!(
+        s.p,
+        map.p(),
+        "schedule is over {} ranks, node map over {}",
+        s.p,
+        map.p()
+    );
+    simulate_impl(
+        s,
+        m_bytes,
+        |from, to| {
+            if map.node_of(from) == map.node_of(to) {
+                (intra.alpha, intra.beta)
+            } else {
+                (inter.alpha, inter.beta)
+            }
+        },
+        intra.gamma,
+        None,
+    )
+}
+
+/// The shared DES core: `link(from, to) -> (α, β)` prices each message's
+/// envelope and wire time, `gamma` each reduced byte.
+fn simulate_impl(
+    s: &ProcSchedule,
+    m_bytes: usize,
+    link: impl Fn(usize, usize) -> (f64, f64),
+    gamma: f64,
+    chunk_bytes: Option<usize>,
+) -> DesReport {
     let p = s.p;
     let nb = s.max_buf_id() as usize;
     let chunk = chunk_bytes.map(|c| c.max(1));
@@ -92,9 +146,10 @@ pub fn simulate_chunked(
                         bufs.iter().map(|&b| size[proc][b as usize]).collect();
                     let bytes: usize = sizes.iter().sum();
                     total_bytes += bytes as f64;
+                    let (al, be) = link(proc, to);
                     let start = clock[proc] + streamed;
-                    streamed += params.beta * bytes as f64;
-                    let arrival = clock[proc] + params.alpha + streamed;
+                    streamed += be * bytes as f64;
+                    let arrival = clock[proc] + al + streamed;
                     arrivals[to].push((proc, start, arrival, sizes));
                 }
             }
@@ -140,6 +195,7 @@ pub fn simulate_chunked(
                                     row.get(b as usize).is_some_and(|&s| s != usize::MAX)
                                 })
                             };
+                            let (al, be) = link(from, proc);
                             let mut done = clock[proc];
                             let mut cum = 0usize;
                             for k in 0..n_frames {
@@ -153,10 +209,9 @@ pub fn simulate_chunked(
                                     }
                                 }
                                 cum += fbytes;
-                                let arrive = start
-                                    + (k as f64 + 1.0) * params.alpha
-                                    + params.beta * cum as f64;
-                                done = done.max(arrive) + params.gamma * fuse_bytes as f64;
+                                let arrive =
+                                    start + (k as f64 + 1.0) * al + be * cum as f64;
+                                done = done.max(arrive) + gamma * fuse_bytes as f64;
                                 total_reduced += fuse_bytes as f64;
                             }
                             clock[proc] = done;
@@ -175,7 +230,7 @@ pub fn simulate_chunked(
                             }
                             let sz = size[proc][src as usize];
                             debug_assert_ne!(sz, usize::MAX);
-                            clock[proc] += params.gamma * sz as f64;
+                            clock[proc] += gamma * sz as f64;
                             total_reduced += sz as f64;
                         }
                         MicroOp::Copy { dst, src } => {
@@ -368,6 +423,60 @@ mod tests {
         // model must show the trade-off, not a free lunch.
         let tiny = simulate_chunked(&s, m, &params, Some(512));
         assert!(tiny.makespan > mono.makespan);
+    }
+
+    /// With intra == inter the two-level model degenerates to the flat
+    /// one bit-for-bit, on flat and composed schedules alike.
+    #[test]
+    fn topo_with_uniform_params_matches_flat_model() {
+        use crate::topo::{two_level, NodeMap};
+        let params = NetParams::table2();
+        let map = NodeMap::parse("3+3+2").unwrap();
+        let m = map.p() * 512;
+        let flat = Algorithm::new(AlgorithmKind::Ring, map.p())
+            .build(&BuildCtx::default())
+            .unwrap();
+        // `two_level` returns the full composed schedule over all P ranks.
+        let hier = two_level(AlgorithmKind::Ring, &map, &BuildCtx::default()).unwrap();
+        for s in [&flat, &hier] {
+            let a = simulate(s, m, &params);
+            let b = simulate_topo(s, m, &params, &params, &map);
+            assert_eq!(a.makespan, b.makespan, "{}", s.name);
+            assert_eq!(a.total_bytes, b.total_bytes, "{}", s.name);
+            assert_eq!(a.total_reduced, b.total_reduced, "{}", s.name);
+        }
+    }
+
+    /// Slower inter-node links can only hurt, and the hierarchical
+    /// composition confines the damage: under a latency-dominated
+    /// inter-node fabric the composed schedule (O(log L) inter steps)
+    /// beats the flat Ring (whose 2(P−1)-step chain keeps crossing nodes).
+    #[test]
+    fn hierarchy_pays_off_when_inter_node_latency_dominates() {
+        use crate::topo::{two_level, NodeMap};
+        let intra = NetParams::table2();
+        let inter = NetParams {
+            alpha: intra.alpha * 300.0,
+            beta: intra.beta * 20.0,
+            gamma: intra.gamma,
+        };
+        let map = NodeMap::parse("2+2+2+2").unwrap();
+        let m = map.p() * 64;
+        let flat = Algorithm::new(AlgorithmKind::Ring, map.p())
+            .build(&BuildCtx::default())
+            .unwrap();
+        let hier =
+            two_level(AlgorithmKind::RecursiveDoubling, &map, &BuildCtx::default()).unwrap();
+
+        let flat_uniform = simulate_topo(&flat, m, &intra, &intra, &map).makespan;
+        let flat_mixed = simulate_topo(&flat, m, &intra, &inter, &map).makespan;
+        assert!(flat_mixed > flat_uniform, "slower links must cost time");
+
+        let hier_mixed = simulate_topo(&hier, m, &intra, &inter, &map).makespan;
+        assert!(
+            hier_mixed < flat_mixed,
+            "two-level {hier_mixed} !< flat ring {flat_mixed} under slow inter-node links"
+        );
     }
 
     /// Byte accounting: DES total bytes equals the verifier's unit tally

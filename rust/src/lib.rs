@@ -30,7 +30,8 @@
 //! | [`cluster::arena`] | the zero-copy data plane: space-reclaiming slab arenas, sharded size-classed block pools, `Arc`-shared wire blocks, fused receive-reduce with send-aware placement, chunked streaming with per-chunk fused combines (shared by both executors) |
 //! | [`cluster::oracle`] | the clone-per-message reference data plane, kept as the differential-test oracle and bench baseline |
 //! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step); execution gated behind the `pjrt` feature |
-//! | [`net`] | multi-process execution over real TCP sockets: length-prefixed wire protocol, rank-0 rendezvous + full-mesh bootstrap, per-peer reader/writer threads behind a socket [`cluster::arena::Transport`], α/β/γ probe, and the per-rank [`net::Endpoint`] front end |
+//! | [`net`] | multi-process execution over real TCP sockets: length-prefixed wire protocol, rank-0 rendezvous + full-mesh or **lazily-dialed** bootstrap, per-peer reader/writer threads behind a socket [`cluster::arena::Transport`], α/β/γ probe, and the per-rank [`net::Endpoint`] front end |
+//! | [`topo`] | hierarchical (two-level) execution: node grouping ([`topo::NodeMap`]), binomial intra-node trees composed with any inner schedule into one verified [`sched::ProcSchedule`] ([`topo::compose_two_level`]), schedule relabeling through permutations, per-rank peer sets for sparse meshes |
 //! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
 //! | [`coordinator::bucket`] | DDP-style gradient bucketing: cost-model-sized packing with exact pack/unpack round-trips |
 //! | [`figures`] | regenerates every figure of the paper's evaluation section |
@@ -172,6 +173,59 @@
 //! execution bit-identical to [`cluster::oracle`] for every algorithm ×
 //! op × chunked/monolithic at P ∈ {2, 3, 4, 5, 7, 8}.
 //!
+//! ## Hierarchical execution (`topo`)
+//!
+//! Flat schedules treat all `P` ranks as equidistant; real clusters are
+//! nodes of fast local ranks joined by a slower fabric. [`topo`] groups
+//! ranks into nodes and composes a two-level schedule — binomial
+//! reduce-to-leader, any verified inner schedule between the **leaders**
+//! (lowest rank of each node), binomial broadcast back down:
+//!
+//! ```text
+//!   ranks   0 1 2 | 3 4 5 | 6 7          NodeMap::parse("3+3+2")
+//!           ↘ ↓ ↙   ↘ ↓ ↙   ↓ ↙          reduce up   (log₂ k rounds)
+//!            [0] ←——→ [3] ←——→ [6]        inner schedule on leaders
+//!           ↗ ↑ ↖   ↗ ↑ ↖   ↑ ↖          broadcast down
+//! ```
+//!
+//! The result of [`topo::compose_two_level`] is one ordinary verified
+//! [`sched::ProcSchedule`] over all `P` ranks, so every executor in the
+//! crate runs it unchanged and the schedule verifier machine-checks the
+//! composition like any flat schedule:
+//!
+//! ```
+//! use permallreduce::prelude::*;
+//! use permallreduce::topo::{self, NodeMap};
+//! use permallreduce::algo::BuildCtx;
+//!
+//! let map = NodeMap::parse("3+3+2").unwrap();
+//! let s = topo::two_level(AlgorithmKind::Ring, &map, &BuildCtx::default()).unwrap();
+//! assert_eq!(s.p, 8);
+//! // Cross-node traffic flows only between leaders, so a leader's peer
+//! // set — tree children plus inner-schedule partners — is far sparser
+//! // than the flat P−1 mesh…
+//! let peers = topo::peer_set(&s, 0);
+//! assert!(peers.len() < s.p - 1);
+//!
+//! // …and executes bit-identically to replaying the very same schedule
+//! // through the reference oracle:
+//! let inputs: Vec<Vec<i64>> = (0..8).map(|r| vec![r as i64; 24]).collect();
+//! let exec = ClusterExecutor::new();
+//! let got = exec.execute(&s, &inputs, ReduceOp::Sum).unwrap();
+//! assert_eq!(got[0][0], (0..8i64).sum::<i64>());
+//! ```
+//!
+//! Over sockets, the peer set feeds the **lazy mesh**: instead of the
+//! `P−1` links of a full mesh, `net::bootstrap::connect_subset` dials only
+//! the sockets the composed schedule actually uses (every rank still
+//! checks in at the rank-0 rendezvous to learn the address map). On the
+//! `3+3+2` example above the socket counts drop from 7 per rank to 4 for
+//! leader 0 (ranks 1, 2 in its tree + leaders 3, 6) and to at most 2 for
+//! non-leaders — O(log P) per leader as the mesh scales. See
+//! `examples/topo_allreduce.rs` for the multi-process binary and
+//! [`des::simulate_topo`] for the two-level α–β–γ cost model behind
+//! [`coordinator::choose_two_level`].
+//!
 //! ## The data plane (slabs, `Arc` sends, warm pools)
 //!
 //! Both executors run schedules on the **arena data plane**
@@ -292,6 +346,7 @@ pub mod cost;
 pub mod des;
 pub mod cluster;
 pub mod net;
+pub mod topo;
 pub mod runtime;
 pub mod coordinator;
 pub mod figures;
@@ -309,4 +364,5 @@ pub mod prelude {
     pub use crate::net::{Endpoint, NetOptions};
     pub use crate::perm::{Group, Permutation};
     pub use crate::sched::{ProcSchedule, ScheduleStats};
+    pub use crate::topo::NodeMap;
 }

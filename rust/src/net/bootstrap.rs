@@ -1,4 +1,4 @@
-//! Rendezvous and full-mesh establishment.
+//! Rendezvous and mesh establishment (full or lazily dialed).
 //!
 //! One rank (rank 0) plays **rendezvous host**: it listens on a well-known
 //! address, every other rank dials it and introduces itself with a `HELLO`
@@ -12,10 +12,34 @@
 //! group MPI establishes before the first collective (paper §2's
 //! full-duplex peer-to-peer model).
 //!
+//! ## Lazy dialing ([`connect_subset`])
+//!
+//! A full mesh costs `P − 1` sockets per rank, which stops scaling long
+//! before the schedules do (a generalized schedule touches `O(log P)`
+//! peers). When the schedule is known up front, each rank passes its
+//! **peer set** ([`crate::topo::peer_set`]) and only those links are
+//! established: every rank still checks in at the rendezvous (the address
+//! map must cover all ranks), but rank 0 keeps only the `0 ↔ i` links in
+//! its own set, dialers skip non-peers, and acceptors expect exactly the
+//! higher ranks of their set. Schedule validity makes peer sets symmetric,
+//! so all ranks prune consistently without coordination.
+//!
+//! ## Concurrent meshes (the session token)
+//!
+//! Meshes bootstrapping concurrently in one OS (the test suite, multiple
+//! jobs on one box) hand out **ephemeral** listener ports in their address
+//! maps. A port can be closed and re-bound by a *different* mesh between
+//! the ADDRMAP broadcast and a peer dial, splicing a stranger into the
+//! mesh. To close that race, the host mints a random session `token`,
+//! ships it in the ADDRMAP, and every `PEER` introduction must echo it —
+//! an introduction carrying the wrong token is rejected with a protocol
+//! error instead of being wired in.
+//!
 //! All sockets run with `TCP_NODELAY` (schedule steps are latency-bound)
 //! and bootstrap reads under a read timeout, so a dead peer surfaces as a
 //! clean [`ClusterError`] instead of a hang.
 
+use std::collections::BTreeSet;
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
@@ -23,12 +47,21 @@ use crate::cluster::ClusterError;
 
 use super::wire;
 
-/// The established full mesh for one rank: `streams[peer]` is the
-/// connection to `peer` (`None` at the rank's own index).
+/// The established mesh for one rank: `streams[peer]` is the connection
+/// to `peer` (`None` at the rank's own index, and at non-peers when the
+/// mesh was lazily dialed).
 pub struct Mesh {
     pub rank: usize,
     pub p: usize,
     pub streams: Vec<Option<TcpStream>>,
+}
+
+impl Mesh {
+    /// Number of live sockets this rank holds (`P − 1` for a full mesh,
+    /// the peer-set size for a lazy one).
+    pub fn socket_count(&self) -> usize {
+        self.streams.iter().flatten().count()
+    }
 }
 
 fn proto_err(rank: usize, detail: impl Into<String>) -> ClusterError {
@@ -36,6 +69,21 @@ fn proto_err(rank: usize, detail: impl Into<String>) -> ClusterError {
         proc: rank,
         detail: detail.into(),
     }
+}
+
+/// Mint the host's mesh session token: a nonce that only has to differ
+/// between meshes alive in the same OS at the same time (see module
+/// docs), mixed SplitMix64-style from the wall clock and the process id.
+fn mint_token() -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0x9E37_79B9_7F4A_7C15);
+    let mut z = nanos ^ ((std::process::id() as u64) << 32);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// Accept one connection with a deadline (the listener is temporarily
@@ -109,9 +157,57 @@ fn read_body(stream: &mut TcpStream, rank: usize) -> Result<Vec<u8>, ClusterErro
     }
 }
 
+/// Does `rank` keep a link to `peer`? `None` = full mesh.
+fn wants(peers: Option<&BTreeSet<usize>>, peer: usize) -> bool {
+    peers.map_or(true, |set| set.contains(&peer))
+}
+
+/// Validate one accepted `PEER` introduction: kind, rank window, session
+/// token, membership in the acceptor's peer set, and single use.
+fn check_peer(
+    body: &[u8],
+    rank: usize,
+    p: usize,
+    token: u64,
+    peers: Option<&BTreeSet<usize>>,
+    streams: &[Option<TcpStream>],
+) -> Result<usize, ClusterError> {
+    if body[0] != wire::KIND_PEER {
+        return Err(proto_err(rank, format!("expected PEER, got kind {}", body[0])));
+    }
+    let (peer, peer_token) =
+        wire::decode_peer(body).map_err(|e| proto_err(rank, format!("bad PEER: {e}")))?;
+    if peer_token != token {
+        return Err(proto_err(
+            rank,
+            format!("PEER from rank {peer} carries a foreign session token (a concurrent mesh?)"),
+        ));
+    }
+    if peer <= rank || peer >= p {
+        return Err(proto_err(rank, format!("PEER from invalid rank {peer}")));
+    }
+    if !wants(peers, peer) {
+        return Err(proto_err(
+            rank,
+            format!("PEER from rank {peer}, which is not in this rank's peer set"),
+        ));
+    }
+    if streams[peer].is_some() {
+        return Err(proto_err(rank, format!("duplicate PEER from rank {peer}")));
+    }
+    Ok(peer)
+}
+
 /// Rank 0's half of the rendezvous, given an already-bound listener (tests
-/// bind `127.0.0.1:0` and share the resolved port out of band).
-pub fn host(listener: TcpListener, p: usize, timeout: Duration) -> Result<Mesh, ClusterError> {
+/// bind `127.0.0.1:0` and share the resolved port out of band). With
+/// `peers`, only the `0 ↔ i, i ∈ peers` links survive the handshake; all
+/// `P − 1` ranks still check in (they need the ADDRMAP).
+pub fn host_subset(
+    listener: TcpListener,
+    p: usize,
+    timeout: Duration,
+    peers: Option<&BTreeSet<usize>>,
+) -> Result<Mesh, ClusterError> {
     let rank = 0usize;
     if p == 0 {
         return Err(ClusterError::BadInput("mesh of zero processes".into()));
@@ -148,22 +244,33 @@ pub fn host(listener: TcpListener, p: usize, timeout: Duration) -> Result<Mesh, 
         addrs[peer] = addr;
         streams[peer] = Some(stream);
     }
-    let map = wire::encode_addr_map(&addrs);
+    let map = wire::encode_addr_map(&addrs, mint_token());
     for s in streams.iter_mut().flatten() {
         wire::write_all(s, &map).map_err(|e| proto_err(rank, e))?;
+    }
+    // Lazy mesh: drop the links the schedule never uses. The non-peer has
+    // already read the ADDRMAP bytes off its socket buffer (or will — an
+    // orderly close still delivers them), and prunes its end symmetrically.
+    if peers.is_some() {
+        for peer in 1..p {
+            if !wants(peers, peer) {
+                streams[peer] = None;
+            }
+        }
     }
     Ok(Mesh { rank, p, streams })
 }
 
 /// A non-zero rank's bootstrap: dial the rendezvous, announce the own mesh
-/// listener, receive the address map, then complete the mesh (dial every
-/// lower non-zero rank, accept every higher rank).
-pub fn join(
+/// listener, receive the address map, then complete this rank's links
+/// (dial every lower rank of the peer set, accept every higher one).
+pub fn join_subset(
     rank: usize,
     p: usize,
     rendezvous: &str,
     bind: Option<&str>,
     timeout: Duration,
+    peers: Option<&BTreeSet<usize>>,
 ) -> Result<Mesh, ClusterError> {
     if rank == 0 || rank >= p {
         return Err(ClusterError::BadInput(format!(
@@ -189,7 +296,7 @@ pub fn join(
             format!("expected ADDRMAP, got kind {}", body[0]),
         ));
     }
-    let addrs =
+    let (addrs, token) =
         wire::decode_addr_map(&body).map_err(|e| proto_err(rank, format!("bad ADDRMAP: {e}")))?;
     if addrs.len() != p {
         return Err(proto_err(
@@ -199,40 +306,84 @@ pub fn join(
     }
 
     let mut streams: Vec<Option<TcpStream>> = (0..p).map(|_| None).collect();
-    streams[0] = Some(to_host);
-    // Higher rank dials lower: we dial 1..rank, then accept rank+1..p.
+    if wants(peers, 0) {
+        streams[0] = Some(to_host);
+    }
+    // Higher rank dials lower: we dial the peers in 1..rank, then accept
+    // the peers in rank+1..p.
     for (peer, addr) in addrs.iter().enumerate().take(rank).skip(1) {
+        if !wants(peers, peer) {
+            continue;
+        }
         let mut s = connect_deadline(addr, deadline, rank)?;
         prepare(&s, timeout, rank)?;
-        wire::write_all(&mut s, &wire::encode_peer(rank)).map_err(|e| proto_err(rank, e))?;
+        wire::write_all(&mut s, &wire::encode_peer(rank, token)).map_err(|e| proto_err(rank, e))?;
         streams[peer] = Some(s);
     }
-    for _ in rank + 1..p {
+    let expect_above = (rank + 1..p).filter(|&q| wants(peers, q)).count();
+    for _ in 0..expect_above {
         let mut s = accept_deadline(&listener, deadline, rank)?;
         prepare(&s, timeout, rank)?;
         let body = read_body(&mut s, rank)?;
-        if body[0] != wire::KIND_PEER {
-            return Err(proto_err(
-                rank,
-                format!("expected PEER, got kind {}", body[0]),
-            ));
-        }
-        let peer =
-            wire::decode_peer(&body).map_err(|e| proto_err(rank, format!("bad PEER: {e}")))?;
-        if peer <= rank || peer >= p {
-            return Err(proto_err(rank, format!("PEER from invalid rank {peer}")));
-        }
-        if streams[peer].is_some() {
-            return Err(proto_err(rank, format!("duplicate PEER from rank {peer}")));
-        }
+        let peer = check_peer(&body, rank, p, token, peers, &streams)?;
         streams[peer] = Some(s);
     }
     Ok(Mesh { rank, p, streams })
 }
 
-/// Establish the mesh for `rank` of `p`: rank 0 binds `rendezvous` and
+/// Rank 0's half of the rendezvous over a **full** mesh.
+pub fn host(listener: TcpListener, p: usize, timeout: Duration) -> Result<Mesh, ClusterError> {
+    host_subset(listener, p, timeout, None)
+}
+
+/// A non-zero rank's **full-mesh** bootstrap.
+pub fn join(
+    rank: usize,
+    p: usize,
+    rendezvous: &str,
+    bind: Option<&str>,
+    timeout: Duration,
+) -> Result<Mesh, ClusterError> {
+    join_subset(rank, p, rendezvous, bind, timeout, None)
+}
+
+/// Establish the mesh for `rank` of `p` with an optional per-rank peer
+/// set (lazy dialing — see module docs): rank 0 binds `rendezvous` and
 /// hosts, everyone else joins through it. `bind` optionally pins the mesh
 /// listener of a non-zero rank (default: an ephemeral loopback port).
+pub fn connect_subset(
+    rank: usize,
+    p: usize,
+    rendezvous: &str,
+    bind: Option<&str>,
+    timeout: Duration,
+    peers: Option<&BTreeSet<usize>>,
+) -> Result<Mesh, ClusterError> {
+    if let Some(set) = peers {
+        if set.contains(&rank) {
+            return Err(ClusterError::BadInput(format!(
+                "rank {rank} lists itself in its peer set"
+            )));
+        }
+        if set.iter().any(|&q| q >= p) {
+            return Err(ClusterError::BadInput(format!(
+                "peer set of rank {rank} reaches outside 0..{p}"
+            )));
+        }
+    }
+    if rank == 0 {
+        let listener =
+            TcpListener::bind(rendezvous).map_err(|e| ClusterError::Protocol {
+                proc: 0,
+                detail: format!("binding rendezvous {rendezvous}: {e}"),
+            })?;
+        host_subset(listener, p, timeout, peers)
+    } else {
+        join_subset(rank, p, rendezvous, bind, timeout, peers)
+    }
+}
+
+/// Establish the **full** mesh for `rank` of `p`.
 pub fn connect(
     rank: usize,
     p: usize,
@@ -240,17 +391,7 @@ pub fn connect(
     bind: Option<&str>,
     timeout: Duration,
 ) -> Result<Mesh, ClusterError> {
-    if rank == 0 {
-        let listener = TcpListener::bind(rendezvous).map_err(|e| {
-            ClusterError::Protocol {
-                proc: 0,
-                detail: format!("binding rendezvous {rendezvous}: {e}"),
-            }
-        })?;
-        host(listener, p, timeout)
-    } else {
-        join(rank, p, rendezvous, bind, timeout)
-    }
+    connect_subset(rank, p, rendezvous, bind, timeout, None)
 }
 
 #[cfg(test)]
@@ -277,7 +418,7 @@ mod tests {
                     };
                     assert_eq!(mesh.rank, rank);
                     assert!(mesh.streams[rank].is_none());
-                    assert_eq!(mesh.streams.iter().flatten().count(), p - 1);
+                    assert_eq!(mesh.socket_count(), p - 1);
                     // Exercise every link: send PEER{rank} to each peer,
                     // read one PEER from each.
                     let mut got = vec![false; p];
@@ -286,7 +427,7 @@ mod tests {
                             continue;
                         }
                         let mut s = mesh.streams[peer].as_ref().unwrap();
-                        wire::write_all(&mut s, &wire::encode_peer(rank)).unwrap();
+                        wire::write_all(&mut s, &wire::encode_peer(rank, 0)).unwrap();
                     }
                     for peer in 0..p {
                         if peer == rank {
@@ -296,7 +437,7 @@ mod tests {
                         let body = wire::read_frame(&mut s, wire::MAX_BODY_BYTES)
                             .unwrap()
                             .unwrap();
-                        let who = wire::decode_peer(&body).unwrap();
+                        let (who, _) = wire::decode_peer(&body).unwrap();
                         assert_eq!(who, peer, "link {rank}<->{peer} crossed");
                         got[who] = true;
                     }
@@ -307,6 +448,93 @@ mod tests {
                 h.join().unwrap();
             }
         });
+    }
+
+    /// Lazy dialing over a hierarchical schedule's peer sets: every rank
+    /// holds exactly its peer-set links, cross-links still carry traffic,
+    /// and the leader's socket count stays strictly below `P − 1`.
+    #[test]
+    fn lazy_mesh_dials_only_schedule_peers() {
+        use crate::algo::{AlgorithmKind, BuildCtx};
+        use crate::topo::{peer_set, two_level, NodeMap};
+
+        let map = NodeMap::parse("3+3+2").unwrap();
+        let p = map.p();
+        let s = two_level(AlgorithmKind::Ring, &map, &BuildCtx::default()).unwrap();
+        let peers: Vec<BTreeSet<usize>> = (0..p).map(|r| peer_set(&s, r)).collect();
+        assert!(peers[0].len() < p - 1, "leader peer set not sparse");
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for rank in 0..p {
+                let addr = addr.clone();
+                let l0 = (rank == 0).then(|| listener.try_clone().unwrap());
+                let mine = &peers[rank];
+                handles.push(scope.spawn(move || {
+                    let mesh = match l0 {
+                        Some(l) => host_subset(l, p, timeout, Some(mine)).unwrap(),
+                        None => join_subset(rank, p, &addr, None, timeout, Some(mine)).unwrap(),
+                    };
+                    // Exactly the peer-set links — the leader acceptance
+                    // bound (< P−1 sockets) follows from the sparse set.
+                    assert_eq!(mesh.socket_count(), mine.len(), "rank {rank}");
+                    assert!(mesh.socket_count() < p - 1, "rank {rank} holds a full mesh");
+                    for q in 0..p {
+                        assert_eq!(
+                            mesh.streams[q].is_some(),
+                            mine.contains(&q),
+                            "rank {rank} link to {q}"
+                        );
+                    }
+                    // Every kept link is real: exchange one PEER frame.
+                    for &q in mine.iter() {
+                        let mut st = mesh.streams[q].as_ref().unwrap();
+                        wire::write_all(&mut st, &wire::encode_peer(rank, 1)).unwrap();
+                    }
+                    for &q in mine.iter() {
+                        let mut st = mesh.streams[q].as_ref().unwrap();
+                        let body = wire::read_frame(&mut st, wire::MAX_BODY_BYTES)
+                            .unwrap()
+                            .unwrap();
+                        let (who, _) = wire::decode_peer(&body).unwrap();
+                        assert_eq!(who, q, "link {rank}<->{q} crossed");
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    /// The acceptor side rejects introductions that don't belong: foreign
+    /// session tokens (a concurrent mesh landing on a recycled ephemeral
+    /// port), ranks outside the peer set, out-of-window ranks, and reuse.
+    #[test]
+    fn check_peer_rejects_cross_mesh_and_non_peers() {
+        let streams: Vec<Option<TcpStream>> = (0..6).map(|_| None).collect();
+        let peers: BTreeSet<usize> = [0, 4].into_iter().collect();
+        let ok = |body: &[u8]| check_peer(body, 2, 6, 42, Some(&peers), &streams);
+
+        assert_eq!(ok(&wire::encode_peer(4, 42)[4..]).unwrap(), 4);
+        let wrong_token = ok(&wire::encode_peer(4, 41)[4..]).unwrap_err();
+        assert!(format!("{wrong_token}").contains("token"), "{wrong_token}");
+        let not_peer = ok(&wire::encode_peer(5, 42)[4..]).unwrap_err();
+        assert!(format!("{not_peer}").contains("peer set"), "{not_peer}");
+        let below = ok(&wire::encode_peer(1, 42)[4..]).unwrap_err();
+        assert!(format!("{below}").contains("invalid rank"), "{below}");
+        // A link already wired in cannot be introduced again.
+        let mut used = streams;
+        used[4] = None; // placeholder — simulate occupancy via a bound socket
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = l.local_addr().unwrap();
+        used[4] = Some(TcpStream::connect(a).unwrap());
+        let dup = check_peer(&wire::encode_peer(4, 42)[4..], 2, 6, 42, Some(&peers), &used)
+            .unwrap_err();
+        assert!(format!("{dup}").contains("duplicate"), "{dup}");
     }
 
     #[test]
@@ -334,5 +562,17 @@ mod tests {
         let mesh = host(listener, 1, Duration::from_secs(1)).unwrap();
         assert_eq!(mesh.p, 1);
         assert!(mesh.streams[0].is_none());
+    }
+
+    #[test]
+    fn connect_subset_validates_the_peer_set() {
+        let bad_self: BTreeSet<usize> = [2].into_iter().collect();
+        let err = connect_subset(2, 4, "127.0.0.1:1", None, Duration::from_millis(10), Some(&bad_self))
+            .unwrap_err();
+        assert!(matches!(err, ClusterError::BadInput(_)), "{err:?}");
+        let oob: BTreeSet<usize> = [9].into_iter().collect();
+        let err = connect_subset(2, 4, "127.0.0.1:1", None, Duration::from_millis(10), Some(&oob))
+            .unwrap_err();
+        assert!(matches!(err, ClusterError::BadInput(_)), "{err:?}");
     }
 }

@@ -4,9 +4,11 @@
 //! chunked streaming as the in-process executors — the only substitution
 //! is the [`Transport`](crate::cluster::arena::Transport): instead of
 //! `mpsc` channels between threads, [`NetTransport`](transport) moves
-//! `(step, Frame, payload)` messages over a full mesh of loopback-or-LAN
+//! `(step, Frame, payload)` messages over a mesh of loopback-or-LAN
 //! TCP connections ([`wire`]'s length-prefixed protocol, one writer and
-//! one reader thread per peer). Because `DataPlane::run_schedule` is
+//! one reader thread per peer) — full, or pruned to the schedule's peer
+//! set ([`NetOptions::peers`]) so bootstrap scales past hundreds of
+//! ranks. Because `DataPlane::run_schedule` is
 //! generic over the transport, every algorithm, dtype, placement
 //! optimization and chunk-fusion decision works unchanged across OS
 //! processes — and stays **bit-identical** to the single-process oracle
@@ -17,7 +19,7 @@
 //! * [`wire`] — the length-prefixed message encoding (per-dtype element
 //!   serialization, bootstrap/probe/params frames);
 //! * [`bootstrap`] — rendezvous at rank 0, rank ↔ address map exchange,
-//!   deterministic full-mesh establishment before step 0;
+//!   deterministic full- or lazy-mesh establishment before step 0;
 //! * [`Endpoint`] — this rank's front end, mirroring
 //!   [`Communicator::allreduce`](crate::coordinator::Communicator::allreduce) /
 //!   [`allreduce_many`](crate::coordinator::Communicator::allreduce_many)
@@ -38,7 +40,7 @@ pub mod probe;
 pub mod transport;
 pub mod wire;
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::Duration;
@@ -79,6 +81,12 @@ pub struct NetOptions {
     /// sizing until (unless) [`Endpoint::probe`] replaces them with
     /// measured values. Must be identical on every rank.
     pub params: NetParams,
+    /// This rank's schedule peer set for **lazy mesh dialing**
+    /// ([`bootstrap::connect_subset`]): only the listed links are
+    /// established, so a hierarchical leader holds `O(log P)` sockets
+    /// instead of `P − 1`. Compute it with [`crate::topo::peer_set`] over
+    /// the exact schedule the job will run. `None` = full mesh.
+    pub peers: Option<BTreeSet<usize>>,
 }
 
 impl Default for NetOptions {
@@ -90,6 +98,7 @@ impl Default for NetOptions {
             recv_timeout: Duration::from_secs(30),
             chunk_bytes: None,
             params: NetParams::table2(),
+            peers: None,
         }
     }
 }
@@ -141,15 +150,17 @@ pub struct Endpoint<T: WireElement = f32> {
 
 impl<T: WireElement> Endpoint<T> {
     /// Establish the mesh and start the transport for `rank` of `p`.
-    /// Rank 0 binds `opts.rendezvous`; all ranks block until the full
-    /// mesh is up (every pair connected), so step 0 never races bootstrap.
+    /// Rank 0 binds `opts.rendezvous`; all ranks block until the mesh
+    /// (full, or pruned to `opts.peers` when set) is up, so step 0 never
+    /// races bootstrap.
     pub fn connect(rank: usize, p: usize, opts: NetOptions) -> Result<Endpoint<T>, ClusterError> {
-        let mesh = bootstrap::connect(
+        let mesh = bootstrap::connect_subset(
             rank,
             p,
             &opts.rendezvous,
             opts.bind.as_deref(),
             opts.connect_timeout,
+            opts.peers.as_ref(),
         )?;
         Self::from_mesh(mesh, opts)
     }
@@ -161,8 +172,14 @@ impl<T: WireElement> Endpoint<T> {
         p: usize,
         opts: NetOptions,
     ) -> Result<Endpoint<T>, ClusterError> {
-        let mesh = bootstrap::host(listener, p, opts.connect_timeout)?;
+        let mesh = bootstrap::host_subset(listener, p, opts.connect_timeout, opts.peers.as_ref())?;
         Self::from_mesh(mesh, opts)
+    }
+
+    /// Number of live sockets this rank's transport holds (`P − 1` for a
+    /// full mesh, the peer-set size for a lazily-dialed one).
+    pub fn socket_count(&self) -> usize {
+        self.transport.socket_count()
     }
 
     fn from_mesh(mesh: bootstrap::Mesh, opts: NetOptions) -> Result<Endpoint<T>, ClusterError> {
@@ -377,6 +394,34 @@ impl<T: WireElement> Endpoint<T> {
         let m_bytes = data.len() * std::mem::size_of::<T>();
         let s = self.schedule(kind, m_bytes)?;
         self.run(&s, data, op, &mut out).map_err(|e| e.to_string())?;
+        Ok(out)
+    }
+
+    /// Run a caller-supplied schedule over the mesh — how the two-level
+    /// compositions from [`crate::topo`] execute on sockets. The schedule
+    /// must already have passed [`crate::sched::verify::verify`] (the
+    /// composition helpers guarantee this) and every rank must pass the
+    /// same schedule at the same program point (SPMD contract). Pairs
+    /// with [`NetOptions::peers`]: a mesh dialed for
+    /// `topo::peer_set(&s, rank)` carries exactly the links `s` uses.
+    pub fn allreduce_with(
+        &mut self,
+        s: &ProcSchedule,
+        data: &[T],
+        op: ReduceOp,
+    ) -> Result<Vec<T>, String> {
+        if s.p != self.p {
+            return Err(format!(
+                "schedule {} is over {} ranks, but this mesh has {}",
+                s.name, s.p, self.p
+            ));
+        }
+        let mut out = vec![T::default(); data.len()];
+        if self.p == 1 {
+            out.copy_from_slice(data);
+            return Ok(out);
+        }
+        self.run(s, data, op, &mut out).map_err(|e| e.to_string())?;
         Ok(out)
     }
 

@@ -60,7 +60,7 @@ enum Link {
     Bad(String),
 }
 
-pub(super) struct NetTransport<T: WireElement> {
+pub struct NetTransport<T: WireElement> {
     rank: usize,
     p: usize,
     /// Writer queues, `None` at the own index (and after shutdown).
@@ -84,7 +84,7 @@ pub(super) struct NetTransport<T: WireElement> {
 
 impl<T: WireElement> NetTransport<T> {
     /// Spawn the per-peer reader/writer threads over an established mesh.
-    pub(super) fn start(
+    pub fn start(
         mesh: Mesh,
         pool: Arc<BlockPool<T>>,
         timeout: Duration,
@@ -157,14 +157,20 @@ impl<T: WireElement> NetTransport<T> {
         })
     }
 
-    pub(super) fn p(&self) -> usize {
+    pub fn p(&self) -> usize {
         self.p
+    }
+
+    /// Number of live peer links (`P − 1` for a full mesh, the peer-set
+    /// size for a lazily-dialed one).
+    pub fn socket_count(&self) -> usize {
+        self.streams.iter().flatten().count()
     }
 
     /// Start a new call whose step tags begin at `base`: stale stash
     /// entries (duplicates that could only come from corruption) are
     /// dropped.
-    pub(super) fn begin_call(&mut self, base: usize) {
+    pub fn begin_call(&mut self, base: usize) {
         self.call_base = base;
         let floor = self.call_base;
         self.pending.retain(|&(step, _), _| step >= floor);

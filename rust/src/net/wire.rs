@@ -277,9 +277,15 @@ pub fn decode_hello(body: &[u8]) -> Result<(usize, String), String> {
     Ok((rank, addr))
 }
 
-pub fn encode_addr_map(addrs: &[String]) -> Vec<u8> {
-    let mut out = frame_buf(5 + addrs.iter().map(|a| 2 + a.len()).sum::<usize>());
+/// The `token` is the host's **mesh session token**: a nonce minted per
+/// bootstrap that every subsequent `PEER` introduction must echo, so a
+/// connection from a *different* concurrent mesh (an ephemeral port
+/// re-bound between ADDRMAP and the peer dial) is rejected instead of
+/// silently spliced into the wrong mesh.
+pub fn encode_addr_map(addrs: &[String], token: u64) -> Vec<u8> {
+    let mut out = frame_buf(13 + addrs.iter().map(|a| 2 + a.len()).sum::<usize>());
     out.push(KIND_ADDRMAP);
+    out.extend_from_slice(&token.to_le_bytes());
     out.extend_from_slice(&(addrs.len() as u32).to_le_bytes());
     for a in addrs {
         push_str(&mut out, a);
@@ -287,12 +293,13 @@ pub fn encode_addr_map(addrs: &[String]) -> Vec<u8> {
     finish_frame(out)
 }
 
-pub fn decode_addr_map(body: &[u8]) -> Result<Vec<String>, String> {
-    if body.len() < 5 {
+pub fn decode_addr_map(body: &[u8]) -> Result<(Vec<String>, u64), String> {
+    if body.len() < 13 {
         return Err("ADDRMAP truncated".into());
     }
-    let p = u32::from_le_bytes(body[1..5].try_into().expect("4 bytes")) as usize;
-    let mut rest = &body[5..];
+    let token = u64::from_le_bytes(body[1..9].try_into().expect("8 bytes"));
+    let p = u32::from_le_bytes(body[9..13].try_into().expect("4 bytes")) as usize;
+    let mut rest = &body[13..];
     // Bound the count by the bytes actually present (≥ 2 per entry for its
     // length prefix) before sizing any allocation by it — a corrupt count
     // must yield a clean error, not a giant `with_capacity`.
@@ -311,21 +318,26 @@ pub fn decode_addr_map(body: &[u8]) -> Result<Vec<String>, String> {
     if !rest.is_empty() {
         return Err("ADDRMAP has trailing bytes".into());
     }
-    Ok(addrs)
+    Ok((addrs, token))
 }
 
-pub fn encode_peer(rank: usize) -> Vec<u8> {
-    let mut out = frame_buf(5);
+/// `token` must be the session token of the mesh being joined (from its
+/// ADDRMAP); the accepting side compares before wiring the link in.
+pub fn encode_peer(rank: usize, token: u64) -> Vec<u8> {
+    let mut out = frame_buf(13);
     out.push(KIND_PEER);
     out.extend_from_slice(&(rank as u32).to_le_bytes());
+    out.extend_from_slice(&token.to_le_bytes());
     finish_frame(out)
 }
 
-pub fn decode_peer(body: &[u8]) -> Result<usize, String> {
-    if body.len() != 5 {
+pub fn decode_peer(body: &[u8]) -> Result<(usize, u64), String> {
+    if body.len() != 13 {
         return Err("PEER malformed".into());
     }
-    Ok(u32::from_le_bytes(body[1..5].try_into().expect("4 bytes")) as usize)
+    let rank = u32::from_le_bytes(body[1..5].try_into().expect("4 bytes")) as usize;
+    let token = u64::from_le_bytes(body[5..13].try_into().expect("8 bytes"));
+    Ok((rank, token))
 }
 
 // --------------------------------------------------------- probe/params --
@@ -478,11 +490,11 @@ mod tests {
             .unwrap_err()
             .contains("cap"));
         // A well-formed frame round-trips.
-        let frame = encode_peer(4);
+        let frame = encode_peer(4, 0x5EED);
         let body = read_frame(&mut frame.as_slice(), MAX_BODY_BYTES)
             .unwrap()
             .unwrap();
-        assert_eq!(decode_peer(&body).unwrap(), 4);
+        assert_eq!(decode_peer(&body).unwrap(), (4, 0x5EED));
     }
 
     #[test]
@@ -495,15 +507,16 @@ mod tests {
         assert_eq!(decode_hello(&body).unwrap(), (3, "127.0.0.1:4567".to_string()));
 
         let addrs: Vec<String> = (0..5).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect();
-        let map = encode_addr_map(&addrs);
+        let map = encode_addr_map(&addrs, 0xFEED_F00D);
         let body = read_frame(&mut map.as_slice(), MAX_BODY_BYTES)
             .unwrap()
             .unwrap();
-        assert_eq!(decode_addr_map(&body).unwrap(), addrs);
+        assert_eq!(decode_addr_map(&body).unwrap(), (addrs, 0xFEED_F00D));
 
         // A corrupt rank count far beyond the body must be a clean error
         // (no wire-controlled giant allocation).
         let mut corrupt = vec![KIND_ADDRMAP];
+        corrupt.extend_from_slice(&0u64.to_le_bytes());
         corrupt.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_addr_map(&corrupt).unwrap_err().contains("claims"));
     }

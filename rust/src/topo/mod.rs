@@ -1,0 +1,646 @@
+//! Hierarchical (two-level) topology layer.
+//!
+//! Real machines are not flat: ranks on one node talk over shared memory
+//! (or at worst loopback) at a fraction of the latency of the inter-node
+//! fabric. The permutation framework composes cyclic patterns freely, so a
+//! two-level allreduce is just another composition: group the `P` ranks
+//! into `L` nodes ([`NodeMap`]), reduce each node onto its **leader**
+//! (lowest rank of the node, a binomial combining tree), run any verified
+//! single-level schedule between the `L` leaders (the *inner* schedule —
+//! the paper's generalized family, Ring, RD, …), then broadcast each
+//! node's result back down the mirrored binomial tree:
+//!
+//! ```text
+//!   ranks   0 1 2 | 3 4 5 | 6 7          nodes = 3+3+2, leaders {0,3,6}
+//!           ↘ ↓ ↙   ↘ ↓ ↙   ↓ ↙          phase 1: binomial reduce-to-leader
+//!            [0] ←——→ [3] ←——→ [6]        phase 2: inner schedule on leaders
+//!           ↗ ↑ ↖   ↗ ↑ ↖   ↑ ↖          phase 3: binomial broadcast
+//! ```
+//!
+//! [`compose_two_level`] stitches the three phases into **one**
+//! [`ProcSchedule`] over all `P` ranks, so the whole stack — verifier,
+//! DES, in-process executors, the TCP transport — runs it unchanged, and
+//! the schedule verifier proves the composition correct the same way it
+//! proves the flat schedules. The composed schedule's cross-node traffic
+//! flows only between leaders, which is what lets [`crate::net::bootstrap`]
+//! dial a sparse mesh ([`peer_set`]): a leader holds `log₂ k` intra-node
+//! links plus its inner-schedule links instead of `P − 1` sockets.
+//!
+//! Buffer-id regions of the composed schedule (per rank, ids are
+//! per-process so regions only constrain *one* rank's lifetime):
+//!
+//! * `A  = [0, maxnb)` — the gather accumulator at round 0 (the rank's
+//!   init buffers, mirroring its node's inner init layout positionally),
+//! * `Bₜ = [maxnb·(t+1), maxnb·(t+2))` — fresh receive ids for gather
+//!   round `t` (a receiver reduces its old accumulator into these),
+//! * `inner + B` — the inner schedule's ids shifted by
+//!   `B = maxnb·(T_max+1)`; a leader's final gather round receives
+//!   directly into its shifted inner init ids,
+//! * `C  = [B + inner.max_buf_id(), …)` — broadcast landing ids on
+//!   non-leaders.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use crate::perm::Permutation;
+use crate::sched::{verify::verify, BufId, Op, ProcSchedule, Segment, Step};
+use crate::util::ceil_log2;
+
+/// Contiguous grouping of ranks `0..p` into nodes: node `i` owns ranks
+/// `[starts[i], starts[i] + sizes[i])` and its **leader** is the lowest
+/// rank of the node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeMap {
+    sizes: Vec<usize>,
+    starts: Vec<usize>,
+    node_of: Vec<usize>,
+}
+
+impl NodeMap {
+    /// Build from explicit node sizes (ragged allowed, every node ≥ 1).
+    pub fn from_sizes(sizes: &[usize]) -> Result<NodeMap, String> {
+        if sizes.is_empty() {
+            return Err("node map needs at least one node".into());
+        }
+        if let Some(i) = sizes.iter().position(|&k| k == 0) {
+            return Err(format!("node {i} is empty"));
+        }
+        let mut starts = Vec::with_capacity(sizes.len());
+        let mut node_of = Vec::new();
+        let mut at = 0usize;
+        for (i, &k) in sizes.iter().enumerate() {
+            starts.push(at);
+            node_of.extend(std::iter::repeat(i).take(k));
+            at += k;
+        }
+        Ok(NodeMap {
+            sizes: sizes.to_vec(),
+            starts,
+            node_of,
+        })
+    }
+
+    /// Spread `p` ranks over `n_nodes` as evenly as possible (the first
+    /// `p mod n_nodes` nodes get one extra rank).
+    pub fn even(p: usize, n_nodes: usize) -> Result<NodeMap, String> {
+        if n_nodes == 0 || p < n_nodes {
+            return Err(format!("cannot spread {p} ranks over {n_nodes} nodes"));
+        }
+        let (q, r) = (p / n_nodes, p % n_nodes);
+        let sizes: Vec<usize> = (0..n_nodes).map(|i| q + usize::from(i < r)).collect();
+        NodeMap::from_sizes(&sizes)
+    }
+
+    /// Parse a `"3+3+2"`-style size spec.
+    pub fn parse(spec: &str) -> Result<NodeMap, String> {
+        let sizes = spec
+            .split('+')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|e| format!("bad node size {t:?}: {e}"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        NodeMap::from_sizes(&sizes)
+    }
+
+    /// Total rank count.
+    pub fn p(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    pub fn size(&self, node: usize) -> usize {
+        self.sizes[node]
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of[rank]
+    }
+
+    /// The node's leader: its lowest rank.
+    pub fn leader(&self, node: usize) -> usize {
+        self.starts[node]
+    }
+
+    pub fn leaders(&self) -> Vec<usize> {
+        self.starts.clone()
+    }
+
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.starts[self.node_of[rank]] == rank
+    }
+
+    /// The ranks of `node`, leader first.
+    pub fn members(&self, node: usize) -> std::ops::Range<usize> {
+        self.starts[node]..self.starts[node] + self.sizes[node]
+    }
+
+    /// Position of `rank` within its node (0 = leader).
+    pub fn local_index(&self, rank: usize) -> usize {
+        rank - self.starts[self.node_of[rank]]
+    }
+
+    /// The `"3+3+2"` spec this map round-trips with.
+    pub fn spec(&self) -> String {
+        self.sizes
+            .iter()
+            .map(usize::to_string)
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+/// The trivial verified schedule for one process: its input **is** the
+/// result. Used as the inner schedule when the map has a single node.
+pub fn single_proc() -> ProcSchedule {
+    ProcSchedule {
+        p: 1,
+        n_units: 1,
+        init: vec![vec![(0, Segment::new(0, 1))]],
+        steps: Vec::new(),
+        result: vec![vec![0]],
+        lanes: 1,
+        name: "single".into(),
+    }
+}
+
+/// Build the standard two-level schedule: `kind` between the leaders
+/// (cyclic group, identity `h`), binomial trees within the nodes.
+pub fn two_level(
+    kind: AlgorithmKind,
+    map: &NodeMap,
+    ctx: &BuildCtx,
+) -> Result<ProcSchedule, String> {
+    let inner = if map.n_nodes() == 1 {
+        single_proc()
+    } else {
+        Algorithm::new(kind, map.n_nodes()).build(ctx)?
+    };
+    compose_two_level(&inner, map)
+}
+
+/// Shift every buffer id in `op` by `off` and route its peers through the
+/// leader table (inner proc `i` executes on rank `leaders[i]`).
+fn lift_op(op: &Op, map: &NodeMap, off: u32) -> Op {
+    match op {
+        Op::Send { to, bufs } => Op::Send {
+            to: map.leader(*to),
+            bufs: Arc::new(bufs.iter().map(|&b| b + off).collect()),
+        },
+        Op::Recv { from, bufs } => Op::Recv {
+            from: map.leader(*from),
+            bufs: Arc::new(bufs.iter().map(|&b| b + off).collect()),
+        },
+        Op::Reduce { dst, src } => Op::Reduce {
+            dst: dst + off,
+            src: src + off,
+        },
+        Op::ReduceMany { pairs } => Op::ReduceMany {
+            pairs: Arc::new(pairs.iter().map(|&(d, s)| (d + off, s + off)).collect()),
+        },
+        Op::Copy { dst, src } => Op::Copy {
+            dst: dst + off,
+            src: src + off,
+        },
+        Op::Free { buf } => Op::Free { buf: buf + off },
+        Op::FreeMany { bufs } => Op::FreeMany {
+            bufs: Arc::new(bufs.iter().map(|&b| b + off).collect()),
+        },
+    }
+}
+
+/// Compose `inner` (a verified schedule over `map.n_nodes()` leaders) with
+/// binomial intra-node reduce/broadcast trees into one verified
+/// [`ProcSchedule`] over all `map.p()` ranks.
+///
+/// Phase 1 reduces each node's whole vector onto its leader in
+/// `⌈log₂ k⌉` rounds, phase 2 replays `inner` verbatim on the leader
+/// ranks (ids shifted, peers routed through the leader table), phase 3
+/// broadcasts each node's result down the mirrored tree. The composed
+/// schedule is verified before it is returned, so a caller holding an
+/// `Ok` has the same machine-checked guarantee as for the flat builders.
+pub fn compose_two_level(inner: &ProcSchedule, map: &NodeMap) -> Result<ProcSchedule, String> {
+    let l = map.n_nodes();
+    let p = map.p();
+    if inner.p != l {
+        return Err(format!(
+            "inner schedule has P={} but the node map has {l} nodes",
+            inner.p
+        ));
+    }
+    if inner.lanes != 1 {
+        return Err(format!(
+            "two-level composition needs a single-lane inner schedule, got lanes={}",
+            inner.lanes
+        ));
+    }
+    let maxnb = inner.init.iter().map(Vec::len).max().unwrap_or(0);
+    if maxnb == 0 || inner.init.iter().any(Vec::is_empty) {
+        return Err("inner schedule has a proc with no init buffers".into());
+    }
+    let t_max = map
+        .sizes()
+        .iter()
+        .map(|&k| ceil_log2(k))
+        .max()
+        .expect("node map is non-empty");
+    // Region boundaries (see module docs).
+    let inner_off = (maxnb * (t_max as usize + 1)) as u32;
+    let c_base = inner_off + inner.max_buf_id();
+
+    // Init: every rank mirrors its node's inner init layout. Singleton
+    // nodes skip the gather, so their leader's accumulator must already
+    // sit at the shifted inner ids.
+    let mut init: Vec<Vec<(BufId, Segment)>> = vec![Vec::new(); p];
+    for node in 0..l {
+        let layout = &inner.init[node];
+        for r in map.members(node) {
+            init[r] = if map.size(node) == 1 {
+                layout
+                    .iter()
+                    .map(|&(id, seg)| (id + inner_off, seg))
+                    .collect()
+            } else {
+                layout
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(_, seg))| (i as BufId, seg))
+                    .collect()
+            };
+        }
+    }
+
+    // Each rank's current accumulator id list during phase 1.
+    let mut acc: Vec<Vec<BufId>> = init
+        .iter()
+        .map(|row| row.iter().map(|&(id, _)| id).collect())
+        .collect();
+
+    let mut steps: Vec<Step> = Vec::new();
+
+    // Phase 1: binomial reduce-to-leader, one global step per tree round.
+    // In round t the local rank j with j ≡ 2^t (mod 2^{t+1}) sends its
+    // whole accumulator to j − 2^t and frees it; the receiver reduces the
+    // fresh arrival into (onto) it and frees its old accumulator.
+    for t in 0..t_max {
+        let mut step = Step::empty(p);
+        for node in 0..l {
+            let k = map.size(node);
+            let rounds = ceil_log2(k);
+            if t >= rounds {
+                continue;
+            }
+            let base = map.leader(node);
+            let nb = inner.init[node].len();
+            let half = 1usize << t;
+            for j in (half..k).step_by(half * 2) {
+                let s_rank = base + j;
+                let r_rank = base + j - half;
+                let fresh: Vec<BufId> = if j == half && t == rounds - 1 {
+                    // The leader's last round lands directly on the
+                    // shifted inner init ids, ready for phase 2.
+                    inner.init[node]
+                        .iter()
+                        .map(|&(id, _)| id + inner_off)
+                        .collect()
+                } else {
+                    let band = (maxnb * (t as usize + 1)) as BufId;
+                    (0..nb as BufId).map(|i| band + i).collect()
+                };
+                let sent = std::mem::take(&mut acc[s_rank]);
+                let old = std::mem::replace(&mut acc[r_rank], fresh.clone());
+                let pairs: Vec<(BufId, BufId)> =
+                    fresh.iter().copied().zip(old.iter().copied()).collect();
+                step.ops[s_rank].push(Op::send(r_rank, sent.clone()));
+                step.ops[s_rank].push(Op::FreeMany {
+                    bufs: Arc::new(sent),
+                });
+                step.ops[r_rank].push(Op::recv(s_rank, fresh));
+                step.ops[r_rank].push(Op::ReduceMany {
+                    pairs: Arc::new(pairs),
+                });
+                step.ops[r_rank].push(Op::FreeMany { bufs: Arc::new(old) });
+            }
+        }
+        steps.push(step);
+    }
+
+    // Phase 2: replay the inner schedule verbatim on the leader ranks
+    // (non-leaders idle). Ids shift by `inner_off`, peers map through the
+    // leader table, so cross-node traffic is leader↔leader only.
+    for st in &inner.steps {
+        let mut step = Step::empty(p);
+        for (iproc, ops) in st.ops.iter().enumerate() {
+            step.ops[map.leader(iproc)] =
+                ops.iter().map(|op| lift_op(op, map, inner_off)).collect();
+        }
+        steps.push(step);
+    }
+
+    // Phase 3: binomial broadcast down the mirrored tree. A node of k
+    // ranks re-enters at round k's own depth as t descends from the
+    // deepest tree; every non-leader receives exactly once (at round
+    // t = trailing_zeros(j)) into the shared landing ids of region C.
+    for t in (0..t_max).rev() {
+        let mut step = Step::empty(p);
+        for node in 0..l {
+            let k = map.size(node);
+            if t >= ceil_log2(k) {
+                continue;
+            }
+            let base = map.leader(node);
+            let nr = inner.result[node].len();
+            let leader_ids: Vec<BufId> =
+                inner.result[node].iter().map(|&b| b + inner_off).collect();
+            let landing: Vec<BufId> = (0..nr as BufId).map(|i| c_base + i).collect();
+            let half = 1usize << t;
+            for j in (0..k).step_by(half * 2) {
+                if j + half >= k {
+                    continue;
+                }
+                let s_rank = base + j;
+                let r_rank = base + j + half;
+                let src_ids = if j == 0 {
+                    leader_ids.clone()
+                } else {
+                    landing.clone()
+                };
+                step.ops[s_rank].push(Op::send(r_rank, src_ids));
+                step.ops[r_rank].push(Op::recv(s_rank, landing.clone()));
+            }
+        }
+        steps.push(step);
+    }
+
+    let mut result: Vec<Vec<BufId>> = vec![Vec::new(); p];
+    for node in 0..l {
+        let leader_ids: Vec<BufId> = inner.result[node].iter().map(|&b| b + inner_off).collect();
+        let nr = inner.result[node].len();
+        let landing: Vec<BufId> = (0..nr as BufId).map(|i| c_base + i).collect();
+        for r in map.members(node) {
+            result[r] = if map.is_leader(r) {
+                leader_ids.clone()
+            } else {
+                landing.clone()
+            };
+        }
+    }
+
+    let composed = ProcSchedule {
+        p,
+        n_units: inner.n_units,
+        init,
+        steps,
+        result,
+        lanes: 1,
+        name: format!("hier[{}]-{}", map.spec(), inner.name),
+    };
+    verify(&composed).map_err(|e| format!("two-level composition failed to verify: {e}"))?;
+    Ok(composed)
+}
+
+/// The set of peers `proc` exchanges messages with anywhere in `s` — the
+/// sockets a rank actually needs. Schedule validity makes the relation
+/// symmetric (`q ∈ peer_set(s, r) ⇔ r ∈ peer_set(s, q)`), which is what
+/// lets every rank prune its mesh independently yet consistently.
+pub fn peer_set(s: &ProcSchedule, proc: usize) -> BTreeSet<usize> {
+    let mut set = BTreeSet::new();
+    for st in &s.steps {
+        for op in &st.ops[proc] {
+            match op {
+                Op::Send { to, .. } => {
+                    set.insert(*to);
+                }
+                Op::Recv { from, .. } => {
+                    set.insert(*from);
+                }
+                _ => {}
+            }
+        }
+    }
+    set
+}
+
+/// Relabel the processes of `s` through `pi`: new process `pi(q)` runs
+/// old process `q`'s role. This is the permutation framework applied to
+/// whole schedules — composing a relabeling with [`compose_two_level`]
+/// places logical nodes onto arbitrary physical rank blocks.
+pub fn relabel(s: &ProcSchedule, pi: &Permutation) -> Result<ProcSchedule, String> {
+    if pi.len() != s.p {
+        return Err(format!(
+            "permutation over {} points cannot relabel a P={} schedule",
+            pi.len(),
+            s.p
+        ));
+    }
+    let mut init = vec![Vec::new(); s.p];
+    let mut result = vec![Vec::new(); s.p];
+    for q in 0..s.p {
+        init[pi.apply(q)] = s.init[q].clone();
+        result[pi.apply(q)] = s.result[q].clone();
+    }
+    let steps = s
+        .steps
+        .iter()
+        .map(|st| {
+            let mut ops = vec![Vec::new(); s.p];
+            for (q, row) in st.ops.iter().enumerate() {
+                ops[pi.apply(q)] = row
+                    .iter()
+                    .map(|op| match op {
+                        Op::Send { to, bufs } => Op::Send {
+                            to: pi.apply(*to),
+                            bufs: bufs.clone(),
+                        },
+                        Op::Recv { from, bufs } => Op::Recv {
+                            from: pi.apply(*from),
+                            bufs: bufs.clone(),
+                        },
+                        other => other.clone(),
+                    })
+                    .collect();
+            }
+            Step { ops }
+        })
+        .collect();
+    Ok(ProcSchedule {
+        p: s.p,
+        n_units: s.n_units,
+        init,
+        steps,
+        result,
+        lanes: s.lanes,
+        name: format!("{}-relabel{}", s.name, pi.to_cycle_string()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::stats::stats;
+
+    #[test]
+    fn node_map_shapes() {
+        let m = NodeMap::parse("3+3+2").unwrap();
+        assert_eq!(m.p(), 8);
+        assert_eq!(m.n_nodes(), 3);
+        assert_eq!(m.leaders(), vec![0, 3, 6]);
+        assert_eq!(m.node_of(4), 1);
+        assert_eq!(m.local_index(4), 1);
+        assert!(m.is_leader(6));
+        assert!(!m.is_leader(7));
+        assert_eq!(m.members(1), 3..6);
+        assert_eq!(m.spec(), "3+3+2");
+
+        let even = NodeMap::even(10, 4).unwrap();
+        assert_eq!(even.sizes(), &[3, 3, 2, 2]);
+        assert_eq!(even.p(), 10);
+
+        assert!(NodeMap::from_sizes(&[]).is_err());
+        assert!(NodeMap::from_sizes(&[2, 0, 1]).is_err());
+        assert!(NodeMap::parse("3+x").is_err());
+        assert!(NodeMap::even(3, 5).is_err());
+    }
+
+    #[test]
+    fn single_proc_inner_verifies() {
+        verify(&single_proc()).unwrap();
+    }
+
+    /// Every composition over a representative sweep of maps and inner
+    /// kinds must pass the schedule verifier (compose_two_level verifies
+    /// internally; this pins that the Ok path is actually reachable).
+    #[test]
+    fn compositions_verify_across_maps_and_kinds() {
+        let maps = [
+            "1", "2", "4", "1+1", "2+2", "3+1", "1+3", "2+2+2", "3+3+2", "5+1+2", "4+4+4+4",
+            "7+5+3+2",
+        ];
+        for spec in maps {
+            let map = NodeMap::parse(spec).unwrap();
+            for kind in [
+                AlgorithmKind::Ring,
+                AlgorithmKind::BwOptimal,
+                AlgorithmKind::LatOptimal,
+                AlgorithmKind::RecursiveDoubling,
+            ] {
+                let s = two_level(kind, &map, &BuildCtx::default())
+                    .unwrap_or_else(|e| panic!("{spec} {kind:?}: {e}"));
+                assert_eq!(s.p, map.p());
+                assert!(s.name.starts_with(&format!("hier[{spec}]-")), "{}", s.name);
+            }
+        }
+    }
+
+    /// Cross-node messages flow exclusively between leaders, and a
+    /// leader's peer set is its binomial-tree children plus its inner
+    /// peers — strictly sparser than the flat P−1 mesh.
+    #[test]
+    fn cross_node_traffic_is_leader_only_and_sparse() {
+        let map = NodeMap::parse("3+3+2").unwrap();
+        let s = two_level(AlgorithmKind::Ring, &map, &BuildCtx::default()).unwrap();
+        for rank in 0..map.p() {
+            for peer in peer_set(&s, rank) {
+                if map.node_of(peer) != map.node_of(rank) {
+                    assert!(map.is_leader(rank), "non-leader {rank} talks off-node");
+                    assert!(map.is_leader(peer), "{rank} talks to non-leader {peer}");
+                }
+            }
+        }
+        let leader_peers = peer_set(&s, 0);
+        assert!(
+            leader_peers.len() < map.p() - 1,
+            "leader mesh not sparse: {leader_peers:?}"
+        );
+        // Peer symmetry — the property lazy dialing relies on.
+        for rank in 0..map.p() {
+            for peer in peer_set(&s, rank) {
+                assert!(
+                    peer_set(&s, peer).contains(&rank),
+                    "asymmetric peers {rank}/{peer}"
+                );
+            }
+        }
+    }
+
+    /// The composition degrades gracefully at the edges: one node (pure
+    /// tree, no inner steps beyond none) and all-singleton nodes (pure
+    /// inner schedule, no trees).
+    #[test]
+    fn degenerate_maps_reduce_to_single_phases() {
+        let tree_only = two_level(
+            AlgorithmKind::Ring,
+            &NodeMap::from_sizes(&[6]).unwrap(),
+            &BuildCtx::default(),
+        )
+        .unwrap();
+        assert_eq!(tree_only.num_steps(), 2 * ceil_log2(6) as usize);
+
+        let inner = Algorithm::new(AlgorithmKind::Ring, 4)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let flat = compose_two_level(&inner, &NodeMap::from_sizes(&[1, 1, 1, 1]).unwrap()).unwrap();
+        assert_eq!(flat.num_steps(), inner.num_steps());
+        assert_eq!(
+            stats(&flat).total_units_sent,
+            stats(&inner).total_units_sent
+        );
+    }
+
+    #[test]
+    fn compose_rejects_mismatched_shapes() {
+        let inner = Algorithm::new(AlgorithmKind::Ring, 3)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let err = compose_two_level(&inner, &NodeMap::parse("2+2").unwrap()).unwrap_err();
+        assert!(err.contains("2 nodes"), "{err}");
+    }
+
+    /// An ill-formed hand-tampered composition must be rejected by the
+    /// verifier: dropping the leader's final reduce leaves the result
+    /// missing contributions (caught as a non-full source set).
+    #[test]
+    fn verifier_rejects_tampered_composition() {
+        let map = NodeMap::parse("2+2").unwrap();
+        let mut s = two_level(AlgorithmKind::Ring, &map, &BuildCtx::default()).unwrap();
+        // Step 0 is the gather round: strip rank 0's ReduceMany (keep the
+        // recv so message pairing still matches) and retarget its frees so
+        // liveness still balances — the *data* is now wrong, nothing else.
+        let ops = &mut s.steps[0].ops[0];
+        ops.retain(|op| !matches!(op, Op::ReduceMany { .. } | Op::FreeMany { .. }));
+        let kept: Vec<BufId> = s.init[0].iter().map(|&(id, _)| id).collect();
+        ops.push(Op::FreeMany {
+            bufs: Arc::new(kept),
+        });
+        let err = verify(&s).unwrap_err();
+        assert!(
+            err.contains("not fully reduced") || err.contains("source"),
+            "unexpected verifier error: {err}"
+        );
+    }
+
+    /// Relabeling through a permutation preserves verification and maps
+    /// peer sets through the permutation.
+    #[test]
+    fn relabel_preserves_verification() {
+        let map = NodeMap::parse("3+3+2").unwrap();
+        let s = two_level(AlgorithmKind::Ring, &map, &BuildCtx::default()).unwrap();
+        let pi = Permutation::from_cycles(s.p, "(0 4)(1 6 2)").unwrap();
+        let r = relabel(&s, &pi).unwrap();
+        verify(&r).unwrap();
+        for q in 0..s.p {
+            let want: BTreeSet<usize> = peer_set(&s, q).into_iter().map(|x| pi.apply(x)).collect();
+            assert_eq!(peer_set(&r, pi.apply(q)), want, "rank {q}");
+        }
+        assert!(relabel(&s, &Permutation::identity(3)).is_err());
+    }
+}

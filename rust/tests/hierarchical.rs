@@ -1,0 +1,193 @@
+//! Differential sweep for the two-level (hierarchical) composition.
+//!
+//! For node maps covering every `P ∈ 2..=17` — including ragged shapes
+//! like `3+3+2`, single-node and all-singleton degenerations — and every
+//! inter-node algorithm kind × reduce op, the composed schedule
+//! ([`topo::compose_two_level`]) must (a) pass the symbolic verifier,
+//! (b) run on the thread cluster **bit-identically** to the clone-
+//! semantics oracle replaying the same schedule, and (c) agree with the
+//! flat single-level path: exactly (bitwise) for integer payloads and for
+//! `Max`/`Min`, within float tolerance for f32 `Sum`/`Prod` (the
+//! two-level combine tree associates differently). The sweep also pins
+//! the structural claims the lazy mesh relies on: cross-node traffic is
+//! leader-only and every leader's peer set stays strictly below `P − 1`.
+
+use permallreduce::algo::{AlgorithmKind, BuildCtx};
+use permallreduce::cluster::{oracle, reference_allreduce, ClusterExecutor, Element, ReduceOp};
+use permallreduce::sched::verify::verify;
+use permallreduce::topo::{compose_two_level, peer_set, two_level, NodeMap};
+use permallreduce::util::Rng;
+
+/// One map per `P ∈ 2..=17` (ragged wherever possible), plus the two
+/// degenerate shapes: everything in one node, every rank its own node.
+const MAPS: &[&str] = &[
+    "1+1", "2+1", "2+2", "3+2", "3+3", "3+3+1", "3+3+2", "4+3+2", "4+4+2", "4+4+3", "4+4+4",
+    "5+4+4", "5+5+4", "5+5+5", "4+4+4+4", "6+6+5", "8", "1+1+1+1+1",
+];
+
+const KINDS: &[AlgorithmKind] = &[
+    AlgorithmKind::Ring,
+    AlgorithmKind::BwOptimal,
+    AlgorithmKind::LatOptimal,
+    AlgorithmKind::RecursiveDoubling,
+];
+
+fn composed(spec: &str, kind: AlgorithmKind) -> (NodeMap, permallreduce::sched::ProcSchedule) {
+    let map = NodeMap::parse(spec).unwrap();
+    // `two_level` builds the inner schedule over the leaders and returns
+    // the full composition (reduce-up / inner / broadcast-down).
+    let s = two_level(kind, &map, &BuildCtx::default())
+        .unwrap_or_else(|e| panic!("{spec} {kind:?}: composition failed: {e}"));
+    (map, s)
+}
+
+#[test]
+fn composed_schedules_verify_and_match_oracle_and_flat_f32() {
+    let exec = ClusterExecutor::new();
+    let mut rng = Rng::new(0x70_0B5E);
+    for &spec in MAPS {
+        for &kind in KINDS {
+            let (map, s) = composed(spec, kind);
+            let p = map.p();
+            let report =
+                verify(&s).unwrap_or_else(|e| panic!("{spec} {kind:?}: verify failed: {e}"));
+            if p > 1 {
+                assert!(report.total_units_sent > 0, "{spec} {kind:?}: no traffic?");
+            }
+            // Ragged length: not divisible by P or by the node count.
+            let n = 2 * p + 3;
+            for op in ReduceOp::all() {
+                // Payloads near 1.0 keep Prod conditioned across 17 factors.
+                let xs: Vec<Vec<f32>> = (0..p)
+                    .map(|_| (0..n).map(|_| 0.5 + rng.f32()).collect())
+                    .collect();
+                let got = exec
+                    .execute(&s, &xs, op)
+                    .unwrap_or_else(|e| panic!("{spec} {kind:?} {op:?}: exec failed: {e}"));
+                // (b) bit-identical to the oracle replaying the same
+                // composed schedule — data plane vs clone semantics.
+                let want = oracle::execute_reference(&s, &xs, op).unwrap();
+                for rank in 0..p {
+                    assert_eq!(
+                        got[rank].iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                        want[rank].iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                        "{spec} {kind:?} {op:?} rank {rank}: executor vs oracle"
+                    );
+                }
+                // (c) against the flat single-level reference fold.
+                let flat = reference_allreduce(&xs, op);
+                for (rank, out) in got.iter().enumerate() {
+                    for (i, (g, w)) in out.iter().zip(&flat).enumerate() {
+                        match op {
+                            ReduceOp::Max | ReduceOp::Min => assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "{spec} {kind:?} {op:?} rank {rank} elem {i}"
+                            ),
+                            _ => assert!(
+                                (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                                "{spec} {kind:?} {op:?} rank {rank} elem {i}: {g} vs {w}"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Integer payloads make "bit-identical to the flat path" exact for every
+/// op: Sum/Prod of i64 are associative-commutative on the nose, so the
+/// two-level regrouping cannot show.
+#[test]
+fn composed_is_exactly_flat_for_integers() {
+    let exec = ClusterExecutor::new();
+    let mut rng = Rng::new(0x1D_E9E2);
+    for &spec in ["3+3+2", "4+3+2", "2+2+2+2", "5+5+5", "1+3+1"].iter() {
+        for &kind in KINDS {
+            let (map, s) = composed(spec, kind);
+            let p = map.p();
+            let n = 3 * p + 1;
+            for op in ReduceOp::all() {
+                // Small magnitudes keep i64 Prod in range across 15 ranks.
+                let xs: Vec<Vec<i64>> = (0..p)
+                    .map(|_| {
+                        (0..n)
+                            .map(|_| 1 + (rng.f32() * 3.0) as i64)
+                            .collect()
+                    })
+                    .collect();
+                // The flat single-level reference: a plain left fold.
+                let mut flat = xs[0].clone();
+                for v in &xs[1..] {
+                    i64::combine(op, &mut flat, v);
+                }
+                let got = exec.execute(&s, &xs, op).unwrap();
+                for rank in 0..p {
+                    assert_eq!(got[rank], flat, "{spec} {kind:?} {op:?} rank {rank}");
+                }
+            }
+        }
+    }
+}
+
+/// The structural contract the lazy-dialed mesh depends on: every
+/// cross-node message of a composed schedule runs between two node
+/// leaders, peer sets are symmetric, and a leader talks to strictly
+/// fewer than `P − 1` peers.
+#[test]
+fn cross_node_traffic_is_leader_only_and_sparse_across_the_sweep() {
+    for &spec in MAPS {
+        for &kind in KINDS {
+            let (map, s) = composed(spec, kind);
+            let p = map.p();
+            let peers: Vec<_> = (0..p).map(|r| peer_set(&s, r)).collect();
+            for r in 0..p {
+                for &q in &peers[r] {
+                    assert!(peers[q].contains(&r), "{spec} {kind:?}: {r}↔{q} asymmetric");
+                    if map.node_of(q) != map.node_of(r) {
+                        assert!(
+                            map.is_leader(r) && map.is_leader(q),
+                            "{spec} {kind:?}: cross-node link {r}↔{q} between non-leaders"
+                        );
+                    }
+                }
+            }
+            if p > 2 {
+                for node in 0..map.n_nodes() {
+                    assert!(
+                        peers[map.leader(node)].len() < p - 1,
+                        "{spec} {kind:?}: leader {} holds a full mesh",
+                        map.leader(node)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// An ill-formed two-level composition must be rejected, not executed:
+/// truncating the broadcast phase leaves non-leader ranks without their
+/// result buffers, which the symbolic verifier catches.
+#[test]
+fn verifier_rejects_truncated_composition() {
+    let (_, mut s) = composed("3+3+2", AlgorithmKind::Ring);
+    verify(&s).expect("the intact composition verifies");
+    s.steps.pop();
+    let err = verify(&s).expect_err("a truncated composition must not verify");
+    assert!(!err.is_empty());
+}
+
+/// compose_two_level refuses mismatched shapes outright (inner schedule
+/// not over the map's node count).
+#[test]
+fn compose_rejects_wrong_inner_width() {
+    let map = NodeMap::parse("3+3+2").unwrap();
+    let wrong = two_level(
+        AlgorithmKind::Ring,
+        &NodeMap::parse("2+2").unwrap(),
+        &BuildCtx::default(),
+    )
+    .unwrap();
+    assert!(compose_two_level(&wrong, &map).is_err());
+}
