@@ -17,6 +17,10 @@
 //! cargo run --release --example net_allreduce -- --rank 0 --nprocs 3 --bind 127.0.0.1:29517
 //! cargo run --release --example net_allreduce -- --rank 1 --nprocs 3 --bind 127.0.0.1:29517
 //! cargo run --release --example net_allreduce -- --rank 2 --nprocs 3 --bind 127.0.0.1:29517
+//! # chaos harness: arm the failure detector, hard-kill one random
+//! # non-zero rank between collectives, and require every survivor to
+//! # shrink the membership to P−1 and converge on the P−1 result:
+//! cargo run --release --example net_allreduce -- --self-spawn --chaos --nprocs 8
 //! ```
 //!
 //! Every rank regenerates all ranks' inputs from the shared seed, so each
@@ -25,11 +29,11 @@
 
 use std::time::Duration;
 
-use permallreduce::algo::AlgorithmKind;
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
 use permallreduce::cli::Args;
 use permallreduce::cluster::{oracle, ReduceOp};
 use permallreduce::coordinator::bucket;
-use permallreduce::net::{probe::ProbeConfig, Endpoint, NetOptions};
+use permallreduce::net::{fault::FaultPolicy, probe::ProbeConfig, Endpoint, NetOptions};
 use permallreduce::util::Rng;
 
 const SEED: u64 = 0x5EED_0E7;
@@ -145,21 +149,128 @@ fn run_rank(rank: usize, p: usize, bind: &str, n: usize) -> Result<(), String> {
     Ok(())
 }
 
+/// One rank of the chaos harness: the failure detector is armed, the
+/// designated `victim` hard-dies (`abort`, no clean shutdown — its
+/// sockets just drop) after the first collective commits, and every
+/// survivor must detect the death, shrink to `P − 1` in a new epoch,
+/// and produce a result bit-identical to the fresh `P − 1` oracle.
+fn chaos_rank(rank: usize, p: usize, bind: &str, n: usize, victim: usize) -> Result<(), String> {
+    if victim == 0 || victim >= p {
+        return Err(format!("--victim {victim} must be a non-zero rank below {p}"));
+    }
+    let opts = NetOptions {
+        rendezvous: bind.to_string(),
+        connect_timeout: Duration::from_secs(30),
+        recv_timeout: Duration::from_secs(30),
+        fault: Some(FaultPolicy {
+            detect_timeout: Duration::from_secs(2),
+            ..FaultPolicy::default()
+        }),
+        ..NetOptions::default()
+    };
+    let mut ep: Endpoint<f32> = Endpoint::connect(rank, p, opts).map_err(|e| e.to_string())?;
+    let xs = inputs(p, n, SEED);
+    let m_bytes = n * 4;
+    // BwOptimal: parameter-independent construction, so the P−1 oracle
+    // schedule below is exactly the one the survivors rebuild.
+    let kind = AlgorithmKind::BwOptimal;
+
+    // Round 1: everyone alive, everyone must commit the full-P result.
+    let sched = ep.schedule(kind, m_bytes)?;
+    let want = oracle::execute_reference(&sched, &xs, ReduceOp::Sum).map_err(|e| e.to_string())?;
+    let got = ep.allreduce_elastic(&xs[rank], ReduceOp::Sum, kind)?;
+    if !bits_equal(&got, &want[rank]) {
+        return Err(format!("rank {rank}: pre-chaos round diverged from the oracle"));
+    }
+    if ep.membership().epoch != 0 {
+        return Err(format!("rank {rank}: clean round bumped the epoch"));
+    }
+
+    if rank == victim {
+        println!("[rank {rank}] chaos victim: dying without ceremony");
+        // abort(), not exit(): no Drop, no FIN handshake beyond the
+        // kernel closing the sockets — the shape of a real crash.
+        std::process::abort();
+    }
+
+    // Round 2: the victim is gone. This call must detect, shrink, and
+    // resume — an error here is a chaos-lane failure.
+    let got = ep.allreduce_elastic(&xs[rank], ReduceOp::Sum, kind)?;
+    let m = ep.membership();
+    if m.epoch == 0 || m.p() != p - 1 || m.live().contains(&victim) {
+        return Err(format!(
+            "rank {rank}: expected epoch > 0 with {} survivors sans rank {victim}, got epoch {} \
+             live {:?}",
+            p - 1,
+            m.epoch,
+            m.live()
+        ));
+    }
+    let live = m.live().to_vec();
+    let epoch = m.epoch;
+    let dense = live
+        .iter()
+        .position(|&r| r == rank)
+        .ok_or_else(|| format!("rank {rank}: survivor missing from its own live set"))?;
+    let survivor_inputs: Vec<Vec<f32>> = live.iter().map(|&r| xs[r].clone()).collect();
+    let shrunk = Algorithm::new(kind, p - 1)
+        .build(&BuildCtx {
+            m_bytes,
+            params: ep.params(),
+            ..BuildCtx::default()
+        })
+        .map_err(|e| format!("building the P-1 oracle schedule: {e}"))?;
+    let want = oracle::execute_reference(&shrunk, &survivor_inputs, ReduceOp::Sum)
+        .map_err(|e| e.to_string())?;
+    if !bits_equal(&got, &want[dense]) {
+        return Err(format!(
+            "rank {rank}: resumed {}-rank result diverged from the fresh P-1 oracle",
+            p - 1
+        ));
+    }
+    println!(
+        "[rank {rank}] chaos OK: survived the death of rank {victim}; epoch {epoch}, \
+         {}-rank result bit-identical to the fresh P-1 oracle",
+        p - 1
+    );
+    Ok(())
+}
+
 /// Launcher mode: fork `p` copies of this binary over loopback and wait.
-fn self_spawn(p: usize, bind: &str, n: usize) -> Result<(), String> {
+/// With `chaos`, one random non-zero rank is designated the victim (told
+/// to hard-die mid-job); the victim's death exit is expected and every
+/// survivor must exit clean.
+fn self_spawn(p: usize, bind: &str, n: usize, chaos: bool) -> Result<(), String> {
     let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
-    println!("spawning {p} ranks over {bind} ({n} f32/rank)…");
+    let victim = if chaos {
+        if p < 3 {
+            return Err("--chaos needs --nprocs >= 3 (a victim plus two survivors)".into());
+        }
+        // Random but logged: different CI runs kill different ranks.
+        let seed = SEED ^ u64::from(std::process::id());
+        Some(Rng::new(seed).range(1, p - 1))
+    } else {
+        None
+    };
+    match victim {
+        Some(v) => println!("spawning {p} ranks over {bind} ({n} f32/rank), chaos victim: rank {v}…"),
+        None => println!("spawning {p} ranks over {bind} ({n} f32/rank)…"),
+    }
     let mut children = Vec::with_capacity(p);
     for rank in 0..p {
-        let child = std::process::Command::new(&exe)
-            .arg("--rank")
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("--rank")
             .arg(rank.to_string())
             .arg("--nprocs")
             .arg(p.to_string())
             .arg("--bind")
             .arg(bind)
             .arg("--elems")
-            .arg(n.to_string())
+            .arg(n.to_string());
+        if let Some(v) = victim {
+            cmd.arg("--chaos").arg("--victim").arg(v.to_string());
+        }
+        let child = cmd
             .spawn()
             .map_err(|e| format!("spawning rank {rank}: {e}"))?;
         children.push((rank, child));
@@ -169,12 +280,23 @@ fn self_spawn(p: usize, bind: &str, n: usize) -> Result<(), String> {
         let status = child
             .wait()
             .map_err(|e| format!("waiting for rank {rank}: {e}"))?;
-        if !status.success() {
+        let expected_to_die = victim == Some(rank);
+        if status.success() == expected_to_die {
+            // A survivor failed, or the victim somehow exited clean.
             failed.push(rank);
         }
     }
     if failed.is_empty() {
-        println!("all {p} ranks completed — socket mesh matches the single-process oracle");
+        match victim {
+            Some(v) => println!(
+                "chaos run OK: rank {v} died, all {} survivors shrank to P-1 and matched \
+                 the fresh P-1 oracle",
+                p - 1
+            ),
+            None => {
+                println!("all {p} ranks completed — socket mesh matches the single-process oracle")
+            }
+        }
         Ok(())
     } else {
         Err(format!("ranks {failed:?} failed — see their output above"))
@@ -189,11 +311,19 @@ fn main() -> Result<(), String> {
     if p == 0 {
         return Err("--nprocs must be at least 1".into());
     }
+    let chaos = args.has("chaos");
     if args.has("self-spawn") {
-        return self_spawn(p, &bind, n);
+        return self_spawn(p, &bind, n, chaos);
     }
     match args.get("rank").map(str::parse::<usize>) {
-        Some(Ok(rank)) if rank < p => run_rank(rank, p, &bind, n),
+        Some(Ok(rank)) if rank < p => {
+            if chaos {
+                let victim = args.get_usize("victim", 0)?;
+                chaos_rank(rank, p, &bind, n, victim)
+            } else {
+                run_rank(rank, p, &bind, n)
+            }
+        }
         Some(Ok(rank)) => Err(format!("--rank {rank} out of range for --nprocs {p}")),
         Some(Err(e)) => Err(format!("--rank: {e}")),
         None => Err("pass --self-spawn, or --rank for one rank of a job".into()),

@@ -16,12 +16,15 @@
 //! **DES-timed** chunked-vs-monolithic speedups are gated too — and since
 //! the discrete-event clock is deterministic (pure α–β–γ arithmetic,
 //! identical on every machine), that section's floors are **tight**: its
-//! own `max_regress_pct` (default 0.5%) overrides the global slack.
+//! own `max_regress_pct` (default 0.5%) overrides the global slack. The
+//! `hier` section gates `BENCH_hier.json`'s flat-vs-two-level speedup the
+//! same tight way — it is DES-timed too, so a drop means the tuner or the
+//! composed schedules genuinely got worse, not that the runner was slow.
 //!
 //! ```text
-//! bench_gate <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json>]]
+//! bench_gate <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json>]]]
 //! bench_gate --self-test <BENCH_baseline.json>   # prove the gate can fail
-//! bench_gate --ratchet <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json>]]
+//! bench_gate --ratchet <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json>]]]
 //! ```
 //!
 //! The baseline is a conservative floor, meant to be ratcheted upward as
@@ -54,6 +57,7 @@ struct Baseline {
     series: Vec<Series>,
     bucketing_floor: Option<f64>,
     chunking: Option<ChunkingFloors>,
+    hier: Option<HierFloors>,
 }
 
 /// Floors for the DES-timed chunking artifact. The DES clock is
@@ -66,6 +70,18 @@ struct ChunkingFloors {
     /// Floor on `largest_bucket_p8_speedup` (the headline config), when
     /// the baseline pins it.
     largest_bucket_p8: Option<f64>,
+    /// Per-section regression margin (percent).
+    pct: f64,
+}
+
+/// Floors for the DES-timed flat-vs-hierarchical artifact. Like
+/// `chunking`, the clock is deterministic α–β–γ arithmetic, so the floor
+/// is tight and ratchets to the observed value exactly.
+#[derive(Clone, Copy, Debug)]
+struct HierFloors {
+    /// Floor on the artifact's `min_speedup` (worst cluster-shape ×
+    /// message-size cell of the sweep).
+    min_speedup: f64,
     /// Per-section regression margin (percent).
     pct: f64,
 }
@@ -112,12 +128,55 @@ fn parse_baseline(text: &str) -> Result<Baseline, String> {
             })
         }
     };
+    let hier = match v.get("hier") {
+        None => None,
+        Some(h) => {
+            let hpct = h
+                .get("max_regress_pct")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.5);
+            if !(hpct > 0.0 && hpct < 100.0) {
+                return Err(format!("hier max_regress_pct {hpct} out of (0, 100)"));
+            }
+            Some(HierFloors {
+                min_speedup: h
+                    .get("min_speedup")
+                    .and_then(Value::as_f64)
+                    .ok_or("baseline `hier` missing min_speedup")?,
+                pct: hpct,
+            })
+        }
+    };
     Ok(Baseline {
         pct,
         series,
         bucketing_floor,
         chunking,
+        hier,
     })
+}
+
+/// The gated quantity of `BENCH_hier.json`: its `min_speedup`.
+fn parse_hier(text: &str) -> Result<f64, String> {
+    let v = json::parse(text).map_err(|e| format!("hier parse: {e}"))?;
+    v.get("min_speedup")
+        .and_then(Value::as_f64)
+        .ok_or_else(|| "hier artifact missing `min_speedup`".to_string())
+}
+
+/// Gate the hier speedup against its (tight, DES-deterministic) floor;
+/// empty vec = pass.
+fn gate_hier(floors: &HierFloors, min_speedup: f64) -> Vec<String> {
+    let limit = floors.min_speedup * (1.0 - floors.pct / 100.0);
+    if min_speedup < limit {
+        vec![format!(
+            "hier: min_speedup {min_speedup:.4}× fell more than {}% below the \
+             baseline floor {:.4}× (limit {limit:.4}×)",
+            floors.pct, floors.min_speedup
+        )]
+    } else {
+        Vec::new()
+    }
 }
 
 /// The gated quantities of `BENCH_chunking.json`:
@@ -300,6 +359,15 @@ fn self_test(baseline: &Baseline, max_regress_pct: f64) -> Result<(), String> {
             return Err("chunking floors do not pass against themselves".into());
         }
     }
+    if let Some(h) = &baseline.hier {
+        let injected = h.min_speedup * (1.0 - h.pct / 100.0) * 0.5;
+        if gate_hier(h, injected).is_empty() {
+            return Err("injected hier regression passed — the gate is broken".into());
+        }
+        if !gate_hier(h, h.min_speedup).is_empty() {
+            return Err("hier floor does not pass against itself".into());
+        }
+    }
     Ok(())
 }
 
@@ -314,6 +382,7 @@ fn ratchet(
     current: &[Series],
     bucketing: Option<f64>,
     chunking: Option<(f64, Option<f64>)>,
+    hier: Option<f64>,
 ) -> String {
     let discount = 1.0 - baseline.pct / 100.0;
     let mut series: Vec<Series> = baseline
@@ -384,6 +453,15 @@ fn ratchet(
         }
         out.push_str(&format!(", \"max_regress_pct\": {pct}}}"));
     }
+    let old_h = baseline.hier;
+    if old_h.is_some() || hier.is_some() {
+        let pct = old_h.map_or(0.5, |h| h.pct);
+        // DES-deterministic: ratchet to the observed value exactly.
+        let min = old_h.map_or(0.0, |h| h.min_speedup).max(hier.unwrap_or(0.0));
+        out.push_str(&format!(
+            ",\n  \"hier\": {{\"min_speedup\": {min:.4}, \"max_regress_pct\": {pct}}}"
+        ));
+    }
     out.push_str("\n}\n");
     out
 }
@@ -396,7 +474,7 @@ fn run() -> Result<(), String> {
     };
     let selftest = mode == "--self-test";
     let usage = "usage: bench_gate [--self-test | --ratchet] <baseline.json> \
-                 [<dataplane.json> [<bucketing.json> [<chunking.json>]]]";
+                 [<dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json>]]]]";
     let baseline_path = files.first().ok_or(usage)?;
     let baseline_text = std::fs::read_to_string(baseline_path)
         .map_err(|e| format!("reading {baseline_path}: {e}"))?;
@@ -420,6 +498,9 @@ fn run() -> Result<(), String> {
                 ""
             }
         );
+        if baseline.hier.is_some() {
+            println!("bench_gate self-test OK: the hier floor rejects an injected regression too");
+        }
         return Ok(());
     }
 
@@ -442,7 +523,13 @@ fn run() -> Result<(), String> {
             )?),
             None => None,
         };
-        print!("{}", ratchet(&baseline, &current, bucketing, chunking));
+        let hier = match files.get(4) {
+            Some(path) => Some(parse_hier(
+                &std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?,
+            )?),
+            None => None,
+        };
+        print!("{}", ratchet(&baseline, &current, bucketing, chunking, hier));
         return Ok(());
     }
 
@@ -467,9 +554,18 @@ fn run() -> Result<(), String> {
         let (min_speedup, largest_p8) = parse_chunking(&chunking_text)?;
         failures.extend(gate_chunking(ch, min_speedup, largest_p8));
     }
+    if let Some(h) = &baseline.hier {
+        let hier_path = files.get(4).ok_or(
+            "baseline has a `hier` section but no hier artifact was passed \
+             (coverage regression)",
+        )?;
+        let hier_text = std::fs::read_to_string(hier_path)
+            .map_err(|e| format!("reading {hier_path}: {e}"))?;
+        failures.extend(gate_hier(h, parse_hier(&hier_text)?));
+    }
     if failures.is_empty() {
         println!(
-            "bench_gate OK: {} series{}{} within their baseline floors",
+            "bench_gate OK: {} series{}{}{} within their baseline floors",
             baseline.series.len(),
             if baseline.bucketing_floor.is_some() {
                 " + bucketing"
@@ -478,6 +574,11 @@ fn run() -> Result<(), String> {
             },
             if baseline.chunking.is_some() {
                 " + chunking (tight DES floors)"
+            } else {
+                ""
+            },
+            if baseline.hier.is_some() {
+                " + hier (tight DES floor)"
             } else {
                 ""
             }
@@ -547,7 +648,8 @@ mod tests {
             ],
             "bucketing": {"min_speedup": 1.0},
             "chunking": {"min_speedup": 1.0, "largest_bucket_p8_min_speedup": 1.0,
-                         "max_regress_pct": 0.5}
+                         "max_regress_pct": 0.5},
+            "hier": {"min_speedup": 1.0, "max_regress_pct": 0.5}
         }"#;
         let base = parse_baseline(text).unwrap();
         assert_eq!(base.pct, 20.0);
@@ -558,6 +660,9 @@ mod tests {
         assert_eq!(ch.min_speedup, 1.0);
         assert_eq!(ch.largest_bucket_p8, Some(1.0));
         assert_eq!(ch.pct, 0.5);
+        let h = base.hier.unwrap();
+        assert_eq!(h.min_speedup, 1.0);
+        assert_eq!(h.pct, 0.5);
         // A baseline without the optional sections stays valid (those
         // gates are then skipped).
         let text = r#"{
@@ -567,6 +672,7 @@ mod tests {
         let base = parse_baseline(text).unwrap();
         assert_eq!(base.bucketing_floor, None);
         assert!(base.chunking.is_none());
+        assert!(base.hier.is_none());
     }
 
     #[test]
@@ -610,6 +716,31 @@ mod tests {
     }
 
     #[test]
+    fn hier_gate_is_tight_and_parses_the_artifact_schema() {
+        let floors = HierFloors {
+            min_speedup: 1.5,
+            pct: 0.5,
+        };
+        assert!(gate_hier(&floors, 1.5).is_empty());
+        assert!(gate_hier(&floors, 2.0).is_empty());
+        // Within the 0.5% tolerance: pass. Just past it: fail.
+        assert!(gate_hier(&floors, 1.493).is_empty());
+        let fails = gate_hier(&floors, 1.48);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("hier"));
+        let text = r#"{
+            "bench": "hier", "timing": "des-alpha-beta-gamma",
+            "note": "flat vs two-level",
+            "entries": [{"nodes": "4+4", "p": 8, "m_bytes": 4096,
+                         "flat_kind": "Ring", "flat_s": 2.0e-3,
+                         "hier_name": "two-level", "hier_s": 1.0e-3,
+                         "speedup": 2.0}],
+            "min_speedup": 2.0, "max_speedup": 2.0
+        }"#;
+        assert_eq!(parse_hier(text).unwrap(), 2.0);
+    }
+
+    #[test]
     fn bucketing_gate_and_artifact_schema() {
         let text = r#"{
             "bench": "bucketing", "p": 8, "tensors": 51,
@@ -650,6 +781,10 @@ mod tests {
                 largest_bucket_p8: Some(1.0),
                 pct: 0.5,
             }),
+            hier: Some(HierFloors {
+                min_speedup: 1.0,
+                pct: 0.5,
+            }),
         };
         // First series measured much faster (ratchets, discounted by the
         // 20% margin), second measured slower (floor must not move), plus
@@ -659,7 +794,7 @@ mod tests {
             series(8, 65536, 1.5),
             series(16, 1 << 20, 3.0),
         ];
-        let text = ratchet(&base, &current, Some(2.5), Some((1.3, Some(1.4))));
+        let text = ratchet(&base, &current, Some(2.5), Some((1.3, Some(1.4))), Some(1.7));
         let new = parse_baseline(&text).expect("ratchet output must be a valid baseline");
         assert_eq!(new.pct, 20.0);
         assert_eq!(new.series.len(), 3, "{text}");
@@ -679,6 +814,10 @@ mod tests {
         assert_eq!(ch.min_speedup, 1.3);
         assert_eq!(ch.largest_bucket_p8, Some(1.4));
         assert_eq!(ch.pct, 0.5);
+        // The hier floor is DES-deterministic too: exact ratchet.
+        let h = new.hier.unwrap();
+        assert_eq!(h.min_speedup, 1.7);
+        assert_eq!(h.pct, 0.5);
         // The ratcheted baseline accepts the run it was ratcheted from.
         assert!(gate(&new.series, &current, new.pct).is_empty());
     }
@@ -690,12 +829,17 @@ mod tests {
             series: vec![series(4, 4096, 1.5)],
             bucketing_floor: Some(1.2),
             chunking: None,
+            hier: Some(HierFloors {
+                min_speedup: 1.4,
+                pct: 0.5,
+            }),
         };
-        let text = ratchet(&base, &[series(4, 4096, 1.0)], None, None);
+        let text = ratchet(&base, &[series(4, 4096, 1.0)], None, None, None);
         let new = parse_baseline(&text).unwrap();
         assert_eq!(new.series[0].speedup, 1.5);
         assert_eq!(new.bucketing_floor, Some(1.2));
         assert!(new.chunking.is_none());
+        assert_eq!(new.hier.unwrap().min_speedup, 1.4);
     }
 
     #[test]
@@ -707,6 +851,10 @@ mod tests {
             chunking: Some(ChunkingFloors {
                 min_speedup: 1.0,
                 largest_bucket_p8: Some(1.0),
+                pct: 0.5,
+            }),
+            hier: Some(HierFloors {
+                min_speedup: 1.0,
                 pct: 0.5,
             }),
         };

@@ -244,6 +244,16 @@ pub enum ClusterError {
     WorkerPanic { proc: usize },
     /// Input shape problems.
     BadInput(String),
+    /// Peers were declared permanently dead under a `FaultPolicy`: the
+    /// collective cannot complete at the current membership. Carries the
+    /// observing rank, its membership epoch, and the dead physical rank
+    /// set so the caller (or `Endpoint::allreduce_elastic`) can shrink
+    /// the group and resume at P−1.
+    Elastic {
+        proc: usize,
+        epoch: u64,
+        dead: Vec<usize>,
+    },
 }
 
 impl std::fmt::Display for ClusterError {
@@ -259,6 +269,11 @@ impl std::fmt::Display for ClusterError {
             }
             ClusterError::WorkerPanic { proc } => write!(f, "worker thread {proc} panicked"),
             ClusterError::BadInput(s) => write!(f, "bad input: {s}"),
+            ClusterError::Elastic { proc, epoch, dead } => write!(
+                f,
+                "rank {proc} (epoch {epoch}) declared peers {dead:?} dead — \
+                 shrink the membership and resume, or abort"
+            ),
         }
     }
 }

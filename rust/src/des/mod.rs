@@ -65,6 +65,38 @@ pub fn simulate_chunked(
         |_, _| (params.alpha, params.beta),
         params.gamma,
         chunk_bytes,
+        None,
+    )
+}
+
+/// [`simulate`] under an **imbalanced process arrival pattern** (Proficz,
+/// arXiv 1804.05349): process `i` enters the collective `skew[i]` seconds
+/// after the earliest arrival (its clock starts there instead of 0), so
+/// schedules that park early work on late ranks pay for it visibly. An
+/// all-zero skew reproduces [`simulate`] exactly. This is what
+/// [`crate::coordinator::choose_pap`] prices when picking an
+/// arrival-aware schedule from a measured skew table
+/// (`net::probe` `READY` pings).
+pub fn simulate_skewed(
+    s: &ProcSchedule,
+    m_bytes: usize,
+    params: &NetParams,
+    skew: &[f64],
+) -> DesReport {
+    assert_eq!(
+        s.p,
+        skew.len(),
+        "schedule is over {} ranks, skew table over {}",
+        s.p,
+        skew.len()
+    );
+    simulate_impl(
+        s,
+        m_bytes,
+        |_, _| (params.alpha, params.beta),
+        params.gamma,
+        None,
+        Some(skew),
     )
 }
 
@@ -100,17 +132,20 @@ pub fn simulate_topo(
         },
         intra.gamma,
         None,
+        None,
     )
 }
 
 /// The shared DES core: `link(from, to) -> (α, β)` prices each message's
-/// envelope and wire time, `gamma` each reduced byte.
+/// envelope and wire time, `gamma` each reduced byte. `start_clock`
+/// seeds each process's clock (arrival skew); `None` = all start at 0.
 fn simulate_impl(
     s: &ProcSchedule,
     m_bytes: usize,
     link: impl Fn(usize, usize) -> (f64, f64),
     gamma: f64,
     chunk_bytes: Option<usize>,
+    start_clock: Option<&[f64]>,
 ) -> DesReport {
     let p = s.p;
     let nb = s.max_buf_id() as usize;
@@ -124,7 +159,13 @@ fn simulate_impl(
         }
     }
 
-    let mut clock: Vec<f64> = vec![0.0; p];
+    let mut clock: Vec<f64> = match start_clock {
+        Some(start) => {
+            debug_assert_eq!(start.len(), p);
+            start.to_vec()
+        }
+        None => vec![0.0; p],
+    };
     let mut total_bytes = 0.0;
     let mut total_reduced = 0.0;
     // Reduces already charged inside a streaming receive (per proc).
@@ -477,6 +518,44 @@ mod tests {
             hier_mixed < flat_mixed,
             "two-level {hier_mixed} !< flat ring {flat_mixed} under slow inter-node links"
         );
+    }
+
+    /// Arrival skew in the DES: zero skew reproduces the flat model
+    /// bit-for-bit, a straggler delays the makespan by at least its lag
+    /// on fully-synchronized schedules, and the delay is bounded by
+    /// lag + the no-skew makespan (a late rank cannot slow the wire).
+    #[test]
+    fn skewed_arrivals_price_stragglers() {
+        let p = 8;
+        let m = p * 1024;
+        let params = NetParams::table2();
+        let s = Algorithm::new(AlgorithmKind::BwOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let base = simulate(&s, m, &params);
+        let zero = simulate_skewed(&s, m, &params, &vec![0.0; p]);
+        assert_eq!(zero.makespan, base.makespan);
+        assert_eq!(zero.finish, base.finish);
+
+        let lag = 5e-3;
+        let mut skew = vec![0.0; p];
+        skew[3] = lag;
+        let skewed = simulate_skewed(&s, m, &params, &skew);
+        assert!(
+            skewed.makespan >= base.makespan.max(lag),
+            "straggler lag must show: {} vs base {}",
+            skewed.makespan,
+            base.makespan
+        );
+        assert!(
+            skewed.makespan <= lag + base.makespan + 1e-12,
+            "lag is additive at worst: {} vs {}",
+            skewed.makespan,
+            lag + base.makespan
+        );
+        // Wire/reduce byte totals are skew-invariant.
+        assert_eq!(skewed.total_bytes, base.total_bytes);
+        assert_eq!(skewed.total_reduced, base.total_reduced);
     }
 
     /// Byte accounting: DES total bytes equals the verifier's unit tally

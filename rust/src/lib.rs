@@ -30,7 +30,8 @@
 //! | [`cluster::arena`] | the zero-copy data plane: space-reclaiming slab arenas, sharded size-classed block pools, `Arc`-shared wire blocks, fused receive-reduce with send-aware placement, chunked streaming with per-chunk fused combines (shared by both executors) |
 //! | [`cluster::oracle`] | the clone-per-message reference data plane, kept as the differential-test oracle and bench baseline |
 //! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step); execution gated behind the `pjrt` feature |
-//! | [`net`] | multi-process execution over real TCP sockets: length-prefixed wire protocol, rank-0 rendezvous + full-mesh or **lazily-dialed** bootstrap, per-peer reader/writer threads behind a socket [`cluster::arena::Transport`], α/β/γ probe, and the per-rank [`net::Endpoint`] front end |
+//! | [`net`] | multi-process execution over real TCP sockets: length-prefixed wire protocol, rank-0 rendezvous + full-mesh or **lazily-dialed** bootstrap, per-peer reader/writer threads behind a socket [`cluster::arena::Transport`], α/β/γ + arrival-skew probes, and the per-rank [`net::Endpoint`] front end |
+//! | [`net::fault`] + [`net::membership`] | the elastic layer: heartbeat failure detector with capped-exponential retry backoff, epoch-tagged membership agreement, dense relabeling of survivors, shrink-to-P−1 resume ([`net::Endpoint::allreduce_elastic`]) |
 //! | [`topo`] | hierarchical (two-level) execution: node grouping ([`topo::NodeMap`]), binomial intra-node trees composed with any inner schedule into one verified [`sched::ProcSchedule`] ([`topo::compose_two_level`]), schedule relabeling through permutations, per-rank peer sets for sparse meshes |
 //! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
 //! | [`coordinator::bucket`] | DDP-style gradient bucketing: cost-model-sized packing with exact pack/unpack round-trips |
@@ -172,6 +173,84 @@
 //! loopback differential suite (`tests/net_transport.rs`) pins socket
 //! execution bit-identical to [`cluster::oracle`] for every algorithm ×
 //! op × chunked/monolithic at P ∈ {2, 3, 4, 5, 7, 8}.
+//!
+//! ## Fault model & elasticity (`net::fault`, `net::membership`)
+//!
+//! By default a dead peer is a job abort: the receive timeout fires and
+//! the collective fails. Arming [`net::fault::FaultPolicy`] (via
+//! [`net::NetOptions::fault`], identically on **every** rank) turns the
+//! transport elastic — each rank heartbeats its peers, stamps per-peer
+//! liveness on every inbound frame, and classifies trouble instead of
+//! timing out blind:
+//!
+//! | observation | class | response |
+//! |---|---|---|
+//! | short/failed socket write under pressure | transient | in-place write retry with capped-exponential jittered backoff ([`net::fault::Backoff`], shared with bootstrap's connect path) |
+//! | heartbeat silence > `detect_timeout`, or a closed/reset peer socket | permanent | [`cluster::ClusterError::Elastic`] naming the epoch and the dead set |
+//! | rank 0 (the shrink coordinator) dies | permanent, **unresumable** | survivors surface a clean error — the coordinator is not re-elected |
+//! | shrink would leave fewer than 2 live ranks | unresumable | clean error |
+//!
+//! [`net::Endpoint::allreduce_elastic`] turns the permanent class into a
+//! **shrink-and-resume** instead of an abort. Every survivor votes its
+//! suspected-dead set to rank 0 (epoch- and round-tagged so old-epoch
+//! stragglers are fenced exactly like wild step tags); rank 0 unions the
+//! votes — a missing vote indicts its sender — and broadcasts either
+//! `COMMIT` (all clean: everyone keeps the result) or `DECIDE` (the
+//! shrunken live set and bumped epoch). No rank keeps a result unless
+//! **all** ranks commit, which is what makes a resumed run bit-identical
+//! to executing the `P−1` schedule fresh:
+//!
+//! ```text
+//!   epoch 0: physical 0 1 2 3 4      (dense label = physical rank)
+//!                         ×          rank 2 dies: heartbeat silence or a
+//!                                    dropped socket, within detect_timeout
+//!   votes:   1,3,4 ─VOTE{dead:[2]}─► 0        (tagged epoch 0, round r)
+//!   decide:  0 ─DECIDE{epoch:1, live:[0,1,3,4]}─► 1,3,4
+//!
+//!   epoch 1: physical 0 1 3 4        survivors relabeled dense 0..P−1,
+//!            dense    0 1 2 3        schedule rebuilt for P−1 (any-P
+//!                                    constructions), re-run from the
+//!                                    caller-preserved input
+//! ```
+//!
+//! The caller's contract is minimal — keep the input alive until the call
+//! returns, because a resume re-runs from it:
+//!
+//! ```no_run
+//! use std::time::Duration;
+//! use permallreduce::prelude::*;
+//! use permallreduce::net::{Endpoint, NetOptions};
+//!
+//! let (rank, nprocs) = (0usize, 8usize);
+//! let opts = NetOptions {
+//!     rendezvous: "127.0.0.1:29517".into(),
+//!     fault: Some(FaultPolicy {
+//!         detect_timeout: Duration::from_secs(2),
+//!         ..FaultPolicy::default()
+//!     }),
+//!     ..NetOptions::default()
+//! };
+//! let mut ep: Endpoint<f32> = Endpoint::connect(rank, nprocs, opts).unwrap();
+//! let mine = vec![rank as f32; 1 << 16];
+//! let reduced = ep.allreduce_elastic(&mine, ReduceOp::Sum, AlgorithmKind::BwOptimal).unwrap();
+//! let m = ep.membership();
+//! println!("reduced {} elems at epoch {} over {} live ranks", reduced.len(), m.epoch, m.p());
+//! ```
+//!
+//! Straggler *tolerance* complements straggler *survival*: the
+//! arrival-skew probe ([`net::Endpoint::probe_skew`]) measures how far
+//! each rank lags the earliest arrival at a synchronization point, and
+//! [`coordinator::choose_pap`] prices candidate schedules under that skew
+//! ([`des::simulate_skewed`]) — including **PAP-aware relabelings** that
+//! hand the earliest-sending schedule roles to the earliest-arriving
+//! ranks (after Proficz's process-arrival-pattern-aware allreduce
+//! designs) — so a persistently late rank costs the collective as little
+//! as the cost model allows. The fault-matrix suite (`tests/elastic.rs`)
+//! kills one rank at every step index of schedules at P ∈ {3, 5, 8},
+//! chunked and monolithic, and requires either a clean epoch-tagged error
+//! or a resume bit-identical to the fresh P−1 oracle; the chaos lane
+//! (`examples/net_allreduce.rs --self-spawn --chaos`) does the same over
+//! real sockets with a hard-killed process.
 //!
 //! ## Hierarchical execution (`topo`)
 //!
@@ -360,7 +439,9 @@ pub mod prelude {
         AllreduceManyOutput, AllreduceOutput, Communicator, ManyMetrics, Metrics,
     };
     pub use crate::cost::{CostModel, NetParams};
-    pub use crate::des::simulate;
+    pub use crate::des::{simulate, simulate_skewed};
+    pub use crate::net::fault::{Backoff, FaultPolicy};
+    pub use crate::net::membership::Membership;
     pub use crate::net::{Endpoint, NetOptions};
     pub use crate::perm::{Group, Permutation};
     pub use crate::sched::{ProcSchedule, ScheduleStats};

@@ -119,19 +119,29 @@ fn accept_deadline(
 }
 
 /// Dial `addr`, retrying until `deadline` (the target may not have bound
-/// its listener yet).
+/// its listener yet). Retries follow the shared capped-exponential
+/// [`Backoff`](super::fault::Backoff) schedule, jittered per rank so P
+/// dialers hitting one rendezvous don't retry in lockstep; the sleep is
+/// clipped to the deadline so the final attempt is never skipped.
 fn connect_deadline(addr: &str, deadline: Instant, rank: usize) -> Result<TcpStream, ClusterError> {
+    let backoff = super::fault::Backoff::default();
+    let mut attempt = 0u32;
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
-                if Instant::now() >= deadline {
+                let now = Instant::now();
+                if now >= deadline {
                     return Err(proto_err(
                         rank,
                         format!("bootstrap could not reach {addr}: {e}"),
                     ));
                 }
-                std::thread::sleep(Duration::from_millis(5));
+                let delay = backoff
+                    .delay(attempt, rank as u64)
+                    .min(deadline.saturating_duration_since(now));
+                std::thread::sleep(delay);
+                attempt += 1;
             }
         }
     }

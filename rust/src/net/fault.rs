@@ -1,0 +1,143 @@
+//! Fault policy for elastic meshes: failure-detection timeouts, retry
+//! budgets, and the shared capped-exponential-backoff schedule.
+//!
+//! The transport treats faults in two classes:
+//!
+//! * **Transient** — a write that would block or times out, or a
+//!   collective attempt interrupted before membership shrinks. Handling
+//!   is a bounded retry: writes resume from their byte offset after a
+//!   [`Backoff`] delay, and `Endpoint::allreduce_elastic` re-runs the
+//!   whole collective from the caller-preserved inputs.
+//! * **Permanent** — a peer whose link closed, went bad, or that has
+//!   been heartbeat-silent longer than [`FaultPolicy::detect_timeout`].
+//!   The peer is declared dead; the error carries the dead rank set and
+//!   the survivors agree on a shrunken membership (see
+//!   [`super::membership`]).
+//!
+//! The same [`Backoff`] schedule drives the bootstrap's
+//! `connect_deadline` retry loop, so dialing a slow rendezvous and
+//! re-dialing after a transient fault share one tuning surface.
+
+use std::time::Duration;
+
+/// Capped exponential backoff with deterministic jitter:
+/// `delay(k) = min(base · 2^k, cap) · (0.5 + jitter/2)` where the jitter
+/// factor is derived from a SplitMix64 hash of `(seed, attempt)` — fully
+/// reproducible for a given seed, but decorrelated across ranks so P
+/// retriers do not stampede in lockstep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Backoff {
+    /// First-retry delay (attempt 0).
+    pub base: Duration,
+    /// Upper bound on any single delay.
+    pub cap: Duration,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff {
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(250),
+        }
+    }
+}
+
+impl Backoff {
+    /// The delay before retry number `attempt` (0-based), jittered by
+    /// `seed` (use the rank or the session token so ranks desynchronize).
+    pub fn delay(&self, attempt: u32, seed: u64) -> Duration {
+        // min(base · 2^attempt, cap), saturating well before overflow.
+        let exp = attempt.min(20);
+        let raw = self
+            .base
+            .saturating_mul(1u32 << exp)
+            .min(self.cap)
+            .max(Duration::from_micros(100));
+        // Deterministic jitter in [0.5, 1.0): same shape as the
+        // bootstrap's token mint (SplitMix64), no RNG state to carry.
+        let mut z = seed
+            .wrapping_add(attempt as u64)
+            .wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        let frac = (z >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+        raw.mul_f64(0.5 + frac / 2.0)
+    }
+}
+
+/// How an elastic endpoint detects and reacts to peer failures. Absent
+/// (`NetOptions::fault == None`, the default) the transport behaves
+/// exactly as before this layer existed: no heartbeats, no early suspect
+/// errors, failures surface as plain `Protocol`/`RecvTimeout` errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPolicy {
+    /// A peer silent (no frame of any kind) for longer than this is
+    /// declared dead. Heartbeats are emitted at `detect_timeout / 4`
+    /// (floored at 10 ms) so an idle-but-alive link never trips it.
+    pub detect_timeout: Duration,
+    /// How many times `allreduce_elastic` re-runs the collective after a
+    /// membership shrink (or transient interruption) before giving up.
+    pub retry: u32,
+    /// Delay schedule shared by write retries, reconnect dialing, and
+    /// the gap between elastic attempts.
+    pub backoff: Backoff,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            detect_timeout: Duration::from_secs(2),
+            retry: 2,
+            backoff: Backoff::default(),
+        }
+    }
+}
+
+impl FaultPolicy {
+    /// Heartbeat emission period implied by the detection timeout.
+    pub fn heartbeat_period(&self) -> Duration {
+        (self.detect_timeout / 4).max(Duration::from_millis(10))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let b = Backoff {
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(100),
+        };
+        // Jittered into [0.5, 1.0) of the raw schedule.
+        for k in 0..10u32 {
+            let raw = Duration::from_millis((2u64 << k).min(100));
+            let d = b.delay(k, 42);
+            assert!(d >= raw / 2, "attempt {k}: {d:?} < {:?}", raw / 2);
+            assert!(d < raw, "attempt {k}: {d:?} >= {raw:?}");
+        }
+        // Far attempts stay capped (no overflow).
+        assert!(b.delay(1000, 42) <= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn backoff_is_deterministic_but_seed_sensitive() {
+        let b = Backoff::default();
+        assert_eq!(b.delay(3, 7), b.delay(3, 7));
+        assert_ne!(b.delay(3, 7), b.delay(3, 8));
+    }
+
+    #[test]
+    fn policy_defaults_are_sane() {
+        let p = FaultPolicy::default();
+        assert!(p.heartbeat_period() * 4 <= p.detect_timeout);
+        assert!(p.heartbeat_period() >= Duration::from_millis(10));
+        let tight = FaultPolicy {
+            detect_timeout: Duration::from_millis(1),
+            ..p
+        };
+        assert_eq!(tight.heartbeat_period(), Duration::from_millis(10));
+    }
+}

@@ -1,0 +1,172 @@
+//! Membership epochs for elastic meshes.
+//!
+//! A mesh starts at epoch 0 with every physical rank live. When a peer
+//! is declared dead the survivors agree (rank-0-coordinated, over
+//! `EPOCH` frames) on a shrunken [`Membership`]: the epoch bumps and the
+//! surviving **physical** ranks are relabeled into a dense `0..P−1`
+//! space — position in the sorted live set — so the paper's any-P
+//! constructions rebuild a correct schedule for the new group without
+//! caring which physical ranks remain. [`RemappedTransport`] translates
+//! the dense ranks a schedule speaks back to the physical ranks the
+//! underlying transport routes by, so the data plane and wire protocol
+//! are untouched by a shrink.
+
+use std::marker::PhantomData;
+
+use crate::cluster::arena::{Frame, Payload, Transport};
+use crate::cluster::{ClusterError, Element};
+
+/// The live set of a mesh at one epoch. `live` holds **physical** ranks
+/// (the ranks the bootstrap assigned), sorted ascending; a rank's dense
+/// label is its index in that list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    pub epoch: u64,
+    live: Vec<usize>,
+}
+
+impl Membership {
+    /// Epoch 0: all of `0..p` live.
+    pub fn full(p: usize) -> Self {
+        Membership {
+            epoch: 0,
+            live: (0..p).collect(),
+        }
+    }
+
+    /// Rebuild from an agreed `(epoch, live set)` — the DECIDE message
+    /// of the shrink protocol. Sorts and dedups defensively.
+    pub fn agreed(epoch: u64, mut live: Vec<usize>) -> Self {
+        live.sort_unstable();
+        live.dedup();
+        Membership { epoch, live }
+    }
+
+    /// Number of live ranks.
+    pub fn p(&self) -> usize {
+        self.live.len()
+    }
+
+    /// The sorted live physical ranks.
+    pub fn live(&self) -> &[usize] {
+        &self.live
+    }
+
+    /// Dense label of a physical rank, or `None` if it is dead.
+    pub fn dense(&self, physical: usize) -> Option<usize> {
+        self.live.binary_search(&physical).ok()
+    }
+
+    /// Physical rank of a dense label (panics if out of range).
+    pub fn physical(&self, dense: usize) -> usize {
+        self.live[dense]
+    }
+
+    /// The next epoch with `dead` removed. Errors if the shrink would
+    /// leave fewer than 2 live ranks or if every listed rank was already
+    /// dead (no progress).
+    pub fn shrink(&self, dead: &[usize]) -> Result<Membership, String> {
+        let next: Vec<usize> = self
+            .live
+            .iter()
+            .copied()
+            .filter(|r| !dead.contains(r))
+            .collect();
+        if next.len() == self.live.len() {
+            return Err(format!(
+                "shrink of epoch {} removed nothing (dead = {dead:?})",
+                self.epoch
+            ));
+        }
+        if next.len() < 2 {
+            return Err(format!(
+                "shrink of epoch {} leaves {} rank(s) — a group needs at least 2",
+                self.epoch,
+                next.len()
+            ));
+        }
+        Ok(Membership {
+            epoch: self.epoch + 1,
+            live: next,
+        })
+    }
+}
+
+/// Adapts a transport routing by **physical** rank to a schedule
+/// speaking **dense** ranks: `old_of[dense] = physical` (the live set of
+/// the current [`Membership`]). The executors never learn a shrink
+/// happened — they run an ordinary P−1 schedule.
+pub struct RemappedTransport<'a, T: Element, X: Transport<T>> {
+    inner: &'a mut X,
+    old_of: &'a [usize],
+    _elem: PhantomData<T>,
+}
+
+impl<'a, T: Element, X: Transport<T>> RemappedTransport<'a, T, X> {
+    /// `old_of[dense] = physical`; use `Membership::live()`.
+    pub fn new(inner: &'a mut X, old_of: &'a [usize]) -> Self {
+        RemappedTransport {
+            inner,
+            old_of,
+            _elem: PhantomData,
+        }
+    }
+}
+
+impl<'a, T: Element, X: Transport<T>> Transport<T> for RemappedTransport<'a, T, X> {
+    fn send(&mut self, to: usize, step: usize, frame: Frame, payload: Payload<T>) {
+        self.inner.send(self.old_of[to], step, frame, payload);
+    }
+
+    fn recv(&mut self, step: usize, from: usize) -> Result<(Frame, Payload<T>), ClusterError> {
+        self.inner.recv(step, self.old_of[from])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_membership_is_identity() {
+        let m = Membership::full(5);
+        assert_eq!(m.epoch, 0);
+        assert_eq!(m.p(), 5);
+        for r in 0..5 {
+            assert_eq!(m.dense(r), Some(r));
+            assert_eq!(m.physical(r), r);
+        }
+        assert_eq!(m.dense(5), None);
+    }
+
+    #[test]
+    fn shrink_bumps_epoch_and_densifies() {
+        let m = Membership::full(5).shrink(&[2]).unwrap();
+        assert_eq!(m.epoch, 1);
+        assert_eq!(m.live(), &[0, 1, 3, 4]);
+        assert_eq!(m.dense(3), Some(2));
+        assert_eq!(m.dense(2), None);
+        assert_eq!(m.physical(3), 4);
+
+        // A second shrink stacks.
+        let m2 = m.shrink(&[0, 4]).unwrap();
+        assert_eq!(m2.epoch, 2);
+        assert_eq!(m2.live(), &[1, 3]);
+        assert_eq!(m2.dense(1), Some(0));
+        assert_eq!(m2.dense(3), Some(1));
+    }
+
+    #[test]
+    fn shrink_rejects_no_ops_and_collapse() {
+        let m = Membership::full(3);
+        assert!(m.shrink(&[7]).unwrap_err().contains("removed nothing"));
+        assert!(m.shrink(&[1, 2]).unwrap_err().contains("at least 2"));
+    }
+
+    #[test]
+    fn agreed_sorts_and_dedups() {
+        let m = Membership::agreed(4, vec![3, 0, 3, 1]);
+        assert_eq!(m.epoch, 4);
+        assert_eq!(m.live(), &[0, 1, 3]);
+    }
+}

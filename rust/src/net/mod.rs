@@ -29,13 +29,24 @@
 //! * [`probe`] — α/β/γ measured over the live mesh and broadcast by rank
 //!   0, so [`crate::cost`]-driven tuning (`optimal_r`,
 //!   `optimal_bucket_bytes`, `optimal_chunk_bytes`) runs on reality
-//!   instead of the paper's Table 2.
+//!   instead of the paper's Table 2;
+//! * [`fault`] + [`membership`] — the elastic layer: a
+//!   [`FaultPolicy`](fault::FaultPolicy) arms a heartbeat-driven failure
+//!   detector inside the transport, and
+//!   [`Endpoint::allreduce_elastic`] turns a detected death into a
+//!   rank-0-coordinated membership shrink (epoch bump, survivors
+//!   relabeled dense `0..P−1`, schedule rebuilt, collective re-run from
+//!   the caller's preserved input) instead of a job abort. See the
+//!   crate-level "Fault model & elasticity" section.
 //!
 //! See the crate-level "Running across processes" quickstart for the
 //! end-to-end flow, and `examples/net_allreduce.rs` for a runnable
-//! multi-process binary (including a `--self-spawn` harness).
+//! multi-process binary (including `--self-spawn` and `--chaos`
+//! harnesses).
 
 pub mod bootstrap;
+pub mod fault;
+pub mod membership;
 pub mod probe;
 pub mod transport;
 pub mod wire;
@@ -43,7 +54,7 @@ pub mod wire;
 use std::collections::{BTreeSet, HashMap};
 use std::net::TcpListener;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
 use crate::cluster::arena::{BlockPool, DataPlane, NativeKernel};
@@ -58,6 +69,8 @@ use crate::sched::{
     ProcSchedule,
 };
 
+use fault::FaultPolicy;
+use membership::{Membership, RemappedTransport};
 use transport::NetTransport;
 use wire::WireElement;
 
@@ -87,6 +100,13 @@ pub struct NetOptions {
     /// instead of `P − 1`. Compute it with [`crate::topo::peer_set`] over
     /// the exact schedule the job will run. `None` = full mesh.
     pub peers: Option<BTreeSet<usize>>,
+    /// Arms the failure detector (heartbeats, per-peer liveness stamps,
+    /// epoch-tagged [`ClusterError::Elastic`] errors) and enables
+    /// [`Endpoint::allreduce_elastic`]'s shrink-and-resume path. Must be
+    /// identical on **every** rank: one-sided policies make healthy
+    /// quiet peers look heartbeat-silent. `None` (the default) is the
+    /// pre-elastic transport, bit for bit.
+    pub fault: Option<FaultPolicy>,
 }
 
 impl Default for NetOptions {
@@ -99,6 +119,7 @@ impl Default for NetOptions {
             chunk_bytes: None,
             params: NetParams::table2(),
             peers: None,
+            fault: None,
         }
     }
 }
@@ -146,6 +167,17 @@ pub struct Endpoint<T: WireElement = f32> {
     step_base: usize,
     cache: HashMap<String, Arc<ProcSchedule>>,
     hints: HashMap<String, Arc<RankHints>>,
+    /// The armed fault policy (mirrors the transport's).
+    fault: Option<FaultPolicy>,
+    /// Current membership: epoch + live physical ranks. Starts full;
+    /// shrinks through [`Endpoint::allreduce_elastic`]'s agreement
+    /// protocol.
+    membership: Membership,
+    /// Last arrival-skew table measured by [`Endpoint::probe_skew`]
+    /// (seconds of lag behind the earliest rank, indexed by rank).
+    skew: Option<Vec<f64>>,
+    /// Ties each skew measurement's `READY` pings to one call.
+    skew_seq: u64,
 }
 
 impl<T: WireElement> Endpoint<T> {
@@ -185,7 +217,7 @@ impl<T: WireElement> Endpoint<T> {
     fn from_mesh(mesh: bootstrap::Mesh, opts: NetOptions) -> Result<Endpoint<T>, ClusterError> {
         let (rank, p) = (mesh.rank, mesh.p);
         let pool = Arc::new(BlockPool::<T>::new());
-        let transport = NetTransport::start(mesh, pool.clone(), opts.recv_timeout)?;
+        let transport = NetTransport::start(mesh, pool.clone(), opts.recv_timeout, opts.fault)?;
         Ok(Endpoint {
             rank,
             p,
@@ -198,6 +230,10 @@ impl<T: WireElement> Endpoint<T> {
             step_base: 0,
             cache: HashMap::new(),
             hints: HashMap::new(),
+            fault: opts.fault,
+            membership: Membership::full(p),
+            skew: None,
+            skew_seq: 0,
         })
     }
 
@@ -284,8 +320,32 @@ impl<T: WireElement> Endpoint<T> {
         kind: AlgorithmKind,
         m_bytes: usize,
     ) -> Result<Arc<ProcSchedule>, String> {
-        let resolved = self.resolve(kind, m_bytes);
-        let label = format!("{}-p{}", resolved.label(), self.p);
+        self.schedule_for(kind, self.p, m_bytes)
+    }
+
+    /// [`Endpoint::schedule`] over an explicit group size — the any-P
+    /// rebuild a membership shrink needs (`p` = live-rank count, not the
+    /// bootstrap's).
+    fn schedule_for(
+        &mut self,
+        kind: AlgorithmKind,
+        p: usize,
+        m_bytes: usize,
+    ) -> Result<Arc<ProcSchedule>, String> {
+        let resolved = match kind {
+            AlgorithmKind::GeneralizedAuto => AlgorithmKind::Generalized {
+                r: optimal_r(p, m_bytes, &self.params),
+            },
+            AlgorithmKind::OpenMpi => {
+                if m_bytes < self.openmpi_threshold {
+                    AlgorithmKind::RecursiveDoubling
+                } else {
+                    AlgorithmKind::Ring
+                }
+            }
+            k => k,
+        };
+        let label = format!("{}-p{}", resolved.label(), p);
         if let Some(s) = self.cache.get(&label) {
             return Ok(s.clone());
         }
@@ -296,8 +356,8 @@ impl<T: WireElement> Endpoint<T> {
         };
         let algo = Algorithm {
             kind: resolved,
-            group: Group::cyclic(self.p),
-            h: Permutation::identity(self.p),
+            group: Group::cyclic(p),
+            h: Permutation::identity(p),
         };
         let s = algo.build(&ctx)?;
         verify(&s).map_err(|e| format!("schedule failed verification: {e}"))?;
@@ -329,32 +389,38 @@ impl<T: WireElement> Endpoint<T> {
         Ok(arc)
     }
 
-    /// This rank's placement + fusion rows for `s`, cached by schedule
-    /// name (same keying as the executors' [`crate::cluster`] cache).
-    fn rank_hints(&mut self, s: &ProcSchedule) -> Arc<RankHints> {
-        if let Some(h) = self.hints.get(&s.name) {
+    /// Placement + fusion rows for playing role `dense_rank` in `s`,
+    /// cached by `(schedule, role)` — after a shrink this rank's dense
+    /// label moves, so the schedule name alone would serve stale rows.
+    fn rank_hints(&mut self, s: &ProcSchedule, dense_rank: usize) -> Arc<RankHints> {
+        let key = format!("{}@r{dense_rank}", s.name);
+        if let Some(h) = self.hints.get(&key) {
             return h.clone();
         }
         let h = Arc::new(RankHints {
-            wire_dst: wire_placement_row(s, self.rank),
-            fusion: chunk_fusion_rows_for(s, self.rank),
+            wire_dst: wire_placement_row(s, dense_rank),
+            fusion: chunk_fusion_rows_for(s, dense_rank),
         });
-        self.hints.insert(s.name.clone(), h.clone());
+        self.hints.insert(key, h.clone());
         h
     }
 
-    /// Run one schedule over the mesh: this rank's `input` in, the fully
-    /// reduced vector out. Step tags come from the endpoint's cumulative
-    /// tag space, so back-to-back calls never collide even when ranks
-    /// drift by a whole call.
-    fn run(
+    /// Run one schedule over the mesh as role `dense_rank`: this rank's
+    /// `input` in, the fully reduced vector out. Step tags come from the
+    /// endpoint's cumulative tag space, so back-to-back calls never
+    /// collide even when ranks drift by a whole call. `remap` (the live
+    /// set, `old_of[dense] = physical`) routes a shrunken group's dense
+    /// ranks over the physical mesh; `None` = the full epoch-0 identity.
+    fn run_as(
         &mut self,
         s: &ProcSchedule,
+        dense_rank: usize,
+        remap: Option<&[usize]>,
         input: &[T],
         op: ReduceOp,
         out: &mut [T],
     ) -> Result<(), ClusterError> {
-        let hints = self.rank_hints(s);
+        let hints = self.rank_hints(s, dense_rank);
         let base = self.step_base;
         self.step_base += s.steps.len();
         self.transport.begin_call(base);
@@ -362,18 +428,45 @@ impl<T: WireElement> Endpoint<T> {
         let chunk_elems = self
             .chunk_bytes
             .map(|b| chunk_elems_for(b, std::mem::size_of::<T>()));
-        self.plane.run_schedule(
-            s,
-            self.rank,
-            input,
-            base,
-            &hints.wire_dst,
-            Some(&hints.fusion),
-            chunk_elems,
-            &mut self.transport,
-            &kernel,
-            out,
-        )
+        match remap {
+            None => self.plane.run_schedule(
+                s,
+                dense_rank,
+                input,
+                base,
+                &hints.wire_dst,
+                Some(&hints.fusion),
+                chunk_elems,
+                &mut self.transport,
+                &kernel,
+                out,
+            ),
+            Some(old_of) => {
+                let mut t = RemappedTransport::new(&mut self.transport, old_of);
+                self.plane.run_schedule(
+                    s,
+                    dense_rank,
+                    input,
+                    base,
+                    &hints.wire_dst,
+                    Some(&hints.fusion),
+                    chunk_elems,
+                    &mut t,
+                    &kernel,
+                    out,
+                )
+            }
+        }
+    }
+
+    fn run(
+        &mut self,
+        s: &ProcSchedule,
+        input: &[T],
+        op: ReduceOp,
+        out: &mut [T],
+    ) -> Result<(), ClusterError> {
+        self.run_as(s, self.rank, None, input, op, out)
     }
 
     /// Allreduce this rank's vector with every peer's: returns the reduced
@@ -472,5 +565,231 @@ impl<T: WireElement> Endpoint<T> {
             n_buckets: plan.buckets.len(),
             segments: max_segments,
         })
+    }
+
+    /// Current membership: epoch + live physical ranks. Epoch 0 / all
+    /// live until an [`Endpoint::allreduce_elastic`] shrink.
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// The last arrival-skew table measured by [`Endpoint::probe_skew`]
+    /// (`None` until it runs).
+    pub fn skew(&self) -> Option<&[f64]> {
+        self.skew.as_deref()
+    }
+
+    /// Measure per-rank **arrival skew** over the live mesh (collective:
+    /// all ranks call it at the same program point). Every rank pings
+    /// rank 0 on entry; rank 0 timestamps the arrivals against its own
+    /// monotonic clock and broadcasts the per-rank lag table (seconds
+    /// behind the earliest rank), so all ranks hold identical skew
+    /// inputs for PAP-aware selection
+    /// ([`crate::coordinator::choose_pap`]). Requires the `0 ↔ i` links
+    /// and the full epoch-0 membership.
+    pub fn probe_skew(&mut self) -> Result<Vec<f64>, ClusterError> {
+        if self.membership.p() != self.p {
+            return Err(ClusterError::BadInput(format!(
+                "probe_skew runs over the full mesh, but the membership shrank to {} of {} ranks",
+                self.membership.p(),
+                self.p
+            )));
+        }
+        self.skew_seq += 1;
+        let skew = probe::measure_skew(&mut self.transport, self.rank, self.skew_seq)?;
+        self.skew = Some(skew.clone());
+        Ok(skew)
+    }
+
+    /// Fault-tolerant allreduce: like [`Endpoint::allreduce`], but a
+    /// peer death mid-collective shrinks the membership to the
+    /// survivors and re-runs from `data` instead of failing the job.
+    ///
+    /// Requires [`NetOptions::fault`] on **every** rank, and a link to
+    /// rank 0 (the shrink coordinator) — a full mesh, or peer sets
+    /// containing rank 0.
+    ///
+    /// Per attempt (all survivors execute this in lockstep, SPMD): run
+    /// the schedule for the current live set (dense ranks routed over
+    /// the physical mesh through the membership's relabeling); send an
+    /// epoch-tagged `VOTE` to rank 0 carrying the locally suspected
+    /// dead set (empty = clean run); rank 0 unions the votes (a missing
+    /// vote indicts its sender) and broadcasts `COMMIT` (all clean —
+    /// everyone returns the result) or `DECIDE` (the shrunken live set
+    /// and bumped epoch — everyone retires the dead links, relabels
+    /// dense, and re-runs at P−1 from the caller-preserved `data`). No
+    /// rank keeps a result unless **all** ranks commit, so a resumed
+    /// call is bit-identical to running the P−1 schedule fresh.
+    /// Old-epoch stragglers are fenced by the step-tag floor and the
+    /// `(epoch, round)` tags, exactly like wild step tags.
+    ///
+    /// Limitations: rank 0's death is not survivable (the coordinator
+    /// is not re-elected) — survivors surface the detection error
+    /// instead; a shrink below 2 live ranks aborts; and a healthy rank
+    /// false-positively declared dead (detect timeout too tight) gets a
+    /// clean error while the rest resume without it.
+    pub fn allreduce_elastic(
+        &mut self,
+        data: &[T],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<Vec<T>, String> {
+        let policy = self.fault.ok_or_else(|| {
+            "allreduce_elastic requires NetOptions::fault — the failure detector is not armed"
+                .to_string()
+        })?;
+        let mut out = vec![T::default(); data.len()];
+        if self.p == 1 {
+            out.copy_from_slice(data);
+            return Ok(out);
+        }
+        if self.rank != 0 && !self.transport.has_link(0) {
+            return Err(format!(
+                "rank {}: elastic mode needs a link to rank 0 (the shrink coordinator); \
+                 include 0 in NetOptions::peers or use a full mesh",
+                self.rank
+            ));
+        }
+        let m_bytes = data.len() * std::mem::size_of::<T>();
+        // Vote-collection budget: a straggler may block for a full
+        // receive timeout before it fails over and votes.
+        let vote_wait = self.transport.timeout() + policy.detect_timeout;
+        let attempts = policy.retry as usize + 1;
+        for _ in 0..attempts {
+            let live = self.membership.live().to_vec();
+            let epoch = self.membership.epoch;
+            let dense = self
+                .membership
+                .dense(self.rank)
+                .expect("a live rank is running this call");
+            let s = self.schedule_for(kind, live.len(), m_bytes)?;
+            let round = self.step_base as u64;
+            let run_res = if live.len() == self.p {
+                self.run_as(&s, dense, None, data, op, &mut out)
+            } else {
+                self.run_as(&s, dense, Some(&live), data, op, &mut out)
+            };
+            let my_dead: Vec<usize> = match run_res {
+                // A clean run still reports suspects: a peer whose death
+                // never blocked *this* rank may have blocked another.
+                Ok(()) => self.transport.suspects(),
+                Err(ClusterError::Elastic { dead, .. }) => dead,
+                Err(e) => return Err(e.to_string()),
+            };
+            if self.rank == 0 {
+                let mut dead = my_dead;
+                let deadline = Instant::now() + vote_wait;
+                for &r in live.iter().filter(|&&r| r != 0) {
+                    // Collect `r`'s vote in short slices so a voter the
+                    // detector declares dead mid-wait is abandoned
+                    // immediately instead of riding out the deadline.
+                    let vote = loop {
+                        if dead.contains(&r) || self.transport.suspects().contains(&r) {
+                            break None;
+                        }
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break None;
+                        }
+                        let slice = (now + Duration::from_millis(25)).min(deadline);
+                        match self.transport.wait_epoch(slice, |m| {
+                            m.phase == wire::EPOCH_VOTE
+                                && m.from == r
+                                && m.round == round
+                                && m.epoch == epoch
+                        }) {
+                            Ok(v) => break Some(v),
+                            Err(_) => continue,
+                        }
+                    };
+                    match vote {
+                        Some(v) => dead.extend(v.ranks),
+                        None => dead.push(r),
+                    }
+                }
+                dead.retain(|&d| d != 0 && live.contains(&d));
+                dead.sort_unstable();
+                dead.dedup();
+                if dead.is_empty() {
+                    let msg = wire::EpochMsg {
+                        phase: wire::EPOCH_COMMIT,
+                        from: 0,
+                        epoch,
+                        round,
+                        ranks: Vec::new(),
+                    };
+                    for &r in live.iter().filter(|&&r| r != 0) {
+                        self.transport.post_epoch(r, &msg);
+                    }
+                    return Ok(out);
+                }
+                let next = self
+                    .membership
+                    .shrink(&dead)
+                    .map_err(|e| format!("cannot survive the loss of {dead:?}: {e}"))?;
+                let msg = wire::EpochMsg {
+                    phase: wire::EPOCH_DECIDE,
+                    from: 0,
+                    epoch: next.epoch,
+                    round,
+                    ranks: next.live().to_vec(),
+                };
+                for &r in next.live().iter().filter(|&&r| r != 0) {
+                    self.transport.post_epoch(r, &msg);
+                }
+                self.transport.retire_peers(&dead);
+                self.transport.set_epoch(next.epoch);
+                self.membership = next;
+            } else {
+                let vote = wire::EpochMsg {
+                    phase: wire::EPOCH_VOTE,
+                    from: self.rank,
+                    epoch,
+                    round,
+                    ranks: my_dead,
+                };
+                self.transport.post_epoch(0, &vote);
+                let deadline = Instant::now() + vote_wait;
+                let verdict = self
+                    .transport
+                    .wait_epoch(deadline, |m| {
+                        m.from == 0
+                            && m.round == round
+                            && (m.phase == wire::EPOCH_COMMIT || m.phase == wire::EPOCH_DECIDE)
+                    })
+                    .map_err(|_| {
+                        format!(
+                            "rank {}: no COMMIT/DECIDE for round {round} (epoch {epoch}) — \
+                             the shrink coordinator (rank 0) is unreachable or dead",
+                            self.rank
+                        )
+                    })?;
+                if verdict.phase == wire::EPOCH_COMMIT {
+                    return Ok(out);
+                }
+                if !verdict.ranks.contains(&self.rank) {
+                    return Err(format!(
+                        "rank {} was declared dead in epoch {} (false-positive detection — \
+                         raise FaultPolicy::detect_timeout)",
+                        self.rank, verdict.epoch
+                    ));
+                }
+                let next = Membership::agreed(verdict.epoch, verdict.ranks);
+                let dead: Vec<usize> = live
+                    .iter()
+                    .copied()
+                    .filter(|&r| next.dense(r).is_none())
+                    .collect();
+                self.transport.retire_peers(&dead);
+                self.transport.set_epoch(next.epoch);
+                self.membership = next;
+            }
+        }
+        Err(format!(
+            "allreduce_elastic exhausted {attempts} attempt(s) (epoch {}, {} live) — \
+             raise FaultPolicy::retry or stabilize the mesh",
+            self.membership.epoch,
+            self.membership.p()
+        ))
     }
 }

@@ -136,6 +136,69 @@ pub(super) fn measure<T: WireElement>(
     })
 }
 
+/// Measure per-rank **arrival skew** over the live mesh: every rank posts
+/// a timestamped-on-receipt `READY` ping to rank 0 on entering this
+/// (SPMD-ordered) call, rank 0 records each ping's local arrival time,
+/// subtracts the earliest, and broadcasts the resulting per-rank lag
+/// table (seconds) so all ranks price PAP-aware schedules from identical
+/// inputs. No cross-host clock is needed — only rank 0's monotonic clock
+/// is read — at the cost of one α of one-way latency folded into every
+/// entry (identical across ranks on a symmetric fabric, harmless for the
+/// relative comparison the coordinator makes). `seq` ties pings to one
+/// measurement (stale pings from an abandoned attempt are ignored).
+/// Requires the `0 ↔ i` links, like [`measure`] (not a lazy mesh).
+pub(super) fn measure_skew<T: WireElement>(
+    t: &mut NetTransport<T>,
+    rank: usize,
+    seq: u64,
+) -> Result<Vec<f64>, ClusterError> {
+    let p = t.p();
+    if p == 1 {
+        return Ok(vec![0.0]);
+    }
+    let deadline = Instant::now() + t.timeout();
+    if rank == 0 {
+        let mut arrive: Vec<Option<Instant>> = vec![None; p];
+        arrive[0] = Some(Instant::now());
+        let mut need = p - 1;
+        while need > 0 {
+            let (from, msg, at) = t.wait_ready(deadline)?;
+            if let wire::ReadyMsg::Ping { rank: r, seq: s } = msg {
+                if s == seq && r == from && arrive[r].is_none() {
+                    arrive[r] = Some(at);
+                    need -= 1;
+                }
+            }
+        }
+        let earliest = arrive.iter().flatten().min().copied().expect("p >= 2");
+        let skew: Vec<f64> = arrive
+            .iter()
+            .map(|a| {
+                a.expect("all pings collected")
+                    .duration_since(earliest)
+                    .as_secs_f64()
+            })
+            .collect();
+        let frame = wire::encode_skew_table(&skew);
+        for peer in 1..p {
+            t.post(peer, frame.clone());
+        }
+        Ok(skew)
+    } else {
+        t.post(0, wire::encode_ready_ping(rank, seq));
+        loop {
+            let (from, msg, _) = t.wait_ready(deadline)?;
+            if from == 0 {
+                if let wire::ReadyMsg::Table { skew } = msg {
+                    if skew.len() == p {
+                        return Ok(skew);
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -20,9 +20,20 @@
 //! `recv` that depends on that peer returns a [`ClusterError`] immediately
 //! (receives from healthy peers keep draining the stash). Everything else
 //! is bounded by the receive timeout.
+//!
+//! With a [`FaultPolicy`] the transport additionally runs a **failure
+//! detector**: a heartbeat thread keeps every link non-silent, readers
+//! stamp `last_seen` on every frame, and elastic receives tick every
+//! ~25 ms so a peer that goes dark (link down *or* heartbeat-silent past
+//! `detect_timeout`) surfaces as [`ClusterError::Elastic`] carrying the
+//! dead rank set — the input to the membership-shrink protocol — long
+//! before the full receive timeout. Without a policy (the default) none
+//! of this machinery runs and behavior is exactly the pre-elastic
+//! transport.
 
 use std::collections::HashMap;
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -32,7 +43,12 @@ use crate::cluster::ClusterError;
 use crate::cost::NetParams;
 
 use super::bootstrap::Mesh;
-use super::wire::{self, WireElement};
+use super::fault::{Backoff, FaultPolicy};
+use super::wire::{self, EpochMsg, ReadyMsg, WireElement};
+
+/// How often an elastic receive re-checks the suspect set while blocked.
+/// Detection latency is bounded by `detect_timeout + ELASTIC_TICK`.
+const ELASTIC_TICK: Duration = Duration::from_millis(25);
 
 /// What a reader thread posts to the shared inbox.
 pub(super) enum Event<T: WireElement> {
@@ -47,6 +63,15 @@ pub(super) enum Event<T: WireElement> {
     Echo { from: usize, nonce: u64 },
     /// A `PARAMS` broadcast from rank 0.
     Params(NetParams),
+    /// A `READY` arrival ping or skew table, timestamped at decode so
+    /// rank 0 measures skew without any cross-host clock.
+    Ready {
+        from: usize,
+        msg: ReadyMsg,
+        at: Instant,
+    },
+    /// An `EPOCH` message of the membership-shrink protocol.
+    Epoch(EpochMsg),
     /// Clean EOF from `from`.
     Closed { from: usize },
     /// Torn frame / decode failure / I/O error on the link to `from`.
@@ -71,30 +96,58 @@ pub struct NetTransport<T: WireElement> {
     /// A `PARAMS` broadcast that arrived while we were doing something
     /// else; consumed by [`NetTransport::wait_params`].
     stashed_params: Option<NetParams>,
+    /// `READY` messages awaiting [`NetTransport::wait_ready`].
+    ready_msgs: Vec<(usize, ReadyMsg, Instant)>,
+    /// `EPOCH` messages awaiting [`NetTransport::wait_epoch`].
+    epoch_msgs: Vec<EpochMsg>,
     link: Vec<Link>,
     timeout: Duration,
     /// First valid step tag of the current call (tags below it are
-    /// duplicates from a protocol violation).
+    /// old-epoch/old-call debris and are dropped like wild tags).
     call_base: usize,
     /// Raw stream clones kept for shutdown (unblocks reader threads).
     streams: Vec<Option<TcpStream>>,
     readers: Vec<std::thread::JoinHandle<()>>,
     writers_joined: Vec<std::thread::JoinHandle<()>>,
+    // -- failure detector (all inert when `fault` is None) --
+    fault: Option<FaultPolicy>,
+    /// Current membership epoch, shared with the heartbeat thread.
+    epoch: Arc<AtomicU64>,
+    /// Epoch zero of the liveness clock.
+    t0: Instant,
+    /// Per-peer ms-since-`t0` of the last frame of any kind.
+    last_seen: Arc<Vec<AtomicU64>>,
+    /// Which peers the bootstrap actually dialed (lazy meshes hold a
+    /// subset); only connected peers can be suspected.
+    connected: Vec<bool>,
+    /// Peers retired by a membership shrink: links torn down on purpose,
+    /// never suspects again.
+    retired: Vec<bool>,
+    hb_stop: Option<Arc<AtomicBool>>,
+    hb_join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl<T: WireElement> NetTransport<T> {
     /// Spawn the per-peer reader/writer threads over an established mesh.
+    /// A `fault` policy arms the failure detector (heartbeats + suspect
+    /// tracking); `None` reproduces the pre-elastic transport exactly.
     pub fn start(
         mesh: Mesh,
         pool: Arc<BlockPool<T>>,
         timeout: Duration,
+        fault: Option<FaultPolicy>,
     ) -> Result<NetTransport<T>, ClusterError> {
         let (rank, p) = (mesh.rank, mesh.p);
+        let t0 = Instant::now();
+        let last_seen: Arc<Vec<AtomicU64>> =
+            Arc::new((0..p).map(|_| AtomicU64::new(0)).collect());
+        let epoch = Arc::new(AtomicU64::new(0));
         let (ev_tx, ev_rx) = mpsc::channel::<Event<T>>();
         let mut writers: Vec<Option<mpsc::Sender<Vec<u8>>>> = (0..p).map(|_| None).collect();
         let mut streams: Vec<Option<TcpStream>> = (0..p).map(|_| None).collect();
         let mut readers = Vec::with_capacity(p.saturating_sub(1));
         let mut writers_joined = Vec::with_capacity(p.saturating_sub(1));
+        let retry = fault.map(|f| f.backoff);
         for (peer, slot) in mesh.streams.into_iter().enumerate() {
             let Some(stream) = slot else { continue };
             // Steady state blocks indefinitely on reads; hang detection is
@@ -128,18 +181,35 @@ impl<T: WireElement> NetTransport<T> {
             streams[peer] = Some(stream);
             let ev = ev_tx.clone();
             let rpool = pool.clone();
+            let seen = last_seen.clone();
             readers.push(
                 std::thread::Builder::new()
                     .name(format!("net-r{rank}-from{peer}"))
-                    .spawn(move || reader_loop(peer, rd, rpool, ev, echo_tx))
+                    .spawn(move || reader_loop(peer, rd, rpool, ev, echo_tx, seen, t0))
                     .expect("spawn net reader"),
             );
+            let seed = ((rank as u64) << 32) | peer as u64;
             writers_joined.push(
                 std::thread::Builder::new()
                     .name(format!("net-w{rank}-to{peer}"))
-                    .spawn(move || writer_loop(wr, w_rx))
+                    .spawn(move || writer_loop(wr, w_rx, retry, seed))
                     .expect("spawn net writer"),
             );
+        }
+        let connected: Vec<bool> = streams.iter().map(|s| s.is_some()).collect();
+        let (mut hb_stop, mut hb_join) = (None, None);
+        if let Some(pol) = fault {
+            let stop = Arc::new(AtomicBool::new(false));
+            let txs: Vec<mpsc::Sender<Vec<u8>>> =
+                writers.iter().flatten().cloned().collect();
+            let (period, ep, stop2) = (pol.heartbeat_period(), epoch.clone(), stop.clone());
+            hb_join = Some(
+                std::thread::Builder::new()
+                    .name(format!("net-hb{rank}"))
+                    .spawn(move || heartbeat_loop(rank, txs, period, ep, stop2))
+                    .expect("spawn net heartbeat"),
+            );
+            hb_stop = Some(stop);
         }
         Ok(NetTransport {
             rank,
@@ -148,12 +218,22 @@ impl<T: WireElement> NetTransport<T> {
             inbox: ev_rx,
             pending: HashMap::new(),
             stashed_params: None,
+            ready_msgs: Vec::new(),
+            epoch_msgs: Vec::new(),
             link: (0..p).map(|_| Link::Up).collect(),
             timeout,
             call_base: 0,
             streams,
             readers,
             writers_joined,
+            fault,
+            epoch,
+            t0,
+            last_seen,
+            connected,
+            retired: vec![false; p],
+            hb_stop,
+            hb_join,
         })
     }
 
@@ -167,13 +247,37 @@ impl<T: WireElement> NetTransport<T> {
         self.streams.iter().flatten().count()
     }
 
+    /// The configured receive timeout (deadline budget for the bounded
+    /// waits layered on this transport).
+    pub(super) fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Whether a live writer queue to `peer` exists (dialed at bootstrap
+    /// and not retired or shut down since).
+    pub(super) fn has_link(&self, peer: usize) -> bool {
+        self.writers.get(peer).map_or(false, |w| w.is_some())
+    }
+
+    /// Current membership epoch (bumped by [`NetTransport::set_epoch`]
+    /// after a shrink; heartbeats carry it).
+    pub(super) fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    pub(super) fn set_epoch(&self, e: u64) {
+        self.epoch.store(e, Ordering::Release);
+    }
+
     /// Start a new call whose step tags begin at `base`: stale stash
-    /// entries (duplicates that could only come from corruption) are
-    /// dropped.
+    /// entries (duplicates that could only come from corruption, or
+    /// debris from an abandoned pre-shrink attempt) are dropped, as are
+    /// epoch messages from completed rounds.
     pub fn begin_call(&mut self, base: usize) {
         self.call_base = base;
         let floor = self.call_base;
         self.pending.retain(|&(step, _), _| step >= floor);
+        self.epoch_msgs.retain(|m| m.round >= floor as u64);
     }
 
     /// Queue one pre-encoded frame to `to` (fire-and-forget, like the
@@ -183,6 +287,56 @@ impl<T: WireElement> NetTransport<T> {
         if let Some(Some(tx)) = self.writers.get(to) {
             let _ = tx.send(bytes);
         }
+    }
+
+    /// Queue one membership-protocol message to `to`.
+    pub(super) fn post_epoch(&self, to: usize, msg: &EpochMsg) {
+        self.post(to, wire::encode_epoch(msg));
+    }
+
+    /// The peers this rank currently believes are dead: link closed/bad,
+    /// or (failure detector armed) heartbeat-silent past `detect_timeout`.
+    /// Retired peers and never-dialed peers (lazy mesh) are excluded.
+    /// Empty without a `FaultPolicy`.
+    pub(super) fn suspects(&self) -> Vec<usize> {
+        let Some(pol) = self.fault else {
+            return Vec::new();
+        };
+        let now_ms = self.t0.elapsed().as_millis() as u64;
+        let detect_ms = pol.detect_timeout.as_millis() as u64;
+        let mut out = Vec::new();
+        for peer in 0..self.p {
+            if peer == self.rank || self.retired[peer] || !self.connected[peer] {
+                continue;
+            }
+            let down = matches!(self.link[peer], Link::Closed | Link::Bad(_));
+            let silent =
+                now_ms.saturating_sub(self.last_seen[peer].load(Ordering::Relaxed)) > detect_ms;
+            if down || silent {
+                out.push(peer);
+            }
+        }
+        out
+    }
+
+    /// Tear down the links to peers a membership shrink declared dead:
+    /// their traffic is dropped, their readers/writers wind down, and
+    /// they are never suspected again.
+    pub(super) fn retire_peers(&mut self, dead: &[usize]) {
+        for &d in dead {
+            if d == self.rank || d >= self.p {
+                continue;
+            }
+            self.retired[d] = true;
+            self.link[d] = Link::Closed;
+            self.writers[d] = None;
+            if let Some(s) = self.streams[d].take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        self.pending.retain(|&(_, from), _| !dead.contains(&from));
+        self.ready_msgs.retain(|(from, _, _)| !dead.contains(from));
+        self.epoch_msgs.retain(|m| !dead.contains(&m.from));
     }
 
     fn link_error(&self, from: usize, step: usize) -> ClusterError {
@@ -197,6 +351,28 @@ impl<T: WireElement> NetTransport<T> {
             },
             Link::Up => unreachable!("link_error on a healthy link"),
         }
+    }
+
+    /// The error a failed dependence on `from` surfaces as: with the
+    /// failure detector armed it is an epoch-tagged `Elastic` carrying
+    /// the full dead set (any dead peer dooms the collective), otherwise
+    /// the classic link error.
+    fn fail_from(&self, from: usize, step: usize) -> ClusterError {
+        if self.fault.is_some() {
+            let mut dead = self.suspects();
+            if matches!(self.link[from], Link::Closed | Link::Bad(_)) && !dead.contains(&from) {
+                dead.push(from);
+                dead.sort_unstable();
+            }
+            if !dead.is_empty() {
+                return ClusterError::Elastic {
+                    proc: self.rank,
+                    epoch: self.epoch(),
+                    dead,
+                };
+            }
+        }
+        self.link_error(from, step)
     }
 
     fn stash_data(&mut self, from: usize, step: usize, frame: Frame, payload: Payload<T>) {
@@ -224,12 +400,24 @@ impl<T: WireElement> NetTransport<T> {
                 self.stashed_params = Some(p);
                 None
             }
+            Event::Ready { from, msg, at } => {
+                self.ready_msgs.push((from, msg, at));
+                None
+            }
+            Event::Epoch(m) => {
+                self.epoch_msgs.push(m);
+                None
+            }
             Event::Closed { from } => {
-                self.link[from] = Link::Closed;
+                if !self.retired[from] {
+                    self.link[from] = Link::Closed;
+                }
                 None
             }
             Event::Bad { from, detail } => {
-                self.link[from] = Link::Bad(detail);
+                if !self.retired[from] {
+                    self.link[from] = Link::Bad(detail);
+                }
                 None
             }
         }
@@ -241,7 +429,7 @@ impl<T: WireElement> NetTransport<T> {
         let deadline = Instant::now() + self.timeout;
         loop {
             if matches!(self.link[from], Link::Closed | Link::Bad(_)) {
-                return Err(self.link_error(from, 0));
+                return Err(self.fail_from(from, 0));
             }
             let remaining = deadline.saturating_duration_since(Instant::now());
             let ev = self.inbox.recv_timeout(remaining).map_err(|_| {
@@ -268,7 +456,7 @@ impl<T: WireElement> NetTransport<T> {
                 return Ok(p);
             }
             if matches!(self.link[0], Link::Closed | Link::Bad(_)) {
-                return Err(self.link_error(0, 0));
+                return Err(self.fail_from(0, 0));
             }
             let remaining = deadline.saturating_duration_since(Instant::now());
             let ev = self.inbox.recv_timeout(remaining).map_err(|_| {
@@ -282,9 +470,75 @@ impl<T: WireElement> NetTransport<T> {
         }
     }
 
+    /// Wait until `deadline` for any `READY` message (arrival ping or
+    /// skew table), returning `(from, msg, local arrival time)`.
+    pub(super) fn wait_ready(
+        &mut self,
+        deadline: Instant,
+    ) -> Result<(usize, ReadyMsg, Instant), ClusterError> {
+        loop {
+            if !self.ready_msgs.is_empty() {
+                return Ok(self.ready_msgs.remove(0));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ClusterError::RecvTimeout {
+                    proc: self.rank,
+                    step: 0,
+                    from: 0,
+                });
+            }
+            match self.inbox.recv_timeout(remaining) {
+                Ok(ev) => {
+                    self.absorb(ev);
+                }
+                Err(_) => continue,
+            }
+        }
+    }
+
+    /// Wait until `deadline` for the first `EPOCH` message matching
+    /// `pred` (non-matching messages stay stashed for other waiters).
+    pub(super) fn wait_epoch<F>(
+        &mut self,
+        deadline: Instant,
+        mut pred: F,
+    ) -> Result<EpochMsg, ClusterError>
+    where
+        F: FnMut(&EpochMsg) -> bool,
+    {
+        loop {
+            if let Some(i) = self.epoch_msgs.iter().position(|m| pred(m)) {
+                return Ok(self.epoch_msgs.remove(i));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ClusterError::RecvTimeout {
+                    proc: self.rank,
+                    step: 0,
+                    from: 0,
+                });
+            }
+            match self.inbox.recv_timeout(remaining) {
+                Ok(ev) => {
+                    self.absorb(ev);
+                }
+                Err(_) => continue,
+            }
+        }
+    }
+
     /// Shut the transport down: stop the readers, flush and close every
     /// writer, join everything. Idempotent (runs on drop).
     pub(super) fn shutdown(&mut self) {
+        // The heartbeat thread holds writer-queue clones, so it must stop
+        // and join before the writer queues can drain closed below.
+        if let Some(stop) = self.hb_stop.take() {
+            stop.store(true, Ordering::Release);
+        }
+        if let Some(h) = self.hb_join.take() {
+            let _ = h.join();
+        }
         // Close our receive side first: blocked readers wake with EOF and
         // exit. This must precede the writer joins — each reader holds an
         // `echo_tx` clone of its peer's writer queue, so a live reader
@@ -338,18 +592,40 @@ impl<T: WireElement> Transport<T> for NetTransport<T> {
             }
         }
         if matches!(self.link[from], Link::Closed | Link::Bad(_)) {
-            return Err(self.link_error(from, step));
+            return Err(self.fail_from(from, step));
         }
         let deadline = Instant::now() + self.timeout;
         loop {
+            // Elastic meshes surface a suspect immediately — any dead
+            // peer dooms the collective, whether or not it is `from`.
+            if self.fault.is_some() {
+                let dead = self.suspects();
+                if !dead.is_empty() {
+                    return Err(ClusterError::Elastic {
+                        proc: self.rank,
+                        epoch: self.epoch(),
+                        dead,
+                    });
+                }
+            }
             let remaining = deadline.saturating_duration_since(Instant::now());
-            let ev = self.inbox.recv_timeout(remaining).map_err(|_| {
-                ClusterError::RecvTimeout {
+            if remaining.is_zero() {
+                return Err(ClusterError::RecvTimeout {
                     proc: self.rank,
                     step,
                     from,
-                }
-            })?;
+                });
+            }
+            let tick = if self.fault.is_some() {
+                remaining.min(ELASTIC_TICK)
+            } else {
+                remaining
+            };
+            let ev = match self.inbox.recv_timeout(tick) {
+                Ok(ev) => ev,
+                // Tick expired: loop re-checks suspects and the deadline.
+                Err(_) => continue,
+            };
             match ev {
                 Event::Data {
                     from: f,
@@ -361,11 +637,17 @@ impl<T: WireElement> Transport<T> for NetTransport<T> {
                     if s == step && f == from {
                         return Ok((frame, payload));
                     }
-                    // Receives run in program order, so every tag below the
-                    // one currently awaited was already consumed — a second
-                    // delivery can only be corruption. Tags at or above it
+                    // Tags below the current call's base are debris from
+                    // an abandoned attempt in an older epoch — dropped
+                    // like wild tags. Within the call, receives run in
+                    // program order, so every tag below the one currently
+                    // awaited was already consumed — a second delivery
+                    // can only be corruption. Tags at or above it
                     // (another peer's lane, a later step, a faster peer's
                     // next call) stash.
+                    if s < self.call_base {
+                        continue;
+                    }
                     if s < step {
                         return Err(ClusterError::Protocol {
                             proc: self.rank,
@@ -380,7 +662,7 @@ impl<T: WireElement> Transport<T> for NetTransport<T> {
                 other => {
                     self.absorb(other);
                     if matches!(self.link[from], Link::Closed | Link::Bad(_)) {
-                        return Err(self.link_error(from, step));
+                        return Err(self.fail_from(from, step));
                     }
                 }
             }
@@ -388,26 +670,104 @@ impl<T: WireElement> Transport<T> for NetTransport<T> {
     }
 }
 
+/// Write `bytes` fully, resuming from the byte offset after transient
+/// errors (`WouldBlock`/`TimedOut`) with a bounded [`Backoff`] — the
+/// transient half of the fault taxonomy. Without a retry schedule any
+/// error is terminal (pre-elastic behavior). Returns `false` when the
+/// link is done for.
+fn write_retrying(
+    stream: &mut TcpStream,
+    bytes: &[u8],
+    retry: Option<Backoff>,
+    seed: u64,
+) -> bool {
+    use std::io::Write as _;
+    let mut off = 0usize;
+    let mut attempt = 0u32;
+    while off < bytes.len() {
+        match stream.write(&bytes[off..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                off += n;
+                attempt = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                let Some(b) = retry else { return false };
+                if attempt >= 8 {
+                    return false;
+                }
+                std::thread::sleep(b.delay(attempt, seed));
+                attempt += 1;
+            }
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
 /// Drain pre-encoded frames into the socket until the queue closes (all
-/// senders dropped) or a write fails — the failure then surfaces at the
-/// receiving side as a missing message.
-fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
+/// senders dropped) or a write fails terminally — the failure then
+/// surfaces at the receiving side as a missing message.
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<Vec<u8>>,
+    retry: Option<Backoff>,
+    seed: u64,
+) {
     for bytes in rx {
-        if wire::write_all(&mut stream, &bytes).is_err() {
+        if !write_retrying(&mut stream, &bytes, retry, seed) {
             return;
         }
     }
 }
 
+/// Emit a `HEARTBEAT` to every connected peer each `period` so idle
+/// links never look silent to the peer's failure detector. Sends to a
+/// wound-down writer queue (retired peer, shutdown race) are ignored.
+fn heartbeat_loop(
+    rank: usize,
+    txs: Vec<mpsc::Sender<Vec<u8>>>,
+    period: Duration,
+    epoch: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Acquire) {
+        let frame = wire::encode_heartbeat(rank, epoch.load(Ordering::Acquire));
+        for tx in &txs {
+            let _ = tx.send(frame.clone());
+        }
+        // Sleep in short slices so shutdown never waits a full period.
+        let mut slept = Duration::ZERO;
+        while slept < period {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            let slice = (period - slept).min(Duration::from_millis(5));
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+    }
+}
+
 /// Decode frames as they arrive; `DATA` posts to the inbox, `PROBE`
-/// echoes straight back through the peer's writer queue, everything else
-/// maps to its event. Exits on EOF/error after posting the terminal event.
+/// echoes straight back through the peer's writer queue, `HEARTBEAT`
+/// only refreshes the liveness stamp, everything else maps to its event.
+/// Every frame of any kind stamps `last_seen` for the failure detector.
+/// Exits on EOF/error after posting the terminal event.
 fn reader_loop<T: WireElement>(
     peer: usize,
     mut stream: TcpStream,
     pool: Arc<BlockPool<T>>,
     events: mpsc::Sender<Event<T>>,
     echo: mpsc::Sender<Vec<u8>>,
+    last_seen: Arc<Vec<AtomicU64>>,
+    t0: Instant,
 ) {
     loop {
         let body = match wire::read_frame(&mut stream, wire::MAX_BODY_BYTES) {
@@ -421,6 +781,7 @@ fn reader_loop<T: WireElement>(
                 return;
             }
         };
+        last_seen[peer].store(t0.elapsed().as_millis() as u64, Ordering::Relaxed);
         let ev = match body[0] {
             wire::KIND_DATA => match wire::decode_data::<T>(&body, &pool) {
                 Ok(msg) => {
@@ -455,6 +816,35 @@ fn reader_loop<T: WireElement>(
             },
             wire::KIND_PARAMS => match wire::decode_params(&body) {
                 Ok(p) => Event::Params(p),
+                Err(detail) => Event::Bad { from: peer, detail },
+            },
+            wire::KIND_HEARTBEAT => match wire::decode_heartbeat(&body) {
+                // The stamp above is the whole effect.
+                Ok(_) => continue,
+                Err(detail) => Event::Bad { from: peer, detail },
+            },
+            wire::KIND_READY => match wire::decode_ready(&body) {
+                Ok(msg) => Event::Ready {
+                    from: peer,
+                    msg,
+                    at: Instant::now(),
+                },
+                Err(detail) => Event::Bad { from: peer, detail },
+            },
+            wire::KIND_EPOCH => match wire::decode_epoch(&body) {
+                Ok(m) => {
+                    if m.from != peer {
+                        Event::Bad {
+                            from: peer,
+                            detail: format!(
+                                "EPOCH claims sender {} on the link to {peer}",
+                                m.from
+                            ),
+                        }
+                    } else {
+                        Event::Epoch(m)
+                    }
+                }
                 Err(detail) => Event::Bad { from: peer, detail },
             },
             k => Event::Bad {

@@ -21,6 +21,14 @@
 //!   PROBE   (4): u64 nonce | opaque payload (echoed verbatim)
 //!   ECHO    (5): u64 nonce | opaque payload
 //!   PARAMS  (6): f64 alpha | f64 beta | f64 gamma   (IEEE-754 bits, LE)
+//!   HEARTBEAT (7): u32 from | u64 epoch              (liveness keep-alive)
+//!   READY   (8): u8 phase | phase 0: u32 rank | u64 seq   (arrival ping)
+//!                          | phase 1: u32 p | p × f64     (skew table)
+//!   EPOCH   (9): u8 phase | u32 from | u64 epoch | u64 round
+//!                          | u32 n | n × u32 ranks
+//!                (phase 0 = vote: ranks = suspected-dead set;
+//!                 phase 1 = commit: everyone keeps its result;
+//!                 phase 2 = decide: ranks = new live set, epoch bumped)
 //! ```
 //!
 //! `DATA` serializes exactly what the in-process transports pass by
@@ -51,6 +59,9 @@ pub const KIND_PEER: u8 = 3;
 pub const KIND_PROBE: u8 = 4;
 pub const KIND_ECHO: u8 = 5;
 pub const KIND_PARAMS: u8 = 6;
+pub const KIND_HEARTBEAT: u8 = 7;
+pub const KIND_READY: u8 = 8;
+pub const KIND_EPOCH: u8 = 9;
 
 /// Sanity cap on one frame's body — a corrupt length prefix must not
 /// allocate unbounded memory on the receive side, and senders **assert**
@@ -392,6 +403,167 @@ pub fn decode_params(body: &[u8]) -> Result<NetParams, String> {
     })
 }
 
+// --------------------------------------------------------- elasticity --
+
+/// A liveness keep-alive. Carries the sender's physical rank and current
+/// membership epoch; receivers refresh the peer's `last_seen` stamp and
+/// otherwise discard the frame (it never enters the data-plane inbox).
+pub fn encode_heartbeat(from: usize, epoch: u64) -> Vec<u8> {
+    let mut out = frame_buf(13);
+    out.push(KIND_HEARTBEAT);
+    out.extend_from_slice(&(from as u32).to_le_bytes());
+    out.extend_from_slice(&epoch.to_le_bytes());
+    finish_frame(out)
+}
+
+/// `(from, epoch)` of a `HEARTBEAT` body.
+pub fn decode_heartbeat(body: &[u8]) -> Result<(usize, u64), String> {
+    if body.len() != 13 {
+        return Err("HEARTBEAT malformed".into());
+    }
+    let from = u32::from_le_bytes(body[1..5].try_into().expect("4 bytes")) as usize;
+    let epoch = u64::from_le_bytes(body[5..13].try_into().expect("8 bytes"));
+    Ok((from, epoch))
+}
+
+/// A decoded `READY` body: either an arrival ping (rank, seq) or the
+/// rank-0 broadcast skew table (seconds each rank arrived after the
+/// earliest).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReadyMsg {
+    Ping { rank: usize, seq: u64 },
+    Table { skew: Vec<f64> },
+}
+
+/// Phase-0 READY: "rank `rank` reached the skew barrier" (seq
+/// disambiguates repeated measurements over one mesh).
+pub fn encode_ready_ping(rank: usize, seq: u64) -> Vec<u8> {
+    let mut out = frame_buf(14);
+    out.push(KIND_READY);
+    out.push(0);
+    out.extend_from_slice(&(rank as u32).to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
+    finish_frame(out)
+}
+
+/// Phase-1 READY: rank 0's measured per-rank arrival skew, broadcast so
+/// every rank prices PAP schedules from identical inputs.
+pub fn encode_skew_table(skew: &[f64]) -> Vec<u8> {
+    let mut out = frame_buf(6 + 8 * skew.len());
+    out.push(KIND_READY);
+    out.push(1);
+    out.extend_from_slice(&(skew.len() as u32).to_le_bytes());
+    for s in skew {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    finish_frame(out)
+}
+
+pub fn decode_ready(body: &[u8]) -> Result<ReadyMsg, String> {
+    if body.len() < 2 {
+        return Err("READY truncated".into());
+    }
+    match body[1] {
+        0 => {
+            if body.len() != 14 {
+                return Err("READY ping malformed".into());
+            }
+            let rank = u32::from_le_bytes(body[2..6].try_into().expect("4 bytes")) as usize;
+            let seq = u64::from_le_bytes(body[6..14].try_into().expect("8 bytes"));
+            Ok(ReadyMsg::Ping { rank, seq })
+        }
+        1 => {
+            if body.len() < 6 {
+                return Err("READY table truncated".into());
+            }
+            let p = u32::from_le_bytes(body[2..6].try_into().expect("4 bytes")) as usize;
+            if body.len() != 6 + 8 * p {
+                return Err(format!(
+                    "READY table claims {p} ranks but carries {} bytes",
+                    body.len()
+                ));
+            }
+            let skew = (0..p)
+                .map(|i| {
+                    f64::from_le_bytes(
+                        body[6 + 8 * i..14 + 8 * i].try_into().expect("8 bytes"),
+                    )
+                })
+                .collect();
+            Ok(ReadyMsg::Table { skew })
+        }
+        other => Err(format!("READY has unknown phase {other}")),
+    }
+}
+
+/// Membership-agreement phases of the shrink-to-P−1 protocol.
+pub const EPOCH_VOTE: u8 = 0;
+pub const EPOCH_COMMIT: u8 = 1;
+pub const EPOCH_DECIDE: u8 = 2;
+
+/// A decoded `EPOCH` body — one message of the rank-0-coordinated
+/// membership agreement. `round` ties the message to one collective
+/// attempt (the call's step base, identical across ranks under SPMD), so
+/// a straggler's vote from an old attempt is rejected like a wild step
+/// tag.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EpochMsg {
+    pub phase: u8,
+    pub from: usize,
+    pub epoch: u64,
+    pub round: u64,
+    /// VOTE: suspected-dead physical ranks (empty = clean completion).
+    /// COMMIT: empty. DECIDE: the new live set (sorted physical ranks).
+    pub ranks: Vec<usize>,
+}
+
+pub fn encode_epoch(msg: &EpochMsg) -> Vec<u8> {
+    let mut out = frame_buf(26 + 4 * msg.ranks.len());
+    out.push(KIND_EPOCH);
+    out.push(msg.phase);
+    out.extend_from_slice(&(msg.from as u32).to_le_bytes());
+    out.extend_from_slice(&msg.epoch.to_le_bytes());
+    out.extend_from_slice(&msg.round.to_le_bytes());
+    out.extend_from_slice(&(msg.ranks.len() as u32).to_le_bytes());
+    for r in &msg.ranks {
+        out.extend_from_slice(&(*r as u32).to_le_bytes());
+    }
+    finish_frame(out)
+}
+
+pub fn decode_epoch(body: &[u8]) -> Result<EpochMsg, String> {
+    if body.len() < 26 {
+        return Err("EPOCH truncated".into());
+    }
+    let phase = body[1];
+    if phase > EPOCH_DECIDE {
+        return Err(format!("EPOCH has unknown phase {phase}"));
+    }
+    let from = u32::from_le_bytes(body[2..6].try_into().expect("4 bytes")) as usize;
+    let epoch = u64::from_le_bytes(body[6..14].try_into().expect("8 bytes"));
+    let round = u64::from_le_bytes(body[14..22].try_into().expect("8 bytes"));
+    let n = u32::from_le_bytes(body[22..26].try_into().expect("4 bytes")) as usize;
+    if body.len() != 26 + 4 * n {
+        return Err(format!(
+            "EPOCH claims {n} ranks but carries {} bytes",
+            body.len()
+        ));
+    }
+    let ranks = (0..n)
+        .map(|i| {
+            u32::from_le_bytes(body[26 + 4 * i..30 + 4 * i].try_into().expect("4 bytes"))
+                as usize
+        })
+        .collect();
+    Ok(EpochMsg {
+        phase,
+        from,
+        epoch,
+        round,
+        ranks,
+    })
+}
+
 fn push_str(body: &mut Vec<u8>, s: &str) {
     body.extend_from_slice(&(s.len() as u16).to_le_bytes());
     body.extend_from_slice(s.as_bytes());
@@ -546,5 +718,75 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(decode_params(&body).unwrap(), p);
+    }
+
+    #[test]
+    fn heartbeat_round_trips() {
+        let hb = encode_heartbeat(6, 3);
+        let body = read_frame(&mut hb.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(body[0], KIND_HEARTBEAT);
+        assert_eq!(decode_heartbeat(&body).unwrap(), (6, 3));
+        assert!(decode_heartbeat(&body[..5]).is_err());
+    }
+
+    #[test]
+    fn ready_ping_and_table_round_trip() {
+        let ping = encode_ready_ping(4, 17);
+        let body = read_frame(&mut ping.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(body[0], KIND_READY);
+        assert_eq!(
+            decode_ready(&body).unwrap(),
+            ReadyMsg::Ping { rank: 4, seq: 17 }
+        );
+
+        let skew = vec![0.0, 1.5e-3, 2.25e-4];
+        let table = encode_skew_table(&skew);
+        let body = read_frame(&mut table.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(decode_ready(&body).unwrap(), ReadyMsg::Table { skew });
+
+        // Unknown phase and truncation are clean errors.
+        assert!(decode_ready(&[KIND_READY, 9]).unwrap_err().contains("phase"));
+        assert!(decode_ready(&[KIND_READY]).is_err());
+    }
+
+    #[test]
+    fn epoch_round_trips_all_phases() {
+        for (phase, ranks) in [
+            (EPOCH_VOTE, vec![3usize, 5]),
+            (EPOCH_COMMIT, vec![]),
+            (EPOCH_DECIDE, vec![0, 1, 2, 4]),
+        ] {
+            let msg = EpochMsg {
+                phase,
+                from: 2,
+                epoch: 7,
+                round: 1234,
+                ranks,
+            };
+            let enc = encode_epoch(&msg);
+            let body = read_frame(&mut enc.as_slice(), MAX_BODY_BYTES)
+                .unwrap()
+                .unwrap();
+            assert_eq!(body[0], KIND_EPOCH);
+            assert_eq!(decode_epoch(&body).unwrap(), msg);
+        }
+        // Corrupt rank count: clean error, not a giant allocation.
+        let msg = EpochMsg {
+            phase: EPOCH_VOTE,
+            from: 0,
+            epoch: 0,
+            round: 0,
+            ranks: vec![],
+        };
+        let mut enc = encode_epoch(&msg);
+        enc[4 + 22..4 + 26].copy_from_slice(&u32::MAX.to_le_bytes());
+        let body = &enc[4..];
+        assert!(decode_epoch(body).unwrap_err().contains("claims"));
     }
 }
