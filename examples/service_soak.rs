@@ -1,0 +1,201 @@
+//! Multi-tenant service soak over real TCP sockets
+//! (`permallreduce::net::service`).
+//!
+//! The same binary is every rank of the job (SPMD): pass `--rank` and
+//! `--nprocs` and the ranks meet at `--bind`, bring up one warm mesh,
+//! and start a per-rank [`Service`]. Each rank then mints `--tenants`
+//! communicators and drives them from separate threads — `--jobs`
+//! allreduces per tenant, alternating algorithm kinds, all interleaving
+//! through the one mesh with no barrier between jobs. Every job's result
+//! is checked exactly (integer-valued inputs make the f32 sums exact in
+//! any reduction order), and the per-rank service counters must balance.
+//!
+//! With `--self-spawn` the binary instead plays launcher: it forks
+//! `--nprocs` copies of itself over loopback and aggregates their exit
+//! codes. Rank 0 writes the throughput artifact (`--out`,
+//! `BENCH_service.json`) consumed by `bench_gate --service` in CI.
+//!
+//! ```sh
+//! cargo run --release --example service_soak -- --self-spawn --nprocs 5 --tenants 4
+//! # or by hand, one terminal per rank:
+//! cargo run --release --example service_soak -- --rank 0 --nprocs 3 --bind 127.0.0.1:29533
+//! cargo run --release --example service_soak -- --rank 1 --nprocs 3 --bind 127.0.0.1:29533
+//! cargo run --release --example service_soak -- --rank 2 --nprocs 3 --bind 127.0.0.1:29533
+//! ```
+
+use std::time::{Duration, Instant};
+
+use permallreduce::algo::AlgorithmKind;
+use permallreduce::cli::Args;
+use permallreduce::cluster::ReduceOp;
+use permallreduce::net::service::{CommHandle, Service, ServiceOptions};
+use permallreduce::net::NetOptions;
+
+/// One tenant's life on one rank: `jobs` submit → collect cycles on its
+/// own communicator, each checked against the exact expected sum.
+fn tenant(
+    rank: usize,
+    p: usize,
+    t: usize,
+    jobs: usize,
+    n: usize,
+    h: CommHandle<f32>,
+) -> Result<(), String> {
+    for j in 0..jobs {
+        // SPMD contract: the kind is a pure function of (t, j), so every
+        // rank resolves the same schedule for this job.
+        let kind = match (t + j) % 2 {
+            0 => AlgorithmKind::Ring,
+            _ => AlgorithmKind::GeneralizedAuto,
+        };
+        // Rank r contributes (r + c) everywhere; the sum over ranks is
+        // p(p-1)/2 + p*c — small integers, exact in f32.
+        let c = t + 2 * j + 1;
+        let xs = vec![(rank + c) as f32; n];
+        let sent = h.submit(&xs, ReduceOp::Sum, kind, Duration::from_secs(60));
+        sent.map_err(|e| format!("tenant {t} job {j}: submit: {e}"))?;
+        let got = h.collect().map_err(|e| format!("tenant {t} job {j}: {e}"))?;
+        let want = (p * (p - 1) / 2 + p * c) as f32;
+        if got.len() != n || got.iter().any(|&x| x != want) {
+            return Err(format!("tenant {t} job {j}: expected {want} everywhere"));
+        }
+    }
+    Ok(())
+}
+
+/// One rank's life: join the mesh, mint every tenant's communicator in
+/// SPMD order, run the tenant threads, then audit the counters. Rank 0
+/// writes the throughput artifact.
+fn run_rank(
+    rank: usize,
+    p: usize,
+    bind: &str,
+    tenants: usize,
+    jobs: usize,
+    n: usize,
+    out: &str,
+) -> Result<(), String> {
+    let opts = ServiceOptions {
+        net: NetOptions {
+            rendezvous: bind.to_string(),
+            connect_timeout: Duration::from_secs(30),
+            recv_timeout: Duration::from_secs(30),
+            ..NetOptions::default()
+        },
+        ..ServiceOptions::new()
+    };
+    let svc: Service<f32> = Service::connect(rank, p, opts).map_err(|e| e.to_string())?;
+    let mut handles = Vec::with_capacity(tenants);
+    for _ in 0..tenants {
+        handles.push(svc.comm()?);
+    }
+    let started = Instant::now();
+    std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(tenants);
+        for (t, h) in handles.into_iter().enumerate() {
+            workers.push(scope.spawn(move || tenant(rank, p, t, jobs, n, h)));
+        }
+        for w in workers {
+            w.join().map_err(|_| "tenant thread panicked".to_string())??;
+        }
+        Ok::<(), String>(())
+    })?;
+    let elapsed = started.elapsed().as_secs_f64();
+
+    let total = (tenants * jobs) as u64;
+    let (submitted, _busy, _deadline, completed, failed) = svc.stats().snapshot();
+    if submitted != total || completed != total || failed != 0 {
+        return Err(format!(
+            "rank {rank}: counters off: submitted {submitted}, completed {completed}, \
+             failed {failed} (expected {total}/{total}/0)"
+        ));
+    }
+    let rate = total as f64 / elapsed;
+    println!(
+        "[rank {rank}] OK: {tenants} tenants x {jobs} jobs ({n} f32 each) in {elapsed:.3} s \
+         — {rate:.1} jobs/s, {} mesh sockets",
+        svc.socket_count()
+    );
+    if rank == 0 {
+        let body = format!(
+            "{{\n  \"bench\": \"service\",\n  \"p\": {p},\n  \"tenants\": {tenants},\n  \
+             \"jobs_per_tenant\": {jobs},\n  \"elems\": {n},\n  \"elapsed_s\": {elapsed:.6},\n  \
+             \"jobs_per_sec\": {rate:.3}\n}}\n"
+        );
+        std::fs::write(out, body).map_err(|e| format!("writing {out}: {e}"))?;
+        println!("[rank 0] wrote {out}");
+    }
+    Ok(())
+}
+
+/// Launcher mode: fork `p` copies of this binary over loopback and wait.
+fn self_spawn(
+    p: usize,
+    bind: &str,
+    tenants: usize,
+    jobs: usize,
+    n: usize,
+    out: &str,
+) -> Result<(), String> {
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    println!("spawning {p} ranks over {bind}: {tenants} tenants x {jobs} jobs ({n} f32/rank)…");
+    let mut children = Vec::with_capacity(p);
+    for rank in 0..p {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("--rank")
+            .arg(rank.to_string())
+            .arg("--nprocs")
+            .arg(p.to_string())
+            .arg("--bind")
+            .arg(bind)
+            .arg("--tenants")
+            .arg(tenants.to_string())
+            .arg("--jobs")
+            .arg(jobs.to_string())
+            .arg("--elems")
+            .arg(n.to_string())
+            .arg("--out")
+            .arg(out);
+        let child = cmd
+            .spawn()
+            .map_err(|e| format!("spawning rank {rank}: {e}"))?;
+        children.push((rank, child));
+    }
+    let mut failed = Vec::new();
+    for (rank, mut child) in children {
+        let status = child
+            .wait()
+            .map_err(|e| format!("waiting for rank {rank}: {e}"))?;
+        if !status.success() {
+            failed.push(rank);
+        }
+    }
+    if failed.is_empty() {
+        println!("all {p} ranks completed — every tenant's every job matched the exact sum");
+        Ok(())
+    } else {
+        Err(format!("ranks {failed:?} failed — see their output above"))
+    }
+}
+
+fn main() -> Result<(), String> {
+    let args = Args::from_env()?;
+    let p = args.get_usize("nprocs", 5)?;
+    let tenants = args.get_usize("tenants", 4)?;
+    let jobs = args.get_usize("jobs", 6)?;
+    let n = args.get_usize("elems", 50_000)?;
+    let bind = args.get("bind").unwrap_or("127.0.0.1:29533").to_string();
+    let out = args.get("out").unwrap_or("BENCH_service.json").to_string();
+    if p == 0 || tenants == 0 || jobs == 0 {
+        return Err("--nprocs, --tenants and --jobs must all be at least 1".into());
+    }
+    if args.has("self-spawn") {
+        return self_spawn(p, &bind, tenants, jobs, n, &out);
+    }
+    match args.get("rank").map(str::parse::<usize>) {
+        Some(Ok(rank)) if rank < p => run_rank(rank, p, &bind, tenants, jobs, n, &out),
+        Some(Ok(rank)) => Err(format!("--rank {rank} out of range for --nprocs {p}")),
+        Some(Err(e)) => Err(format!("--rank: {e}")),
+        None => Err("pass --self-spawn, or --rank for one rank of a job".into()),
+    }
+}

@@ -21,10 +21,18 @@
 //! same tight way — it is DES-timed too, so a drop means the tuner or the
 //! composed schedules genuinely got worse, not that the runner was slow.
 //!
+//! When the baseline carries a `service` section, the multi-tenant
+//! service soak's throughput (`jobs_per_sec` of `BENCH_service.json`,
+//! written by `examples/service_soak.rs`) is gated under the global
+//! wall-clock slack. That artifact is produced in the serial net-loopback
+//! lane, not by the bench job, so the default positional mode does *not*
+//! require it — the net lane gates it separately with `--service`.
+//!
 //! ```text
 //! bench_gate <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json>]]]
 //! bench_gate --self-test <BENCH_baseline.json>   # prove the gate can fail
-//! bench_gate --ratchet <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json>]]]
+//! bench_gate --service <baseline.json> <service.json>   # net-lane throughput gate
+//! bench_gate --ratchet <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json> [<service.json>]]]]
 //! ```
 //!
 //! The baseline is a conservative floor, meant to be ratcheted upward as
@@ -58,6 +66,9 @@ struct Baseline {
     bucketing_floor: Option<f64>,
     chunking: Option<ChunkingFloors>,
     hier: Option<HierFloors>,
+    /// Floor on the service soak's `jobs_per_sec` (wall-clock, gated
+    /// under the global slack; see `--service`).
+    service_floor: Option<f64>,
 }
 
 /// Floors for the DES-timed chunking artifact. The DES clock is
@@ -147,13 +158,43 @@ fn parse_baseline(text: &str) -> Result<Baseline, String> {
             })
         }
     };
+    let service_floor = match v.get("service") {
+        None => None,
+        Some(s) => Some(
+            s.get("min_jobs_per_sec")
+                .and_then(Value::as_f64)
+                .ok_or("baseline `service` missing min_jobs_per_sec")?,
+        ),
+    };
     Ok(Baseline {
         pct,
         series,
         bucketing_floor,
         chunking,
         hier,
+        service_floor,
     })
+}
+
+/// The gated quantity of `BENCH_service.json`: its `jobs_per_sec`.
+fn parse_service(text: &str) -> Result<f64, String> {
+    let v = json::parse(text).map_err(|e| format!("service parse: {e}"))?;
+    v.get("jobs_per_sec")
+        .and_then(Value::as_f64)
+        .ok_or_else(|| "service artifact missing `jobs_per_sec`".to_string())
+}
+
+/// Gate the service throughput against its floor (empty vec = pass).
+fn gate_service(floor: f64, jobs_per_sec: f64, max_regress_pct: f64) -> Vec<String> {
+    let limit = floor * (1.0 - max_regress_pct / 100.0);
+    if jobs_per_sec < limit {
+        vec![format!(
+            "service: jobs_per_sec {jobs_per_sec:.3} regressed more than {max_regress_pct}% \
+             below the baseline floor {floor:.3} (limit {limit:.3})"
+        )]
+    } else {
+        Vec::new()
+    }
 }
 
 /// The gated quantity of `BENCH_hier.json`: its `min_speedup`.
@@ -368,6 +409,15 @@ fn self_test(baseline: &Baseline, max_regress_pct: f64) -> Result<(), String> {
             return Err("hier floor does not pass against itself".into());
         }
     }
+    if let Some(floor) = baseline.service_floor {
+        let injected = floor * (1.0 - max_regress_pct / 100.0) * 0.5;
+        if gate_service(floor, injected, max_regress_pct).is_empty() {
+            return Err("injected service regression passed — the gate is broken".into());
+        }
+        if !gate_service(floor, floor, max_regress_pct).is_empty() {
+            return Err("service floor does not pass against itself".into());
+        }
+    }
     Ok(())
 }
 
@@ -383,6 +433,7 @@ fn ratchet(
     bucketing: Option<f64>,
     chunking: Option<(f64, Option<f64>)>,
     hier: Option<f64>,
+    service: Option<f64>,
 ) -> String {
     let discount = 1.0 - baseline.pct / 100.0;
     let mut series: Vec<Series> = baseline
@@ -462,6 +513,20 @@ fn ratchet(
             ",\n  \"hier\": {{\"min_speedup\": {min:.4}, \"max_regress_pct\": {pct}}}"
         ));
     }
+    // Wall-clock like the dataplane series: ratchet discounted, never
+    // lowered, and keep the old floor when this run has no artifact
+    // (the soak runs in a different CI lane).
+    let service_floor = match (baseline.service_floor, service) {
+        (Some(old), Some(got)) => Some(old.max(got * discount)),
+        (Some(old), None) => Some(old),
+        (None, Some(got)) => Some(got * discount),
+        (None, None) => None,
+    };
+    if let Some(floor) = service_floor {
+        out.push_str(&format!(
+            ",\n  \"service\": {{\"min_jobs_per_sec\": {floor:.4}}}"
+        ));
+    }
     out.push_str("\n}\n");
     out
 }
@@ -469,12 +534,15 @@ fn ratchet(
 fn run() -> Result<(), String> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (mode, files): (&str, Vec<&String>) = match args.first().map(String::as_str) {
-        Some(m @ ("--self-test" | "--ratchet")) => (m, args.iter().skip(1).collect()),
+        Some(m @ ("--self-test" | "--ratchet" | "--service")) => {
+            (m, args.iter().skip(1).collect())
+        }
         _ => ("", args.iter().collect()),
     };
     let selftest = mode == "--self-test";
-    let usage = "usage: bench_gate [--self-test | --ratchet] <baseline.json> \
-                 [<dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json>]]]]";
+    let usage = "usage: bench_gate [--self-test | --service | --ratchet] <baseline.json> \
+                 [<dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json> \
+                 [<service.json>]]]]]";
     let baseline_path = files.first().ok_or(usage)?;
     let baseline_text = std::fs::read_to_string(baseline_path)
         .map_err(|e| format!("reading {baseline_path}: {e}"))?;
@@ -504,6 +572,28 @@ fn run() -> Result<(), String> {
         return Ok(());
     }
 
+    if mode == "--service" {
+        let floor = baseline
+            .service_floor
+            .ok_or("baseline has no `service` section to gate")?;
+        let service_path = files.get(1).ok_or(usage)?;
+        let service_text = std::fs::read_to_string(service_path)
+            .map_err(|e| format!("reading {service_path}: {e}"))?;
+        let got = parse_service(&service_text)?;
+        let failures = gate_service(floor, got, pct);
+        if failures.is_empty() {
+            println!(
+                "bench_gate OK: service throughput {got:.3} jobs/s within the baseline \
+                 floor {floor:.3}"
+            );
+            return Ok(());
+        }
+        return Err(format!(
+            "perf regression gate failed:\n  {}",
+            failures.join("\n  ")
+        ));
+    }
+
     let current_path = files.get(1).ok_or(usage)?;
     let current_text = std::fs::read_to_string(current_path)
         .map_err(|e| format!("reading {current_path}: {e}"))?;
@@ -529,7 +619,14 @@ fn run() -> Result<(), String> {
             )?),
             None => None,
         };
-        print!("{}", ratchet(&baseline, &current, bucketing, chunking, hier));
+        let service = match files.get(5) {
+            Some(path) => Some(parse_service(
+                &std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?,
+            )?),
+            None => None,
+        };
+        let updated = ratchet(&baseline, &current, bucketing, chunking, hier, service);
+        print!("{updated}");
         return Ok(());
     }
 
@@ -649,7 +746,8 @@ mod tests {
             "bucketing": {"min_speedup": 1.0},
             "chunking": {"min_speedup": 1.0, "largest_bucket_p8_min_speedup": 1.0,
                          "max_regress_pct": 0.5},
-            "hier": {"min_speedup": 1.0, "max_regress_pct": 0.5}
+            "hier": {"min_speedup": 1.0, "max_regress_pct": 0.5},
+            "service": {"min_jobs_per_sec": 1.0}
         }"#;
         let base = parse_baseline(text).unwrap();
         assert_eq!(base.pct, 20.0);
@@ -663,6 +761,7 @@ mod tests {
         let h = base.hier.unwrap();
         assert_eq!(h.min_speedup, 1.0);
         assert_eq!(h.pct, 0.5);
+        assert_eq!(base.service_floor, Some(1.0));
         // A baseline without the optional sections stays valid (those
         // gates are then skipped).
         let text = r#"{
@@ -673,6 +772,7 @@ mod tests {
         assert_eq!(base.bucketing_floor, None);
         assert!(base.chunking.is_none());
         assert!(base.hier.is_none());
+        assert!(base.service_floor.is_none());
     }
 
     #[test]
@@ -785,6 +885,7 @@ mod tests {
                 min_speedup: 1.0,
                 pct: 0.5,
             }),
+            service_floor: Some(100.0),
         };
         // First series measured much faster (ratchets, discounted by the
         // 20% margin), second measured slower (floor must not move), plus
@@ -794,7 +895,14 @@ mod tests {
             series(8, 65536, 1.5),
             series(16, 1 << 20, 3.0),
         ];
-        let text = ratchet(&base, &current, Some(2.5), Some((1.3, Some(1.4))), Some(1.7));
+        let text = ratchet(
+            &base,
+            &current,
+            Some(2.5),
+            Some((1.3, Some(1.4))),
+            Some(1.7),
+            Some(500.0),
+        );
         let new = parse_baseline(&text).expect("ratchet output must be a valid baseline");
         assert_eq!(new.pct, 20.0);
         assert_eq!(new.series.len(), 3, "{text}");
@@ -818,6 +926,8 @@ mod tests {
         let h = new.hier.unwrap();
         assert_eq!(h.min_speedup, 1.7);
         assert_eq!(h.pct, 0.5);
+        // Service throughput is wall-clock: discounted ratchet.
+        assert!((new.service_floor.unwrap() - 400.0).abs() < 1e-9);
         // The ratcheted baseline accepts the run it was ratcheted from.
         assert!(gate(&new.series, &current, new.pct).is_empty());
     }
@@ -833,13 +943,15 @@ mod tests {
                 min_speedup: 1.4,
                 pct: 0.5,
             }),
+            service_floor: Some(80.0),
         };
-        let text = ratchet(&base, &[series(4, 4096, 1.0)], None, None, None);
+        let text = ratchet(&base, &[series(4, 4096, 1.0)], None, None, None, None);
         let new = parse_baseline(&text).unwrap();
         assert_eq!(new.series[0].speedup, 1.5);
         assert_eq!(new.bucketing_floor, Some(1.2));
         assert!(new.chunking.is_none());
         assert_eq!(new.hier.unwrap().min_speedup, 1.4);
+        assert_eq!(new.service_floor, Some(80.0), "kept when unobserved");
     }
 
     #[test]
@@ -857,7 +969,25 @@ mod tests {
                 min_speedup: 1.0,
                 pct: 0.5,
             }),
+            service_floor: Some(1.0),
         };
         self_test(&base, 20.0).unwrap();
+    }
+
+    #[test]
+    fn service_gate_and_artifact_schema() {
+        let text = r#"{
+            "bench": "service", "p": 5, "tenants": 4, "jobs_per_tenant": 6,
+            "elems": 50000, "elapsed_s": 0.12, "jobs_per_sec": 200.0
+        }"#;
+        assert_eq!(parse_service(text).unwrap(), 200.0);
+        // At and above the floor, and within the 20% slack: pass.
+        assert!(gate_service(100.0, 100.0, 20.0).is_empty());
+        assert!(gate_service(100.0, 250.0, 20.0).is_empty());
+        assert!(gate_service(100.0, 81.0, 20.0).is_empty());
+        // Past the slack: fail.
+        let fails = gate_service(100.0, 79.0, 20.0);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("service"));
     }
 }

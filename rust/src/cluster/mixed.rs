@@ -1,7 +1,8 @@
 //! The mixed transport: one OS process per **node**, channels within it,
 //! sockets between leaders.
 //!
-//! A hierarchical schedule ([`crate::topo::compose_two_level`]) is one
+//! A hierarchical schedule ([`crate::topo::compose_two_level`], built
+//! once from a flat inner — see its do-not-re-compose contract) is one
 //! ordinary [`ProcSchedule`] over all `P` ranks, but its traffic has
 //! structure: every cross-node message runs leader ↔ leader, everything
 //! else stays inside a node. [`run_node`] exploits that to execute one

@@ -21,10 +21,12 @@ pub mod mixed;
 pub mod oracle;
 pub mod persistent;
 pub mod reducer;
+pub mod service;
 
 pub use arena::{CounterSnapshot, DataPlaneCounters, Frame};
 pub use persistent::{JobIo, PersistentCluster, PoolJob};
 pub use reducer::{NativeReducer, ReduceError, Reducer};
+pub use service::{CommHandle, ServiceCfg, ServiceCluster, ServiceStats, SubmitError};
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -48,6 +50,10 @@ use crate::sched::ProcSchedule;
 /// asserts it matches the cached row, and warm-path lookups staying
 /// allocation-free (no structural hashing per call) is the point of the
 /// cache — so the name contract is documented rather than hashed away.
+/// This is the **single statement** of the name-collision contract;
+/// every consumer ([`persistent`], [`crate::net::Endpoint`]'s hints, the
+/// [`service`] engines' placement rows) links here rather than restating
+/// it.
 pub(crate) struct SchedCache<V> {
     map: Mutex<HashMap<String, CacheEntry<V>>>,
 }

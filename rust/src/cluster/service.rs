@@ -1,0 +1,1002 @@
+//! The in-process multi-tenant allreduce service: many concurrent
+//! communicators multiplexing jobs over one warm set of engine threads —
+//! the single-process twin of [`crate::net::service`].
+//!
+//! One [`ServiceCluster`] owns P engine threads (one per rank), each with
+//! warm per-dtype data planes over per-dtype wire-block pools shared
+//! across the whole service. Tenants mint [`CommHandle`]s — each bound to
+//! a communicator id owning a disjoint region of the step-tag space
+//! ([`crate::net::wire::comm_tag`]) — and submit whole-communicator jobs
+//! (all P ranks' inputs at once) through admission control
+//! ([`ServiceCfg::max_jobs`] / [`ServiceCfg::max_bytes`]):
+//! [`CommHandle::try_submit`] fails fast with [`SubmitError::Busy`],
+//! [`CommHandle::submit`] blocks up to a deadline and fails with
+//! [`SubmitError::Deadline`]. Results stream back per tenant through
+//! [`CommHandle::collect`], in submission order, [`JobIo`]-style.
+//!
+//! [`JobIo`]: crate::cluster::JobIo
+//!
+//! ## Why sequential engines cannot deadlock
+//!
+//! Every submission pushes one job to **all** P engine queues under a
+//! single lock, so every engine sees the identical total order — an
+//! agreed cross-rank serialization. Each engine executes its queue
+//! sequentially; because the order is shared, whenever rank `a` is
+//! running job `j`, every peer is running `j` or an earlier/later job,
+//! never a *conflicting* order. A fast engine running ahead still
+//! overlaps different jobs' wire traffic: frames for a later job carry
+//! later step tags and stash at the receiver until that job runs.
+//!
+//! ## Tag-space ownership and impostor containment
+//!
+//! A communicator's jobs consume monotonically increasing steps of its
+//! own tag region; regions never overlap, so one tenant's frames can
+//! never be confused with another's. A frame claiming communicator `c`
+//! at a step **below** `c`'s current window is either debris from a job
+//! that already failed on this rank (silently dropped — the engine
+//! records a per-communicator quarantine floor when a job fails) or a
+//! cross-tenant impostor / duplicate, which surfaces as a clean
+//! per-tenant [`ClusterError::Protocol`]-shaped error on `collect` —
+//! neighbors' regions are untouched, so their jobs keep completing.
+//! A forged frame *above* the window is indistinguishable from a fast
+//! peer's legitimate run-ahead traffic until its window arrives; it
+//! quarantines in the stash until then (same containment property as
+//! [`crate::net`]'s transport stash).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::arena::{self, BlockPool, DataPlane, Frame, FrameQueue, NativeKernel, Payload};
+use super::{ClusterError, Element, ReduceOp, SchedCache};
+use crate::algo::AlgorithmKind;
+use crate::coordinator::ServiceSchedules;
+use crate::cost::NetParams;
+use crate::net::wire;
+use crate::sched::stats::{chunk_elems_for, wire_reduce_placement};
+use crate::sched::ProcSchedule;
+
+/// Why a submission was not accepted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission control is at capacity ([`ServiceCfg::max_jobs`] jobs or
+    /// [`ServiceCfg::max_bytes`] bytes in flight). Retry, or use the
+    /// blocking [`CommHandle::submit`] with a deadline.
+    Busy,
+    /// The blocking submit's deadline expired before capacity freed up.
+    Deadline,
+    /// The service has been shut down; no further jobs are accepted.
+    Closed,
+    /// The job itself is malformed (wrong rank count, ragged inputs, or
+    /// an unbuildable schedule). Carries the reason.
+    Invalid(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => write!(f, "service busy: admission control at capacity"),
+            SubmitError::Deadline => {
+                write!(f, "submit deadline expired while waiting for capacity")
+            }
+            SubmitError::Closed => write!(f, "service is shut down"),
+            SubmitError::Invalid(s) => write!(f, "invalid job: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Service configuration. `..ServiceCfg::new(p)` gives the defaults.
+#[derive(Clone, Debug)]
+pub struct ServiceCfg {
+    /// Number of ranks (engine threads).
+    pub p: usize,
+    /// Admission cap: jobs in flight (submitted, not yet fully executed).
+    pub max_jobs: usize,
+    /// Admission cap: payload bytes in flight, summed over all ranks of
+    /// every in-flight job. A single job larger than the cap is still
+    /// admitted when it would run alone (`jobs == 0`), so an oversized
+    /// tenant degrades to sequential service instead of deadlocking.
+    pub max_bytes: usize,
+    /// How long an engine waits on one receive before declaring the
+    /// message lost (surfaced as a per-tenant error on `collect`).
+    pub recv_timeout: Duration,
+    /// Chunked-streaming budget, bytes per chunk (`None` = monolithic),
+    /// applied to every job — see [`crate::cluster::ExecOptions::chunk_bytes`].
+    pub chunk_bytes: Option<usize>,
+    /// Cost-model parameters for per-tenant schedule resolution
+    /// ([`ServiceSchedules`]).
+    pub params: NetParams,
+}
+
+impl ServiceCfg {
+    /// Defaults: 8 jobs / 64 MiB in flight, 10 s receive timeout,
+    /// monolithic messages, paper Table 2 network parameters.
+    pub fn new(p: usize) -> ServiceCfg {
+        ServiceCfg {
+            p,
+            max_jobs: 8,
+            max_bytes: 64 << 20,
+            recv_timeout: Duration::from_secs(10),
+            chunk_bytes: None,
+            params: NetParams::default(),
+        }
+    }
+}
+
+/// Monotonic service counters, readable while the service runs.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    /// Jobs accepted by admission control.
+    pub submitted: AtomicU64,
+    /// `try_submit` calls rejected with [`SubmitError::Busy`].
+    pub busy_rejections: AtomicU64,
+    /// Blocking submits that expired with [`SubmitError::Deadline`].
+    pub deadline_rejections: AtomicU64,
+    /// Jobs fully executed with every rank succeeding.
+    pub completed: AtomicU64,
+    /// Jobs on which at least one rank reported an error.
+    pub failed: AtomicU64,
+}
+
+impl ServiceStats {
+    fn count(a: &AtomicU64) -> u64 {
+        a.load(Ordering::Relaxed)
+    }
+
+    /// `(submitted, busy_rejections, deadline_rejections, completed, failed)`.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            Self::count(&self.submitted),
+            Self::count(&self.busy_rejections),
+            Self::count(&self.deadline_rejections),
+            Self::count(&self.completed),
+            Self::count(&self.failed),
+        )
+    }
+}
+
+/// Admission state: jobs and bytes currently in flight.
+struct AdmState {
+    jobs: usize,
+    bytes: usize,
+    closed: bool,
+}
+
+/// Bounded in-flight jobs + bytes, with a condvar for blocking admits.
+/// Shared with [`crate::net::service`], whose per-rank admission applies
+/// the same policy to one rank's submission stream.
+pub(crate) struct Admission {
+    max_jobs: usize,
+    max_bytes: usize,
+    st: Mutex<AdmState>,
+    cv: Condvar,
+}
+
+impl Admission {
+    pub(crate) fn new(max_jobs: usize, max_bytes: usize) -> Admission {
+        Admission {
+            max_jobs: max_jobs.max(1),
+            max_bytes,
+            st: Mutex::new(AdmState { jobs: 0, bytes: 0, closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn fits(&self, st: &AdmState, bytes: usize) -> bool {
+        // An oversized job is admitted when the service is otherwise
+        // empty, so `bytes > max_bytes` degrades to sequential service
+        // rather than an unservable request.
+        st.jobs < self.max_jobs && (st.bytes + bytes <= self.max_bytes || st.jobs == 0)
+    }
+
+    pub(crate) fn try_admit(&self, bytes: usize) -> Result<(), SubmitError> {
+        let mut st = self.st.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        if !self.fits(&st, bytes) {
+            return Err(SubmitError::Busy);
+        }
+        st.jobs += 1;
+        st.bytes += bytes;
+        Ok(())
+    }
+
+    pub(crate) fn admit(&self, bytes: usize, deadline: Duration) -> Result<(), SubmitError> {
+        let start = Instant::now();
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SubmitError::Closed);
+            }
+            if self.fits(&st, bytes) {
+                st.jobs += 1;
+                st.bytes += bytes;
+                return Ok(());
+            }
+            let waited = start.elapsed();
+            if waited >= deadline {
+                return Err(SubmitError::Deadline);
+            }
+            st = self.cv.wait_timeout(st, deadline - waited).unwrap().0;
+        }
+    }
+
+    pub(crate) fn release(&self, bytes: usize) {
+        let mut st = self.st.lock().unwrap();
+        st.jobs -= 1;
+        st.bytes -= bytes;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn close(&self) {
+        self.st.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Per-job completion countdown: the last rank to finish releases the
+/// job's admission slot and settles the completed/failed counter.
+struct JobDone {
+    remaining: AtomicUsize,
+    bytes: usize,
+    any_err: AtomicBool,
+    admission: Arc<Admission>,
+    stats: Arc<ServiceStats>,
+}
+
+impl JobDone {
+    fn rank_done(&self, ok: bool) {
+        if !ok {
+            self.any_err.store(true, Ordering::Relaxed);
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let ctr = if self.any_err.load(Ordering::Relaxed) {
+                &self.stats.failed
+            } else {
+                &self.stats.completed
+            };
+            ctr.fetch_add(1, Ordering::Relaxed);
+            self.admission.release(self.bytes);
+        }
+    }
+}
+
+/// One wire frame between engines, tagged with a communicator-partitioned
+/// step ([`wire::comm_tag`]).
+struct ServiceMsg<T: Element> {
+    step: usize,
+    from: usize,
+    frame: Frame,
+    payload: Payload<T>,
+}
+
+/// One rank's share of a submitted job (internal; public only because it
+/// crosses the sealed [`ServiceElement`] trait boundary).
+#[doc(hidden)]
+pub struct TypedJob<T: Element> {
+    comm: u32,
+    schedule: Arc<ProcSchedule>,
+    op: ReduceOp,
+    input: Vec<T>,
+    reply: Sender<(usize, Result<Vec<T>, String>)>,
+    done: Arc<JobDone>,
+}
+
+/// A job of any supported dtype, as queued to an engine (internal).
+#[doc(hidden)]
+pub enum AnyJob {
+    /// An `f32` job.
+    F32(TypedJob<f32>),
+    /// An `f64` job.
+    F64(TypedJob<f64>),
+    /// An `i32` job.
+    I32(TypedJob<i32>),
+    /// An `i64` job.
+    I64(TypedJob<i64>),
+}
+
+/// One dtype's send side: per-rank frame senders plus the shared warm
+/// wire-block pool (internal).
+#[doc(hidden)]
+pub struct LaneIo<T: Element> {
+    txs: Vec<Sender<ServiceMsg<T>>>,
+    pool: Arc<BlockPool<T>>,
+}
+
+/// The four dtype lanes' send sides (internal).
+#[doc(hidden)]
+pub struct LaneIos {
+    f32: LaneIo<f32>,
+    f64: LaneIo<f64>,
+    i32: LaneIo<i32>,
+    i64: LaneIo<i64>,
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+    impl Sealed for i32 {}
+    impl Sealed for i64 {}
+}
+
+/// Element types the service runs: the four native [`Element`] dtypes,
+/// each with its own warm engine lane. Sealed — the engine has exactly
+/// one lane per dtype.
+pub trait ServiceElement: Element + sealed::Sealed {
+    /// Select this dtype's send side (internal).
+    #[doc(hidden)]
+    fn lane_io(io: &LaneIos) -> &LaneIo<Self>;
+
+    /// Wrap one rank's job for the engine queue (internal).
+    #[doc(hidden)]
+    fn wrap_job(job: TypedJob<Self>) -> AnyJob;
+}
+
+macro_rules! impl_service_element {
+    ($t:ty, $lane:ident, $variant:ident) => {
+        impl ServiceElement for $t {
+            fn lane_io(io: &LaneIos) -> &LaneIo<Self> {
+                &io.$lane
+            }
+
+            fn wrap_job(job: TypedJob<Self>) -> AnyJob {
+                AnyJob::$variant(job)
+            }
+        }
+    };
+}
+impl_service_element!(f32, f32, F32);
+impl_service_element!(f64, f64, F64);
+impl_service_element!(i32, i32, I32);
+impl_service_element!(i64, i64, I64);
+
+/// One engine's dtype lane: warm data plane, frame inbox, out-of-order
+/// stash, and the per-communicator tag-space cursors.
+struct EngineLane<T: Element> {
+    plane: DataPlane<T>,
+    rx: Receiver<ServiceMsg<T>>,
+    txs: Vec<Sender<ServiceMsg<T>>>,
+    pending: HashMap<(usize, usize), FrameQueue<T>>,
+    /// Steps consumed so far per communicator — the next job's base tag
+    /// is `comm_tag(comm, next_step[comm])`. Identical on every engine
+    /// because all engines execute the same job order.
+    next_step: HashMap<u32, usize>,
+    /// Per-communicator quarantine floor (a full tag): frames below it
+    /// are debris from a job that failed on this rank and are dropped
+    /// silently; stale frames at or above it are impostors/duplicates.
+    debris_floor: HashMap<u32, usize>,
+}
+
+impl<T: Element> EngineLane<T> {
+    fn new(
+        pool: Arc<BlockPool<T>>,
+        rx: Receiver<ServiceMsg<T>>,
+        txs: Vec<Sender<ServiceMsg<T>>>,
+    ) -> EngineLane<T> {
+        EngineLane {
+            plane: DataPlane::new(pool),
+            rx,
+            txs,
+            pending: HashMap::new(),
+            next_step: HashMap::new(),
+            debris_floor: HashMap::new(),
+        }
+    }
+
+    /// Execute one job on this rank, replying with the result (or a
+    /// per-tenant error) and settling the admission countdown. The
+    /// communicator's step cursor advances whether or not the run
+    /// succeeds — tag-space consistency across ranks outranks any one
+    /// job's outcome.
+    fn run(
+        &mut self,
+        rank: usize,
+        job: TypedJob<T>,
+        place: &SchedCache<Vec<Vec<bool>>>,
+        recv_timeout: Duration,
+        chunk_bytes: Option<usize>,
+    ) {
+        let comm = job.comm;
+        let s = &job.schedule;
+        let cursor = self.next_step.entry(comm).or_insert(0);
+        let base = wire::comm_tag(comm, *cursor);
+        *cursor += s.steps.len();
+        let end = wire::comm_tag(comm, *cursor);
+        let floor = self.debris_floor.get(&comm).copied().unwrap_or(0);
+
+        // Quarantine sweep: purge this communicator's failed-job debris
+        // from the stash, and flag anything stale that is *not* debris —
+        // a frame some peer (or impostor) sent into an already-consumed
+        // slice of the region. Detecting it here, before the run, keeps
+        // the check deterministic regardless of which job this engine
+        // was executing when the frame arrived.
+        let mut impostor = None;
+        self.pending.retain(|&(tag, from), _| {
+            if wire::tag_comm(tag) != comm || tag >= base {
+                return true;
+            }
+            if tag >= floor && impostor.is_none() {
+                impostor = Some((tag, from));
+            }
+            false
+        });
+        if let Some((tag, from)) = impostor {
+            self.debris_floor.insert(comm, end);
+            let _ = job.reply.send((
+                rank,
+                Err(format!(
+                    "protocol violation at rank {rank}: frame from {from} tagged {tag:#x} \
+                     predates communicator {comm}'s window ({base:#x}..{end:#x}) — \
+                     cross-tenant impostor or duplicate"
+                )),
+            ));
+            job.done.rank_done(false);
+            return;
+        }
+
+        let rows = place.get_or_compute(s, || wire_reduce_placement(s));
+        let mut out = vec![T::default(); job.input.len()];
+        let mut tr = LaneTransport {
+            rank,
+            base,
+            debris_floor: floor,
+            rx: &self.rx,
+            txs: &self.txs,
+            pending: &mut self.pending,
+            timeout: recv_timeout,
+        };
+        let res = self.plane.run_schedule(
+            s,
+            rank,
+            &job.input,
+            base,
+            rows[rank].as_slice(),
+            None,
+            chunk_bytes.map(|b| chunk_elems_for(b, std::mem::size_of::<T>())),
+            &mut tr,
+            &NativeKernel(job.op),
+            &mut out,
+        );
+        let ok = res.is_ok();
+        if !ok {
+            // Frames of the failed window may still arrive (or sit in
+            // the stash); everything below `end` in this region is now
+            // debris to drop, not an error to raise.
+            self.debris_floor.insert(comm, end);
+        }
+        let _ = job.reply.send((rank, res.map(|()| out).map_err(|e| e.to_string())));
+        job.done.rank_done(ok);
+    }
+}
+
+/// The engine-side [`arena::Transport`]: comm-region-scoped ordering over
+/// the lane's frame inbox. Mirrors `crate::net::transport`'s rules —
+/// stale frames inside the *current* region either drop (below the
+/// quarantine floor) or error (impostor/duplicate); frames of any other
+/// region always stash, however old, because another communicator's
+/// window position is unknowable here.
+struct LaneTransport<'a, T: Element> {
+    rank: usize,
+    base: usize,
+    debris_floor: usize,
+    rx: &'a Receiver<ServiceMsg<T>>,
+    txs: &'a [Sender<ServiceMsg<T>>],
+    pending: &'a mut HashMap<(usize, usize), FrameQueue<T>>,
+    timeout: Duration,
+}
+
+impl<T: Element> arena::Transport<T> for LaneTransport<'_, T> {
+    fn send(&mut self, to: usize, step: usize, frame: Frame, payload: Payload<T>) {
+        // A send only fails if the peer engine exited; the failure then
+        // surfaces on whichever rank times out waiting for it.
+        let _ = self.txs[to].send(ServiceMsg { step, from: self.rank, frame, payload });
+    }
+
+    fn recv(&mut self, step: usize, from: usize) -> Result<(Frame, Payload<T>), ClusterError> {
+        if let Some(q) = self.pending.get_mut(&(step, from)) {
+            if let Some(x) = q.pop_front() {
+                if q.is_empty() {
+                    self.pending.remove(&(step, from));
+                }
+                return Ok(x);
+            }
+        }
+        let region = wire::tag_comm(self.base);
+        loop {
+            let msg = self.rx.recv_timeout(self.timeout).map_err(|_| {
+                ClusterError::RecvTimeout { proc: self.rank, step, from }
+            })?;
+            if msg.step == step && msg.from == from {
+                return Ok((msg.frame, msg.payload));
+            }
+            if wire::tag_comm(msg.step) == region && msg.step < step {
+                if msg.step < self.debris_floor {
+                    continue; // debris of an earlier failed job
+                }
+                return Err(ClusterError::Protocol {
+                    proc: self.rank,
+                    detail: format!(
+                        "stale frame (tag {:#x}, from {}) inside communicator {region}'s \
+                         region while awaiting (tag {step:#x}, from {from}) — \
+                         cross-tenant impostor or duplicate",
+                        msg.step, msg.from
+                    ),
+                });
+            }
+            self.pending
+                .entry((msg.step, msg.from))
+                .or_default()
+                .push_back((msg.frame, msg.payload));
+        }
+    }
+}
+
+/// One rank's engine: a job queue executed strictly in submission order,
+/// over four warm dtype lanes.
+struct Engine {
+    rank: usize,
+    jobs: Receiver<AnyJob>,
+    f32: EngineLane<f32>,
+    f64: EngineLane<f64>,
+    i32: EngineLane<i32>,
+    i64: EngineLane<i64>,
+    place: Arc<SchedCache<Vec<Vec<bool>>>>,
+    recv_timeout: Duration,
+    chunk_bytes: Option<usize>,
+}
+
+impl Engine {
+    fn run(mut self) {
+        while let Ok(job) = self.jobs.recv() {
+            match job {
+                AnyJob::F32(j) => {
+                    self.f32.run(self.rank, j, &self.place, self.recv_timeout, self.chunk_bytes)
+                }
+                AnyJob::F64(j) => {
+                    self.f64.run(self.rank, j, &self.place, self.recv_timeout, self.chunk_bytes)
+                }
+                AnyJob::I32(j) => {
+                    self.i32.run(self.rank, j, &self.place, self.recv_timeout, self.chunk_bytes)
+                }
+                AnyJob::I64(j) => {
+                    self.i64.run(self.rank, j, &self.place, self.recv_timeout, self.chunk_bytes)
+                }
+            }
+        }
+    }
+}
+
+/// Shared service state (behind `Arc`, held by the cluster and every
+/// [`CommHandle`]).
+struct Shared {
+    p: usize,
+    recv_timeout: Duration,
+    admission: Arc<Admission>,
+    stats: Arc<ServiceStats>,
+    scheds: Arc<ServiceSchedules>,
+    /// Per-rank engine queues; every submission pushes to all of them
+    /// under this one lock, which is what fixes the global job order.
+    /// `None` after shutdown.
+    queues: Mutex<Option<Vec<Sender<AnyJob>>>>,
+    next_comm: AtomicU32,
+    io: LaneIos,
+}
+
+/// The in-process multi-tenant allreduce service (see the module docs).
+pub struct ServiceCluster {
+    shared: Arc<Shared>,
+    engines: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServiceCluster {
+    /// Start P warm engines under `cfg`.
+    pub fn start(cfg: ServiceCfg) -> ServiceCluster {
+        let p = cfg.p;
+        assert!(p >= 1, "service needs at least one rank");
+        let admission = Arc::new(Admission::new(cfg.max_jobs, cfg.max_bytes));
+        let stats = Arc::new(ServiceStats::default());
+        let scheds = Arc::new(ServiceSchedules::new(cfg.params));
+        let place = Arc::new(SchedCache::new());
+
+        type Channels<T> = (Vec<Sender<ServiceMsg<T>>>, Vec<Receiver<ServiceMsg<T>>>);
+        fn lane_channels<T: Element>(p: usize) -> Channels<T> {
+            let (mut txs, mut rxs) = (Vec::with_capacity(p), Vec::with_capacity(p));
+            for _ in 0..p {
+                let (tx, rx) = mpsc::channel();
+                txs.push(tx);
+                rxs.push(rx);
+            }
+            (txs, rxs)
+        }
+        let (f32_txs, f32_rxs) = lane_channels::<f32>(p);
+        let (f64_txs, f64_rxs) = lane_channels::<f64>(p);
+        let (i32_txs, i32_rxs) = lane_channels::<i32>(p);
+        let (i64_txs, i64_rxs) = lane_channels::<i64>(p);
+        let f32_pool = Arc::new(BlockPool::<f32>::new());
+        let f64_pool = Arc::new(BlockPool::<f64>::new());
+        let i32_pool = Arc::new(BlockPool::<i32>::new());
+        let i64_pool = Arc::new(BlockPool::<i64>::new());
+
+        let mut queues = Vec::with_capacity(p);
+        let mut engines = Vec::with_capacity(p);
+        let mut lane_rxs = f32_rxs
+            .into_iter()
+            .zip(f64_rxs)
+            .zip(i32_rxs.into_iter().zip(i64_rxs));
+        for rank in 0..p {
+            let ((rx32, rx64), (rxi32, rxi64)) = lane_rxs.next().expect("one inbox per rank");
+            let (jtx, jrx) = mpsc::channel();
+            queues.push(jtx);
+            let engine = Engine {
+                rank,
+                jobs: jrx,
+                f32: EngineLane::new(f32_pool.clone(), rx32, f32_txs.clone()),
+                f64: EngineLane::new(f64_pool.clone(), rx64, f64_txs.clone()),
+                i32: EngineLane::new(i32_pool.clone(), rxi32, i32_txs.clone()),
+                i64: EngineLane::new(i64_pool.clone(), rxi64, i64_txs.clone()),
+                place: place.clone(),
+                recv_timeout: cfg.recv_timeout,
+                chunk_bytes: cfg.chunk_bytes,
+            };
+            engines.push(
+                std::thread::Builder::new()
+                    .name(format!("svc-engine-{rank}"))
+                    .spawn(move || engine.run())
+                    .expect("spawn service engine"),
+            );
+        }
+
+        ServiceCluster {
+            shared: Arc::new(Shared {
+                p,
+                recv_timeout: cfg.recv_timeout,
+                admission,
+                stats,
+                scheds,
+                queues: Mutex::new(Some(queues)),
+                next_comm: AtomicU32::new(1),
+                io: LaneIos {
+                    f32: LaneIo { txs: f32_txs, pool: f32_pool },
+                    f64: LaneIo { txs: f64_txs, pool: f64_pool },
+                    i32: LaneIo { txs: i32_txs, pool: i32_pool },
+                    i64: LaneIo { txs: i64_txs, pool: i64_pool },
+                },
+            }),
+            engines,
+        }
+    }
+
+    /// Number of ranks.
+    pub fn p(&self) -> usize {
+        self.shared.p
+    }
+
+    /// The service counters.
+    pub fn stats(&self) -> &ServiceStats {
+        &self.shared.stats
+    }
+
+    /// Mint a communicator of dtype `T`: the next id (starting at 1 —
+    /// id 0 is the identity region reserved for non-service endpoints),
+    /// owning its own disjoint slice of the step-tag space. Fails once
+    /// the id space ([`wire::MAX_COMM`]) is exhausted.
+    pub fn comm<T: ServiceElement>(&self) -> Result<CommHandle<T>, String> {
+        let id = self.shared.next_comm.fetch_add(1, Ordering::Relaxed);
+        if id > wire::MAX_COMM {
+            return Err(format!("communicator ids exhausted (max {})", wire::MAX_COMM));
+        }
+        Ok(CommHandle {
+            svc: self.shared.clone(),
+            comm: id,
+            pending: Mutex::new(VecDeque::new()),
+            _dtype: std::marker::PhantomData,
+        })
+    }
+
+    /// Inject a raw frame into rank `to`'s dtype-`T` lane, as if a peer
+    /// had sent it: the chaos/test hook for cross-tenant splices. A tag
+    /// inside a foreign communicator's already-consumed region surfaces
+    /// on that tenant's next job as a clean per-tenant error.
+    pub fn inject_frame<T: ServiceElement>(
+        &self,
+        to: usize,
+        step_tag: usize,
+        from: usize,
+        data: &[T],
+    ) {
+        let io = T::lane_io(&self.shared.io);
+        let payload =
+            arena::payload_from_wire(&io.pool, &[data.len()], |d| d.copy_from_slice(data));
+        let _ = io.txs[to].send(ServiceMsg {
+            step: step_tag,
+            from,
+            frame: Frame::WHOLE,
+            payload,
+        });
+    }
+
+    /// Stop accepting jobs, drain the queues, and join the engines.
+    /// In-flight jobs complete; subsequent submits fail [`SubmitError::Closed`].
+    pub fn shutdown(&mut self) {
+        self.shared.admission.close();
+        drop(self.shared.queues.lock().unwrap().take());
+        for h in self.engines.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServiceCluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for ServiceCluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ServiceCluster(p={}, stats={:?})", self.shared.p, self.shared.stats.snapshot())
+    }
+}
+
+/// A tenant's handle on one communicator: a dtype-bound, disjoint slice
+/// of the service's step-tag space plus a FIFO of in-flight jobs.
+///
+/// Submission is whole-communicator (all P ranks' inputs in one call —
+/// the SPMD driver collapsed into the tenant thread), and collection
+/// streams completed jobs back in submission order. Handles are
+/// independent: each may live on its own thread, and dropping one
+/// abandons its uncollected results without disturbing the service.
+pub struct CommHandle<T: ServiceElement> {
+    svc: Arc<Shared>,
+    comm: u32,
+    pending: Mutex<VecDeque<Receiver<(usize, Result<Vec<T>, String>)>>>,
+    _dtype: std::marker::PhantomData<T>,
+}
+
+impl<T: ServiceElement> CommHandle<T> {
+    /// This communicator's id (the high 16 bits of its frames' step tags).
+    pub fn id(&self) -> u32 {
+        self.comm
+    }
+
+    /// Jobs submitted but not yet collected.
+    pub fn in_flight(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    fn validate(&self, inputs: &[Vec<T>]) -> Result<usize, SubmitError> {
+        let p = self.svc.p;
+        if inputs.len() != p {
+            return Err(SubmitError::Invalid(format!("{} inputs for {p} ranks", inputs.len())));
+        }
+        let n = inputs[0].len();
+        if inputs.iter().any(|v| v.len() != n) {
+            return Err(SubmitError::Invalid("ragged input vectors".into()));
+        }
+        Ok(p * n * std::mem::size_of::<T>())
+    }
+
+    /// Non-blocking submit: admit-or-[`SubmitError::Busy`]. On success
+    /// the job is queued on every engine and will be returned by a later
+    /// [`CommHandle::collect`].
+    pub fn try_submit(
+        &self,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<(), SubmitError> {
+        let bytes = self.validate(inputs)?;
+        self.svc.admission.try_admit(bytes).map_err(|e| {
+            if e == SubmitError::Busy {
+                self.svc.stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+            }
+            e
+        })?;
+        self.dispatch(inputs, op, kind, bytes)
+    }
+
+    /// Blocking submit: wait up to `deadline` for admission, then queue.
+    /// Fails [`SubmitError::Deadline`] if capacity never freed up.
+    pub fn submit(
+        &self,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        deadline: Duration,
+    ) -> Result<(), SubmitError> {
+        let bytes = self.validate(inputs)?;
+        self.svc.admission.admit(bytes, deadline).map_err(|e| {
+            if e == SubmitError::Deadline {
+                self.svc.stats.deadline_rejections.fetch_add(1, Ordering::Relaxed);
+            }
+            e
+        })?;
+        self.dispatch(inputs, op, kind, bytes)
+    }
+
+    /// Queue an admitted job on every engine under the global submit
+    /// lock (which fixes the cross-rank total order).
+    fn dispatch(
+        &self,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        bytes: usize,
+    ) -> Result<(), SubmitError> {
+        let m_bytes = inputs[0].len() * std::mem::size_of::<T>();
+        let schedule = match self.svc.scheds.get(kind, self.svc.p, m_bytes) {
+            Ok(s) => s,
+            Err(e) => {
+                self.svc.admission.release(bytes);
+                return Err(SubmitError::Invalid(e));
+            }
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let done = Arc::new(JobDone {
+            remaining: AtomicUsize::new(self.svc.p),
+            bytes,
+            any_err: AtomicBool::new(false),
+            admission: self.svc.admission.clone(),
+            stats: self.svc.stats.clone(),
+        });
+        {
+            let guard = self.svc.queues.lock().unwrap();
+            let Some(queues) = guard.as_ref() else {
+                self.svc.admission.release(bytes);
+                return Err(SubmitError::Closed);
+            };
+            for (rank, q) in queues.iter().enumerate() {
+                let job = TypedJob {
+                    comm: self.comm,
+                    schedule: schedule.clone(),
+                    op,
+                    input: inputs[rank].clone(),
+                    reply: reply_tx.clone(),
+                    done: done.clone(),
+                };
+                let _ = q.send(T::wrap_job(job));
+            }
+        }
+        self.svc.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.pending.lock().unwrap().push_back(reply_rx);
+        Ok(())
+    }
+
+    /// Block for the oldest uncollected job and return its per-rank
+    /// results (`out[rank]`, identical contents across ranks — the
+    /// allreduce contract). Any rank's failure fails the whole job with
+    /// a per-rank error report; later jobs on this and other
+    /// communicators are unaffected.
+    ///
+    /// Each rank's reply is awaited for at most 8× the service's receive
+    /// timeout, bounding `collect` even if an engine wedges.
+    pub fn collect(&self) -> Result<Vec<Vec<T>>, String> {
+        let rx = self
+            .pending
+            .lock()
+            .unwrap()
+            .pop_front()
+            .ok_or_else(|| "no job in flight on this communicator".to_string())?;
+        let p = self.svc.p;
+        let wait = self.svc.recv_timeout.saturating_mul(8);
+        let mut out: Vec<Option<Vec<T>>> = (0..p).map(|_| None).collect();
+        let mut errs: Vec<(usize, String)> = Vec::new();
+        for _ in 0..p {
+            match rx.recv_timeout(wait) {
+                Ok((rank, Ok(v))) => out[rank] = Some(v),
+                Ok((rank, Err(e))) => errs.push((rank, e)),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(format!(
+                        "collect timed out after {wait:?} waiting for rank replies"
+                    ));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err("engines exited before the job completed".to_string());
+                }
+            }
+        }
+        if !errs.is_empty() {
+            errs.sort_by_key(|&(r, _)| r);
+            let msgs: Vec<String> = errs.iter().map(|(r, e)| format!("rank {r}: {e}")).collect();
+            return Err(msgs.join("; "));
+        }
+        Ok(out
+            .into_iter()
+            .map(|v| v.expect("every rank replied exactly once"))
+            .collect())
+    }
+}
+
+impl<T: ServiceElement> std::fmt::Debug for CommHandle<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CommHandle(comm={}, in_flight={})", self.comm, self.in_flight())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::reference_allreduce;
+    use crate::util::Rng;
+
+    fn inputs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn one_tenant_matches_reference() {
+        let svc = ServiceCluster::start(ServiceCfg::new(4));
+        let comm = svc.comm::<f32>().unwrap();
+        let xs = inputs(4, 37, 0xA11);
+        comm.try_submit(&xs, ReduceOp::Sum, AlgorithmKind::Ring).unwrap();
+        let got = comm.collect().unwrap();
+        let want = reference_allreduce(&xs, ReduceOp::Sum);
+        for out in &got {
+            for (g, w) in out.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-5 * (1.0 + w.abs()));
+            }
+        }
+        assert_eq!(svc.stats().snapshot().0, 1);
+    }
+
+    #[test]
+    fn admission_rejects_when_full() {
+        let mut cfg = ServiceCfg::new(3);
+        cfg.max_jobs = 1;
+        let svc = ServiceCluster::start(cfg);
+        let comm = svc.comm::<f32>().unwrap();
+        // Many quick submits: at least one must hit Busy with max_jobs=1,
+        // and every admitted job must still collect correctly.
+        let xs = inputs(3, 64, 0xB0B);
+        let mut admitted = 0usize;
+        let mut busy = 0usize;
+        for _ in 0..64 {
+            match comm.try_submit(&xs, ReduceOp::Sum, AlgorithmKind::Ring) {
+                Ok(()) => admitted += 1,
+                Err(SubmitError::Busy) => busy += 1,
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+        assert!(admitted >= 1);
+        for _ in 0..admitted {
+            comm.collect().unwrap();
+        }
+        assert_eq!(svc.stats().snapshot().1 as usize, busy);
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        let svc = ServiceCluster::start(ServiceCfg::new(3));
+        let comm = svc.comm::<f32>().unwrap();
+        let ragged = vec![vec![1.0f32; 4], vec![1.0; 4], vec![1.0; 5]];
+        assert!(matches!(
+            comm.try_submit(&ragged, ReduceOp::Sum, AlgorithmKind::Ring),
+            Err(SubmitError::Invalid(_))
+        ));
+        assert!(matches!(
+            comm.try_submit(&inputs(2, 4, 1), ReduceOp::Sum, AlgorithmKind::Ring),
+            Err(SubmitError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn shutdown_closes_submission() {
+        let mut svc = ServiceCluster::start(ServiceCfg::new(2));
+        let comm = svc.comm::<f32>().unwrap();
+        svc.shutdown();
+        assert_eq!(
+            comm.try_submit(&inputs(2, 8, 2), ReduceOp::Sum, AlgorithmKind::Ring),
+            Err(SubmitError::Closed)
+        );
+    }
+}

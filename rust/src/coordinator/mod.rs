@@ -110,7 +110,8 @@ pub struct HierParams {
 }
 
 /// Node-aware algorithm selection: build the two-level composition
-/// ([`crate::topo::compose_two_level`]) for each candidate inter-node
+/// ([`crate::topo::compose_two_level`]; each candidate's inner schedule
+/// is flat — see its do-not-re-compose contract) for each inter-node
 /// kind, price each under the two-level DES
 /// ([`crate::des::simulate_topo`]), and return the cheapest verified
 /// schedule with its predicted makespan in seconds. The candidate set
@@ -816,6 +817,86 @@ impl Communicator {
 /// bytes, so keep segments ≥ 64 KiB and cap the depth at 4.
 pub(crate) fn auto_segments(m_bytes: usize) -> u32 {
     (m_bytes / (64 << 10)).clamp(1, 4) as u32
+}
+
+/// Thread-safe verified-schedule cache for the multi-tenant service
+/// layer, keyed by `(kind, P, message size)`.
+///
+/// The service engines ([`crate::cluster::service`], [`crate::net::service`])
+/// resolve a schedule per submitted job, concurrently from several
+/// tenants; this cache makes that lookup a lock-and-clone after each
+/// distinct `(kind, P, size)` has been built and verified once. The size
+/// is part of the key because size-dependent resolution
+/// ([`AlgorithmKind::GeneralizedAuto`]'s optimal `r`,
+/// [`AlgorithmKind::OpenMpi`]'s threshold switch) can map one requested
+/// kind to different schedules at different sizes.
+///
+/// Every cached schedule has passed [`crate::sched::verify::verify`] —
+/// the verified-schedule contract: nothing reaches a data plane without
+/// the symbolic proof.
+#[derive(Debug)]
+pub struct ServiceSchedules {
+    params: NetParams,
+    openmpi_threshold: usize,
+    inner: Mutex<HashMap<(String, usize, usize), Arc<ProcSchedule>>>,
+}
+
+impl ServiceSchedules {
+    /// A cache resolving under `params` (use measured values when you
+    /// have them — every rank must pass identical parameters, or ranks
+    /// resolve different schedules and the mesh deadlocks).
+    pub fn new(params: NetParams) -> ServiceSchedules {
+        ServiceSchedules {
+            params,
+            openmpi_threshold: 10 * 1024,
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The verified schedule for `kind` over `p` ranks at `m_bytes`,
+    /// built and verified on first use and cloned from the cache after.
+    /// The build runs outside the lock (a slow first-time build never
+    /// blocks other tenants' hits); concurrent misses may build twice
+    /// and last-insert wins — both values are identical by construction.
+    pub fn get(
+        &self,
+        kind: AlgorithmKind,
+        p: usize,
+        m_bytes: usize,
+    ) -> Result<Arc<ProcSchedule>, String> {
+        let key = (format!("{kind:?}"), p, m_bytes);
+        if let Some(s) = self.inner.lock().unwrap().get(&key) {
+            return Ok(s.clone());
+        }
+        let resolved = match kind {
+            AlgorithmKind::GeneralizedAuto => AlgorithmKind::Generalized {
+                r: optimal_r(p, m_bytes, &self.params),
+            },
+            AlgorithmKind::OpenMpi => {
+                if m_bytes < self.openmpi_threshold {
+                    AlgorithmKind::RecursiveDoubling
+                } else {
+                    AlgorithmKind::Ring
+                }
+            }
+            k => k,
+        };
+        let ctx = BuildCtx {
+            m_bytes,
+            params: self.params,
+            openmpi_threshold: self.openmpi_threshold,
+        };
+        let algo = Algorithm {
+            kind: resolved,
+            group: Group::cyclic(p),
+            h: Permutation::identity(p),
+        };
+        let s = algo.build(&ctx)?;
+        verify(&s).map_err(|e| format!("schedule failed verification: {e}"))?;
+        let arc = Arc::new(s);
+        self.inner.lock().unwrap().insert(key, arc.clone());
+        Ok(arc)
+    }
 }
 
 /// Output of [`Communicator::plan_bucket_schedules`]: the bucket plan plus

@@ -105,7 +105,9 @@ pub fn simulate_skewed(
 /// `inter` α/β when they cross nodes. Reduces always run on-node CPU, so
 /// `γ` comes from `intra`. Works on *any* schedule — compare a flat
 /// schedule against [`crate::topo::compose_two_level`]'s on the same map
-/// to quantify what hierarchy buys (the `BENCH_hier.json` ablation).
+/// (composed once from a flat inner — see its do-not-re-compose
+/// contract) to quantify what hierarchy buys (the `BENCH_hier.json`
+/// ablation).
 pub fn simulate_topo(
     s: &ProcSchedule,
     m_bytes: usize,

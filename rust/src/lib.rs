@@ -32,11 +32,17 @@
 //! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step); execution gated behind the `pjrt` feature |
 //! | [`net`] | multi-process execution over real TCP sockets: length-prefixed wire protocol, rank-0 rendezvous + full-mesh or **lazily-dialed** bootstrap, per-peer reader/writer threads behind a socket [`cluster::arena::Transport`], α/β/γ + arrival-skew probes, and the per-rank [`net::Endpoint`] front end |
 //! | [`net::fault`] + [`net::membership`] | the elastic layer: heartbeat failure detector with capped-exponential retry backoff, epoch-tagged membership agreement, dense relabeling of survivors, shrink-to-P−1 resume ([`net::Endpoint::allreduce_elastic`]) |
+//! | [`net::service`] + [`cluster::service`] | the multi-tenant service layer: per-rank [`net::service::Service`] owning one warm mesh, [`net::service::CommHandle`] tenants with disjoint step-tag regions ([`net::wire::comm_tag`]), rank-0 grant sequencing, per-rank admission control, and the single-process twin [`cluster::ServiceCluster`] (mixed dtypes, differential oracle) |
 //! | [`topo`] | hierarchical (two-level) execution: node grouping ([`topo::NodeMap`]), binomial intra-node trees composed with any inner schedule into one verified [`sched::ProcSchedule`] ([`topo::compose_two_level`]), schedule relabeling through permutations, per-rank peer sets for sparse meshes |
 //! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
 //! | [`coordinator::bucket`] | DDP-style gradient bucketing: cost-model-sized packing with exact pack/unpack round-trips |
 //! | [`figures`] | regenerates every figure of the paper's evaluation section |
 //! | [`util`] | in-tree PRNG / JSON / bitset / property-testing (the offline image has **no** external deps; the optional `pjrt` feature patches in `xla`) |
+//!
+//! A deeper top-down tour — the layer map, each subsystem's key types
+//! and invariants, and a request-lifecycle walkthrough of one
+//! multi-tenant submit → collect — lives in `rust/ARCHITECTURE.md` at
+//! the repository root of this crate.
 //!
 //! ## Quick start
 //!
@@ -157,16 +163,26 @@
 //!   │ u32 body_len │ body                                                 │
 //!   └──────────────┴──────────────────────────────────────────────────────┘
 //!   DATA body:
-//!   ┌────┬───────┬──────────┬──────────┬──────────┬─────────┬─────────┐
-//!   │kind│ dtype │ u16 bufs │ u32 from │ u64 step │ u32 idx │ u32 of  │
-//!   ├────┴───────┴──────────┴──────────┴──────────┴─────────┴─────────┤
-//!   │ u32 × bufs per-buffer element counts                            │
-//!   ├─────────────────────────────────────────────────────────────────┤
-//!   │ every buffer's elements, little-endian, concatenated            │
-//!   └─────────────────────────────────────────────────────────────────┘
+//!   ┌────┬───────┬──────────┬──────────┬──────────┬──────────┬─────────┬─────────┐
+//!   │kind│ dtype │ u16 bufs │ u32 from │ u32 comm │ u64 step │ u32 idx │ u32 of  │
+//!   ├────┴───────┴──────────┴──────────┴──────────┴──────────┴─────────┴─────────┤
+//!   │ u32 × bufs per-buffer element counts                                       │
+//!   ├────────────────────────────────────────────────────────────────────────────┤
+//!   │ every buffer's elements, little-endian, concatenated                       │
+//!   └────────────────────────────────────────────────────────────────────────────┘
 //!                  ▲ (idx, of) = the chunk framing: frame idx of a
 //!                    message split into `of` chunks (monolithic = 0 of 1)
 //! ```
+//!
+//! The `u64 step` tag is **partitioned by communicator**
+//! ([`net::wire::comm_tag`]): its low 48 bits are the communicator's own
+//! cumulative step counter, its high bits the communicator id — the
+//! multi-tenant service gives every tenant a disjoint tag region, and a
+//! plain endpoint runs entirely in region 0 where `comm_tag(0, s) == s`
+//! (nothing changes on the wire). The id also rides in the explicit
+//! `u32 comm` field, and the decoder rejects any frame whose two copies
+//! disagree — a cross-tenant splice or corruption — the same way the
+//! bootstrap's session token rejects a cross-mesh splice.
 //!
 //! Torn frames (short reads), dtype mismatches and peer disconnects all
 //! surface as clean [`cluster::ClusterError`]s — never hangs — and the
@@ -251,6 +267,52 @@
 //! or a resume bit-identical to the fresh P−1 oracle; the chaos lane
 //! (`examples/net_allreduce.rs --self-spawn --chaos`) does the same over
 //! real sockets with a hard-killed process.
+//!
+//! ## Service mode (multi-tenant allreduce, `net::service`)
+//!
+//! Endpoints are single-tenant: one thread per rank drives one
+//! collective at a time. Service mode keeps the mesh **warm and
+//! shared**: a per-rank [`net::service::Service`] owns the mesh and data
+//! plane for its whole lifetime, and any number of tenant threads mint
+//! [`net::service::CommHandle`]s — each a communicator owning a disjoint
+//! region of the step-tag space (see the wire diagram above) — and
+//! submit concurrent jobs against it. Rank 0's engine sequences dispatch
+//! with `GRANT` frames so every rank executes the same global job order
+//! with **no barrier between jobs** (a fast rank's next-job frames stash
+//! at the receiver until that job runs). Admission control bounds each
+//! rank's in-flight jobs and bytes ([`net::service::ServiceOptions`]):
+//! [`try_submit`](net::service::CommHandle::try_submit) fails fast with
+//! [`cluster::SubmitError::Busy`], the blocking
+//! [`submit`](net::service::CommHandle::submit) waits up to a deadline
+//! and fails with [`cluster::SubmitError::Deadline`] — both per rank,
+//! so tenants retry until admitted everywhere. Results stream back per
+//! tenant, in submission order, through
+//! [`collect`](net::service::CommHandle::collect).
+//!
+//! The single-process twin [`cluster::ServiceCluster`] has the same
+//! surface (whole-communicator submits, mixed dtypes across tenants) and
+//! is the differential oracle for the socket service (`tests/service.rs`,
+//! `examples/service_soak.rs`):
+//!
+//! ```
+//! use permallreduce::prelude::*;
+//!
+//! // A 4-rank in-process service; two tenants of different dtypes.
+//! let svc = ServiceCluster::start(ServiceCfg::new(4));
+//! let a = svc.comm::<f32>().unwrap();
+//! let b = svc.comm::<f64>().unwrap();
+//!
+//! let ones: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; 256]).collect();
+//! let ramps: Vec<Vec<f64>> = (0..4).map(|r| vec![r as f64; 100]).collect();
+//! a.try_submit(&ones, ReduceOp::Sum, AlgorithmKind::Ring).unwrap();
+//! b.try_submit(&ramps, ReduceOp::Max, AlgorithmKind::RecursiveDoubling).unwrap();
+//!
+//! // Per-tenant completion streams, in submission order.
+//! let out_a = a.collect().unwrap();
+//! assert!(out_a.iter().all(|rank| rank.iter().all(|&x| x == 4.0)));
+//! let out_b = b.collect().unwrap();
+//! assert!(out_b.iter().all(|rank| rank.iter().all(|&x| x == 3.0)));
+//! ```
 //!
 //! ## Hierarchical execution (`topo`)
 //!
@@ -434,14 +496,19 @@ pub mod cli;
 /// Convenient re-exports of the most commonly used types.
 pub mod prelude {
     pub use crate::algo::{Algorithm, AlgorithmKind};
-    pub use crate::cluster::{ClusterExecutor, PersistentCluster, ReduceOp};
+    pub use crate::cluster::{
+        ClusterExecutor, PersistentCluster, ReduceOp, ServiceCfg, ServiceCluster, ServiceStats,
+        SubmitError,
+    };
     pub use crate::coordinator::{
         AllreduceManyOutput, AllreduceOutput, Communicator, ManyMetrics, Metrics,
+        ServiceSchedules,
     };
     pub use crate::cost::{CostModel, NetParams};
     pub use crate::des::{simulate, simulate_skewed};
     pub use crate::net::fault::{Backoff, FaultPolicy};
     pub use crate::net::membership::Membership;
+    pub use crate::net::service::{Service, ServiceOptions};
     pub use crate::net::{Endpoint, NetOptions};
     pub use crate::perm::{Group, Permutation};
     pub use crate::sched::{ProcSchedule, ScheduleStats};

@@ -54,6 +54,14 @@ pub struct Mesh {
     pub rank: usize,
     pub p: usize,
     pub streams: Vec<Option<TcpStream>>,
+    /// The rank's own mesh listener, kept **alive** past bootstrap.
+    /// Historically `join_subset` dropped it at return, so a non-zero
+    /// rank's advertised address went dark the moment the mesh was up —
+    /// nothing could ever dial back in (the elastic path's reconnect gap
+    /// noted in the roadmap, and a hard blocker for long-lived service
+    /// meshes). Rank 0 keeps its rendezvous listener here for the same
+    /// reason. `None` only for the trivial single-rank mesh.
+    pub listener: Option<TcpListener>,
 }
 
 impl Mesh {
@@ -61,6 +69,11 @@ impl Mesh {
     /// the peer-set size for a lazy one).
     pub fn socket_count(&self) -> usize {
         self.streams.iter().flatten().count()
+    }
+
+    /// The local address of this rank's still-open mesh listener.
+    pub fn listener_addr(&self) -> Option<std::net::SocketAddr> {
+        self.listener.as_ref().and_then(|l| l.local_addr().ok())
     }
 }
 
@@ -224,7 +237,12 @@ pub fn host_subset(
     }
     let mut streams: Vec<Option<TcpStream>> = (0..p).map(|_| None).collect();
     if p == 1 {
-        return Ok(Mesh { rank, p, streams });
+        return Ok(Mesh {
+            rank,
+            p,
+            streams,
+            listener: None,
+        });
     }
     let deadline = Instant::now() + timeout;
     let own_addr = listener
@@ -268,7 +286,12 @@ pub fn host_subset(
             }
         }
     }
-    Ok(Mesh { rank, p, streams })
+    Ok(Mesh {
+        rank,
+        p,
+        streams,
+        listener: Some(listener),
+    })
 }
 
 /// A non-zero rank's bootstrap: dial the rendezvous, announce the own mesh
@@ -338,7 +361,12 @@ pub fn join_subset(
         let peer = check_peer(&body, rank, p, token, peers, &streams)?;
         streams[peer] = Some(s);
     }
-    Ok(Mesh { rank, p, streams })
+    Ok(Mesh {
+        rank,
+        p,
+        streams,
+        listener: Some(listener),
+    })
 }
 
 /// Rank 0's half of the rendezvous over a **full** mesh.
@@ -429,6 +457,10 @@ mod tests {
                     assert_eq!(mesh.rank, rank);
                     assert!(mesh.streams[rank].is_none());
                     assert_eq!(mesh.socket_count(), p - 1);
+                    // The mesh listener must survive bootstrap on every
+                    // rank — a reconnect/service mesh needs somewhere to
+                    // dial back in.
+                    assert!(mesh.listener_addr().is_some(), "rank {rank} dropped its listener");
                     // Exercise every link: send PEER{rank} to each peer,
                     // read one PEER from each.
                     let mut got = vec![false; p];

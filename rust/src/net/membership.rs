@@ -9,7 +9,10 @@
 //! caring which physical ranks remain. [`RemappedTransport`] translates
 //! the dense ranks a schedule speaks back to the physical ranks the
 //! underlying transport routes by, so the data plane and wire protocol
-//! are untouched by a shrink.
+//! are untouched by a shrink. A shrink's epoch/resume semantics
+//! (stickiness across calls, round-tag fencing, service-mode exclusion)
+//! are stated once on
+//! [`Endpoint::allreduce_elastic`](super::Endpoint::allreduce_elastic).
 
 use std::marker::PhantomData;
 

@@ -37,7 +37,13 @@
 //!   rank-0-coordinated membership shrink (epoch bump, survivors
 //!   relabeled dense `0..P−1`, schedule rebuilt, collective re-run from
 //!   the caller's preserved input) instead of a job abort. See the
-//!   crate-level "Fault model & elasticity" section.
+//!   crate-level "Fault model & elasticity" section;
+//! * [`service`] — the multi-tenant layer: a per-rank
+//!   [`Service`](service::Service) owns the mesh for its lifetime and
+//!   multiplexes concurrent jobs from many [`CommHandle`](service::CommHandle)
+//!   tenants over it — disjoint step-tag regions per communicator
+//!   ([`wire::comm_tag`]), rank-0 grant sequencing for cross-rank job
+//!   order, and per-rank admission control.
 //!
 //! See the crate-level "Running across processes" quickstart for the
 //! end-to-end flow, and `examples/net_allreduce.rs` for a runnable
@@ -48,6 +54,7 @@ pub mod bootstrap;
 pub mod fault;
 pub mod membership;
 pub mod probe;
+pub mod service;
 pub mod transport;
 pub mod wire;
 
@@ -628,6 +635,23 @@ impl<T: WireElement> Endpoint<T> {
     /// instead; a shrink below 2 live ranks aborts; and a healthy rank
     /// false-positively declared dead (detect timeout too tight) gets a
     /// clean error while the rest resume without it.
+    ///
+    /// Epoch and resume semantics — stated here once, cross-linked
+    /// from the [`transport`] and [`membership`] docs:
+    ///
+    /// * A shrink is **sticky**: the bumped epoch and shrunken live set
+    ///   persist on this endpoint across calls. Later collectives
+    ///   (elastic or plain) run at P−1 with the same dense relabeling;
+    ///   there is no re-join or re-grow path.
+    /// * Round tags are drawn from the endpoint's cumulative step-tag
+    ///   space, which lives in **communicator region 0** of the
+    ///   partitioned tag space ([`wire::comm_tag`]) — the region
+    ///   reserved for plain endpoints and elastic `VOTE`/`COMMIT`
+    ///   rounds. Tenant communicators (ids ≥ 1) can never collide with
+    ///   an elastic round's fencing.
+    /// * Elastic mode is unavailable under [`service`]: the service
+    ///   engine owns the transport and its grant order assumes fixed
+    ///   membership, so the detector stays disarmed there.
     pub fn allreduce_elastic(
         &mut self,
         data: &[T],

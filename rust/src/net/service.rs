@@ -1,0 +1,672 @@
+//! The multi-tenant allreduce **service** over one warm TCP mesh: each
+//! OS process runs a per-rank [`Service`] that owns the mesh and data
+//! plane for its lifetime, and any number of tenant threads mint
+//! [`CommHandle`]s to submit concurrent jobs against it — the
+//! socket-mode counterpart of [`crate::cluster::service`] (the
+//! in-process twin, which also holds the reference tests).
+//!
+//! # What a service adds over an [`Endpoint`](super::Endpoint)
+//!
+//! An endpoint is single-tenant SPMD: one thread per rank issues one
+//! collective at a time, and cross-rank agreement on *what runs next*
+//! is implicit in the program text. A service multiplexes **multiple
+//! tenants per rank**, each driving its own communicator from its own
+//! thread — so submission order is nondeterministic per rank and the
+//! service must *construct* the cross-rank agreement instead:
+//!
+//! * **Tag-space partitioning** — every communicator owns a disjoint
+//!   region of the step-tag space ([`wire::comm_tag`]); a tenant's
+//!   frames can never splice into a neighbor's job, and the transport
+//!   rejects frames whose explicit communicator field contradicts
+//!   their tag (the cross-tenant analogue of the session token's
+//!   cross-mesh rejection).
+//! * **Grant sequencing** — rank 0's engine is the dispatch sequencer:
+//!   it executes its local submissions in arrival order and announces
+//!   each one to every peer with a `GRANT(comm, seq)` frame
+//!   ([`wire::encode_grant`]). Peer engines execute jobs in grant
+//!   order, pairing each grant with their local tenant's matching
+//!   submission. A single TCP link delivers grants in FIFO order, so
+//!   arrival order *is* the global order — no extra barrier round.
+//! * **Cross-job overlap** — engines never run a barrier between jobs:
+//!   a fast rank's frames for job *n*+1 carry tags from a later window
+//!   (or a different communicator's region) and stash at the receiver
+//!   until that job runs ([`transport`](super::transport)'s
+//!   region-scoped ordering).
+//!
+//! # Admission is rank-local
+//!
+//! [`ServiceOptions::max_jobs`] / [`ServiceOptions::max_bytes`] bound
+//! this **rank's** in-flight submissions. Ranks do not coordinate
+//! admission: the same logical job may be admitted on one rank and
+//! rejected [`SubmitError::Busy`] on another. Tenants must therefore
+//! treat admission as per-rank backpressure and keep retrying (or use
+//! the blocking [`CommHandle::submit`] with a generous deadline) until
+//! the submission is accepted on *every* rank they drive. A rank whose
+//! tenant never delivers the granted submission poisons only that
+//! communicator (see below); the mesh and all other tenants keep
+//! running.
+//!
+//! # Failure containment
+//!
+//! A job that fails mid-run (lost frame, peer death) reports the error
+//! to its own tenant on [`CommHandle::collect`] and nothing else: its
+//! tag window was consumed, and the next job's
+//! [`begin_call`](super::transport) sweep clears any debris from that
+//! window without touching other regions. A grant whose matching local
+//! submission does not arrive within the transport's receive timeout
+//! **poisons that communicator on that rank** — the rank can no longer
+//! know how many tags the job would have consumed, so every later job
+//! on the communicator errors cleanly rather than desynchronize the
+//! region. Other communicators are unaffected.
+//!
+//! # Contract (SPMD, per communicator)
+//!
+//! * Every rank constructs the same communicators in the same order
+//!   ([`Service::comm`] mints ids locally in call order).
+//! * For each communicator, every rank submits the same sequence of
+//!   jobs (same length, op, kind) — tenant threads are free to
+//!   interleave *across* communicators arbitrarily.
+//! * One element type per service (the mesh is monomorphic);
+//!   mixed-dtype multiplexing is the in-process twin's domain.
+//! * Probe and elastic shrink are unavailable in service mode: the
+//!   engine owns the transport, so pass measured
+//!   [`NetParams`](crate::cost::NetParams) in through
+//!   [`ServiceOptions`] and leave `fault` disarmed.
+#![deny(missing_docs)]
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::bootstrap;
+use super::transport::NetTransport;
+use super::wire::{self, WireElement};
+use super::{NetOptions, RankHints};
+use crate::algo::AlgorithmKind;
+use crate::cluster::arena::{BlockPool, DataPlane, NativeKernel};
+use crate::cluster::service::{Admission, ServiceStats, SubmitError};
+use crate::cluster::{ClusterError, ReduceOp};
+use crate::coordinator::ServiceSchedules;
+use crate::sched::stats::{chunk_elems_for, chunk_fusion_rows_for, wire_placement_row};
+use crate::sched::ProcSchedule;
+
+/// How often a non-zero rank's engine interrupts its grant wait to
+/// drain local submissions and notice shutdown.
+const GRANT_TICK: Duration = Duration::from_millis(50);
+
+/// Configuration of one rank's service: the mesh options plus this
+/// rank's admission caps.
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    /// Mesh and transport configuration. Service mode requires every
+    /// rank to hold a link to rank 0 (the grant channel), so leave
+    /// [`NetOptions::peers`] as `None` (full mesh) or include rank 0 in
+    /// every peer set. [`NetOptions::fault`] is ignored — elastic
+    /// shrink is unavailable in service mode.
+    pub net: NetOptions,
+    /// Admission cap: jobs in flight on this rank (admitted, not yet
+    /// collected by the engine's completion path).
+    pub max_jobs: usize,
+    /// Admission cap: payload bytes in flight on this rank. A single
+    /// oversized job is still admitted when it would run alone, so it
+    /// degrades to sequential service instead of being unservable.
+    pub max_bytes: usize,
+}
+
+impl ServiceOptions {
+    /// Defaults: [`NetOptions::default`] mesh, 8 jobs / 64 MiB in
+    /// flight per rank — the same caps as the in-process twin's
+    /// [`crate::cluster::ServiceCfg::new`].
+    pub fn new() -> ServiceOptions {
+        ServiceOptions { net: NetOptions::default(), max_jobs: 8, max_bytes: 64 << 20 }
+    }
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        ServiceOptions::new()
+    }
+}
+
+/// One tenant job as it travels from a [`CommHandle`] to the engine.
+struct Submission<T> {
+    comm: u32,
+    input: Vec<T>,
+    op: ReduceOp,
+    kind: AlgorithmKind,
+    bytes: usize,
+    reply: Sender<Result<Vec<T>, String>>,
+}
+
+/// State shared between the per-rank [`Service`], its engine thread,
+/// and every [`CommHandle`] minted from it.
+struct ServiceShared<T: WireElement> {
+    p: usize,
+    recv_timeout: Duration,
+    admission: Arc<Admission>,
+    stats: Arc<ServiceStats>,
+    /// `None` once the service is shut down; taking it closes
+    /// submission for every handle at once.
+    submit: Mutex<Option<Sender<Submission<T>>>>,
+    next_comm: AtomicU32,
+}
+
+/// One rank of the multi-tenant allreduce service: owns the TCP mesh
+/// and warm data plane for its whole lifetime, executes tenant jobs in
+/// the globally granted order, and exposes per-rank observability
+/// (listener address, socket count, [`ServiceStats`]).
+///
+/// Construct with [`Service::connect`] (or [`Service::host`] on rank 0
+/// with a pre-bound rendezvous listener), mint tenants with
+/// [`Service::comm`], and drive jobs through each [`CommHandle`].
+/// Dropping the service shuts it down ([`Service::shutdown`]).
+pub struct Service<T: WireElement = f32> {
+    rank: usize,
+    shared: Arc<ServiceShared<T>>,
+    /// Captured before the engine thread takes the transport.
+    listener_addr: Option<std::net::SocketAddr>,
+    socket_count: usize,
+    engine: Option<JoinHandle<()>>,
+}
+
+impl<T: WireElement> Service<T> {
+    /// Establish the mesh and start this rank's engine. Every rank of
+    /// the job calls this (rank 0 binds `opts.net.rendezvous`); all
+    /// ranks block until the mesh is up.
+    pub fn connect(
+        rank: usize,
+        p: usize,
+        opts: ServiceOptions,
+    ) -> Result<Service<T>, ClusterError> {
+        let mesh = bootstrap::connect_subset(
+            rank,
+            p,
+            &opts.net.rendezvous,
+            opts.net.bind.as_deref(),
+            opts.net.connect_timeout,
+            opts.net.peers.as_ref(),
+        )?;
+        Self::from_mesh(mesh, opts)
+    }
+
+    /// Rank 0 variant taking an already-bound rendezvous listener — how
+    /// tests get ephemeral (`127.0.0.1:0`) ports without races.
+    pub fn host(
+        listener: TcpListener,
+        p: usize,
+        opts: ServiceOptions,
+    ) -> Result<Service<T>, ClusterError> {
+        let peers = opts.net.peers.clone();
+        let mesh = bootstrap::host_subset(listener, p, opts.net.connect_timeout, peers.as_ref())?;
+        Self::from_mesh(mesh, opts)
+    }
+
+    fn from_mesh(mesh: bootstrap::Mesh, opts: ServiceOptions) -> Result<Service<T>, ClusterError> {
+        let (rank, p) = (mesh.rank, mesh.p);
+        let pool = Arc::new(BlockPool::<T>::new());
+        // Elastic shrink cannot run under the service engine (it owns
+        // the transport and the grant order assumes fixed membership),
+        // so the failure detector stays disarmed regardless of opts.
+        let transport = NetTransport::start(mesh, pool.clone(), opts.net.recv_timeout, None)?;
+        let listener_addr = transport.listener_addr();
+        let socket_count = transport.socket_count();
+        let (tx, rx) = mpsc::channel::<Submission<T>>();
+        let shared = Arc::new(ServiceShared {
+            p,
+            recv_timeout: opts.net.recv_timeout,
+            admission: Arc::new(Admission::new(opts.max_jobs, opts.max_bytes)),
+            stats: Arc::new(ServiceStats::default()),
+            submit: Mutex::new(Some(tx)),
+            next_comm: AtomicU32::new(1),
+        });
+        let mut engine = Engine {
+            rank,
+            p,
+            transport,
+            plane: DataPlane::new(pool),
+            scheds: ServiceSchedules::new(opts.net.params),
+            hints: HashMap::new(),
+            chunk_bytes: opts.net.chunk_bytes,
+            next_step: HashMap::new(),
+            poisoned: HashSet::new(),
+            rx,
+            admission: shared.admission.clone(),
+            stats: shared.stats.clone(),
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("net-svc-{rank}"))
+            .spawn(move || engine.run())
+            .map_err(|e| ClusterError::Protocol {
+                proc: rank,
+                detail: format!("spawning service engine: {e}"),
+            })?;
+        Ok(Service { rank, shared, listener_addr, socket_count, engine: Some(handle) })
+    }
+
+    /// This rank's id.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks in the mesh.
+    pub fn nprocs(&self) -> usize {
+        self.shared.p
+    }
+
+    /// The mesh listener's bound address (ranks > 0; rank 0 and `p == 1`
+    /// return `None`). The listener stays open for the service's whole
+    /// lifetime, so the address stays dialable — the observability hook
+    /// for topology tooling and future join protocols.
+    pub fn listener_addr(&self) -> Option<std::net::SocketAddr> {
+        self.listener_addr
+    }
+
+    /// Number of live mesh sockets this rank holds (`P − 1` for a full
+    /// mesh).
+    pub fn socket_count(&self) -> usize {
+        self.socket_count
+    }
+
+    /// This rank's monotonic service counters.
+    pub fn stats(&self) -> Arc<ServiceStats> {
+        self.shared.stats.clone()
+    }
+
+    /// Mint the next communicator. Ids are assigned locally in call
+    /// order starting at 1 (0 is the plain-endpoint / elastic region),
+    /// so — SPMD contract — every rank must create its communicators in
+    /// the same order for ids to agree across the mesh. Errs when the
+    /// [`wire::MAX_COMM`] id space is exhausted.
+    pub fn comm(&self) -> Result<CommHandle<T>, String> {
+        let id = self.shared.next_comm.fetch_add(1, Ordering::Relaxed);
+        if id > wire::MAX_COMM {
+            return Err(format!("communicator id space exhausted (max {})", wire::MAX_COMM));
+        }
+        Ok(CommHandle {
+            comm: id,
+            shared: self.shared.clone(),
+            pending: Mutex::new(VecDeque::new()),
+            in_flight: AtomicUsize::new(0),
+        })
+    }
+
+    /// Stop accepting submissions, drain the engine, and join it. Jobs
+    /// already admitted keep executing as their grants arrive; a queued
+    /// submission that sees no grant for a full receive timeout after
+    /// shutdown (it was never admitted on rank 0, so no grant is coming)
+    /// fails with a clean per-tenant error instead of blocking exit.
+    /// Tenants should [`collect`] every outstanding job **before**
+    /// shutting down. Idempotent; also runs on drop.
+    ///
+    /// [`collect`]: CommHandle::collect
+    pub fn shutdown(&mut self) {
+        self.shared.admission.close();
+        drop(self.shared.submit.lock().unwrap().take());
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T: WireElement> Drop for Service<T> {
+    fn drop(&mut self) {
+        self.shutdown()
+    }
+}
+
+/// One tenant's communicator on one rank: a disjoint region of the
+/// step-tag space plus a FIFO of completion receivers. Submit with
+/// [`try_submit`](CommHandle::try_submit) (fail-fast) or
+/// [`submit`](CommHandle::submit) (blocking, deadline-bounded); results
+/// stream back in submission order through
+/// [`collect`](CommHandle::collect). Handles are `Send`, so each tenant
+/// can drive its communicator from its own thread.
+pub struct CommHandle<T: WireElement> {
+    comm: u32,
+    shared: Arc<ServiceShared<T>>,
+    pending: Mutex<VecDeque<Receiver<Result<Vec<T>, String>>>>,
+    in_flight: AtomicUsize,
+}
+
+impl<T: WireElement> CommHandle<T> {
+    /// This communicator's id — the high 16 bits of every step tag its
+    /// jobs use on the wire.
+    pub fn id(&self) -> u32 {
+        self.comm
+    }
+
+    /// Jobs submitted on this handle and not yet collected.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Submit this rank's input of one job, failing fast with
+    /// [`SubmitError::Busy`] when this rank's admission is at capacity.
+    pub fn try_submit(
+        &self,
+        input: &[T],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<(), SubmitError> {
+        let bytes = std::mem::size_of_val(input);
+        if let Err(e) = self.shared.admission.try_admit(bytes) {
+            if e == SubmitError::Busy {
+                self.shared.stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+            }
+            return Err(e);
+        }
+        self.dispatch(input, op, kind, bytes)
+    }
+
+    /// Submit this rank's input of one job, blocking until admitted or
+    /// until `deadline` elapses ([`SubmitError::Deadline`]).
+    pub fn submit(
+        &self,
+        input: &[T],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        deadline: Duration,
+    ) -> Result<(), SubmitError> {
+        let bytes = std::mem::size_of_val(input);
+        if let Err(e) = self.shared.admission.admit(bytes, deadline) {
+            if e == SubmitError::Deadline {
+                self.shared.stats.deadline_rejections.fetch_add(1, Ordering::Relaxed);
+            }
+            return Err(e);
+        }
+        self.dispatch(input, op, kind, bytes)
+    }
+
+    /// Hand an admitted job to the engine and enqueue its reply slot.
+    fn dispatch(
+        &self,
+        input: &[T],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        bytes: usize,
+    ) -> Result<(), SubmitError> {
+        let (reply, reply_rx) = mpsc::channel();
+        let sub = Submission { comm: self.comm, input: input.to_vec(), op, kind, bytes, reply };
+        let sent = match &*self.shared.submit.lock().unwrap() {
+            Some(tx) => tx.send(sub).is_ok(),
+            None => false,
+        };
+        if !sent {
+            self.shared.admission.release(bytes);
+            return Err(SubmitError::Closed);
+        }
+        self.shared.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.pending.lock().unwrap().push_back(reply_rx);
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Collect the oldest uncollected job's result on this rank —
+    /// results arrive in submission order, [`JobIo`]-style. A per-job
+    /// error (failed run, poisoned communicator) is returned here and
+    /// affects no other handle.
+    ///
+    /// [`JobIo`]: crate::cluster::JobIo
+    pub fn collect(&self) -> Result<Vec<T>, String> {
+        let rx = self
+            .pending
+            .lock()
+            .unwrap()
+            .pop_front()
+            .ok_or_else(|| "no job in flight on this communicator".to_string())?;
+        // Generous bound: the job may sit behind a full admission
+        // window of earlier jobs, each bounded by the engine's own
+        // receive timeout.
+        let wait = self.shared.recv_timeout * 8;
+        let got = rx.recv_timeout(wait);
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        match got {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => {
+                Err(format!("no result within {wait:?}; engine stalled or job lost"))
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err("service engine exited before the job completed".to_string())
+            }
+        }
+    }
+}
+
+/// The per-rank engine: sole owner of the transport and data plane,
+/// executing jobs in the globally granted order.
+struct Engine<T: WireElement> {
+    rank: usize,
+    p: usize,
+    transport: NetTransport<T>,
+    plane: DataPlane<T>,
+    scheds: ServiceSchedules,
+    hints: HashMap<String, Arc<RankHints>>,
+    chunk_bytes: Option<usize>,
+    /// Per-communicator cumulative step cursor — each communicator's
+    /// own tag space, advanced identically on every rank because all
+    /// ranks execute the same granted order.
+    next_step: HashMap<u32, usize>,
+    /// Communicators this rank can no longer serve (a granted job's
+    /// local submission never arrived, so the cursor is unknowable).
+    poisoned: HashSet<u32>,
+    rx: Receiver<Submission<T>>,
+    admission: Arc<Admission>,
+    stats: Arc<ServiceStats>,
+}
+
+impl<T: WireElement> Engine<T> {
+    fn run(&mut self) {
+        if self.rank == 0 {
+            self.run_sequencer()
+        } else {
+            self.run_follower()
+        }
+    }
+
+    /// Rank 0: execute local submissions in arrival order, announcing
+    /// each to every peer with a GRANT before running it. FIFO links
+    /// make arrival order the global order.
+    fn run_sequencer(&mut self) {
+        let mut seq: u64 = 0;
+        while let Ok(sub) = self.rx.recv() {
+            seq += 1;
+            for peer in 1..self.p {
+                if self.transport.has_link(peer) {
+                    self.transport.post_grant(peer, sub.comm, seq);
+                }
+            }
+            self.execute(sub);
+        }
+    }
+
+    /// Ranks > 0: execute jobs in grant order, pairing each grant with
+    /// the local tenant's matching submission.
+    fn run_follower(&mut self) {
+        let mut local: HashMap<u32, VecDeque<Submission<T>>> = HashMap::new();
+        let mut closed = false;
+        // Armed at shutdown while submissions are still queued; re-armed
+        // on every grant (progress). If no grant arrives for a full
+        // receive timeout after shutdown, the queued submissions were
+        // never admitted on rank 0 and will never be granted — fail them
+        // instead of spinning forever.
+        let mut closed_at: Option<Instant> = None;
+        loop {
+            closed |= self.drain_local(&mut local);
+            if closed {
+                if local.values().all(|q| q.is_empty()) {
+                    return;
+                }
+                let at = *closed_at.get_or_insert_with(Instant::now);
+                if at.elapsed() > self.transport.timeout() {
+                    for q in local.values_mut() {
+                        for sub in q.drain(..) {
+                            self.fail(sub, "service shut down before the job was granted".into());
+                        }
+                    }
+                    return;
+                }
+            }
+            match self.transport.wait_grant(Instant::now() + GRANT_TICK) {
+                Err(ClusterError::RecvTimeout { .. }) => continue,
+                Err(e) => {
+                    // The grant channel (link to rank 0) is gone: no
+                    // further global order exists. Fail every queued
+                    // submission cleanly and stop.
+                    let msg = format!("service grant channel lost: {e}");
+                    for q in local.values_mut() {
+                        for sub in q.drain(..) {
+                            self.fail(sub, msg.clone());
+                        }
+                    }
+                    return;
+                }
+                Ok((comm, _seq)) => {
+                    closed_at = None;
+                    if self.poisoned.contains(&comm) {
+                        // Consume the grant; the matching local
+                        // submission (if any) was or will be failed at
+                        // drain time.
+                        continue;
+                    }
+                    match self.take_local(comm, &mut local, &mut closed) {
+                        Some(sub) => self.execute(sub),
+                        None => {
+                            // Granted but the local tenant never
+                            // submitted: the cursor for this region is
+                            // now unknowable on this rank.
+                            self.poisoned.insert(comm);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pull every immediately available local submission into the
+    /// per-communicator queues; returns `true` when the service has
+    /// shut down (channel disconnected). Submissions on poisoned
+    /// communicators fail here instead of queueing.
+    fn drain_local(&mut self, local: &mut HashMap<u32, VecDeque<Submission<T>>>) -> bool {
+        loop {
+            match self.rx.try_recv() {
+                Ok(sub) => self.queue_local(sub, local),
+                Err(TryRecvError::Empty) => return false,
+                Err(TryRecvError::Disconnected) => return true,
+            }
+        }
+    }
+
+    fn queue_local(
+        &mut self,
+        sub: Submission<T>,
+        local: &mut HashMap<u32, VecDeque<Submission<T>>>,
+    ) {
+        if self.poisoned.contains(&sub.comm) {
+            let comm = sub.comm;
+            self.fail(sub, format!("communicator {comm} poisoned on rank {}", self.rank));
+        } else {
+            local.entry(sub.comm).or_default().push_back(sub);
+        }
+    }
+
+    /// The granted job's local submission: already queued, or awaited
+    /// on the channel up to the transport's receive timeout (tenant
+    /// threads run independently of the grant arrival). Submissions for
+    /// other communicators arriving meanwhile are queued, not skipped.
+    fn take_local(
+        &mut self,
+        comm: u32,
+        local: &mut HashMap<u32, VecDeque<Submission<T>>>,
+        closed: &mut bool,
+    ) -> Option<Submission<T>> {
+        if let Some(sub) = local.get_mut(&comm).and_then(|q| q.pop_front()) {
+            return Some(sub);
+        }
+        let deadline = Instant::now() + self.transport.timeout();
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(sub) if sub.comm == comm => return Some(sub),
+                Ok(sub) => self.queue_local(sub, local),
+                Err(RecvTimeoutError::Timeout) => return None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    *closed = true;
+                    return None;
+                }
+            }
+        }
+    }
+
+    /// Run one granted job and reply to its tenant; always releases the
+    /// admission slot and bumps the completion counters.
+    fn execute(&mut self, sub: Submission<T>) {
+        let result = self.run_job(&sub);
+        match &result {
+            Ok(_) => self.stats.completed.fetch_add(1, Ordering::Relaxed),
+            Err(_) => self.stats.failed.fetch_add(1, Ordering::Relaxed),
+        };
+        self.admission.release(sub.bytes);
+        let _ = sub.reply.send(result);
+    }
+
+    fn fail(&self, sub: Submission<T>, msg: String) {
+        self.stats.failed.fetch_add(1, Ordering::Relaxed);
+        self.admission.release(sub.bytes);
+        let _ = sub.reply.send(Err(msg));
+    }
+
+    fn run_job(&mut self, sub: &Submission<T>) -> Result<Vec<T>, String> {
+        if self.p == 1 {
+            return Ok(sub.input.clone());
+        }
+        let m_bytes = std::mem::size_of_val(&sub.input[..]);
+        // Resolution is deterministic in (kind, p, m_bytes, params), so
+        // a failure here fails on every rank and no rank advances the
+        // cursor — the region stays aligned.
+        let s = self.scheds.get(sub.kind, self.p, m_bytes)?;
+        let hints = self.rank_hints(&s);
+        let cursor = self.next_step.entry(sub.comm).or_insert(0);
+        let base = wire::comm_tag(sub.comm, *cursor);
+        *cursor += s.steps.len();
+        self.transport.begin_call(base);
+        let chunk_elems = self.chunk_bytes.map(|b| chunk_elems_for(b, std::mem::size_of::<T>()));
+        let mut out = vec![T::default(); sub.input.len()];
+        let run = self.plane.run_schedule(
+            &s,
+            self.rank,
+            &sub.input,
+            base,
+            &hints.wire_dst,
+            Some(&hints.fusion),
+            chunk_elems,
+            &mut self.transport,
+            &NativeKernel(sub.op),
+            &mut out,
+        );
+        run.map_err(|e| e.to_string())?;
+        Ok(out)
+    }
+
+    /// Placement + fusion rows for this rank in `s`, cached by schedule
+    /// name — same hints the [`Endpoint`](super::Endpoint) feeds its
+    /// data plane.
+    fn rank_hints(&mut self, s: &ProcSchedule) -> Arc<RankHints> {
+        let key = format!("{}@r{}", s.name, self.rank);
+        if let Some(h) = self.hints.get(&key) {
+            return h.clone();
+        }
+        let h = Arc::new(RankHints {
+            wire_dst: wire_placement_row(s, self.rank),
+            fusion: chunk_fusion_rows_for(s, self.rank),
+        });
+        self.hints.insert(key, h.clone());
+        h
+    }
+}

@@ -29,7 +29,9 @@
 //! dead rank set — the input to the membership-shrink protocol — long
 //! before the full receive timeout. Without a policy (the default) none
 //! of this machinery runs and behavior is exactly the pre-elastic
-//! transport.
+//! transport. The epoch/resume semantics of a shrink (stickiness, the
+//! region-0 round-tag fencing, service-mode exclusion) are stated once
+//! on [`Endpoint::allreduce_elastic`](super::Endpoint::allreduce_elastic).
 
 use std::collections::HashMap;
 use std::net::TcpStream;
@@ -72,6 +74,8 @@ pub(super) enum Event<T: WireElement> {
     },
     /// An `EPOCH` message of the membership-shrink protocol.
     Epoch(EpochMsg),
+    /// A service-mode dispatch `GRANT` from the rank-0 sequencer.
+    Grant { comm: u32, seq: u64 },
     /// Clean EOF from `from`.
     Closed { from: usize },
     /// Torn frame / decode failure / I/O error on the link to `from`.
@@ -100,6 +104,10 @@ pub struct NetTransport<T: WireElement> {
     ready_msgs: Vec<(usize, ReadyMsg, Instant)>,
     /// `EPOCH` messages awaiting [`NetTransport::wait_epoch`].
     epoch_msgs: Vec<EpochMsg>,
+    /// Dispatch `GRANT`s awaiting [`NetTransport::wait_grant`]. Rank 0
+    /// emits them in sequence order over one TCP link, so arrival order
+    /// here **is** sequence order.
+    grant_msgs: std::collections::VecDeque<(u32, u64)>,
     link: Vec<Link>,
     timeout: Duration,
     /// First valid step tag of the current call (tags below it are
@@ -107,6 +115,9 @@ pub struct NetTransport<T: WireElement> {
     call_base: usize,
     /// Raw stream clones kept for shutdown (unblocks reader threads).
     streams: Vec<Option<TcpStream>>,
+    /// The rank's mesh listener, held so the advertised address stays
+    /// dialable for the transport's whole life (reconnects, service mode).
+    listener: Option<std::net::TcpListener>,
     readers: Vec<std::thread::JoinHandle<()>>,
     writers_joined: Vec<std::thread::JoinHandle<()>>,
     // -- failure detector (all inert when `fault` is None) --
@@ -138,6 +149,7 @@ impl<T: WireElement> NetTransport<T> {
         fault: Option<FaultPolicy>,
     ) -> Result<NetTransport<T>, ClusterError> {
         let (rank, p) = (mesh.rank, mesh.p);
+        let listener = mesh.listener;
         let t0 = Instant::now();
         let last_seen: Arc<Vec<AtomicU64>> =
             Arc::new((0..p).map(|_| AtomicU64::new(0)).collect());
@@ -220,10 +232,12 @@ impl<T: WireElement> NetTransport<T> {
             stashed_params: None,
             ready_msgs: Vec::new(),
             epoch_msgs: Vec::new(),
+            grant_msgs: std::collections::VecDeque::new(),
             link: (0..p).map(|_| Link::Up).collect(),
             timeout,
             call_base: 0,
             streams,
+            listener,
             readers,
             writers_joined,
             fault,
@@ -245,6 +259,12 @@ impl<T: WireElement> NetTransport<T> {
     /// size for a lazily-dialed one).
     pub fn socket_count(&self) -> usize {
         self.streams.iter().flatten().count()
+    }
+
+    /// The local address of this rank's still-open mesh listener
+    /// (`None` only for a single-rank mesh).
+    pub fn listener_addr(&self) -> Option<std::net::SocketAddr> {
+        self.listener.as_ref().and_then(|l| l.local_addr().ok())
     }
 
     /// The configured receive timeout (deadline budget for the bounded
@@ -273,11 +293,23 @@ impl<T: WireElement> NetTransport<T> {
     /// entries (duplicates that could only come from corruption, or
     /// debris from an abandoned pre-shrink attempt) are dropped, as are
     /// epoch messages from completed rounds.
+    ///
+    /// The floor applies only **within `base`'s communicator region**
+    /// ([`wire::tag_comm`]): under service mode other tenants' frames are
+    /// legitimately in flight with unrelated tags, and a global floor
+    /// would silently discard them. Plain endpoints run entirely in
+    /// communicator 0, where region-scoped and global floors coincide.
     pub fn begin_call(&mut self, base: usize) {
         self.call_base = base;
         let floor = self.call_base;
-        self.pending.retain(|&(step, _), _| step >= floor);
-        self.epoch_msgs.retain(|m| m.round >= floor as u64);
+        let region = wire::tag_comm(floor);
+        self.pending
+            .retain(|&(step, _), _| wire::tag_comm(step) != region || step >= floor);
+        // Elastic rounds are tagged with comm-0 step bases; a service
+        // call's comm-tagged floor must not sweep them.
+        if region == 0 {
+            self.epoch_msgs.retain(|m| m.round >= floor as u64);
+        }
     }
 
     /// Queue one pre-encoded frame to `to` (fire-and-forget, like the
@@ -292,6 +324,35 @@ impl<T: WireElement> NetTransport<T> {
     /// Queue one membership-protocol message to `to`.
     pub(super) fn post_epoch(&self, to: usize, msg: &EpochMsg) {
         self.post(to, wire::encode_epoch(msg));
+    }
+
+    /// Queue one dispatch grant to `to` (rank-0 sequencer only).
+    pub(super) fn post_grant(&self, to: usize, comm: u32, seq: u64) {
+        self.post(to, wire::encode_grant(self.rank, comm, seq));
+    }
+
+    /// Wait until `deadline` for the next dispatch grant (in rank 0's
+    /// sequence order) and return its `(comm, seq)`.
+    pub(super) fn wait_grant(&mut self, deadline: Instant) -> Result<(u32, u64), ClusterError> {
+        loop {
+            if let Some(g) = self.grant_msgs.pop_front() {
+                return Ok(g);
+            }
+            if matches!(self.link[0], Link::Closed | Link::Bad(_)) {
+                return Err(self.fail_from(0, 0));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ClusterError::RecvTimeout {
+                    proc: self.rank,
+                    step: 0,
+                    from: 0,
+                });
+            }
+            if let Ok(ev) = self.inbox.recv_timeout(remaining) {
+                self.absorb(ev);
+            }
+        }
     }
 
     /// The peers this rank currently believes are dead: link closed/bad,
@@ -406,6 +467,10 @@ impl<T: WireElement> NetTransport<T> {
             }
             Event::Epoch(m) => {
                 self.epoch_msgs.push(m);
+                None
+            }
+            Event::Grant { comm, seq } => {
+                self.grant_msgs.push_back((comm, seq));
                 None
             }
             Event::Closed { from } => {
@@ -637,18 +702,24 @@ impl<T: WireElement> Transport<T> for NetTransport<T> {
                     if s == step && f == from {
                         return Ok((frame, payload));
                     }
-                    // Tags below the current call's base are debris from
-                    // an abandoned attempt in an older epoch — dropped
-                    // like wild tags. Within the call, receives run in
-                    // program order, so every tag below the one currently
-                    // awaited was already consumed — a second delivery
-                    // can only be corruption. Tags at or above it
-                    // (another peer's lane, a later step, a faster peer's
-                    // next call) stash.
-                    if s < self.call_base {
+                    // All ordering reasoning is **per communicator
+                    // region** (wire::tag_comm): under service mode
+                    // another tenant's tags are legitimately in flight
+                    // and carry no ordering relation to this call's.
+                    // Within the active call's region, tags below the
+                    // call base are debris from an abandoned attempt in
+                    // an older epoch — dropped like wild tags. Within the
+                    // awaited tag's region, receives run in program
+                    // order, so every tag below the one currently awaited
+                    // was already consumed — a second delivery can only
+                    // be corruption. Everything else (another peer's
+                    // lane, a later step, a faster peer's next call,
+                    // another tenant entirely) stashes.
+                    if wire::tag_comm(s) == wire::tag_comm(self.call_base) && s < self.call_base
+                    {
                         continue;
                     }
-                    if s < step {
+                    if wire::tag_comm(s) == wire::tag_comm(step) && s < step {
                         return Err(ClusterError::Protocol {
                             proc: self.rank,
                             detail: format!(
@@ -829,6 +900,19 @@ fn reader_loop<T: WireElement>(
                     msg,
                     at: Instant::now(),
                 },
+                Err(detail) => Event::Bad { from: peer, detail },
+            },
+            wire::KIND_GRANT => match wire::decode_grant(&body) {
+                Ok((f, comm, seq)) => {
+                    if f != peer {
+                        Event::Bad {
+                            from: peer,
+                            detail: format!("GRANT claims sender {f} on the link to {peer}"),
+                        }
+                    } else {
+                        Event::Grant { comm, seq }
+                    }
+                }
                 Err(detail) => Event::Bad { from: peer, detail },
             },
             wire::KIND_EPOCH => match wire::decode_epoch(&body) {

@@ -9,11 +9,11 @@
 //!   body := u8 kind | kind-specific payload          (all little-endian)
 //!
 //!   DATA (kind 0) — one `(step, Frame, payload)` message of the data plane:
-//!   ┌────┬───────┬──────────┬──────────┬──────────┬───────────────┬──────────────┐
-//!   │kind│ dtype │ u16 bufs │ u32 from │ u64 step │ u32 idx│u32 of│ per-buf lens │
-//!   ├────┴───────┴──────────┴──────────┴──────────┴───────────────┴──────────────┤
-//!   │ elements of every buffer, concatenated in payload order (LE)              │
-//!   └───────────────────────────────────────────────────────────────────────────┘
+//!   ┌────┬───────┬──────────┬──────────┬──────────┬──────────┬───────────────┬──────────────┐
+//!   │kind│ dtype │ u16 bufs │ u32 from │ u32 comm │ u64 step │ u32 idx│u32 of│ per-buf lens │
+//!   ├────┴───────┴──────────┴──────────┴──────────┴──────────┴───────────────┴──────────────┤
+//!   │ elements of every buffer, concatenated in payload order (LE)                         │
+//!   └──────────────────────────────────────────────────────────────────────────────────────┘
 //!
 //!   HELLO   (1): u32 rank | u16 len | utf-8 mesh-listener address
 //!   ADDRMAP (2): u32 p | p × (u16 len | utf-8 address)
@@ -29,7 +29,25 @@
 //!                (phase 0 = vote: ranks = suspected-dead set;
 //!                 phase 1 = commit: everyone keeps its result;
 //!                 phase 2 = decide: ranks = new live set, epoch bumped)
+//!   GRANT  (10): u32 from | u32 comm | u64 seq       (service-mode dispatch)
 //! ```
+//!
+//! ## Communicator-partitioned step tags
+//!
+//! Service mode ([`crate::net::service`]) multiplexes many tenants over
+//! one mesh, so a step tag alone no longer names a unique message: tenant
+//! A's step 3 and tenant B's step 3 are different frames in flight at the
+//! same time. The tag space is therefore **partitioned by communicator**:
+//! the low [`COMM_SHIFT`] bits of a tag are the tenant's own cumulative
+//! step counter and the high bits are its communicator id
+//! ([`comm_tag`]/[`tag_comm`]/[`tag_step`]). `DATA` frames carry the comm
+//! id **twice** — folded into the step tag *and* as the explicit
+//! `u32 comm` header field — and the decoder rejects any frame where the
+//! two disagree, the same way the bootstrap's session token rejects a
+//! splice from a different mesh: a torn or forged tag fails loudly at
+//! decode instead of being demuxed into the wrong tenant's slot. Plain
+//! (non-service) endpoints run entirely in communicator 0, where
+//! `comm_tag(0, step) == step` and nothing changes on the wire.
 //!
 //! `DATA` serializes exactly what the in-process transports pass by
 //! `Arc`: the `(step, from)` tag, the `(chunk_idx, n_chunks)` [`Frame`],
@@ -62,6 +80,47 @@ pub const KIND_PARAMS: u8 = 6;
 pub const KIND_HEARTBEAT: u8 = 7;
 pub const KIND_READY: u8 = 8;
 pub const KIND_EPOCH: u8 = 9;
+pub const KIND_GRANT: u8 = 10;
+
+// ------------------------------------------------- communicator tags --
+
+/// Bit position splitting a step tag into `(comm, step)`: the low 48 bits
+/// are the communicator's own cumulative step counter, the high bits its
+/// communicator id. 2^48 cumulative steps at one million steps per second
+/// is ~9 years of uptime per tenant — the counter cannot plausibly wrap
+/// into the comm field.
+pub const COMM_SHIFT: u32 = 48;
+
+/// Largest communicator id representable in a tag's high bits that still
+/// round-trips through the wire's `u32 comm` field. Capped at 2^16 − 1 so
+/// `comm << COMM_SHIFT` never touches the sign/overflow territory of a
+/// 64-bit tag.
+pub const MAX_COMM: u32 = (1 << 16) - 1;
+
+/// Fold a communicator id and its per-communicator step counter into one
+/// tag of the shared step-tag space. Communicator 0 is the identity
+/// (`comm_tag(0, s) == s`), so every pre-service code path is unchanged.
+#[inline]
+pub fn comm_tag(comm: u32, step: usize) -> usize {
+    debug_assert!(comm <= MAX_COMM, "communicator id {comm} exceeds MAX_COMM");
+    debug_assert!(
+        step < (1usize << COMM_SHIFT),
+        "per-communicator step counter overflowed into the comm field"
+    );
+    ((comm as usize) << COMM_SHIFT) | step
+}
+
+/// The communicator id in a tag's high bits.
+#[inline]
+pub fn tag_comm(tag: usize) -> u32 {
+    (tag >> COMM_SHIFT) as u32
+}
+
+/// The per-communicator step counter in a tag's low bits.
+#[inline]
+pub fn tag_step(tag: usize) -> usize {
+    tag & ((1usize << COMM_SHIFT) - 1)
+}
 
 /// Sanity cap on one frame's body — a corrupt length prefix must not
 /// allocate unbounded memory on the receive side, and senders **assert**
@@ -180,7 +239,9 @@ pub fn write_all(stream: &mut impl Write, frame_bytes: &[u8]) -> Result<(), Stri
 
 /// Encode one data-plane message. The payload's chunks are serialized in
 /// order; per-buffer lengths travel in the header so the decoder can
-/// rebuild the exact arity (zero-length buffers included).
+/// rebuild the exact arity (zero-length buffers included). The
+/// communicator id is written twice — in the explicit `comm` field and in
+/// the step tag's high bits — so the decoder can cross-check them.
 pub fn encode_data<T: WireElement>(
     from: usize,
     step: u64,
@@ -188,11 +249,12 @@ pub fn encode_data<T: WireElement>(
     payload: &Payload<T>,
 ) -> Vec<u8> {
     let elems: usize = payload.iter().map(|c| c.len()).sum();
-    let mut out = frame_buf(24 + 4 * payload.len() + elems * std::mem::size_of::<T>());
+    let mut out = frame_buf(28 + 4 * payload.len() + elems * std::mem::size_of::<T>());
     out.push(KIND_DATA);
     out.push(T::DTYPE);
     out.extend_from_slice(&(payload.len() as u16).to_le_bytes());
     out.extend_from_slice(&(from as u32).to_le_bytes());
+    out.extend_from_slice(&tag_comm(step as usize).to_le_bytes());
     out.extend_from_slice(&step.to_le_bytes());
     out.extend_from_slice(&frame.encode());
     for c in payload {
@@ -219,7 +281,7 @@ pub fn decode_data<T: WireElement>(
     pool: &Arc<BlockPool<T>>,
 ) -> Result<DataMsg<T>, String> {
     let ew = std::mem::size_of::<T>();
-    if body.len() < 24 {
+    if body.len() < 28 {
         return Err(format!("DATA header truncated ({} bytes)", body.len()));
     }
     if body[1] != T::DTYPE {
@@ -231,9 +293,17 @@ pub fn decode_data<T: WireElement>(
     }
     let n_bufs = u16::from_le_bytes(body[2..4].try_into().expect("2 bytes")) as usize;
     let from = u32::from_le_bytes(body[4..8].try_into().expect("4 bytes")) as usize;
-    let step = u64::from_le_bytes(body[8..16].try_into().expect("8 bytes"));
-    let frame = Frame::decode(body[16..24].try_into().expect("8 bytes"));
-    let lens_end = 24 + 4 * n_bufs;
+    let comm = u32::from_le_bytes(body[8..12].try_into().expect("4 bytes"));
+    let step = u64::from_le_bytes(body[12..20].try_into().expect("8 bytes"));
+    if comm != tag_comm(step as usize) {
+        return Err(format!(
+            "communicator mismatch: frame claims comm {comm} but its step tag \
+             {step:#x} belongs to comm {} — cross-tenant splice or corruption",
+            tag_comm(step as usize)
+        ));
+    }
+    let frame = Frame::decode(body[20..28].try_into().expect("8 bytes"));
+    let lens_end = 28 + 4 * n_bufs;
     if body.len() < lens_end {
         return Err(format!(
             "DATA length table truncated ({} bufs, {} bytes)",
@@ -244,7 +314,7 @@ pub fn decode_data<T: WireElement>(
     let lens: Vec<usize> = (0..n_bufs)
         .map(|i| {
             u32::from_le_bytes(
-                body[24 + 4 * i..28 + 4 * i].try_into().expect("4 bytes"),
+                body[28 + 4 * i..32 + 4 * i].try_into().expect("4 bytes"),
             ) as usize
         })
         .collect();
@@ -564,6 +634,34 @@ pub fn decode_epoch(body: &[u8]) -> Result<EpochMsg, String> {
     })
 }
 
+// ------------------------------------------------------------- service --
+
+/// A service-mode dispatch grant: rank 0's sequencer announcing that job
+/// `seq` (its global dispatch sequence number) is communicator `comm`'s
+/// turn to run. Non-zero ranks execute grants strictly in `seq` order, so
+/// every rank runs the concurrent tenants' jobs in one agreed total order
+/// — the property that makes sequential per-rank engines deadlock-free
+/// (see [`crate::net::service`]).
+pub fn encode_grant(from: usize, comm: u32, seq: u64) -> Vec<u8> {
+    let mut out = frame_buf(17);
+    out.push(KIND_GRANT);
+    out.extend_from_slice(&(from as u32).to_le_bytes());
+    out.extend_from_slice(&comm.to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
+    finish_frame(out)
+}
+
+/// `(from, comm, seq)` of a `GRANT` body.
+pub fn decode_grant(body: &[u8]) -> Result<(usize, u32, u64), String> {
+    if body.len() != 17 {
+        return Err("GRANT malformed".into());
+    }
+    let from = u32::from_le_bytes(body[1..5].try_into().expect("4 bytes")) as usize;
+    let comm = u32::from_le_bytes(body[5..9].try_into().expect("4 bytes"));
+    let seq = u64::from_le_bytes(body[9..17].try_into().expect("8 bytes"));
+    Ok((from, comm, seq))
+}
+
 fn push_str(body: &mut Vec<u8>, s: &str) {
     body.extend_from_slice(&(s.len() as u16).to_le_bytes());
     body.extend_from_slice(s.as_bytes());
@@ -638,6 +736,52 @@ mod tests {
             .contains("element section"));
         // Truncated header.
         assert!(decode_data::<f32>(&body[..10], &pool32).is_err());
+    }
+
+    #[test]
+    fn comm_tags_partition_and_round_trip() {
+        assert_eq!(comm_tag(0, 41), 41);
+        let tag = comm_tag(7, 41);
+        assert_eq!(tag_comm(tag), 7);
+        assert_eq!(tag_step(tag), 41);
+        // Distinct comms at the same step never collide.
+        assert_ne!(comm_tag(1, 3), comm_tag(2, 3));
+        // The full extremes survive the fold.
+        let top = comm_tag(MAX_COMM, (1usize << COMM_SHIFT) - 1);
+        assert_eq!(tag_comm(top), MAX_COMM);
+        assert_eq!(tag_step(top), (1usize << COMM_SHIFT) - 1);
+    }
+
+    #[test]
+    fn data_carries_comm_and_rejects_spliced_tags() {
+        let pool = Arc::new(BlockPool::<f32>::new());
+        let payload = payload_of(&pool, &[&[1.0, 2.0, 3.0]]);
+        let step = comm_tag(5, 9) as u64;
+        let bytes = encode_data::<f32>(1, step, Frame::WHOLE, &payload);
+        let body = &bytes[4..];
+        let msg = decode_data::<f32>(body, &pool).unwrap();
+        assert_eq!(msg.step, step);
+        assert_eq!(tag_comm(msg.step as usize), 5);
+        assert_eq!(tag_step(msg.step as usize), 9);
+
+        // Forge the explicit comm field without fixing the tag: the
+        // decoder must reject the splice, like a bad session token.
+        let mut forged = body.to_vec();
+        forged[8..12].copy_from_slice(&6u32.to_le_bytes());
+        assert!(decode_data::<f32>(&forged, &pool)
+            .unwrap_err()
+            .contains("communicator mismatch"));
+    }
+
+    #[test]
+    fn grant_round_trips() {
+        let enc = encode_grant(0, 12, 3456);
+        let body = read_frame(&mut enc.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(body[0], KIND_GRANT);
+        assert_eq!(decode_grant(&body).unwrap(), (0, 12, 3456));
+        assert!(decode_grant(&body[..9]).is_err());
     }
 
     #[test]

@@ -228,6 +228,19 @@ fn lift_op(op: &Op, map: &NodeMap, off: u32) -> Op {
 /// broadcasts each node's result down the mirrored tree. The composed
 /// schedule is verified before it is returned, so a caller holding an
 /// `Ok` has the same machine-checked guarantee as for the flat builders.
+///
+/// **Do not re-compose.** `inner` must be a *flat* schedule whose `p`
+/// ranks are all leaders — never the output of a previous
+/// `compose_two_level`. A composed schedule's ranks are physical
+/// (leaders *and* members), so feeding it back in would route phase-2
+/// traffic to member ranks that the outer leader table cannot reach,
+/// and its intra-node phases would nest inside the new phase 1/3 trees.
+/// Deeper hierarchies are built by composing once over a
+/// [`NodeMap`] describing the full topology, not by iterating this
+/// function. This is the single statement of that contract; the
+/// hierarchical scheduler ([`crate::coordinator`]), the simulator
+/// ([`crate::des`]), and the mixed-dtype notes
+/// ([`crate::cluster::mixed`]) link here rather than restating it.
 pub fn compose_two_level(inner: &ProcSchedule, map: &NodeMap) -> Result<ProcSchedule, String> {
     let l = map.n_nodes();
     let p = map.p();
