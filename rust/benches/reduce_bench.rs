@@ -14,9 +14,13 @@
 //! **chunked-vs-monolithic** step-streaming ablation on the deterministic
 //! DES clock (`BENCH_chunking.json`), measures the **sockets-vs-
 //! in-process** transport cost over a real loopback TCP mesh
-//! (`BENCH_net.json`), and runs the deterministic **flat-vs-hierarchical**
+//! (`BENCH_net.json`), runs the deterministic **flat-vs-hierarchical**
 //! scheduling ablation under a split intra/inter parameter regime
-//! (`BENCH_hier.json`).
+//! (`BENCH_hier.json`), and times the **reduction kernels** themselves —
+//! naive scalar loop vs the lane-unrolled serial kernel vs the production
+//! threshold dispatch vs a forced threaded split, per dtype × size, plus
+//! the reduce-scatter → allgather composition vs the fused allreduce
+//! (`BENCH_kernels.json`, gated by `bench_gate --kernels`).
 //!
 //! Set `GAR_BENCH_FAST=1` (CI smoke) to shrink budgets and sizes.
 
@@ -28,6 +32,9 @@ use std::time::{Duration, Instant};
 
 use harness::{bench, black_box, fmt_t};
 use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use permallreduce::cluster::kernels::{
+    combine, combine_serial, combine_with_threshold, scalar_combine, Prim,
+};
 use permallreduce::cluster::{
     oracle, ClusterExecutor, ExecOptions, JobIo, NativeReducer, PersistentCluster, ReduceOp,
     Reducer,
@@ -35,7 +42,7 @@ use permallreduce::cluster::{
 use permallreduce::coordinator::{bucket, Communicator};
 use permallreduce::cost::NetParams;
 use permallreduce::des::simulate_chunked;
-use permallreduce::sched::stats as sched_stats;
+use permallreduce::sched::{shard_range, stats as sched_stats};
 use permallreduce::util::Rng;
 
 fn fast_mode() -> bool {
@@ -582,6 +589,164 @@ fn bench_hier() {
     println!("wrote BENCH_hier.json (speedup {min:.2}×–{max:.2}×)");
 }
 
+/// Four timing columns for one (dtype, size) kernel cell: the naive
+/// scalar reference loop, the lane-unrolled serial kernel, the production
+/// threshold dispatch ([`combine`] — what every executor calls), and a
+/// forced 2-way threaded split (threshold = buffer size, so `workers_for`
+/// splits regardless of the production threshold). `Sum` is the op — it
+/// is the γ term the paper's cost model charges.
+fn kernel_cols<T: Prim>(
+    n: usize,
+    seed: u64,
+    budget_elems: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+) -> (f64, f64, f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut dst: Vec<T> = (0..n).map(|_| gen(&mut rng)).collect();
+    let src: Vec<T> = (0..n).map(|_| gen(&mut rng)).collect();
+    let bytes = n * std::mem::size_of::<T>();
+    let iters = (budget_elems / n).clamp(4, 20_000);
+    let scalar_s = time_mean(iters, || {
+        scalar_combine(ReduceOp::Sum, &mut dst, &src);
+        black_box(&mut dst);
+    });
+    let serial_s = time_mean(iters, || {
+        combine_serial(ReduceOp::Sum, &mut dst, &src);
+        black_box(&mut dst);
+    });
+    let production_s = time_mean(iters, || {
+        combine(ReduceOp::Sum, &mut dst, &src);
+        black_box(&mut dst);
+    });
+    let threaded_s = time_mean(iters, || {
+        combine_with_threshold(ReduceOp::Sum, &mut dst, &src, bytes.max(1));
+        black_box(&mut dst);
+    });
+    (scalar_s, serial_s, production_s, threaded_s)
+}
+
+/// Kernel microbench + collective-composition ablation
+/// (`BENCH_kernels.json`, gated by `bench_gate --kernels`).
+///
+/// The gated quantity is `scalar_s / production_s` per dtype × size: the
+/// production kernel (vectorized serial below the threading threshold,
+/// threaded above) must never fall behind the naive scalar loop it
+/// replaced —
+/// machine-relative, measured in the same process, so it survives slow
+/// runners. The `serial_s` and `threaded_s` columns are informational
+/// (the forced split pays spawn overhead at small sizes by design).
+///
+/// The informational `collectives` array compares the first-class
+/// reduce-scatter → allgather composition against the fused allreduce on
+/// the same communicator and data: the fused schedule skips the
+/// intermediate shard materialization, so `composed_s / fused_s` is the
+/// measured price of running the halves separately (and the reason the
+/// fused path stays the default).
+fn bench_kernels() {
+    let fast = fast_mode();
+    let sizes: &[usize] = if fast {
+        &[4_096, 65_536]
+    } else {
+        &[4_096, 65_536, 1_048_576]
+    };
+    let budget_elems: usize = if fast { 8_000_000 } else { 64_000_000 };
+
+    println!("\n== reduction kernels: scalar vs vectorized vs threaded ==");
+    let mut rows = String::new();
+    let mut speedups: Vec<f64> = Vec::new();
+    for &n in sizes {
+        let cols: [(&str, usize, (f64, f64, f64, f64)); 4] = [
+            ("f32", 4, kernel_cols::<f32>(n, 0xBE7, budget_elems, |r| r.f32())),
+            ("f64", 8, kernel_cols::<f64>(n, 0xBE8, budget_elems, |r| r.f32() as f64)),
+            ("i32", 4, kernel_cols::<i32>(n, 0xBE9, budget_elems, |r| {
+                r.below(1000) as i32
+            })),
+            ("i64", 8, kernel_cols::<i64>(n, 0xBEA, budget_elems, |r| {
+                r.below(1000) as i64
+            })),
+        ];
+        for (dtype, elem, (scalar_s, serial_s, production_s, threaded_s)) in cols {
+            let speedup = scalar_s / production_s;
+            speedups.push(speedup);
+            println!(
+                "{dtype} {:>9} B: scalar {} | serial {} | production {} | threaded {} \
+                 → {speedup:.2}×",
+                n * elem,
+                fmt_t(scalar_s),
+                fmt_t(serial_s),
+                fmt_t(production_s),
+                fmt_t(threaded_s),
+            );
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"dtype\": \"{dtype}\", \"elems\": {n}, \"bytes\": {}, \
+                 \"scalar_s\": {scalar_s:.6e}, \"serial_s\": {serial_s:.6e}, \
+                 \"production_s\": {production_s:.6e}, \"threaded_s\": {threaded_s:.6e}, \
+                 \"speedup\": {speedup:.3}}}",
+                n * elem
+            ));
+        }
+    }
+    let min = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+
+    // Collective composition: reduce-scatter → allgather vs the fused
+    // allreduce, same communicator, same inputs, bit-identical results.
+    println!("\n== reduce-scatter + allgather vs fused allreduce ==");
+    let p = 8;
+    let n = if fast { 16_384 } else { 262_144 };
+    let mut rng = Rng::new(0xC011);
+    let xs: Vec<Vec<f32>> = (0..p)
+        .map(|_| (0..n).map(|_| rng.f32()).collect())
+        .collect();
+    let comm = Communicator::builder(p).build().unwrap();
+    let iters = if fast { 3 } else { 5 };
+    let mut coll_rows = String::new();
+    for kind in [AlgorithmKind::Ring, AlgorithmKind::BwOptimal] {
+        let mut ag_in: Vec<Vec<f32>> = vec![vec![0.0f32; n]; p];
+        let composed_s = time_mean(iters, || {
+            let rs = comm.reduce_scatter(&xs, ReduceOp::Sum, kind).unwrap();
+            for (r, dst) in ag_in.iter_mut().enumerate() {
+                dst[shard_range(p, r, n)].copy_from_slice(&rs.ranks[r]);
+            }
+            black_box(comm.allgather(&ag_in, kind).unwrap());
+        });
+        let fused_s = time_mean(iters, || {
+            black_box(comm.allreduce(&xs, ReduceOp::Sum, kind).unwrap());
+        });
+        let ratio = composed_s / fused_s;
+        println!(
+            "{:>10} p{p} {:>9} B/rank: rs+ag {} | fused {} → {ratio:.2}× composition cost",
+            kind.label(),
+            n * 4,
+            fmt_t(composed_s),
+            fmt_t(fused_s),
+        );
+        if !coll_rows.is_empty() {
+            coll_rows.push_str(",\n");
+        }
+        coll_rows.push_str(&format!(
+            "    {{\"kind\": \"{}\", \"p\": {p}, \"elems\": {n}, \
+             \"composed_s\": {composed_s:.6e}, \"fused_s\": {fused_s:.6e}, \
+             \"ratio\": {ratio:.3}}}",
+            kind.label()
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"kernels\",\n  \"op\": \"sum\",\n  \
+         \"note\": \"speedup = scalar_s / production_s, same process, machine-relative; \
+         gated by bench_gate --kernels. collectives ratio = (reduce-scatter + allgather) \
+         / fused allreduce, informational\",\n  \"entries\": [\n{rows}\n  ],\n  \
+         \"min_speedup\": {min:.3},\n  \"max_speedup\": {max:.3},\n  \
+         \"collectives\": [\n{coll_rows}\n  ]\n}}\n"
+    );
+    std::fs::write("BENCH_kernels.json", &json).expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json (speedup {min:.2}×–{max:.2}×)");
+}
+
 /// Shared iteration count for both transports (determined by shape only,
 /// so every rank of the socket mesh agrees).
 fn net_iters(fast: bool, n: usize, p: usize) -> usize {
@@ -613,6 +778,7 @@ fn main() {
     );
     println!("effective γ (native, 64k chunks): {g_native:.2e} s/B (paper Table 2: 2.0e-10)");
 
+    bench_kernels();
     bench_bucketing();
     bench_dataplane();
     bench_chunking();

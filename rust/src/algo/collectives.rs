@@ -1,0 +1,332 @@
+//! First-class reduce-scatter and allgather schedule builders.
+//!
+//! The paper treats Allreduce as reduce-scatter followed by allgather
+//! (§4); production stacks expose both phases as collectives in their own
+//! right (gradient sharding wants the scatter alone, parameter
+//! resharding wants the gather alone). These builders emit **rank-aligned**
+//! schedules over `n_units = P`: rank `r` owns unit `r`, i.e. element
+//! range [`shard_range`]`(P, r, n)` at execution time.
+//!
+//! | builder | steps | traffic/process | works for |
+//! |---|---|---|---|
+//! | ring reduce-scatter | `P−1` | `(P−1)/P·m` | any `P` |
+//! | ring allgather | `P−1` | `(P−1)/P·m` | any `P` |
+//! | halving reduce-scatter | `log P` | `(P−1)/P·m` | power-of-two `P` |
+//! | doubling allgather | `log P` | `(P−1)/P·m` | power-of-two `P` |
+//!
+//! Both families move the bandwidth-optimal `(P−1)/P·m` bytes; they trade
+//! step count (α) against per-step message count exactly like the fused
+//! algorithms they are phases of. [`build_reduce_scatter`] /
+//! [`build_allgather`] map an [`AlgorithmKind`] onto a family: `Ring` and
+//! `Naive` take the ring form, everything else takes the logarithmic form
+//! when `P` is a power of two and falls back to the ring form otherwise
+//! (the halving form's shrink-to-`P'` workaround cannot be rank-aligned —
+//! merged ranks would own no shard).
+//!
+//! ## Input/output contract
+//!
+//! Every rank passes a **full-length** input vector. A reduce-scatter
+//! reads all of it and returns rank `r`'s reduced shard; an allgather
+//! reads only rank `r`'s shard (`init` covers just that segment) and
+//! returns the full concatenation. Schedules verify under
+//! [`verify_collective`] with the matching [`Collective`] postcondition
+//! before any data plane runs them.
+//!
+//! [`shard_range`]: crate::sched::shard_range
+//! [`verify_collective`]: crate::sched::verify::verify_collective
+//! [`Collective`]: crate::sched::Collective
+
+use crate::sched::{BufId, Op, ProcSchedule, ScheduleBuilder, Segment};
+
+use super::AlgorithmKind;
+
+/// Pick the reduce-scatter family for `kind` over `p` ranks and build it.
+pub fn build_reduce_scatter(kind: AlgorithmKind, p: usize) -> Result<ProcSchedule, String> {
+    if use_ring(kind, p) {
+        ring_reduce_scatter(p)
+    } else {
+        halving_reduce_scatter(p)
+    }
+}
+
+/// Pick the allgather family for `kind` over `p` ranks and build it.
+pub fn build_allgather(kind: AlgorithmKind, p: usize) -> Result<ProcSchedule, String> {
+    if use_ring(kind, p) {
+        ring_allgather(p)
+    } else {
+        doubling_allgather(p)
+    }
+}
+
+fn use_ring(kind: AlgorithmKind, p: usize) -> bool {
+    matches!(kind, AlgorithmKind::Ring | AlgorithmKind::Naive) || !p.is_power_of_two()
+}
+
+/// Ring reduce-scatter: `P−1` steps, one unit on the wire per step. The
+/// partial sum of unit `u` travels the ring and retires on rank `u`.
+pub fn ring_reduce_scatter(p: usize) -> Result<ProcSchedule, String> {
+    if p == 0 {
+        return Err("reduce-scatter needs at least one rank".into());
+    }
+    let mut b = ScheduleBuilder::new(p, p as u32, format!("rs-ring(P={p})"));
+
+    // record[k] on proc r covers unit (r + P − 1 − k) mod P, so that the
+    // accumulator arriving from proc r−1 at step k always matches the
+    // local record reduced into it, and after P−1 hops proc r's
+    // accumulator has come to rest on its own unit r.
+    let mut record: Vec<BufId> = Vec::with_capacity(p);
+    for k in 0..p {
+        let segs: Vec<Segment> = (0..p)
+            .map(|r| Segment::new(((r + p - 1 - k) % p) as u32, 1))
+            .collect();
+        record.push(b.init_buf_per_proc(&segs));
+    }
+    if p == 1 {
+        return Ok(b.finish(vec![vec![record[0]]]));
+    }
+
+    let mut acc = record[0];
+    for k in 1..p {
+        b.begin_step();
+        let fresh = b.fresh();
+        for proc in 0..p {
+            b.op(proc, Op::send((proc + 1) % p, vec![acc]));
+            b.op(proc, Op::recv((proc + p - 1) % p, vec![fresh]));
+            b.op(proc, Op::Reduce { dst: fresh, src: record[k] });
+            b.op(proc, Op::Free { buf: acc });
+            b.op(proc, Op::Free { buf: record[k] });
+        }
+        b.end_step();
+        acc = fresh;
+    }
+    Ok(b.finish(vec![vec![acc]; p]))
+}
+
+/// Ring allgather: `P−1` steps; every rank's shard circulates the ring
+/// verbatim until all ranks hold all shards.
+pub fn ring_allgather(p: usize) -> Result<ProcSchedule, String> {
+    if p == 0 {
+        return Err("allgather needs at least one rank".into());
+    }
+    let mut b = ScheduleBuilder::new(p, p as u32, format!("ag-ring(P={p})"));
+    let segs: Vec<Segment> = (0..p).map(|r| Segment::new(r as u32, 1)).collect();
+    let mine = b.init_buf_per_proc(&segs);
+    if p == 1 {
+        return Ok(b.finish(vec![vec![mine]]));
+    }
+
+    // got[k] on proc r ends up holding proc (r − 1 − k) mod P's shard.
+    let mut got: Vec<BufId> = Vec::with_capacity(p - 1);
+    let mut cur = mine;
+    for _ in 0..p - 1 {
+        b.begin_step();
+        let fresh = b.fresh();
+        for proc in 0..p {
+            b.op(proc, Op::send((proc + 1) % p, vec![cur]));
+            b.op(proc, Op::recv((proc + p - 1) % p, vec![fresh]));
+        }
+        b.end_step();
+        got.push(fresh);
+        cur = fresh;
+    }
+
+    let mut result: Vec<Vec<BufId>> = Vec::with_capacity(p);
+    for r in 0..p {
+        let row: Vec<BufId> = (0..p)
+            .map(|u| if u == r { mine } else { got[(r + p - 1 - u) % p] })
+            .collect();
+        result.push(row);
+    }
+    Ok(b.finish(result))
+}
+
+/// Recursive-halving reduce-scatter for power-of-two `P`: `log P` steps,
+/// each exchanging half of the live range with the partner across the
+/// current subcube boundary.
+pub fn halving_reduce_scatter(p: usize) -> Result<ProcSchedule, String> {
+    if !p.is_power_of_two() {
+        return Err(format!("halving reduce-scatter needs a power-of-two P, got {p}"));
+    }
+    let levels = p.trailing_zeros() as usize;
+    let mut b = ScheduleBuilder::new(p, p as u32, format!("rs-halving(P={p})"));
+
+    let mut units: Vec<Vec<BufId>> = vec![Vec::with_capacity(p); p];
+    for u in 0..p {
+        let id = b.init_buf_per_proc(&vec![Segment::new(u as u32, 1); p]);
+        for per in units.iter_mut() {
+            per.push(id);
+        }
+    }
+    if p == 1 {
+        return Ok(b.finish(vec![units[0].clone()]));
+    }
+
+    // Participant v's live range [lo, lo+len) narrows to its own unit.
+    let mut lo: Vec<usize> = vec![0; p];
+    let mut len: Vec<usize> = vec![p; p];
+    for j in 0..levels {
+        let bit = p >> (j + 1);
+        b.begin_step();
+        let mut fresh_of: Vec<Vec<BufId>> = vec![Vec::new(); p];
+        for v in 0..p {
+            fresh_of[v] = (0..len[v] / 2).map(|_| b.fresh()).collect();
+        }
+        for v in 0..p {
+            let pv = v ^ bit;
+            let half = len[v] / 2;
+            let keep_upper = v & bit != 0;
+            let (keep_rng, send_rng) = if keep_upper {
+                (half..len[v], 0..half)
+            } else {
+                (0..half, half..len[v])
+            };
+            let send_bufs: Vec<BufId> = send_rng.map(|k| units[v][k]).collect();
+            b.op(v, Op::send(pv, send_bufs.clone()));
+            b.op(v, Op::recv(pv, fresh_of[v].clone()));
+            for (idx, k) in keep_rng.clone().enumerate() {
+                b.op(v, Op::Reduce { dst: fresh_of[v][idx], src: units[v][k] });
+            }
+            for k in keep_rng {
+                b.op(v, Op::Free { buf: units[v][k] });
+            }
+            for &buf in &send_bufs {
+                b.op(v, Op::Free { buf });
+            }
+            units[v] = fresh_of[v].clone();
+            lo[v] += if keep_upper { half } else { 0 };
+            len[v] = half;
+        }
+        b.end_step();
+    }
+    for v in 0..p {
+        debug_assert_eq!((lo[v], len[v]), (v, 1));
+    }
+    Ok(b.finish(units))
+}
+
+/// Recursive-doubling allgather for power-of-two `P`: `log P` steps,
+/// each doubling the assembled range by swapping it with the partner's
+/// adjacent block.
+pub fn doubling_allgather(p: usize) -> Result<ProcSchedule, String> {
+    if !p.is_power_of_two() {
+        return Err(format!("doubling allgather needs a power-of-two P, got {p}"));
+    }
+    let levels = p.trailing_zeros() as usize;
+    let mut b = ScheduleBuilder::new(p, p as u32, format!("ag-doubling(P={p})"));
+    let segs: Vec<Segment> = (0..p).map(|r| Segment::new(r as u32, 1)).collect();
+    let mine = b.init_buf_per_proc(&segs);
+    if p == 1 {
+        return Ok(b.finish(vec![vec![mine]]));
+    }
+
+    let mut units: Vec<Vec<BufId>> = vec![vec![mine]; p];
+    let mut lo: Vec<usize> = (0..p).collect();
+    let mut len: Vec<usize> = vec![1; p];
+    for j in (0..levels).rev() {
+        let bit = p >> (j + 1);
+        b.begin_step();
+        let mut fresh_of: Vec<Vec<BufId>> = vec![Vec::new(); p];
+        for v in 0..p {
+            fresh_of[v] = (0..len[v]).map(|_| b.fresh()).collect();
+        }
+        let lo_before = lo.clone();
+        for v in 0..p {
+            let pv = v ^ bit;
+            b.op(v, Op::send(pv, units[v].clone()));
+            b.op(v, Op::recv(pv, fresh_of[v].clone()));
+            if lo_before[pv] < lo_before[v] {
+                let mut merged = fresh_of[v].clone();
+                merged.extend(units[v].iter().copied());
+                units[v] = merged;
+                lo[v] = lo_before[pv];
+            } else {
+                units[v].extend(fresh_of[v].iter().copied());
+            }
+            len[v] *= 2;
+        }
+        b.end_step();
+    }
+    for v in 0..p {
+        debug_assert_eq!((lo[v], len[v]), (0, p));
+    }
+    Ok(b.finish(units))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::stats::stats;
+    use crate::sched::verify::verify_collective;
+    use crate::sched::Collective;
+
+    #[test]
+    fn ring_reduce_scatter_verifies_and_counts() {
+        for p in [1usize, 2, 3, 7, 8, 16, 17] {
+            let s = ring_reduce_scatter(p).unwrap();
+            verify_collective(&s, Collective::ReduceScatter)
+                .unwrap_or_else(|e| panic!("P={p}: {e}"));
+            let st = stats(&s);
+            assert_eq!(st.steps, p.saturating_sub(1), "P={p}");
+            assert_eq!(st.critical_units_sent, p as u64 - 1, "P={p}");
+            assert_eq!(st.critical_units_reduced, p as u64 - 1, "P={p}");
+        }
+    }
+
+    #[test]
+    fn ring_allgather_verifies_and_counts() {
+        for p in [1usize, 2, 3, 7, 8, 16, 17] {
+            let s = ring_allgather(p).unwrap();
+            verify_collective(&s, Collective::Allgather)
+                .unwrap_or_else(|e| panic!("P={p}: {e}"));
+            let st = stats(&s);
+            assert_eq!(st.steps, p.saturating_sub(1), "P={p}");
+            assert_eq!(st.critical_units_sent, p as u64 - 1, "P={p}");
+            assert_eq!(st.critical_units_reduced, 0, "P={p}");
+        }
+    }
+
+    #[test]
+    fn halving_reduce_scatter_verifies_and_counts() {
+        for p in [1usize, 2, 4, 8, 16, 64] {
+            let s = halving_reduce_scatter(p).unwrap();
+            verify_collective(&s, Collective::ReduceScatter)
+                .unwrap_or_else(|e| panic!("P={p}: {e}"));
+            let st = stats(&s);
+            assert_eq!(st.steps, p.trailing_zeros() as usize, "P={p}");
+            assert_eq!(st.critical_units_sent, p as u64 - 1, "P={p}");
+            assert_eq!(st.critical_units_reduced, p as u64 - 1, "P={p}");
+        }
+    }
+
+    #[test]
+    fn doubling_allgather_verifies_and_counts() {
+        for p in [1usize, 2, 4, 8, 16, 64] {
+            let s = doubling_allgather(p).unwrap();
+            verify_collective(&s, Collective::Allgather)
+                .unwrap_or_else(|e| panic!("P={p}: {e}"));
+            let st = stats(&s);
+            assert_eq!(st.steps, p.trailing_zeros() as usize, "P={p}");
+            assert_eq!(st.critical_units_sent, p as u64 - 1, "P={p}");
+        }
+    }
+
+    #[test]
+    fn logarithmic_forms_reject_non_pow2() {
+        assert!(halving_reduce_scatter(6).is_err());
+        assert!(doubling_allgather(6).is_err());
+    }
+
+    #[test]
+    fn kind_mapping_falls_back_to_ring() {
+        // Non-pow2 P: every kind resolves to the ring family.
+        let s = build_reduce_scatter(AlgorithmKind::BwOptimal, 6).unwrap();
+        assert!(s.name.contains("ring"), "{}", s.name);
+        // Pow2 P with a logarithmic kind: the halving family.
+        let s = build_reduce_scatter(AlgorithmKind::BwOptimal, 8).unwrap();
+        assert!(s.name.contains("halving"), "{}", s.name);
+        let s = build_allgather(AlgorithmKind::RecursiveDoubling, 8).unwrap();
+        assert!(s.name.contains("doubling"), "{}", s.name);
+        let s = build_allgather(AlgorithmKind::Ring, 8).unwrap();
+        assert!(s.name.contains("ring"), "{}", s.name);
+    }
+}

@@ -16,6 +16,7 @@
 //! `generalized(r=⌈log P⌉)` reproduces Recursive Doubling's — the paper's
 //! claim that both are special cases of the proposed approach (§7, §8).
 
+pub mod collectives;
 pub mod generalized;
 pub mod hybrid;
 pub mod segmented;

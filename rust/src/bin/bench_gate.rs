@@ -28,12 +28,29 @@
 //! lane, not by the bench job, so the default positional mode does *not*
 //! require it — the net lane gates it separately with `--service`.
 //!
+//! The `kernels` section gates `BENCH_kernels.json`'s reduction-kernel
+//! microbench (`--kernels`): its `min_speedup` is the worst
+//! `scalar_s / production_s` cell across dtypes × sizes — the vectorized /
+//! threaded production kernel must never fall behind the naive scalar
+//! loop. Machine-relative wall-clock, so the global slack applies. The
+//! `net` section gates `BENCH_net.json`'s loopback transport ablation
+//! (`--net`) from the *other* direction: the gated quantity is the
+//! **worst-case overhead** (`socket_s / inprocess_s`), a cost, so the
+//! baseline pins a `max_overhead` **ceiling** and `--ratchet` moves it
+//! *down* toward the observed maximum, never up.
+//!
 //! ```text
 //! bench_gate <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json>]]]
 //! bench_gate --self-test <BENCH_baseline.json>   # prove the gate can fail
 //! bench_gate --service <baseline.json> <service.json>   # net-lane throughput gate
-//! bench_gate --ratchet <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json> [<service.json>]]]]
+//! bench_gate --kernels <baseline.json> <kernels.json>   # reduction-kernel floor
+//! bench_gate --net <baseline.json> <net.json>           # loopback overhead ceiling
+//! bench_gate --ratchet <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json> [<service.json> [<kernels.json> [<net.json>]]]]]]
 //! ```
+//!
+//! In `--ratchet` mode a literal `-` skips a positional artifact (kept at
+//! the old floor), so lanes that don't produce every artifact can still
+//! ratchet the ones they measured.
 //!
 //! The baseline is a conservative floor, meant to be ratcheted upward as
 //! the data plane improves; every baseline series must be present in the
@@ -69,6 +86,14 @@ struct Baseline {
     /// Floor on the service soak's `jobs_per_sec` (wall-clock, gated
     /// under the global slack; see `--service`).
     service_floor: Option<f64>,
+    /// Floor on the kernel microbench's `min_speedup` — worst
+    /// `scalar_s / production_s` cell of `BENCH_kernels.json` (wall-clock,
+    /// global slack; see `--kernels`).
+    kernels_floor: Option<f64>,
+    /// **Ceiling** on the worst loopback transport overhead
+    /// (`socket_s / inprocess_s`) of `BENCH_net.json` (wall-clock, global
+    /// slack applied upward; see `--net`). Ratchets downward.
+    net_ceiling: Option<f64>,
 }
 
 /// Floors for the DES-timed chunking artifact. The DES clock is
@@ -166,6 +191,22 @@ fn parse_baseline(text: &str) -> Result<Baseline, String> {
                 .ok_or("baseline `service` missing min_jobs_per_sec")?,
         ),
     };
+    let kernels_floor = match v.get("kernels") {
+        None => None,
+        Some(k) => Some(
+            k.get("min_speedup")
+                .and_then(Value::as_f64)
+                .ok_or("baseline `kernels` missing min_speedup")?,
+        ),
+    };
+    let net_ceiling = match v.get("net") {
+        None => None,
+        Some(n) => Some(
+            n.get("max_overhead")
+                .and_then(Value::as_f64)
+                .ok_or("baseline `net` missing max_overhead")?,
+        ),
+    };
     Ok(Baseline {
         pct,
         series,
@@ -173,7 +214,68 @@ fn parse_baseline(text: &str) -> Result<Baseline, String> {
         chunking,
         hier,
         service_floor,
+        kernels_floor,
+        net_ceiling,
     })
+}
+
+/// The gated quantity of `BENCH_kernels.json`: its `min_speedup` (worst
+/// `scalar_s / production_s` cell across dtypes × sizes).
+fn parse_kernels(text: &str) -> Result<f64, String> {
+    let v = json::parse(text).map_err(|e| format!("kernels parse: {e}"))?;
+    v.get("min_speedup")
+        .and_then(Value::as_f64)
+        .ok_or_else(|| "kernels artifact missing `min_speedup`".to_string())
+}
+
+/// Gate the kernel-speedup floor (empty vec = pass).
+fn gate_kernels(floor: f64, min_speedup: f64, max_regress_pct: f64) -> Vec<String> {
+    let limit = floor * (1.0 - max_regress_pct / 100.0);
+    if min_speedup < limit {
+        vec![format!(
+            "kernels: min_speedup {min_speedup:.3}× regressed more than {max_regress_pct}% \
+             below the baseline floor {floor:.3}× (limit {limit:.3}×)"
+        )]
+    } else {
+        Vec::new()
+    }
+}
+
+/// The gated quantity of `BENCH_net.json`: the **worst** per-entry
+/// loopback overhead (`socket_s / inprocess_s`).
+fn parse_net(text: &str) -> Result<f64, String> {
+    let v = json::parse(text).map_err(|e| format!("net parse: {e}"))?;
+    let entries = v
+        .get("entries")
+        .and_then(Value::as_arr)
+        .ok_or("net artifact missing `entries` array")?;
+    let mut worst = f64::NEG_INFINITY;
+    for (i, e) in entries.iter().enumerate() {
+        let o = e
+            .get("overhead")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("entries[{i}] missing `overhead`"))?;
+        worst = worst.max(o);
+    }
+    if worst.is_finite() {
+        Ok(worst)
+    } else {
+        Err("net artifact has no entries".to_string())
+    }
+}
+
+/// Gate the loopback overhead **ceiling**: fail when the worst observed
+/// overhead exceeds the ceiling by more than the slack (empty vec = pass).
+fn gate_net(ceiling: f64, max_overhead: f64, max_regress_pct: f64) -> Vec<String> {
+    let limit = ceiling * (1.0 + max_regress_pct / 100.0);
+    if max_overhead > limit {
+        vec![format!(
+            "net: worst loopback overhead {max_overhead:.3}× rose more than \
+             {max_regress_pct}% above the baseline ceiling {ceiling:.3}× (limit {limit:.3}×)"
+        )]
+    } else {
+        Vec::new()
+    }
 }
 
 /// The gated quantity of `BENCH_service.json`: its `jobs_per_sec`.
@@ -418,6 +520,24 @@ fn self_test(baseline: &Baseline, max_regress_pct: f64) -> Result<(), String> {
             return Err("service floor does not pass against itself".into());
         }
     }
+    if let Some(floor) = baseline.kernels_floor {
+        let injected = floor * (1.0 - max_regress_pct / 100.0) * 0.5;
+        if gate_kernels(floor, injected, max_regress_pct).is_empty() {
+            return Err("injected kernels regression passed — the gate is broken".into());
+        }
+        if !gate_kernels(floor, floor, max_regress_pct).is_empty() {
+            return Err("kernels floor does not pass against itself".into());
+        }
+    }
+    if let Some(ceiling) = baseline.net_ceiling {
+        let injected = ceiling * (1.0 + max_regress_pct / 100.0) * 2.0;
+        if gate_net(ceiling, injected, max_regress_pct).is_empty() {
+            return Err("injected net-overhead regression passed — the gate is broken".into());
+        }
+        if !gate_net(ceiling, ceiling, max_regress_pct).is_empty() {
+            return Err("net ceiling does not pass against itself".into());
+        }
+    }
     Ok(())
 }
 
@@ -434,6 +554,8 @@ fn ratchet(
     chunking: Option<(f64, Option<f64>)>,
     hier: Option<f64>,
     service: Option<f64>,
+    kernels: Option<f64>,
+    net: Option<f64>,
 ) -> String {
     let discount = 1.0 - baseline.pct / 100.0;
     let mut series: Vec<Series> = baseline
@@ -527,6 +649,29 @@ fn ratchet(
             ",\n  \"service\": {{\"min_jobs_per_sec\": {floor:.4}}}"
         ));
     }
+    // Kernels: wall-clock floor, discounted ratchet, never lowered.
+    let kernels_floor = match (baseline.kernels_floor, kernels) {
+        (Some(old), Some(got)) => Some(old.max(got * discount)),
+        (Some(old), None) => Some(old),
+        (None, Some(got)) => Some(got * discount),
+        (None, None) => None,
+    };
+    if let Some(floor) = kernels_floor {
+        out.push_str(&format!(",\n  \"kernels\": {{\"min_speedup\": {floor:.4}}}"));
+    }
+    // Net: a *ceiling* on a cost, so the ratchet direction flips — move
+    // down toward `observed × (1 + pct/100)` (the same slack the gate
+    // grants) and never up.
+    let inflate = 1.0 + baseline.pct / 100.0;
+    let net_ceiling = match (baseline.net_ceiling, net) {
+        (Some(old), Some(got)) => Some(old.min(got * inflate)),
+        (Some(old), None) => Some(old),
+        (None, Some(got)) => Some(got * inflate),
+        (None, None) => None,
+    };
+    if let Some(ceiling) = net_ceiling {
+        out.push_str(&format!(",\n  \"net\": {{\"max_overhead\": {ceiling:.4}}}"));
+    }
     out.push_str("\n}\n");
     out
 }
@@ -534,15 +679,15 @@ fn ratchet(
 fn run() -> Result<(), String> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (mode, files): (&str, Vec<&String>) = match args.first().map(String::as_str) {
-        Some(m @ ("--self-test" | "--ratchet" | "--service")) => {
+        Some(m @ ("--self-test" | "--ratchet" | "--service" | "--kernels" | "--net")) => {
             (m, args.iter().skip(1).collect())
         }
         _ => ("", args.iter().collect()),
     };
     let selftest = mode == "--self-test";
-    let usage = "usage: bench_gate [--self-test | --service | --ratchet] <baseline.json> \
-                 [<dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json> \
-                 [<service.json>]]]]]";
+    let usage = "usage: bench_gate [--self-test | --service | --kernels | --net | --ratchet] \
+                 <baseline.json> [<dataplane.json> [<bucketing.json> [<chunking.json> \
+                 [<hier.json> [<service.json> [<kernels.json> [<net.json>]]]]]]]";
     let baseline_path = files.first().ok_or(usage)?;
     let baseline_text = std::fs::read_to_string(baseline_path)
         .map_err(|e| format!("reading {baseline_path}: {e}"))?;
@@ -594,38 +739,77 @@ fn run() -> Result<(), String> {
         ));
     }
 
+    if mode == "--kernels" {
+        let floor = baseline
+            .kernels_floor
+            .ok_or("baseline has no `kernels` section to gate")?;
+        let kernels_path = files.get(1).ok_or(usage)?;
+        let kernels_text = std::fs::read_to_string(kernels_path)
+            .map_err(|e| format!("reading {kernels_path}: {e}"))?;
+        let got = parse_kernels(&kernels_text)?;
+        let failures = gate_kernels(floor, got, pct);
+        if failures.is_empty() {
+            println!(
+                "bench_gate OK: kernel min_speedup {got:.3}× within the baseline \
+                 floor {floor:.3}×"
+            );
+            return Ok(());
+        }
+        return Err(format!(
+            "perf regression gate failed:\n  {}",
+            failures.join("\n  ")
+        ));
+    }
+
+    if mode == "--net" {
+        let ceiling = baseline
+            .net_ceiling
+            .ok_or("baseline has no `net` section to gate")?;
+        let net_path = files.get(1).ok_or(usage)?;
+        let net_text = std::fs::read_to_string(net_path)
+            .map_err(|e| format!("reading {net_path}: {e}"))?;
+        let got = parse_net(&net_text)?;
+        let failures = gate_net(ceiling, got, pct);
+        if failures.is_empty() {
+            println!(
+                "bench_gate OK: worst loopback overhead {got:.3}× within the baseline \
+                 ceiling {ceiling:.3}×"
+            );
+            return Ok(());
+        }
+        return Err(format!(
+            "perf regression gate failed:\n  {}",
+            failures.join("\n  ")
+        ));
+    }
+
     let current_path = files.get(1).ok_or(usage)?;
     let current_text = std::fs::read_to_string(current_path)
         .map_err(|e| format!("reading {current_path}: {e}"))?;
     let current = parse_current(&current_text)?;
 
     if mode == "--ratchet" {
-        // Optional artifacts: ratchet whatever was measured this run.
-        let bucketing = match files.get(2) {
-            Some(path) => Some(parse_bucketing(
-                &std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?,
-            )?),
-            None => None,
+        // Optional artifacts: ratchet whatever was measured this run. A
+        // literal `-` skips a position (e.g. the service soak runs in a
+        // different CI lane than the bench smoke).
+        let read_opt = |idx: usize| -> Result<Option<String>, String> {
+            match files.get(idx) {
+                None => Ok(None),
+                Some(path) if path.as_str() == "-" => Ok(None),
+                Some(path) => std::fs::read_to_string(path)
+                    .map(Some)
+                    .map_err(|e| format!("reading {path}: {e}")),
+            }
         };
-        let chunking = match files.get(3) {
-            Some(path) => Some(parse_chunking(
-                &std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?,
-            )?),
-            None => None,
-        };
-        let hier = match files.get(4) {
-            Some(path) => Some(parse_hier(
-                &std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?,
-            )?),
-            None => None,
-        };
-        let service = match files.get(5) {
-            Some(path) => Some(parse_service(
-                &std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?,
-            )?),
-            None => None,
-        };
-        let updated = ratchet(&baseline, &current, bucketing, chunking, hier, service);
+        let bucketing = read_opt(2)?.map(|t| parse_bucketing(&t)).transpose()?;
+        let chunking = read_opt(3)?.map(|t| parse_chunking(&t)).transpose()?;
+        let hier = read_opt(4)?.map(|t| parse_hier(&t)).transpose()?;
+        let service = read_opt(5)?.map(|t| parse_service(&t)).transpose()?;
+        let kernels = read_opt(6)?.map(|t| parse_kernels(&t)).transpose()?;
+        let net = read_opt(7)?.map(|t| parse_net(&t)).transpose()?;
+        let updated = ratchet(
+            &baseline, &current, bucketing, chunking, hier, service, kernels, net,
+        );
         print!("{updated}");
         return Ok(());
     }
@@ -747,7 +931,9 @@ mod tests {
             "chunking": {"min_speedup": 1.0, "largest_bucket_p8_min_speedup": 1.0,
                          "max_regress_pct": 0.5},
             "hier": {"min_speedup": 1.0, "max_regress_pct": 0.5},
-            "service": {"min_jobs_per_sec": 1.0}
+            "service": {"min_jobs_per_sec": 1.0},
+            "kernels": {"min_speedup": 1.0},
+            "net": {"max_overhead": 500.0}
         }"#;
         let base = parse_baseline(text).unwrap();
         assert_eq!(base.pct, 20.0);
@@ -762,6 +948,8 @@ mod tests {
         assert_eq!(h.min_speedup, 1.0);
         assert_eq!(h.pct, 0.5);
         assert_eq!(base.service_floor, Some(1.0));
+        assert_eq!(base.kernels_floor, Some(1.0));
+        assert_eq!(base.net_ceiling, Some(500.0));
         // A baseline without the optional sections stays valid (those
         // gates are then skipped).
         let text = r#"{
@@ -773,6 +961,8 @@ mod tests {
         assert!(base.chunking.is_none());
         assert!(base.hier.is_none());
         assert!(base.service_floor.is_none());
+        assert!(base.kernels_floor.is_none());
+        assert!(base.net_ceiling.is_none());
     }
 
     #[test]
@@ -886,6 +1076,8 @@ mod tests {
                 pct: 0.5,
             }),
             service_floor: Some(100.0),
+            kernels_floor: Some(1.0),
+            net_ceiling: Some(500.0),
         };
         // First series measured much faster (ratchets, discounted by the
         // 20% margin), second measured slower (floor must not move), plus
@@ -902,6 +1094,8 @@ mod tests {
             Some((1.3, Some(1.4))),
             Some(1.7),
             Some(500.0),
+            Some(2.0),
+            Some(40.0),
         );
         let new = parse_baseline(&text).expect("ratchet output must be a valid baseline");
         assert_eq!(new.pct, 20.0);
@@ -928,6 +1122,10 @@ mod tests {
         assert_eq!(h.pct, 0.5);
         // Service throughput is wall-clock: discounted ratchet.
         assert!((new.service_floor.unwrap() - 400.0).abs() < 1e-9);
+        // Kernels is a wall-clock floor: discounted ratchet upward.
+        assert!((new.kernels_floor.unwrap() - 1.6).abs() < 1e-9);
+        // Net is a cost *ceiling*: ratchets DOWN to observed × (1 + 20%).
+        assert!((new.net_ceiling.unwrap() - 48.0).abs() < 1e-9);
         // The ratcheted baseline accepts the run it was ratcheted from.
         assert!(gate(&new.series, &current, new.pct).is_empty());
     }
@@ -944,14 +1142,27 @@ mod tests {
                 pct: 0.5,
             }),
             service_floor: Some(80.0),
+            kernels_floor: Some(1.1),
+            net_ceiling: Some(60.0),
         };
-        let text = ratchet(&base, &[series(4, 4096, 1.0)], None, None, None, None);
+        let text = ratchet(
+            &base,
+            &[series(4, 4096, 1.0)],
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+        );
         let new = parse_baseline(&text).unwrap();
         assert_eq!(new.series[0].speedup, 1.5);
         assert_eq!(new.bucketing_floor, Some(1.2));
         assert!(new.chunking.is_none());
         assert_eq!(new.hier.unwrap().min_speedup, 1.4);
         assert_eq!(new.service_floor, Some(80.0), "kept when unobserved");
+        assert_eq!(new.kernels_floor, Some(1.1), "kept when unobserved");
+        assert_eq!(new.net_ceiling, Some(60.0), "kept when unobserved");
     }
 
     #[test]
@@ -970,8 +1181,57 @@ mod tests {
                 pct: 0.5,
             }),
             service_floor: Some(1.0),
+            kernels_floor: Some(1.0),
+            net_ceiling: Some(500.0),
         };
         self_test(&base, 20.0).unwrap();
+    }
+
+    #[test]
+    fn kernels_gate_and_artifact_schema() {
+        let text = r#"{
+            "bench": "kernels", "op": "sum",
+            "entries": [
+                {"dtype": "f32", "elems": 4096, "bytes": 16384,
+                 "scalar_s": 2.0e-6, "serial_s": 1.0e-6,
+                 "production_s": 1.0e-6, "threaded_s": 5.0e-5, "speedup": 2.0}
+            ],
+            "min_speedup": 2.0, "max_speedup": 2.0,
+            "collectives": [
+                {"kind": "ring", "p": 8, "elems": 16384,
+                 "composed_s": 2.0e-3, "fused_s": 1.0e-3, "ratio": 2.0}
+            ]
+        }"#;
+        assert_eq!(parse_kernels(text).unwrap(), 2.0);
+        // At the floor and within the 20% slack: pass. Past it: fail.
+        assert!(gate_kernels(1.0, 1.0, 20.0).is_empty());
+        assert!(gate_kernels(1.0, 0.81, 20.0).is_empty());
+        let fails = gate_kernels(1.0, 0.79, 20.0);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("kernels"));
+    }
+
+    #[test]
+    fn net_gate_is_a_ceiling_and_parses_the_artifact_schema() {
+        let text = r#"{
+            "bench": "net", "op": "sum", "algo": "bw-optimal",
+            "entries": [
+                {"p": 2, "elems": 4096, "bytes_per_rank": 16384,
+                 "inprocess_s": 1.0e-4, "socket_s": 2.0e-3, "overhead": 20.0},
+                {"p": 4, "elems": 65536, "bytes_per_rank": 262144,
+                 "inprocess_s": 1.0e-3, "socket_s": 8.0e-3, "overhead": 8.0}
+            ]
+        }"#;
+        // The gated quantity is the WORST entry.
+        assert_eq!(parse_net(text).unwrap(), 20.0);
+        // At the ceiling and within the upward slack: pass. Past it: fail.
+        assert!(gate_net(20.0, 20.0, 20.0).is_empty());
+        assert!(gate_net(20.0, 23.9, 20.0).is_empty());
+        let fails = gate_net(20.0, 24.1, 20.0);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("net"));
+        // Lower overhead than the ceiling is always fine.
+        assert!(gate_net(20.0, 1.0, 20.0).is_empty());
     }
 
     #[test]

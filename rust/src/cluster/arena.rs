@@ -72,11 +72,11 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::sched::{
-    stats::{chunk_pays, plan_chunk_fusion},
+    stats::{chunk_pays, plan_chunk_fusion, FuseDir, FusePlan},
     BufId, MicroOp, Op, ProcSchedule,
 };
 
-use super::{ClusterError, Element, ReduceOp};
+use super::{kernels, ClusterError, Element, ReduceOp};
 
 /// Free-list shards — each thread parks into / takes from its own shard
 /// first, so concurrent workers rarely touch the same mutex.
@@ -602,6 +602,13 @@ pub trait CombineKernel<T: Element>: Sync {
         out.copy_from_slice(a);
         self.fold(out, b);
     }
+
+    /// Output finalizer, applied exactly once where a reduced value
+    /// leaves the data plane (`1/p` scale for [`ReduceOp::Avg`]). The
+    /// default is a no-op, which is correct for every op except `Avg` —
+    /// custom closure kernels ([`FoldKernel`]) therefore don't support
+    /// `Avg` unless they override this.
+    fn finalize(&self, _out: &mut [T], _p: usize) {}
 }
 
 /// The native element-wise kernel for a [`ReduceOp`].
@@ -614,6 +621,10 @@ impl<T: Element> CombineKernel<T> for NativeKernel {
 
     fn fuse(&self, out: &mut [T], a: &[T], b: &[T]) {
         T::combine_from(self.0, out, a, b);
+    }
+
+    fn finalize(&self, out: &mut [T], p: usize) {
+        T::finalize(self.0, out, p);
     }
 }
 
@@ -719,8 +730,14 @@ enum FuseDst<T: Element> {
 /// [`DataPlane::recv_stream`]).
 enum RecvSlot<T: Element> {
     /// Fold arriving chunks with local operand `src` into `dst`; `off` =
-    /// elements already folded.
+    /// elements already folded (`Reduce { dst: received, src }` streamed —
+    /// [`FuseDir::IntoRecv`]).
     Fuse { src: BufId, dst: FuseDst<T>, off: usize },
+    /// Fold arriving chunks into the already-live local accumulator `dst`
+    /// (`Reduce { dst, src: received }` streamed — [`FuseDir::IntoLocal`]);
+    /// the raw received value is never materialized, its slot ends as an
+    /// empty view awaiting its `Free`.
+    FoldInto { dst: BufId, off: usize },
     /// Keep the frames; reassembled into one shared block at the end.
     Gather { parts: Vec<Chunk<T>> },
 }
@@ -846,7 +863,10 @@ impl<T: Element> DataPlane<T> {
     ) -> Result<(), ClusterError> {
         self.chunk_elems = chunk_elems.map(|c| c.max(1));
         let n = input.len();
-        debug_assert_eq!(out.len(), n);
+        // `out` is as long as the schedule's per-rank result coverage: `n`
+        // for allreduce/allgather, this rank's shard for reduce-scatter
+        // (checked against the result walk below).
+        debug_assert!(out.len() <= n);
         if n == 0 {
             // Nothing moves for this schedule on any rank (lengths are
             // validated equal), so every worker skips it symmetrically.
@@ -860,7 +880,7 @@ impl<T: Element> DataPlane<T> {
         for &(id, seg) in &s.init[proc] {
             let (lo, hi) = s.unit_to_elems(seg, n);
             let slot = self.arena.alloc(hi - lo);
-            self.arena.slice_mut(slot).copy_from_slice(&input[lo..hi]);
+            kernels::copy_wide(self.arena.slice_mut(slot), &input[lo..hi]);
             self.slots[id as usize] = Some(BufSlot::Slab(slot));
         }
 
@@ -880,10 +900,10 @@ impl<T: Element> DataPlane<T> {
                 BufSlot::Owned(blk) => blk.data(),
                 BufSlot::Shared(c) => c.as_slice(),
             };
-            out[cursor..cursor + src.len()].copy_from_slice(src);
+            kernels::copy_wide(&mut out[cursor..cursor + src.len()], src);
             cursor += src.len();
         }
-        debug_assert_eq!(cursor, n);
+        debug_assert_eq!(cursor, out.len());
         // Drop shared chunks promptly so their blocks return to the pool.
         self.slots.clear();
         self.flush_counters();
@@ -1030,8 +1050,10 @@ impl<T: Element> DataPlane<T> {
             for (i, &b) in ids.iter().enumerate() {
                 if let Some(BufSlot::Slab(sl)) = &self.slots[b as usize] {
                     let sl = *sl;
-                    wire.data_mut()[cursor..cursor + sl.len]
-                        .copy_from_slice(self.arena.slice(sl));
+                    kernels::copy_wide(
+                        &mut wire.data_mut()[cursor..cursor + sl.len],
+                        self.arena.slice(sl),
+                    );
                     self.local.copies += 1;
                     self.local.elems += sl.len as u64;
                     spans.push((i, cursor, sl.len));
@@ -1085,11 +1107,15 @@ impl<T: Element> DataPlane<T> {
     /// one chunk) adopt the shared chunks exactly as before. Multi-frame
     /// messages are where the step's wire/ALU overlap happens: buffers
     /// whose first use is a safe `Reduce` ([`plan_chunk_fusion`]) are
-    /// folded **per chunk** into their destination (slab, or pooled wire
-    /// block under send-aware placement) as each frame lands — the fold of
-    /// frame `k` runs while frames `k+1..` are still in flight — and the
-    /// covered `Reduce` ops are recorded in `fused` for [`run_steps`] to
-    /// skip. All other buffers gather their frames and are reassembled
+    /// folded **per chunk** as each frame lands — the fold of frame `k`
+    /// runs while frames `k+1..` are still in flight — in either
+    /// direction: into a fresh destination slot (slab, or pooled wire
+    /// block under send-aware placement) when the received buffer is the
+    /// `Reduce` dst ([`FuseDir::IntoRecv`]), or straight into the live
+    /// local accumulator when it is the `Reduce` src
+    /// ([`FuseDir::IntoLocal`]). The covered `Reduce` ops are recorded in
+    /// `fused` for [`run_steps`] to skip. All other buffers gather their
+    /// frames and are reassembled
     /// into one shared block (correct, no overlap). Operand order per
     /// element is identical to the monolithic path, so results stay
     /// bit-identical.
@@ -1102,7 +1128,7 @@ impl<T: Element> DataPlane<T> {
         from: usize,
         ids: &[BufId],
         wire_dst: &[bool],
-        cached_plan: Option<&[Option<BufId>]>,
+        cached_plan: Option<&[Option<FusePlan>]>,
         transport: &mut dyn Transport<T>,
         kernel: &dyn CombineKernel<T>,
         fused: &mut Vec<(BufId, BufId)>,
@@ -1138,8 +1164,8 @@ impl<T: Element> DataPlane<T> {
         // caller precomputed it (the warm-pool path), the live lookahead
         // otherwise. The static pass provably mirrors slot liveness, which
         // the debug assertion re-checks against the actual slot table.
-        let plan_owned: Vec<Option<BufId>>;
-        let plan: &[Option<BufId>] = match cached_plan {
+        let plan_owned: Vec<Option<FusePlan>>;
+        let plan: &[Option<FusePlan>] = match cached_plan {
             Some(row) => {
                 #[cfg(debug_assertions)]
                 {
@@ -1166,7 +1192,7 @@ impl<T: Element> DataPlane<T> {
         let mut states: Vec<RecvSlot<T>> = Vec::with_capacity(ids.len());
         for (i, &b) in ids.iter().enumerate() {
             states.push(match plan[i] {
-                Some(src) => {
+                Some(FusePlan { operand: src, dir: FuseDir::IntoRecv }) => {
                     let src_len = match self.slots[src as usize]
                         .as_ref()
                         .expect("fusion source live")
@@ -1183,6 +1209,14 @@ impl<T: Element> DataPlane<T> {
                     };
                     self.local.streamed += 1;
                     RecvSlot::Fuse { src, dst, off: 0 }
+                }
+                Some(FusePlan { operand: dst, dir: FuseDir::IntoLocal }) => {
+                    // The accumulator must be writable before chunks fold
+                    // in; a Shared (logically copied) slot materializes
+                    // once now, honoring the send-aware placement hint.
+                    self.make_writable(dst, wire_dst.get(dst as usize).copied().unwrap_or(false));
+                    self.local.streamed += 1;
+                    RecvSlot::FoldInto { dst, off: 0 }
                 }
                 None => {
                     self.local.gathered += 1;
@@ -1202,6 +1236,10 @@ impl<T: Element> DataPlane<T> {
                 match &mut states[i] {
                     RecvSlot::Fuse { src, dst, off } => {
                         self.fuse_chunk(dst, *src, *off, &chunk, kernel);
+                        *off += chunk.len();
+                    }
+                    RecvSlot::FoldInto { dst, off } => {
+                        self.fold_chunk(*dst, *off, &chunk, kernel);
                         *off += chunk.len();
                     }
                     RecvSlot::Gather { parts } => parts.push(chunk),
@@ -1257,6 +1295,27 @@ impl<T: Element> DataPlane<T> {
                     });
                     fused.push((b, src));
                 }
+                RecvSlot::FoldInto { dst, off } => {
+                    let want = match self.slots[dst as usize].as_ref().expect("fold dst live") {
+                        BufSlot::Slab(sl) => sl.len,
+                        BufSlot::Owned(blk) => blk.len(),
+                        BufSlot::Shared(c) => c.len(),
+                    };
+                    if off != want {
+                        return Err(ClusterError::Protocol {
+                            proc,
+                            detail: format!(
+                                "step {step}: buffer {b} streamed {off} elements but its \
+                                 fold destination holds {want}"
+                            ),
+                        });
+                    }
+                    // The raw value was consumed by the fold; the plan
+                    // guarantees the buffer's only later use is its `Free`,
+                    // so an empty view keeps the slot live until then.
+                    self.slots[b as usize] = Some(BufSlot::Shared(self.empty.clone()));
+                    fused.push((dst, b));
+                }
                 RecvSlot::Gather { mut parts } => {
                     let slot = if parts.len() == 1 {
                         BufSlot::Shared(parts.pop().expect("one part"))
@@ -1283,8 +1342,10 @@ impl<T: Element> DataPlane<T> {
                             let mut blk = BlockPool::take(&self.pool, total);
                             let mut cur = 0usize;
                             for p in &parts {
-                                blk.data_mut()[cur..cur + p.len()]
-                                    .copy_from_slice(p.as_slice());
+                                kernels::copy_wide(
+                                    &mut blk.data_mut()[cur..cur + p.len()],
+                                    p.as_slice(),
+                                );
                                 cur += p.len();
                             }
                             BufSlot::Shared(Chunk::new(blk.freeze(), 0, total))
@@ -1343,6 +1404,49 @@ impl<T: Element> DataPlane<T> {
         }
     }
 
+    /// Fold one arriving chunk (`a`, covering elements `[off, off+a.len())`
+    /// of the incoming buffer) into the matching range of the already-live,
+    /// writable local accumulator `dst` — the chunk-granular form of
+    /// `Reduce { dst, src: received }`, same operand order (`dst ⊕= chunk`).
+    fn fold_chunk(&mut self, dst: BufId, off: usize, a: &Chunk<T>, kernel: &dyn CombineKernel<T>) {
+        let len = a.len();
+        let a = a.as_slice();
+        match self.slots[dst as usize].take().expect("fold dst live") {
+            BufSlot::Slab(d) => {
+                kernel.fold(&mut self.arena.slice_mut(d)[off..off + len], a);
+                self.slots[dst as usize] = Some(BufSlot::Slab(d));
+            }
+            BufSlot::Owned(mut blk) => {
+                kernel.fold(&mut blk.data_mut()[off..off + len], a);
+                self.slots[dst as usize] = Some(BufSlot::Owned(blk));
+            }
+            BufSlot::Shared(_) => unreachable!("fold dst materialized writable before streaming"),
+        }
+    }
+
+    /// Ensure buffer `b` occupies a writable slot (slab, or a pooled wire
+    /// block when `place_wire` says its next use is a send), copying a
+    /// `Shared` (logically copied) value once. Slab and `Owned` slots are
+    /// already writable and stay put.
+    fn make_writable(&mut self, b: BufId, place_wire: bool) {
+        let slot = self.slots[b as usize].take().expect("materialize of dead buffer");
+        let new = match slot {
+            BufSlot::Shared(c) if place_wire => {
+                let mut blk = BlockPool::take(&self.pool, c.len());
+                kernels::copy_wide(blk.data_mut(), c.as_slice());
+                self.local.placed += 1;
+                BufSlot::Owned(blk)
+            }
+            BufSlot::Shared(c) => {
+                let d = self.arena.alloc(c.len());
+                kernels::copy_wide(self.arena.slice_mut(d), c.as_slice());
+                BufSlot::Slab(d)
+            }
+            writable => writable,
+        };
+        self.slots[b as usize] = Some(new);
+    }
+
     /// Assemble one message: shared chunks are forwarded by refcount bump;
     /// owned (placement-materialized) blocks are frozen **in place** — the
     /// zero-copy send the placement pass set up; slab-resident buffers are
@@ -1384,7 +1488,10 @@ impl<T: Element> DataPlane<T> {
                 }
                 BufSlot::Slab(sl) => {
                     let w = wire.as_mut().expect("wire block exists for slab parts");
-                    w.data_mut()[cursor..cursor + sl.len].copy_from_slice(self.arena.slice(sl));
+                    kernels::copy_wide(
+                        &mut w.data_mut()[cursor..cursor + sl.len],
+                        self.arena.slice(sl),
+                    );
                     self.local.copies += 1;
                     self.local.elems += sl.len as u64;
                     parts.push(Part::Fresh(cursor, sl.len));
@@ -1506,14 +1613,14 @@ impl<T: Element> DataPlane<T> {
             }
             BufSlot::Slab(s) if place_wire => {
                 let mut blk = BlockPool::take(&self.pool, s.len);
-                blk.data_mut().copy_from_slice(self.arena.slice(s));
+                kernels::copy_wide(blk.data_mut(), self.arena.slice(s));
                 self.local.placed_copies += 1;
                 (BufSlot::Slab(s), BufSlot::Owned(blk))
             }
             BufSlot::Slab(s) => {
                 let d = self.arena.alloc(s.len);
                 let (dv, sv) = self.arena.disjoint_mut(d, s);
-                dv.copy_from_slice(sv);
+                kernels::copy_wide(dv, sv);
                 (BufSlot::Slab(s), BufSlot::Slab(d))
             }
         };

@@ -1,0 +1,477 @@
+//! SIMD-friendly, optionally multi-threaded reduction kernels.
+//!
+//! Every schedule the framework emits bottoms out in an element-wise
+//! combine — the `γ·m` term of the paper's `α + β·m + γ·m` cost model
+//! (§2, eq. 1). This module is that term's implementation, built for raw
+//! speed on stable Rust with **no `unsafe` and no intrinsics**:
+//!
+//! * **Fixed-width lane unrolling.** The hot loops process [`LANES`]
+//!   elements per iteration through `chunks_exact`, a shape the LLVM
+//!   autovectorizer reliably turns into packed SIMD ops (the bounds are
+//!   compile-time constants, so no per-element checks survive). The
+//!   scalar tail handles `len % LANES` elements.
+//! * **Multi-threaded combine for large buffers.** Above
+//!   [`PAR_COMBINE_THRESHOLD`] bytes the buffer is split into disjoint
+//!   contiguous ranges, each folded by its own scoped thread. Because the
+//!   split never changes which operands meet at which element — only
+//!   *who* computes each element — results are **bit-identical** to the
+//!   serial kernel for every dtype, integer or float. (Float combines are
+//!   not re-associated; the operand order per element is exactly the
+//!   serial order.)
+//! * **Staged wide copies** ([`copy_wide`]) for the slab→wire path:
+//!   multi-MiB snapshot copies split across threads the same way, while
+//!   small copies stay a single `copy_from_slice` (memcpy).
+//!
+//! ## Determinism contract
+//!
+//! For one (op, dtype, operand values) triple, [`combine`],
+//! [`combine_serial`], [`scalar_combine`] and the threaded path all
+//! produce bit-identical outputs, regardless of buffer length, alignment
+//! or split points. The property tests in `tests/kernels.rs` pin this
+//! across all four dtypes, odd lengths, unaligned offsets and threshold
+//! boundary sizes. [`scalar_combine`]/[`scalar_combine_from`] are the
+//! deliberately naive per-element reference loops kept for those tests
+//! and for the `BENCH_kernels.json` microbench.
+//!
+//! ## NaN semantics
+//!
+//! `Max`/`Min` use the comparison form (`if b > a { b } else { a }`), not
+//! `f32::max` — the first operand wins when the comparison fails (NaN),
+//! matching the pre-vectorization scalar loops bit for bit.
+//!
+//! [`ReduceOp::Avg`] combines as `Sum`; the final `1/P` scale is applied
+//! exactly once at the output boundary via [`finalize`] (integer dtypes
+//! use truncating integer division).
+
+use std::sync::OnceLock;
+
+use super::ReduceOp;
+
+/// Unroll width of the vectorized loops, in elements. Eight lanes covers
+/// a full 256-bit vector of `f32`/`i32` and two of `f64`/`i64` — wide
+/// enough for the autovectorizer to emit packed ops on every mainstream
+/// target, small enough that the scalar tail stays negligible.
+pub const LANES: usize = 8;
+
+/// Buffer size (bytes) above which [`combine`]/[`combine_from`] split the
+/// work across scoped threads. Below it a combine is memory-latency bound
+/// and thread spawn/join overhead (~tens of µs) would dominate; at and
+/// above it the fold is DRAM-bandwidth bound and extra cores genuinely
+/// help. Tests exercise the threaded path at small sizes through
+/// [`combine_with_threshold`].
+pub const PAR_COMBINE_THRESHOLD: usize = 4 << 20;
+
+/// Copies are cheaper per byte than combines (one stream fewer), so the
+/// threaded copy pays off later than the threaded combine.
+const PAR_COPY_THRESHOLD: usize = 8 << 20;
+
+/// Cap on combine worker threads. The data plane already runs one worker
+/// per rank; a modest cap keeps P ranks × K combine threads from
+/// oversubscribing the machine.
+const PAR_MAX_THREADS: usize = 8;
+
+fn max_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(PAR_MAX_THREADS)
+    })
+}
+
+/// The primitive element types the native kernels cover: the four
+/// [`super::Element`] dtypes. The binary ops mirror the executor's
+/// combine semantics exactly (see the module docs on NaN handling).
+pub trait Prim: Copy + Send + Sync {
+    fn add(a: Self, b: Self) -> Self;
+    fn mul(a: Self, b: Self) -> Self;
+    fn max(a: Self, b: Self) -> Self;
+    fn min(a: Self, b: Self) -> Self;
+    /// `self / p` — the [`ReduceOp::Avg`] finalizer (truncating division
+    /// for the integer dtypes).
+    fn div_p(self, p: usize) -> Self;
+}
+
+macro_rules! impl_prim {
+    ($t:ty) => {
+        impl Prim for $t {
+            #[inline(always)]
+            fn add(a: Self, b: Self) -> Self {
+                a + b
+            }
+            #[inline(always)]
+            fn mul(a: Self, b: Self) -> Self {
+                a * b
+            }
+            #[inline(always)]
+            fn max(a: Self, b: Self) -> Self {
+                if b > a {
+                    b
+                } else {
+                    a
+                }
+            }
+            #[inline(always)]
+            fn min(a: Self, b: Self) -> Self {
+                if b < a {
+                    b
+                } else {
+                    a
+                }
+            }
+            #[inline(always)]
+            fn div_p(self, p: usize) -> Self {
+                self / (p as $t)
+            }
+        }
+    };
+}
+impl_prim!(f32);
+impl_prim!(f64);
+impl_prim!(i32);
+impl_prim!(i64);
+
+/// `dst[i] = f(dst[i], src[i])`, [`LANES`]-unrolled.
+#[inline(always)]
+fn fold_lanes<T: Copy, F: Fn(T, T) -> T + Copy>(dst: &mut [T], src: &[T], f: F) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut sc = src.chunks_exact(LANES);
+    for (d, s) in dc.by_ref().zip(sc.by_ref()) {
+        for i in 0..LANES {
+            d[i] = f(d[i], s[i]);
+        }
+    }
+    for (d, &s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *d = f(*d, s);
+    }
+}
+
+/// `out[i] = f(a[i], b[i])`, [`LANES`]-unrolled (`out` uninitialized on
+/// entry — the fused materialize-and-combine form).
+#[inline(always)]
+fn fuse_lanes<T: Copy, F: Fn(T, T) -> T + Copy>(out: &mut [T], a: &[T], b: &[T], f: F) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((o, x), y) in oc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        for i in 0..LANES {
+            o[i] = f(x[i], y[i]);
+        }
+    }
+    for ((o, &x), &y) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o = f(x, y);
+    }
+}
+
+/// The element-wise function of an op. [`ReduceOp::Avg`] combines as
+/// `Sum` — its `1/P` scale happens once, in [`finalize`].
+#[inline(always)]
+fn op_fn<T: Prim>(op: ReduceOp) -> fn(T, T) -> T {
+    match op {
+        ReduceOp::Sum | ReduceOp::Avg => T::add,
+        ReduceOp::Prod => T::mul,
+        ReduceOp::Max => T::max,
+        ReduceOp::Min => T::min,
+    }
+}
+
+/// Single-threaded vectorized `dst[i] ⊕= src[i]`. The op dispatch happens
+/// once, outside the loop, so each arm is a branch-free lane loop the
+/// autovectorizer packs.
+pub fn combine_serial<T: Prim>(op: ReduceOp, dst: &mut [T], src: &[T]) {
+    match op {
+        ReduceOp::Sum | ReduceOp::Avg => fold_lanes(dst, src, T::add),
+        ReduceOp::Prod => fold_lanes(dst, src, T::mul),
+        ReduceOp::Max => fold_lanes(dst, src, T::max),
+        ReduceOp::Min => fold_lanes(dst, src, T::min),
+    }
+}
+
+/// Single-threaded vectorized `out[i] = a[i] ⊕ b[i]`.
+pub fn combine_from_serial<T: Prim>(op: ReduceOp, out: &mut [T], a: &[T], b: &[T]) {
+    match op {
+        ReduceOp::Sum | ReduceOp::Avg => fuse_lanes(out, a, b, T::add),
+        ReduceOp::Prod => fuse_lanes(out, a, b, T::mul),
+        ReduceOp::Max => fuse_lanes(out, a, b, T::max),
+        ReduceOp::Min => fuse_lanes(out, a, b, T::min),
+    }
+}
+
+/// The deliberately naive per-element reference loop — the semantics the
+/// vectorized and threaded kernels must reproduce bit for bit.
+pub fn scalar_combine<T: Prim>(op: ReduceOp, dst: &mut [T], src: &[T]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let f = op_fn::<T>(op);
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f(*d, s);
+    }
+}
+
+/// Per-element reference for the fused form.
+pub fn scalar_combine_from<T: Prim>(op: ReduceOp, out: &mut [T], a: &[T], b: &[T]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let f = op_fn::<T>(op);
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = f(x, y);
+    }
+}
+
+/// Worker count for a buffer of `bytes`: 1 below the threshold, else up
+/// to [`PAR_MAX_THREADS`] with at least `threshold / 2` bytes each, so a
+/// barely-over-threshold buffer splits two ways instead of eight.
+fn workers_for(bytes: usize, threshold: usize) -> usize {
+    if threshold == 0 || bytes < threshold {
+        return 1;
+    }
+    (bytes / (threshold / 2).max(1)).clamp(1, max_threads())
+}
+
+/// Per-worker chunk length (elements), rounded up to a [`LANES`] multiple
+/// so only the final worker runs a scalar tail.
+fn chunk_len(len: usize, workers: usize) -> usize {
+    len.div_ceil(workers).next_multiple_of(LANES).max(LANES)
+}
+
+/// `dst[i] ⊕= src[i]` — the production entry point: vectorized, and
+/// threaded above [`PAR_COMBINE_THRESHOLD`] bytes.
+pub fn combine<T: Prim>(op: ReduceOp, dst: &mut [T], src: &[T]) {
+    combine_with_threshold(op, dst, src, PAR_COMBINE_THRESHOLD)
+}
+
+/// [`combine`] with an explicit threading threshold (bytes; `0` keeps the
+/// fold serial). Exposed so tests and the microbench can exercise the
+/// threaded path at small sizes; same bit-identical results either way.
+pub fn combine_with_threshold<T: Prim>(
+    op: ReduceOp,
+    dst: &mut [T],
+    src: &[T],
+    par_threshold: usize,
+) {
+    let workers = if par_threshold == 0 {
+        1
+    } else {
+        workers_for(std::mem::size_of_val(dst), par_threshold)
+    };
+    if workers < 2 {
+        return combine_serial(op, dst, src);
+    }
+    let chunk = chunk_len(dst.len(), workers);
+    let split = chunk.min(dst.len());
+    let (d0, dr) = dst.split_at_mut(split);
+    let (s0, sr) = src.split_at(split);
+    std::thread::scope(|scope| {
+        for (d, s) in dr.chunks_mut(chunk).zip(sr.chunks(chunk)) {
+            scope.spawn(move || combine_serial(op, d, s));
+        }
+        // The first chunk folds on the calling thread, overlapping the
+        // spawned workers.
+        combine_serial(op, d0, s0);
+    });
+}
+
+/// `out[i] = a[i] ⊕ b[i]` — the production fused entry point.
+pub fn combine_from<T: Prim>(op: ReduceOp, out: &mut [T], a: &[T], b: &[T]) {
+    combine_from_with_threshold(op, out, a, b, PAR_COMBINE_THRESHOLD)
+}
+
+/// [`combine_from`] with an explicit threading threshold (see
+/// [`combine_with_threshold`]).
+pub fn combine_from_with_threshold<T: Prim>(
+    op: ReduceOp,
+    out: &mut [T],
+    a: &[T],
+    b: &[T],
+    par_threshold: usize,
+) {
+    let workers = if par_threshold == 0 {
+        1
+    } else {
+        workers_for(std::mem::size_of_val(out), par_threshold)
+    };
+    if workers < 2 {
+        return combine_from_serial(op, out, a, b);
+    }
+    let chunk = chunk_len(out.len(), workers);
+    let split = chunk.min(out.len());
+    let (o0, or) = out.split_at_mut(split);
+    let (a0, ar) = a.split_at(split);
+    let (b0, br) = b.split_at(split);
+    std::thread::scope(|scope| {
+        for ((o, x), y) in or.chunks_mut(chunk).zip(ar.chunks(chunk)).zip(br.chunks(chunk)) {
+            scope.spawn(move || combine_from_serial(op, o, x, y));
+        }
+        combine_from_serial(op, o0, a0, b0);
+    });
+}
+
+/// The [`ReduceOp::Avg`] output finalizer: scale every element by `1/p`,
+/// exactly once, at the boundary where a reduced value leaves the data
+/// plane (executor copy-out, oracle assembly, bucket unpack). A no-op for
+/// every other op. Integer dtypes use truncating integer division.
+pub fn finalize<T: Prim>(op: ReduceOp, out: &mut [T], p: usize) {
+    if op == ReduceOp::Avg && p > 1 {
+        for o in out.iter_mut() {
+            *o = (*o).div_p(p);
+        }
+    }
+}
+
+/// The slab→wire staged copy: small copies are one `copy_from_slice`
+/// (memcpy); buffers past [`PAR_COPY_THRESHOLD`] bytes split across
+/// scoped threads, each memcpy-ing a disjoint contiguous range — the copy
+/// analogue of the threaded combine, for the multi-MiB snapshot copies
+/// chunked sends pay once per slab buffer.
+pub fn copy_wide<T: Copy + Send + Sync>(dst: &mut [T], src: &[T]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let workers = workers_for(std::mem::size_of_val(dst), PAR_COPY_THRESHOLD);
+    if workers < 2 {
+        dst.copy_from_slice(src);
+        return;
+    }
+    let chunk = chunk_len(dst.len(), workers);
+    let split = chunk.min(dst.len());
+    let (d0, dr) = dst.split_at_mut(split);
+    let (s0, sr) = src.split_at(split);
+    std::thread::scope(|scope| {
+        for (d, s) in dr.chunks_mut(chunk).zip(sr.chunks(chunk)) {
+            scope.spawn(move || d.copy_from_slice(s));
+        }
+        d0.copy_from_slice(s0);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn ops5() -> [ReduceOp; 5] {
+        ReduceOp::all_with_avg()
+    }
+
+    #[test]
+    fn vectorized_matches_scalar_f32_all_ops_odd_lengths() {
+        let mut rng = Rng::new(0xBEEF);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 1023] {
+            let a: Vec<f32> = (0..len).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            for op in ops5() {
+                let mut want = a.clone();
+                scalar_combine(op, &mut want, &b);
+                let mut got = a.clone();
+                combine_serial(op, &mut got, &b);
+                assert!(
+                    got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{op:?} len {len}"
+                );
+                let mut fused = vec![0.0f32; len];
+                combine_from_serial(op, &mut fused, &a, &b);
+                assert!(
+                    fused.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "fused {op:?} len {len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_path_is_bit_identical_at_tiny_thresholds() {
+        let mut rng = Rng::new(7);
+        let len = 3 * LANES * 4 + 5;
+        let a: Vec<f64> = (0..len).map(|_| rng.f32() as f64).collect();
+        let b: Vec<f64> = (0..len).map(|_| rng.f32() as f64).collect();
+        for op in ops5() {
+            let mut want = a.clone();
+            scalar_combine(op, &mut want, &b);
+            // A threshold small enough that every split width is hit.
+            for thresh in [1usize, 16, 64, len * 8] {
+                let mut got = a.clone();
+                combine_with_threshold(op, &mut got, &b, thresh);
+                assert!(
+                    got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{op:?} thresh {thresh}"
+                );
+                let mut fused = vec![0.0f64; len];
+                combine_from_with_threshold(op, &mut fused, &a, &b, thresh);
+                assert!(
+                    fused.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "fused {op:?} thresh {thresh}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nan_semantics_first_operand_wins() {
+        // `if b > a { b } else { a }`: a NaN in either slot keeps `a`.
+        let a = [f32::NAN, 1.0, f32::NAN];
+        let b = [2.0f32, f32::NAN, f32::NAN];
+        let mut got = a;
+        combine_serial(ReduceOp::Max, &mut got, &b);
+        assert!(got[0].is_nan(), "NaN dst is kept (comparison false)");
+        assert_eq!(got[1], 1.0, "NaN src is ignored");
+        assert!(got[2].is_nan());
+        let mut scalar = a;
+        scalar_combine(ReduceOp::Max, &mut scalar, &b);
+        for (g, s) in got.iter().zip(&scalar) {
+            assert_eq!(g.to_bits(), s.to_bits());
+        }
+    }
+
+    #[test]
+    fn integer_combines_are_exact() {
+        let a: Vec<i64> = (0..100).map(|i| i * 7 - 350).collect();
+        let b: Vec<i64> = (0..100).map(|i| 13 - i * 3).collect();
+        for op in ops5() {
+            let mut want = a.clone();
+            scalar_combine(op, &mut want, &b);
+            let mut got = a.clone();
+            combine_with_threshold(op, &mut got, &b, 64);
+            assert_eq!(got, want, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn finalize_scales_only_avg() {
+        let mut f = vec![10.0f32, -6.0, 0.5];
+        finalize(ReduceOp::Sum, &mut f, 4);
+        assert_eq!(f, vec![10.0, -6.0, 0.5]);
+        finalize(ReduceOp::Avg, &mut f, 4);
+        assert_eq!(f, vec![2.5, -1.5, 0.125]);
+        // Integer Avg truncates toward zero.
+        let mut i = vec![10i32, -7, 3];
+        finalize(ReduceOp::Avg, &mut i, 4);
+        assert_eq!(i, vec![2, -1, 0]);
+    }
+
+    #[test]
+    fn copy_wide_round_trips() {
+        let src: Vec<i32> = (0..10_000).collect();
+        let mut dst = vec![0i32; 10_000];
+        copy_wide(&mut dst, &src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn worker_split_math() {
+        // Below threshold: serial.
+        assert_eq!(workers_for(100, 1 << 20), 1);
+        // At threshold: two workers; far above: capped.
+        assert_eq!(workers_for(1 << 20, 1 << 20), 2);
+        assert!(workers_for(usize::MAX / 2, 1 << 20) <= PAR_MAX_THREADS);
+        // Chunks are LANES-aligned and cover the buffer.
+        let c = chunk_len(1000, 3);
+        assert_eq!(c % LANES, 0);
+        assert!(c * 3 >= 1000);
+    }
+}

@@ -17,6 +17,7 @@
 //! [`oracle`] as the differential-test baseline.
 
 pub mod arena;
+pub mod kernels;
 pub mod mixed;
 pub mod oracle;
 pub mod persistent;
@@ -33,7 +34,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::sched::ProcSchedule;
+use crate::sched::{shard_range, Collective, ProcSchedule};
 
 /// Name-keyed, fingerprint-guarded cache of per-schedule derived data
 /// (send-aware placement rows, chunk-fusion rows, arena pre-size hints),
@@ -115,77 +116,84 @@ impl<V> std::fmt::Debug for SchedCache<V> {
 
 /// MPI-style combine operation. All ops are commutative and associative —
 /// the cyclic-pattern algorithms reorder operands (paper §3 notes cyclic
-/// algorithms require commutativity).
+/// algorithms require commutativity). [`ReduceOp::Avg`] combines as `Sum`
+/// on the wire and scales by `1/P` exactly once at the output boundary
+/// ([`Element::finalize`]); integer dtypes truncate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ReduceOp {
     Sum,
     Prod,
     Max,
     Min,
+    Avg,
 }
 
 impl ReduceOp {
+    /// The four wire-level combine ops. `Avg` is excluded — it is `Sum`
+    /// plus an output finalizer, so sweeps over distinct *combine*
+    /// behaviors don't need it; use [`ReduceOp::all_with_avg`] for sweeps
+    /// over the full user-facing op surface.
     pub fn all() -> [ReduceOp; 4] {
         [ReduceOp::Sum, ReduceOp::Prod, ReduceOp::Max, ReduceOp::Min]
     }
+
+    pub fn all_with_avg() -> [ReduceOp; 5] {
+        [
+            ReduceOp::Sum,
+            ReduceOp::Prod,
+            ReduceOp::Max,
+            ReduceOp::Min,
+            ReduceOp::Avg,
+        ]
+    }
 }
 
-/// Element types the native executor supports.
-pub trait Element: Copy + Default + Send + Sync + std::fmt::Debug + 'static {
+/// Element types the native executor supports. The combine bodies live in
+/// [`kernels`] — vectorized lane loops, threaded above
+/// [`kernels::PAR_COMBINE_THRESHOLD`] — so every implementor gets them as
+/// default methods via the [`kernels::Prim`] supertrait; an impl only
+/// declares its wire dtype tag.
+pub trait Element:
+    Copy + Default + Send + Sync + std::fmt::Debug + kernels::Prim + 'static
+{
+    /// Wire dtype tag, shared with `net::wire`'s DATA/payload framing:
+    /// f32=1, f64=2, i32=3, i64=4.
+    const DTYPE: u8;
+
     /// `dst[i] ⊕= src[i]`.
-    fn combine(op: ReduceOp, dst: &mut [Self], src: &[Self]);
+    fn combine(op: ReduceOp, dst: &mut [Self], src: &[Self]) {
+        kernels::combine(op, dst, src)
+    }
 
     /// `out[i] = a[i] ⊕ b[i]` — the fused materialize-and-combine the arena
     /// data plane uses when a received (shared, read-only) payload is
     /// reduced into a slab slot. Must apply operands in exactly
     /// [`Element::combine`]'s order (`a` where `combine` has `dst`) so the
     /// arena and clone data planes stay bit-identical.
-    fn combine_from(op: ReduceOp, out: &mut [Self], a: &[Self], b: &[Self]);
+    fn combine_from(op: ReduceOp, out: &mut [Self], a: &[Self], b: &[Self]) {
+        kernels::combine_from(op, out, a, b)
+    }
+
+    /// Output finalizer, applied once where a reduced value leaves the
+    /// data plane: scales by `1/p` for [`ReduceOp::Avg`], a no-op for
+    /// every other op.
+    fn finalize(op: ReduceOp, out: &mut [Self], p: usize) {
+        kernels::finalize(op, out, p)
+    }
 }
 
-macro_rules! impl_element {
-    ($t:ty) => {
-        impl Element for $t {
-            fn combine(op: ReduceOp, dst: &mut [Self], src: &[Self]) {
-                debug_assert_eq!(dst.len(), src.len());
-                match op {
-                    ReduceOp::Sum => dst.iter_mut().zip(src).for_each(|(d, &s)| *d += s),
-                    ReduceOp::Prod => dst.iter_mut().zip(src).for_each(|(d, &s)| *d *= s),
-                    ReduceOp::Max => dst
-                        .iter_mut()
-                        .zip(src)
-                        .for_each(|(d, &s)| *d = if s > *d { s } else { *d }),
-                    ReduceOp::Min => dst
-                        .iter_mut()
-                        .zip(src)
-                        .for_each(|(d, &s)| *d = if s < *d { s } else { *d }),
-                }
-            }
-
-            fn combine_from(op: ReduceOp, out: &mut [Self], a: &[Self], b: &[Self]) {
-                debug_assert_eq!(out.len(), a.len());
-                debug_assert_eq!(out.len(), b.len());
-                let ab = a.iter().zip(b);
-                match op {
-                    ReduceOp::Sum => out.iter_mut().zip(ab).for_each(|(o, (&x, &y))| *o = x + y),
-                    ReduceOp::Prod => out.iter_mut().zip(ab).for_each(|(o, (&x, &y))| *o = x * y),
-                    ReduceOp::Max => out
-                        .iter_mut()
-                        .zip(ab)
-                        .for_each(|(o, (&x, &y))| *o = if y > x { y } else { x }),
-                    ReduceOp::Min => out
-                        .iter_mut()
-                        .zip(ab)
-                        .for_each(|(o, (&x, &y))| *o = if y < x { y } else { x }),
-                }
-            }
-        }
-    };
+impl Element for f32 {
+    const DTYPE: u8 = 1;
 }
-impl_element!(f32);
-impl_element!(f64);
-impl_element!(i32);
-impl_element!(i64);
+impl Element for f64 {
+    const DTYPE: u8 = 2;
+}
+impl Element for i32 {
+    const DTYPE: u8 = 3;
+}
+impl Element for i64 {
+    const DTYPE: u8 = 4;
+}
 
 /// Fault injection for resilience tests: the executor must *detect* (not
 /// silently survive) a lost or corrupted message.
@@ -367,8 +375,28 @@ impl ClusterExecutor {
         inputs: &[Vec<T>],
         op: ReduceOp,
     ) -> Result<Vec<Vec<T>>, ClusterError> {
+        self.execute_collective(schedule, inputs, op, Collective::Allreduce)
+    }
+
+    /// Run a schedule whose postcondition is one of the three collectives.
+    ///
+    /// Input/output shapes per rank `r` (all inputs length `n`):
+    /// * [`Collective::Allreduce`] — full input, full reduced output.
+    /// * [`Collective::ReduceScatter`] — full input; the output is rank
+    ///   `r`'s reduced shard, `input[shard_range(p, r, n)]`-shaped.
+    /// * [`Collective::Allgather`] — a full-length input of which only
+    ///   `shard_range(p, r, n)` is read (rank `r`'s contribution); the
+    ///   output is the full gathered vector. `op` is ignored (no combines
+    ///   run, and `Avg` is **not** finalized).
+    pub fn execute_collective<T: Element>(
+        &self,
+        schedule: &ProcSchedule,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+        collective: Collective,
+    ) -> Result<Vec<Vec<T>>, ClusterError> {
         let kernel = arena::NativeKernel(op);
-        let mut out = self.execute_many_with(&[Job { schedule, inputs }], &kernel)?;
+        let mut out = self.execute_many_with(&[Job { schedule, inputs }], &kernel, collective)?;
         Ok(out.pop().expect("one job in, one result out"))
     }
 
@@ -386,7 +414,8 @@ impl ClusterExecutor {
                 .expect("reducer failed on the hot path")
         };
         let kernel = arena::FoldKernel(&combine);
-        let mut out = self.execute_many_with(&[Job { schedule, inputs }], &kernel)?;
+        let mut out =
+            self.execute_many_with(&[Job { schedule, inputs }], &kernel, Collective::Allreduce)?;
         Ok(out.pop().expect("one job in, one result out"))
     }
 
@@ -405,13 +434,14 @@ impl ClusterExecutor {
         op: ReduceOp,
     ) -> Result<Vec<Vec<Vec<T>>>, ClusterError> {
         let kernel = arena::NativeKernel(op);
-        self.execute_many_with(jobs, &kernel)
+        self.execute_many_with(jobs, &kernel, Collective::Allreduce)
     }
 
     fn execute_many_with<T: Element>(
         &self,
         jobs: &[Job<'_, T>],
         kernel: &dyn arena::CombineKernel<T>,
+        collective: Collective,
     ) -> Result<Vec<Vec<Vec<T>>>, ClusterError> {
         if jobs.is_empty() {
             return Ok(Vec::new());
@@ -484,11 +514,20 @@ impl ClusterExecutor {
                     .iter()
                     .zip(&offs)
                     .zip(&placements)
-                    .map(|((job, &step_off), place)| WorkerJob {
-                        schedule: job.schedule,
-                        input: &job.inputs[proc],
-                        step_off,
-                        place: place.clone(),
+                    .map(|((job, &step_off), place)| {
+                        let n = job.inputs[0].len();
+                        let out_len = match collective {
+                            Collective::ReduceScatter => shard_range(p, proc, n).len(),
+                            Collective::Allreduce | Collective::Allgather => n,
+                        };
+                        WorkerJob {
+                            schedule: job.schedule,
+                            input: &job.inputs[proc],
+                            step_off,
+                            place: place.clone(),
+                            out_len,
+                            finalize: collective != Collective::Allgather,
+                        }
                     })
                     .collect();
                 handles.push(scope.spawn(move || {
@@ -523,11 +562,16 @@ impl ClusterExecutor {
 /// One job as seen by a single worker thread: the schedule, this rank's
 /// input, the global step-tag offset of the job's first step, and the
 /// job's send-aware placement rows (`None` = placement disabled).
+/// `out_len` is this rank's output length (shorter than the input for a
+/// reduce-scatter shard); `finalize` gates the Avg output scale (off for
+/// allgather, whose results are copies, not reductions).
 struct WorkerJob<'a, T> {
     schedule: &'a ProcSchedule,
     input: &'a [T],
     step_off: usize,
     place: Option<Arc<Vec<Vec<bool>>>>,
+    out_len: usize,
+    finalize: bool,
 }
 
 /// The scoped executor's [`arena::Transport`]: fault injection on the send
@@ -630,7 +674,7 @@ fn worker<T: Element>(
         .map(|b| crate::sched::stats::chunk_elems_for(b, std::mem::size_of::<T>()));
     let mut results = Vec::with_capacity(jobs.len());
     for job in jobs {
-        let mut out = vec![T::default(); job.input.len()];
+        let mut out = vec![T::default(); job.out_len];
         let wire_dst: &[bool] = job
             .place
             .as_ref()
@@ -652,6 +696,9 @@ fn worker<T: Element>(
             kernel,
             &mut out,
         )?;
+        if job.finalize {
+            kernel.finalize(&mut out, job.schedule.p);
+        }
         results.push(out);
     }
     Ok(results)
@@ -667,11 +714,17 @@ pub fn reference_allreduce(inputs: &[Vec<f32>], op: ReduceOp) -> Vec<f32> {
         for (a, &x) in acc.iter_mut().zip(v) {
             let x = x as f64;
             match op {
-                ReduceOp::Sum => *a += x,
+                ReduceOp::Sum | ReduceOp::Avg => *a += x,
                 ReduceOp::Prod => *a *= x,
                 ReduceOp::Max => *a = a.max(x),
                 ReduceOp::Min => *a = a.min(x),
             }
+        }
+    }
+    if op == ReduceOp::Avg {
+        let p = inputs.len() as f64;
+        for a in acc.iter_mut() {
+            *a /= p;
         }
     }
     debug_assert_eq!(acc.len(), n);
@@ -722,7 +775,7 @@ mod tests {
         let exec = ClusterExecutor::new();
         let p = 7;
         let xs = inputs(p, 29, 7);
-        for op in ReduceOp::all() {
+        for op in ReduceOp::all_with_avg() {
             let want = reference_allreduce(&xs, op);
             let s = Algorithm::new(AlgorithmKind::BwOptimal, p)
                 .build(&BuildCtx::default())

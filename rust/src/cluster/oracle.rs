@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::Duration;
 
-use crate::sched::{BufId, MicroOp, ProcSchedule};
+use crate::sched::{shard_range, BufId, Collective, MicroOp, ProcSchedule};
 
 use super::{ClusterError, Element, ReduceOp};
 
@@ -32,6 +32,19 @@ pub fn execute_reference<T: Element>(
     schedule: &ProcSchedule,
     inputs: &[Vec<T>],
     op: ReduceOp,
+) -> Result<Vec<Vec<T>>, ClusterError> {
+    execute_reference_collective(schedule, inputs, op, Collective::Allreduce)
+}
+
+/// [`execute_reference`] for any verified collective: a reduce-scatter
+/// schedule returns each rank's shard (`shard_range`), an allgather
+/// schedule returns the assembled full vector (and never finalizes — `op`
+/// is ignored for data movement).
+pub fn execute_reference_collective<T: Element>(
+    schedule: &ProcSchedule,
+    inputs: &[Vec<T>],
+    op: ReduceOp,
+    collective: Collective,
 ) -> Result<Vec<Vec<T>>, ClusterError> {
     let p = schedule.p;
     if inputs.len() != p {
@@ -60,7 +73,9 @@ pub fn execute_reference<T: Element>(
             let rx = rxs[proc].take().unwrap();
             let txs = txs.clone();
             let input = &inputs[proc];
-            handles.push(scope.spawn(move || run_rank(schedule, proc, input, rx, &txs, op)));
+            handles.push(
+                scope.spawn(move || run_rank(schedule, proc, input, rx, &txs, op, collective)),
+            );
         }
         drop(txs);
         for (proc, h) in handles.into_iter().enumerate() {
@@ -73,6 +88,7 @@ pub fn execute_reference<T: Element>(
     outputs.into_iter().collect()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_rank<T: Element>(
     s: &ProcSchedule,
     proc: usize,
@@ -80,6 +96,7 @@ fn run_rank<T: Element>(
     rx: mpsc::Receiver<Msg<T>>,
     txs: &[mpsc::Sender<Msg<T>>],
     op: ReduceOp,
+    collective: Collective,
 ) -> Result<Vec<T>, ClusterError> {
     let n = input.len();
     if n == 0 {
@@ -192,7 +209,15 @@ fn run_rank<T: Element>(
     for &b in &s.result[proc] {
         out.extend_from_slice(bufs[b as usize].as_ref().expect("result buffer dead"));
     }
-    debug_assert_eq!(out.len(), n);
+    match collective {
+        Collective::ReduceScatter => {
+            debug_assert_eq!(out.len(), shard_range(s.p, proc, n).len())
+        }
+        Collective::Allreduce | Collective::Allgather => debug_assert_eq!(out.len(), n),
+    }
+    if collective != Collective::Allgather {
+        T::finalize(op, &mut out, s.p);
+    }
     Ok(out)
 }
 

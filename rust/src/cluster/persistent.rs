@@ -637,6 +637,8 @@ fn run_job<T: Element>(
         step_off += s.steps.len();
         match res {
             Ok(()) => {
+                // Output boundary: the 1/P finalize for Avg (no-op else).
+                kernel.finalize(out.data_mut(), s.p);
                 let _ = job.reply.send((proc, ji, Ok(out)));
             }
             Err(e) => {

@@ -36,7 +36,9 @@ impl Reducer for NativeReducer {
             ));
         }
         match op {
-            ReduceOp::Sum => dst.iter_mut().zip(src).for_each(|(d, &s)| *d += s),
+            // Avg combines as Sum on the wire; the 1/P scale is applied
+            // once at the output boundary, not per combine.
+            ReduceOp::Sum | ReduceOp::Avg => dst.iter_mut().zip(src).for_each(|(d, &s)| *d += s),
             ReduceOp::Prod => dst.iter_mut().zip(src).for_each(|(d, &s)| *d *= s),
             ReduceOp::Max => dst.iter_mut().zip(src).for_each(|(d, &s)| *d = d.max(s)),
             ReduceOp::Min => dst.iter_mut().zip(src).for_each(|(d, &s)| *d = d.min(s)),

@@ -56,7 +56,7 @@ use crate::coordinator::ServiceSchedules;
 use crate::cost::NetParams;
 use crate::net::wire;
 use crate::sched::stats::{chunk_elems_for, wire_reduce_placement};
-use crate::sched::ProcSchedule;
+use crate::sched::{shard_range, Collective, ProcSchedule};
 
 /// Why a submission was not accepted.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -283,6 +283,7 @@ pub struct TypedJob<T: Element> {
     comm: u32,
     schedule: Arc<ProcSchedule>,
     op: ReduceOp,
+    collective: Collective,
     input: Vec<T>,
     reply: Sender<(usize, Result<Vec<T>, String>)>,
     done: Arc<JobDone>,
@@ -442,7 +443,11 @@ impl<T: Element> EngineLane<T> {
         }
 
         let rows = place.get_or_compute(s, || wire_reduce_placement(s));
-        let mut out = vec![T::default(); job.input.len()];
+        let out_len = match job.collective {
+            Collective::ReduceScatter => shard_range(s.p, rank, job.input.len()).len(),
+            Collective::Allreduce | Collective::Allgather => job.input.len(),
+        };
+        let mut out = vec![T::default(); out_len];
         let mut tr = LaneTransport {
             rank,
             base,
@@ -464,6 +469,13 @@ impl<T: Element> EngineLane<T> {
             &NativeKernel(job.op),
             &mut out,
         );
+        let res = res.map(|()| {
+            // Output boundary: the 1/P finalize for Avg (no-op for every
+            // other op; an allgather moves data verbatim and never scales).
+            if job.collective != Collective::Allgather {
+                NativeKernel(job.op).finalize(&mut out, s.p);
+            }
+        });
         let ok = res.is_ok();
         if !ok {
             // Frames of the failed window may still arrive (or sit in
@@ -792,6 +804,21 @@ impl<T: ServiceElement> CommHandle<T> {
         op: ReduceOp,
         kind: AlgorithmKind,
     ) -> Result<(), SubmitError> {
+        self.try_submit_collective(inputs, op, kind, Collective::Allreduce)
+    }
+
+    /// Non-blocking submit of any collective. For
+    /// [`Collective::ReduceScatter`] each rank's collected result is its
+    /// rank-aligned reduced shard; for [`Collective::Allgather`] each
+    /// rank's full-length input contributes only its shard and `op` is
+    /// ignored (no combines run).
+    pub fn try_submit_collective(
+        &self,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        collective: Collective,
+    ) -> Result<(), SubmitError> {
         let bytes = self.validate(inputs)?;
         self.svc.admission.try_admit(bytes).map_err(|e| {
             if e == SubmitError::Busy {
@@ -799,7 +826,7 @@ impl<T: ServiceElement> CommHandle<T> {
             }
             e
         })?;
-        self.dispatch(inputs, op, kind, bytes)
+        self.dispatch(inputs, op, kind, collective, bytes)
     }
 
     /// Blocking submit: wait up to `deadline` for admission, then queue.
@@ -811,6 +838,19 @@ impl<T: ServiceElement> CommHandle<T> {
         kind: AlgorithmKind,
         deadline: Duration,
     ) -> Result<(), SubmitError> {
+        self.submit_collective(inputs, op, kind, Collective::Allreduce, deadline)
+    }
+
+    /// Blocking submit of any collective (semantics as
+    /// [`CommHandle::try_submit_collective`]).
+    pub fn submit_collective(
+        &self,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        collective: Collective,
+        deadline: Duration,
+    ) -> Result<(), SubmitError> {
         let bytes = self.validate(inputs)?;
         self.svc.admission.admit(bytes, deadline).map_err(|e| {
             if e == SubmitError::Deadline {
@@ -818,7 +858,7 @@ impl<T: ServiceElement> CommHandle<T> {
             }
             e
         })?;
-        self.dispatch(inputs, op, kind, bytes)
+        self.dispatch(inputs, op, kind, collective, bytes)
     }
 
     /// Queue an admitted job on every engine under the global submit
@@ -828,10 +868,11 @@ impl<T: ServiceElement> CommHandle<T> {
         inputs: &[Vec<T>],
         op: ReduceOp,
         kind: AlgorithmKind,
+        collective: Collective,
         bytes: usize,
     ) -> Result<(), SubmitError> {
         let m_bytes = inputs[0].len() * std::mem::size_of::<T>();
-        let schedule = match self.svc.scheds.get(kind, self.svc.p, m_bytes) {
+        let schedule = match self.svc.scheds.get_collective(kind, self.svc.p, m_bytes, collective) {
             Ok(s) => s,
             Err(e) => {
                 self.svc.admission.release(bytes);
@@ -857,6 +898,7 @@ impl<T: ServiceElement> CommHandle<T> {
                     comm: self.comm,
                     schedule: schedule.clone(),
                     op,
+                    collective,
                     input: inputs[rank].clone(),
                     reply: reply_tx.clone(),
                     done: done.clone(),
@@ -870,8 +912,9 @@ impl<T: ServiceElement> CommHandle<T> {
     }
 
     /// Block for the oldest uncollected job and return its per-rank
-    /// results (`out[rank]`, identical contents across ranks — the
-    /// allreduce contract). Any rank's failure fails the whole job with
+    /// results (`out[rank]`; identical contents across ranks for an
+    /// allreduce or allgather, the rank-aligned reduced shard for a
+    /// reduce-scatter). Any rank's failure fails the whole job with
     /// a per-rank error report; later jobs on this and other
     /// communicators are unaffected.
     ///
@@ -947,6 +990,53 @@ mod tests {
             }
         }
         assert_eq!(svc.stats().snapshot().0, 1);
+    }
+
+    #[test]
+    fn collectives_and_avg_through_the_service() {
+        let p = 4;
+        let n = 37;
+        let svc = ServiceCluster::start(ServiceCfg::new(p));
+        let comm = svc.comm::<f32>().unwrap();
+        let xs = inputs(p, n, 0xC011);
+        let want = reference_allreduce(&xs, ReduceOp::Sum);
+
+        // Reduce-scatter: per-rank shards concatenate to the reduced vector.
+        comm.try_submit_collective(&xs, ReduceOp::Sum, AlgorithmKind::Ring, Collective::ReduceScatter)
+            .unwrap();
+        let got = comm.collect().unwrap();
+        for (rank, out) in got.iter().enumerate() {
+            let sh = shard_range(p, rank, n);
+            assert_eq!(out.len(), sh.len(), "rank {rank}");
+            for (g, w) in out.iter().zip(&want[sh]) {
+                assert!((g - w).abs() <= 1e-5 * (1.0 + w.abs()), "rank {rank}");
+            }
+        }
+
+        // Allgather: rank r contributes only its shard; results are
+        // bit-exact (data moves verbatim).
+        comm.try_submit_collective(&xs, ReduceOp::Sum, AlgorithmKind::Ring, Collective::Allgather)
+            .unwrap();
+        let got = comm.collect().unwrap();
+        let mut gathered = vec![0.0f32; n];
+        for r in 0..p {
+            let sh = shard_range(p, r, n);
+            gathered[sh.clone()].copy_from_slice(&xs[r][sh]);
+        }
+        for out in &got {
+            assert_eq!(out, &gathered);
+        }
+
+        // Avg: combines as Sum, scaled 1/P exactly once at the boundary.
+        comm.try_submit(&xs, ReduceOp::Avg, AlgorithmKind::Ring).unwrap();
+        let got = comm.collect().unwrap();
+        for out in &got {
+            for (g, w) in out.iter().zip(&want) {
+                let a = w / p as f32;
+                assert!((g - a).abs() <= 1e-5 * (1.0 + a.abs()));
+            }
+        }
+        assert_eq!(svc.stats().snapshot().3, 3);
     }
 
     #[test]

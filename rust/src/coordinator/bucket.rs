@@ -17,7 +17,7 @@
 //!   latency envelope, so buckets are sized to keep that envelope at a
 //!   small fraction of the bucket's `2m·β` wire time.
 
-use crate::cost::NetParams;
+use crate::cost::{GammaTable, NetParams};
 use crate::util::ceil_log2;
 
 /// A contiguous run of tensors packed into one flat vector.
@@ -173,6 +173,22 @@ pub fn optimal_chunk_bytes(step_msg_bytes: usize, params: &NetParams) -> usize {
     ((m as f64 / n_star) as usize).clamp(lo, m)
 }
 
+/// γ-aware [`optimal_chunk_bytes`]: reads the reduce speed from the
+/// measured per-dtype, per-size-class table ([`GammaTable`], filled by
+/// `net::probe`) at the step message size instead of a scalar γ, so a
+/// dtype whose combine is memory-bound at this size chunks more finely
+/// (more overlap to win) and one that folds at cache speed chunks
+/// coarser (the α envelopes would outweigh the overlap). `dtype` is the
+/// [`crate::cluster::Element`] `DTYPE` tag.
+pub fn optimal_chunk_bytes_for(
+    step_msg_bytes: usize,
+    params: &NetParams,
+    gamma: &GammaTable,
+    dtype: u8,
+) -> usize {
+    optimal_chunk_bytes(step_msg_bytes, &gamma.specialize(params, dtype, step_msg_bytes))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +293,31 @@ mod tests {
         // Bigger messages chunk more finely in frame count.
         let c2 = optimal_chunk_bytes(4 * m, &params);
         assert!((4 * m).div_ceil(c2) > n);
+    }
+
+    #[test]
+    fn gamma_aware_chunking_tracks_the_dtype_and_size_class() {
+        let params = NetParams::table2();
+        let m = 4 << 20;
+        // Uniform table: bit-identical to the scalar path for every dtype.
+        let uni = GammaTable::uniform(params.gamma);
+        for dtype in [1u8, 2, 3, 4] {
+            assert_eq!(
+                optimal_chunk_bytes_for(m, &params, &uni, dtype),
+                optimal_chunk_bytes(m, &params)
+            );
+        }
+        // A measured table with a memory-bound f64 γ at this size class
+        // chunks f64 more finely than the scalar model, while f32 (row
+        // untouched) is unchanged.
+        let mut t = uni;
+        t.rows[GammaTable::dtype_row(2)][GammaTable::size_class(m)] = params.gamma * 64.0;
+        let f64_chunk = optimal_chunk_bytes_for(m, &params, &t, 2);
+        assert!(
+            f64_chunk < optimal_chunk_bytes(m, &params),
+            "slower γ must chunk finer ({f64_chunk})"
+        );
+        assert_eq!(optimal_chunk_bytes_for(m, &params, &t, 1), optimal_chunk_bytes(m, &params));
     }
 
     #[test]

@@ -28,9 +28,14 @@ use std::time::Instant;
 
 use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
 use crate::cluster::{self, ClusterExecutor, Element, JobIo, PersistentCluster, ReduceOp, Reducer};
-use crate::cost::{optimal_r, CostModel, NetParams};
+use crate::cost::{optimal_r, CostModel, GammaTable, NetParams};
 use crate::perm::{Group, Permutation};
-use crate::sched::{pipeline, stats::stats, verify::verify, Op, ProcSchedule};
+use crate::sched::{
+    pipeline,
+    stats::stats,
+    verify::{verify, verify_collective},
+    Collective, Op, ProcSchedule,
+};
 
 /// Per-call metrics.
 #[derive(Clone, Debug)]
@@ -257,6 +262,7 @@ pub struct CommunicatorBuilder {
     group: Option<Group>,
     h: Option<Permutation>,
     params: NetParams,
+    gamma: Option<GammaTable>,
     openmpi_threshold: usize,
     bucket_bytes: Option<usize>,
     segments: Option<u32>,
@@ -274,6 +280,16 @@ impl CommunicatorBuilder {
     }
     pub fn net_params(mut self, p: NetParams) -> Self {
         self.params = p;
+        self
+    }
+    /// Per-dtype/per-size-class γ (e.g. from
+    /// [`crate::net::probe::measure_gamma_table`]). Default: uniform at
+    /// the scalar `params.gamma`, which reproduces the scalar cost model
+    /// exactly. With a measured table, size-dependent resolution
+    /// (`GeneralizedAuto`'s `r*`, chunk sizing) prices the combine term
+    /// with the γ of the dtype actually being reduced.
+    pub fn gamma_table(mut self, g: GammaTable) -> Self {
+        self.gamma = Some(g);
         self
     }
     pub fn openmpi_threshold(mut self, t: usize) -> Self {
@@ -322,6 +338,9 @@ impl CommunicatorBuilder {
             p: self.p,
             group,
             h,
+            gamma: self
+                .gamma
+                .unwrap_or_else(|| GammaTable::uniform(self.params.gamma)),
             params: self.params,
             openmpi_threshold: self.openmpi_threshold,
             bucket_bytes: self.bucket_bytes,
@@ -344,6 +363,13 @@ pub struct Communicator {
     group: Group,
     h: Permutation,
     params: NetParams,
+    /// Per-dtype/per-size-class γ steering every size-dependent decision
+    /// (uniform at `params.gamma` unless the builder installed a measured
+    /// table). Threaded by **call-site specialization**: the generic entry
+    /// points substitute `gamma.specialize(params, T::DTYPE, m_bytes)` for
+    /// `params`, so `des`, `CostModel`, `optimal_r` and `bucket` keep
+    /// their scalar-γ signatures.
+    gamma: GammaTable,
     openmpi_threshold: usize,
     bucket_bytes: Option<usize>,
     segments: Option<u32>,
@@ -372,6 +398,7 @@ impl Communicator {
             group: None,
             h: None,
             params: NetParams::table2(),
+            gamma: None,
             openmpi_threshold: 10 * 1024,
             bucket_bytes: None,
             segments: None,
@@ -387,11 +414,29 @@ impl Communicator {
         self.params
     }
 
+    /// The γ table steering size-dependent resolution (uniform at
+    /// `net_params().gamma` unless the builder installed a measured one).
+    pub fn gamma_table(&self) -> GammaTable {
+        self.gamma
+    }
+
+    /// `self.params` with γ specialized to `(dtype, m_bytes)` — the
+    /// parameters every size-dependent decision for that job should see.
+    fn params_for(&self, dtype: u8, m_bytes: usize) -> NetParams {
+        self.gamma.specialize(&self.params, dtype, m_bytes)
+    }
+
     /// Resolve a kind that depends on the message size to a concrete one.
+    /// Non-generic callers price the combine term with the f32 γ row; the
+    /// generic entry points resolve through [`Element::DTYPE`] instead.
     pub fn resolve(&self, kind: AlgorithmKind, m_bytes: usize) -> AlgorithmKind {
+        self.resolve_dtype(kind, m_bytes, 1)
+    }
+
+    fn resolve_dtype(&self, kind: AlgorithmKind, m_bytes: usize, dtype: u8) -> AlgorithmKind {
         match kind {
             AlgorithmKind::GeneralizedAuto => AlgorithmKind::Generalized {
-                r: optimal_r(self.p, m_bytes, &self.params),
+                r: optimal_r(self.p, m_bytes, &self.params_for(dtype, m_bytes)),
             },
             AlgorithmKind::OpenMpi => {
                 if m_bytes < self.openmpi_threshold {
@@ -423,24 +468,30 @@ impl Communicator {
         best.1
     }
 
-    /// Model estimate for a kind at a message size.
+    /// Model estimate for a kind at a message size (f32 γ row; the
+    /// generic execution paths estimate through [`Element::DTYPE`]).
     pub fn predict(&self, kind: AlgorithmKind, m_bytes: usize) -> f64 {
-        let cm = CostModel::new(self.p, self.params);
+        self.predict_dtype(kind, m_bytes, 1)
+    }
+
+    fn predict_dtype(&self, kind: AlgorithmKind, m_bytes: usize, dtype: u8) -> f64 {
+        let params = self.params_for(dtype, m_bytes);
+        let cm = CostModel::new(self.p, params);
         let m = m_bytes as f64;
-        match self.resolve(kind, m_bytes) {
+        match self.resolve_dtype(kind, m_bytes, dtype) {
             AlgorithmKind::Naive | AlgorithmKind::Ring => cm.ring(m),
             AlgorithmKind::BwOptimal => cm.bw_optimal(m),
             AlgorithmKind::LatOptimal => cm.lat_optimal(m),
             AlgorithmKind::Generalized { r } => cm.proposed(m, r),
             AlgorithmKind::RecursiveDoubling => cm.recursive_doubling(m),
             AlgorithmKind::RecursiveHalving => cm.recursive_halving(m),
-            AlgorithmKind::Hybrid { x } => crate::algo::hybrid::cost(self.p, m, x, &self.params),
+            AlgorithmKind::Hybrid { x } => crate::algo::hybrid::cost(self.p, m, x, &params),
             AlgorithmKind::Segmented { r, slabs } => {
                 // β/γ invariant; latency multiplied by the slab count.
                 let base = cm.proposed(m, r);
                 let l = crate::util::ceil_log2(self.p) as f64;
                 let steps = 2.0 * l - r as f64;
-                base + (slabs as f64 - 1.0) * steps * self.params.alpha
+                base + (slabs as f64 - 1.0) * steps * params.alpha
             }
             AlgorithmKind::GeneralizedAuto | AlgorithmKind::OpenMpi => unreachable!("resolved"),
         }
@@ -452,7 +503,16 @@ impl Communicator {
         kind: AlgorithmKind,
         m_bytes: usize,
     ) -> Result<(std::sync::Arc<ProcSchedule>, f64), String> {
-        let resolved = self.resolve(kind, m_bytes);
+        self.schedule_dtype(kind, m_bytes, 1)
+    }
+
+    fn schedule_dtype(
+        &self,
+        kind: AlgorithmKind,
+        m_bytes: usize,
+        dtype: u8,
+    ) -> Result<(std::sync::Arc<ProcSchedule>, f64), String> {
+        let resolved = self.resolve_dtype(kind, m_bytes, dtype);
         let label = format!("{}-p{}", resolved.label(), self.p);
         if let Some(s) = self.cache.lock().unwrap().get(&label) {
             return Ok((s.clone(), 0.0));
@@ -460,7 +520,7 @@ impl Communicator {
         let t0 = Instant::now();
         let ctx = BuildCtx {
             m_bytes,
-            params: self.params,
+            params: self.params_for(dtype, m_bytes),
             openmpi_threshold: self.openmpi_threshold,
         };
         let algo = Algorithm {
@@ -485,7 +545,17 @@ impl Communicator {
         m_bytes: usize,
         segments: u32,
     ) -> Result<(std::sync::Arc<ProcSchedule>, f64), String> {
-        let (base, mut build_seconds) = self.schedule(kind, m_bytes)?;
+        self.pipelined_schedule_dtype(kind, m_bytes, segments, 1)
+    }
+
+    fn pipelined_schedule_dtype(
+        &self,
+        kind: AlgorithmKind,
+        m_bytes: usize,
+        segments: u32,
+        dtype: u8,
+    ) -> Result<(std::sync::Arc<ProcSchedule>, f64), String> {
+        let (base, mut build_seconds) = self.schedule_dtype(kind, m_bytes, dtype)?;
         if segments <= 1 {
             return Ok((base, build_seconds));
         }
@@ -510,7 +580,7 @@ impl Communicator {
         kind: AlgorithmKind,
     ) -> Result<AllreduceOutput<T>, String> {
         let m_bytes = inputs.first().map(|v| v.len()).unwrap_or(0) * std::mem::size_of::<T>();
-        let (schedule, build_seconds) = self.schedule(kind, m_bytes)?;
+        let (schedule, build_seconds) = self.schedule_dtype(kind, m_bytes, T::DTYPE)?;
         let t0 = Instant::now();
         let ranks = self
             .exec
@@ -519,8 +589,95 @@ impl Communicator {
         let exec_seconds = t0.elapsed().as_secs_f64();
         Ok(AllreduceOutput {
             ranks,
-            metrics: self.metrics(&schedule, m_bytes, kind, build_seconds, exec_seconds),
+            metrics: self.metrics(&schedule, m_bytes, kind, T::DTYPE, build_seconds, exec_seconds),
         })
+    }
+
+    /// Build (or fetch from cache) the verified rank-aligned schedule for
+    /// a standalone collective phase (see [`crate::algo::collectives`] for
+    /// the kind → family mapping). The schedule verifies against its own
+    /// postcondition ([`verify_collective`]) before it is cached.
+    pub fn collective_schedule(
+        &self,
+        kind: AlgorithmKind,
+        collective: Collective,
+    ) -> Result<(std::sync::Arc<ProcSchedule>, f64), String> {
+        let label = format!("{}-{}-p{}", collective.tag(), kind.label(), self.p);
+        if let Some(s) = self.cache.lock().unwrap().get(&label) {
+            return Ok((s.clone(), 0.0));
+        }
+        let t0 = Instant::now();
+        let s = match collective {
+            Collective::ReduceScatter => crate::algo::collectives::build_reduce_scatter(kind, self.p)?,
+            Collective::Allgather => crate::algo::collectives::build_allgather(kind, self.p)?,
+            Collective::Allreduce => return self.schedule(kind, 0),
+        };
+        verify_collective(&s, collective)
+            .map_err(|e| format!("schedule failed verification: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let arc = std::sync::Arc::new(s);
+        self.cache.lock().unwrap().insert(label, arc.clone());
+        Ok((arc, dt))
+    }
+
+    /// Reduce-scatter over the simulated cluster: every rank contributes a
+    /// full-length vector and gets back the **fully reduced rank-aligned
+    /// shard** [`crate::sched::shard_range`]`(P, rank, n)` —
+    /// `out.ranks[r]` holds only that shard, so the per-rank lengths
+    /// differ (they concatenate to one reduced vector). `Avg` finalizes
+    /// each shard with the 1/P scale exactly like the fused allreduce.
+    pub fn reduce_scatter<T: Element>(
+        &self,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<AllreduceOutput<T>, String> {
+        self.run_collective(inputs, op, kind, Collective::ReduceScatter)
+    }
+
+    /// Allgather over the simulated cluster: every rank passes a
+    /// full-length vector of which **only its rank-aligned shard**
+    /// [`crate::sched::shard_range`]`(P, rank, n)` is read, and every rank
+    /// gets back the full concatenation of all shards. No combines run
+    /// (there is no `op` — data moves verbatim).
+    pub fn allgather<T: Element>(
+        &self,
+        inputs: &[Vec<T>],
+        kind: AlgorithmKind,
+    ) -> Result<AllreduceOutput<T>, String> {
+        // The op never reaches a combine (the verifier proves allgather
+        // schedules move data verbatim) and Allgather skips finalize.
+        self.run_collective(inputs, ReduceOp::Sum, kind, Collective::Allgather)
+    }
+
+    fn run_collective<T: Element>(
+        &self,
+        inputs: &[Vec<T>],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        collective: Collective,
+    ) -> Result<AllreduceOutput<T>, String> {
+        let m_bytes = inputs.first().map(|v| v.len()).unwrap_or(0) * std::mem::size_of::<T>();
+        let (schedule, build_seconds) = self.collective_schedule(kind, collective)?;
+        let t0 = Instant::now();
+        let ranks = self
+            .exec
+            .execute_collective(&schedule, inputs, op, collective)
+            .map_err(|e| e.to_string())?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+        let mut metrics =
+            self.metrics(&schedule, m_bytes, kind, T::DTYPE, build_seconds, exec_seconds);
+        // A standalone phase costs roughly half the fused collective; the
+        // closed-form allreduce estimate does not apply, so price the
+        // schedule honestly under the DES instead (γ specialized to the
+        // dtype actually reduced).
+        metrics.predicted_seconds = crate::des::simulate(
+            &schedule,
+            m_bytes.max(1),
+            &self.params_for(T::DTYPE, m_bytes),
+        )
+        .makespan;
+        Ok(AllreduceOutput { ranks, metrics })
     }
 
     /// Bucketed, pipelined Allreduce over a **list of tensors** per rank —
@@ -552,7 +709,7 @@ impl Communicator {
         let n_tensors = lens.len();
         let elem_bytes = std::mem::size_of::<T>();
         let total_bytes = lens.iter().sum::<usize>() * elem_bytes;
-        let bp = self.plan_bucket_schedules(&lens, elem_bytes, kind)?;
+        let bp = self.plan_bucket_schedules(&lens, elem_bytes, kind, T::DTYPE)?;
 
         let packed: Vec<Vec<Vec<T>>> = bp
             .plan
@@ -636,6 +793,7 @@ impl Communicator {
         lens: &[usize],
         elem_bytes: usize,
         kind: AlgorithmKind,
+        dtype: u8,
     ) -> Result<BucketSchedules, String> {
         let bucket_bytes = self
             .bucket_bytes
@@ -648,8 +806,9 @@ impl Communicator {
             let m_bytes = b.elems * elem_bytes;
             let segments = self.segments.unwrap_or_else(|| auto_segments(m_bytes));
             max_segments = max_segments.max(segments);
-            let (s, build_seconds) = self.pipelined_schedule(kind, m_bytes.max(1), segments)?;
-            let mut m = self.metrics(&s, m_bytes, kind, build_seconds, 0.0);
+            let (s, build_seconds) =
+                self.pipelined_schedule_dtype(kind, m_bytes.max(1), segments, dtype)?;
+            let mut m = self.metrics(&s, m_bytes, kind, dtype, build_seconds, 0.0);
             // The pipelined expansion runs K + S − 1 steps: S − 1 extra α
             // envelopes on top of the base algorithm's closed-form estimate
             // (β/γ are invariant — each step moves 1/S of the data).
@@ -732,7 +891,7 @@ impl Communicator {
         let n_tensors = lens.len();
         let elem_bytes = std::mem::size_of::<T>();
         let total_bytes = lens.iter().sum::<usize>() * elem_bytes;
-        let bp = self.plan_bucket_schedules(&lens, elem_bytes, kind)?;
+        let bp = self.plan_bucket_schedules(&lens, elem_bytes, kind, T::DTYPE)?;
         let ns: Vec<usize> = bp.plan.buckets.iter().map(|b| b.elems).collect();
 
         let pool = self.persistent_pool::<T>();
@@ -773,7 +932,7 @@ impl Communicator {
         let exec_seconds = t0.elapsed().as_secs_f64();
         Ok(AllreduceOutput {
             ranks,
-            metrics: self.metrics(&schedule, m_bytes, kind, build_seconds, exec_seconds),
+            metrics: self.metrics(&schedule, m_bytes, kind, 1, build_seconds, exec_seconds),
         })
     }
 
@@ -782,6 +941,7 @@ impl Communicator {
         schedule: &ProcSchedule,
         m_bytes: usize,
         kind: AlgorithmKind,
+        dtype: u8,
         build_seconds: f64,
         exec_seconds: f64,
     ) -> Metrics {
@@ -804,7 +964,7 @@ impl Communicator {
             steps,
             critical_units_sent,
             critical_bytes_sent: critical_units_sent * unit_bytes,
-            predicted_seconds: self.predict(kind, m_bytes),
+            predicted_seconds: self.predict_dtype(kind, m_bytes, dtype),
             build_seconds,
             exec_seconds,
         }
@@ -844,7 +1004,12 @@ pub struct ServiceSchedules {
 impl ServiceSchedules {
     /// A cache resolving under `params` (use measured values when you
     /// have them — every rank must pass identical parameters, or ranks
-    /// resolve different schedules and the mesh deadlocks).
+    /// resolve different schedules and the mesh deadlocks). Resolution is
+    /// deliberately **scalar-γ**: a service schedule is shared by every
+    /// tenant submitting the same `(kind, P, size)` regardless of dtype,
+    /// so a per-dtype γ would have to become part of the grant-sequenced
+    /// key on every rank. Jobs that want dtype-honest resolution run
+    /// through [`Communicator`] / [`crate::net::Endpoint`].
     pub fn new(params: NetParams) -> ServiceSchedules {
         ServiceSchedules {
             params,
@@ -853,46 +1018,69 @@ impl ServiceSchedules {
         }
     }
 
-    /// The verified schedule for `kind` over `p` ranks at `m_bytes`,
-    /// built and verified on first use and cloned from the cache after.
-    /// The build runs outside the lock (a slow first-time build never
-    /// blocks other tenants' hits); concurrent misses may build twice
-    /// and last-insert wins — both values are identical by construction.
+    /// The verified allreduce schedule for `kind` over `p` ranks at
+    /// `m_bytes` — [`ServiceSchedules::get_collective`] with
+    /// [`Collective::Allreduce`].
     pub fn get(
         &self,
         kind: AlgorithmKind,
         p: usize,
         m_bytes: usize,
     ) -> Result<Arc<ProcSchedule>, String> {
-        let key = (format!("{kind:?}"), p, m_bytes);
+        self.get_collective(kind, p, m_bytes, Collective::Allreduce)
+    }
+
+    /// The verified schedule for `collective` under `kind` over `p` ranks
+    /// at `m_bytes`, built and verified on first use and cloned from the
+    /// cache after. The build runs outside the lock (a slow first-time
+    /// build never blocks other tenants' hits); concurrent misses may
+    /// build twice and last-insert wins — both values are identical by
+    /// construction. Reduce-scatter and allgather schedules verify
+    /// against their own postcondition
+    /// ([`crate::sched::verify::verify_collective`]).
+    pub fn get_collective(
+        &self,
+        kind: AlgorithmKind,
+        p: usize,
+        m_bytes: usize,
+        collective: Collective,
+    ) -> Result<Arc<ProcSchedule>, String> {
+        let key = (format!("{}/{kind:?}", collective.tag()), p, m_bytes);
         if let Some(s) = self.inner.lock().unwrap().get(&key) {
             return Ok(s.clone());
         }
-        let resolved = match kind {
-            AlgorithmKind::GeneralizedAuto => AlgorithmKind::Generalized {
-                r: optimal_r(p, m_bytes, &self.params),
-            },
-            AlgorithmKind::OpenMpi => {
-                if m_bytes < self.openmpi_threshold {
-                    AlgorithmKind::RecursiveDoubling
-                } else {
-                    AlgorithmKind::Ring
-                }
+        let s = match collective {
+            Collective::ReduceScatter => crate::algo::collectives::build_reduce_scatter(kind, p)?,
+            Collective::Allgather => crate::algo::collectives::build_allgather(kind, p)?,
+            Collective::Allreduce => {
+                let resolved = match kind {
+                    AlgorithmKind::GeneralizedAuto => AlgorithmKind::Generalized {
+                        r: optimal_r(p, m_bytes, &self.params),
+                    },
+                    AlgorithmKind::OpenMpi => {
+                        if m_bytes < self.openmpi_threshold {
+                            AlgorithmKind::RecursiveDoubling
+                        } else {
+                            AlgorithmKind::Ring
+                        }
+                    }
+                    k => k,
+                };
+                let ctx = BuildCtx {
+                    m_bytes,
+                    params: self.params,
+                    openmpi_threshold: self.openmpi_threshold,
+                };
+                let algo = Algorithm {
+                    kind: resolved,
+                    group: Group::cyclic(p),
+                    h: Permutation::identity(p),
+                };
+                algo.build(&ctx)?
             }
-            k => k,
         };
-        let ctx = BuildCtx {
-            m_bytes,
-            params: self.params,
-            openmpi_threshold: self.openmpi_threshold,
-        };
-        let algo = Algorithm {
-            kind: resolved,
-            group: Group::cyclic(p),
-            h: Permutation::identity(p),
-        };
-        let s = algo.build(&ctx)?;
-        verify(&s).map_err(|e| format!("schedule failed verification: {e}"))?;
+        verify_collective(&s, collective)
+            .map_err(|e| format!("schedule failed verification: {e}"))?;
         let arc = Arc::new(s);
         self.inner.lock().unwrap().insert(key, arc.clone());
         Ok(arc)
@@ -971,6 +1159,46 @@ mod tests {
             AlgorithmKind::Ring | AlgorithmKind::Generalized { r: 0 } => {}
             k => panic!("expected ring/bw-optimal for huge m, got {k:?}"),
         }
+    }
+
+    #[test]
+    fn gamma_table_specializes_resolution_per_dtype() {
+        let params = NetParams::table2();
+        let mut g = GammaTable::uniform(params.gamma);
+        // Inflate the f64 γ at the smallest size class so eq. 37 pushes
+        // f64 jobs toward fewer combine rounds than f32 jobs at the same
+        // byte size — the whole point of the per-dtype table.
+        g.rows[GammaTable::dtype_row(2)][GammaTable::size_class(4096)] = params.gamma * 1e6;
+        let comm = Communicator::builder(127)
+            .net_params(params)
+            .gamma_table(g)
+            .build()
+            .unwrap();
+        let f32_r = match comm.resolve_dtype(AlgorithmKind::GeneralizedAuto, 4096, 1) {
+            AlgorithmKind::Generalized { r } => r,
+            k => panic!("resolve must yield Generalized, got {k:?}"),
+        };
+        let f64_r = match comm.resolve_dtype(AlgorithmKind::GeneralizedAuto, 4096, 2) {
+            AlgorithmKind::Generalized { r } => r,
+            k => panic!("resolve must yield Generalized, got {k:?}"),
+        };
+        assert!(f32_r > 0, "4 KiB at P=127 must favor extra rounds");
+        assert!(
+            f64_r < f32_r,
+            "inflated f64 γ must lower r* ({f64_r} vs {f32_r})"
+        );
+        // The public (f32-row) resolve matches the dtype-1 specialization.
+        assert_eq!(
+            comm.resolve(AlgorithmKind::GeneralizedAuto, 4096),
+            AlgorithmKind::Generalized { r: f32_r }
+        );
+        // A uniform table is the scalar cost model, bit for bit.
+        let plain = Communicator::builder(127).net_params(params).build().unwrap();
+        assert_eq!(plain.gamma_table(), GammaTable::uniform(params.gamma));
+        assert_eq!(
+            plain.resolve_dtype(AlgorithmKind::GeneralizedAuto, 4096, 2),
+            AlgorithmKind::Generalized { r: f32_r }
+        );
     }
 
     #[test]

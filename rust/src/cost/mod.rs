@@ -36,6 +36,79 @@ impl Default for NetParams {
     }
 }
 
+/// Upper byte bounds of the γ **size classes**: a combine over `m` bytes
+/// is priced by the first class with `m ≤ bound` (the last class also
+/// covers everything larger). Four classes span the regimes that matter:
+/// L1-resident (≤ 4 KiB), L2-resident (≤ 64 KiB), cache-spilling
+/// (≤ 1 MiB), and memory-bound (8 MiB and beyond, where the threaded
+/// combine kicks in).
+pub const GAMMA_SIZE_CLASSES: [usize; 4] = [4 << 10, 64 << 10, 1 << 20, 8 << 20];
+
+/// Measured reduction speed (seconds per byte) **per dtype and per size
+/// class** — the honest γ. A single scalar γ prices an L1-resident f32
+/// fold and a memory-bound f64 fold identically, which skews every
+/// latency/bandwidth trade `optimal_r` and `bucket::optimal_*` make;
+/// this table lets each decision read the γ that its dtype and message
+/// size will actually see. Rows are indexed by [`crate::cluster::Element`]'s
+/// `DTYPE` tag (1 = f32, 2 = f64, 3 = i32, 4 = i64 → rows 0..4), columns
+/// by [`GAMMA_SIZE_CLASSES`].
+///
+/// [`GammaTable::uniform`] (every cell = the scalar γ) is the identity
+/// refinement: code threading the table behaves bit-identically to the
+/// scalar model until a measured table ([`crate::net::probe`]) replaces it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GammaTable {
+    /// `rows[dtype_row][size_class]`, seconds per byte.
+    pub rows: [[f64; 4]; 4],
+}
+
+impl GammaTable {
+    /// Every cell equal to `gamma` — the refinement-free table under
+    /// which [`GammaTable::specialize`] is the identity.
+    pub fn uniform(gamma: f64) -> GammaTable {
+        GammaTable { rows: [[gamma; 4]; 4] }
+    }
+
+    /// The size-class column pricing an `m_bytes` combine: the first
+    /// class whose bound is ≥ `m_bytes`, the last class otherwise.
+    pub fn size_class(m_bytes: usize) -> usize {
+        GAMMA_SIZE_CLASSES
+            .iter()
+            .position(|&bound| m_bytes <= bound)
+            .unwrap_or(GAMMA_SIZE_CLASSES.len() - 1)
+    }
+
+    /// The row for an [`crate::cluster::Element`] `DTYPE` tag (1..=4).
+    /// Unknown tags fall back to the f32 row — the conservative default
+    /// for the custom-reducer paths that carry no tag.
+    pub fn dtype_row(dtype: u8) -> usize {
+        match dtype {
+            1..=4 => dtype as usize - 1,
+            _ => 0,
+        }
+    }
+
+    /// The measured γ for one `(dtype, message size)` decision point.
+    pub fn gamma(&self, dtype: u8, m_bytes: usize) -> f64 {
+        self.rows[Self::dtype_row(dtype)][Self::size_class(m_bytes)]
+    }
+
+    /// `params` with γ replaced by this table's cell for
+    /// `(dtype, m_bytes)` — how the table threads through every consumer
+    /// of [`NetParams`] (`optimal_r`, [`CostModel`], the DES,
+    /// `bucket::optimal_chunk_bytes`) without changing their signatures.
+    pub fn specialize(&self, params: &NetParams, dtype: u8, m_bytes: usize) -> NetParams {
+        NetParams { gamma: self.gamma(dtype, m_bytes), ..*params }
+    }
+}
+
+impl Default for GammaTable {
+    /// Table 2's scalar γ in every cell.
+    fn default() -> Self {
+        GammaTable::uniform(NetParams::table2().gamma)
+    }
+}
+
 /// Closed-form cost estimates for `P` processes and `m`-byte vectors.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
@@ -205,6 +278,54 @@ mod tests {
 
     fn cm(p: usize) -> CostModel {
         CostModel::new(p, NetParams::table2())
+    }
+
+    #[test]
+    fn gamma_table_size_classes_and_fallbacks() {
+        // Boundary membership: each bound belongs to its own class; one
+        // byte past it moves to the next; beyond the last bound stays in
+        // the last class.
+        for (ci, &bound) in GAMMA_SIZE_CLASSES.iter().enumerate() {
+            assert_eq!(GammaTable::size_class(bound), ci);
+        }
+        assert_eq!(GammaTable::size_class(0), 0);
+        assert_eq!(GammaTable::size_class((4 << 10) + 1), 1);
+        assert_eq!(GammaTable::size_class(usize::MAX), 3);
+        // Dtype rows: tags 1..=4 map to rows 0..=3, unknown tags to f32.
+        for d in 1u8..=4 {
+            assert_eq!(GammaTable::dtype_row(d), d as usize - 1);
+        }
+        assert_eq!(GammaTable::dtype_row(0), 0);
+        assert_eq!(GammaTable::dtype_row(99), 0);
+    }
+
+    #[test]
+    fn uniform_gamma_table_specialization_is_identity() {
+        let p = NetParams::table2();
+        let t = GammaTable::uniform(p.gamma);
+        for dtype in [0u8, 1, 2, 3, 4, 7] {
+            for m in [0usize, 100, 4 << 10, 1 << 20, 64 << 20] {
+                assert_eq!(t.specialize(&p, dtype, m), p);
+            }
+        }
+    }
+
+    #[test]
+    fn measured_gamma_table_shifts_optimal_r() {
+        // A table whose small-message f64 γ is far above the scalar makes
+        // the compute term dominate: the latency-optimal corner's
+        // `P(2⌈log P⌉−2)·u` reduced bytes swamp its α savings, so the
+        // specialized model removes fewer distribution steps.
+        let p = NetParams::table2();
+        let m = 4096usize;
+        let scalar_r = optimal_r(127, m, &p);
+        assert!(scalar_r > 0, "pick an m where the scalar model is mid-range");
+        let mut t = GammaTable::uniform(p.gamma);
+        t.rows[GammaTable::dtype_row(2)][GammaTable::size_class(m)] = p.gamma * 1e6;
+        let honest_r = optimal_r(127, m, &t.specialize(&p, 2, m));
+        assert!(honest_r < scalar_r, "slower γ must lower r ({honest_r} vs {scalar_r})");
+        // The f32 row is untouched, so f32 decisions are unchanged.
+        assert_eq!(optimal_r(127, m, &t.specialize(&p, 1, m)), scalar_r);
     }
 
     #[test]

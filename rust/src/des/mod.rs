@@ -17,7 +17,7 @@
 
 use crate::cost::NetParams;
 use crate::sched::{
-    stats::{chunk_pays, plan_chunk_fusion},
+    stats::{chunk_pays, plan_chunk_fusion, FuseDir},
     BufId, MicroOp, Op, ProcSchedule,
 };
 use crate::topo::NodeMap;
@@ -258,9 +258,15 @@ fn simulate_impl(
                                 total_reduced += fuse_bytes as f64;
                             }
                             clock[proc] = done;
-                            for (i, src) in plan.iter().enumerate() {
-                                if let Some(src) = src {
-                                    fused[proc].push((bufs[i], *src));
+                            for (i, fp) in plan.iter().enumerate() {
+                                if let Some(fp) = fp {
+                                    // Record the covered Reduce as its
+                                    // (dst, src) pair, whichever side the
+                                    // received buffer is on.
+                                    fused[proc].push(match fp.dir {
+                                        FuseDir::IntoRecv => (bufs[i], fp.operand),
+                                        FuseDir::IntoLocal => (fp.operand, bufs[i]),
+                                    });
                                 }
                             }
                         }

@@ -24,10 +24,12 @@
 //! | [`sched`] | the process-level schedule IR, legality checks, symbolic verifier, traffic statistics |
 //! | [`sched::pipeline`] | segment-pipelined schedule expansion: `K`-step schedules over `S` slabs in `K + S − 1` multi-lane steps, re-proven by the verifier |
 //! | [`algo`] | schedule builders: naive, ring, the generalized algorithm (bw-opt / intermediate-r / latency-opt), recursive doubling/halving, hybrid, Bruck, OpenMPI-switch |
-//! | [`cost`] | α–β–γ cost model (paper Table 2), closed-form step/byte/time formulas (eqs. 15, 25, 36, 44), optimal-r selection (eq. 37) |
+//! | [`cost`] | α–β–γ cost model (paper Table 2), closed-form step/byte/time formulas (eqs. 15, 25, 36, 44), optimal-r selection (eq. 37), the per-dtype × per-size-class [`cost::GammaTable`] |
 //! | [`des`] | discrete-event network simulator executing a schedule under the cost model with per-process clocks |
 //! | [`cluster`] | a real multi-threaded message-passing cluster executing schedules on actual data; barrier-free multi-bucket dispatch (`execute_many`) |
 //! | [`cluster::arena`] | the zero-copy data plane: space-reclaiming slab arenas, sharded size-classed block pools, `Arc`-shared wire blocks, fused receive-reduce with send-aware placement, chunked streaming with per-chunk fused combines (shared by both executors) |
+//! | [`cluster::kernels`] | the reduction kernels every combine funnels through: fixed-width lane-unrolled loops (no `unsafe`, stable Rust), multi-threaded splitting above a byte threshold, staged wide copies, the `Avg` finalize — all bit-identical to the scalar reference by construction |
+//! | [`algo::collectives`] | first-class **reduce-scatter** and **allgather** schedule builders (ring for any `P`, recursive halving/doubling at powers of two), verified by the same symbolic verifier via [`sched::Collective`] |
 //! | [`cluster::oracle`] | the clone-per-message reference data plane, kept as the differential-test oracle and bench baseline |
 //! | [`runtime`] | PJRT runtime: loads AOT-compiled HLO artifacts (Pallas reduction kernels, the DDP train step); execution gated behind the `pjrt` feature |
 //! | [`net`] | multi-process execution over real TCP sockets: length-prefixed wire protocol, rank-0 rendezvous + full-mesh or **lazily-dialed** bootstrap, per-peer reader/writer threads behind a socket [`cluster::arena::Transport`], α/β/γ + arrival-skew probes, and the per-rank [`net::Endpoint`] front end |
@@ -111,6 +113,92 @@
 //! }
 //! ```
 //!
+//! ## Reduce-scatter, allgather, and `Avg`
+//!
+//! Allreduce's two halves are first-class collectives with their own
+//! schedule builders ([`algo::collectives`]): **reduce-scatter** leaves
+//! each rank holding only its rank-aligned shard
+//! ([`sched::shard_range`]) of the reduced vector, **allgather**
+//! concatenates per-rank shards back to full length on every rank, and
+//! their composition is exactly an allreduce. Both run on every executor
+//! in the crate — [`coordinator::Communicator`], [`net::Endpoint`], and
+//! both service layers — and both are machine-checked by the same
+//! symbolic verifier as allreduce schedules
+//! ([`sched::verify::verify_collective`]):
+//!
+//! ```
+//! use permallreduce::prelude::*;
+//!
+//! let (p, n) = (4, 10);
+//! let inputs: Vec<Vec<f32>> = (0..p).map(|r| vec![r as f32 + 1.0; n]).collect();
+//! let comm = Communicator::builder(p).build().unwrap();
+//!
+//! // Reduce-scatter: rank r keeps shard_range(p, r, n) of the sum
+//! // (shards are uneven when P ∤ n — here 2, 3, 2, 3 elements).
+//! let rs = comm.reduce_scatter(&inputs, ReduceOp::Sum, AlgorithmKind::BwOptimal).unwrap();
+//! for rank in 0..p {
+//!     assert_eq!(rs.ranks[rank].len(), shard_range(p, rank, n).len());
+//!     assert!(rs.ranks[rank].iter().all(|&x| x == 10.0)); // 1+2+3+4
+//! }
+//!
+//! // Allgather: each rank contributes its shard (only that slice of its
+//! // input is read), every rank gets the full concatenation back —
+//! // reduce-scatter ∘ allgather == allreduce, bit for bit.
+//! let mut shards: Vec<Vec<f32>> = (0..p).map(|_| vec![0.0; n]).collect();
+//! for (r, s) in shards.iter_mut().enumerate() {
+//!     s[shard_range(p, r, n)].copy_from_slice(&rs.ranks[r]);
+//! }
+//! let ag = comm.allgather(&shards, AlgorithmKind::BwOptimal).unwrap();
+//! for rank in 0..p {
+//!     assert!(ag.ranks[rank].iter().all(|&x| x == 10.0));
+//! }
+//!
+//! // Avg combines as Sum on the wire and applies the 1/P scale exactly
+//! // once at the output boundary, so it is bit-identical to sum-then-
+//! // divide (integer Avg truncates toward zero).
+//! let avg = comm.allreduce(&inputs, ReduceOp::Avg, AlgorithmKind::GeneralizedAuto).unwrap();
+//! assert!(avg.ranks[0].iter().all(|&x| x == 2.5));
+//! ```
+//!
+//! ## Reduction kernels and the honest γ (`cluster::kernels`, [`cost::GammaTable`])
+//!
+//! Every combine in the crate — both executors, the socket transport, the
+//! probe — funnels through [`cluster::kernels`]: fixed-width lane-unrolled
+//! loops (`LANES = 8` accumulators, no `unsafe`, stable Rust) that the
+//! autovectorizer turns into SIMD, with a multi-threaded split above a
+//! byte threshold whose chunk boundaries are `LANES`-aligned — so lane
+//! unrolling and threading never change which operands meet at which
+//! element, and every path is **bit-identical** to the naive scalar loop
+//! (pinned by `tests/kernels.rs`, gated by `bench_gate --kernels`).
+//!
+//! Because the measured combine speed differs per dtype and per buffer
+//! size, the probe measures a 4×4 [`cost::GammaTable`] (dtype row ×
+//! size class) rather than one scalar γ, and broadcasts it with α/β; the
+//! cost model then *specializes* γ per call
+//! ([`cost::GammaTable::specialize`]), so `optimal_r`, chunk sizing, and
+//! DES pricing see the γ of the dtype and message size actually being
+//! reduced:
+//!
+//! ```
+//! use permallreduce::prelude::*;
+//! use permallreduce::cost::{GammaTable, NetParams};
+//!
+//! let params = NetParams::table2();
+//! // Pretend f64 combines are 4× slower at small sizes (a probe would
+//! // measure this; uniform tables reproduce the scalar model exactly).
+//! let mut g = GammaTable::uniform(params.gamma);
+//! g.rows[GammaTable::dtype_row(2)][GammaTable::size_class(4096)] = 4.0 * params.gamma;
+//! let comm = Communicator::builder(8)
+//!     .net_params(params)
+//!     .gamma_table(g)
+//!     .build()
+//!     .unwrap();
+//! // Generic entry points (allreduce::<f64>, reduce_scatter, …) now
+//! // resolve r and price schedules from the f64 row automatically.
+//! let row = GammaTable::dtype_row(2);
+//! assert!(comm.gamma_table().rows[row][GammaTable::size_class(4096)] > params.gamma);
+//! ```
+//!
 //! ## Running across processes (`net`)
 //!
 //! Every executor above lives in one OS process; [`net`] runs the same
@@ -134,7 +222,8 @@
 //! let mut ep: Endpoint<f32> = Endpoint::connect(rank, nprocs, opts).unwrap();
 //!
 //! // Warmup probe: measure α (round-trip floor), β (bytes/s) and γ
-//! // (combine speed) over the live mesh. Rank 0 broadcasts the result so
+//! // (combine speed, a per-dtype × size-class `cost::GammaTable`) over
+//! // the live mesh. Rank 0 broadcasts the result so
 //! // every rank tunes from the SAME measured parameters — bucket sizes
 //! // (`optimal_bucket_bytes`), chunk sizes (`optimal_chunk_bytes`) and
 //! // the generalized algorithm's step count (`optimal_r`) now come from
@@ -511,6 +600,6 @@ pub mod prelude {
     pub use crate::net::service::{Service, ServiceOptions};
     pub use crate::net::{Endpoint, NetOptions};
     pub use crate::perm::{Group, Permutation};
-    pub use crate::sched::{ProcSchedule, ScheduleStats};
+    pub use crate::sched::{shard_range, Collective, ProcSchedule, ScheduleStats};
     pub use crate::topo::NodeMap;
 }

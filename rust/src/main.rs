@@ -47,7 +47,7 @@ const HELP: &str = r#"gar — generalized Allreduce (Kolmakov & Zhang 2020 repro
 
 USAGE:
   gar run     --p <N> --m <bytes> [--algo auto|bw|lat|ring|rd|rh|openmpi|naive|r<K>]
-              [--op sum|prod|max|min] [--pjrt] [--seed S]
+              [--op sum|prod|max|min|avg] [--pjrt] [--seed S]
   gar verify  [--p-max N]
   gar sweep   [--p N] [--m bytes]
   gar figures [--fig 1|7|8|9|10|11|12] [--out DIR]
@@ -85,6 +85,7 @@ fn parse_op(s: &str) -> Result<ReduceOp, String> {
         "prod" => ReduceOp::Prod,
         "max" => ReduceOp::Max,
         "min" => ReduceOp::Min,
+        "avg" => ReduceOp::Avg,
         other => return Err(format!("unknown op {other:?}")),
     })
 }

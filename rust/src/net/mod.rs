@@ -67,13 +67,13 @@ use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
 use crate::cluster::arena::{BlockPool, DataPlane, NativeKernel};
 use crate::cluster::{ClusterError, ReduceOp};
 use crate::coordinator::bucket;
-use crate::cost::{optimal_r, NetParams};
+use crate::cost::{optimal_r, GammaTable, NetParams};
 use crate::perm::{Group, Permutation};
 use crate::sched::{
-    pipeline,
+    pipeline, shard_range,
     stats::{chunk_elems_for, chunk_fusion_rows_for, wire_placement_row, FusionRows},
-    verify::verify,
-    ProcSchedule,
+    verify::{verify, verify_collective},
+    Collective, ProcSchedule,
 };
 
 use fault::FaultPolicy;
@@ -164,6 +164,11 @@ pub struct Endpoint<T: WireElement = f32> {
     rank: usize,
     p: usize,
     params: NetParams,
+    /// Per-dtype/per-size-class γ ([`Endpoint::probe`] measures it; until
+    /// then every cell is `params.gamma`). Schedule resolution specializes
+    /// `params` through it per call, so an f64 job and an f32 job can pick
+    /// different `r*` at the same byte size.
+    gamma: GammaTable,
     chunk_bytes: Option<usize>,
     openmpi_threshold: usize,
     pool: Arc<BlockPool<T>>,
@@ -228,6 +233,7 @@ impl<T: WireElement> Endpoint<T> {
         Ok(Endpoint {
             rank,
             p,
+            gamma: GammaTable::uniform(opts.params.gamma),
             params: opts.params,
             chunk_bytes: opts.chunk_bytes,
             openmpi_threshold: 10 * 1024,
@@ -279,24 +285,41 @@ impl<T: WireElement> Endpoint<T> {
     /// ranks resolve identical schedules and bucket plans afterwards.
     /// Returns the adopted parameters.
     pub fn probe(&mut self, cfg: &probe::ProbeConfig) -> Result<NetParams, ClusterError> {
-        let params = if self.p == 1 {
-            NetParams {
-                alpha: 1e-9,
-                beta: 1e-12,
-                gamma: probe::measure_gamma::<T>(cfg.gamma_elems),
-            }
+        let (params, gamma) = if self.p == 1 {
+            (
+                NetParams {
+                    alpha: 1e-9,
+                    beta: 1e-12,
+                    gamma: probe::measure_gamma::<T>(cfg.gamma_elems),
+                },
+                probe::measure_gamma_table(),
+            )
         } else if self.rank == 0 {
             let params = probe::measure(&mut self.transport, cfg)?;
-            let frame = wire::encode_params(&params);
+            let gamma = probe::measure_gamma_table();
+            let frame = wire::encode_params(&params, &gamma);
             for peer in 1..self.p {
                 self.transport.post(peer, frame.clone());
             }
-            params
+            (params, gamma)
         } else {
             self.transport.wait_params()?
         };
         self.params = params;
+        self.gamma = gamma;
         Ok(params)
+    }
+
+    /// The per-dtype/per-size-class γ table currently steering schedule
+    /// resolution (uniform at `params.gamma` until [`Endpoint::probe`]).
+    pub fn gamma_table(&self) -> GammaTable {
+        self.gamma
+    }
+
+    /// `self.params` with γ specialized to this endpoint's element type at
+    /// `m_bytes` — what `optimal_r` and the schedule builders should see.
+    fn params_for(&self, m_bytes: usize) -> NetParams {
+        self.gamma.specialize(&self.params, T::DTYPE, m_bytes)
     }
 
     /// Resolve a size-dependent kind exactly like
@@ -305,7 +328,7 @@ impl<T: WireElement> Endpoint<T> {
     pub fn resolve(&self, kind: AlgorithmKind, m_bytes: usize) -> AlgorithmKind {
         match kind {
             AlgorithmKind::GeneralizedAuto => AlgorithmKind::Generalized {
-                r: optimal_r(self.p, m_bytes, &self.params),
+                r: optimal_r(self.p, m_bytes, &self.params_for(m_bytes)),
             },
             AlgorithmKind::OpenMpi => {
                 if m_bytes < self.openmpi_threshold {
@@ -341,7 +364,7 @@ impl<T: WireElement> Endpoint<T> {
     ) -> Result<Arc<ProcSchedule>, String> {
         let resolved = match kind {
             AlgorithmKind::GeneralizedAuto => AlgorithmKind::Generalized {
-                r: optimal_r(p, m_bytes, &self.params),
+                r: optimal_r(p, m_bytes, &self.params_for(m_bytes)),
             },
             AlgorithmKind::OpenMpi => {
                 if m_bytes < self.openmpi_threshold {
@@ -358,7 +381,7 @@ impl<T: WireElement> Endpoint<T> {
         }
         let ctx = BuildCtx {
             m_bytes,
-            params: self.params,
+            params: self.params_for(m_bytes),
             openmpi_threshold: self.openmpi_threshold,
         };
         let algo = Algorithm {
@@ -463,7 +486,12 @@ impl<T: WireElement> Endpoint<T> {
                     out,
                 )
             }
-        }
+        }?;
+        // Output boundary: the 1/P finalize for Avg (no-op for every
+        // other op). `s.p`, not the mesh size — a shrunken group's
+        // average is over the ranks that actually contributed.
+        kernel.finalize(out, s.p);
+        Ok(())
     }
 
     fn run(
@@ -494,6 +522,77 @@ impl<T: WireElement> Endpoint<T> {
         let m_bytes = data.len() * std::mem::size_of::<T>();
         let s = self.schedule(kind, m_bytes)?;
         self.run(&s, data, op, &mut out).map_err(|e| e.to_string())?;
+        Ok(out)
+    }
+
+    /// Build (or fetch from cache) the verified rank-aligned schedule
+    /// for a standalone phase collective —
+    /// [`Collective::Allreduce`] delegates to [`Endpoint::schedule`].
+    pub fn collective_schedule(
+        &mut self,
+        kind: AlgorithmKind,
+        collective: Collective,
+    ) -> Result<Arc<ProcSchedule>, String> {
+        if collective == Collective::Allreduce {
+            return self.schedule(kind, 0);
+        }
+        let label = format!("{}-{}-p{}", collective.tag(), kind.label(), self.p);
+        if let Some(s) = self.cache.get(&label) {
+            return Ok(s.clone());
+        }
+        let s = match collective {
+            Collective::ReduceScatter => {
+                crate::algo::collectives::build_reduce_scatter(kind, self.p)?
+            }
+            Collective::Allgather => crate::algo::collectives::build_allgather(kind, self.p)?,
+            Collective::Allreduce => unreachable!("handled above"),
+        };
+        verify_collective(&s, collective)
+            .map_err(|e| format!("schedule failed verification: {e}"))?;
+        let arc = Arc::new(s);
+        self.cache.insert(label, arc.clone());
+        Ok(arc)
+    }
+
+    /// Reduce-scatter this rank's vector: every rank passes the same
+    /// full-length `data`, and rank `r` gets back the **reduced shard**
+    /// covering [`shard_range`]`(P, r, n)` — the first phase of a fused
+    /// allreduce as a first-class collective. Mirrors
+    /// [`crate::coordinator::Communicator::reduce_scatter`] for one rank
+    /// of a multi-process job.
+    pub fn reduce_scatter(
+        &mut self,
+        data: &[T],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+    ) -> Result<Vec<T>, String> {
+        let shard = shard_range(self.p, self.rank, data.len());
+        let mut out = vec![T::default(); shard.len()];
+        if self.p == 1 {
+            out.copy_from_slice(data);
+            return Ok(out);
+        }
+        let s = self.collective_schedule(kind, Collective::ReduceScatter)?;
+        self.run(&s, data, op, &mut out).map_err(|e| e.to_string())?;
+        Ok(out)
+    }
+
+    /// Allgather the rank-aligned shards: rank `r` contributes
+    /// `data[shard_range(P, r, n)]` (the rest of `data` is ignored) and
+    /// every rank gets back the full `n`-element concatenation,
+    /// bit-identical across ranks. No reduction happens, so there is no
+    /// `op` parameter. Mirrors
+    /// [`crate::coordinator::Communicator::allgather`].
+    pub fn allgather(&mut self, data: &[T], kind: AlgorithmKind) -> Result<Vec<T>, String> {
+        let mut out = vec![T::default(); data.len()];
+        if self.p == 1 {
+            out.copy_from_slice(data);
+            return Ok(out);
+        }
+        let s = self.collective_schedule(kind, Collective::Allgather)?;
+        // The op never reaches a combine (allgather schedules contain no
+        // Reduce), and Sum makes the boundary finalize a no-op.
+        self.run(&s, data, ReduceOp::Sum, &mut out).map_err(|e| e.to_string())?;
         Ok(out)
     }
 

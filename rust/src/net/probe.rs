@@ -14,7 +14,15 @@
 //!   wire and the protocol stack, not the peer's schedule loop.
 //! * **β** — a large-payload round-trip, halved, minus α, per byte.
 //! * **γ** — a local timed [`Element::combine`](crate::cluster::Element)
-//!   fold (the same loop the data plane runs), per byte.
+//!   fold (the same vectorized kernel loop the data plane runs), per
+//!   byte. Beyond the scalar γ that rides in `NetParams`,
+//!   [`measure_gamma_table`] times the fold **per dtype and per size
+//!   class** ([`GAMMA_SIZE_CLASSES`]): an L1-resident f32 fold and a
+//!   memory-bound f64 fold differ by an order of magnitude, and a
+//!   scalar γ averages that difference into every `optimal_r` /
+//!   `optimal_chunk_bytes` decision. The full [`GammaTable`] travels in
+//!   the same `PARAMS` broadcast (legacy 25-byte frames still decode —
+//!   they yield a uniform table).
 //!
 //! Every rank must end with **identical** parameters or the ranks would
 //! resolve different schedules and bucket plans and deadlock — so rank 0
@@ -24,7 +32,7 @@
 use std::time::Instant;
 
 use crate::cluster::{ClusterError, ReduceOp};
-use crate::cost::NetParams;
+use crate::cost::{GammaTable, NetParams, GAMMA_SIZE_CLASSES};
 
 use super::transport::NetTransport;
 use super::wire::{self, WireElement};
@@ -93,6 +101,23 @@ pub fn measure_gamma<T: WireElement>(elems: usize) -> f64 {
     let per_call = t0.elapsed().as_secs_f64() / iters as f64;
     let bytes = n * std::mem::size_of::<T>();
     (per_call / bytes as f64).max(1e-13)
+}
+
+/// Time the combine kernels for **all four dtypes at every size class**
+/// — the honest γ table. Each cell runs [`measure_gamma`] with the class
+/// bound's worth of elements, so the largest class exercises the
+/// multi-threaded combine path exactly like a real large-message step
+/// would. Purely local (no wire traffic): rank 0 measures once and
+/// broadcasts the table inside its `PARAMS` message.
+pub fn measure_gamma_table() -> GammaTable {
+    let mut rows = [[0.0f64; 4]; 4];
+    for (ci, &bytes) in GAMMA_SIZE_CLASSES.iter().enumerate() {
+        rows[GammaTable::dtype_row(1)][ci] = measure_gamma::<f32>(bytes / 4);
+        rows[GammaTable::dtype_row(2)][ci] = measure_gamma::<f64>(bytes / 8);
+        rows[GammaTable::dtype_row(3)][ci] = measure_gamma::<i32>(bytes / 4);
+        rows[GammaTable::dtype_row(4)][ci] = measure_gamma::<i64>(bytes / 8);
+    }
+    GammaTable { rows }
 }
 
 /// Rank 0's measurement pass: α and β against every peer (the slowest peer
@@ -212,6 +237,19 @@ mod tests {
             measure_gamma::<i64>(1 << 12),
         ] {
             assert!(g.is_finite() && g > 0.0, "gamma {g}");
+        }
+    }
+
+    /// Every cell of the measured table is a usable γ (positive, finite)
+    /// — timer jitter or an optimized-away fold would surface here as a
+    /// zero or the 1e-13 floor in *every* cell.
+    #[test]
+    fn gamma_table_cells_are_usable() {
+        let t = measure_gamma_table();
+        for (d, row) in t.rows.iter().enumerate() {
+            for (c, &g) in row.iter().enumerate() {
+                assert!(g.is_finite() && g > 0.0, "row {d} class {c}: gamma {g}");
+            }
         }
     }
 }

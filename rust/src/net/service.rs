@@ -92,7 +92,7 @@ use crate::cluster::service::{Admission, ServiceStats, SubmitError};
 use crate::cluster::{ClusterError, ReduceOp};
 use crate::coordinator::ServiceSchedules;
 use crate::sched::stats::{chunk_elems_for, chunk_fusion_rows_for, wire_placement_row};
-use crate::sched::ProcSchedule;
+use crate::sched::{shard_range, Collective, ProcSchedule};
 
 /// How often a non-zero rank's engine interrupts its grant wait to
 /// drain local submissions and notice shutdown.
@@ -138,6 +138,7 @@ struct Submission<T> {
     input: Vec<T>,
     op: ReduceOp,
     kind: AlgorithmKind,
+    collective: Collective,
     bytes: usize,
     reply: Sender<Result<Vec<T>, String>>,
 }
@@ -344,13 +345,28 @@ impl<T: WireElement> CommHandle<T> {
         self.in_flight.load(Ordering::Relaxed)
     }
 
-    /// Submit this rank's input of one job, failing fast with
+    /// Submit this rank's input of one allreduce, failing fast with
     /// [`SubmitError::Busy`] when this rank's admission is at capacity.
     pub fn try_submit(
         &self,
         input: &[T],
         op: ReduceOp,
         kind: AlgorithmKind,
+    ) -> Result<(), SubmitError> {
+        self.try_submit_collective(input, op, kind, Collective::Allreduce)
+    }
+
+    /// [`try_submit`](CommHandle::try_submit) for any collective: a
+    /// reduce-scatter's [`collect`](CommHandle::collect) returns this
+    /// rank's reduced shard ([`shard_range`]-aligned); an allgather
+    /// reads only this rank's shard of `input`, ignores `op`, and
+    /// returns the full concatenation.
+    pub fn try_submit_collective(
+        &self,
+        input: &[T],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        collective: Collective,
     ) -> Result<(), SubmitError> {
         let bytes = std::mem::size_of_val(input);
         if let Err(e) = self.shared.admission.try_admit(bytes) {
@@ -359,16 +375,30 @@ impl<T: WireElement> CommHandle<T> {
             }
             return Err(e);
         }
-        self.dispatch(input, op, kind, bytes)
+        self.dispatch(input, op, kind, collective, bytes)
     }
 
-    /// Submit this rank's input of one job, blocking until admitted or
-    /// until `deadline` elapses ([`SubmitError::Deadline`]).
+    /// Submit this rank's input of one allreduce, blocking until
+    /// admitted or until `deadline` elapses ([`SubmitError::Deadline`]).
     pub fn submit(
         &self,
         input: &[T],
         op: ReduceOp,
         kind: AlgorithmKind,
+        deadline: Duration,
+    ) -> Result<(), SubmitError> {
+        self.submit_collective(input, op, kind, Collective::Allreduce, deadline)
+    }
+
+    /// [`submit`](CommHandle::submit) for any collective; see
+    /// [`try_submit_collective`](CommHandle::try_submit_collective) for
+    /// the per-collective I/O contract.
+    pub fn submit_collective(
+        &self,
+        input: &[T],
+        op: ReduceOp,
+        kind: AlgorithmKind,
+        collective: Collective,
         deadline: Duration,
     ) -> Result<(), SubmitError> {
         let bytes = std::mem::size_of_val(input);
@@ -378,7 +408,7 @@ impl<T: WireElement> CommHandle<T> {
             }
             return Err(e);
         }
-        self.dispatch(input, op, kind, bytes)
+        self.dispatch(input, op, kind, collective, bytes)
     }
 
     /// Hand an admitted job to the engine and enqueue its reply slot.
@@ -387,10 +417,12 @@ impl<T: WireElement> CommHandle<T> {
         input: &[T],
         op: ReduceOp,
         kind: AlgorithmKind,
+        collective: Collective,
         bytes: usize,
     ) -> Result<(), SubmitError> {
         let (reply, reply_rx) = mpsc::channel();
-        let sub = Submission { comm: self.comm, input: input.to_vec(), op, kind, bytes, reply };
+        let sub =
+            Submission { comm: self.comm, input: input.to_vec(), op, kind, collective, bytes, reply };
         let sent = match &*self.shared.submit.lock().unwrap() {
             Some(tx) => tx.send(sub).is_ok(),
             None => false,
@@ -630,14 +662,18 @@ impl<T: WireElement> Engine<T> {
         // Resolution is deterministic in (kind, p, m_bytes, params), so
         // a failure here fails on every rank and no rank advances the
         // cursor — the region stays aligned.
-        let s = self.scheds.get(sub.kind, self.p, m_bytes)?;
+        let s = self.scheds.get_collective(sub.kind, self.p, m_bytes, sub.collective)?;
         let hints = self.rank_hints(&s);
         let cursor = self.next_step.entry(sub.comm).or_insert(0);
         let base = wire::comm_tag(sub.comm, *cursor);
         *cursor += s.steps.len();
         self.transport.begin_call(base);
         let chunk_elems = self.chunk_bytes.map(|b| chunk_elems_for(b, std::mem::size_of::<T>()));
-        let mut out = vec![T::default(); sub.input.len()];
+        let out_len = match sub.collective {
+            Collective::ReduceScatter => shard_range(self.p, self.rank, sub.input.len()).len(),
+            _ => sub.input.len(),
+        };
+        let mut out = vec![T::default(); out_len];
         let run = self.plane.run_schedule(
             &s,
             self.rank,
@@ -651,6 +687,10 @@ impl<T: WireElement> Engine<T> {
             &mut out,
         );
         run.map_err(|e| e.to_string())?;
+        if sub.collective != Collective::Allgather {
+            // Output boundary: the 1/P finalize for Avg (no-op else).
+            NativeKernel(sub.op).finalize(&mut out, self.p);
+        }
         Ok(out)
     }
 

@@ -42,7 +42,7 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::arena::{BlockPool, Frame, FrameQueue, Payload, Transport};
 use crate::cluster::ClusterError;
-use crate::cost::NetParams;
+use crate::cost::{GammaTable, NetParams};
 
 use super::bootstrap::Mesh;
 use super::fault::{Backoff, FaultPolicy};
@@ -63,8 +63,9 @@ pub(super) enum Event<T: WireElement> {
     /// An `ECHO` answering one of **our** probes (peers' probes are echoed
     /// inside the reader and never reach the inbox).
     Echo { from: usize, nonce: u64 },
-    /// A `PARAMS` broadcast from rank 0.
-    Params(NetParams),
+    /// A `PARAMS` broadcast from rank 0: the scalar α–β–γ triple plus the
+    /// per-dtype/per-size-class γ table.
+    Params(NetParams, GammaTable),
     /// A `READY` arrival ping or skew table, timestamped at decode so
     /// rank 0 measures skew without any cross-host clock.
     Ready {
@@ -99,7 +100,7 @@ pub struct NetTransport<T: WireElement> {
     pending: HashMap<(usize, usize), FrameQueue<T>>,
     /// A `PARAMS` broadcast that arrived while we were doing something
     /// else; consumed by [`NetTransport::wait_params`].
-    stashed_params: Option<NetParams>,
+    stashed_params: Option<(NetParams, GammaTable)>,
     /// `READY` messages awaiting [`NetTransport::wait_ready`].
     ready_msgs: Vec<(usize, ReadyMsg, Instant)>,
     /// `EPOCH` messages awaiting [`NetTransport::wait_epoch`].
@@ -457,8 +458,8 @@ impl<T: WireElement> NetTransport<T> {
                 None
             }
             Event::Echo { from, nonce } => Some((from, nonce)),
-            Event::Params(p) => {
-                self.stashed_params = Some(p);
+            Event::Params(p, g) => {
+                self.stashed_params = Some((p, g));
                 None
             }
             Event::Ready { from, msg, at } => {
@@ -514,7 +515,7 @@ impl<T: WireElement> NetTransport<T> {
     }
 
     /// Wait (bounded) for rank 0's `PARAMS` broadcast.
-    pub(super) fn wait_params(&mut self) -> Result<NetParams, ClusterError> {
+    pub(super) fn wait_params(&mut self) -> Result<(NetParams, GammaTable), ClusterError> {
         let deadline = Instant::now() + self.timeout;
         loop {
             if let Some(p) = self.stashed_params.take() {
@@ -886,7 +887,7 @@ fn reader_loop<T: WireElement>(
                 Err(detail) => Event::Bad { from: peer, detail },
             },
             wire::KIND_PARAMS => match wire::decode_params(&body) {
-                Ok(p) => Event::Params(p),
+                Ok((p, g)) => Event::Params(p, g),
                 Err(detail) => Event::Bad { from: peer, detail },
             },
             wire::KIND_HEARTBEAT => match wire::decode_heartbeat(&body) {

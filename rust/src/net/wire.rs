@@ -21,6 +21,10 @@
 //!   PROBE   (4): u64 nonce | opaque payload (echoed verbatim)
 //!   ECHO    (5): u64 nonce | opaque payload
 //!   PARAMS  (6): f64 alpha | f64 beta | f64 gamma   (IEEE-754 bits, LE)
+//!                | u8 n_dtypes | u8 n_classes | n_dtypes × n_classes × f64
+//!                (per-dtype/per-size-class γ table, row-major by dtype;
+//!                 the table suffix is optional — a bare 25-byte body from
+//!                 an older peer decodes as a uniform table of the scalar γ)
 //!   HEARTBEAT (7): u32 from | u64 epoch              (liveness keep-alive)
 //!   READY   (8): u8 phase | phase 0: u32 rank | u64 seq   (arrival ping)
 //!                          | phase 1: u32 p | p × f64     (skew table)
@@ -67,7 +71,7 @@ use std::sync::Arc;
 
 use crate::cluster::arena::{payload_from_wire, BlockPool, Frame, Payload};
 use crate::cluster::Element;
-use crate::cost::NetParams;
+use crate::cost::{GammaTable, NetParams};
 
 /// Message kinds (first body byte).
 pub const KIND_DATA: u8 = 0;
@@ -131,12 +135,12 @@ pub fn tag_step(tag: usize) -> usize {
 pub const MAX_BODY_BYTES: usize = 1 << 30;
 
 /// An element type the wire protocol can move across processes: every
-/// [`Element`] with a fixed little-endian encoding. The `DTYPE` tag
-/// travels in each `DATA` frame so a mesh accidentally mixing element
-/// types fails with a protocol error instead of reinterpreting bytes.
+/// [`Element`] with a fixed little-endian encoding. The
+/// [`Element::DTYPE`] tag travels in each `DATA` frame so a mesh
+/// accidentally mixing element types fails with a protocol error instead
+/// of reinterpreting bytes, and doubles as the row index of the γ table
+/// carried by `PARAMS` ([`GammaTable`]).
 pub trait WireElement: Element {
-    const DTYPE: u8;
-
     /// Append `vals` to `out`, little-endian.
     fn write_le(vals: &[Self], out: &mut Vec<u8>);
 
@@ -146,10 +150,8 @@ pub trait WireElement: Element {
 }
 
 macro_rules! impl_wire_element {
-    ($t:ty, $tag:expr) => {
+    ($t:ty) => {
         impl WireElement for $t {
-            const DTYPE: u8 = $tag;
-
             fn write_le(vals: &[Self], out: &mut Vec<u8>) {
                 out.reserve(vals.len() * std::mem::size_of::<Self>());
                 for v in vals {
@@ -166,10 +168,10 @@ macro_rules! impl_wire_element {
         }
     };
 }
-impl_wire_element!(f32, 1);
-impl_wire_element!(f64, 2);
-impl_wire_element!(i32, 3);
-impl_wire_element!(i64, 4);
+impl_wire_element!(f32);
+impl_wire_element!(f64);
+impl_wire_element!(i32);
+impl_wire_element!(i64);
 
 /// Start an outgoing frame: one allocation sized for the body, with four
 /// placeholder bytes where [`finish_frame`] patches the length prefix —
@@ -450,27 +452,65 @@ pub fn decode_probe(body: &[u8]) -> Result<(u64, usize), String> {
     Ok((nonce, body.len() - 9))
 }
 
-pub fn encode_params(p: &NetParams) -> Vec<u8> {
-    let mut out = frame_buf(25);
+/// Encode rank 0's measured parameters *and* its per-dtype/per-size-class
+/// γ table in one `PARAMS` frame. The scalar triple leads (exactly the
+/// legacy layout) so an older decoder that stops after 25 bytes still
+/// gets a coherent, if coarser, cost model.
+pub fn encode_params(p: &NetParams, g: &GammaTable) -> Vec<u8> {
+    let nd = g.rows.len();
+    let nc = g.rows[0].len();
+    let mut out = frame_buf(25 + 2 + nd * nc * 8);
     out.push(KIND_PARAMS);
     out.extend_from_slice(&p.alpha.to_le_bytes());
     out.extend_from_slice(&p.beta.to_le_bytes());
     out.extend_from_slice(&p.gamma.to_le_bytes());
+    out.push(nd as u8);
+    out.push(nc as u8);
+    for row in &g.rows {
+        for cell in row {
+            out.extend_from_slice(&cell.to_le_bytes());
+        }
+    }
     finish_frame(out)
 }
 
-pub fn decode_params(body: &[u8]) -> Result<NetParams, String> {
-    if body.len() != 25 {
+/// Decode a `PARAMS` body into the scalar triple plus the γ table.
+///
+/// Tolerant in both directions: a legacy 25-byte body (no table) yields
+/// [`GammaTable::uniform`] of the scalar γ, and a table whose declared
+/// `(n_dtypes, n_classes)` differs from ours fills only the overlapping
+/// cells — the rest stay at the scalar γ, so every cell is always a
+/// usable value and the ranks still agree (they all ran this decoder on
+/// the same bytes).
+pub fn decode_params(body: &[u8]) -> Result<(NetParams, GammaTable), String> {
+    if body.len() < 25 {
         return Err("PARAMS malformed".into());
     }
-    let f = |r: std::ops::Range<usize>| {
-        f64::from_le_bytes(body[r].try_into().expect("8 bytes"))
+    let f = |off: usize| -> f64 {
+        f64::from_le_bytes(body[off..off + 8].try_into().expect("8 bytes"))
     };
-    Ok(NetParams {
-        alpha: f(1..9),
-        beta: f(9..17),
-        gamma: f(17..25),
-    })
+    let params = NetParams {
+        alpha: f(1),
+        beta: f(9),
+        gamma: f(17),
+    };
+    let mut table = GammaTable::uniform(params.gamma);
+    if body.len() > 25 {
+        if body.len() < 27 {
+            return Err("PARAMS malformed".into());
+        }
+        let nd = body[25] as usize;
+        let nc = body[26] as usize;
+        if body.len() != 27 + nd * nc * 8 {
+            return Err("PARAMS malformed".into());
+        }
+        for d in 0..nd.min(table.rows.len()) {
+            for c in 0..nc.min(table.rows[0].len()) {
+                table.rows[d][c] = f(27 + (d * nc + c) * 8);
+            }
+        }
+    }
+    Ok((params, table))
 }
 
 // --------------------------------------------------------- elasticity --
@@ -857,11 +897,23 @@ mod tests {
             beta: 3.5e-9,
             gamma: 7.0e-11,
         };
-        let enc = encode_params(&p);
+        let mut g = GammaTable::uniform(p.gamma);
+        g.rows[1][3] = 9.0e-10;
+        let enc = encode_params(&p, &g);
         let body = read_frame(&mut enc.as_slice(), MAX_BODY_BYTES)
             .unwrap()
             .unwrap();
-        assert_eq!(decode_params(&body).unwrap(), p);
+        assert_eq!(decode_params(&body).unwrap(), (p, g));
+
+        // A legacy 25-byte body (scalar triple, no table) still decodes;
+        // the table falls back to uniform(scalar γ).
+        let (lp, lg) = decode_params(&body[..25]).unwrap();
+        assert_eq!(lp, p);
+        assert_eq!(lg, GammaTable::uniform(p.gamma));
+
+        // A truncated or length-inconsistent table is rejected loudly.
+        assert!(decode_params(&body[..26]).is_err());
+        assert!(decode_params(&body[..body.len() - 8]).is_err());
     }
 
     #[test]

@@ -37,7 +37,8 @@ fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecu
 /// Identity element used to pad a chunk up to the kernel's fixed size.
 fn pad_value(op: ReduceOp) -> f32 {
     match op {
-        ReduceOp::Sum => 0.0,
+        // Avg combines as Sum (the 1/P scale happens at unpack).
+        ReduceOp::Sum | ReduceOp::Avg => 0.0,
         ReduceOp::Prod => 1.0,
         ReduceOp::Max => f32::NEG_INFINITY,
         ReduceOp::Min => f32::INFINITY,
@@ -46,7 +47,7 @@ fn pad_value(op: ReduceOp) -> f32 {
 
 fn op_key(op: ReduceOp) -> &'static str {
     match op {
-        ReduceOp::Sum => "sum",
+        ReduceOp::Sum | ReduceOp::Avg => "sum",
         ReduceOp::Prod => "prod",
         ReduceOp::Max => "max",
         ReduceOp::Min => "min",

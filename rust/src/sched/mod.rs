@@ -37,6 +37,49 @@ pub mod verify;
 
 pub use stats::{ChunkPlan, ScheduleStats};
 
+/// The postcondition a schedule computes — the fused Allreduce or one of
+/// its two standalone phases (the paper's §4 reduce-scatter stage and its
+/// mirror-image allgather, exposed as first-class collectives the way
+/// production stacks do).
+///
+/// Both phases are **rank-aligned**: under the builders' identity
+/// placement, rank `r` owns unit range
+/// `[r·n_units/P, (r+1)·n_units/P)` — element range
+/// [`shard_range`]`(P, r, n)` for `n_units = P`. A reduce-scatter result
+/// is exactly that reduced shard; an allgather input contributes exactly
+/// that shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Collective {
+    /// Every rank ends with the full reduced vector.
+    Allreduce,
+    /// Rank `r` ends with the fully reduced shard [`shard_range`]`(P, r, n)`.
+    ReduceScatter,
+    /// Rank `r` contributes shard [`shard_range`]`(P, r, n)`; every rank
+    /// ends with the full concatenated vector. No combines run.
+    Allgather,
+}
+
+impl Collective {
+    /// Short tag used in schedule-cache keys and wire framing.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Collective::Allreduce => "ar",
+            Collective::ReduceScatter => "rs",
+            Collective::Allgather => "ag",
+        }
+    }
+}
+
+/// Rank `r`'s shard of an `n`-element vector split across `p` ranks:
+/// `[r·n/p, (r+1)·n/p)` — the same proportional split as
+/// [`ProcSchedule::unit_to_elems`] over `P` units, so shards partition
+/// `[0, n)` exactly for any `n` (including `n < p`, where some shards are
+/// empty).
+pub fn shard_range(p: usize, rank: usize, n: usize) -> std::ops::Range<usize> {
+    debug_assert!(rank < p);
+    (rank * n / p)..((rank + 1) * n / p)
+}
+
 /// Identifier of a logical buffer. The same id names, on every process,
 /// that process's local piece of one distributed vector (paper eq. 3).
 pub type BufId = u32;
@@ -379,6 +422,21 @@ mod tests {
         assert_eq!(covered, 23);
         // Whole range maps to whole range.
         assert_eq!(s.unit_to_elems(Segment::new(0, 7), 23), (0, 23));
+    }
+
+    #[test]
+    fn shard_ranges_partition_any_length() {
+        for p in [1usize, 2, 3, 7, 8] {
+            for n in [0usize, 1, 5, 23, 64] {
+                let mut covered = 0;
+                for r in 0..p {
+                    let sh = shard_range(p, r, n);
+                    assert_eq!(sh.start, covered, "P={p} n={n} r={r}");
+                    covered = sh.end;
+                }
+                assert_eq!(covered, n, "P={p} n={n}");
+            }
+        }
     }
 
     #[test]

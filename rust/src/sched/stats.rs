@@ -186,23 +186,76 @@ pub fn wire_placement_row(s: &ProcSchedule, proc: usize) -> Vec<bool> {
     flag
 }
 
+/// One received buffer's per-chunk fusion decision
+/// ([`plan_chunk_fusion`]): the local operand buffer and which side of the
+/// fusing `Reduce` the received buffer sits on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FusePlan {
+    /// The local operand buffer (`src` for [`FuseDir::IntoRecv`], `dst`
+    /// for [`FuseDir::IntoLocal`]).
+    pub operand: BufId,
+    /// Which direction the fused reduce streams.
+    pub dir: FuseDir,
+}
+
+/// Direction of a per-chunk fused receive-reduce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FuseDir {
+    /// `Reduce { dst: received, src: operand }` — each chunk lands as
+    /// `out = f(chunk, operand[range])` in the received buffer's fresh
+    /// slot; the received buffer carries the reduced value afterwards.
+    IntoRecv,
+    /// `Reduce { dst: operand, src: received }` — each chunk folds as
+    /// `operand[range] = f(operand[range], chunk)` into the already-live
+    /// local accumulator; the raw received value dies unobserved (its only
+    /// later use is its `Free`).
+    IntoLocal,
+}
+
+impl FusePlan {
+    /// Fuse `Reduce { dst: received, src }` (result in the received slot).
+    pub fn into_recv(src: BufId) -> Self {
+        FusePlan { operand: src, dir: FuseDir::IntoRecv }
+    }
+    /// Fold `Reduce { dst, src: received }` (result stays in local `dst`).
+    pub fn into_local(dst: BufId) -> Self {
+        FusePlan { operand: dst, dir: FuseDir::IntoLocal }
+    }
+}
+
 /// Decide, for one `Recv`, which received buffers a **chunked** executor
 /// may reduce per-chunk as frames land (the wire/ALU overlap the chunked
-/// data plane exists for), and with which local source operand.
+/// data plane exists for), with which local operand, and in which
+/// direction.
 ///
 /// `rest` is the receiving process's remaining op list for the step (the
 /// ops *after* the `Recv`), `ids` the received buffer list, and `live(b)`
 /// whether buffer `b` is materialized on this process at recv time.
-/// Returns, positionally for each received buffer, `Some(src)` when its
-/// first use is `Reduce { dst: buf, src }` **and** streaming that reduce is
-/// provably equivalent to the monolithic order:
+/// Returns, positionally for each received buffer, a [`FusePlan`] when its
+/// first use is a `Reduce` touching it **and** streaming that reduce is
+/// provably equivalent to the monolithic order. Streaming folds run while
+/// the message drains, i.e. *before* any op in `rest` executes, so:
 ///
-/// * `src` is live now, is not part of this same message, and is not
-///   written (reduced into, copied into, or received) between the `Recv`
-///   and the fusing `Reduce`;
-/// * the received buffer's raw value is not observed first — not sent,
-///   not copied from, not read as a reduce source, not freed — before that
-///   `Reduce`.
+/// * [`FuseDir::IntoRecv`] (`Reduce { dst: buf, src }`): `src` is live
+///   now, is not part of this same message, and is not written (reduced
+///   into, copied into, or received) between the `Recv` and the fusing
+///   `Reduce` — reads of `src` in between are fine, its value is stable;
+/// * [`FuseDir::IntoLocal`] (`Reduce { dst, src: buf }`): `dst` is live
+///   now, is not part of this same message, and is not referenced **at
+///   all** (read or written) before the fusing `Reduce` — streaming
+///   mutates `dst`, so even a read in between would observe post-fold
+///   state. Additionally the raw received value must never be observed
+///   after the fold: the buffer's only later use in `rest` must be its
+///   `Free` (otherwise a later send/reduce/copy would read a value the
+///   fold consumed).
+///
+/// In both directions the received buffer's raw value must not be
+/// observed *before* the fusing `Reduce` (not sent, not copied from, not
+/// freed). At most one received buffer folds [`FuseDir::IntoLocal`] into
+/// a given `dst` per message: a second fold candidate sees `dst` in the
+/// touched set and demotes, which also keeps the per-element operand
+/// order of mixed fold/monolithic chains identical to the schedule's
+/// program order.
 ///
 /// Anything else returns `None` for that buffer: the executor then
 /// reassembles the frames into one shared block (always correct, no
@@ -212,11 +265,18 @@ pub fn plan_chunk_fusion(
     rest: &[Op],
     ids: &[BufId],
     live: &dyn Fn(BufId) -> bool,
-) -> Vec<Option<BufId>> {
-    let mut plan: Vec<Option<BufId>> = vec![None; ids.len()];
+) -> Vec<Option<FusePlan>> {
+    let mut plan: Vec<Option<FusePlan>> = vec![None; ids.len()];
     let mut decided = vec![false; ids.len()];
+    // Fold-into-local candidates awaiting their confirming `Free`:
+    // `pending[i] = Some(dst)` after `Reduce { dst, src: ids[i] }` until
+    // the received buffer is freed (confirm) or referenced again (cancel).
+    let mut pending: Vec<Option<BufId>> = vec![None; ids.len()];
     // Buffers written after the Recv (stale-operand guard for `src`).
     let mut written: Vec<BufId> = Vec::new();
+    // Buffers referenced at all after the Recv (read-or-write guard for a
+    // fold-into-local `dst`, whose value mutates during streaming).
+    let mut touched: Vec<BufId> = Vec::new();
     let undecided =
         |b: BufId, decided: &[bool]| ids.iter().position(|&x| x == b).filter(|&i| !decided[i]);
     for m in rest.iter().flat_map(|o| o.micro()) {
@@ -225,32 +285,63 @@ pub fn plan_chunk_fusion(
                 for &b in bufs {
                     if let Some(i) = undecided(b, &decided) {
                         decided[i] = true; // raw value forwarded first
+                        pending[i] = None;
                     }
+                    touched.push(b);
                 }
             }
-            MicroOp::Recv { bufs, .. } => written.extend_from_slice(bufs),
+            MicroOp::Recv { bufs, .. } => {
+                written.extend_from_slice(bufs);
+                touched.extend_from_slice(bufs);
+            }
             MicroOp::Reduce { dst, src } => {
                 if let Some(i) = undecided(dst, &decided) {
                     decided[i] = true;
-                    if !ids.contains(&src) && !written.contains(&src) && live(src) {
-                        plan[i] = Some(src);
+                    // A pending fold already consumed the raw value this
+                    // reduce would overwrite — cancel, don't fuse.
+                    let was_pending = pending[i].take().is_some();
+                    if !was_pending && !ids.contains(&src) && !written.contains(&src) && live(src)
+                    {
+                        plan[i] = Some(FusePlan::into_recv(src));
                     }
                 }
                 if let Some(i) = undecided(src, &decided) {
-                    decided[i] = true; // raw value read as an operand first
+                    if pending[i].is_some() {
+                        decided[i] = true; // raw value read twice → cancel
+                        pending[i] = None;
+                    } else if !ids.contains(&dst) && !touched.contains(&dst) && live(dst) {
+                        // First use is `Reduce { dst: local, src: buf }`:
+                        // fold into the live accumulator per chunk, pending
+                        // the confirming `Free` of the raw buffer.
+                        pending[i] = Some(dst);
+                    } else {
+                        decided[i] = true; // raw value read as an operand first
+                    }
                 }
                 written.push(dst);
+                touched.push(dst);
+                touched.push(src);
             }
             MicroOp::Copy { dst, src } => {
                 if let Some(i) = undecided(src, &decided) {
                     decided[i] = true; // raw value duplicated first
+                    pending[i] = None;
                 }
                 written.push(dst);
+                touched.push(dst);
+                touched.push(src);
             }
             MicroOp::Free { buf } => {
                 if let Some(i) = undecided(buf, &decided) {
-                    decided[i] = true; // received then dropped unused
+                    decided[i] = true;
+                    if let Some(dst) = pending[i].take() {
+                        // Confirmed: read exactly once by the fold, then
+                        // dropped — the raw value is never observed.
+                        plan[i] = Some(FusePlan::into_local(dst));
+                    }
+                    // else: received then dropped unused.
                 }
+                touched.push(buf);
             }
         }
         if decided.iter().all(|&d| d) {
@@ -266,7 +357,7 @@ pub fn plan_chunk_fusion(
 /// list in program order. Stored by the persistent pool next to its
 /// placement rows ([`wire_reduce_placement`]) so chunked warm-pool
 /// receives stop re-running the per-message lookahead.
-pub type FusionRows = Vec<Vec<Vec<Option<BufId>>>>;
+pub type FusionRows = Vec<Vec<Vec<Option<FusePlan>>>>;
 
 /// Precompute every [`plan_chunk_fusion`] decision of a schedule — the
 /// static counterpart of the executor's per-message lookahead, keyed
@@ -552,7 +643,10 @@ mod tests {
             Op::Reduce { dst: 10, src: 1 },
             Op::Reduce { dst: 11, src: 2 },
         ];
-        assert_eq!(plan_chunk_fusion(&rest, &[10, 11], &live), vec![Some(1), None]);
+        assert_eq!(
+            plan_chunk_fusion(&rest, &[10, 11], &live),
+            vec![Some(FusePlan::into_recv(1)), None]
+        );
         // src written between recv and reduce → stale operand → not fusible.
         let rest = [
             Op::Reduce { dst: 1, src: 2 },
@@ -565,7 +659,8 @@ mod tests {
         // src not live at recv time (received later this step) → not fusible.
         let rest = [Op::Reduce { dst: 10, src: 7 }];
         assert_eq!(plan_chunk_fusion(&rest, &[10], &live), vec![None]);
-        // Raw value read as a source / copied / freed first → not fusible.
+        // Raw value read once into a live dst, then written again → the
+        // later reduce needs the raw slot → fold candidate cancels.
         let rest = [
             Op::Reduce { dst: 1, src: 10 },
             Op::Reduce { dst: 10, src: 2 },
@@ -582,7 +677,77 @@ mod tests {
         }];
         assert_eq!(
             plan_chunk_fusion(&rest, &[10, 11], &live),
-            vec![Some(1), Some(2)]
+            vec![
+                Some(FusePlan::into_recv(1)),
+                Some(FusePlan::into_recv(2))
+            ]
+        );
+    }
+
+    #[test]
+    fn chunk_fusion_plan_folds_into_local_dst() {
+        let live = |b: BufId| b == 1 || b == 2;
+        // `Reduce { dst: local, src: received }` then Free → folds into the
+        // live accumulator (the ROADMAP's reverse-direction fusion).
+        let rest = [Op::Reduce { dst: 1, src: 10 }, Op::Free { buf: 10 }];
+        assert_eq!(
+            plan_chunk_fusion(&rest, &[10], &live),
+            vec![Some(FusePlan::into_local(1))]
+        );
+        // Without the confirming Free (raw value may be observed in a
+        // later step) → not fusible.
+        let rest = [Op::Reduce { dst: 1, src: 10 }];
+        assert_eq!(plan_chunk_fusion(&rest, &[10], &live), vec![None]);
+        // Raw value observed between the reduce and the free → cancel.
+        let rest = [
+            Op::Reduce { dst: 1, src: 10 },
+            Op::send(3, vec![10]),
+            Op::Free { buf: 10 },
+        ];
+        assert_eq!(plan_chunk_fusion(&rest, &[10], &live), vec![None]);
+        // dst referenced (even just read) before the reduce → a send of
+        // dst would observe post-fold state → not fusible.
+        let rest = [
+            Op::send(3, vec![1]),
+            Op::Reduce { dst: 1, src: 10 },
+            Op::Free { buf: 10 },
+        ];
+        assert_eq!(plan_chunk_fusion(&rest, &[10], &live), vec![None]);
+        // dst not live at recv time (created by a Copy after the Recv) →
+        // streaming has nowhere to fold → not fusible.
+        let rest = [
+            Op::Copy { dst: 7, src: 1 },
+            Op::Reduce { dst: 7, src: 10 },
+            Op::Free { buf: 10 },
+        ];
+        assert_eq!(plan_chunk_fusion(&rest, &[10], &live), vec![None]);
+        // dst part of the same message → not fusible.
+        let rest = [Op::Reduce { dst: 11, src: 10 }, Op::Free { buf: 10 }];
+        assert_eq!(plan_chunk_fusion(&rest, &[10, 11], &live), vec![None, None]);
+        // Two folds into the same dst: program order is wire order for the
+        // first, but the second sees dst touched → only one streams.
+        let rest = [
+            Op::Reduce { dst: 1, src: 10 },
+            Op::Reduce { dst: 1, src: 11 },
+            Op::Free { buf: 10 },
+            Op::Free { buf: 11 },
+        ];
+        assert_eq!(
+            plan_chunk_fusion(&rest, &[10, 11], &live),
+            vec![Some(FusePlan::into_local(1)), None]
+        );
+        // Mixed directions in one message still resolve independently.
+        let rest = [
+            Op::Reduce { dst: 10, src: 1 },
+            Op::Reduce { dst: 2, src: 11 },
+            Op::Free { buf: 11 },
+        ];
+        assert_eq!(
+            plan_chunk_fusion(&rest, &[10, 11], &live),
+            vec![
+                Some(FusePlan::into_recv(1)),
+                Some(FusePlan::into_local(2))
+            ]
         );
     }
 

@@ -22,7 +22,7 @@
 
 use std::collections::HashMap;
 
-use crate::sched::{MicroOp, ProcSchedule, Segment};
+use crate::sched::{Collective, MicroOp, ProcSchedule, Segment};
 use crate::util::BitSet;
 
 /// Symbolic content of one buffer on one process.
@@ -47,9 +47,28 @@ pub struct VerifyReport {
     pub total_units_reduced: u64,
 }
 
-/// Verify the schedule. Returns a traffic report on success, or a
-/// human-readable description of the first violation.
+/// Verify the schedule against the Allreduce postcondition. Returns a
+/// traffic report on success, or a human-readable description of the
+/// first violation.
 pub fn verify(s: &ProcSchedule) -> Result<VerifyReport, String> {
+    verify_collective(s, Collective::Allreduce)
+}
+
+/// Verify the schedule against an explicit collective postcondition. The
+/// step-by-step invariants (network legality, no double counting, memory
+/// hygiene) are identical for all three; only the final-state check
+/// differs:
+///
+/// * [`Collective::Allreduce`] — every process's results tile
+///   `[0, n_units)`, each buffer fully reduced;
+/// * [`Collective::ReduceScatter`] — process `r`'s results tile exactly
+///   its rank-aligned shard `[r·u, (r+1)·u)` (`u = n_units/P`, which must
+///   divide evenly), each buffer fully reduced;
+/// * [`Collective::Allgather`] — every process's results tile
+///   `[0, n_units)` and each result buffer's symbolic content is exactly
+///   the owning rank's input over its segment (a singleton source set
+///   matching the segment's rank-aligned owner — no combines folded in).
+pub fn verify_collective(s: &ProcSchedule, c: Collective) -> Result<VerifyReport, String> {
     let p = s.p;
     // state[proc]: live buffers.
     let mut state: Vec<HashMap<u32, SymBuf>> = vec![HashMap::new(); p];
@@ -251,8 +270,20 @@ pub fn verify(s: &ProcSchedule) -> Result<VerifyReport, String> {
         report.max_units_reduced_per_step.push(max_reduced);
     }
 
-    // Postcondition: exactly the result buffers are live; they tile
-    // [0, n_units) and are fully reduced.
+    // Postcondition: exactly the result buffers are live; their coverage
+    // and source sets depend on the collective.
+    let per = match c {
+        Collective::Allreduce => 0u32,
+        Collective::ReduceScatter | Collective::Allgather => {
+            if s.n_units as usize % p != 0 {
+                return Err(format!(
+                    "{c:?}: n_units {} not divisible by P={p} (rank-aligned shards required)",
+                    s.n_units
+                ));
+            }
+            s.n_units / p as u32
+        }
+    };
     for proc in 0..p {
         let live = &state[proc];
         let res = &s.result[proc];
@@ -268,7 +299,11 @@ pub fn verify(s: &ProcSchedule) -> Result<VerifyReport, String> {
                 res.len()
             ));
         }
-        let mut cursor = 0u32;
+        let (start, end) = match c {
+            Collective::Allreduce | Collective::Allgather => (0u32, s.n_units),
+            Collective::ReduceScatter => (proc as u32 * per, (proc as u32 + 1) * per),
+        };
+        let mut cursor = start;
         for &b in res {
             let sb = live
                 .get(&b)
@@ -280,17 +315,40 @@ pub fn verify(s: &ProcSchedule) -> Result<VerifyReport, String> {
                 ));
             }
             cursor = sb.seg.end();
-            if !sb.srcs.is_full() {
-                return Err(format!(
-                    "proc {proc}: result buffer {b} not fully reduced: {:?}",
-                    sb.srcs
-                ));
+            match c {
+                Collective::Allreduce | Collective::ReduceScatter => {
+                    if !sb.srcs.is_full() {
+                        return Err(format!(
+                            "proc {proc}: result buffer {b} not fully reduced: {:?}",
+                            sb.srcs
+                        ));
+                    }
+                }
+                Collective::Allgather => {
+                    if sb.seg.len == 0 {
+                        continue;
+                    }
+                    let owner = (sb.seg.off / per) as usize;
+                    if (sb.seg.end() - 1) / per != sb.seg.off / per {
+                        return Err(format!(
+                            "proc {proc}: allgather result buffer {b} spans shards of \
+                             several owners ({:?})",
+                            sb.seg
+                        ));
+                    }
+                    if sb.srcs.len() != 1 || !sb.srcs.contains(owner) {
+                        return Err(format!(
+                            "proc {proc}: allgather result buffer {b} over {:?} should hold \
+                             rank {owner}'s input verbatim but carries sources {:?}",
+                            sb.seg, sb.srcs
+                        ));
+                    }
+                }
             }
         }
-        if cursor != s.n_units {
+        if cursor != end {
             return Err(format!(
-                "proc {proc}: results cover only [0, {cursor}) of [0, {})",
-                s.n_units
+                "proc {proc}: results cover only [{start}, {cursor}) of [{start}, {end})"
             ));
         }
     }
@@ -447,6 +505,78 @@ mod tests {
         let s = p3_two_lane(); // builder defaults to lanes = 1
         let err = verify(&s).unwrap_err();
         assert!(err.contains("two messages"), "{err}");
+    }
+
+    /// Hand-built P=2 reduce-scatter: each proc keeps its rank-aligned
+    /// half, sends the other half, and reduces what it receives.
+    fn p2_reduce_scatter() -> ProcSchedule {
+        let mut b = ScheduleBuilder::new(2, 2, "p2-rs");
+        let lo0 = b.init_buf(0, Segment::new(0, 1));
+        let hi0 = b.init_buf(0, Segment::new(1, 1));
+        let lo1 = b.init_buf(1, Segment::new(0, 1));
+        let hi1 = b.init_buf(1, Segment::new(1, 1));
+        b.begin_step();
+        let g0 = b.fresh();
+        let g1 = b.fresh();
+        b.op(0, Op::send(1, vec![hi0]));
+        b.op(1, Op::send(0, vec![lo1]));
+        b.op(0, Op::recv(1, vec![g0]));
+        b.op(1, Op::recv(0, vec![g1]));
+        b.op(0, Op::Reduce { dst: g0, src: lo0 });
+        b.op(1, Op::Reduce { dst: g1, src: hi1 });
+        for buf in [lo0, hi0] {
+            b.op(0, Op::Free { buf });
+        }
+        for buf in [lo1, hi1] {
+            b.op(1, Op::Free { buf });
+        }
+        b.end_step();
+        b.finish(vec![vec![g0], vec![g1]])
+    }
+
+    #[test]
+    fn reduce_scatter_postcondition_verifies() {
+        let s = p2_reduce_scatter();
+        verify_collective(&s, Collective::ReduceScatter).expect("must verify as RS");
+        // The same schedule is NOT an allreduce (results don't tile
+        // [0, n_units) on any proc).
+        let err = verify_collective(&s, Collective::Allreduce).unwrap_err();
+        assert!(err.contains("gap") || err.contains("cover only"), "{err}");
+    }
+
+    /// Hand-built P=2 allgather: each proc holds only its shard and they
+    /// exchange verbatim copies.
+    fn p2_allgather() -> ProcSchedule {
+        let mut b = ScheduleBuilder::new(2, 2, "p2-ag");
+        let a0 = b.init_buf(0, Segment::new(0, 1));
+        let a1 = b.init_buf(1, Segment::new(1, 1));
+        b.begin_step();
+        let g0 = b.fresh();
+        let g1 = b.fresh();
+        b.op(0, Op::send(1, vec![a0]));
+        b.op(1, Op::send(0, vec![a1]));
+        b.op(0, Op::recv(1, vec![g0]));
+        b.op(1, Op::recv(0, vec![g1]));
+        b.end_step();
+        b.finish(vec![vec![a0, g0], vec![g1, a1]])
+    }
+
+    #[test]
+    fn allgather_postcondition_verifies() {
+        let s = p2_allgather();
+        verify_collective(&s, Collective::Allgather).expect("must verify as AG");
+        // Not an allreduce: nothing is reduced.
+        let err = verify_collective(&s, Collective::Allreduce).unwrap_err();
+        assert!(err.contains("not fully reduced"), "{err}");
+    }
+
+    #[test]
+    fn allgather_rejects_wrong_owner() {
+        // Swap the result order on proc 0 so segments mismatch owners.
+        let mut s = p2_allgather();
+        s.result[0].swap(0, 1);
+        let err = verify_collective(&s, Collective::Allgather).unwrap_err();
+        assert!(err.contains("gap"), "{err}");
     }
 
     #[test]

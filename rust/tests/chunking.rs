@@ -27,6 +27,7 @@ use permallreduce::cluster::{
     ReduceOp,
 };
 use permallreduce::coordinator::Communicator;
+use permallreduce::sched::{Op, ScheduleBuilder, Segment};
 use permallreduce::util::Rng;
 
 /// Payloads near 1.0 keep `Prod` well-conditioned across 17 factors.
@@ -182,6 +183,62 @@ fn ring_streams_every_fused_reduce() {
     // Placement still applies to streamed reduces: with the default
     // options every fused reduce is wire-placed.
     assert_eq!(snap.wire_placed_reduces, (p * (p - 1)) as u64);
+}
+
+/// The reverse fusion direction: a `Reduce { dst: local, src: received }`
+/// whose raw received value dies in a same-step `Free` streams per chunk
+/// into the live local accumulator instead of gathering — the
+/// carried-forward ROADMAP item. The counter pins that the fold actually
+/// streamed (no gathered receive), and the results stay bit-identical to
+/// the monolithic path and the clone oracle.
+#[test]
+fn reduce_with_received_source_streams_into_local_accumulator() {
+    // Per rank: copy the input (a fresh, live accumulator), exchange raw
+    // inputs, fold the received buffer *into* the copy, drop the raw value.
+    let mut b = ScheduleBuilder::new(2, 1, "fold-into-local");
+    let seg = Segment::new(0, 1);
+    let mine = b.init_buf_per_proc(&[seg, seg]);
+    b.begin_step();
+    let acc0 = b.fresh();
+    let acc1 = b.fresh();
+    let got0 = b.fresh();
+    let got1 = b.fresh();
+    for p in 0..2usize {
+        let (acc, got) = if p == 0 { (acc0, got0) } else { (acc1, got1) };
+        b.op(p, Op::Copy { dst: acc, src: mine });
+        b.op(p, Op::send(1 - p, vec![mine]));
+        b.op(p, Op::recv(1 - p, vec![got]));
+        b.op(p, Op::Reduce { dst: acc, src: got });
+        b.op(p, Op::Free { buf: got });
+        b.op(p, Op::Free { buf: mine });
+    }
+    b.end_step();
+    let s = b.finish(vec![vec![acc0], vec![acc1]]);
+
+    let mut rng = Rng::new(0xF01D);
+    let n = 23; // 3-elem chunks → 8 frames, nothing divides evenly
+    let xs = payloads(&mut rng, 2, n);
+    for op in ReduceOp::all() {
+        let want = oracle::execute_reference(&s, &xs, op).unwrap();
+        let plain = ClusterExecutor::new().execute(&s, &xs, op).unwrap();
+        let (exec, counters) = chunked_exec(Some(3 * 4));
+        let got = exec.execute(&s, &xs, op).unwrap();
+        for rank in 0..2 {
+            for (i, ((g, b), w)) in
+                got[rank].iter().zip(&plain[rank]).zip(&want[rank]).enumerate()
+            {
+                assert_eq!(g.to_bits(), b.to_bits(), "{op:?} rank {rank} elem {i}: vs monolithic");
+                assert_eq!(g.to_bits(), w.to_bits(), "{op:?} rank {rank} elem {i}: vs oracle");
+            }
+        }
+        let snap = counters.snapshot();
+        assert_eq!(snap.chunked_msgs, 2, "{op:?}: both raw inputs chunk");
+        assert_eq!(
+            snap.streamed_reduces, 2,
+            "{op:?}: each rank folds the received chunks into its accumulator"
+        );
+        assert_eq!(snap.gathered_recvs, 0, "{op:?}: nothing falls back to gather");
+    }
 }
 
 /// Faults injected into a chunked message (all frames dropped or all

@@ -1,0 +1,347 @@
+//! Differential sweep for the standalone reduce-scatter / allgather
+//! collectives: the arena data plane vs the clone-per-message oracle,
+//! for every `P ∈ 2..=17` × schedule family × [`ReduceOp`] (including
+//! `Avg`), plus composition and `Avg` semantics checks — the same
+//! treatment `tests/differential.rs` gives the fused allreduce.
+//!
+//! The `#[ignore]`d tests at the bottom replay the sweep's core over a
+//! real `127.0.0.1` socket mesh ([`Endpoint::reduce_scatter`] /
+//! [`Endpoint::allgather`]) and run serially in CI's net-loopback lane
+//! (`--test-threads=1 --ignored`).
+
+use permallreduce::algo::AlgorithmKind;
+use permallreduce::cluster::{oracle, ClusterExecutor, ReduceOp};
+use permallreduce::coordinator::Communicator;
+use permallreduce::sched::{shard_range, Collective};
+use permallreduce::util::Rng;
+
+/// Payloads near 1.0 keep `Prod` well-conditioned across 17 factors.
+fn payloads(rng: &mut Rng, p: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..p)
+        .map(|_| (0..n).map(|_| 0.5 + rng.f32()).collect())
+        .collect()
+}
+
+/// `Ring` forces the ring family at every P; `BwOptimal` maps to the
+/// logarithmic family at power-of-two P and falls back to the ring
+/// otherwise — together they cover every builder.
+const KINDS: [AlgorithmKind; 2] = [AlgorithmKind::Ring, AlgorithmKind::BwOptimal];
+
+/// Every rank's reduce-scatter output must be bit-identical to the clone
+/// oracle's and exactly shard-shaped, for every P × family × op.
+#[test]
+fn reduce_scatter_bit_matches_oracle_for_every_p_kind_op() {
+    let mut rng = Rng::new(0x5CA7);
+    for p in 2..=17usize {
+        let n = 2 * p + 3; // not divisible by P: uneven shards
+        for kind in KINDS {
+            let comm = Communicator::builder(p).build().unwrap();
+            let (s, _) = comm
+                .collective_schedule(kind, Collective::ReduceScatter)
+                .unwrap_or_else(|e| panic!("P={p} {kind:?}: {e}"));
+            for op in ReduceOp::all_with_avg() {
+                let xs = payloads(&mut rng, p, n);
+                let want = oracle::execute_reference_collective(
+                    &s,
+                    &xs,
+                    op,
+                    Collective::ReduceScatter,
+                )
+                .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: oracle failed: {e}"));
+                let got = comm
+                    .reduce_scatter(&xs, op, kind)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: {e}"));
+                for rank in 0..p {
+                    let shard = shard_range(p, rank, n);
+                    assert_eq!(
+                        got.ranks[rank].len(),
+                        shard.len(),
+                        "P={p} {kind:?} {op:?} rank {rank}: shard shape"
+                    );
+                    for (i, (g, w)) in got.ranks[rank].iter().zip(&want[rank]).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "P={p} {kind:?} {op:?} rank {rank} elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Allgather moves shards verbatim: every rank's output must equal the
+/// concatenation of all ranks' own shards (computable straight from the
+/// inputs) and bit-match the oracle, for every P × family.
+#[test]
+fn allgather_bit_matches_oracle_and_inputs_for_every_p_kind() {
+    let mut rng = Rng::new(0xA11);
+    for p in 2..=17usize {
+        let n = 2 * p + 3;
+        for kind in KINDS {
+            let comm = Communicator::builder(p).build().unwrap();
+            let (s, _) = comm
+                .collective_schedule(kind, Collective::Allgather)
+                .unwrap_or_else(|e| panic!("P={p} {kind:?}: {e}"));
+            let xs = payloads(&mut rng, p, n);
+            let want = oracle::execute_reference_collective(
+                &s,
+                &xs,
+                ReduceOp::Sum,
+                Collective::Allgather,
+            )
+            .unwrap_or_else(|e| panic!("P={p} {kind:?}: oracle failed: {e}"));
+            // Ground truth straight from the inputs: unit u's range comes
+            // from rank u's vector, untouched.
+            let mut truth = vec![0.0f32; n];
+            for u in 0..p {
+                let r = shard_range(p, u, n);
+                truth[r.clone()].copy_from_slice(&xs[u][r]);
+            }
+            let got = comm
+                .allgather(&xs, kind)
+                .unwrap_or_else(|e| panic!("P={p} {kind:?}: {e}"));
+            for rank in 0..p {
+                assert_eq!(got.ranks[rank].len(), n, "P={p} {kind:?} rank {rank}");
+                for (i, (g, w)) in got.ranks[rank].iter().zip(&want[rank]).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "P={p} {kind:?} rank {rank} elem {i}: oracle mismatch"
+                    );
+                }
+                for (i, (g, w)) in got.ranks[rank].iter().zip(&truth).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "P={p} {kind:?} rank {rank} elem {i}: input mismatch"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Reduce-scatter then allgather composes to an allreduce — integer sums
+/// make the check exact. Each rank feeds its reduced shard back through
+/// allgather (whose input contract reads only the rank's shard).
+#[test]
+fn reduce_scatter_then_allgather_is_an_exact_allreduce() {
+    let mut rng = Rng::new(0xC0117);
+    for p in [2usize, 3, 5, 8, 13, 16, 17] {
+        let n = 3 * p + 1;
+        for kind in KINDS {
+            let comm = Communicator::builder(p).build().unwrap();
+            let xs: Vec<Vec<i64>> = (0..p)
+                .map(|_| (0..n).map(|_| rng.below(2001) as i64 - 1000).collect())
+                .collect();
+            let mut want = vec![0i64; n];
+            for v in &xs {
+                for (w, x) in want.iter_mut().zip(v) {
+                    *w += x;
+                }
+            }
+            let rs = comm.reduce_scatter(&xs, ReduceOp::Sum, kind).unwrap();
+            // Rebuild each rank's full-length allgather input: its own
+            // shard holds the reduced values, the rest is ignored.
+            let ag_in: Vec<Vec<i64>> = (0..p)
+                .map(|r| {
+                    let mut full = vec![0i64; n];
+                    full[shard_range(p, r, n)].copy_from_slice(&rs.ranks[r]);
+                    full
+                })
+                .collect();
+            let ag = comm.allgather(&ag_in, kind).unwrap();
+            for rank in 0..p {
+                assert_eq!(ag.ranks[rank], want, "P={p} {kind:?} rank {rank}");
+            }
+        }
+    }
+}
+
+/// `Avg` through the standalone scatter equals `Sum` with each element
+/// divided by P exactly once — bitwise for f64 (the finalizer divides the
+/// identical Sum result) and truncating for i32.
+#[test]
+fn avg_reduce_scatter_is_sum_scaled_once() {
+    let mut rng = Rng::new(0xA76);
+    for p in [3usize, 8] {
+        let n = 4 * p + 1;
+        let comm = Communicator::builder(p).build().unwrap();
+        let xs: Vec<Vec<f64>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.f32() as f64 * 2.0 - 1.0).collect())
+            .collect();
+        let sum = comm
+            .reduce_scatter(&xs, ReduceOp::Sum, AlgorithmKind::Ring)
+            .unwrap();
+        let avg = comm
+            .reduce_scatter(&xs, ReduceOp::Avg, AlgorithmKind::Ring)
+            .unwrap();
+        for rank in 0..p {
+            for (i, (a, s)) in avg.ranks[rank].iter().zip(&sum.ranks[rank]).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    (s / p as f64).to_bits(),
+                    "P={p} rank {rank} elem {i}"
+                );
+            }
+        }
+        let ixs: Vec<Vec<i32>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.below(201) as i32 - 100).collect())
+            .collect();
+        let isum = comm
+            .reduce_scatter(&ixs, ReduceOp::Sum, AlgorithmKind::Ring)
+            .unwrap();
+        let iavg = comm
+            .reduce_scatter(&ixs, ReduceOp::Avg, AlgorithmKind::Ring)
+            .unwrap();
+        for rank in 0..p {
+            let want: Vec<i32> = isum.ranks[rank].iter().map(|&v| v / p as i32).collect();
+            assert_eq!(iavg.ranks[rank], want, "i32 P={p} rank {rank}");
+        }
+    }
+}
+
+/// The raw executor twin ([`ClusterExecutor::execute_collective`]) and
+/// the coordinator front end must agree bit for bit — they share the
+/// data plane, so any difference is a plumbing bug in the out-sizing or
+/// the finalize boundary.
+#[test]
+fn executor_and_communicator_agree_on_collectives() {
+    let exec = ClusterExecutor::new();
+    let mut rng = Rng::new(0x7177);
+    for p in [4usize, 7] {
+        let n = 2 * p + 3;
+        let comm = Communicator::builder(p).build().unwrap();
+        for (collective, op) in [
+            (Collective::ReduceScatter, ReduceOp::Avg),
+            (Collective::ReduceScatter, ReduceOp::Sum),
+            (Collective::Allgather, ReduceOp::Sum),
+        ] {
+            let (s, _) = comm
+                .collective_schedule(AlgorithmKind::Ring, collective)
+                .unwrap();
+            let xs = payloads(&mut rng, p, n);
+            let via_exec = exec.execute_collective(&s, &xs, op, collective).unwrap();
+            let via_comm = match collective {
+                Collective::ReduceScatter => comm.reduce_scatter(&xs, op, AlgorithmKind::Ring),
+                Collective::Allgather => comm.allgather(&xs, AlgorithmKind::Ring),
+                Collective::Allreduce => unreachable!(),
+            }
+            .unwrap();
+            for rank in 0..p {
+                for (i, (a, b)) in via_exec[rank].iter().zip(&via_comm.ranks[rank]).enumerate()
+                {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "P={p} {collective:?} {op:?} rank {rank} elem {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- socket lane --
+
+mod socket {
+    use super::*;
+    use permallreduce::net::{wire, Endpoint, NetOptions};
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    /// Spawn a P-rank loopback mesh and run `body` on every rank
+    /// concurrently (same harness as `tests/net_transport.rs`).
+    fn with_mesh<T, F>(p: usize, body: F)
+    where
+        T: wire::WireElement,
+        F: Fn(&mut Endpoint<T>) + Sync,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral rendezvous");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let body = &body;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(p);
+            for rank in 0..p {
+                let addr = addr.clone();
+                let l0 = (rank == 0).then(|| listener.try_clone().expect("clone listener"));
+                handles.push(scope.spawn(move || {
+                    let opts = NetOptions {
+                        rendezvous: addr,
+                        recv_timeout: Duration::from_secs(20),
+                        connect_timeout: Duration::from_secs(20),
+                        ..NetOptions::default()
+                    };
+                    let mut ep: Endpoint<T> = match l0 {
+                        Some(l) => Endpoint::host(l, p, opts).expect("host"),
+                        None => Endpoint::connect(rank, p, opts).expect("join"),
+                    };
+                    body(&mut ep);
+                }));
+            }
+            for h in handles {
+                if let Err(e) = h.join() {
+                    std::panic::resume_unwind(e);
+                }
+            }
+        });
+    }
+
+    /// Socket reduce-scatter + allgather, checked bit-for-bit against the
+    /// clone oracle regenerated from the shared seed on every rank — no
+    /// side channel, exactly like the fused-allreduce loopback suite.
+    #[test]
+    #[ignore = "socket suite: run serially via the net-loopback lane (--test-threads=1 --ignored)"]
+    fn socket_collectives_bit_match_oracle() {
+        for p in [3usize, 4] {
+            let n = 2 * p + 3;
+            with_mesh::<f32, _>(p, |ep| {
+                let rank = ep.rank();
+                for kind in KINDS {
+                    for op in [ReduceOp::Sum, ReduceOp::Avg, ReduceOp::Max] {
+                        let mut rng = Rng::new(0x50C4E7 + p as u64);
+                        let xs = payloads(&mut rng, p, n);
+                        let s = ep
+                            .collective_schedule(kind, Collective::ReduceScatter)
+                            .unwrap();
+                        let want = oracle::execute_reference_collective(
+                            &s,
+                            &xs,
+                            op,
+                            Collective::ReduceScatter,
+                        )
+                        .unwrap();
+                        let got = ep.reduce_scatter(&xs[rank], op, kind).unwrap();
+                        assert_eq!(got.len(), shard_range(p, rank, n).len());
+                        for (i, (g, w)) in got.iter().zip(&want[rank]).enumerate() {
+                            assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "P={p} {kind:?} {op:?} rank {rank} elem {i}"
+                            );
+                        }
+                    }
+                    // Allgather: every rank contributes its shard of its
+                    // own vector; outputs are identical across ranks.
+                    let mut rng = Rng::new(0xA6A6 + p as u64);
+                    let xs = payloads(&mut rng, p, n);
+                    let mut truth = vec![0.0f32; n];
+                    for u in 0..p {
+                        let r = shard_range(p, u, n);
+                        truth[r.clone()].copy_from_slice(&xs[u][r]);
+                    }
+                    let got = ep.allgather(&xs[rank], kind).unwrap();
+                    for (i, (g, w)) in got.iter().zip(&truth).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "allgather P={p} {kind:?} rank {rank} elem {i}"
+                        );
+                    }
+                }
+            });
+        }
+    }
+}

@@ -46,8 +46,9 @@ fn symbolic_and_numeric_agree_for_every_p_kind_op() {
                 .unwrap_or_else(|e| panic!("P={p} {kind:?}: symbolic verify failed: {e}"));
             assert!(report.total_units_sent > 0, "P={p} {kind:?}: no traffic?");
 
-            // (b) numeric agreement with the reference fold, every op.
-            for op in ReduceOp::all() {
+            // (b) numeric agreement with the reference fold, every op
+            // (including `Avg`, whose 1/P finalize happens at copy-out).
+            for op in ReduceOp::all_with_avg() {
                 let xs = payloads(&mut rng, p, n);
                 let want = reference_allreduce(&xs, op);
                 let got = exec
@@ -161,7 +162,7 @@ fn arena_data_plane_bit_matches_clone_oracle_for_every_p_kind_op() {
         let n = 2 * p + 3;
         for kind in AlgorithmKind::all() {
             let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
-            for op in ReduceOp::all() {
+            for op in ReduceOp::all_with_avg() {
                 let xs = payloads(&mut rng, p, n);
                 let want = oracle::execute_reference(&s, &xs, op)
                     .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: oracle failed: {e}"));
@@ -211,7 +212,7 @@ fn arena_bit_matches_oracle_for_f64_and_i32_every_p_kind_op() {
         let n = 2 * p + 3;
         for kind in AlgorithmKind::all() {
             let s = Algorithm::new(kind, p).build(&BuildCtx::default()).unwrap();
-            for op in ReduceOp::all() {
+            for op in ReduceOp::all_with_avg() {
                 let xs = payloads_f64(&mut rng, p, n);
                 let want = oracle::execute_reference(&s, &xs, op)
                     .unwrap_or_else(|e| panic!("P={p} {kind:?} {op:?}: f64 oracle failed: {e}"));

@@ -1,0 +1,173 @@
+//! Property tests pinning the vectorized / multi-threaded reduction
+//! kernels (`cluster::kernels`) to the deliberately naive scalar
+//! reference, **bit for bit**.
+//!
+//! The kernels promise that lane unrolling and thread splitting never
+//! change which operands meet at which element — only who computes it —
+//! so for every (op, dtype, operand values) triple the vectorized serial
+//! path, the threaded path at any split width, and the fused
+//! materialize-and-combine forms must all reproduce `scalar_combine`
+//! exactly. The sweep covers all four dtypes, odd lengths, unaligned
+//! starting offsets (slices beginning off a `LANES` boundary), and
+//! threading thresholds straddling the buffer size on both sides.
+
+use permallreduce::cluster::kernels::{
+    combine, combine_from, combine_from_serial, combine_from_with_threshold, combine_serial,
+    combine_with_threshold, copy_wide, finalize, scalar_combine, scalar_combine_from, Prim, LANES,
+};
+use permallreduce::cluster::ReduceOp;
+use permallreduce::util::Rng;
+
+/// Bit-exact comparison across all four dtypes (floats must match to the
+/// bit — `PartialEq` would conflate `+0.0`/`-0.0` and choke on NaN).
+trait Bits: Copy {
+    fn bits(self) -> u64;
+}
+impl Bits for f32 {
+    fn bits(self) -> u64 {
+        self.to_bits() as u64
+    }
+}
+impl Bits for f64 {
+    fn bits(self) -> u64 {
+        self.to_bits()
+    }
+}
+impl Bits for i32 {
+    fn bits(self) -> u64 {
+        self as u32 as u64
+    }
+}
+impl Bits for i64 {
+    fn bits(self) -> u64 {
+        self as u64
+    }
+}
+
+fn assert_bits<T: Bits + std::fmt::Debug>(got: &[T], want: &[T], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.bits(), w.bits(), "{tag}: elem {i}: {g:?} vs {w:?}");
+    }
+}
+
+/// Lengths that straddle every structural boundary: empty, sub-lane,
+/// exact lane multiples ±1, and sizes large enough that a tiny threshold
+/// splits them across several workers.
+const LENS: &[usize] = &[0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 63, 64, 65, 129, 255, 1000];
+
+/// Slice start offsets — odd offsets put the data off any natural
+/// alignment the allocator gave the backing vector.
+const OFFSETS: &[usize] = &[0, 1, 3, 7];
+
+fn sweep_dtype<T, G>(mut gen: G, seed: u64, dtype: &str)
+where
+    T: Prim + Bits + Default + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+{
+    let mut rng = Rng::new(seed);
+    let max = LENS.iter().max().unwrap() + OFFSETS.iter().max().unwrap();
+    let base_a: Vec<T> = (0..max).map(|_| gen(&mut rng)).collect();
+    let base_b: Vec<T> = (0..max).map(|_| gen(&mut rng)).collect();
+    let elem = std::mem::size_of::<T>();
+    for &len in LENS {
+        for &off in OFFSETS {
+            let a = &base_a[off..off + len];
+            let b = &base_b[off..off + len];
+            let bytes = len * elem;
+            // Thresholds straddling the buffer size: 1 (maximum split),
+            // one lane, exactly the buffer size (2-way split), just past
+            // it (serial), and the production default (serial at these
+            // sizes).
+            let thresholds = [1usize, LANES * elem, bytes.max(1), bytes + 1, usize::MAX];
+            for op in ReduceOp::all_with_avg() {
+                let tag = format!("{dtype} {op:?} len {len} off {off}");
+                let mut want = a.to_vec();
+                scalar_combine(op, &mut want, b);
+
+                let mut got = a.to_vec();
+                combine_serial(op, &mut got, b);
+                assert_bits(&got, &want, &format!("{tag} serial"));
+
+                let mut got = a.to_vec();
+                combine(op, &mut got, b);
+                assert_bits(&got, &want, &format!("{tag} production"));
+
+                for thresh in thresholds {
+                    let mut got = a.to_vec();
+                    combine_with_threshold(op, &mut got, b, thresh);
+                    assert_bits(&got, &want, &format!("{tag} thresh {thresh}"));
+                }
+
+                // Fused forms: out materialized from (a, b) in one pass.
+                let mut fused_want = vec![T::default(); len];
+                scalar_combine_from(op, &mut fused_want, a, b);
+                assert_bits(&fused_want, &want, &format!("{tag} fused-ref"));
+
+                let mut got = vec![T::default(); len];
+                combine_from_serial(op, &mut got, a, b);
+                assert_bits(&got, &want, &format!("{tag} fused-serial"));
+
+                let mut got = vec![T::default(); len];
+                combine_from(op, &mut got, a, b);
+                assert_bits(&got, &want, &format!("{tag} fused-production"));
+
+                for thresh in thresholds {
+                    let mut got = vec![T::default(); len];
+                    combine_from_with_threshold(op, &mut got, a, b, thresh);
+                    assert_bits(&got, &want, &format!("{tag} fused thresh {thresh}"));
+                }
+            }
+            // The staged wide copy is an exact copy at every shape.
+            let mut dst = vec![T::default(); len];
+            copy_wide(&mut dst, a);
+            assert_bits(&dst, a, &format!("{dtype} copy len {len} off {off}"));
+        }
+    }
+}
+
+#[test]
+fn kernels_bit_match_scalar_reference_f32() {
+    sweep_dtype::<f32, _>(|r| r.f32() * 4.0 - 2.0, 0xF32F32, "f32");
+}
+
+#[test]
+fn kernels_bit_match_scalar_reference_f64() {
+    sweep_dtype::<f64, _>(|r| (r.f32() as f64) * 4.0 - 2.0, 0xF64F64, "f64");
+}
+
+#[test]
+fn kernels_bit_match_scalar_reference_i32() {
+    sweep_dtype::<i32, _>(|r| r.below(2001) as i32 - 1000, 0x132132, "i32");
+}
+
+#[test]
+fn kernels_bit_match_scalar_reference_i64() {
+    sweep_dtype::<i64, _>(|r| r.below(100_001) as i64 - 50_000, 0x164164, "i64");
+}
+
+/// `finalize` applies the `Avg` 1/P scale exactly once, element-wise,
+/// matching a per-element `div_p` reference — and leaves every other op
+/// untouched at any P.
+#[test]
+fn finalize_matches_div_p_reference() {
+    let mut rng = Rng::new(0xF1A);
+    let vals: Vec<f64> = (0..257).map(|_| (rng.f32() as f64) * 10.0 - 5.0).collect();
+    for p in [1usize, 2, 3, 7, 16] {
+        let mut got = vals.clone();
+        finalize(ReduceOp::Avg, &mut got, p);
+        let want: Vec<f64> = vals.iter().map(|&v| if p > 1 { v.div_p(p) } else { v }).collect();
+        assert_bits(&got, &want, &format!("avg p {p}"));
+        for op in ReduceOp::all() {
+            let mut un = vals.clone();
+            finalize(op, &mut un, p);
+            assert_bits(&un, &vals, &format!("{op:?} p {p} must be a no-op"));
+        }
+    }
+    // Integer Avg truncates toward zero — pinned against the reference.
+    let ints: Vec<i32> = (-25..25).collect();
+    let mut got = ints.clone();
+    finalize(ReduceOp::Avg, &mut got, 4);
+    let want: Vec<i32> = ints.iter().map(|&v| v / 4).collect();
+    assert_eq!(got, want);
+}
