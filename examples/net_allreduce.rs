@@ -21,12 +21,18 @@
 //! # non-zero rank between collectives, and require every survivor to
 //! # shrink the membership to P−1 and converge on the P−1 result:
 //! cargo run --release --example net_allreduce -- --self-spawn --chaos --nprocs 8
+//! # traced lane: every rank records spans into its obs ring, rank 0
+//! # pulls and merges a mesh-wide Chrome trace (load trace.json in
+//! # Perfetto / chrome://tracing) and prints the predicted-vs-measured
+//! # cost-model report for every (kind, size) cell executed:
+//! cargo run --release --example net_allreduce -- --self-spawn --trace --nprocs 5
 //! ```
 //!
 //! Every rank regenerates all ranks' inputs from the shared seed, so each
 //! process can run the in-process oracle locally and compare its own
 //! slice bit-for-bit — no out-of-band result channel needed.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
@@ -34,6 +40,8 @@ use permallreduce::cli::Args;
 use permallreduce::cluster::{oracle, ReduceOp};
 use permallreduce::coordinator::bucket;
 use permallreduce::net::{fault::FaultPolicy, probe::ProbeConfig, Endpoint, NetOptions};
+use permallreduce::obs::{attribute, chrome, Recorder};
+use permallreduce::sched::ProcSchedule;
 use permallreduce::util::Rng;
 
 const SEED: u64 = 0x5EED_0E7;
@@ -236,11 +244,124 @@ fn chaos_rank(rank: usize, p: usize, bind: &str, n: usize, victim: usize) -> Res
     Ok(())
 }
 
+/// One rank of the traced lane: run a sweep of (kind × size × framing)
+/// cells with span tracing armed, verify each result against the oracle,
+/// then collect the mesh-wide timeline on rank 0, export it as a Chrome
+/// trace, and diff every cell's measured per-step spans against the DES
+/// prediction under the probed α–β–γ.
+fn trace_rank(rank: usize, p: usize, bind: &str, n: usize, out_dir: &str) -> Result<(), String> {
+    let rec = Arc::new(Recorder::new(rank as u32, 1 << 16));
+    let opts = NetOptions {
+        rendezvous: bind.to_string(),
+        connect_timeout: Duration::from_secs(30),
+        recv_timeout: Duration::from_secs(30),
+        trace: Some(rec.clone()),
+        ..NetOptions::default()
+    };
+    let mut ep: Endpoint<f32> = Endpoint::connect(rank, p, opts).map_err(|e| e.to_string())?;
+    let params = ep.probe(&ProbeConfig::default()).map_err(|e| e.to_string())?;
+    let xs = inputs(p, n, SEED);
+
+    // Every cell executed, with the step-tag anchor captured at call
+    // time — attribution later filters the merged timeline by these tags.
+    struct Cell {
+        label: String,
+        sched: Arc<ProcSchedule>,
+        m_bytes: usize,
+        chunk: Option<usize>,
+        step_off: u64,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    for &sz in &[(n / 8).max(p), n] {
+        let m_bytes = sz * 4;
+        for kind in [AlgorithmKind::BwOptimal, AlgorithmKind::GeneralizedAuto] {
+            let sched = ep.schedule(kind, m_bytes)?;
+            let slice: Vec<Vec<f32>> = xs.iter().map(|v| v[..sz].to_vec()).collect();
+            let want = oracle::execute_reference(&sched, &slice, ReduceOp::Sum)
+                .map_err(|e| e.to_string())?;
+            for chunk in [None, Some((m_bytes / p / 4).max(256))] {
+                ep.set_chunk_bytes(chunk);
+                let step_off = ep.step_cursor() as u64;
+                let got = ep.allreduce(&slice[rank], ReduceOp::Sum, kind)?;
+                if !bits_equal(&got, &want[rank]) {
+                    return Err(format!(
+                        "rank {rank}: traced {kind:?} ({sz} elems, chunk {chunk:?}) \
+                         diverged from the oracle"
+                    ));
+                }
+                cells.push(Cell {
+                    label: format!(
+                        "{}/{}",
+                        sched.name,
+                        if chunk.is_some() { "chunked" } else { "mono" }
+                    ),
+                    sched: sched.clone(),
+                    m_bytes,
+                    chunk,
+                    step_off,
+                });
+            }
+        }
+    }
+
+    // Rank 0 pulls every ring and merges; everyone else uploads and is
+    // done (collect_trace is collective).
+    let Some(tl) = ep.collect_trace().map_err(|e| e.to_string())? else {
+        println!("[rank {rank}] trace uploaded ({} cells executed)", cells.len());
+        return Ok(());
+    };
+    let trace_path = format!("{out_dir}/trace.json");
+    std::fs::write(&trace_path, chrome::export(&tl))
+        .map_err(|e| format!("writing {trace_path}: {e}"))?;
+    let errors: Vec<attribute::ModelError> = cells
+        .iter()
+        .map(|c| {
+            attribute::attribute(
+                &c.label,
+                &c.sched,
+                c.m_bytes,
+                &params,
+                c.chunk,
+                None,
+                &tl,
+                c.step_off,
+            )
+        })
+        .collect();
+    // Acceptance: every executed cell must carry per-step attribution.
+    for e in &errors {
+        if e.steps.is_empty() {
+            return Err(format!("model-error cell {} has no attributed steps", e.kind));
+        }
+    }
+    print!("{}", attribute::render_report(&errors));
+    let report_path = format!("{out_dir}/model_error.json");
+    std::fs::write(&report_path, attribute::report_json(&errors))
+        .map_err(|e| format!("writing {report_path}: {e}"))?;
+    println!(
+        "[rank 0] traced {} cells over {} ranks: {} timeline events → {trace_path}, \
+         model-error report → {report_path}",
+        cells.len(),
+        p,
+        tl.events.len()
+    );
+    Ok(())
+}
+
 /// Launcher mode: fork `p` copies of this binary over loopback and wait.
 /// With `chaos`, one random non-zero rank is designated the victim (told
 /// to hard-die mid-job); the victim's death exit is expected and every
 /// survivor must exit clean.
-fn self_spawn(p: usize, bind: &str, n: usize, chaos: bool) -> Result<(), String> {
+fn self_spawn(
+    p: usize,
+    bind: &str,
+    n: usize,
+    chaos: bool,
+    trace: Option<&str>,
+) -> Result<(), String> {
+    if chaos && trace.is_some() {
+        return Err("--chaos and --trace are separate lanes; pick one".into());
+    }
     let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
     let victim = if chaos {
         if p < 3 {
@@ -269,6 +390,9 @@ fn self_spawn(p: usize, bind: &str, n: usize, chaos: bool) -> Result<(), String>
             .arg(n.to_string());
         if let Some(v) = victim {
             cmd.arg("--chaos").arg("--victim").arg(v.to_string());
+        }
+        if let Some(dir) = trace {
+            cmd.arg("--trace").arg("--trace-out").arg(dir);
         }
         let child = cmd
             .spawn()
@@ -312,14 +436,18 @@ fn main() -> Result<(), String> {
         return Err("--nprocs must be at least 1".into());
     }
     let chaos = args.has("chaos");
+    let trace = args.has("trace");
+    let trace_out = args.get("trace-out").unwrap_or(".").to_string();
     if args.has("self-spawn") {
-        return self_spawn(p, &bind, n, chaos);
+        return self_spawn(p, &bind, n, chaos, trace.then_some(trace_out.as_str()));
     }
     match args.get("rank").map(str::parse::<usize>) {
         Some(Ok(rank)) if rank < p => {
             if chaos {
                 let victim = args.get_usize("victim", 0)?;
                 chaos_rank(rank, p, &bind, n, victim)
+            } else if trace {
+                trace_rank(rank, p, &bind, n, &trace_out)
             } else {
                 run_rank(rank, p, &bind, n)
             }

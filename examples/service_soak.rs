@@ -23,13 +23,15 @@
 //! cargo run --release --example service_soak -- --rank 2 --nprocs 3 --bind 127.0.0.1:29533
 //! ```
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use permallreduce::algo::AlgorithmKind;
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
 use permallreduce::cli::Args;
 use permallreduce::cluster::ReduceOp;
 use permallreduce::net::service::{CommHandle, Service, ServiceOptions};
-use permallreduce::net::NetOptions;
+use permallreduce::net::{wire, NetOptions};
+use permallreduce::obs::{attribute, Recorder, Timeline};
 
 /// One tenant's life on one rank: `jobs` submit → collect cycles on its
 /// own communicator, each checked against the exact expected sum.
@@ -75,15 +77,20 @@ fn run_rank(
     n: usize,
     out: &str,
 ) -> Result<(), String> {
+    // Span tracing is on for the whole soak: the recorder's ring is
+    // lock-free and allocation-free, so it rides along at full load.
+    let rec = Arc::new(Recorder::new(rank as u32, 1 << 16));
     let opts = ServiceOptions {
         net: NetOptions {
             rendezvous: bind.to_string(),
             connect_timeout: Duration::from_secs(30),
             recv_timeout: Duration::from_secs(30),
+            trace: Some(rec.clone()),
             ..NetOptions::default()
         },
         ..ServiceOptions::new()
     };
+    let params = NetOptions::default().params;
     let svc: Service<f32> = Service::connect(rank, p, opts).map_err(|e| e.to_string())?;
     let mut handles = Vec::with_capacity(tenants);
     for _ in 0..tenants {
@@ -116,6 +123,39 @@ fn run_rank(
          — {rate:.1} jobs/s, {} mesh sockets",
         svc.socket_count()
     );
+
+    // Unified observability report: service + data-plane counters and
+    // the traced per-event-kind counts, one `name value` line each.
+    let report = svc.metrics().render();
+    for line in report.lines() {
+        println!("[rank {rank} metrics] {line}");
+    }
+
+    // Rank-local model-error attribution for tenant 0's first job: kind
+    // (t+j)%2 = Ring (parameter-independent construction, so rebuilding
+    // it here matches the engine's schedule exactly), communicator id 1,
+    // step cursor 0 — the first window of that communicator's tag region.
+    // One rank's spans give a local (skew-blind) view; the mesh-wide
+    // report lives in `net_allreduce --trace`.
+    if p > 1 {
+        let m_bytes = n * 4;
+        let ring = Algorithm::new(AlgorithmKind::Ring, p)
+            .build(&BuildCtx { m_bytes, params, ..BuildCtx::default() })
+            .map_err(|e| format!("rebuilding the ring schedule: {e}"))?;
+        let tl = Timeline::merge(&[rec.events()], &[0]);
+        let err = attribute::attribute(
+            "ring/soak-job0",
+            &ring,
+            m_bytes,
+            &params,
+            None,
+            None,
+            &tl,
+            wire::comm_tag(1, 0) as u64,
+        );
+        print!("{}", attribute::render_report(&[err]));
+    }
+
     if rank == 0 {
         let body = format!(
             "{{\n  \"bench\": \"service\",\n  \"p\": {p},\n  \"tenants\": {tenants},\n  \

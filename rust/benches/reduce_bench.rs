@@ -20,7 +20,10 @@
 //! naive scalar loop vs the lane-unrolled serial kernel vs the production
 //! threshold dispatch vs a forced threaded split, per dtype × size, plus
 //! the reduce-scatter → allgather composition vs the fused allreduce
-//! (`BENCH_kernels.json`, gated by `bench_gate --kernels`).
+//! (`BENCH_kernels.json`, gated by `bench_gate --kernels`), and measures
+//! the **span-tracing overhead** — the same executor with
+//! `ExecOptions::trace` armed vs disarmed, per size × P
+//! (`BENCH_obs.json`, gated as a ceiling by `bench_gate --obs`).
 //!
 //! Set `GAR_BENCH_FAST=1` (CI smoke) to shrink budgets and sizes.
 
@@ -747,6 +750,82 @@ fn bench_kernels() {
     println!("wrote BENCH_kernels.json (speedup {min:.2}×–{max:.2}×)");
 }
 
+/// Span-tracing overhead ablation (`BENCH_obs.json`, gated by
+/// `bench_gate --obs`).
+///
+/// Same executor, same schedule, same inputs — the only variable is
+/// whether `ExecOptions::trace` is armed. The traced closure also resets
+/// the rings each call (the collect-per-collective usage pattern), so the
+/// measured `overhead` = `traced_s / untraced_s` is the *whole* price of
+/// leaving tracing on. The recorder is a fetch_add plus four plain stores
+/// per event, so this ratio must sit within a percent of 1.0; the
+/// baseline pins it as a ceiling that only ratchets down.
+fn bench_obs() {
+    use permallreduce::obs::MeshTrace;
+
+    let fast = fast_mode();
+    let ps: &[usize] = &[4, 8];
+    let sizes: &[usize] = if fast {
+        &[4_096, 65_536]
+    } else {
+        &[16_384, 262_144, 1_048_576]
+    };
+    println!("\n== span-tracing overhead: ExecOptions::trace armed vs disarmed ==");
+    let mut rng = Rng::new(0x0B5);
+    let mut rows = String::new();
+    let mut worst = 0.0f64;
+    for &p in ps {
+        let sched = Algorithm::new(AlgorithmKind::BwOptimal, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let plain = ClusterExecutor::new();
+        let mt = Arc::new(MeshTrace::new(p, 1 << 14));
+        let traced = ClusterExecutor::with_options(ExecOptions {
+            trace: Some(mt.clone()),
+            ..ExecOptions::default()
+        });
+        for &n in sizes {
+            let xs: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..n).map(|_| rng.f32()).collect())
+                .collect();
+            let budget_elems: usize = if fast { 4_000_000 } else { 32_000_000 };
+            let iters = (budget_elems / (n * p)).clamp(3, 40);
+            let untraced_s = time_mean(iters, || {
+                black_box(plain.execute(&sched, &xs, ReduceOp::Sum).unwrap());
+            });
+            let traced_s = time_mean(iters, || {
+                black_box(traced.execute(&sched, &xs, ReduceOp::Sum).unwrap());
+                mt.reset();
+            });
+            let overhead = traced_s / untraced_s;
+            worst = worst.max(overhead);
+            println!(
+                "p{p} {:>9} B/rank: untraced {} | traced {} → {overhead:.4}× overhead",
+                n * 4,
+                fmt_t(untraced_s),
+                fmt_t(traced_s),
+            );
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"p\": {p}, \"elems\": {n}, \"bytes_per_rank\": {}, \
+                 \"untraced_s\": {untraced_s:.6e}, \"traced_s\": {traced_s:.6e}, \
+                 \"overhead\": {overhead:.4}}}",
+                n * 4
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"obs\",\n  \"op\": \"sum\",\n  \"algo\": \"bw-optimal\",\n  \
+         \"note\": \"traced_s / untraced_s = cost of armed span tracing incl. per-call ring \
+         reset, same executor and schedule; gated as a ceiling by bench_gate --obs\",\n  \
+         \"entries\": [\n{rows}\n  ],\n  \"max_overhead\": {worst:.4}\n}}\n"
+    );
+    std::fs::write("BENCH_obs.json", &json).expect("write BENCH_obs.json");
+    println!("wrote BENCH_obs.json (worst overhead {worst:.4}×)");
+}
+
 /// Shared iteration count for both transports (determined by shape only,
 /// so every rank of the socket mesh agrees).
 fn net_iters(fast: bool, n: usize, p: usize) -> usize {
@@ -784,6 +863,7 @@ fn main() {
     bench_chunking();
     bench_net();
     bench_hier();
+    bench_obs();
 
     #[cfg(feature = "pjrt")]
     bench_pjrt(&mut rng, budget);

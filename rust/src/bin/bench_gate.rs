@@ -37,7 +37,11 @@
 //! (`--net`) from the *other* direction: the gated quantity is the
 //! **worst-case overhead** (`socket_s / inprocess_s`), a cost, so the
 //! baseline pins a `max_overhead` **ceiling** and `--ratchet` moves it
-//! *down* toward the observed maximum, never up.
+//! *down* toward the observed maximum, never up. The `obs` section gates
+//! `BENCH_obs.json`'s span-tracing overhead (`--obs`) the same ceiling
+//! way: the gated quantity is the worst `traced_s / untraced_s` cell of
+//! the sweep — armed tracing must stay within a percent-scale cost of
+//! the untraced plane, and the ceiling only ever ratchets down.
 //!
 //! ```text
 //! bench_gate <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json>]]]
@@ -45,7 +49,8 @@
 //! bench_gate --service <baseline.json> <service.json>   # net-lane throughput gate
 //! bench_gate --kernels <baseline.json> <kernels.json>   # reduction-kernel floor
 //! bench_gate --net <baseline.json> <net.json>           # loopback overhead ceiling
-//! bench_gate --ratchet <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json> [<service.json> [<kernels.json> [<net.json>]]]]]]
+//! bench_gate --obs <baseline.json> <obs.json>           # tracing overhead ceiling
+//! bench_gate --ratchet <baseline.json> <dataplane.json> [<bucketing.json> [<chunking.json> [<hier.json> [<service.json> [<kernels.json> [<net.json> [<obs.json>]]]]]]]
 //! ```
 //!
 //! In `--ratchet` mode a literal `-` skips a positional artifact (kept at
@@ -94,6 +99,10 @@ struct Baseline {
     /// (`socket_s / inprocess_s`) of `BENCH_net.json` (wall-clock, global
     /// slack applied upward; see `--net`). Ratchets downward.
     net_ceiling: Option<f64>,
+    /// **Ceiling** on the worst span-tracing overhead
+    /// (`traced_s / untraced_s`) of `BENCH_obs.json` (wall-clock, global
+    /// slack applied upward; see `--obs`). Ratchets downward.
+    obs_ceiling: Option<f64>,
 }
 
 /// Floors for the DES-timed chunking artifact. The DES clock is
@@ -207,6 +216,14 @@ fn parse_baseline(text: &str) -> Result<Baseline, String> {
                 .ok_or("baseline `net` missing max_overhead")?,
         ),
     };
+    let obs_ceiling = match v.get("obs") {
+        None => None,
+        Some(o) => Some(
+            o.get("max_overhead")
+                .and_then(Value::as_f64)
+                .ok_or("baseline `obs` missing max_overhead")?,
+        ),
+    };
     Ok(Baseline {
         pct,
         series,
@@ -216,6 +233,7 @@ fn parse_baseline(text: &str) -> Result<Baseline, String> {
         service_floor,
         kernels_floor,
         net_ceiling,
+        obs_ceiling,
     })
 }
 
@@ -272,6 +290,43 @@ fn gate_net(ceiling: f64, max_overhead: f64, max_regress_pct: f64) -> Vec<String
         vec![format!(
             "net: worst loopback overhead {max_overhead:.3}× rose more than \
              {max_regress_pct}% above the baseline ceiling {ceiling:.3}× (limit {limit:.3}×)"
+        )]
+    } else {
+        Vec::new()
+    }
+}
+
+/// The gated quantity of `BENCH_obs.json`: the **worst** per-entry
+/// span-tracing overhead (`traced_s / untraced_s`).
+fn parse_obs(text: &str) -> Result<f64, String> {
+    let v = json::parse(text).map_err(|e| format!("obs parse: {e}"))?;
+    let entries = v
+        .get("entries")
+        .and_then(Value::as_arr)
+        .ok_or("obs artifact missing `entries` array")?;
+    let mut worst = f64::NEG_INFINITY;
+    for (i, e) in entries.iter().enumerate() {
+        let o = e
+            .get("overhead")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("entries[{i}] missing `overhead`"))?;
+        worst = worst.max(o);
+    }
+    if worst.is_finite() {
+        Ok(worst)
+    } else {
+        Err("obs artifact has no entries".to_string())
+    }
+}
+
+/// Gate the tracing-overhead **ceiling**: fail when the worst observed
+/// overhead exceeds the ceiling by more than the slack (empty vec = pass).
+fn gate_obs(ceiling: f64, max_overhead: f64, max_regress_pct: f64) -> Vec<String> {
+    let limit = ceiling * (1.0 + max_regress_pct / 100.0);
+    if max_overhead > limit {
+        vec![format!(
+            "obs: worst span-tracing overhead {max_overhead:.4}× rose more than \
+             {max_regress_pct}% above the baseline ceiling {ceiling:.4}× (limit {limit:.4}×)"
         )]
     } else {
         Vec::new()
@@ -538,6 +593,15 @@ fn self_test(baseline: &Baseline, max_regress_pct: f64) -> Result<(), String> {
             return Err("net ceiling does not pass against itself".into());
         }
     }
+    if let Some(ceiling) = baseline.obs_ceiling {
+        let injected = ceiling * (1.0 + max_regress_pct / 100.0) * 2.0;
+        if gate_obs(ceiling, injected, max_regress_pct).is_empty() {
+            return Err("injected obs-overhead regression passed — the gate is broken".into());
+        }
+        if !gate_obs(ceiling, ceiling, max_regress_pct).is_empty() {
+            return Err("obs ceiling does not pass against itself".into());
+        }
+    }
     Ok(())
 }
 
@@ -547,6 +611,7 @@ fn self_test(baseline: &Baseline, max_regress_pct: f64) -> Result<(), String> {
 /// run B on an equally healthy runner. The DES chunking floors are
 /// deterministic and ratchet to the observed value exactly. No floor ever
 /// moves down, and series the baseline does not cover yet are added.
+#[allow(clippy::too_many_arguments)]
 fn ratchet(
     baseline: &Baseline,
     current: &[Series],
@@ -556,6 +621,7 @@ fn ratchet(
     service: Option<f64>,
     kernels: Option<f64>,
     net: Option<f64>,
+    obs: Option<f64>,
 ) -> String {
     let discount = 1.0 - baseline.pct / 100.0;
     let mut series: Vec<Series> = baseline
@@ -672,6 +738,16 @@ fn ratchet(
     if let Some(ceiling) = net_ceiling {
         out.push_str(&format!(",\n  \"net\": {{\"max_overhead\": {ceiling:.4}}}"));
     }
+    // Obs: a ceiling too — same downward-only ratchet as net.
+    let obs_ceiling = match (baseline.obs_ceiling, obs) {
+        (Some(old), Some(got)) => Some(old.min(got * inflate)),
+        (Some(old), None) => Some(old),
+        (None, Some(got)) => Some(got * inflate),
+        (None, None) => None,
+    };
+    if let Some(ceiling) = obs_ceiling {
+        out.push_str(&format!(",\n  \"obs\": {{\"max_overhead\": {ceiling:.4}}}"));
+    }
     out.push_str("\n}\n");
     out
 }
@@ -679,15 +755,15 @@ fn ratchet(
 fn run() -> Result<(), String> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (mode, files): (&str, Vec<&String>) = match args.first().map(String::as_str) {
-        Some(m @ ("--self-test" | "--ratchet" | "--service" | "--kernels" | "--net")) => {
+        Some(m @ ("--self-test" | "--ratchet" | "--service" | "--kernels" | "--net" | "--obs")) => {
             (m, args.iter().skip(1).collect())
         }
         _ => ("", args.iter().collect()),
     };
     let selftest = mode == "--self-test";
-    let usage = "usage: bench_gate [--self-test | --service | --kernels | --net | --ratchet] \
-                 <baseline.json> [<dataplane.json> [<bucketing.json> [<chunking.json> \
-                 [<hier.json> [<service.json> [<kernels.json> [<net.json>]]]]]]]";
+    let usage = "usage: bench_gate [--self-test | --service | --kernels | --net | --obs | \
+                 --ratchet] <baseline.json> [<dataplane.json> [<bucketing.json> [<chunking.json> \
+                 [<hier.json> [<service.json> [<kernels.json> [<net.json> [<obs.json>]]]]]]]]";
     let baseline_path = files.first().ok_or(usage)?;
     let baseline_text = std::fs::read_to_string(baseline_path)
         .map_err(|e| format!("reading {baseline_path}: {e}"))?;
@@ -783,6 +859,28 @@ fn run() -> Result<(), String> {
         ));
     }
 
+    if mode == "--obs" {
+        let ceiling = baseline
+            .obs_ceiling
+            .ok_or("baseline has no `obs` section to gate")?;
+        let obs_path = files.get(1).ok_or(usage)?;
+        let obs_text = std::fs::read_to_string(obs_path)
+            .map_err(|e| format!("reading {obs_path}: {e}"))?;
+        let got = parse_obs(&obs_text)?;
+        let failures = gate_obs(ceiling, got, pct);
+        if failures.is_empty() {
+            println!(
+                "bench_gate OK: worst span-tracing overhead {got:.4}× within the baseline \
+                 ceiling {ceiling:.4}×"
+            );
+            return Ok(());
+        }
+        return Err(format!(
+            "perf regression gate failed:\n  {}",
+            failures.join("\n  ")
+        ));
+    }
+
     let current_path = files.get(1).ok_or(usage)?;
     let current_text = std::fs::read_to_string(current_path)
         .map_err(|e| format!("reading {current_path}: {e}"))?;
@@ -807,8 +905,9 @@ fn run() -> Result<(), String> {
         let service = read_opt(5)?.map(|t| parse_service(&t)).transpose()?;
         let kernels = read_opt(6)?.map(|t| parse_kernels(&t)).transpose()?;
         let net = read_opt(7)?.map(|t| parse_net(&t)).transpose()?;
+        let obs = read_opt(8)?.map(|t| parse_obs(&t)).transpose()?;
         let updated = ratchet(
-            &baseline, &current, bucketing, chunking, hier, service, kernels, net,
+            &baseline, &current, bucketing, chunking, hier, service, kernels, net, obs,
         );
         print!("{updated}");
         return Ok(());
@@ -933,7 +1032,8 @@ mod tests {
             "hier": {"min_speedup": 1.0, "max_regress_pct": 0.5},
             "service": {"min_jobs_per_sec": 1.0},
             "kernels": {"min_speedup": 1.0},
-            "net": {"max_overhead": 500.0}
+            "net": {"max_overhead": 500.0},
+            "obs": {"max_overhead": 1.01}
         }"#;
         let base = parse_baseline(text).unwrap();
         assert_eq!(base.pct, 20.0);
@@ -950,6 +1050,7 @@ mod tests {
         assert_eq!(base.service_floor, Some(1.0));
         assert_eq!(base.kernels_floor, Some(1.0));
         assert_eq!(base.net_ceiling, Some(500.0));
+        assert_eq!(base.obs_ceiling, Some(1.01));
         // A baseline without the optional sections stays valid (those
         // gates are then skipped).
         let text = r#"{
@@ -963,6 +1064,7 @@ mod tests {
         assert!(base.service_floor.is_none());
         assert!(base.kernels_floor.is_none());
         assert!(base.net_ceiling.is_none());
+        assert!(base.obs_ceiling.is_none());
     }
 
     #[test]
@@ -1078,6 +1180,7 @@ mod tests {
             service_floor: Some(100.0),
             kernels_floor: Some(1.0),
             net_ceiling: Some(500.0),
+            obs_ceiling: Some(1.05),
         };
         // First series measured much faster (ratchets, discounted by the
         // 20% margin), second measured slower (floor must not move), plus
@@ -1096,6 +1199,7 @@ mod tests {
             Some(500.0),
             Some(2.0),
             Some(40.0),
+            Some(0.8),
         );
         let new = parse_baseline(&text).expect("ratchet output must be a valid baseline");
         assert_eq!(new.pct, 20.0);
@@ -1126,6 +1230,8 @@ mod tests {
         assert!((new.kernels_floor.unwrap() - 1.6).abs() < 1e-9);
         // Net is a cost *ceiling*: ratchets DOWN to observed × (1 + 20%).
         assert!((new.net_ceiling.unwrap() - 48.0).abs() < 1e-9);
+        // Obs is a ceiling too: 0.8 × 1.2 = 0.96 < the old 1.05.
+        assert!((new.obs_ceiling.unwrap() - 0.96).abs() < 1e-9);
         // The ratcheted baseline accepts the run it was ratcheted from.
         assert!(gate(&new.series, &current, new.pct).is_empty());
     }
@@ -1144,10 +1250,12 @@ mod tests {
             service_floor: Some(80.0),
             kernels_floor: Some(1.1),
             net_ceiling: Some(60.0),
+            obs_ceiling: Some(1.02),
         };
         let text = ratchet(
             &base,
             &[series(4, 4096, 1.0)],
+            None,
             None,
             None,
             None,
@@ -1163,6 +1271,7 @@ mod tests {
         assert_eq!(new.service_floor, Some(80.0), "kept when unobserved");
         assert_eq!(new.kernels_floor, Some(1.1), "kept when unobserved");
         assert_eq!(new.net_ceiling, Some(60.0), "kept when unobserved");
+        assert_eq!(new.obs_ceiling, Some(1.02), "kept when unobserved");
     }
 
     #[test]
@@ -1183,6 +1292,7 @@ mod tests {
             service_floor: Some(1.0),
             kernels_floor: Some(1.0),
             net_ceiling: Some(500.0),
+            obs_ceiling: Some(1.01),
         };
         self_test(&base, 20.0).unwrap();
     }
@@ -1232,6 +1342,30 @@ mod tests {
         assert!(fails[0].contains("net"));
         // Lower overhead than the ceiling is always fine.
         assert!(gate_net(20.0, 1.0, 20.0).is_empty());
+    }
+
+    #[test]
+    fn obs_gate_is_a_ceiling_and_parses_the_artifact_schema() {
+        let text = r#"{
+            "bench": "obs", "op": "sum", "algo": "bw-optimal",
+            "entries": [
+                {"p": 4, "elems": 65536, "bytes_per_rank": 262144,
+                 "untraced_s": 1.0e-3, "traced_s": 1.005e-3, "overhead": 1.005},
+                {"p": 8, "elems": 4096, "bytes_per_rank": 16384,
+                 "untraced_s": 1.0e-4, "traced_s": 1.002e-4, "overhead": 1.002}
+            ],
+            "max_overhead": 1.005
+        }"#;
+        // The gated quantity is the WORST entry.
+        assert_eq!(parse_obs(text).unwrap(), 1.005);
+        // At the ceiling and within the upward slack: pass. Past it: fail.
+        assert!(gate_obs(1.01, 1.01, 20.0).is_empty());
+        assert!(gate_obs(1.01, 1.2, 20.0).is_empty());
+        let fails = gate_obs(1.01, 1.25, 20.0);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("obs"));
+        // Cheaper-than-ceiling tracing is always fine.
+        assert!(gate_obs(1.01, 0.99, 20.0).is_empty());
     }
 
     #[test]

@@ -71,6 +71,7 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::obs::{EventKind, Recorder, NO_PEER};
 use crate::sched::{
     stats::{chunk_pays, plan_chunk_fusion, FuseDir, FusePlan},
     BufId, MicroOp, Op, ProcSchedule,
@@ -769,6 +770,9 @@ pub struct DataPlane<T: Element> {
     /// Zero-length shared chunk, cloned wherever a frame needs an empty
     /// placeholder for a buffer that finished in an earlier frame.
     empty: Chunk<T>,
+    /// This rank's span recorder ([`crate::obs`]); `None` (the default)
+    /// reduces every emission site to a branch on an empty `Option`.
+    trace: Option<Arc<Recorder>>,
 }
 
 impl<T: Element> DataPlane<T> {
@@ -781,6 +785,24 @@ impl<T: Element> DataPlane<T> {
             local: LocalCounters::default(),
             chunk_elems: None,
             empty,
+            trace: None,
+        }
+    }
+
+    /// Install (or clear) this rank's span recorder. Every step, frame,
+    /// and fused-combine boundary then lands in the recorder's ring; the
+    /// executed data path is unchanged either way.
+    pub fn set_trace(&mut self, rec: Arc<Recorder>) {
+        self.trace = Some(rec);
+    }
+
+    /// Total elements currently backing buffer `b` (0 when dead).
+    fn buf_len(&self, b: BufId) -> usize {
+        match self.slots[b as usize].as_ref() {
+            Some(BufSlot::Slab(sl)) => sl.len,
+            Some(BufSlot::Owned(blk)) => blk.len(),
+            Some(BufSlot::Shared(c)) => c.len(),
+            None => 0,
         }
     }
 
@@ -928,6 +950,9 @@ impl<T: Element> DataPlane<T> {
         let mut fused: Vec<(BufId, BufId)> = Vec::new();
         for (local_step, st) in s.steps.iter().enumerate() {
             let step = step_off + local_step;
+            if let Some(tr) = &self.trace {
+                tr.record(EventKind::StepBegin, step as u64, NO_PEER, 0);
+            }
             let ops: &[Op] = &st.ops[proc];
             fused.clear();
             // Recv micro-ops seen this step, indexing the cached fusion rows.
@@ -962,7 +987,15 @@ impl<T: Element> DataPlane<T> {
                                 fused.swap_remove(i);
                             } else {
                                 let place = wire_dst.get(dst as usize).copied().unwrap_or(false);
+                                if let Some(tr) = &self.trace {
+                                    tr.record(EventKind::CombineBegin, step as u64, NO_PEER, 0);
+                                }
                                 self.reduce(dst, src, kernel, place);
+                                if let Some(tr) = &self.trace {
+                                    let bytes =
+                                        (self.buf_len(dst) * std::mem::size_of::<T>()) as u64;
+                                    tr.record(EventKind::CombineEnd, step as u64, NO_PEER, bytes);
+                                }
                             }
                         }
                         MicroOp::Copy { dst, src } => {
@@ -976,6 +1009,9 @@ impl<T: Element> DataPlane<T> {
                         }
                     }
                 }
+            }
+            if let Some(tr) = &self.trace {
+                tr.record(EventKind::StepEnd, step as u64, NO_PEER, 0);
             }
         }
         Ok(())
@@ -1015,6 +1051,11 @@ impl<T: Element> DataPlane<T> {
         };
         if n_frames <= 1 {
             let payload = self.build_payload(ids);
+            if let Some(tr) = &self.trace {
+                let bytes: usize =
+                    payload.iter().map(Chunk::len).sum::<usize>() * std::mem::size_of::<T>();
+                tr.record(EventKind::SendFrame, step as u64, to as u32, bytes as u64);
+            }
             transport.send(to, step, Frame::WHOLE, payload);
             return;
         }
@@ -1089,6 +1130,11 @@ impl<T: Element> DataPlane<T> {
                     }
                 })
                 .collect();
+            if let Some(tr) = &self.trace {
+                let bytes: usize =
+                    payload.iter().map(Chunk::len).sum::<usize>() * std::mem::size_of::<T>();
+                tr.record(EventKind::SendFrame, step as u64, to as u32, bytes as u64);
+            }
             transport.send(
                 to,
                 step,
@@ -1134,6 +1180,11 @@ impl<T: Element> DataPlane<T> {
         fused: &mut Vec<(BufId, BufId)>,
     ) -> Result<(), ClusterError> {
         let (frame, first) = transport.recv(step, from)?;
+        if let Some(tr) = &self.trace {
+            let bytes: usize =
+                first.iter().map(Chunk::len).sum::<usize>() * std::mem::size_of::<T>();
+            tr.record(EventKind::RecvFrame, step as u64, from as u32, bytes as u64);
+        }
         if first.len() != ids.len() {
             return Err(ClusterError::Protocol {
                 proc,
@@ -1235,11 +1286,25 @@ impl<T: Element> DataPlane<T> {
                 }
                 match &mut states[i] {
                     RecvSlot::Fuse { src, dst, off } => {
+                        if let Some(tr) = &self.trace {
+                            tr.record(EventKind::CombineBegin, step as u64, NO_PEER, 0);
+                        }
                         self.fuse_chunk(dst, *src, *off, &chunk, kernel);
+                        if let Some(tr) = &self.trace {
+                            let bytes = (chunk.len() * std::mem::size_of::<T>()) as u64;
+                            tr.record(EventKind::CombineEnd, step as u64, NO_PEER, bytes);
+                        }
                         *off += chunk.len();
                     }
                     RecvSlot::FoldInto { dst, off } => {
+                        if let Some(tr) = &self.trace {
+                            tr.record(EventKind::CombineBegin, step as u64, NO_PEER, 0);
+                        }
                         self.fold_chunk(*dst, *off, &chunk, kernel);
+                        if let Some(tr) = &self.trace {
+                            let bytes = (chunk.len() * std::mem::size_of::<T>()) as u64;
+                            tr.record(EventKind::CombineEnd, step as u64, NO_PEER, bytes);
+                        }
                         *off += chunk.len();
                     }
                     RecvSlot::Gather { parts } => parts.push(chunk),
@@ -1250,6 +1315,11 @@ impl<T: Element> DataPlane<T> {
                 break;
             }
             let (f, p) = transport.recv(step, from)?;
+            if let Some(tr) = &self.trace {
+                let bytes: usize =
+                    p.iter().map(Chunk::len).sum::<usize>() * std::mem::size_of::<T>();
+                tr.record(EventKind::RecvFrame, step as u64, from as u32, bytes as u64);
+            }
             if f.of != n_frames || f.idx != k {
                 return Err(ClusterError::Protocol {
                     proc,

@@ -233,6 +233,12 @@ pub struct ExecOptions {
     /// Optional sink for the call's [`DataPlaneCounters`]: after each
     /// `execute*` call the per-call pool's counts are added here.
     pub counters: Option<Arc<DataPlaneCounters>>,
+    /// Optional span tracing ([`crate::obs`]): when set, each worker
+    /// records step/frame/combine events into `trace.rank(proc)`'s ring.
+    /// `None` (the default) compiles the emission sites down to a branch
+    /// on an empty `Option` — the executed data path is identical and
+    /// results stay bit-exact either way.
+    pub trace: Option<Arc<crate::obs::MeshTrace>>,
 }
 
 impl Default for ExecOptions {
@@ -243,6 +249,7 @@ impl Default for ExecOptions {
             send_aware_placement: true,
             chunk_bytes: None,
             counters: None,
+            trace: None,
         }
     }
 }
@@ -661,6 +668,11 @@ fn worker<T: Element>(
     pool: Arc<arena::BlockPool<T>>,
 ) -> Result<Vec<Vec<T>>, ClusterError> {
     let mut plane = arena::DataPlane::new(pool);
+    if let Some(mt) = &opts.trace {
+        if proc < mt.p() {
+            plane.set_trace(mt.rank(proc).clone());
+        }
+    }
     let mut transport = ScopedTransport {
         proc,
         total_steps,

@@ -110,6 +110,12 @@ pub struct ServiceCfg {
     /// Cost-model parameters for per-tenant schedule resolution
     /// ([`ServiceSchedules`]).
     pub params: NetParams,
+    /// Optional span tracing ([`crate::obs`]): when set, each engine's
+    /// data planes record step/frame/combine events into
+    /// `trace.rank(rank)`'s ring, and admission rejections are recorded
+    /// on rank 0's. `None` (the default) keeps every hot path a branch
+    /// on an empty `Option`.
+    pub trace: Option<Arc<crate::obs::MeshTrace>>,
 }
 
 impl ServiceCfg {
@@ -123,6 +129,7 @@ impl ServiceCfg {
             recv_timeout: Duration::from_secs(10),
             chunk_bytes: None,
             params: NetParams::default(),
+            trace: None,
         }
     }
 }
@@ -599,6 +606,8 @@ struct Shared {
     queues: Mutex<Option<Vec<Sender<AnyJob>>>>,
     next_comm: AtomicU32,
     io: LaneIos,
+    /// Mesh-wide span tracing (mirrors [`ServiceCfg::trace`]).
+    trace: Option<Arc<crate::obs::MeshTrace>>,
 }
 
 /// The in-process multi-tenant allreduce service (see the module docs).
@@ -646,7 +655,7 @@ impl ServiceCluster {
             let ((rx32, rx64), (rxi32, rxi64)) = lane_rxs.next().expect("one inbox per rank");
             let (jtx, jrx) = mpsc::channel();
             queues.push(jtx);
-            let engine = Engine {
+            let mut engine = Engine {
                 rank,
                 jobs: jrx,
                 f32: EngineLane::new(f32_pool.clone(), rx32, f32_txs.clone()),
@@ -657,6 +666,15 @@ impl ServiceCluster {
                 recv_timeout: cfg.recv_timeout,
                 chunk_bytes: cfg.chunk_bytes,
             };
+            if let Some(mt) = &cfg.trace {
+                if rank < mt.p() {
+                    let rec = mt.rank(rank);
+                    engine.f32.plane.set_trace(rec.clone());
+                    engine.f64.plane.set_trace(rec.clone());
+                    engine.i32.plane.set_trace(rec.clone());
+                    engine.i64.plane.set_trace(rec.clone());
+                }
+            }
             engines.push(
                 std::thread::Builder::new()
                     .name(format!("svc-engine-{rank}"))
@@ -680,6 +698,7 @@ impl ServiceCluster {
                     i32: LaneIo { txs: i32_txs, pool: i32_pool },
                     i64: LaneIo { txs: i64_txs, pool: i64_pool },
                 },
+                trace: cfg.trace,
             }),
             engines,
         }
@@ -693,6 +712,27 @@ impl ServiceCluster {
     /// The service counters.
     pub fn stats(&self) -> &ServiceStats {
         &self.shared.stats
+    }
+
+    /// The service's metrics under the unified [`crate::obs::Registry`]
+    /// naming surface: service counters (`service.*`), every dtype
+    /// lane's data-plane counters (`dataplane.*`, summed), and — when
+    /// [`ServiceCfg::trace`] is armed — per-event-kind counts over all
+    /// ranks' rings.
+    pub fn metrics(&self) -> crate::obs::Registry {
+        let mut reg = crate::obs::Registry::new();
+        reg.absorb_service(self.shared.stats.snapshot());
+        reg.absorb_data_plane(&self.shared.io.f32.pool.counters().snapshot());
+        reg.absorb_data_plane(&self.shared.io.f64.pool.counters().snapshot());
+        reg.absorb_data_plane(&self.shared.io.i32.pool.counters().snapshot());
+        reg.absorb_data_plane(&self.shared.io.i64.pool.counters().snapshot());
+        if let Some(mt) = &self.shared.trace {
+            for r in 0..mt.p() {
+                reg.absorb_events(&mt.rank(r).events());
+            }
+            reg.add("obs.ring.dropped", mt.dropped());
+        }
+        reg
     }
 
     /// Mint a communicator of dtype `T`: the next id (starting at 1 —
@@ -823,6 +863,16 @@ impl<T: ServiceElement> CommHandle<T> {
         self.svc.admission.try_admit(bytes).map_err(|e| {
             if e == SubmitError::Busy {
                 self.svc.stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                if let Some(mt) = &self.svc.trace {
+                    // Admission is tenant-side (whole-communicator), so
+                    // the rejection lands on rank 0's ring.
+                    mt.rank(0).record(
+                        crate::obs::EventKind::AdmissionRejectBusy,
+                        0,
+                        self.comm,
+                        bytes as u64,
+                    );
+                }
             }
             e
         })?;
@@ -855,6 +905,14 @@ impl<T: ServiceElement> CommHandle<T> {
         self.svc.admission.admit(bytes, deadline).map_err(|e| {
             if e == SubmitError::Deadline {
                 self.svc.stats.deadline_rejections.fetch_add(1, Ordering::Relaxed);
+                if let Some(mt) = &self.svc.trace {
+                    mt.rank(0).record(
+                        crate::obs::EventKind::AdmissionRejectDeadline,
+                        0,
+                        self.comm,
+                        bytes as u64,
+                    );
+                }
             }
             e
         })?;

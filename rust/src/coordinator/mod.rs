@@ -855,6 +855,19 @@ impl Communicator {
             .unwrap_or_default()
     }
 
+    /// The communicator's metrics under the unified
+    /// [`crate::obs::Registry`] naming surface: every live dtype pool's
+    /// data-plane counters, summed under `dataplane.*` — the in-process
+    /// mirror of [`crate::net::Endpoint::metrics`].
+    pub fn metrics(&self) -> crate::obs::Registry {
+        let mut reg = crate::obs::Registry::new();
+        reg.absorb_data_plane(&self.pool_counters::<f32>());
+        reg.absorb_data_plane(&self.pool_counters::<f64>());
+        reg.absorb_data_plane(&self.pool_counters::<i32>());
+        reg.absorb_data_plane(&self.pool_counters::<i64>());
+        reg
+    }
+
     /// **In-place** bucketed, pipelined multi-tensor Allreduce — the warm
     /// path for steady-state DDP training. Generic over the element type
     /// (`f32`, `f64`, `i32`, … — any [`Element`]).

@@ -33,6 +33,11 @@ pub struct DesReport {
     pub total_bytes: f64,
     /// Total bytes reduced by all processes.
     pub total_reduced: f64,
+    /// Slowest process's clock after each schedule step (monotone,
+    /// `step_finish.last() == makespan`). This is the predicted per-step
+    /// span surface `obs::attribute` diffs measured traces against:
+    /// step `k`'s span is `step_finish[k] − step_finish[k−1]`.
+    pub step_finish: Vec<f64>,
 }
 
 /// Simulate `schedule` moving vectors of `m_bytes` bytes under `params`.
@@ -172,6 +177,7 @@ fn simulate_impl(
     let mut total_reduced = 0.0;
     // Reduces already charged inside a streaming receive (per proc).
     let mut fused: Vec<Vec<(BufId, BufId)>> = vec![Vec::new(); p];
+    let mut step_finish: Vec<f64> = Vec::with_capacity(s.steps.len());
 
     for step in &s.steps {
         // Pass 1: sends are posted at the sender's current clock. A process
@@ -292,6 +298,7 @@ fn simulate_impl(
                 }
             }
         }
+        step_finish.push(clock.iter().cloned().fold(0.0, f64::max));
     }
 
     DesReport {
@@ -299,6 +306,7 @@ fn simulate_impl(
         finish: clock,
         total_bytes,
         total_reduced,
+        step_finish,
     }
 }
 

@@ -36,6 +36,7 @@
 //! | [`net::fault`] + [`net::membership`] | the elastic layer: heartbeat failure detector with capped-exponential retry backoff, epoch-tagged membership agreement, dense relabeling of survivors, shrink-to-P−1 resume ([`net::Endpoint::allreduce_elastic`]) |
 //! | [`net::service`] + [`cluster::service`] | the multi-tenant service layer: per-rank [`net::service::Service`] owning one warm mesh, [`net::service::CommHandle`] tenants with disjoint step-tag regions ([`net::wire::comm_tag`]), rank-0 grant sequencing, per-rank admission control, and the single-process twin [`cluster::ServiceCluster`] (mixed dtypes, differential oracle) |
 //! | [`topo`] | hierarchical (two-level) execution: node grouping ([`topo::NodeMap`]), binomial intra-node trees composed with any inner schedule into one verified [`sched::ProcSchedule`] ([`topo::compose_two_level`]), schedule relabeling through permutations, per-rank peer sets for sparse meshes |
+//! | [`obs`] | observability: lock-free per-rank span recorders ([`obs::Recorder`]), mesh-wide clock-aligned timeline merging ([`obs::Timeline`]), the unified metrics registry ([`obs::Registry`]), Chrome `trace_event` export ([`obs::chrome`]), and the predicted-vs-measured cost-model validator ([`obs::attribute`]) |
 //! | [`coordinator`] | the user-facing [`coordinator::Communicator`] API with automatic algorithm selection and metrics |
 //! | [`coordinator::bucket`] | DDP-style gradient bucketing: cost-model-sized packing with exact pack/unpack round-trips |
 //! | [`figures`] | regenerates every figure of the paper's evaluation section |
@@ -112,6 +113,57 @@
 //!     assert!(grads[rank][0].iter().all(|&x| x == want0));
 //! }
 //! ```
+//!
+//! ## Tracing a collective (`obs`)
+//!
+//! Every executor can record a per-rank span timeline — schedule steps,
+//! per-frame sends/receives with byte counts, fused-combine kernel spans —
+//! into lock-free fixed-capacity rings ([`obs::Recorder`], zero allocation
+//! on the hot path; a disabled trace costs one untaken branch). Merge the
+//! rings into one timeline, export it as Chrome `trace_event` JSON
+//! (viewable in Perfetto), and diff it against what the α–β–γ model
+//! *predicted* for the same schedule ([`obs::attribute`]):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use permallreduce::prelude::*;
+//! use permallreduce::algo::BuildCtx;
+//! use permallreduce::cluster::ExecOptions;
+//! use permallreduce::obs::{self, MeshTrace};
+//!
+//! let p = 4;
+//! let trace = Arc::new(MeshTrace::new(p, 4096));
+//! let exec = ClusterExecutor::with_options(ExecOptions {
+//!     trace: Some(trace.clone()),
+//!     ..ExecOptions::default()
+//! });
+//! let sched = Algorithm::new(AlgorithmKind::Ring, p).build(&BuildCtx::default()).unwrap();
+//! let inputs: Vec<Vec<f32>> = (0..p).map(|r| vec![r as f32; 1024]).collect();
+//! exec.execute(&sched, &inputs, ReduceOp::Sum).unwrap();
+//!
+//! // Merge the per-rank rings (shared clock → zero offsets) and export.
+//! let tl = trace.timeline();
+//! assert!(tl.events.iter().any(|e| e.kind == obs::EventKind::SendFrame));
+//! let json = obs::chrome::export(&tl);
+//! assert!(json.contains("traceEvents"));
+//!
+//! // Predicted vs measured, attributed per step.
+//! let m_bytes = 1024 * 4;
+//! let err = obs::attribute::attribute(
+//!     "ring", &sched, m_bytes, &NetParams::table2(), None, None, &tl, 0);
+//! assert_eq!(err.steps.len(), sched.steps.len());
+//! println!("{}", obs::attribute::render_report(&[err]));
+//! ```
+//!
+//! Over sockets, [`net::NetOptions::trace`] arms the same recorder on one
+//! rank's endpoint and [`net::Endpoint::collect_trace`] has rank 0 pull
+//! every rank's ring post-collective (a `TRACE` wire frame), align clocks
+//! from the probe's α estimate ([`obs::align_offsets`]), and return the
+//! merged mesh-wide timeline. [`obs::Registry`] is the matching metrics
+//! surface: `metrics()` on [`coordinator::Communicator`],
+//! [`net::Endpoint`], and both service twins returns one named
+//! counter/gauge/histogram registry absorbing
+//! [`cluster::DataPlaneCounters`] and [`cluster::ServiceStats`].
 //!
 //! ## Reduce-scatter, allgather, and `Avg`
 //!
@@ -575,6 +627,7 @@ pub mod algo;
 pub mod cost;
 pub mod des;
 pub mod cluster;
+pub mod obs;
 pub mod net;
 pub mod topo;
 pub mod runtime;
@@ -599,6 +652,7 @@ pub mod prelude {
     pub use crate::net::membership::Membership;
     pub use crate::net::service::{Service, ServiceOptions};
     pub use crate::net::{Endpoint, NetOptions};
+    pub use crate::obs::{MeshTrace, Recorder, Registry, Timeline};
     pub use crate::perm::{Group, Permutation};
     pub use crate::sched::{shard_range, Collective, ProcSchedule, ScheduleStats};
     pub use crate::topo::NodeMap;

@@ -114,6 +114,15 @@ pub struct NetOptions {
     /// quiet peers look heartbeat-silent. `None` (the default) is the
     /// pre-elastic transport, bit for bit.
     pub fault: Option<FaultPolicy>,
+    /// This rank's span recorder ([`crate::obs::Recorder`]): when set,
+    /// the data plane and transport record typed events (step, frame,
+    /// combine, grant, liveness) into its lock-free ring with zero
+    /// allocation, and [`Endpoint::collect_trace`] can later pull every
+    /// rank's ring to rank 0 and merge a mesh-wide
+    /// [`Timeline`](crate::obs::Timeline). `None` (the default) compiles
+    /// every emission site down to a branch on an empty `Option`, so the
+    /// executed data path — and the results — stay bit-exact.
+    pub trace: Option<Arc<crate::obs::Recorder>>,
 }
 
 impl Default for NetOptions {
@@ -127,6 +136,7 @@ impl Default for NetOptions {
             params: NetParams::table2(),
             peers: None,
             fault: None,
+            trace: None,
         }
     }
 }
@@ -190,6 +200,8 @@ pub struct Endpoint<T: WireElement = f32> {
     skew: Option<Vec<f64>>,
     /// Ties each skew measurement's `READY` pings to one call.
     skew_seq: u64,
+    /// This rank's span recorder (mirrors [`NetOptions::trace`]).
+    trace: Option<Arc<crate::obs::Recorder>>,
 }
 
 impl<T: WireElement> Endpoint<T> {
@@ -229,7 +241,17 @@ impl<T: WireElement> Endpoint<T> {
     fn from_mesh(mesh: bootstrap::Mesh, opts: NetOptions) -> Result<Endpoint<T>, ClusterError> {
         let (rank, p) = (mesh.rank, mesh.p);
         let pool = Arc::new(BlockPool::<T>::new());
-        let transport = NetTransport::start(mesh, pool.clone(), opts.recv_timeout, opts.fault)?;
+        let transport = NetTransport::start(
+            mesh,
+            pool.clone(),
+            opts.recv_timeout,
+            opts.fault,
+            opts.trace.clone(),
+        )?;
+        let mut plane = DataPlane::new(pool.clone());
+        if let Some(rec) = &opts.trace {
+            plane.set_trace(rec.clone());
+        }
         Ok(Endpoint {
             rank,
             p,
@@ -237,7 +259,7 @@ impl<T: WireElement> Endpoint<T> {
             params: opts.params,
             chunk_bytes: opts.chunk_bytes,
             openmpi_threshold: 10 * 1024,
-            plane: DataPlane::new(pool.clone()),
+            plane,
             pool,
             transport,
             step_base: 0,
@@ -247,6 +269,7 @@ impl<T: WireElement> Endpoint<T> {
             membership: Membership::full(p),
             skew: None,
             skew_seq: 0,
+            trace: opts.trace,
         })
     }
 
@@ -264,6 +287,14 @@ impl<T: WireElement> Endpoint<T> {
         self.params
     }
 
+    /// The cumulative step-tag cursor: the wire tag the next collective's
+    /// step 0 will carry. Capture it immediately before a call to anchor
+    /// [`crate::obs::attribute::attribute`]'s `step_off` at that call's
+    /// span tags.
+    pub fn step_cursor(&self) -> usize {
+        self.step_base
+    }
+
     /// Set (or clear) the chunked-streaming budget, bytes — identical
     /// semantics to [`crate::cluster::PersistentCluster::set_chunk_bytes`].
     /// Must be set identically on every rank (SPMD contract): the budget
@@ -276,6 +307,69 @@ impl<T: WireElement> Endpoint<T> {
     /// chunked frames, …).
     pub fn counters(&self) -> crate::cluster::CounterSnapshot {
         self.pool.counters().snapshot()
+    }
+
+    /// This rank's metrics under the unified [`crate::obs::Registry`]
+    /// naming surface: the data-plane counters, plus per-event-kind
+    /// counts and span-ring occupancy when tracing
+    /// ([`NetOptions::trace`]) is armed.
+    pub fn metrics(&self) -> crate::obs::Registry {
+        let mut reg = crate::obs::Registry::new();
+        reg.absorb_data_plane(&self.counters());
+        if let Some(rec) = &self.trace {
+            reg.absorb_events(&rec.events());
+            reg.add("obs.ring.dropped", rec.dropped());
+        }
+        reg
+    }
+
+    /// Pull every rank's span ring to rank 0 and merge one clock-aligned,
+    /// mesh-wide [`Timeline`](crate::obs::Timeline).
+    ///
+    /// Collective: every rank calls it at the same program point, after
+    /// the collectives of interest (a `TRACE` frame queued behind bulk
+    /// traffic would bias the clock alignment). Non-zero ranks upload
+    /// their drained ring to rank 0 and return `Ok(None)`; rank 0 waits
+    /// for each live peer's upload, estimates per-sender clock offsets
+    /// from the upload's send/arrival stamps and the current α
+    /// ([`crate::obs::align_offsets`]), merges, and returns
+    /// `Ok(Some(timeline))`. Every rank's ring is reset on return, so
+    /// back-to-back collect rounds never duplicate spans. Ranks retired
+    /// by a membership shrink contribute nothing (their links are gone);
+    /// their recorded spans up to the shrink are lost with them.
+    ///
+    /// Errors when [`NetOptions::trace`] is unarmed, or (rank 0) when a
+    /// live peer's upload misses the receive-timeout deadline.
+    pub fn collect_trace(&mut self) -> Result<Option<crate::obs::Timeline>, ClusterError> {
+        let rec = self.trace.clone().ok_or_else(|| {
+            ClusterError::BadInput(
+                "collect_trace requires NetOptions::trace — tracing is not armed".to_string(),
+            )
+        })?;
+        if self.rank != 0 {
+            let events = rec.events();
+            self.transport.post_trace(0, rec.now_ns(), &events);
+            rec.reset();
+            return Ok(None);
+        }
+        let mut per_rank: Vec<Vec<crate::obs::Event>> = vec![Vec::new(); self.p];
+        let mut offsets = vec![0i64; self.p];
+        per_rank[0] = rec.events();
+        let alpha_ns = (self.params.alpha * 1e9) as u64;
+        let deadline = Instant::now() + self.transport.timeout();
+        for &peer in self.membership.live().iter().filter(|&&r| r != 0) {
+            let (sent_at_ns, events, at) = self.transport.wait_trace(peer, deadline)?;
+            // The arrival `Instant` was stamped in the reader thread;
+            // convert it into this recorder's ns domain by subtracting
+            // the time elapsed since.
+            let recv_ns = rec
+                .now_ns()
+                .saturating_sub(at.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+            offsets[peer] = crate::obs::align_offsets(&[sent_at_ns], &[recv_ns], alpha_ns)[0];
+            per_rank[peer] = events;
+        }
+        rec.reset();
+        Ok(Some(crate::obs::Timeline::merge(&per_rank, &offsets)))
     }
 
     /// Measure α/β/γ over the live mesh and adopt the result on **every**
@@ -645,7 +739,11 @@ impl<T: WireElement> Endpoint<T> {
         let lens: Vec<usize> = tensors.iter().map(Vec::len).collect();
         let elem_bytes = std::mem::size_of::<T>();
         let total_bytes = lens.iter().sum::<usize>() * elem_bytes;
-        let bucket_bytes = bucket::optimal_bucket_bytes(self.p, &self.params);
+        // Size buckets under this dtype's measured γ (the whole-job size
+        // class picks the cell): an f64 job and an f32 job of the same
+        // byte volume can legitimately choose different bucket caps.
+        let bucket_bytes =
+            bucket::optimal_bucket_bytes(self.p, &self.params_for(total_bytes.max(1)));
         let plan = bucket::plan(&lens, elem_bytes, bucket_bytes);
         let mut max_segments = 1u32;
         if self.p > 1 {
@@ -862,6 +960,14 @@ impl<T: WireElement> Endpoint<T> {
                 }
                 self.transport.retire_peers(&dead);
                 self.transport.set_epoch(next.epoch);
+                if let Some(tr) = &self.trace {
+                    tr.record(
+                        crate::obs::EventKind::EpochShrink,
+                        next.epoch,
+                        crate::obs::NO_PEER,
+                        dead.len() as u64,
+                    );
+                }
                 self.membership = next;
             } else {
                 let vote = wire::EpochMsg {
@@ -905,6 +1011,14 @@ impl<T: WireElement> Endpoint<T> {
                     .collect();
                 self.transport.retire_peers(&dead);
                 self.transport.set_epoch(next.epoch);
+                if let Some(tr) = &self.trace {
+                    tr.record(
+                        crate::obs::EventKind::EpochShrink,
+                        next.epoch,
+                        crate::obs::NO_PEER,
+                        dead.len() as u64,
+                    );
+                }
                 self.membership = next;
             }
         }

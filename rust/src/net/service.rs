@@ -172,6 +172,11 @@ pub struct Service<T: WireElement = f32> {
     listener_addr: Option<std::net::SocketAddr>,
     socket_count: usize,
     engine: Option<JoinHandle<()>>,
+    /// Shared with the engine's data plane — [`Service::metrics`] reads
+    /// the counters without touching the engine thread.
+    pool: Arc<BlockPool<T>>,
+    /// This rank's span recorder (mirrors [`NetOptions::trace`]).
+    trace: Option<Arc<crate::obs::Recorder>>,
 }
 
 impl<T: WireElement> Service<T> {
@@ -212,7 +217,13 @@ impl<T: WireElement> Service<T> {
         // Elastic shrink cannot run under the service engine (it owns
         // the transport and the grant order assumes fixed membership),
         // so the failure detector stays disarmed regardless of opts.
-        let transport = NetTransport::start(mesh, pool.clone(), opts.net.recv_timeout, None)?;
+        let transport = NetTransport::start(
+            mesh,
+            pool.clone(),
+            opts.net.recv_timeout,
+            None,
+            opts.net.trace.clone(),
+        )?;
         let listener_addr = transport.listener_addr();
         let socket_count = transport.socket_count();
         let (tx, rx) = mpsc::channel::<Submission<T>>();
@@ -224,11 +235,15 @@ impl<T: WireElement> Service<T> {
             submit: Mutex::new(Some(tx)),
             next_comm: AtomicU32::new(1),
         });
+        let mut plane = DataPlane::new(pool.clone());
+        if let Some(rec) = &opts.net.trace {
+            plane.set_trace(rec.clone());
+        }
         let mut engine = Engine {
             rank,
             p,
             transport,
-            plane: DataPlane::new(pool),
+            plane,
             scheds: ServiceSchedules::new(opts.net.params),
             hints: HashMap::new(),
             chunk_bytes: opts.net.chunk_bytes,
@@ -237,6 +252,7 @@ impl<T: WireElement> Service<T> {
             rx,
             admission: shared.admission.clone(),
             stats: shared.stats.clone(),
+            trace: opts.net.trace.clone(),
         };
         let handle = std::thread::Builder::new()
             .name(format!("net-svc-{rank}"))
@@ -245,7 +261,15 @@ impl<T: WireElement> Service<T> {
                 proc: rank,
                 detail: format!("spawning service engine: {e}"),
             })?;
-        Ok(Service { rank, shared, listener_addr, socket_count, engine: Some(handle) })
+        Ok(Service {
+            rank,
+            shared,
+            listener_addr,
+            socket_count,
+            engine: Some(handle),
+            pool,
+            trace: opts.net.trace,
+        })
     }
 
     /// This rank's id.
@@ -275,6 +299,22 @@ impl<T: WireElement> Service<T> {
     /// This rank's monotonic service counters.
     pub fn stats(&self) -> Arc<ServiceStats> {
         self.shared.stats.clone()
+    }
+
+    /// This rank's metrics under the unified [`crate::obs::Registry`]
+    /// naming surface: the service counters (`service.*`), the shared
+    /// data-plane counters (`dataplane.*`), and — when
+    /// [`NetOptions::trace`] is armed — per-event-kind counts and
+    /// span-ring occupancy.
+    pub fn metrics(&self) -> crate::obs::Registry {
+        let mut reg = crate::obs::Registry::new();
+        reg.absorb_service(self.shared.stats.snapshot());
+        reg.absorb_data_plane(&self.pool.counters().snapshot());
+        if let Some(rec) = &self.trace {
+            reg.absorb_events(&rec.events());
+            reg.add("obs.ring.dropped", rec.dropped());
+        }
+        reg
     }
 
     /// Mint the next communicator. Ids are assigned locally in call
@@ -488,6 +528,9 @@ struct Engine<T: WireElement> {
     rx: Receiver<Submission<T>>,
     admission: Arc<Admission>,
     stats: Arc<ServiceStats>,
+    /// Span recorder for grant-sequencing events (the data plane holds
+    /// its own clone for step/frame/combine spans).
+    trace: Option<Arc<crate::obs::Recorder>>,
 }
 
 impl<T: WireElement> Engine<T> {
@@ -511,6 +554,11 @@ impl<T: WireElement> Engine<T> {
                     self.transport.post_grant(peer, sub.comm, seq);
                 }
             }
+            // Rank 0 grants itself implicitly: arrival order is the
+            // global order, so acquisition is immediate.
+            if let Some(tr) = &self.trace {
+                tr.record(crate::obs::EventKind::GrantAcquire, seq, sub.comm, 0);
+            }
             self.execute(sub);
         }
     }
@@ -526,6 +574,9 @@ impl<T: WireElement> Engine<T> {
         // never admitted on rank 0 and will never be granted — fail them
         // instead of spinning forever.
         let mut closed_at: Option<Instant> = None;
+        // One `GrantWait` per wait episode (not per 50 ms tick), closed
+        // by the matching `GrantAcquire`.
+        let mut wait_open = false;
         loop {
             closed |= self.drain_local(&mut local);
             if closed {
@@ -542,6 +593,12 @@ impl<T: WireElement> Engine<T> {
                     return;
                 }
             }
+            if !wait_open {
+                if let Some(tr) = &self.trace {
+                    tr.record(crate::obs::EventKind::GrantWait, 0, crate::obs::NO_PEER, 0);
+                }
+                wait_open = true;
+            }
             match self.transport.wait_grant(Instant::now() + GRANT_TICK) {
                 Err(ClusterError::RecvTimeout { .. }) => continue,
                 Err(e) => {
@@ -556,7 +613,11 @@ impl<T: WireElement> Engine<T> {
                     }
                     return;
                 }
-                Ok((comm, _seq)) => {
+                Ok((comm, seq)) => {
+                    if let Some(tr) = &self.trace {
+                        tr.record(crate::obs::EventKind::GrantAcquire, seq, comm, 0);
+                    }
+                    wait_open = false;
                     closed_at = None;
                     if self.poisoned.contains(&comm) {
                         // Consume the grant; the matching local

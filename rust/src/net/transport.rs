@@ -77,6 +77,14 @@ pub(super) enum Event<T: WireElement> {
     Epoch(EpochMsg),
     /// A service-mode dispatch `GRANT` from the rank-0 sequencer.
     Grant { comm: u32, seq: u64 },
+    /// A `TRACE` upload: one rank's drained span ring, stamped with the
+    /// local arrival time so rank 0 can offset-align the remote clock.
+    Trace {
+        from: usize,
+        sent_at_ns: u64,
+        events: Vec<crate::obs::Event>,
+        at: Instant,
+    },
     /// Clean EOF from `from`.
     Closed { from: usize },
     /// Torn frame / decode failure / I/O error on the link to `from`.
@@ -109,6 +117,11 @@ pub struct NetTransport<T: WireElement> {
     /// emits them in sequence order over one TCP link, so arrival order
     /// here **is** sequence order.
     grant_msgs: std::collections::VecDeque<(u32, u64)>,
+    /// `TRACE` uploads awaiting [`NetTransport::wait_trace`].
+    trace_msgs: Vec<(usize, u64, Vec<crate::obs::Event>, Instant)>,
+    /// This rank's span recorder ([`crate::obs`]): liveness transitions
+    /// (peer up/down, retirement) are recorded here; `None` = tracing off.
+    trace: Option<Arc<crate::obs::Recorder>>,
     link: Vec<Link>,
     timeout: Duration,
     /// First valid step tag of the current call (tags below it are
@@ -148,6 +161,7 @@ impl<T: WireElement> NetTransport<T> {
         pool: Arc<BlockPool<T>>,
         timeout: Duration,
         fault: Option<FaultPolicy>,
+        trace: Option<Arc<crate::obs::Recorder>>,
     ) -> Result<NetTransport<T>, ClusterError> {
         let (rank, p) = (mesh.rank, mesh.p);
         let listener = mesh.listener;
@@ -210,6 +224,13 @@ impl<T: WireElement> NetTransport<T> {
             );
         }
         let connected: Vec<bool> = streams.iter().map(|s| s.is_some()).collect();
+        if let Some(tr) = &trace {
+            for (peer, up) in connected.iter().enumerate() {
+                if *up {
+                    tr.record(crate::obs::EventKind::PeerUp, 0, peer as u32, 0);
+                }
+            }
+        }
         let (mut hb_stop, mut hb_join) = (None, None);
         if let Some(pol) = fault {
             let stop = Arc::new(AtomicBool::new(false));
@@ -234,6 +255,8 @@ impl<T: WireElement> NetTransport<T> {
             ready_msgs: Vec::new(),
             epoch_msgs: Vec::new(),
             grant_msgs: std::collections::VecDeque::new(),
+            trace_msgs: Vec::new(),
+            trace,
             link: (0..p).map(|_| Link::Up).collect(),
             timeout,
             call_base: 0,
@@ -332,6 +355,43 @@ impl<T: WireElement> NetTransport<T> {
         self.post(to, wire::encode_grant(self.rank, comm, seq));
     }
 
+    /// Queue this rank's drained span ring to `to` (the trace-pull
+    /// response; `sent_at_ns` is the sender's local recorder stamp at
+    /// encode time, the clock-alignment anchor).
+    pub(super) fn post_trace(&self, to: usize, sent_at_ns: u64, events: &[crate::obs::Event]) {
+        self.post(to, wire::encode_trace(self.rank, sent_at_ns, events));
+    }
+
+    /// Wait until `deadline` for the `TRACE` upload from `from`,
+    /// returning `(sent_at_ns, events, local arrival time)`. Uploads from
+    /// other ranks stay stashed for their own waits.
+    pub(super) fn wait_trace(
+        &mut self,
+        from: usize,
+        deadline: Instant,
+    ) -> Result<(u64, Vec<crate::obs::Event>, Instant), ClusterError> {
+        loop {
+            if let Some(i) = self.trace_msgs.iter().position(|(f, _, _, _)| *f == from) {
+                let (_, sent_at_ns, events, at) = self.trace_msgs.remove(i);
+                return Ok((sent_at_ns, events, at));
+            }
+            if matches!(self.link[from], Link::Closed | Link::Bad(_)) {
+                return Err(self.fail_from(from, 0));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ClusterError::RecvTimeout {
+                    proc: self.rank,
+                    step: 0,
+                    from,
+                });
+            }
+            if let Ok(ev) = self.inbox.recv_timeout(remaining) {
+                self.absorb(ev);
+            }
+        }
+    }
+
     /// Wait until `deadline` for the next dispatch grant (in rank 0's
     /// sequence order) and return its `(comm, seq)`.
     pub(super) fn wait_grant(&mut self, deadline: Instant) -> Result<(u32, u64), ClusterError> {
@@ -388,6 +448,11 @@ impl<T: WireElement> NetTransport<T> {
         for &d in dead {
             if d == self.rank || d >= self.p {
                 continue;
+            }
+            if !self.retired[d] {
+                if let Some(tr) = &self.trace {
+                    tr.record(crate::obs::EventKind::PeerDown, self.epoch(), d as u32, 0);
+                }
             }
             self.retired[d] = true;
             self.link[d] = Link::Closed;
@@ -474,14 +539,29 @@ impl<T: WireElement> NetTransport<T> {
                 self.grant_msgs.push_back((comm, seq));
                 None
             }
+            Event::Trace {
+                from,
+                sent_at_ns,
+                events,
+                at,
+            } => {
+                self.trace_msgs.push((from, sent_at_ns, events, at));
+                None
+            }
             Event::Closed { from } => {
                 if !self.retired[from] {
+                    if let Some(tr) = &self.trace {
+                        tr.record(crate::obs::EventKind::PeerDown, self.epoch(), from as u32, 0);
+                    }
                     self.link[from] = Link::Closed;
                 }
                 None
             }
             Event::Bad { from, detail } => {
                 if !self.retired[from] {
+                    if let Some(tr) = &self.trace {
+                        tr.record(crate::obs::EventKind::PeerDown, self.epoch(), from as u32, 0);
+                    }
                     self.link[from] = Link::Bad(detail);
                 }
                 None
@@ -912,6 +992,24 @@ fn reader_loop<T: WireElement>(
                         }
                     } else {
                         Event::Grant { comm, seq }
+                    }
+                }
+                Err(detail) => Event::Bad { from: peer, detail },
+            },
+            wire::KIND_TRACE => match wire::decode_trace(&body) {
+                Ok((f, sent_at_ns, evs)) => {
+                    if f != peer {
+                        Event::Bad {
+                            from: peer,
+                            detail: format!("TRACE claims sender {f} on the link to {peer}"),
+                        }
+                    } else {
+                        Event::Trace {
+                            from: f,
+                            sent_at_ns,
+                            events: evs,
+                            at: Instant::now(),
+                        }
                     }
                 }
                 Err(detail) => Event::Bad { from: peer, detail },

@@ -34,6 +34,10 @@
 //!                 phase 1 = commit: everyone keeps its result;
 //!                 phase 2 = decide: ranks = new live set, epoch bumped)
 //!   GRANT  (10): u32 from | u32 comm | u64 seq       (service-mode dispatch)
+//!   TRACE  (11): u32 from | u64 sent_at_ns | u32 n | n × 30-byte events
+//!                (one rank's span ring, pulled to rank 0 post-collective;
+//!                 each event is u64 t_ns | u16 kind | u64 step | u32 peer
+//!                 | u64 bytes, LE — see `crate::obs::Event`)
 //! ```
 //!
 //! ## Communicator-partitioned step tags
@@ -85,6 +89,7 @@ pub const KIND_HEARTBEAT: u8 = 7;
 pub const KIND_READY: u8 = 8;
 pub const KIND_EPOCH: u8 = 9;
 pub const KIND_GRANT: u8 = 10;
+pub const KIND_TRACE: u8 = 11;
 
 // ------------------------------------------------- communicator tags --
 
@@ -702,6 +707,64 @@ pub fn decode_grant(body: &[u8]) -> Result<(usize, u32, u64), String> {
     Ok((from, comm, seq))
 }
 
+// --------------------------------------------------------------- trace --
+
+/// Bytes of one serialized [`crate::obs::Event`] on the wire.
+const TRACE_EVENT_BYTES: usize = 30;
+
+/// Encode one rank's drained span ring for the post-collective trace
+/// pull. `sent_at_ns` is the sender's local monotonic stamp at encode
+/// time — rank 0 pairs it with its own receive stamp and the probed α to
+/// offset-align the remote clock ([`crate::obs::align_offsets`]).
+pub fn encode_trace(from: usize, sent_at_ns: u64, events: &[crate::obs::Event]) -> Vec<u8> {
+    let mut out = frame_buf(17 + events.len() * TRACE_EVENT_BYTES);
+    out.push(KIND_TRACE);
+    out.extend_from_slice(&(from as u32).to_le_bytes());
+    out.extend_from_slice(&sent_at_ns.to_le_bytes());
+    out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    for e in events {
+        out.extend_from_slice(&e.t_ns.to_le_bytes());
+        out.extend_from_slice(&(e.kind as u16).to_le_bytes());
+        out.extend_from_slice(&e.step.to_le_bytes());
+        out.extend_from_slice(&e.peer.to_le_bytes());
+        out.extend_from_slice(&e.bytes.to_le_bytes());
+    }
+    finish_frame(out)
+}
+
+/// `(from, sent_at_ns, events)` of a `TRACE` body. An event with an
+/// unknown kind tag is a clean error (a newer peer's taxonomy, or
+/// corruption) rather than a misfiled span.
+pub fn decode_trace(body: &[u8]) -> Result<(usize, u64, Vec<crate::obs::Event>), String> {
+    if body.len() < 17 {
+        return Err("TRACE truncated".into());
+    }
+    let from = u32::from_le_bytes(body[1..5].try_into().expect("4 bytes")) as usize;
+    let sent_at_ns = u64::from_le_bytes(body[5..13].try_into().expect("8 bytes"));
+    let n = u32::from_le_bytes(body[13..17].try_into().expect("4 bytes")) as usize;
+    if body.len() != 17 + n * TRACE_EVENT_BYTES {
+        return Err(format!(
+            "TRACE claims {n} events but carries {} bytes",
+            body.len()
+        ));
+    }
+    let mut events = Vec::with_capacity(n);
+    for i in 0..n {
+        let b = &body[17 + i * TRACE_EVENT_BYTES..17 + (i + 1) * TRACE_EVENT_BYTES];
+        let kind_tag = u16::from_le_bytes(b[8..10].try_into().expect("2 bytes"));
+        let kind = crate::obs::EventKind::from_u16(kind_tag)
+            .ok_or_else(|| format!("TRACE event {i} has unknown kind {kind_tag}"))?;
+        events.push(crate::obs::Event {
+            t_ns: u64::from_le_bytes(b[..8].try_into().expect("8 bytes")),
+            kind,
+            step: u64::from_le_bytes(b[10..18].try_into().expect("8 bytes")),
+            peer: u32::from_le_bytes(b[18..22].try_into().expect("4 bytes")),
+            bytes: u64::from_le_bytes(b[22..30].try_into().expect("8 bytes")),
+        });
+    }
+    Ok((from, sent_at_ns, events))
+}
+
 fn push_str(body: &mut Vec<u8>, s: &str) {
     body.extend_from_slice(&(s.len() as u16).to_le_bytes());
     body.extend_from_slice(s.as_bytes());
@@ -822,6 +885,59 @@ mod tests {
         assert_eq!(body[0], KIND_GRANT);
         assert_eq!(decode_grant(&body).unwrap(), (0, 12, 3456));
         assert!(decode_grant(&body[..9]).is_err());
+    }
+
+    #[test]
+    fn trace_round_trips_and_rejects_corruption() {
+        use crate::obs::{Event, EventKind, NO_PEER};
+        let events = vec![
+            Event {
+                t_ns: 12_345,
+                kind: EventKind::StepBegin,
+                step: 3,
+                peer: NO_PEER,
+                bytes: 0,
+            },
+            Event {
+                t_ns: 12_900,
+                kind: EventKind::SendFrame,
+                step: 3,
+                peer: 2,
+                bytes: 4096,
+            },
+            Event {
+                t_ns: 13_050,
+                kind: EventKind::CombineEnd,
+                step: 3,
+                peer: NO_PEER,
+                bytes: 2048,
+            },
+        ];
+        let enc = encode_trace(5, 999_999, &events);
+        let body = read_frame(&mut enc.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(body[0], KIND_TRACE);
+        let (from, sent_at, got) = decode_trace(&body).unwrap();
+        assert_eq!(from, 5);
+        assert_eq!(sent_at, 999_999);
+        assert_eq!(got, events);
+
+        // Empty ring round-trips too (a rank that recorded nothing).
+        let enc = encode_trace(0, 7, &[]);
+        let body = read_frame(&mut enc.as_slice(), MAX_BODY_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(decode_trace(&body).unwrap(), (0, 7, Vec::new()));
+
+        // Truncation and an unknown kind tag are clean errors.
+        let enc = encode_trace(5, 999_999, &events);
+        let body = &enc[4..];
+        assert!(decode_trace(&body[..body.len() - 1]).is_err());
+        assert!(decode_trace(&body[..10]).is_err());
+        let mut forged = body.to_vec();
+        forged[17 + 8..17 + 10].copy_from_slice(&u16::MAX.to_le_bytes());
+        assert!(decode_trace(&forged).unwrap_err().contains("unknown kind"));
     }
 
     #[test]

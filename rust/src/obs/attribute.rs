@@ -1,0 +1,420 @@
+//! Predicted-vs-measured cost-model validation.
+//!
+//! [`attribute`] replays the schedule a trace actually executed through
+//! the DES under the (measured) α–β–γ parameters, diffs the predicted
+//! per-step spans against the measured ones from the merged
+//! [`Timeline`], and attributes each step's gap to **latency**,
+//! **bandwidth**, **compute**, or **arrival skew**:
+//!
+//! * the measured *skew* component is the spread of `StepBegin` stamps
+//!   across ranks (Proficz's arrival-pattern imbalance, visible
+//!   directly);
+//! * the measured *compute* excess is the combine-span time beyond the
+//!   `γ·bytes` the model charged for the same bytes;
+//! * the remainder is charged to the wire — *bandwidth* when the step's
+//!   per-message `β·bytes` dominates its `α` envelope, *latency*
+//!   otherwise.
+//!
+//! The per-(kind, P, size) [`ModelError`] reports are what
+//! `examples/net_allreduce.rs` and the soak bench print and CI uploads —
+//! the substrate for trusting (or fixing) every cost-model-driven
+//! selection the coordinator makes.
+
+use super::{EventKind, Timeline};
+use crate::cost::NetParams;
+use crate::des;
+use crate::sched::ProcSchedule;
+
+/// Where a step's predicted-vs-measured gap was attributed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GapCause {
+    Latency,
+    Bandwidth,
+    Compute,
+    ArrivalSkew,
+}
+
+impl GapCause {
+    pub fn label(self) -> &'static str {
+        match self {
+            GapCause::Latency => "latency",
+            GapCause::Bandwidth => "bandwidth",
+            GapCause::Compute => "compute",
+            GapCause::ArrivalSkew => "arrival-skew",
+        }
+    }
+}
+
+/// One schedule step's predicted-vs-measured diff.
+#[derive(Clone, Debug)]
+pub struct StepGap {
+    /// Local step index (0-based within the schedule).
+    pub step: usize,
+    /// DES-predicted span of this step, seconds.
+    pub predicted_s: f64,
+    /// Measured span: earliest `StepBegin` to latest `StepEnd`, seconds.
+    pub measured_s: f64,
+    /// `measured_s − predicted_s` (negative = faster than modeled).
+    pub gap_s: f64,
+    /// Cross-rank spread of `StepBegin` stamps, seconds.
+    pub skew_s: f64,
+    /// Slowest rank's summed combine-span time this step, seconds.
+    pub compute_s: f64,
+    /// `γ ·` the bytes that rank actually combined, seconds.
+    pub predicted_compute_s: f64,
+    /// Bytes put on the wire this step (summed `SendFrame`s).
+    pub wire_bytes: u64,
+    pub cause: GapCause,
+}
+
+/// Model error for one executed (kind, P, size) cell.
+#[derive(Clone, Debug)]
+pub struct ModelError {
+    /// Algorithm/schedule label (e.g. `bw-optimal`).
+    pub kind: String,
+    pub p: usize,
+    pub m_bytes: usize,
+    /// DES makespan under the supplied parameters, seconds.
+    pub predicted_s: f64,
+    /// Measured makespan: earliest `StepBegin` to latest `StepEnd`
+    /// across all steps, seconds.
+    pub measured_s: f64,
+    pub steps: Vec<StepGap>,
+}
+
+impl ModelError {
+    /// `measured / predicted` (∞-safe: 0 when nothing was predicted).
+    pub fn error_ratio(&self) -> f64 {
+        if self.predicted_s > 0.0 {
+            self.measured_s / self.predicted_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn max_abs_gap_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.gap_s.abs()).fold(0.0, f64::max)
+    }
+}
+
+/// Diff predicted vs measured per-step spans for one executed schedule.
+///
+/// * `label` — the cell's algorithm name for the report.
+/// * `params` — the α–β–γ the run was priced with (measured by the
+///   probe on live meshes, Table 2 in-process).
+/// * `chunk_bytes` / `skew` — replay under `des::simulate_skewed` when a
+///   measured arrival skew is supplied, else `des::simulate_chunked`
+///   (which is `des::simulate` when `chunk_bytes` is `None`) — the same
+///   simulators the coordinator prices schedules with.
+/// * `tl` — the merged timeline of exactly one execution of `s`.
+/// * `step_off` — the wire step tag of the schedule's step 0 (an
+///   endpoint's cumulative `step_base` at call time; 0 for a fresh
+///   in-process executor).
+///
+/// Steps with no recorded events (trace ring overflow) report zero
+/// measured time and keep their predicted span, so the gap shows up
+/// negative rather than silently vanishing.
+pub fn attribute(
+    label: &str,
+    s: &ProcSchedule,
+    m_bytes: usize,
+    params: &NetParams,
+    chunk_bytes: Option<usize>,
+    skew: Option<&[f64]>,
+    tl: &Timeline,
+    step_off: u64,
+) -> ModelError {
+    let rep = match skew {
+        Some(sk) => des::simulate_skewed(s, m_bytes, params, sk),
+        None => des::simulate_chunked(s, m_bytes, params, chunk_bytes),
+    };
+    let k_steps = s.steps.len();
+    debug_assert_eq!(rep.step_finish.len(), k_steps);
+
+    let mut steps = Vec::with_capacity(k_steps);
+    let mut run_begin = i64::MAX;
+    let mut run_end = i64::MIN;
+    let mut prev_finish = 0.0f64;
+    for k in 0..k_steps {
+        let tag = step_off + k as u64;
+        let predicted_s = (rep.step_finish.get(k).copied().unwrap_or(prev_finish)
+            - prev_finish)
+            .max(0.0);
+        prev_finish = rep.step_finish.get(k).copied().unwrap_or(prev_finish);
+
+        let mut min_begin = i64::MAX;
+        let mut max_begin = i64::MIN;
+        let mut max_end = i64::MIN;
+        let mut wire_bytes = 0u64;
+        // Per-rank open combine stamp + (span sum, byte sum) accumulators.
+        let mut open: Vec<(u32, i64)> = Vec::new();
+        let mut combined: Vec<(u32, i64, u64)> = Vec::new();
+        for e in tl.events.iter().filter(|e| e.step == tag) {
+            match e.kind {
+                EventKind::StepBegin => {
+                    min_begin = min_begin.min(e.t_ns);
+                    max_begin = max_begin.max(e.t_ns);
+                }
+                EventKind::StepEnd => max_end = max_end.max(e.t_ns),
+                EventKind::SendFrame => wire_bytes += e.bytes,
+                EventKind::CombineBegin => open.push((e.rank, e.t_ns)),
+                EventKind::CombineEnd => {
+                    if let Some(i) = open.iter().rposition(|&(r, _)| r == e.rank) {
+                        let (_, t0) = open.swap_remove(i);
+                        let span = (e.t_ns - t0).max(0);
+                        match combined.iter_mut().find(|(r, _, _)| *r == e.rank) {
+                            Some(acc) => {
+                                acc.1 += span;
+                                acc.2 += e.bytes;
+                            }
+                            None => combined.push((e.rank, span, e.bytes)),
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        let have_span = min_begin != i64::MAX && max_end != i64::MIN;
+        let measured_s = if have_span {
+            (max_end - min_begin).max(0) as f64 / 1e9
+        } else {
+            0.0
+        };
+        let skew_s = if max_begin != i64::MIN && min_begin != i64::MAX {
+            (max_begin - min_begin).max(0) as f64 / 1e9
+        } else {
+            0.0
+        };
+        // The slowest rank's combine time bounds the step's compute cost,
+        // exactly as the DES's per-process clocks would charge it.
+        let (compute_s, combined_bytes) = combined
+            .iter()
+            .map(|&(_, span, bytes)| (span as f64 / 1e9, bytes))
+            .fold((0.0f64, 0u64), |a, b| if b.0 > a.0 { b } else { a });
+        let predicted_compute_s = params.gamma * combined_bytes as f64;
+
+        let gap_s = measured_s - predicted_s;
+        let compute_excess = (compute_s - predicted_compute_s).max(0.0);
+        let wire_rest = (gap_s - skew_s - compute_excess).max(0.0);
+        // Classify the wire remainder by what the model says dominates a
+        // message of this step's size.
+        let n_msgs = tl
+            .events
+            .iter()
+            .filter(|e| e.step == tag && e.kind == EventKind::SendFrame)
+            .count()
+            .max(1);
+        let msg_bytes = wire_bytes as f64 / n_msgs as f64;
+        let wire_cause = if params.beta * msg_bytes >= params.alpha {
+            GapCause::Bandwidth
+        } else {
+            GapCause::Latency
+        };
+        // Deterministic argmax (ties: skew > compute > wire).
+        let mut cause = GapCause::ArrivalSkew;
+        let mut best = skew_s;
+        if compute_excess > best {
+            cause = GapCause::Compute;
+            best = compute_excess;
+        }
+        if wire_rest > best {
+            cause = wire_cause;
+        }
+
+        if have_span {
+            run_begin = run_begin.min(min_begin);
+            run_end = run_end.max(max_end);
+        }
+        steps.push(StepGap {
+            step: k,
+            predicted_s,
+            measured_s,
+            gap_s,
+            skew_s,
+            compute_s,
+            predicted_compute_s,
+            wire_bytes,
+            cause,
+        });
+    }
+
+    ModelError {
+        kind: label.to_string(),
+        p: s.p,
+        m_bytes,
+        predicted_s: rep.makespan,
+        measured_s: if run_begin < run_end {
+            (run_end - run_begin) as f64 / 1e9
+        } else {
+            0.0
+        },
+        steps,
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s.abs() >= 1.0 {
+        format!("{s:.3}s")
+    } else if s.abs() >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Human-readable model-error report: one header line per (kind, P,
+/// size) cell and one line per step with its attribution.
+pub fn render_report(errors: &[ModelError]) -> String {
+    let mut out = String::new();
+    out.push_str("== cost-model validation: predicted vs measured ==\n");
+    for e in errors {
+        out.push_str(&format!(
+            "{} P={} {} B: predicted {} measured {} ({:.2}x, worst step gap {})\n",
+            e.kind,
+            e.p,
+            e.m_bytes,
+            fmt_s(e.predicted_s),
+            fmt_s(e.measured_s),
+            e.error_ratio(),
+            fmt_s(e.max_abs_gap_s()),
+        ));
+        for st in &e.steps {
+            out.push_str(&format!(
+                "  step {:>3}: predicted {:>10} measured {:>10} gap {:>10} -> {} \
+                 (skew {}, combine {} vs {} modeled, {} wire B)\n",
+                st.step,
+                fmt_s(st.predicted_s),
+                fmt_s(st.measured_s),
+                fmt_s(st.gap_s),
+                st.cause.label(),
+                fmt_s(st.skew_s),
+                fmt_s(st.compute_s),
+                fmt_s(st.predicted_compute_s),
+                st.wire_bytes,
+            ));
+        }
+    }
+    out
+}
+
+/// The same report as machine-readable JSON (CI artifact).
+pub fn report_json(errors: &[ModelError]) -> String {
+    let mut cells = String::new();
+    for e in errors {
+        let mut steps = String::new();
+        for st in &e.steps {
+            if !steps.is_empty() {
+                steps.push_str(",\n");
+            }
+            steps.push_str(&format!(
+                "        {{\"step\": {}, \"predicted_s\": {:.6e}, \"measured_s\": {:.6e}, \
+                 \"gap_s\": {:.6e}, \"skew_s\": {:.6e}, \"compute_s\": {:.6e}, \
+                 \"wire_bytes\": {}, \"cause\": \"{}\"}}",
+                st.step,
+                st.predicted_s,
+                st.measured_s,
+                st.gap_s,
+                st.skew_s,
+                st.compute_s,
+                st.wire_bytes,
+                st.cause.label()
+            ));
+        }
+        if !cells.is_empty() {
+            cells.push_str(",\n");
+        }
+        cells.push_str(&format!(
+            "    {{\"kind\": \"{}\", \"p\": {}, \"m_bytes\": {}, \
+             \"predicted_s\": {:.6e}, \"measured_s\": {:.6e}, \
+             \"error_ratio\": {:.4}, \"steps\": [\n{steps}\n    ]}}",
+            e.kind,
+            e.p,
+            e.m_bytes,
+            e.predicted_s,
+            e.measured_s,
+            e.error_ratio()
+        ));
+    }
+    format!("{{\n  \"report\": \"model-error\",\n  \"cells\": [\n{cells}\n  ]\n}}\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{MeshTrace, NO_PEER};
+    use super::*;
+    use crate::algo::{Algorithm, AlgorithmKind, BuildCtx};
+    use std::sync::atomic::Ordering;
+
+    /// Drive a fake-clock trace whose steps take exactly the predicted
+    /// spans: every gap is ~0 and the report stays structurally complete.
+    #[test]
+    fn zero_gap_when_trace_matches_prediction() {
+        let p = 4;
+        let m = 4096;
+        let params = NetParams::table2();
+        let s = Algorithm::new(AlgorithmKind::Ring, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let rep = des::simulate(&s, m, &params);
+        let (mt, clk) = MeshTrace::with_fake_clock(p, 1 << 12);
+        let mut prev = 0.0f64;
+        for (k, &fin) in rep.step_finish.iter().enumerate() {
+            for r in 0..p {
+                mt.rank(r).record(EventKind::StepBegin, k as u64, NO_PEER, 0);
+            }
+            clk.fetch_add(((fin - prev) * 1e9) as u64, Ordering::Relaxed);
+            for r in 0..p {
+                mt.rank(r).record(EventKind::StepEnd, k as u64, NO_PEER, 0);
+            }
+            prev = fin;
+        }
+        let err = attribute("ring", &s, m, &params, None, None, &mt.timeline(), 0);
+        assert_eq!(err.steps.len(), s.steps.len());
+        for st in &err.steps {
+            assert!(
+                st.gap_s.abs() < 2e-9,
+                "step {} gap {} should be ~0",
+                st.step,
+                st.gap_s
+            );
+        }
+        assert!((err.error_ratio() - 1.0).abs() < 1e-3);
+        let txt = render_report(&[err.clone()]);
+        assert!(txt.contains("ring P=4"));
+        let js = report_json(&[err]);
+        let v = crate::util::json::parse(&js).expect("report JSON parses");
+        let cells = v.get("cells").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(cells.len(), 1);
+    }
+
+    /// A step that measures slower than predicted with a visible begin
+    /// spread attributes to arrival skew.
+    #[test]
+    fn slow_start_attributes_to_skew() {
+        let p = 2;
+        let m = 1024;
+        let params = NetParams::table2();
+        let s = Algorithm::new(AlgorithmKind::Ring, p)
+            .build(&BuildCtx::default())
+            .unwrap();
+        let rep = des::simulate(&s, m, &params);
+        let (mt, clk) = MeshTrace::with_fake_clock(p, 256);
+        let mut prev = 0.0f64;
+        for (k, &fin) in rep.step_finish.iter().enumerate() {
+            mt.rank(0).record(EventKind::StepBegin, k as u64, NO_PEER, 0);
+            // Rank 1 arrives 1ms late at every step.
+            clk.fetch_add(1_000_000, Ordering::Relaxed);
+            mt.rank(1).record(EventKind::StepBegin, k as u64, NO_PEER, 0);
+            clk.fetch_add(((fin - prev) * 1e9) as u64, Ordering::Relaxed);
+            for r in 0..p {
+                mt.rank(r).record(EventKind::StepEnd, k as u64, NO_PEER, 0);
+            }
+            prev = fin;
+        }
+        let err = attribute("ring", &s, m, &params, None, None, &mt.timeline(), 0);
+        for st in &err.steps {
+            assert_eq!(st.cause, GapCause::ArrivalSkew, "step {}", st.step);
+            assert!(st.gap_s > 0.5e-3);
+        }
+    }
+}

@@ -1,0 +1,805 @@
+//! Observability: per-rank span tracing, mesh-wide timeline merging, and
+//! a unified metrics registry.
+//!
+//! The crate's whole premise is analytic — schedules are *chosen* from
+//! α–β–γ predictions — but a prediction is only as good as the check
+//! against what the mesh actually did. This module supplies the measured
+//! side of that comparison:
+//!
+//! * [`Recorder`] — a lock-free, fixed-capacity per-rank event ring.
+//!   Recording is wait-free (one `fetch_add` claim plus plain atomic
+//!   stores), never allocates, and never blocks the data plane; when the
+//!   ring is full, events are counted in [`Recorder::dropped`] instead of
+//!   stalling anything. Every layer that emits guards with
+//!   `if let Some(r) = trace { r.record(..) }`, so a disabled trace costs
+//!   one untaken branch.
+//! * [`MeshTrace`] — one recorder per rank of an in-process mesh, all on
+//!   one shared clock, merged by [`MeshTrace::timeline`].
+//! * [`Timeline`] / [`align_offsets`] — cross-process merging: rank 0
+//!   collects every rank's ring over the wire (`net::wire::KIND_TRACE`),
+//!   estimates each sender's clock offset from the send/receive stamps
+//!   and the probe's measured α, and merges into one global event list.
+//! * [`Registry`] — the single named counter/gauge/histogram surface.
+//!   It absorbs [`crate::cluster::CounterSnapshot`], the service stats
+//!   5-tuple, and drained trace events, so `Communicator`, `Endpoint`,
+//!   and both service twins expose one metrics shape.
+//! * [`chrome`] — exports a merged [`Timeline`] as Chrome `trace_event`
+//!   JSON (loadable in Perfetto / `chrome://tracing`).
+//! * [`attribute`] — replays the executed schedule through the DES under
+//!   the measured parameters and attributes each per-step gap between
+//!   predicted and measured time to latency, bandwidth, compute, or
+//!   arrival skew.
+//!
+//! **Ring/ownership contract.** A [`Recorder`] is shared by reference
+//! (`Arc`) between the emitting threads and the collector. Emitters only
+//! ever `record`; the collector only ever [`Recorder::events`] /
+//! [`Recorder::reset`]. Collection is intended *between* collectives
+//! (the rings are quiescent); collecting mid-collective is safe (no torn
+//! events: a seat is published with a release store and read with an
+//! acquire load) but may miss events still being written.
+
+pub mod attribute;
+pub mod chrome;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// `peer` value for events with no peer.
+pub const NO_PEER: u32 = u32::MAX;
+
+/// Default per-rank ring capacity (events).
+pub const DEFAULT_CAPACITY: usize = 16 * 1024;
+
+/// The typed event taxonomy. Span kinds come in `*Begin`/`*End` (or
+/// `Wait`/`Acquire`) pairs; the rest are instants.
+///
+/// | kind | emitted by | `step` | `peer` | `bytes` |
+/// |---|---|---|---|---|
+/// | `StepBegin`/`StepEnd` | `cluster::DataPlane` | step tag | — | — |
+/// | `SendFrame` | `cluster::DataPlane` | step tag | receiver | payload bytes |
+/// | `RecvFrame` | `cluster::DataPlane` | step tag | sender | payload bytes |
+/// | `CombineBegin`/`CombineEnd` | `cluster::DataPlane` | step tag | — | bytes reduced |
+/// | `GrantWait`/`GrantAcquire` | `net::service` follower | grant seq | — | comm id |
+/// | `PeerUp` | `net::transport` at link-up | — | peer | — |
+/// | `PeerDown` | `net::transport` on close/bad/retire | — | peer | — |
+/// | `EpochShrink` | `Endpoint::allreduce_elastic` | new epoch | — | dead count |
+/// | `AdmissionRejectBusy` | both service twins | — | — | job bytes |
+/// | `AdmissionRejectDeadline` | both service twins | — | — | job bytes |
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u16)]
+pub enum EventKind {
+    StepBegin = 0,
+    StepEnd = 1,
+    SendFrame = 2,
+    RecvFrame = 3,
+    CombineBegin = 4,
+    CombineEnd = 5,
+    GrantWait = 6,
+    GrantAcquire = 7,
+    PeerUp = 8,
+    PeerDown = 9,
+    EpochShrink = 10,
+    AdmissionRejectBusy = 11,
+    AdmissionRejectDeadline = 12,
+}
+
+impl EventKind {
+    /// Decode the wire representation; `None` for unknown codes (a newer
+    /// peer's taxonomy — the event is skipped, not an error).
+    pub fn from_u16(k: u16) -> Option<EventKind> {
+        use EventKind::*;
+        Some(match k {
+            0 => StepBegin,
+            1 => StepEnd,
+            2 => SendFrame,
+            3 => RecvFrame,
+            4 => CombineBegin,
+            5 => CombineEnd,
+            6 => GrantWait,
+            7 => GrantAcquire,
+            8 => PeerUp,
+            9 => PeerDown,
+            10 => EpochShrink,
+            11 => AdmissionRejectBusy,
+            12 => AdmissionRejectDeadline,
+            _ => return None,
+        })
+    }
+
+    /// Stable snake-case label (metric names, Chrome event names).
+    pub fn label(self) -> &'static str {
+        use EventKind::*;
+        match self {
+            StepBegin => "step_begin",
+            StepEnd => "step_end",
+            SendFrame => "send_frame",
+            RecvFrame => "recv_frame",
+            CombineBegin => "combine_begin",
+            CombineEnd => "combine_end",
+            GrantWait => "grant_wait",
+            GrantAcquire => "grant_acquire",
+            PeerUp => "peer_up",
+            PeerDown => "peer_down",
+            EpochShrink => "epoch_shrink",
+            AdmissionRejectBusy => "admission_reject_busy",
+            AdmissionRejectDeadline => "admission_reject_deadline",
+        }
+    }
+
+    /// For a span-opening kind, the kind that closes it.
+    pub fn closes_with(self) -> Option<EventKind> {
+        match self {
+            EventKind::StepBegin => Some(EventKind::StepEnd),
+            EventKind::CombineBegin => Some(EventKind::CombineEnd),
+            EventKind::GrantWait => Some(EventKind::GrantAcquire),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded event. `step`, `peer`, `bytes` are kind-dependent (see
+/// the [`EventKind`] table); `t_ns` is nanoseconds on the recorder's own
+/// clock (aligned only after a [`Timeline`] merge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub t_ns: u64,
+    pub kind: EventKind,
+    pub step: u64,
+    pub peer: u32,
+    pub bytes: u64,
+}
+
+/// The recorder's time source. `Monotonic` reads a coarse monotonic
+/// clock (`Instant` deltas from a fixed origin); `Fake` reads a shared
+/// counter the test advances by hand, making merges fully deterministic.
+#[derive(Clone)]
+pub enum Clock {
+    Monotonic(Instant),
+    Fake(Arc<AtomicU64>),
+}
+
+impl Clock {
+    pub fn monotonic() -> Clock {
+        Clock::Monotonic(Instant::now())
+    }
+
+    /// A deterministic clock starting at 0; advance it through the
+    /// returned handle (`handle.fetch_add(ns, Relaxed)`).
+    pub fn fake() -> (Clock, Arc<AtomicU64>) {
+        let h = Arc::new(AtomicU64::new(0));
+        (Clock::Fake(h.clone()), h)
+    }
+
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        match self {
+            Clock::Monotonic(t0) => t0.elapsed().as_nanos() as u64,
+            Clock::Fake(t) => t.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl fmt::Debug for Clock {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Clock::Monotonic(_) => write!(f, "Clock::Monotonic"),
+            Clock::Fake(t) => write!(f, "Clock::Fake({})", t.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// One preallocated ring seat. `ready` holds the generation that wrote
+/// the seat (0 = never written); it is stored last with `Release` so a
+/// reader that observes the current generation sees the whole event.
+struct Seat {
+    t_ns: AtomicU64,
+    /// `kind` in the high 32 bits, `peer` in the low 32.
+    kind_peer: AtomicU64,
+    step: AtomicU64,
+    bytes: AtomicU64,
+    ready: AtomicU64,
+}
+
+impl Seat {
+    fn empty() -> Seat {
+        Seat {
+            t_ns: AtomicU64::new(0),
+            kind_peer: AtomicU64::new(0),
+            step: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            ready: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Lock-free, fixed-capacity per-rank event recorder.
+///
+/// All storage is allocated at construction; [`Recorder::record`] is
+/// wait-free and allocation-free (one `fetch_add` seat claim + plain
+/// stores). Overflow drops the event and counts it in
+/// [`Recorder::dropped`] — tracing never stalls the data plane.
+pub struct Recorder {
+    rank: u32,
+    clock: Clock,
+    seats: Box<[Seat]>,
+    head: AtomicUsize,
+    dropped: AtomicU64,
+    /// Current generation (starts at 1; [`Recorder::reset`] bumps it so
+    /// stale seats from earlier generations are invisible).
+    gen: AtomicU64,
+}
+
+impl Recorder {
+    /// A recorder for `rank` with its own monotonic clock origin. For
+    /// in-process meshes prefer [`MeshTrace::new`], which puts every
+    /// rank on one shared origin so timestamps are directly comparable.
+    pub fn new(rank: u32, capacity: usize) -> Recorder {
+        Recorder::with_clock(rank, capacity, Clock::monotonic())
+    }
+
+    pub fn with_clock(rank: u32, capacity: usize, clock: Clock) -> Recorder {
+        Recorder {
+            rank,
+            clock,
+            seats: (0..capacity.max(1)).map(|_| Seat::empty()).collect(),
+            head: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            gen: AtomicU64::new(1),
+        }
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// Nanoseconds on this recorder's clock.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Record one event stamped now. Wait-free, never allocates.
+    #[inline]
+    pub fn record(&self, kind: EventKind, step: u64, peer: u32, bytes: u64) {
+        self.record_at(self.clock.now_ns(), kind, step, peer, bytes);
+    }
+
+    /// Record with an explicit timestamp (tests, replays).
+    pub fn record_at(&self, t_ns: u64, kind: EventKind, step: u64, peer: u32, bytes: u64) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed);
+        if i >= self.seats.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let s = &self.seats[i];
+        s.t_ns.store(t_ns, Ordering::Relaxed);
+        s.kind_peer
+            .store(((kind as u64) << 32) | peer as u64, Ordering::Relaxed);
+        s.step.store(step, Ordering::Relaxed);
+        s.bytes.store(bytes, Ordering::Relaxed);
+        // Publish last: a reader that sees this generation sees the rest.
+        s.ready.store(self.gen.load(Ordering::Relaxed), Ordering::Release);
+    }
+
+    /// Events recorded so far (capped at capacity).
+    pub fn len(&self) -> usize {
+        self.head.load(Ordering::Relaxed).min(self.seats.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.seats.len()
+    }
+
+    /// Events dropped on ring overflow since the last reset.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the ring, sorted by timestamp (stable in claim order for
+    /// equal stamps). Non-destructive; pair with [`Recorder::reset`].
+    pub fn events(&self) -> Vec<Event> {
+        let gen = self.gen.load(Ordering::Relaxed);
+        let n = self.len();
+        let mut out: Vec<(usize, Event)> = Vec::with_capacity(n);
+        for (i, s) in self.seats.iter().enumerate().take(n) {
+            if s.ready.load(Ordering::Acquire) != gen {
+                continue; // claimed but not yet published, or stale gen
+            }
+            let kp = s.kind_peer.load(Ordering::Relaxed);
+            let Some(kind) = EventKind::from_u16((kp >> 32) as u16) else {
+                continue;
+            };
+            out.push((
+                i,
+                Event {
+                    t_ns: s.t_ns.load(Ordering::Relaxed),
+                    kind,
+                    step: s.step.load(Ordering::Relaxed),
+                    peer: kp as u32,
+                    bytes: s.bytes.load(Ordering::Relaxed),
+                },
+            ));
+        }
+        out.sort_by_key(|&(i, e)| (e.t_ns, i));
+        out.into_iter().map(|(_, e)| e).collect()
+    }
+
+    /// Clear the ring (O(1): bumps the generation; old seats become
+    /// invisible without being touched).
+    pub fn reset(&self) {
+        self.gen.fetch_add(1, Ordering::Relaxed);
+        self.head.store(0, Ordering::Relaxed);
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+impl fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Recorder")
+            .field("rank", &self.rank)
+            .field("len", &self.len())
+            .field("capacity", &self.capacity())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+/// One recorder per rank of an **in-process** mesh, all sharing one
+/// clock origin so per-rank timestamps are directly comparable (merge
+/// offsets are zero). This is what [`crate::cluster::ExecOptions::trace`]
+/// takes; each worker installs its own rank's recorder on its data
+/// plane.
+#[derive(Debug)]
+pub struct MeshTrace {
+    ranks: Vec<Arc<Recorder>>,
+}
+
+impl MeshTrace {
+    /// `p` recorders of `capacity` events each, on one shared monotonic
+    /// origin.
+    pub fn new(p: usize, capacity: usize) -> MeshTrace {
+        let origin = Clock::Monotonic(Instant::now());
+        MeshTrace {
+            ranks: (0..p)
+                .map(|r| Arc::new(Recorder::with_clock(r as u32, capacity, origin.clone())))
+                .collect(),
+        }
+    }
+
+    /// All ranks on one shared deterministic [`Clock::fake`]; advance the
+    /// returned handle by hand between recorded events.
+    pub fn with_fake_clock(p: usize, capacity: usize) -> (MeshTrace, Arc<AtomicU64>) {
+        let (clock, handle) = Clock::fake();
+        let mt = MeshTrace {
+            ranks: (0..p)
+                .map(|r| Arc::new(Recorder::with_clock(r as u32, capacity, clock.clone())))
+                .collect(),
+        };
+        (mt, handle)
+    }
+
+    pub fn p(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn rank(&self, r: usize) -> &Arc<Recorder> {
+        &self.ranks[r]
+    }
+
+    /// Total events dropped across all rings.
+    pub fn dropped(&self) -> u64 {
+        self.ranks.iter().map(|r| r.dropped()).sum()
+    }
+
+    pub fn reset(&self) {
+        for r in &self.ranks {
+            r.reset();
+        }
+    }
+
+    /// Merge every rank's ring into one timeline. All recorders share a
+    /// clock origin, so offsets are zero.
+    pub fn timeline(&self) -> Timeline {
+        let per_rank: Vec<Vec<Event>> = self.ranks.iter().map(|r| r.events()).collect();
+        Timeline::merge(&per_rank, &vec![0i64; self.ranks.len()])
+    }
+}
+
+/// One event of a merged, clock-aligned timeline. `t_ns` is on the
+/// collector's clock (signed: alignment can push a remote event before
+/// the collector's origin).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimelineEvent {
+    pub rank: u32,
+    pub t_ns: i64,
+    pub kind: EventKind,
+    pub step: u64,
+    pub peer: u32,
+    pub bytes: u64,
+}
+
+/// A merged mesh-wide timeline, sorted by aligned timestamp (ties broken
+/// by rank, then per-rank order — the merge is deterministic for a given
+/// input).
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub events: Vec<TimelineEvent>,
+}
+
+impl Timeline {
+    /// Merge per-rank event lists; `offsets[r]` (nanoseconds) maps rank
+    /// `r`'s clock onto the collector's: `aligned = local + offset`.
+    pub fn merge(per_rank: &[Vec<Event>], offsets: &[i64]) -> Timeline {
+        assert_eq!(per_rank.len(), offsets.len());
+        let mut events = Vec::with_capacity(per_rank.iter().map(Vec::len).sum());
+        for (r, (evs, &off)) in per_rank.iter().zip(offsets).enumerate() {
+            for (i, e) in evs.iter().enumerate() {
+                events.push((
+                    i,
+                    TimelineEvent {
+                        rank: r as u32,
+                        t_ns: e.t_ns as i64 + off,
+                        kind: e.kind,
+                        step: e.step,
+                        peer: e.peer,
+                        bytes: e.bytes,
+                    },
+                ));
+            }
+        }
+        events.sort_by_key(|&(i, e)| (e.t_ns, e.rank, i));
+        Timeline {
+            events: events.into_iter().map(|(_, e)| e).collect(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// `(min, max)` aligned timestamps, or `(0, 0)` when empty.
+    pub fn bounds_ns(&self) -> (i64, i64) {
+        match (self.events.first(), self.events.last()) {
+            (Some(a), Some(b)) => (a.t_ns, b.t_ns),
+            _ => (0, 0),
+        }
+    }
+}
+
+/// Estimate per-sender clock offsets from a trace collection round.
+///
+/// Sender `i` stamped `send_ns[i]` (its own clock) into its `TRACE`
+/// frame; the collector stamped `recv_ns[i]` (collector clock) on
+/// arrival. Modeling the one-way delay as the probe's measured α:
+///
+/// ```text
+///   recv ≈ send + offset + α   ⟹   offset ≈ recv − send − α
+/// ```
+///
+/// The returned offsets feed [`Timeline::merge`]
+/// (`aligned = local + offset`). Caveats: the estimate inherits α's
+/// error (asymmetric paths bias it by half the asymmetry), assumes the
+/// frame wasn't queued behind bulk traffic (collect **after** the
+/// collective), and says nothing about drift *during* the run — good to
+/// a few α, which is enough to order steps across ranks.
+pub fn align_offsets(send_ns: &[u64], recv_ns: &[u64], alpha_ns: u64) -> Vec<i64> {
+    assert_eq!(send_ns.len(), recv_ns.len());
+    send_ns
+        .iter()
+        .zip(recv_ns)
+        .map(|(&s, &r)| {
+            let off = r as i128 - s as i128 - alpha_ns as i128;
+            off.clamp(i64::MIN as i128, i64::MAX as i128) as i64
+        })
+        .collect()
+}
+
+/// A log₂-bucketed histogram of `u64` samples: `buckets[k]` counts
+/// samples whose highest set bit is `k − 1` (bucket 0 counts zeros), so
+/// bucket `k` spans `[2^(k−1), 2^k)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    pub buckets: [u64; 65],
+    pub count: u64,
+    pub sum: u64,
+}
+
+// Not derived: `Default` for arrays is only provided up to length 32 on
+// the crate's MSRV.
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: [0; 65],
+            count: 0,
+            sum: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: u64) {
+        let k = (64 - v.leading_zeros()) as usize;
+        self.buckets[k] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Inclusive lower edge of bucket `k`.
+    pub fn bucket_floor(k: usize) -> u64 {
+        if k == 0 {
+            0
+        } else {
+            1u64 << (k - 1)
+        }
+    }
+}
+
+/// The unified metrics surface: named monotonic counters, gauges, and
+/// log₂ histograms. Built on demand by the `metrics()` accessors of
+/// `Communicator`, `Endpoint`, and both service twins — nothing on any
+/// hot path touches a `Registry`.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add to a named counter (created at 0).
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&mut self, name: &str, v: u64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Counter value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Absorb a data-plane counter snapshot under `dataplane.*`.
+    pub fn absorb_data_plane(&mut self, s: &crate::cluster::CounterSnapshot) {
+        self.add("dataplane.slab_to_wire_copies", s.slab_to_wire_copies);
+        self.add("dataplane.slab_to_wire_elems", s.slab_to_wire_elems);
+        self.add("dataplane.wire_placed_reduces", s.wire_placed_reduces);
+        self.add("dataplane.wire_placed_copies", s.wire_placed_copies);
+        self.add("dataplane.chunked_msgs", s.chunked_msgs);
+        self.add("dataplane.chunk_frames", s.chunk_frames);
+        self.add("dataplane.streamed_reduces", s.streamed_reduces);
+        self.add("dataplane.gathered_recvs", s.gathered_recvs);
+    }
+
+    /// Absorb a service-stats snapshot (`ServiceStats::snapshot()`'s
+    /// `(submitted, busy, deadline, completed, failed)`) under
+    /// `service.*`.
+    pub fn absorb_service(&mut self, snap: (u64, u64, u64, u64, u64)) {
+        let (submitted, busy, deadline, completed, failed) = snap;
+        self.add("service.submitted", submitted);
+        self.add("service.busy_rejections", busy);
+        self.add("service.deadline_rejections", deadline);
+        self.add("service.completed", completed);
+        self.add("service.failed", failed);
+    }
+
+    /// Absorb a drained event list: per-kind counts under
+    /// `trace.events.<label>`, frame-byte histograms under
+    /// `trace.send_bytes` / `trace.recv_bytes`, and combine-span
+    /// durations (paired `CombineBegin`/`CombineEnd`, per list order)
+    /// under `trace.combine_ns`.
+    pub fn absorb_events(&mut self, events: &[Event]) {
+        let mut open_combine: Vec<u64> = Vec::new();
+        for e in events {
+            self.add(&format!("trace.events.{}", e.kind.label()), 1);
+            match e.kind {
+                EventKind::SendFrame => self.observe("trace.send_bytes", e.bytes),
+                EventKind::RecvFrame => self.observe("trace.recv_bytes", e.bytes),
+                EventKind::CombineBegin => open_combine.push(e.t_ns),
+                EventKind::CombineEnd => {
+                    if let Some(t0) = open_combine.pop() {
+                        self.observe("trace.combine_ns", e.t_ns.saturating_sub(t0));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Plain-text dump, one `name value` line per entry, sorted — stable
+    /// for logs and diffing.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!(
+                "{k} count={} sum={} mean={:.1}\n",
+                h.count,
+                h.sum,
+                h.mean()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_and_drains_in_time_order() {
+        let r = Recorder::new(3, 8);
+        r.record_at(50, EventKind::StepEnd, 1, NO_PEER, 0);
+        r.record_at(10, EventKind::StepBegin, 1, NO_PEER, 0);
+        r.record_at(20, EventKind::SendFrame, 1, 2, 4096);
+        let evs = r.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].kind, EventKind::StepBegin);
+        assert_eq!(evs[1].kind, EventKind::SendFrame);
+        assert_eq!(evs[1].peer, 2);
+        assert_eq!(evs[1].bytes, 4096);
+        assert_eq!(evs[2].kind, EventKind::StepEnd);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overflow_drops_and_counts() {
+        let r = Recorder::new(0, 4);
+        for i in 0..10 {
+            r.record_at(i, EventKind::SendFrame, 0, 1, 1);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.events().len(), 4);
+        assert_eq!(r.dropped(), 6);
+        r.reset();
+        assert_eq!(r.len(), 0);
+        assert!(r.events().is_empty());
+        assert_eq!(r.dropped(), 0);
+        r.record_at(99, EventKind::StepBegin, 7, NO_PEER, 0);
+        let evs = r.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].step, 7);
+    }
+
+    #[test]
+    fn fake_clock_is_deterministic() {
+        let (mt, clk) = MeshTrace::with_fake_clock(2, 16);
+        mt.rank(0).record(EventKind::StepBegin, 0, NO_PEER, 0);
+        clk.fetch_add(100, Ordering::Relaxed);
+        mt.rank(1).record(EventKind::StepBegin, 0, NO_PEER, 0);
+        clk.fetch_add(100, Ordering::Relaxed);
+        mt.rank(0).record(EventKind::StepEnd, 0, NO_PEER, 0);
+        let tl = mt.timeline();
+        assert_eq!(
+            tl.events.iter().map(|e| (e.rank, e.t_ns)).collect::<Vec<_>>(),
+            vec![(0, 0), (1, 100), (0, 200)]
+        );
+    }
+
+    #[test]
+    fn offsets_align_remote_clocks() {
+        // Sender clocks read 1000 and 5000 at send; the collector saw the
+        // frames at 2000 and 3000 with α = 500.
+        let off = align_offsets(&[1000, 5000], &[2000, 3000], 500);
+        assert_eq!(off, vec![500, -2500]);
+        let a = vec![Event {
+            t_ns: 1000,
+            kind: EventKind::StepBegin,
+            step: 0,
+            peer: NO_PEER,
+            bytes: 0,
+        }];
+        let b = vec![Event {
+            t_ns: 5000,
+            kind: EventKind::StepBegin,
+            step: 0,
+            peer: NO_PEER,
+            bytes: 0,
+        }];
+        let tl = Timeline::merge(&[a, b], &off);
+        assert_eq!(tl.events[0].t_ns, 1500);
+        assert_eq!(tl.events[1].t_ns, 2500);
+    }
+
+    #[test]
+    fn registry_absorbs_counters_and_events() {
+        let mut reg = Registry::new();
+        reg.absorb_service((10, 2, 1, 7, 0));
+        assert_eq!(reg.counter("service.submitted"), 10);
+        assert_eq!(reg.counter("service.busy_rejections"), 2);
+        assert_eq!(reg.counter("service.missing"), 0);
+        let evs = vec![
+            Event {
+                t_ns: 0,
+                kind: EventKind::CombineBegin,
+                step: 0,
+                peer: NO_PEER,
+                bytes: 64,
+            },
+            Event {
+                t_ns: 250,
+                kind: EventKind::CombineEnd,
+                step: 0,
+                peer: NO_PEER,
+                bytes: 64,
+            },
+            Event {
+                t_ns: 300,
+                kind: EventKind::SendFrame,
+                step: 0,
+                peer: 1,
+                bytes: 4096,
+            },
+        ];
+        reg.absorb_events(&evs);
+        assert_eq!(reg.counter("trace.events.send_frame"), 1);
+        let h = reg.histogram("trace.combine_ns").unwrap();
+        assert_eq!(h.count, 1);
+        assert_eq!(h.sum, 250);
+        assert!(reg.render().contains("service.submitted 10"));
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        let mut h = Histogram::default();
+        h.observe(0);
+        h.observe(1);
+        h.observe(1);
+        h.observe(7);
+        assert_eq!(h.buckets[0], 1); // zeros
+        assert_eq!(h.buckets[1], 2); // [1, 2)
+        assert_eq!(h.buckets[3], 1); // [4, 8)
+        assert_eq!(h.count, 4);
+        assert_eq!(Histogram::bucket_floor(3), 4);
+    }
+}

@@ -1,0 +1,316 @@
+//! Observability integration tests: span nesting/balance over the
+//! in-process twin, trace-off bit-exactness, deterministic fake-clock
+//! merging, Chrome-export round-trips, and attribution coverage.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use permallreduce::algo::{Algorithm, AlgorithmKind, BuildCtx};
+use permallreduce::cluster::{reference_allreduce, ClusterExecutor, ExecOptions, ReduceOp};
+use permallreduce::obs::{
+    attribute, chrome, EventKind, MeshTrace, Recorder, Registry, Timeline, NO_PEER,
+};
+use permallreduce::util::Rng;
+
+const N: usize = 1 << 10;
+
+fn inputs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..p)
+        .map(|_| (0..n).map(|_| (rng.next_u64() % 1000) as f32).collect())
+        .collect()
+}
+
+/// Per-rank structural audit of one traced execution's event stream.
+///
+/// * exactly one `StepBegin` and one `StepEnd` per schedule step, tagged
+///   `step_off + k` in order, properly nested (no overlap, End after
+///   Begin);
+/// * `CombineBegin`/`CombineEnd` strictly alternate (a combine never
+///   nests inside another) and only occur inside an open step;
+/// * every frame event carries a valid peer (`< p`, not self) and every
+///   `SendFrame`/`RecvFrame` has a positive byte count.
+fn audit_rank(rank: usize, p: usize, n_steps: usize, evs: &[permallreduce::obs::Event]) {
+    let mut next_step = 0u64;
+    let mut open_step: Option<u64> = None;
+    let mut combine_open = false;
+    let mut begins = 0usize;
+    let mut ends = 0usize;
+    for e in evs {
+        match e.kind {
+            EventKind::StepBegin => {
+                assert!(open_step.is_none(), "rank {rank}: StepBegin inside open step");
+                assert_eq!(e.step, next_step, "rank {rank}: step tags out of order");
+                assert_eq!(e.peer, NO_PEER);
+                open_step = Some(e.step);
+                next_step += 1;
+                begins += 1;
+            }
+            EventKind::StepEnd => {
+                assert_eq!(
+                    open_step.take(),
+                    Some(e.step),
+                    "rank {rank}: StepEnd without matching StepBegin"
+                );
+                assert!(!combine_open, "rank {rank}: step closed over an open combine");
+                ends += 1;
+            }
+            EventKind::CombineBegin => {
+                assert!(open_step.is_some(), "rank {rank}: combine outside any step");
+                assert!(!combine_open, "rank {rank}: nested CombineBegin");
+                combine_open = true;
+            }
+            EventKind::CombineEnd => {
+                assert!(combine_open, "rank {rank}: CombineEnd without Begin");
+                assert!(e.bytes > 0, "rank {rank}: combine span reduced zero bytes");
+                combine_open = false;
+            }
+            EventKind::SendFrame | EventKind::RecvFrame => {
+                assert!(open_step.is_some(), "rank {rank}: frame outside any step");
+                assert!(
+                    (e.peer as usize) < p && e.peer as usize != rank,
+                    "rank {rank}: bad frame peer {}",
+                    e.peer
+                );
+                assert!(e.bytes > 0, "rank {rank}: zero-byte frame");
+            }
+            other => panic!("rank {rank}: unexpected {other:?} from the in-process twin"),
+        }
+    }
+    assert!(open_step.is_none(), "rank {rank}: dangling open step");
+    assert!(!combine_open, "rank {rank}: dangling open combine");
+    assert_eq!(begins, n_steps, "rank {rank}: StepBegin count");
+    assert_eq!(ends, n_steps, "rank {rank}: StepEnd count");
+}
+
+/// The tentpole property sweep: P ∈ 2..=8 × {Ring, BwOptimal} ×
+/// {monolithic, chunked}. Every cell must (a) still produce the exact
+/// reference sum, (b) pass the per-rank span audit, and (c) absorb into
+/// the registry with balanced per-kind counts.
+#[test]
+fn traced_execution_spans_balance_across_p_kinds_and_chunking() {
+    let ctx = BuildCtx {
+        m_bytes: N * 4,
+        ..BuildCtx::default()
+    };
+    for p in 2..=8usize {
+        for kind in [AlgorithmKind::Ring, AlgorithmKind::BwOptimal] {
+            let s = Algorithm::new(kind, p)
+                .build(&ctx)
+                .unwrap_or_else(|e| panic!("P={p} {kind:?}: {e}"));
+            let ins = inputs(p, N, 0xB0B5 + p as u64);
+            let want = reference_allreduce(&ins, ReduceOp::Sum);
+            for chunk_bytes in [None, Some(N)] {
+                let mt = Arc::new(MeshTrace::new(p, 1 << 14));
+                let exec = ClusterExecutor::with_options(ExecOptions {
+                    chunk_bytes,
+                    trace: Some(mt.clone()),
+                    ..ExecOptions::default()
+                });
+                let out = exec
+                    .execute(&s, &ins, ReduceOp::Sum)
+                    .unwrap_or_else(|e| panic!("P={p} {kind:?} chunk={chunk_bytes:?}: {e}"));
+                for o in &out {
+                    assert_eq!(o, &want, "P={p} {kind:?} chunk={chunk_bytes:?}");
+                }
+                assert_eq!(mt.dropped(), 0, "P={p} {kind:?}: ring overflowed");
+
+                let mut reg = Registry::new();
+                for rank in 0..p {
+                    let evs = mt.rank(rank).events();
+                    audit_rank(rank, p, s.steps.len(), &evs);
+                    reg.absorb_events(&evs);
+                }
+                let per_kind = |k: EventKind| reg.counter(&format!("trace.events.{}", k.label()));
+                assert_eq!(per_kind(EventKind::StepBegin), (p * s.steps.len()) as u64);
+                assert_eq!(per_kind(EventKind::StepEnd), (p * s.steps.len()) as u64);
+                assert_eq!(
+                    per_kind(EventKind::CombineBegin),
+                    per_kind(EventKind::CombineEnd)
+                );
+                assert_eq!(
+                    per_kind(EventKind::SendFrame),
+                    per_kind(EventKind::RecvFrame),
+                    "every sent frame is received exactly once in-process"
+                );
+                assert!(reg.histogram("trace.send_bytes").is_some());
+            }
+        }
+    }
+}
+
+/// Tracing must be observation only: the same schedule over the same
+/// inputs produces bit-identical f32 outputs with the trace armed and
+/// disarmed, chunked and monolithic.
+#[test]
+fn trace_off_and_on_are_bit_identical() {
+    let p = 6;
+    let ctx = BuildCtx {
+        m_bytes: N * 4,
+        ..BuildCtx::default()
+    };
+    for kind in [AlgorithmKind::Ring, AlgorithmKind::GeneralizedAuto] {
+        let s = Algorithm::new(kind, p).build(&ctx).unwrap();
+        let ins = inputs(p, N, 0x51DE);
+        for chunk_bytes in [None, Some(512)] {
+            let plain = ClusterExecutor::with_options(ExecOptions {
+                chunk_bytes,
+                ..ExecOptions::default()
+            })
+            .execute(&s, &ins, ReduceOp::Sum)
+            .unwrap();
+            let mt = Arc::new(MeshTrace::new(p, 1 << 14));
+            let traced = ClusterExecutor::with_options(ExecOptions {
+                chunk_bytes,
+                trace: Some(mt.clone()),
+                ..ExecOptions::default()
+            })
+            .execute(&s, &ins, ReduceOp::Sum)
+            .unwrap();
+            for (a, b) in plain.iter().zip(&traced) {
+                let a_bits: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                let b_bits: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a_bits, b_bits, "{kind:?} chunk={chunk_bytes:?}");
+            }
+            assert!(!mt.rank(0).events().is_empty(), "trace armed but empty");
+        }
+    }
+}
+
+/// Clock alignment is deterministic under an injected fake clock: with
+/// hand-advanced stamps and known per-rank offsets the merged order and
+/// aligned timestamps are exact, including a cross-rank interleave where
+/// alignment *reorders* events relative to their raw local stamps.
+#[test]
+fn fake_clock_merge_is_deterministic() {
+    let (mt, clk) = MeshTrace::with_fake_clock(3, 32);
+    // Rank 0 at t=0, rank 1 at t=10, rank 2 at t=20, then rank 0 again
+    // at t=30: a fixed interleave the shared fake clock makes exact.
+    mt.rank(0).record(EventKind::StepBegin, 0, NO_PEER, 0);
+    clk.fetch_add(10, Ordering::Relaxed);
+    mt.rank(1).record(EventKind::StepBegin, 0, NO_PEER, 0);
+    clk.fetch_add(10, Ordering::Relaxed);
+    mt.rank(2).record(EventKind::SendFrame, 0, 0, 64);
+    clk.fetch_add(10, Ordering::Relaxed);
+    mt.rank(0).record(EventKind::StepEnd, 0, NO_PEER, 0);
+    let tl = mt.timeline();
+    let got: Vec<(u32, i64, EventKind)> =
+        tl.events.iter().map(|e| (e.rank, e.t_ns, e.kind)).collect();
+    assert_eq!(
+        got,
+        vec![
+            (0, 0, EventKind::StepBegin),
+            (1, 10, EventKind::StepBegin),
+            (2, 20, EventKind::SendFrame),
+            (0, 30, EventKind::StepEnd),
+        ]
+    );
+
+    // Now merge the same per-rank lists under non-zero offsets: rank 1's
+    // clock is 25 ns behind the collector, rank 2's is 15 ns ahead.
+    let per_rank: Vec<Vec<permallreduce::obs::Event>> =
+        (0..3).map(|r| mt.rank(r).events()).collect();
+    let tl2 = Timeline::merge(&per_rank, &[0, 25, -15]);
+    let got2: Vec<(u32, i64)> = tl2.events.iter().map(|e| (e.rank, e.t_ns)).collect();
+    // rank 1: 10+25 = 35 now lands *after* rank 0's t=30; rank 2: 20-15 = 5.
+    assert_eq!(got2, vec![(0, 0), (2, 5), (0, 30), (1, 35)]);
+
+    // Same stamps, same offsets, fresh merge: byte-for-byte identical.
+    let tl3 = Timeline::merge(&per_rank, &[0, 25, -15]);
+    assert_eq!(tl2.events, tl3.events);
+}
+
+/// Chrome-export round-trip on a real traced execution: the JSON parses,
+/// B/E events balance, and pids cover every rank.
+#[test]
+fn chrome_export_round_trips_through_parser() {
+    let p = 4;
+    let ctx = BuildCtx {
+        m_bytes: N * 4,
+        ..BuildCtx::default()
+    };
+    let s = Algorithm::new(AlgorithmKind::BwOptimal, p).build(&ctx).unwrap();
+    let ins = inputs(p, N, 0xC0DE);
+    let mt = Arc::new(MeshTrace::new(p, 1 << 14));
+    ClusterExecutor::with_options(ExecOptions {
+        trace: Some(mt.clone()),
+        ..ExecOptions::default()
+    })
+    .execute(&s, &ins, ReduceOp::Sum)
+    .unwrap();
+    let tl = mt.timeline();
+    let json = chrome::export(&tl);
+    let summary = chrome::parse_summary(&json).expect("export must parse");
+    assert_eq!(summary.total, tl.events.len());
+    assert_eq!(summary.begins, summary.ends, "unbalanced B/E spans");
+    assert!(summary.begins >= p * s.steps.len(), "missing step spans");
+    assert_eq!(summary.max_pid, (p - 1) as u64);
+    assert_eq!(
+        summary.begins + summary.ends + summary.instants,
+        summary.total
+    );
+}
+
+/// Attribution coverage on the in-process twin: replaying the executed
+/// schedule through the DES yields a `StepGap` for *every* step, with
+/// sane measured spans (monotone non-negative, sum ≤ total span).
+#[test]
+fn attribution_covers_every_step() {
+    let p = 5;
+    let m_bytes = N * 4;
+    let ctx = BuildCtx {
+        m_bytes,
+        ..BuildCtx::default()
+    };
+    for (label, kind, chunk) in [
+        ("ring", AlgorithmKind::Ring, None),
+        ("bw-optimal", AlgorithmKind::BwOptimal, Some(N)),
+    ] {
+        let s = Algorithm::new(kind, p).build(&ctx).unwrap();
+        let ins = inputs(p, N, 0xA77B);
+        let mt = Arc::new(MeshTrace::new(p, 1 << 14));
+        ClusterExecutor::with_options(ExecOptions {
+            chunk_bytes: chunk,
+            trace: Some(mt.clone()),
+            ..ExecOptions::default()
+        })
+        .execute(&s, &ins, ReduceOp::Sum)
+        .unwrap();
+        let tl = mt.timeline();
+        let err = attribute::attribute(label, &s, m_bytes, &ctx.params, chunk, None, &tl, 0);
+        assert_eq!(err.kind, label);
+        assert_eq!(err.p, p);
+        assert_eq!(err.steps.len(), s.steps.len(), "{label}: uncovered steps");
+        assert!(err.measured_s >= 0.0 && err.predicted_s > 0.0);
+        for st in &err.steps {
+            assert!(st.measured_s >= 0.0, "{label} step {}: negative span", st.step);
+            assert!(
+                st.measured_s <= err.measured_s + 1e-9,
+                "{label} step {}: span exceeds total",
+                st.step
+            );
+            assert!((st.gap_s - (st.measured_s - st.predicted_s)).abs() < 1e-12);
+        }
+        let report = attribute::render_report(std::slice::from_ref(&err));
+        assert!(report.contains(label), "report must name the cell");
+        let json = attribute::report_json(std::slice::from_ref(&err));
+        assert!(json.contains("\"cells\""), "json report shape");
+    }
+}
+
+/// A reset ring is empty and a reused one never duplicates spans — the
+/// contract `Endpoint::collect_trace` relies on across repeated
+/// collections.
+#[test]
+fn reset_between_collections_never_duplicates() {
+    let rec = Recorder::new(0, 64);
+    rec.record(EventKind::StepBegin, 0, NO_PEER, 0);
+    rec.record(EventKind::StepEnd, 0, NO_PEER, 0);
+    assert_eq!(rec.events().len(), 2);
+    rec.reset();
+    assert!(rec.events().is_empty());
+    rec.record(EventKind::StepBegin, 1, NO_PEER, 0);
+    let evs = rec.events();
+    assert_eq!(evs.len(), 1);
+    assert_eq!(evs[0].step, 1);
+}

@@ -1,0 +1,86 @@
+//! Allocation audit for the span recorder's hot path.
+//!
+//! A counting `GlobalAlloc` wraps the system allocator and the test
+//! asserts the tracing contract [`permallreduce::obs::Recorder`]
+//! promises: after construction, `record` / `record_at` / `now_ns` /
+//! `reset` allocate **zero** bytes — recording must never disturb the
+//! data plane it observes, even across ring overflow and generation
+//! resets.
+//!
+//! This file holds exactly one `#[test]` so no concurrent test pollutes
+//! the global counters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use permallreduce::obs::{EventKind, Recorder, NO_PEER};
+
+struct CountingAlloc;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` and return the bytes allocated (globally, all threads) while
+/// it ran.
+fn allocated_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = BYTES.load(Ordering::Relaxed);
+    let r = f();
+    (BYTES.load(Ordering::Relaxed) - before, r)
+}
+
+#[test]
+fn recording_allocates_zero_bytes() {
+    // Construction allocates (the seats); everything after must not.
+    let rec = Recorder::new(0, 1024);
+
+    let (bytes, _) = allocated_during(|| {
+        for i in 0..1024u64 {
+            rec.record(EventKind::SendFrame, i, 1, 4096);
+        }
+        // Past capacity: overflow is counted, still allocation-free.
+        for i in 0..512u64 {
+            rec.record_at(i, EventKind::CombineBegin, i, NO_PEER, 0);
+        }
+        // Reset bumps the generation in place, then the ring refills.
+        rec.reset();
+        for i in 0..1024u64 {
+            rec.record(EventKind::StepBegin, i, NO_PEER, 0);
+        }
+        rec.now_ns()
+    });
+    assert_eq!(
+        bytes, 0,
+        "the recorder hot path (record/record_at/reset/now_ns) must allocate nothing"
+    );
+    assert_eq!(rec.len(), 1024);
+    assert_eq!(rec.dropped(), 0, "reset must clear the overflow count");
+
+    // Draining is collector-side and may allocate (it returns a Vec) —
+    // but it must see exactly the post-reset generation.
+    let evs = rec.events();
+    assert_eq!(evs.len(), 1024);
+    assert!(evs.iter().all(|e| e.kind == EventKind::StepBegin));
+}
